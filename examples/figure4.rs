@@ -1,0 +1,88 @@
+//! Figures 1 & 4 reproduction (experiments E1, E3): run the paper's
+//! 1024-point sample scenario end-to-end, write the per-stage trace in the
+//! paper's `show_current_hoods` format, render the hood2ps-style SVG, and
+//! cross-check all three execution paths (host, PRAM sim, PJRT artifact).
+//!
+//! ```bash
+//! cargo run --release --example figure4           # uses artifacts/ if built
+//! ```
+//! Outputs: target/figure4.trace, target/figure4.svg, plus the Figure-2
+//! occupancy table on stdout.
+
+use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::geometry::point::{live_prefix, pad_to_hood};
+use wagener_hull::runtime::{ArtifactRegistry, HullExecutor};
+use wagener_hull::serial::monotone_chain;
+use wagener_hull::viz::svg::{render_hull_svg, SvgOptions};
+use wagener_hull::viz::trace::TraceWriter;
+use wagener_hull::wagener;
+
+fn main() {
+    let n = 1024;
+    // the paper's Figure 4 shows a disk-like scatter of 1024 points
+    let points = generate(Distribution::Disk, n, 2012);
+
+    // --- host pipeline with trace (E1: the Figure-1 layout across stages)
+    let trace_path = "target/figure4.trace";
+    let mut hood = pad_to_hood(&points, n);
+    let mut stage_hoods = Vec::new();
+    {
+        let file = std::fs::File::create(trace_path).unwrap();
+        let mut tw = TraceWriter::new(file);
+        let mut d = 2;
+        while d < n {
+            tw.stage(&hood, d).unwrap();
+            stage_hoods.push(
+                hood.chunks(d)
+                    .map(|b| live_prefix(b).to_vec())
+                    .collect::<Vec<_>>(),
+            );
+            hood = wagener::stage(&hood, d);
+            d *= 2;
+        }
+        tw.finish().unwrap();
+    }
+    let upper = live_prefix(&hood).to_vec();
+    println!("host pipeline: upper hull has {} corners", upper.len());
+    println!("trace (paper format) -> {trace_path}");
+
+    // --- cross-checks (E3)
+    let serial = monotone_chain::upper_hull(&points);
+    assert_eq!(upper, serial, "host == serial");
+    let pram = wagener::pram_exec::run_pipeline(&points, n).unwrap();
+    assert_eq!(live_prefix(&pram.hood), &serial[..], "pram == serial");
+    println!(
+        "pram run: {} steps, {} work, conflict factor {:.2}",
+        pram.counters.steps,
+        pram.counters.work,
+        pram.counters.conflict_factor()
+    );
+
+    let lower = monotone_chain::lower_hull(&points);
+    match ArtifactRegistry::load("artifacts").and_then(HullExecutor::new) {
+        Ok(exe) => {
+            let meta = exe.registry().select_hull(n, 1).unwrap().clone();
+            let out = exe.run_hull(&meta, &[points.clone()]).unwrap();
+            assert_eq!(out[0].0, serial, "pjrt == serial");
+            assert_eq!(out[0].1, lower, "pjrt lower == serial");
+            println!("pjrt artifact {}: matches serial exactly", meta.name);
+        }
+        Err(e) => println!("(pjrt check skipped: {e:#})"),
+    }
+
+    // --- Figure 2: thread allocation table
+    let occ = wagener::occupancy::occupancy_table(&points, n);
+    println!("\nthread allocation (paper Figure 2):");
+    print!("{}", wagener::occupancy::format_table(&occ));
+
+    // --- Figure 4: the picture
+    let svg = render_hull_svg(
+        &points,
+        &upper,
+        &lower,
+        &stage_hoods,
+        &SvgOptions::default(),
+    );
+    std::fs::write("target/figure4.svg", svg).unwrap();
+    println!("\nsvg (hood2ps equivalent) -> target/figure4.svg");
+}

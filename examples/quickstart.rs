@@ -1,0 +1,43 @@
+//! Quickstart: compute a convex hull three ways and check they agree.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::geometry::hull_check::check_upper_hull;
+use wagener_hull::ovl;
+use wagener_hull::serial::monotone_chain;
+use wagener_hull::wagener;
+
+fn main() {
+    // 1. a workload: 1000 random points in the unit square, x-sorted,
+    //    f32-quantized (the conventions every backend shares)
+    let points = generate(Distribution::UniformSquare, 1000, 42);
+
+    // 2. the paper's algorithm (host pipeline: log n merge stages)
+    let (upper, lower) = wagener::full_hull(&points);
+    println!("wagener upper hull: {} corners", upper.len());
+    println!("wagener lower hull: {} corners", lower.len());
+
+    // 3. the serial baseline the paper compares against
+    let serial = monotone_chain::upper_hull(&points);
+    assert_eq!(upper, serial, "wagener must equal serial");
+
+    // 4. the paper's §3 optimal-speedup variant (strips + tree merges)
+    let run = ovl::optimal_upper_hull(&points, 0);
+    assert_eq!(run.hull, serial);
+    println!(
+        "ovl-optimal: {} strips, {} tangent predicate evals, {} total work units",
+        run.stats.strips,
+        run.stats.tangent_predicate_evals,
+        run.stats.total()
+    );
+
+    // 5. independent validity check
+    check_upper_hull(&points, &upper).expect("hull invalid?!");
+    println!("all implementations agree; hull verified. corners:");
+    for p in &upper {
+        println!("  {p}");
+    }
+}

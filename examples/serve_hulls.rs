@@ -1,0 +1,99 @@
+//! End-to-end serving driver (experiment E6): the full three-layer system
+//! on a real workload.
+//!
+//! Starts the coordinator on the PJRT backend (AOT Pallas/JAX artifacts),
+//! serves it over TCP, then drives it with concurrent client threads
+//! sending mixed-size hull requests.  Reports throughput and latency
+//! percentiles and verifies every response against the serial oracle.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_hulls [backend] [n_requests]
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use wagener_hull::coordinator::{
+    BackendKind, BatcherConfig, Coordinator, CoordinatorConfig,
+};
+use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::serial::monotone_chain;
+use wagener_hull::server::{serve, HullClient, ServerConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let backend = args
+        .first()
+        .map(|s| BackendKind::parse(s).expect("backend: pjrt|native|serial|pram"))
+        .unwrap_or(BackendKind::Pjrt);
+    let total_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(400);
+    let clients = 8usize;
+    let per_client = total_requests / clients;
+
+    println!("== serve_hulls: backend={} requests={total_requests} clients={clients}", backend.name());
+
+    let coord = Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            backend,
+            artifacts_dir: "artifacts".into(),
+            batcher: BatcherConfig { max_batch: 8, flush_us: 400, queue_cap: 1024 },
+            self_check: false,
+            preload: backend == BackendKind::Pjrt,
+        })
+        .expect("coordinator start (run `make artifacts` for pjrt)"),
+    );
+    let handle = serve(coord.clone(), &ServerConfig { addr: "127.0.0.1:0".into() }).unwrap();
+    let addr = handle.local_addr;
+    println!("server on {addr}");
+
+    // warm the compile cache so steady-state numbers are clean
+    {
+        let mut c = HullClient::connect(addr).unwrap();
+        for n in [120usize, 200] {
+            let pts = generate(Distribution::Disk, n, 7777 + n as u64);
+            c.hull(&pts).unwrap();
+        }
+    }
+
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for t in 0..clients as u64 {
+        joins.push(std::thread::spawn(move || {
+            let mut client = HullClient::connect(addr).unwrap();
+            let mut lat_ns: Vec<u64> = Vec::with_capacity(per_client);
+            for k in 0..per_client as u64 {
+                let dist = Distribution::ALL[(k % 7) as usize];
+                // two size classes so the batcher can actually group
+                // concurrent requests (mixed round-robin defeats batching;
+                // see EXPERIMENTS.md E6)
+                let n = [120usize, 200][(k % 2) as usize];
+                let pts = generate(dist, n, t * 100_000 + k);
+                let s = Instant::now();
+                let hull = client.hull(&pts).unwrap();
+                lat_ns.push(s.elapsed().as_nanos() as u64);
+                // verify against the serial oracle
+                let (u, l) = monotone_chain::full_hull(&pts);
+                assert_eq!(hull.upper, u, "client {t} req {k}");
+                assert_eq!(hull.lower, l, "client {t} req {k}");
+            }
+            lat_ns
+        }));
+    }
+    let mut lat: Vec<u64> = joins.into_iter().flat_map(|j| j.join().unwrap()).collect();
+    let wall = t0.elapsed();
+    lat.sort_unstable();
+
+    let pct = |q: f64| lat[((lat.len() as f64 * q) as usize).min(lat.len() - 1)] as f64 / 1e6;
+    let done = lat.len();
+    println!("\n== results ({} backend) ==", backend.name());
+    println!("requests:    {done} (all verified against serial oracle)");
+    println!("wall time:   {:.2} s", wall.as_secs_f64());
+    println!("throughput:  {:.1} req/s", done as f64 / wall.as_secs_f64());
+    println!("latency p50: {:.2} ms", pct(0.50));
+    println!("latency p95: {:.2} ms", pct(0.95));
+    println!("latency p99: {:.2} ms", pct(0.99));
+    println!("latency max: {:.2} ms", *lat.last().unwrap() as f64 / 1e6);
+    println!("\ncoordinator metrics: {}", coord.snapshot().0.to_string_pretty());
+
+    handle.stop();
+}

@@ -1,0 +1,145 @@
+"""AOT exporter: lower the L2 model to HLO *text* artifacts for rust/PJRT.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` and
+NOT a serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit
+instruction ids which the published xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Every artifact is lowered with ``return_tuple=True``; the rust side unwraps
+with ``Literal::to_tuple``.  A ``manifest.json`` describes each artifact so
+the rust `runtime::ArtifactRegistry` can pick executables by (n, batch)
+without hard-coding paths.
+
+Usage (from python/):
+    python -m compile.aot --out ../artifacts/model.hlo.txt   # full set
+    python -m compile.aot --report                           # + op counts
+
+The default set covers the serving size classes (n = 64..1024) x batch
+{1, 8}, single-request hood artifacts for the examples, and the plain-jnp
+ablation twin for n = 256 (E7).
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import json
+import pathlib
+import re
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+HOOD_SIZES = (64, 256, 1024)
+HULL_SIZES = (64, 128, 256, 512, 1024)
+BATCHES = (1, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> XLA HLO text via stablehlo (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape: int):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def artifact_set():
+    """name -> (fn, example-arg spec, metadata). Tuple outputs throughout."""
+    arts = {}
+    for n in HOOD_SIZES:
+        arts[f"hood_n{n}"] = (
+            lambda p: (model.upper_hood(p),),
+            _spec(n, 2),
+            {"kind": "hood", "n": n, "batch": 0, "outputs": 1},
+        )
+    for n in HULL_SIZES:
+        for b in BATCHES:
+            arts[f"hull_n{n}_b{b}"] = (
+                model.batched_full_hull,
+                _spec(b, n, 2),
+                {"kind": "hull", "n": n, "batch": b, "outputs": 2},
+            )
+    # ablation twin: plain-jnp (no pallas) pipeline, E7
+    arts["hood_jnp_n256"] = (
+        lambda p: (model.upper_hood_jnp(p),),
+        _spec(256, 2),
+        {"kind": "hood_jnp", "n": 256, "batch": 0, "outputs": 1},
+    )
+    return arts
+
+
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*[\w\[\]{}, ]+?\s(\w+)\(")
+
+
+def op_histogram(hlo_text: str) -> dict[str, int]:
+    """Crude instruction histogram from HLO text (perf reporting, E7)."""
+    hist: collections.Counter[str] = collections.Counter()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if m:
+            hist[m.group(1)] += 1
+    return dict(hist)
+
+
+def export_all(out_dir: pathlib.Path, report: bool) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest: dict[str, dict] = {}
+    reports: dict[str, dict] = {}
+    for name, (fn, spec, meta) in artifact_set().items():
+        lowered = jax.jit(fn).lower(spec)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        manifest[name] = {
+            "file": path.name,
+            "input_shape": list(spec.shape),
+            **meta,
+        }
+        if report:
+            hist = op_histogram(text)
+            reports[name] = {
+                "ops_total": sum(hist.values()),
+                "bytes": len(text),
+                "top_ops": dict(
+                    sorted(hist.items(), key=lambda kv: -kv[1])[:12]
+                ),
+            }
+        print(f"wrote {path} ({len(text)} chars)")
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    if report:
+        (out_dir / "report.json").write_text(json.dumps(reports, indent=2))
+        print(json.dumps(reports, indent=2))
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--out",
+        default="../artifacts/model.hlo.txt",
+        help="stamp file path; artifacts land in its directory",
+    )
+    ap.add_argument(
+        "--report", action="store_true", help="write per-artifact op counts"
+    )
+    args = ap.parse_args()
+    model.enable_x64()
+    stamp = pathlib.Path(args.out)
+    out_dir = stamp.parent
+    export_all(out_dir, args.report)
+    # Makefile freshness stamp: copy of the mid-size hull artifact.
+    stamp.write_text((out_dir / "hull_n256_b1.hlo.txt").read_text())
+    print(f"stamp {stamp}")
+
+
+if __name__ == "__main__":
+    main()

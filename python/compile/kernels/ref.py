@@ -1,0 +1,135 @@
+"""Pure-numpy correctness oracles for Wagener's upper-hood pipeline.
+
+These are deliberately *independent* of the Wagener logic: the per-stage
+oracle recomputes each block's upper hull with a monotone chain, so a bug in
+the g/f tangent phases cannot be mirrored here.
+
+Conventions (paper §2):
+  * points are x-sorted, coordinates in [0, 1];
+  * a "hood" array stores, per block of ``d`` slots, the upper-hull corners
+    of that block's points, left-justified and padded with REMOTE = (10, 0);
+  * any slot with x > 1 is dead ("remote").
+
+Orientation determinants are evaluated in float64 (inputs stay float32):
+the paper assumes exact arithmetic ("it's a problem, but it's not our
+problem"); float64 makes misclassification probability negligible for
+continuous random data, and the rust side uses exact adaptive predicates.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+REMOTE_X = 10.0
+REMOTE_Y = 0.0
+LIVE_X_MAX = 1.0  # slot is live iff x <= LIVE_X_MAX
+
+LOW, EQUAL, HIGH = 0, 1, 2
+
+
+def remote_row() -> np.ndarray:
+    return np.array([REMOTE_X, REMOTE_Y], dtype=np.float32)
+
+
+def is_live(pts: np.ndarray) -> np.ndarray:
+    """Boolean liveness mask for an (..., 2) point array."""
+    return pts[..., 0] <= LIVE_X_MAX
+
+
+def left_of(p: np.ndarray, q: np.ndarray, r: np.ndarray) -> bool:
+    """True iff r is strictly left of the directed segment p -> q."""
+    p, q, r = (np.asarray(a, dtype=np.float64) for a in (p, q, r))
+    return float(
+        (q[0] - p[0]) * (r[1] - p[1]) - (q[1] - p[1]) * (r[0] - p[0])
+    ) > 0.0
+
+
+def upper_hull(points: np.ndarray) -> np.ndarray:
+    """Monotone-chain upper hull of x-sorted points, strict turns.
+
+    Input (m, 2); output (k, 2) hull corners left-to-right.  Collinear
+    middle points are dropped (the paper assumes none exist).
+    """
+    pts = np.asarray(points, dtype=np.float32)
+    if len(pts) <= 1:
+        return pts.copy()
+    stack: list[np.ndarray] = []
+    for p in pts:
+        # pop while the previous corner is not strictly above the chord
+        while len(stack) >= 2 and not left_of(stack[-2], p, stack[-1]):
+            stack.pop()
+        stack.append(p)
+    return np.stack(stack)
+
+
+def pad_block(corners: np.ndarray, d: int) -> np.ndarray:
+    """Left-justify corners in a d-slot block, REMOTE-padded."""
+    out = np.tile(remote_row(), (d, 1))
+    k = len(corners)
+    if k:
+        out[:k] = corners
+    return out
+
+
+def ref_stage(hood: np.ndarray, d: int) -> np.ndarray:
+    """Oracle for one merge stage: hoods of size d -> hoods of size 2d.
+
+    For every 2d-slot block, recompute the upper hull of its live corners
+    from scratch (merging two hulls == hull of the union of their corners).
+    """
+    hood = np.asarray(hood, dtype=np.float32)
+    n = hood.shape[0]
+    assert n % (2 * d) == 0, (n, d)
+    out = np.empty_like(hood)
+    for b in range(n // (2 * d)):
+        blk = hood[b * 2 * d : (b + 1) * 2 * d]
+        live = blk[is_live(blk)]
+        out[b * 2 * d : (b + 1) * 2 * d] = pad_block(upper_hull(live), 2 * d)
+    return out
+
+
+def ref_hood(points: np.ndarray) -> np.ndarray:
+    """Full-pipeline oracle: n-slot hood block of the upper hull."""
+    pts = np.asarray(points, dtype=np.float32)
+    n = pts.shape[0]
+    live = pts[is_live(pts)]
+    return pad_block(upper_hull(live), n)
+
+
+def ref_lower_hood(points: np.ndarray) -> np.ndarray:
+    """Lower hull as an n-slot hood (left-to-right order).
+
+    Computed as the upper hull of y-negated points, then y restored.
+    REMOTE slots stay (10, 0).
+    """
+    pts = np.asarray(points, dtype=np.float32)
+    neg = pts.copy()
+    neg[:, 1] = -neg[:, 1]
+    hood = ref_hood(neg)
+    livem = is_live(hood)
+    hood[livem, 1] = -hood[livem, 1]
+    return hood
+
+
+def ref_tangent(pblk: np.ndarray, qblk: np.ndarray) -> tuple[int, int]:
+    """Brute-force common upper tangent between two hood blocks.
+
+    Returns (pi, qi): indices into pblk / qblk of the tangent corners:
+    the unique pair (a, b) such that every other live corner of both blocks
+    lies strictly right of (below) the directed line a -> b.
+    """
+    plive = pblk[is_live(pblk)]
+    qlive = qblk[is_live(qblk)]
+    for ai in range(len(plive)):
+        for bi in range(len(qlive)):
+            a, b = plive[ai], qlive[bi]
+            ok = True
+            for other in list(plive) + list(qlive):
+                if np.array_equal(other, a) or np.array_equal(other, b):
+                    continue
+                if left_of(a, b, other):
+                    ok = False
+                    break
+            if ok:
+                return ai, bi
+    raise AssertionError("no common tangent found (degenerate input?)")

@@ -1,0 +1,255 @@
+"""L1: Wagener match-and-merge as a Pallas kernel (+ plain-jnp twin).
+
+One kernel invocation executes one *stage* of Wagener's pipeline: every
+pair of adjacent d-slot hoods is merged into a 2d-slot hood.  The pallas
+grid has one program per merge pair — the analogue of the paper's CUDA
+thread block — and the 2d-point window lives in the program's local memory
+(VMEM on a real TPU; the paper's ``__shared__`` scratch).  Inside a program
+the six ``mam`` phases of the paper become fixed-shape vector ops over the
+d1 x d2 sample lattice (the paper's thread lattice), so the whole kernel is
+branch-free: every CUDA thread conditional is a ``jnp.where`` select, which
+is exactly the divergence-free style the paper says it aspires to.
+
+Hardware adaptation (DESIGN.md §2): the paper tiles work into CUDA thread
+blocks with shared-memory ``scratch``; here BlockSpec expresses the same
+HBM->VMEM schedule, and the intra-block thread lattice becomes vector
+lanes.  Memory-bank conflicts have no analogue on the vector unit — the
+serialization cost the paper observed is modelled in the rust PRAM
+simulator instead.
+
+Kernels MUST be lowered with interpret=True: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+
+Index conventions inside a block (size 2d, block-relative):
+  P half = slots [0, d), Q half = slots [d, 2d).
+Phases (paper chunk names; scratch cells shown for fidelity):
+  mam1  scratch[x]   = max sample j_y = d + d1*y with g(i_x, j_y) <= EQ
+  mam2  scratch[d+x] = unique j in [scratch[x], +d1) with g(i_x, j) == EQ
+  mam3  scratch[0]   = k0 = max sample i_x = d2*x with f(i_x, scratch[d+x]) <= EQ
+  mam4  scratch[d+y] = max sample j_x = d + d2*x with g(k0+y, j_x) <= EQ
+  mam5  (p*, q*)     = unique pair with g == f == EQ
+  mam6  newhood      = hood[0..p*] ++ hood[q*..2d) ++ REMOTE...
+mam6 fixes the paper's stale-corner bug (DESIGN.md §1.1) by REMOTE-filling
+every lower-half slot past p* before the shift-copy.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+REMOTE_X = 10.0
+REMOTE_Y = 0.0
+LIVE_X_MAX = 1.0
+
+LOW, EQUAL, HIGH = 0, 1, 2
+
+# Orientation determinants are computed in float64 (see ref.py docstring).
+# Requires jax_enable_x64; enable_x64() is called by model/aot/tests.
+DET_DTYPE = jnp.float64
+
+
+def enable_x64() -> None:
+    jax.config.update("jax_enable_x64", True)
+
+
+def stage_dims(d: int) -> tuple[int, int]:
+    """The paper's thread-block shape for hood size d: d1 = 2^ceil(r/2),
+    d2 = 2^floor(r/2) with d = 2^r, so d1*d2 == d and d2 <= d1 <= 2*d2."""
+    r = d.bit_length() - 1
+    assert 1 << r == d and r >= 1, f"d must be a power of two >= 2, got {d}"
+    d1 = 1 << ((r + 1) // 2)
+    d2 = 1 << (r // 2)
+    return d1, d2
+
+
+def _live(pts: jnp.ndarray) -> jnp.ndarray:
+    return pts[..., 0] <= LIVE_X_MAX
+
+
+def _left_of(p: jnp.ndarray, q: jnp.ndarray, r: jnp.ndarray) -> jnp.ndarray:
+    """r strictly left of directed segment p->q (broadcasting, f64 det)."""
+    p = p.astype(DET_DTYPE)
+    q = q.astype(DET_DTYPE)
+    r = r.astype(DET_DTYPE)
+    det = (q[..., 0] - p[..., 0]) * (r[..., 1] - p[..., 1]) - (
+        q[..., 1] - p[..., 1]
+    ) * (r[..., 0] - p[..., 0])
+    return det > 0.0
+
+
+def _gather(blk: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """blk[(idx clamped), :] for integer index arrays of any shape."""
+    idx = jnp.clip(idx, 0, blk.shape[0] - 1)
+    return jnp.take(blk, idx, axis=0)
+
+
+def _neighbors(
+    blk: jnp.ndarray, idx: jnp.ndarray, lo: int, hi: int
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """(pt, next, prev) for corners at ``idx`` of the hood stored in
+    blk[lo:hi] (live-left-justified).  Where the neighbor does not exist
+    (block edge or REMOTE slot) it is the synthetic point directly below
+    ``pt`` — the paper's ``q_next.y -= atend`` trick, which keeps every
+    phase branch-free."""
+    pt = _gather(blk, idx)
+    nxt_raw = _gather(blk, idx + 1)
+    prv_raw = _gather(blk, idx - 1)
+    # synthetic point directly below pt (avoid array-literal constants,
+    # which pallas kernels may not capture)
+    below = jnp.stack([pt[..., 0], pt[..., 1] - 1.0], axis=-1)
+    at_end = (idx + 1 >= hi) | ~_live(nxt_raw)
+    at_start = idx <= lo
+    nxt = jnp.where(at_end[..., None], below, nxt_raw)
+    prv = jnp.where(at_start[..., None], below, prv_raw)
+    return pt, nxt, prv
+
+
+def _g(blk: jnp.ndarray, i: jnp.ndarray, j: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Paper's g(i, j): position of corner q = blk[j] of H(Q) relative to
+    the corner supporting the tangent from p = blk[i] (i in the P half).
+    Along H(Q) left-to-right the value sequence is LOW* EQUAL HIGH*.
+    REMOTE p or q => HIGH."""
+    i, j = jnp.broadcast_arrays(i, j)
+    p = _gather(blk, i)
+    q, q_next, q_prev = _neighbors(blk, j, d, 2 * d)
+    low = _left_of(p, q, q_next)
+    high = _left_of(p, q, q_prev)
+    code = jnp.where(low, LOW, jnp.where(high, HIGH, EQUAL))
+    remote = ~_live(p) | ~_live(q)
+    return jnp.where(remote, HIGH, code)
+
+
+def _f(blk: jnp.ndarray, i: jnp.ndarray, j: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Paper's f(i, j): position of corner p = blk[i] of H(P) relative to
+    the corner supporting the tangent from q = blk[j] (j in the Q half).
+    Along H(P) left-to-right: LOW* EQUAL HIGH*.  REMOTE p or q => HIGH."""
+    i, j = jnp.broadcast_arrays(i, j)
+    q = _gather(blk, j)
+    p, p_next, p_prev = _neighbors(blk, i, 0, d)
+    low = _left_of(p, q, p_next)
+    high = _left_of(p, q, p_prev)
+    code = jnp.where(low, LOW, jnp.where(high, HIGH, EQUAL))
+    remote = ~_live(p) | ~_live(q)
+    return jnp.where(remote, HIGH, code)
+
+
+def _max_index_leq_equal(codes: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """Largest index along ``axis`` whose code is <= EQUAL, or 0 if none.
+
+    This is the paper's "g(..) <= EQUAL && next is HIGH-or-absent" thread
+    race, resolved as a reduction (codes are LOW* EQUAL HIGH* monotone, so
+    the max qualifying index is exactly the paper's unique writer)."""
+    k = codes.shape[axis]
+    idx = jnp.arange(k)
+    shape = [1] * codes.ndim
+    shape[axis] = k
+    idx = idx.reshape(shape)
+    cand = jnp.where(codes <= EQUAL, idx, -1)
+    return jnp.maximum(jnp.max(cand, axis=axis), 0)
+
+
+def merge_block(blk: jnp.ndarray, d1: int, d2: int) -> jnp.ndarray:
+    """Merge one 2d-slot block: H(P) ++ H(Q) -> H(P u Q), REMOTE-padded.
+
+    Pure function of the block; shared verbatim by the pallas kernel body
+    and the plain-jnp twin so both lower from one source of truth."""
+    d = d1 * d2
+    assert blk.shape == (2 * d, 2), blk.shape
+
+    # mam1: for each P sample i_x (stride d2), bracket the tangent corner on
+    # H(Q) between Q samples j_y (stride d1).
+    i_x = jnp.arange(d1) * d2                       # (d1,)
+    j_y = d + jnp.arange(d2) * d1                   # (d2,)
+    g1 = _g(blk, i_x[:, None], j_y[None, :], d)     # (d1, d2)
+    qsamp = d + _max_index_leq_equal(g1, axis=1) * d1   # (d1,)
+
+    # mam2: refine within the bracket [qsamp, qsamp + d1): the unique EQUAL.
+    t1 = jnp.arange(d1)                             # (d1,)
+    g2 = _g(blk, i_x[:, None], qsamp[:, None] + t1[None, :], d)  # (d1, d1)
+    qexact = qsamp + jnp.argmax(g2 == EQUAL, axis=1)             # (d1,)
+
+    # mam3: k0 = max P sample with f(i_x, tangent(i_x)) <= EQUAL;
+    # the tangent corner p* lies in [k0, k0 + d2).
+    f3 = _f(blk, i_x, qexact, d)                    # (d1,)
+    k0 = _max_index_leq_equal(f3, axis=0) * d2      # scalar
+
+    # mam4: for each exact candidate i = k0 + y, re-bracket on H(Q) with the
+    # finer sample stride d2 (d1 samples).
+    yy = jnp.arange(d2)                             # (d2,)
+    j_x = d + jnp.arange(d1) * d2                   # (d1,)
+    g4 = _g(blk, (k0 + yy)[:, None], j_x[None, :], d)            # (d2, d1)
+    qs2 = d + _max_index_leq_equal(g4, axis=1) * d2              # (d2,)
+
+    # mam5: the unique pair with g == f == EQUAL is the common tangent.
+    t2 = jnp.arange(d2)                             # (d2,)
+    ii = (k0 + yy)[:, None]                         # (d2, 1)
+    jj = qs2[:, None] + t2[None, :]                 # (d2, d2)
+    hit = (_g(blk, ii, jj, d) == EQUAL) & (_f(blk, ii, jj, d) == EQUAL)
+    flat = jnp.argmax(hit.reshape(-1))
+    pidx = k0 + flat // d2
+    qidx = jnp.take(qs2, flat // d2) + flat % d2
+
+    # mam6: newhood = blk[0..pidx] ++ blk[qidx..2d) ++ REMOTE...
+    # (REMOTE-fill past pidx *before* the shift-copy — paper-bug fix.)
+    shift = qidx - pidx - 1
+    t = jnp.arange(2 * d)
+    src = jnp.where(t <= pidx, t, t + shift)
+    gathered = _gather(blk, src)
+    in_range = src < 2 * d
+    out = jnp.stack(
+        [
+            jnp.where(in_range, gathered[:, 0], REMOTE_X),
+            jnp.where(in_range, gathered[:, 1], REMOTE_Y),
+        ],
+        axis=-1,
+    )
+
+    # Degenerate pair: Q half entirely REMOTE (input padding) — the merged
+    # hood is just H(P).  (P empty implies Q empty, since live data is
+    # globally left-justified.)
+    q_empty = ~_live(blk[d])
+    return jnp.where(q_empty, blk, out)
+
+
+def _stage_kernel(hood_ref, out_ref, *, d1: int, d2: int):
+    """Pallas body: one program = one merge pair (the CUDA thread block)."""
+    out_ref[...] = merge_block(hood_ref[...], d1, d2)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def pallas_stage(hood: jnp.ndarray, d: int) -> jnp.ndarray:
+    """One Wagener stage over the whole hood array via pallas_call.
+
+    hood: (n, 2) float32, n % 2d == 0.  Grid = n/(2d) programs; BlockSpec
+    carves the 2d-slot window each program owns (HBM->VMEM schedule)."""
+    n = hood.shape[0]
+    d1, d2 = stage_dims(d)
+    assert n % (2 * d) == 0, (n, d)
+    grid = (n // (2 * d),)
+    spec = pl.BlockSpec((2 * d, 2), lambda b: (b, 0))
+    return pl.pallas_call(
+        functools.partial(_stage_kernel, d1=d1, d2=d2),
+        grid=grid,
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(hood.shape, hood.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(hood)
+
+
+@functools.partial(jax.jit, static_argnums=(1,))
+def jnp_stage(hood: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Plain-jnp twin of pallas_stage (vmap over merge pairs).
+
+    Kept as (a) an ablation target for the AOT report and (b) a second
+    implementation path for differential testing."""
+    n = hood.shape[0]
+    d1, d2 = stage_dims(d)
+    assert n % (2 * d) == 0, (n, d)
+    blocks = hood.reshape(n // (2 * d), 2 * d, 2)
+    merged = jax.vmap(lambda b: merge_block(b, d1, d2))(blocks)
+    return merged.reshape(n, 2)

@@ -1,0 +1,77 @@
+"""L2: the full Wagener hood pipeline as a JAX computation.
+
+The model composes ``log2(n) - 1`` merge stages (paper §2: the hood is
+built in s-1 stages, d = 2, 4, ..., n/2).  Stage shapes differ, so the
+pipeline is unrolled at trace time — every stage is a pallas_call whose
+grid/BlockSpec mirror the paper's kernel-launch geometry for that d.
+
+Exported entry points (all pure, all AOT-lowerable):
+  * ``upper_hood(points)``     — (n,2) -> (n,2) hood block
+  * ``full_hull(points)``      — (n,2) -> (upper (n,2), lower (n,2))
+  * ``batched_full_hull(pts)`` — (b,n,2) -> ((b,n,2), (b,n,2))
+
+Inputs are x-sorted float32 points, live-left-justified, REMOTE-padded to a
+power-of-two length (the rust coordinator's batcher guarantees this).
+Python runs only at build time: these functions are lowered to HLO text by
+``compile.aot`` and executed from rust via PJRT.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import wagener
+from .kernels.wagener import enable_x64  # re-export for aot/tests
+
+__all__ = [
+    "upper_hood",
+    "full_hull",
+    "batched_full_hull",
+    "upper_hood_jnp",
+    "enable_x64",
+]
+
+
+def _pipeline(points: jnp.ndarray, stage_fn) -> jnp.ndarray:
+    n = points.shape[0]
+    assert n >= 2 and (n & (n - 1)) == 0, f"n must be a power of two, got {n}"
+    hood = points
+    d = 2
+    while d < n:
+        hood = stage_fn(hood, d)
+        d *= 2
+    return hood
+
+
+def upper_hood(points: jnp.ndarray) -> jnp.ndarray:
+    """Upper hull of x-sorted points as an n-slot hood block (pallas path)."""
+    return _pipeline(points, wagener.pallas_stage)
+
+
+def upper_hood_jnp(points: jnp.ndarray) -> jnp.ndarray:
+    """Plain-jnp twin of :func:`upper_hood` (ablation / differential test)."""
+    return _pipeline(points, wagener.jnp_stage)
+
+
+def _negate_live_y(hood: jnp.ndarray) -> jnp.ndarray:
+    live = hood[:, 0] <= wagener.LIVE_X_MAX
+    return jnp.stack(
+        [hood[:, 0], jnp.where(live, -hood[:, 1], hood[:, 1])], axis=-1
+    )
+
+
+def full_hull(points: jnp.ndarray):
+    """(upper hood, lower hood) of x-sorted points.
+
+    The lower hull is the upper hull of y-negated points (REMOTE slots keep
+    y = 0 so the liveness convention survives the round trip).
+    """
+    upper = upper_hood(points)
+    lower = _negate_live_y(upper_hood(_negate_live_y(points)))
+    return upper, lower
+
+
+def batched_full_hull(points: jnp.ndarray):
+    """vmap of :func:`full_hull` over a leading batch axis (b, n, 2)."""
+    return jax.vmap(full_hull)(points)

@@ -1,0 +1,5 @@
+"""Shared fixtures: enable x64 before any jax computation traces."""
+
+from compile.kernels import wagener
+
+wagener.enable_x64()

@@ -1,0 +1,216 @@
+"""L1 correctness: pallas merge-stage kernel vs the pure-numpy oracle.
+
+The CORE correctness signal of the build path.  Hypothesis sweeps sizes,
+liveness patterns and point distributions; every stage output must match
+the monotone-chain oracle bit-exactly (same f32 points are selected, only
+selection logic differs between implementations).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref, wagener
+
+# ---------------------------------------------------------------- helpers
+
+
+def sorted_points(rng: np.random.Generator, m: int) -> np.ndarray:
+    pts = rng.random((m, 2)).astype(np.float32)
+    return pts[np.argsort(pts[:, 0])]
+
+
+def make_hood(pts: np.ndarray, n: int) -> np.ndarray:
+    """n-slot initial hood: pts live-left-justified, REMOTE padded."""
+    hood = np.tile(ref.remote_row(), (n, 1))
+    hood[: len(pts)] = pts
+    return hood
+
+
+def run_stages(hood0: np.ndarray, check_each: bool = True) -> np.ndarray:
+    """Drive hood0 through all stages, asserting vs oracle per stage."""
+    n = hood0.shape[0]
+    hw = jnp.asarray(hood0)
+    hr = hood0.copy()
+    d = 2
+    while d < n:
+        hr = ref.ref_stage(hr, d)
+        hw = wagener.pallas_stage(hw, d)
+        if check_each:
+            np.testing.assert_array_equal(np.asarray(hw), hr, err_msg=f"d={d}")
+        d *= 2
+    return np.asarray(hw)
+
+
+# ------------------------------------------------------------ stage_dims
+
+
+@pytest.mark.parametrize(
+    "d,expect",
+    [(2, (2, 1)), (4, (2, 2)), (8, (4, 2)), (16, (4, 4)), (32, (8, 4)),
+     (64, (8, 8)), (512, (32, 16))],
+)
+def test_stage_dims(d, expect):
+    assert wagener.stage_dims(d) == expect
+
+
+def test_stage_dims_rejects_bad():
+    for bad in (0, 1, 3, 6, 100):
+        with pytest.raises((AssertionError, ValueError)):
+            wagener.stage_dims(bad)
+
+
+# ------------------------------------------------------- predicate checks
+
+
+def test_g_classification_sequence():
+    """g along H(Q) must read LOW* EQUAL HIGH* for every live p in P."""
+    rng = np.random.default_rng(7)
+    for _ in range(10):
+        n = 16
+        hood0 = make_hood(sorted_points(rng, n), n)
+        # build d=8 hoods via oracle, then inspect one block pair
+        hood = hood0.copy()
+        for d in (2, 4):
+            hood = ref.ref_stage(hood, d)
+        blk = jnp.asarray(hood)
+        d = 8
+        q_live = int(ref.is_live(hood[d : 2 * d]).sum())
+        for i in range(int(ref.is_live(hood[:d]).sum())):
+            codes = [
+                int(wagener._g(blk, jnp.asarray(i), jnp.asarray(d + j), d))
+                for j in range(q_live)
+            ]
+            s = "".join("LEH"[c] for c in codes)
+            assert s == "L" * s.count("L") + "E" + "H" * s.count("H"), s
+
+
+def test_f_matches_bruteforce_tangent():
+    """The pair with g == f == EQUAL must be the brute-force tangent."""
+    rng = np.random.default_rng(11)
+    for _ in range(20):
+        d = 8
+        p = sorted_points(rng, d)
+        q = sorted_points(rng, d)
+        q[:, 0] += 1.0  # Q right of P
+        q[:, 0] = np.clip(q[:, 0] / 2 + 0.5, None, 1.0)
+        p[:, 0] = p[:, 0] / 2.1
+        pblk = ref.pad_block(ref.upper_hull(p), d)
+        qblk = ref.pad_block(ref.upper_hull(q), d)
+        blk = jnp.asarray(np.concatenate([pblk, qblk]))
+        pi, qi = ref.ref_tangent(pblk, qblk)
+        hits = []
+        for a in range(int(ref.is_live(pblk).sum())):
+            for b in range(int(ref.is_live(qblk).sum())):
+                g = int(wagener._g(blk, jnp.asarray(a), jnp.asarray(d + b), d))
+                f = int(wagener._f(blk, jnp.asarray(a), jnp.asarray(d + b), d))
+                if g == wagener.EQUAL and f == wagener.EQUAL:
+                    hits.append((a, b))
+        assert hits == [(pi, qi)]
+
+
+# ------------------------------------------------------ hypothesis sweeps
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    log_n=st.integers(2, 6),
+    m_frac=st.floats(0.05, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_stage_vs_ref_random(log_n, m_frac, seed):
+    n = 1 << log_n
+    m = max(1, int(round(m_frac * n)))
+    rng = np.random.default_rng(seed)
+    run_stages(make_hood(sorted_points(rng, m), n))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([16, 64]))
+def test_stage_all_on_hull(seed, n):
+    """Parabola: every point is an upper-hull corner (max hood sizes)."""
+    rng = np.random.default_rng(seed)
+    x = np.sort(rng.random(n)).astype(np.float32)
+    y = (1.0 - (2 * x - 1) ** 2).astype(np.float32) * 0.5
+    out = run_stages(make_hood(np.stack([x, y], 1), n))
+    assert int(ref.is_live(out).sum()) == n
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([16, 64]))
+def test_stage_two_on_hull(seed, n):
+    """Valley: only the two extreme points survive (min hood sizes).
+
+    Exercises the mam6 stale-corner paper-bug fix (far-left p*, far-right
+    q*)."""
+    rng = np.random.default_rng(seed)
+    x = np.sort(rng.random(n) * 0.8 + 0.1).astype(np.float32)
+    y = ((2 * x - 1) ** 2).astype(np.float32) * 0.5
+    out = run_stages(make_hood(np.stack([x, y], 1), n))
+    assert int(ref.is_live(out).sum()) == 2
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.sampled_from([8, 32]),
+    split=st.floats(0.1, 0.9),
+)
+def test_stage_clustered(seed, n, split):
+    """Two tight clusters: tangents span a wide gap."""
+    rng = np.random.default_rng(seed)
+    m1 = max(1, int(n * split))
+    a = rng.random((m1, 2)).astype(np.float32) * 0.1
+    b = rng.random((n - m1, 2)).astype(np.float32) * 0.1 + 0.85
+    pts = np.concatenate([a, b]) if len(b) else a
+    pts = pts[np.argsort(pts[:, 0])]
+    run_stages(make_hood(pts, n))
+
+
+# --------------------------------------------------------------- edge cases
+
+
+def test_single_point():
+    out = run_stages(make_hood(np.array([[0.5, 0.5]], np.float32), 8))
+    assert int(ref.is_live(out).sum()) == 1
+
+
+def test_all_remote_blocks_passthrough():
+    """A fully-REMOTE pair must pass through unchanged (padding blocks)."""
+    hood = make_hood(np.zeros((0, 2), np.float32), 8)
+    hood[0] = [0.1, 0.3]  # one live point so the array is not fully dead
+    out = run_stages(hood)
+    np.testing.assert_array_equal(out[0], np.float32([0.1, 0.3]))
+    assert int(ref.is_live(out).sum()) == 1
+
+
+def test_pallas_equals_jnp_stage():
+    """Differential: the two lowerings of merge_block agree exactly."""
+    rng = np.random.default_rng(3)
+    hood = jnp.asarray(make_hood(sorted_points(rng, 64), 64))
+    d = 2
+    while d < 64:
+        a = wagener.pallas_stage(hood, d)
+        b = wagener.jnp_stage(hood, d)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        hood = a
+        d *= 2
+
+
+def test_monotone_x_invariant():
+    """Live corners of every intermediate hood are strictly x-increasing."""
+    rng = np.random.default_rng(5)
+    hood = jnp.asarray(make_hood(sorted_points(rng, 128), 128))
+    d = 2
+    while d < 128:
+        hood = wagener.pallas_stage(hood, d)
+        h = np.asarray(hood)
+        for b in range(128 // (2 * d)):
+            blk = h[b * 2 * d : (b + 1) * 2 * d]
+            live = blk[ref.is_live(blk)]
+            assert np.all(np.diff(live[:, 0]) > 0)
+        d *= 2

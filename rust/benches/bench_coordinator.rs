@@ -1,0 +1,85 @@
+//! E6 — coordinator overhead and batching policy: throughput/latency of
+//! the serving layer itself (native backend so the backend cost is tiny
+//! and the router/batcher dominate), swept over batch size and flush
+//! deadline.
+//!
+//! Run: `cargo bench --bench bench_coordinator`
+
+use std::sync::Arc;
+
+use wagener_hull::benchkit::{Bencher, Report};
+use wagener_hull::coordinator::{
+    BackendKind, BatcherConfig, Coordinator, CoordinatorConfig, HullRequest,
+};
+use wagener_hull::geometry::generators::{generate, Distribution};
+
+fn coord(max_batch: usize, flush_us: u64) -> Arc<Coordinator> {
+    Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            backend: BackendKind::Native,
+            batcher: BatcherConfig { max_batch, flush_us, queue_cap: 4096 },
+            self_check: false,
+            ..Default::default()
+        })
+        .unwrap(),
+    )
+}
+
+fn main() {
+    let b = Bencher::default();
+    let pts = generate(Distribution::Disk, 200, 5);
+
+    // direct backend call = the floor (no batcher, no channels)
+    let mut report = Report::new("E6: coordinator overhead (native backend, 200-pt reqs)");
+    report.add(b.run("floor/native_full_hull", || {
+        wagener_hull::wagener::full_hull(std::hint::black_box(&pts))
+    }));
+
+    for (mb, flush) in [(1usize, 50u64), (4, 200), (8, 200), (8, 1000)] {
+        let c = coord(mb, flush);
+        let pts2 = pts.clone();
+        report.add(b.run(&format!("coordinator/batch{mb}_flush{flush}us"), move || {
+            c.compute(pts2.clone()).unwrap()
+        }));
+    }
+    report.finish();
+
+    // concurrent wave throughput at different batching policies
+    let mut report = Report::new("E6b: wave throughput (8 threads x 25 reqs)");
+    for (mb, flush) in [(1usize, 100u64), (8, 400), (16, 800)] {
+        let c = coord(mb, flush);
+        report.add(b.run_batched(
+            &format!("wave/batch{mb}_flush{flush}us"),
+            200,
+            || {
+                let mut handles = Vec::new();
+                for t in 0..8u64 {
+                    let c = c.clone();
+                    handles.push(std::thread::spawn(move || {
+                        let pts = generate(Distribution::Disk, 150, t);
+                        let waits: Vec<_> = (0..25)
+                            .map(|_| {
+                                c.submit(HullRequest {
+                                    id: c.next_id(),
+                                    points: pts.clone(),
+                                })
+                            })
+                            .collect();
+                        for w in waits {
+                            w.recv().unwrap().unwrap();
+                        }
+                    }));
+                }
+                for h in handles {
+                    h.join().unwrap();
+                }
+            },
+        ));
+        let snap = c.snapshot().0;
+        report.note(format!(
+            "batch{mb}_flush{flush}: mean_batch_size={}",
+            snap.get("mean_batch_size").unwrap()
+        ));
+    }
+    report.finish();
+}

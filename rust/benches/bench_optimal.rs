@@ -1,0 +1,53 @@
+//! E5 — work-optimal variant (paper §3): wall time and work counters of
+//! the strip + Overmars–van-Leeuwen pipeline vs the standard one, plus a
+//! strip-length ablation (the paper picks log²n).
+//!
+//! Run: `cargo bench --bench bench_optimal`
+
+use wagener_hull::benchkit::{black_box, Bencher, Report};
+use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::ovl::{self, optimal::default_strip_len};
+use wagener_hull::wagener;
+
+fn main() {
+    let b = Bencher::default();
+
+    let mut report = Report::new("E5: optimal-speedup variant (circle: large hulls)");
+    for &n in &[1024usize, 4096, 16384] {
+        let pts = generate(Distribution::Circle, n, 13);
+        report.add(b.run(&format!("wagener_native/n{n}"), || {
+            black_box(wagener::upper_hull(black_box(&pts)))
+        }));
+        report.add(b.run(&format!("ovl_optimal/n{n}"), || {
+            black_box(ovl::optimal_upper_hull(black_box(&pts), 0).hull)
+        }));
+        let opt = ovl::optimal_upper_hull(&pts, 0);
+        let run = wagener::pram_exec::run_pipeline_with(&pts, n, false).unwrap();
+        report.note(format!(
+            "n={n}: std_work={} opt_work={} (strip={} tangent_evals={}) ratio={:.1}",
+            run.counters.work,
+            opt.stats.total(),
+            opt.stats.strip_work,
+            opt.stats.tangent_predicate_evals,
+            run.counters.work as f64 / opt.stats.total() as f64
+        ));
+    }
+    report.finish();
+
+    let mut report = Report::new("E5b: strip-length ablation, n = 16384 circle");
+    let n = 16384;
+    let pts = generate(Distribution::Circle, n, 13);
+    for strip in [16usize, 64, default_strip_len(n), 1024, 4096] {
+        report.add(b.run(&format!("ovl/strip{strip}"), || {
+            black_box(ovl::optimal_upper_hull(black_box(&pts), strip).hull)
+        }));
+        let opt = ovl::optimal_upper_hull(&pts, strip);
+        report.note(format!(
+            "strip={strip}: strips={} evals={} total_work={}",
+            opt.stats.strips,
+            opt.stats.tangent_predicate_evals,
+            opt.stats.total()
+        ));
+    }
+    report.finish();
+}

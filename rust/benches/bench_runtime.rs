@@ -1,0 +1,63 @@
+//! E7 — PJRT execute cost per artifact (compile excluded; compile times
+//! reported as notes) and the pallas-vs-plain-jnp ablation twin.
+//! Requires `make artifacts`; prints a skip note otherwise.
+//!
+//! Run: `cargo bench --bench bench_runtime`
+
+use wagener_hull::benchkit::{Bencher, Report};
+use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::runtime::{ArtifactRegistry, HullExecutor};
+
+fn main() {
+    let b = Bencher::default();
+    let mut report = Report::new("E7: PJRT artifact execution");
+    let reg = match ArtifactRegistry::load("artifacts") {
+        Ok(r) => r,
+        Err(e) => {
+            report.note(format!("SKIPPED: {e:#} (run `make artifacts`)"));
+            report.finish();
+            return;
+        }
+    };
+    let exe = HullExecutor::new(reg).unwrap();
+
+    // hood artifacts (single request, upper hull only)
+    for name in ["hood_n64", "hood_n256", "hood_jnp_n256"] {
+        let meta = exe.registry().get(name).unwrap().clone();
+        let pts = generate(Distribution::Disk, meta.n, 5);
+        exe.run_hood(&meta, &pts).unwrap(); // compile once
+        report.add(b.run(&format!("pjrt/{name}"), || {
+            exe.run_hood(&meta, &pts).unwrap()
+        }));
+    }
+    report.note("hood_n256 vs hood_jnp_n256 = pallas kernel vs plain-jnp ablation (E7)");
+
+    // batched hull artifacts: per-request cost vs batch size
+    for (name, b_reqs) in [("hull_n64_b1", 1usize), ("hull_n64_b8", 8)] {
+        let meta = exe.registry().get(name).unwrap().clone();
+        let reqs: Vec<Vec<_>> = (0..b_reqs)
+            .map(|k| generate(Distribution::Disk, 60, k as u64))
+            .collect();
+        exe.run_hull(&meta, &reqs).unwrap();
+        report.add(b.run_batched(&format!("pjrt/{name}/per_request"), b_reqs, || {
+            exe.run_hull(&meta, &reqs).unwrap()
+        }));
+    }
+
+    // native comparison at the same sizes
+    for n in [64usize, 256] {
+        let pts = generate(Distribution::Disk, n, 5);
+        report.add(b.run(&format!("native/wagener_n{n}"), || {
+            wagener_hull::wagener::full_hull(std::hint::black_box(&pts))
+        }));
+    }
+
+    let stats = exe.stats();
+    report.note(format!(
+        "compiles={} total_compile_ms={:.0} executions={}",
+        stats.compiles,
+        stats.compile_ns as f64 / 1e6,
+        stats.executions
+    ));
+    report.finish();
+}

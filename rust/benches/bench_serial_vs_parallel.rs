@@ -1,0 +1,75 @@
+//! E4 — "the parallel program is slow by comparison with another serial
+//! program" (paper Conclusions).
+//!
+//! Regenerates the comparison as a table: four serial baselines, the
+//! native Wagener pipeline, and the OvL-optimal variant, across sizes and
+//! distributions; plus the PRAM simulator's modeled cycle counts with and
+//! without the bank-conflict serialization the paper blames.
+//!
+//! Run: `cargo bench --bench bench_serial_vs_parallel`
+//! (WAGENER_BENCH_FAST=1 for a smoke run)
+
+use wagener_hull::benchkit::{black_box, Bencher, Report};
+use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::ovl;
+use wagener_hull::serial::{gift_wrapping, graham, monotone_chain, quickhull};
+use wagener_hull::wagener;
+
+fn main() {
+    let b = Bencher::default();
+
+    // ---- headline: who wins at each n (uniform square, the common case)
+    let mut report = Report::new("E4: serial vs parallel, uniform square");
+    for &n in &[256usize, 1024, 4096, 16384] {
+        let pts = generate(Distribution::UniformSquare, n, 7);
+        report.add(b.run(&format!("serial/monotone_chain/n{n}"), || {
+            black_box(monotone_chain::upper_hull(black_box(&pts)))
+        }));
+        report.add(b.run(&format!("serial/quickhull/n{n}"), || {
+            black_box(quickhull::upper_hull(black_box(&pts)))
+        }));
+        report.add(b.run(&format!("serial/graham/n{n}"), || {
+            black_box(graham::convex_hull(black_box(&pts)))
+        }));
+        if n <= 4096 {
+            report.add(b.run(&format!("serial/gift_wrapping/n{n}"), || {
+                black_box(gift_wrapping::upper_hull(black_box(&pts)))
+            }));
+        }
+        report.add(b.run(&format!("parallel/wagener_native/n{n}"), || {
+            black_box(wagener::upper_hull(black_box(&pts)))
+        }));
+        report.add(b.run(&format!("parallel/ovl_optimal/n{n}"), || {
+            black_box(ovl::optimal_upper_hull(black_box(&pts), 0).hull)
+        }));
+    }
+
+    // ---- the paper's blamed mechanism: bank-conflict serialization
+    for &n in &[1024usize, 4096] {
+        let pts = generate(Distribution::Disk, n, 7);
+        let run = wagener::pram_exec::run_pipeline(&pts, n).unwrap();
+        report.note(format!(
+            "pram n={n}: steps={} work={} ideal_cycles={} modeled_cycles={} conflict_factor={:.2}",
+            run.counters.steps,
+            run.counters.work,
+            run.counters.ideal_cycles,
+            run.counters.modeled_cycles,
+            run.counters.conflict_factor()
+        ));
+    }
+    report.note("paper shape: serial < native wagener (parallel pays O(n log n) work)");
+    report.finish();
+
+    // ---- distribution sweep at fixed n (hull-size sensitivity)
+    let mut report = Report::new("E4b: distribution sweep, n = 4096");
+    for dist in Distribution::ALL {
+        let pts = generate(dist, 4096, 11);
+        report.add(b.run(&format!("serial/{}", dist.name()), || {
+            black_box(monotone_chain::upper_hull(black_box(&pts)))
+        }));
+        report.add(b.run(&format!("wagener/{}", dist.name()), || {
+            black_box(wagener::upper_hull(black_box(&pts)))
+        }));
+    }
+    report.finish();
+}

@@ -1,0 +1,57 @@
+//! E1/E2 — stage anatomy: cost of each merge stage (the paper's kernel
+//! launches) and the thread-allocation geometry of Figure 2.
+//!
+//! Run: `cargo bench --bench bench_stages`
+
+use wagener_hull::benchkit::{black_box, Bencher, Report};
+use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::geometry::point::pad_to_hood;
+use wagener_hull::serial::hood::oracle_stage;
+use wagener_hull::wagener::{self, occupancy};
+
+fn main() {
+    let b = Bencher::default();
+    let n = 4096;
+    let pts = generate(Distribution::Disk, n, 3);
+
+    // prepare the hood state entering each stage
+    let mut states = Vec::new();
+    let mut hood = pad_to_hood(&pts, n);
+    let mut d = 2usize;
+    while d < n {
+        states.push((d, hood.clone()));
+        hood = wagener::stage(&hood, d);
+        d *= 2;
+    }
+
+    let mut report = Report::new("E2: per-stage merge cost, n = 4096 disk");
+    for (d, state) in &states {
+        report.add(b.run(&format!("wagener_stage/d{d}"), || {
+            black_box(wagener::stage(black_box(state), *d))
+        }));
+    }
+    for (d, state) in &states {
+        report.add(b.run(&format!("oracle_stage/d{d}"), || {
+            black_box(oracle_stage(black_box(state), *d))
+        }));
+    }
+    // Figure-2 allocation table as notes (machine-readable in BENCH_JSON)
+    for row in occupancy::occupancy_table(&pts, n) {
+        report.note(format!(
+            "occupancy stage={} d={} d1={} d2={} blocks={} threads={} active={} util={:.3}",
+            row.stage, row.d, row.d1, row.d2, row.blocks, row.threads,
+            row.active_threads, row.utilization()
+        ));
+    }
+    report.finish();
+
+    // whole pipeline vs sum of stages (launch overhead visibility)
+    let mut report = Report::new("E2b: full pipeline, n sweep (disk)");
+    for &n in &[256usize, 1024, 4096, 16384] {
+        let pts = generate(Distribution::Disk, n, 3);
+        report.add(b.run(&format!("upper_hood/n{n}"), || {
+            black_box(wagener::upper_hood(black_box(&pts), n))
+        }));
+    }
+    report.finish();
+}

@@ -1,0 +1,259 @@
+//! Built-in micro-benchmark harness (substitute for `criterion`, which is
+//! not vendored in this offline environment).
+//!
+//! Time-targeted sampling with warmup, robust stats (median/p95), and
+//! paper-style table output.  Every `cargo bench` target is a
+//! `harness = false` binary built on this module, so `cargo bench` works
+//! with no external dev-dependencies.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box;
+
+/// Robust summary of per-iteration wall times.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    pub stddev_ns: f64,
+}
+
+impl Stats {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+    /// items processed per second given `items` of work per iteration.
+    pub fn throughput(&self, items: usize) -> f64 {
+        items as f64 / (self.mean_ns * 1e-9)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} {:>12} {:>12} {:>12}  x{}",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p95_ns),
+            self.iters
+        )
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Debug)]
+pub struct Bencher {
+    pub warmup: Duration,
+    pub target: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // Overridable for CI smoke runs: WAGENER_BENCH_FAST=1.
+        let fast = std::env::var("WAGENER_BENCH_FAST").is_ok();
+        Bencher {
+            warmup: Duration::from_millis(if fast { 20 } else { 200 }),
+            target: Duration::from_millis(if fast { 100 } else { 1000 }),
+            min_iters: 5,
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+impl Bencher {
+    /// Measure `f`, returning robust stats. `f` should consume its output
+    /// via `black_box` internally or return a value (which we black_box).
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> Stats {
+        // Warmup + pilot estimate.
+        let warm_start = Instant::now();
+        let mut pilot_iters = 0usize;
+        while warm_start.elapsed() < self.warmup || pilot_iters < 2 {
+            std_black_box(f());
+            pilot_iters += 1;
+            if pilot_iters >= self.max_iters {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / pilot_iters as f64;
+        let planned = ((self.target.as_secs_f64() / per_iter.max(1e-9)) as usize)
+            .clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(planned);
+        for _ in 0..planned {
+            let t = Instant::now();
+            std_black_box(f());
+            samples.push(t.elapsed().as_nanos() as f64);
+        }
+        Self::stats_from(name, &mut samples)
+    }
+
+    /// Measure a batch-style closure that runs `k` logical operations per
+    /// call; stats are per logical operation.
+    pub fn run_batched<T, F: FnMut() -> T>(&self, name: &str, k: usize, f: F) -> Stats {
+        let mut s = self.run(name, f);
+        let k = k.max(1) as f64;
+        s.mean_ns /= k;
+        s.median_ns /= k;
+        s.p95_ns /= k;
+        s.min_ns /= k;
+        s.stddev_ns /= k;
+        s
+    }
+
+    fn stats_from(name: &str, samples: &mut [f64]) -> Stats {
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var =
+            samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Stats {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: mean,
+            median_ns: samples[n / 2],
+            p95_ns: samples[(n as f64 * 0.95) as usize % n.max(1)],
+            min_ns: samples[0],
+            stddev_ns: var.sqrt(),
+        }
+    }
+}
+
+/// Collects rows and prints a paper-style table; also emits a machine-
+/// readable JSON block consumed by scripts/experiments.
+pub struct Report {
+    title: String,
+    rows: Vec<Stats>,
+    notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(title: &str) -> Self {
+        println!("\n=== {title} ===");
+        println!(
+            "{:<44} {:>12} {:>12} {:>12}  iters",
+            "benchmark", "median", "mean", "p95"
+        );
+        Report {
+            title: title.to_string(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn add(&mut self, s: Stats) {
+        println!("{s}");
+        self.rows.push(s);
+    }
+
+    pub fn note(&mut self, msg: impl Into<String>) {
+        let msg = msg.into();
+        println!("  # {msg}");
+        self.notes.push(msg);
+    }
+
+    /// Emit the JSON trailer (one line, greppable as BENCH_JSON).
+    pub fn finish(self) {
+        use crate::util::json::Json;
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", Json::Str(s.name.clone())),
+                    ("median_ns", Json::Num(s.median_ns)),
+                    ("mean_ns", Json::Num(s.mean_ns)),
+                    ("p95_ns", Json::Num(s.p95_ns)),
+                    ("iters", Json::Num(s.iters as f64)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("title", Json::Str(self.title)),
+            ("rows", Json::Arr(rows)),
+            (
+                "notes",
+                Json::Arr(self.notes.into_iter().map(Json::Str).collect()),
+            ),
+        ]);
+        println!("BENCH_JSON {doc}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_produces_sane_stats() {
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            target: Duration::from_millis(10),
+            min_iters: 5,
+            max_iters: 10_000,
+        };
+        let s = b.run("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            acc
+        });
+        assert!(s.iters >= 5);
+        assert!(s.median_ns > 0.0);
+        assert!(s.min_ns <= s.median_ns);
+        assert!(s.median_ns <= s.p95_ns * 1.0001);
+    }
+
+    #[test]
+    fn batched_divides() {
+        let b = Bencher {
+            warmup: Duration::from_millis(1),
+            target: Duration::from_millis(5),
+            min_iters: 5,
+            max_iters: 10_000,
+        };
+        let s1 = b.run("one", || std::thread::yield_now());
+        let s10 = b.run_batched("ten", 10, || {
+            for _ in 0..10 {
+                std::thread::yield_now();
+            }
+        });
+        // per-op cost of the batched version should be within ~10x of single
+        assert!(s10.mean_ns < s1.mean_ns * 10.0 + 1e5);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = Stats {
+            name: "t".into(),
+            iters: 1,
+            mean_ns: 1e9,
+            median_ns: 1e9,
+            p95_ns: 1e9,
+            min_ns: 1e9,
+            stddev_ns: 0.0,
+        };
+        assert!((s.throughput(1000) - 1000.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,140 @@
+//! Launcher configuration: TOML file + programmatic defaults.
+//!
+//! ```toml
+//! [server]
+//! addr = "127.0.0.1:7878"
+//!
+//! [backend]
+//! kind = "pjrt"              # pjrt | native | serial | pram
+//! artifacts_dir = "artifacts"
+//! self_check = false
+//!
+//! [batcher]
+//! max_batch = 8              # 0 = backend preference
+//! flush_us = 500
+//! queue_cap = 1024
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::{BackendKind, CoordinatorConfig};
+use crate::server::ServerConfig;
+use crate::util::tomlmini::{self, Table};
+
+/// Full launcher configuration.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub server: ServerConfig,
+    pub coordinator: CoordinatorConfig,
+}
+
+impl Config {
+    /// Parse from TOML text (unknown keys rejected to catch typos).
+    pub fn from_toml(text: &str) -> Result<Config> {
+        let table: Table = tomlmini::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let mut cfg = Config::default();
+
+        for (section, entries) in &table {
+            for (key, value) in entries {
+                let path = format!("{section}.{key}");
+                match path.as_str() {
+                    "server.addr" => {
+                        cfg.server.addr = value
+                            .as_str()
+                            .ok_or_else(|| anyhow!("{path}: want string"))?
+                            .to_string();
+                    }
+                    "backend.kind" => {
+                        let s = value.as_str().ok_or_else(|| anyhow!("{path}: want string"))?;
+                        cfg.coordinator.backend = BackendKind::parse(s)
+                            .ok_or_else(|| anyhow!("{path}: unknown backend {s:?}"))?;
+                    }
+                    "backend.artifacts_dir" => {
+                        cfg.coordinator.artifacts_dir = PathBuf::from(
+                            value.as_str().ok_or_else(|| anyhow!("{path}: want string"))?,
+                        );
+                    }
+                    "backend.self_check" => {
+                        cfg.coordinator.self_check =
+                            value.as_bool().ok_or_else(|| anyhow!("{path}: want bool"))?;
+                    }
+                    "backend.preload" => {
+                        cfg.coordinator.preload =
+                            value.as_bool().ok_or_else(|| anyhow!("{path}: want bool"))?;
+                    }
+                    "batcher.max_batch" => {
+                        cfg.coordinator.batcher.max_batch = as_usize(value, &path)?;
+                    }
+                    "batcher.flush_us" => {
+                        cfg.coordinator.batcher.flush_us = as_usize(value, &path)? as u64;
+                    }
+                    "batcher.queue_cap" => {
+                        cfg.coordinator.batcher.queue_cap = as_usize(value, &path)?.max(1);
+                    }
+                    _ => return Err(anyhow!("unknown config key: {path}")),
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_toml(&text)
+    }
+}
+
+fn as_usize(v: &tomlmini::Value, path: &str) -> Result<usize> {
+    v.as_int()
+        .and_then(|i| usize::try_from(i).ok())
+        .ok_or_else(|| anyhow!("{path}: want a non-negative integer"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = Config::from_toml(
+            r#"
+[server]
+addr = "0.0.0.0:9000"
+[backend]
+kind = "serial"
+artifacts_dir = "/tmp/arts"
+self_check = true
+[batcher]
+max_batch = 16
+flush_us = 250
+queue_cap = 99
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.server.addr, "0.0.0.0:9000");
+        assert_eq!(cfg.coordinator.backend, BackendKind::Serial);
+        assert_eq!(cfg.coordinator.artifacts_dir, PathBuf::from("/tmp/arts"));
+        assert!(cfg.coordinator.self_check);
+        assert_eq!(cfg.coordinator.batcher.max_batch, 16);
+        assert_eq!(cfg.coordinator.batcher.flush_us, 250);
+        assert_eq!(cfg.coordinator.batcher.queue_cap, 99);
+    }
+
+    #[test]
+    fn defaults_when_empty() {
+        let cfg = Config::from_toml("").unwrap();
+        assert_eq!(cfg.coordinator.backend, BackendKind::Native);
+        assert_eq!(cfg.server.addr, "127.0.0.1:7878");
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_types() {
+        assert!(Config::from_toml("[server]\nport = 1").is_err());
+        assert!(Config::from_toml("[backend]\nkind = \"cuda\"").is_err());
+        assert!(Config::from_toml("[batcher]\nmax_batch = \"lots\"").is_err());
+        assert!(Config::from_toml("[batcher]\nmax_batch = -3").is_err());
+    }
+}

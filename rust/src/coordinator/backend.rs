@@ -1,0 +1,288 @@
+//! Pluggable hull backends.
+//!
+//! The default production backend is PJRT (AOT artifacts from the Pallas/
+//! JAX layers); `native` (host Wagener), `serial` (monotone chain) and
+//! `pram` (cost-accounting simulator) exist for baselines and experiments.
+//! PJRT handles are not Send, so backends are constructed *on* the worker
+//! thread via [`BackendKind::build`].
+
+use std::path::PathBuf;
+
+use crate::geometry::point::{dedup_x, Point};
+use crate::runtime::{ArtifactRegistry, HullExecutor};
+use crate::serial::monotone_chain;
+use crate::wagener;
+
+/// Which backend the coordinator runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT HLO artifacts on the PJRT CPU client (the three-layer path).
+    Pjrt,
+    /// rust-native Wagener pipeline.
+    Native,
+    /// serial monotone chain (the paper's serial comparator).
+    Serial,
+    /// Wagener on the CREW-PRAM simulator (slow; experiments only).
+    Pram,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        Some(match s {
+            "pjrt" => BackendKind::Pjrt,
+            "native" => BackendKind::Native,
+            "serial" => BackendKind::Serial,
+            "pram" => BackendKind::Pram,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Native => "native",
+            BackendKind::Serial => "serial",
+            BackendKind::Pram => "pram",
+        }
+    }
+
+    /// Construct the backend (call on the thread that will own it).
+    /// `preload` compiles every hull artifact up front (server warm start;
+    /// §Perf P4 — lazy compilation showed up as 10²-second tail latencies).
+    pub fn build(
+        &self,
+        artifacts_dir: &PathBuf,
+        preload: bool,
+    ) -> Result<Box<dyn HullBackend>, String> {
+        Ok(match self {
+            BackendKind::Pjrt => {
+                let reg = ArtifactRegistry::load(artifacts_dir).map_err(|e| e.to_string())?;
+                let exe = HullExecutor::new(reg).map_err(|e| e.to_string())?;
+                if preload {
+                    let names: Vec<String> = exe
+                        .registry()
+                        .iter()
+                        .filter(|m| m.kind == crate::runtime::ArtifactKind::Hull)
+                        .map(|m| m.name.clone())
+                        .collect();
+                    for name in names {
+                        exe.ensure_compiled(&name).map_err(|e| e.to_string())?;
+                    }
+                }
+                Box::new(PjrtBackend { exe })
+            }
+            BackendKind::Native => Box::new(NativeBackend),
+            BackendKind::Serial => Box::new(SerialBackend),
+            BackendKind::Pram => Box::new(PramBackend),
+        })
+    }
+}
+
+/// A batch-capable full-hull computer over preprocessed (x-sorted,
+/// distinct-x, f32-quantized) point sets.
+pub trait HullBackend {
+    fn name(&self) -> &'static str;
+    /// largest batch worth grouping (the batcher's flush threshold).
+    fn preferred_batch(&self) -> usize;
+    /// largest request size this backend accepts.
+    fn max_points(&self) -> usize;
+    /// compute (upper, lower) chains per request.
+    fn compute(&self, batch: &[Vec<Point>]) -> Result<Vec<(Vec<Point>, Vec<Point>)>, String>;
+}
+
+// ------------------------------------------------------------------ pjrt
+
+struct PjrtBackend {
+    exe: HullExecutor,
+}
+
+impl HullBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn preferred_batch(&self) -> usize {
+        let classes = self.exe.registry().hull_size_classes();
+        classes
+            .first()
+            .map(|&n| self.exe.registry().hull_batches(n).into_iter().max().unwrap_or(1))
+            .unwrap_or(1)
+    }
+
+    fn max_points(&self) -> usize {
+        self.exe.registry().hull_size_classes().into_iter().max().unwrap_or(0)
+    }
+
+    fn compute(&self, batch: &[Vec<Point>]) -> Result<Vec<(Vec<Point>, Vec<Point>)>, String> {
+        let m = batch.iter().map(Vec::len).max().unwrap_or(0);
+        let n = self
+            .exe
+            .registry()
+            .hull_size_classes()
+            .into_iter()
+            .find(|&n| n >= m.max(2))
+            .ok_or_else(|| format!("no size class >= {m}"))?;
+        let caps = self.exe.registry().hull_batches(n);
+        let mut out = Vec::with_capacity(batch.len());
+        let mut rest = batch;
+        while !rest.is_empty() {
+            // smallest capable batch artifact for the remaining chunk
+            let b = caps
+                .iter()
+                .copied()
+                .find(|&b| b >= rest.len())
+                .unwrap_or_else(|| caps.iter().copied().max().unwrap_or(1));
+            let take = rest.len().min(b);
+            let meta = self
+                .exe
+                .registry()
+                .select_hull(n, b)
+                .map_err(|e| e.to_string())?
+                .clone();
+            let chunk = self
+                .exe
+                .run_hull(&meta, &rest[..take])
+                .map_err(|e| e.to_string())?;
+            out.extend(chunk);
+            rest = &rest[take..];
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------- native
+
+struct NativeBackend;
+
+impl HullBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+    fn preferred_batch(&self) -> usize {
+        8
+    }
+    fn max_points(&self) -> usize {
+        1 << 22
+    }
+    fn compute(&self, batch: &[Vec<Point>]) -> Result<Vec<(Vec<Point>, Vec<Point>)>, String> {
+        Ok(batch.iter().map(|pts| wagener::full_hull(pts)).collect())
+    }
+}
+
+// ---------------------------------------------------------------- serial
+
+struct SerialBackend;
+
+impl HullBackend for SerialBackend {
+    fn name(&self) -> &'static str {
+        "serial"
+    }
+    fn preferred_batch(&self) -> usize {
+        1
+    }
+    fn max_points(&self) -> usize {
+        1 << 24
+    }
+    fn compute(&self, batch: &[Vec<Point>]) -> Result<Vec<(Vec<Point>, Vec<Point>)>, String> {
+        Ok(batch.iter().map(|pts| monotone_chain::full_hull(pts)).collect())
+    }
+}
+
+// ------------------------------------------------------------------ pram
+
+struct PramBackend;
+
+impl HullBackend for PramBackend {
+    fn name(&self) -> &'static str {
+        "pram"
+    }
+    fn preferred_batch(&self) -> usize {
+        1
+    }
+    fn max_points(&self) -> usize {
+        1 << 14
+    }
+    fn compute(&self, batch: &[Vec<Point>]) -> Result<Vec<(Vec<Point>, Vec<Point>)>, String> {
+        batch
+            .iter()
+            .map(|pts| {
+                let slots = pts.len().next_power_of_two().max(2);
+                let up = wagener::pram_exec::run_pipeline(pts, slots)
+                    .map_err(|e| e.to_string())?;
+                let neg: Vec<Point> = pts.iter().map(|p| Point::new(p.x, -p.y)).collect();
+                let lo = wagener::pram_exec::run_pipeline(&neg, slots)
+                    .map_err(|e| e.to_string())?;
+                let upper = crate::geometry::point::live_prefix(&up.hood).to_vec();
+                let lower: Vec<Point> = crate::geometry::point::live_prefix(&lo.hood)
+                    .iter()
+                    .map(|p| Point::new(p.x, -p.y))
+                    .collect();
+                Ok((upper, lower))
+            })
+            .collect()
+    }
+}
+
+// ------------------------------------------------------ degenerate exact
+
+/// Exact full hull for inputs violating general position (duplicate x):
+/// per x-class only the extreme-y points can be hull corners, so dedup to
+/// the max-y (resp. min-y) representative and run the serial chain.
+pub fn exact_full_hull(sorted_pts: &[Point]) -> (Vec<Point>, Vec<Point>) {
+    let upper = monotone_chain::upper_hull(&dedup_x(sorted_pts, true));
+    let lower = monotone_chain::lower_hull(&dedup_x(sorted_pts, false));
+    (upper, lower)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::generators::{generate, Distribution};
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in [BackendKind::Pjrt, BackendKind::Native, BackendKind::Serial, BackendKind::Pram] {
+            assert_eq!(BackendKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(BackendKind::parse("gpu"), None);
+    }
+
+    #[test]
+    fn native_serial_pram_agree() {
+        let native = BackendKind::Native.build(&PathBuf::new(), false).unwrap();
+        let serial = BackendKind::Serial.build(&PathBuf::new(), false).unwrap();
+        let pram = BackendKind::Pram.build(&PathBuf::new(), false).unwrap();
+        let batch: Vec<Vec<Point>> = (0..3)
+            .map(|k| generate(Distribution::ALL[k], 50 + k, k as u64))
+            .collect();
+        let a = native.compute(&batch).unwrap();
+        let b = serial.compute(&batch).unwrap();
+        let c = pram.compute(&batch).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    fn exact_full_hull_handles_duplicate_x() {
+        // a vertical segment of three points plus flanks
+        let pts = vec![
+            Point::new(0.1, 0.5),
+            Point::new(0.5, 0.1),
+            Point::new(0.5, 0.5),
+            Point::new(0.5, 0.9),
+            Point::new(0.9, 0.5),
+        ];
+        let (up, lo) = exact_full_hull(&pts);
+        assert_eq!(up, vec![pts[0], pts[3], pts[4]]);
+        assert_eq!(lo, vec![pts[0], pts[1], pts[4]]);
+    }
+
+    #[test]
+    fn exact_matches_serial_on_general_position() {
+        let pts = generate(Distribution::Disk, 128, 3);
+        let (u, l) = exact_full_hull(&pts);
+        let (su, sl) = monotone_chain::full_hull(&pts);
+        assert_eq!(u, su);
+        assert_eq!(l, sl);
+    }
+}

@@ -1,0 +1,203 @@
+//! Dynamic batcher: size-class queues with batch-full / deadline flushing.
+//!
+//! Requests of similar size are grouped (padding waste is bounded by the
+//! power-of-two class) and flushed to the execution thread when a class
+//! reaches the batch limit or its oldest request exceeds the flush
+//! deadline — the standard continuous-batching trade-off between
+//! throughput (bigger batches amortize dispatch) and p99 latency.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use super::request::{HullResponse, Prepared, RequestError};
+
+/// Batching policy knobs (config file: `[batcher]`).
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// flush a class at this many requests (0 = backend's preference).
+    pub max_batch: usize,
+    /// flush a class when its oldest request is older than this.
+    pub flush_us: u64,
+    /// submission queue capacity (backpressure bound).
+    pub queue_cap: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 0, flush_us: 500, queue_cap: 1024 }
+    }
+}
+
+/// A queued request with its reply channel.
+pub(crate) struct Item {
+    pub prepared: Prepared,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<Result<HullResponse, RequestError>>,
+}
+
+/// A flushed batch (all items share a size class).
+pub(crate) struct BatchMsg {
+    pub items: Vec<Item>,
+}
+
+/// Size-class key: smallest power of two >= the request's point count
+/// (min 2, the smallest hood).
+pub fn size_class(m: usize) -> usize {
+    m.max(2).next_power_of_two()
+}
+
+/// The batcher loop: runs on its own thread until the submit side closes.
+pub(crate) fn run_batcher(
+    rx: mpsc::Receiver<Item>,
+    tx: mpsc::SyncSender<BatchMsg>,
+    max_batch: usize,
+    flush_us: u64,
+) {
+    let flush = Duration::from_micros(flush_us.max(1));
+    let mut queues: BTreeMap<usize, Vec<Item>> = BTreeMap::new();
+
+    let flush_class = |items: Vec<Item>, tx: &mpsc::SyncSender<BatchMsg>| {
+        if !items.is_empty() {
+            // receiver gone => shutting down; drop items (their reply
+            // channels die, submitters observe Shutdown)
+            let _ = tx.send(BatchMsg { items });
+        }
+    };
+
+    loop {
+        // earliest deadline across queues bounds the wait
+        let now = Instant::now();
+        let next_deadline = queues
+            .values()
+            .filter_map(|q| q.first())
+            .map(|i| i.enqueued + flush)
+            .min();
+        let wait = match next_deadline {
+            Some(dl) => dl.saturating_duration_since(now).min(flush),
+            None => flush,
+        };
+        match rx.recv_timeout(wait) {
+            Ok(item) => {
+                let class = size_class(item.prepared.points.len());
+                let q = queues.entry(class).or_default();
+                q.push(item);
+                if q.len() >= max_batch {
+                    let items = std::mem::take(q);
+                    flush_class(items, &tx);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                for (_, q) in std::mem::take(&mut queues) {
+                    flush_class(q, &tx);
+                }
+                return;
+            }
+        }
+        // deadline sweep
+        let now = Instant::now();
+        let expired: Vec<usize> = queues
+            .iter()
+            .filter(|(_, q)| q.first().is_some_and(|i| now >= i.enqueued + flush))
+            .map(|(&c, _)| c)
+            .collect();
+        for c in expired {
+            let items = queues.remove(&c).unwrap_or_default();
+            flush_class(items, &tx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::point::Point;
+
+    fn item(m: usize, reply: mpsc::Sender<Result<HullResponse, RequestError>>) -> Item {
+        Item {
+            prepared: Prepared {
+                id: m as u64,
+                points: (0..m)
+                    .map(|i| Point::new(i as f64 / m as f64, 0.5))
+                    .collect(),
+                degenerate: false,
+            },
+            enqueued: Instant::now(),
+            reply,
+        }
+    }
+
+    #[test]
+    fn size_classes() {
+        assert_eq!(size_class(1), 2);
+        assert_eq!(size_class(2), 2);
+        assert_eq!(size_class(3), 4);
+        assert_eq!(size_class(64), 64);
+        assert_eq!(size_class(65), 128);
+    }
+
+    #[test]
+    fn flushes_when_batch_full() {
+        let (itx, irx) = mpsc::channel();
+        let (btx, brx) = mpsc::sync_channel(16);
+        let h = std::thread::spawn(move || run_batcher(irx, btx, 3, 100_000));
+        let (rtx, _rrx) = mpsc::channel();
+        for _ in 0..3 {
+            itx.send(item(10, rtx.clone())).unwrap();
+        }
+        let batch = brx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(batch.items.len(), 3);
+        drop(itx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let (itx, irx) = mpsc::channel();
+        let (btx, brx) = mpsc::sync_channel(16);
+        let h = std::thread::spawn(move || run_batcher(irx, btx, 100, 2_000));
+        let (rtx, _rrx) = mpsc::channel();
+        itx.send(item(10, rtx.clone())).unwrap();
+        let t0 = Instant::now();
+        let batch = brx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(batch.items.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_micros(1_500), "{:?}", t0.elapsed());
+        drop(itx);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn separates_size_classes() {
+        let (itx, irx) = mpsc::channel();
+        let (btx, brx) = mpsc::sync_channel(16);
+        let h = std::thread::spawn(move || run_batcher(irx, btx, 2, 50_000));
+        let (rtx, _rrx) = mpsc::channel();
+        itx.send(item(10, rtx.clone())).unwrap(); // class 16
+        itx.send(item(100, rtx.clone())).unwrap(); // class 128
+        itx.send(item(12, rtx.clone())).unwrap(); // class 16 -> flush
+        let batch = brx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(batch.items.len(), 2);
+        for it in &batch.items {
+            assert_eq!(size_class(it.prepared.points.len()), 16);
+        }
+        drop(itx);
+        // remaining class flushed on disconnect
+        let rest = brx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(rest.items.len(), 1);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn drains_on_disconnect() {
+        let (itx, irx) = mpsc::channel();
+        let (btx, brx) = mpsc::sync_channel(16);
+        let h = std::thread::spawn(move || run_batcher(irx, btx, 100, 1_000_000));
+        let (rtx, _rrx) = mpsc::channel();
+        itx.send(item(5, rtx.clone())).unwrap();
+        drop(itx);
+        let batch = brx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(batch.items.len(), 1);
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,194 @@
+//! Serving metrics: counters + log-bucketed latency histograms with
+//! percentile estimation.  Lock-light: all atomics, safe to share via Arc.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+const BUCKETS: usize = 48; // log2 ns buckets: covers 1 ns .. ~3 days
+
+/// Log2-bucketed latency histogram (nanoseconds).
+#[derive(Debug)]
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    sum_ns: AtomicU64,
+    count: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_ns: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn record_ns(&self, ns: u64) {
+        let b = (64 - ns.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.counts[b].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+    }
+
+    pub fn record(&self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns.load(Ordering::Relaxed)
+    }
+
+    /// Percentile estimate (upper bucket bound), q in [0, 1].
+    pub fn percentile_ns(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((total as f64) * q).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (b, c) in self.counts.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (b + 1); // bucket upper bound
+            }
+        }
+        self.max_ns()
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("mean_ns", Json::Num(self.mean_ns())),
+            ("p50_ns", Json::Num(self.percentile_ns(0.50) as f64)),
+            ("p95_ns", Json::Num(self.percentile_ns(0.95) as f64)),
+            ("p99_ns", Json::Num(self.percentile_ns(0.99) as f64)),
+            ("max_ns", Json::Num(self.max_ns() as f64)),
+        ])
+    }
+}
+
+/// All coordinator metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub errors: AtomicU64,
+    pub degenerate_fallbacks: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    pub points_in: AtomicU64,
+    pub hull_points_out: AtomicU64,
+    pub queue_latency: Histogram,
+    pub exec_latency: Histogram,
+    pub e2e_latency: Histogram,
+}
+
+/// A point-in-time copy, JSON-serializable for the STATS endpoint.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot(pub Json);
+
+impl Metrics {
+    pub fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(counter: &AtomicU64, v: u64) {
+        counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = |c: &AtomicU64| Json::Num(c.load(Ordering::Relaxed) as f64);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let breqs = self.batched_requests.load(Ordering::Relaxed);
+        MetricsSnapshot(Json::obj(vec![
+            ("requests", g(&self.requests)),
+            ("responses", g(&self.responses)),
+            ("errors", g(&self.errors)),
+            ("degenerate_fallbacks", g(&self.degenerate_fallbacks)),
+            ("batches", g(&self.batches)),
+            ("batched_requests", g(&self.batched_requests)),
+            (
+                "mean_batch_size",
+                Json::Num(if batches == 0 { 0.0 } else { breqs as f64 / batches as f64 }),
+            ),
+            ("points_in", g(&self.points_in)),
+            ("hull_points_out", g(&self.hull_points_out)),
+            ("queue_latency", self.queue_latency.to_json()),
+            ("exec_latency", self.exec_latency.to_json()),
+            ("e2e_latency", self.e2e_latency.to_json()),
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let h = Histogram::default();
+        for i in 1..=1000u64 {
+            h.record_ns(i * 1000);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.percentile_ns(0.5);
+        let p95 = h.percentile_ns(0.95);
+        let p99 = h.percentile_ns(0.99);
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        // p50 of ~uniform 1k..1000k ns should be around 512k..1M bucket
+        assert!((100_000..=2_100_000).contains(&p50), "{p50}");
+        assert!((h.mean_ns() - 500_500.0 * 1.0).abs() < 100_000.0);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::default();
+        assert_eq!(h.percentile_ns(0.99), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_is_json() {
+        let m = Metrics::default();
+        Metrics::inc(&m.requests);
+        Metrics::add(&m.points_in, 100);
+        m.e2e_latency.record_ns(5000);
+        let snap = m.snapshot();
+        let s = snap.0.to_string();
+        let back = crate::util::json::parse(&s).unwrap();
+        assert_eq!(back.get("requests").unwrap().as_usize(), Some(1));
+        assert_eq!(back.get("points_in").unwrap().as_usize(), Some(100));
+        assert_eq!(
+            back.get("e2e_latency").unwrap().get("count").unwrap().as_usize(),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn max_tracked() {
+        let h = Histogram::default();
+        h.record_ns(10);
+        h.record_ns(99999);
+        h.record_ns(50);
+        assert_eq!(h.max_ns(), 99999);
+    }
+}

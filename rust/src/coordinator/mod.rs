@@ -1,0 +1,24 @@
+//! L3 coordinator: the serving framework around the hull pipelines.
+//!
+//! Shaped like a vLLM-style router: requests enter through
+//! [`Coordinator::submit`], are preprocessed (f32 quantization, sort,
+//! general-position screening), routed into per-size-class queues, batched
+//! by the dynamic batcher (flush on batch-full or deadline), executed on
+//! the configured backend (PJRT artifacts by default — python never runs
+//! here), and returned with queue/execute timings.
+//!
+//! Degenerate inputs (duplicate points / duplicate x-coordinates violate
+//! the paper's general-position assumption) short-circuit to an exact
+//! serial fallback instead of poisoning the Wagener fast path.
+
+pub mod backend;
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+
+pub use backend::{BackendKind, HullBackend};
+pub use batcher::BatcherConfig;
+pub use metrics::{Histogram, Metrics, MetricsSnapshot};
+pub use request::{HullRequest, HullResponse, RequestError};
+pub use router::{Coordinator, CoordinatorConfig};

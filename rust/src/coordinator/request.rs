@@ -1,0 +1,145 @@
+//! Request/response types and input preprocessing.
+
+use crate::geometry::point::{sort_by_x, Point};
+
+/// A hull computation request (raw client points, any order).
+#[derive(Clone, Debug)]
+pub struct HullRequest {
+    pub id: u64,
+    pub points: Vec<Point>,
+}
+
+/// A completed hull: upper and lower chains, left-to-right, plus timings.
+#[derive(Clone, Debug)]
+pub struct HullResponse {
+    pub id: u64,
+    pub upper: Vec<Point>,
+    pub lower: Vec<Point>,
+    /// which backend computed it ("pjrt", "native", "serial", ...).
+    pub backend: &'static str,
+    pub queue_ns: u64,
+    pub exec_ns: u64,
+}
+
+/// Input rejection reasons.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RequestError {
+    Empty,
+    NonFinite(usize),
+    OutOfRange(usize),
+    TooLarge { points: usize, max: usize },
+    Backend(String),
+    Shutdown,
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RequestError::Empty => write!(f, "empty point set"),
+            RequestError::NonFinite(i) => write!(f, "point {i} is not finite"),
+            RequestError::OutOfRange(i) => {
+                write!(f, "point {i} outside [0,1]x[0,1] (normalize first)")
+            }
+            RequestError::TooLarge { points, max } => {
+                write!(f, "{points} points exceeds the largest size class {max}")
+            }
+            RequestError::Backend(e) => write!(f, "backend failure: {e}"),
+            RequestError::Shutdown => write!(f, "coordinator is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
+
+/// Preprocessed request ready for a Wagener backend.
+#[derive(Clone, Debug)]
+pub struct Prepared {
+    pub id: u64,
+    /// x-sorted, f32-quantized points.
+    pub points: Vec<Point>,
+    /// general position violated (duplicate x): needs the exact fallback.
+    pub degenerate: bool,
+}
+
+/// Validate + canonicalize a request.
+///
+/// Points are quantized to f32 (the artifact wire type) and x-sorted; the
+/// paper's coordinate convention ([0,1] x-range, REMOTE = x > 1) is
+/// enforced here, and duplicate x-coordinates (general-position violation)
+/// mark the request for the serial-exact path.
+pub fn prepare(req: &HullRequest) -> Result<Prepared, RequestError> {
+    if req.points.is_empty() {
+        return Err(RequestError::Empty);
+    }
+    for (i, p) in req.points.iter().enumerate() {
+        if !p.x.is_finite() || !p.y.is_finite() {
+            return Err(RequestError::NonFinite(i));
+        }
+        if !(0.0..=1.0).contains(&p.x) || !(0.0..=1.0).contains(&p.y) {
+            return Err(RequestError::OutOfRange(i));
+        }
+    }
+    let mut pts: Vec<Point> = req.points.iter().map(|p| p.quantize_f32()).collect();
+    sort_by_x(&mut pts);
+    pts.dedup(); // exact duplicates can always be dropped
+    let degenerate = pts.windows(2).any(|w| w[0].x == w[1].x);
+    Ok(Prepared { id: req.id, points: pts, degenerate })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(v: &[(f64, f64)]) -> HullRequest {
+        HullRequest {
+            id: 1,
+            points: v.iter().map(|&(x, y)| Point::new(x, y)).collect(),
+        }
+    }
+
+    #[test]
+    fn sorts_and_quantizes() {
+        let p = prepare(&req(&[(0.9, 0.1), (0.1, 0.9)])).unwrap();
+        assert!(p.points[0].x < p.points[1].x);
+        assert!(!p.degenerate);
+        for pt in &p.points {
+            assert_eq!(pt.x, pt.x as f32 as f64);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(matches!(prepare(&req(&[])), Err(RequestError::Empty)));
+        assert!(matches!(
+            prepare(&req(&[(f64::NAN, 0.0)])),
+            Err(RequestError::NonFinite(0))
+        ));
+        assert!(matches!(
+            prepare(&req(&[(0.5, 0.5), (1.5, 0.0)])),
+            Err(RequestError::OutOfRange(1))
+        ));
+    }
+
+    #[test]
+    fn exact_duplicates_dropped() {
+        let p = prepare(&req(&[(0.5, 0.5), (0.5, 0.5), (0.2, 0.2)])).unwrap();
+        assert_eq!(p.points.len(), 2);
+        assert!(!p.degenerate);
+    }
+
+    #[test]
+    fn duplicate_x_flags_degenerate() {
+        let p = prepare(&req(&[(0.5, 0.1), (0.5, 0.9), (0.2, 0.2)])).unwrap();
+        assert_eq!(p.points.len(), 3);
+        assert!(p.degenerate);
+    }
+
+    #[test]
+    fn quantization_collision_detected() {
+        // two doubles that collide in f32 become a duplicate and are merged
+        let a = 0.1f64;
+        let b = f64::from_bits(a.to_bits() + 1);
+        let p = prepare(&req(&[(a, 0.3), (b, 0.3)])).unwrap();
+        assert_eq!(p.points.len(), 1);
+    }
+}

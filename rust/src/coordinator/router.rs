@@ -1,0 +1,384 @@
+//! The coordinator: request intake, routing, thread topology, lifecycle.
+//!
+//! Thread layout (all std threads; this environment vendors no async
+//! runtime, and the workload is CPU-bound — see DESIGN.md §Substitutions):
+//!
+//! ```text
+//! callers ──submit()──► [batcher thread] ──batches──► [exec thread]
+//!    ▲  (prepare +              │  size-class queues        │ owns the
+//!    │   degenerate             ▼  deadline flushing        ▼ backend
+//!    │   fast path)      bounded channel             replies + metrics
+//!    └──────────────────────── per-request reply channel ◄──┘
+//! ```
+
+use std::path::PathBuf;
+use std::sync::atomic::AtomicU64;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::backend::{exact_full_hull, BackendKind};
+use super::batcher::{run_batcher, BatchMsg, BatcherConfig, Item};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::request::{prepare, HullRequest, HullResponse, RequestError};
+use crate::geometry::hull_check::check_upper_hull;
+use crate::geometry::point::Point;
+
+/// Coordinator configuration (see config.rs for the TOML form).
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub backend: BackendKind,
+    pub artifacts_dir: PathBuf,
+    pub batcher: BatcherConfig,
+    /// verify every response against the hull checker (paranoia mode).
+    pub self_check: bool,
+    /// compile all hull artifacts at startup (pjrt backend only).
+    pub preload: bool,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            backend: BackendKind::Native,
+            artifacts_dir: PathBuf::from("artifacts"),
+            batcher: BatcherConfig::default(),
+            self_check: false,
+            preload: false,
+        }
+    }
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    submit_tx: Option<mpsc::SyncSender<Item>>,
+    batcher: Option<JoinHandle<()>>,
+    exec: Option<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    backend_name: &'static str,
+    max_points: usize,
+    next_id: AtomicU64,
+}
+
+impl Coordinator {
+    /// Spawn the batcher + exec threads; fails if the backend cannot be
+    /// constructed (e.g. missing artifacts for `pjrt`).
+    pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator, String> {
+        let metrics = Arc::new(Metrics::default());
+        let (submit_tx, submit_rx) = mpsc::sync_channel::<Item>(cfg.batcher.queue_cap);
+        let (batch_tx, batch_rx) = mpsc::sync_channel::<BatchMsg>(cfg.batcher.queue_cap.max(1));
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize), String>>();
+
+        // --- exec thread: owns the backend (PJRT handles are !Send)
+        let exec_metrics = metrics.clone();
+        let exec_cfg = cfg.clone();
+        let exec = std::thread::Builder::new()
+            .name("hull-exec".into())
+            .spawn(move || {
+                let backend = match exec_cfg.backend.build(&exec_cfg.artifacts_dir, exec_cfg.preload) {
+                    Ok(b) => {
+                        let _ = ready_tx.send(Ok((b.max_points(), b.preferred_batch())));
+                        b
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(BatchMsg { items }) = batch_rx.recv() {
+                    let exec_start = Instant::now();
+                    let reqs: Vec<Vec<Point>> =
+                        items.iter().map(|i| i.prepared.points.clone()).collect();
+                    let result = backend.compute(&reqs);
+                    let exec_ns = exec_start.elapsed().as_nanos() as u64;
+                    Metrics::inc(&exec_metrics.batches);
+                    Metrics::add(&exec_metrics.batched_requests, items.len() as u64);
+                    exec_metrics.exec_latency.record_ns(exec_ns);
+                    match result {
+                        Ok(hulls) => {
+                            for (item, (upper, lower)) in items.into_iter().zip(hulls) {
+                                let queue_ns =
+                                    (exec_start - item.enqueued).as_nanos() as u64;
+                                if exec_cfg.self_check {
+                                    if let Err(e) =
+                                        check_upper_hull(&item.prepared.points, &upper)
+                                    {
+                                        Metrics::inc(&exec_metrics.errors);
+                                        let _ = item.reply.send(Err(RequestError::Backend(
+                                            format!("self-check failed: {e}"),
+                                        )));
+                                        continue;
+                                    }
+                                }
+                                Metrics::inc(&exec_metrics.responses);
+                                Metrics::add(
+                                    &exec_metrics.hull_points_out,
+                                    (upper.len() + lower.len()) as u64,
+                                );
+                                exec_metrics
+                                    .e2e_latency
+                                    .record(item.enqueued.elapsed());
+                                exec_metrics.queue_latency.record_ns(queue_ns);
+                                let _ = item.reply.send(Ok(HullResponse {
+                                    id: item.prepared.id,
+                                    upper,
+                                    lower,
+                                    backend: backend.name(),
+                                    queue_ns,
+                                    exec_ns,
+                                }));
+                            }
+                        }
+                        Err(e) => {
+                            for item in items {
+                                Metrics::inc(&exec_metrics.errors);
+                                let _ = item
+                                    .reply
+                                    .send(Err(RequestError::Backend(e.clone())));
+                            }
+                        }
+                    }
+                }
+            })
+            .map_err(|e| e.to_string())?;
+
+        // wait for backend construction before declaring ready
+        let (max_points, pref_batch) = ready_rx
+            .recv()
+            .map_err(|_| "exec thread died during startup".to_string())??;
+
+        let max_batch = if cfg.batcher.max_batch == 0 {
+            pref_batch.max(1)
+        } else {
+            cfg.batcher.max_batch
+        };
+        let flush_us = cfg.batcher.flush_us;
+        let batcher = std::thread::Builder::new()
+            .name("hull-batcher".into())
+            .spawn(move || run_batcher(submit_rx, batch_tx, max_batch, flush_us))
+            .map_err(|e| e.to_string())?;
+
+        Ok(Coordinator {
+            submit_tx: Some(submit_tx),
+            batcher: Some(batcher),
+            exec: Some(exec),
+            metrics,
+            backend_name: cfg.backend.name(),
+            max_points,
+            next_id: AtomicU64::new(1),
+        })
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend_name
+    }
+
+    pub fn max_points(&self) -> usize {
+        self.max_points
+    }
+
+    /// Allocate a request id (for callers that don't track their own).
+    pub fn next_id(&self) -> u64 {
+        self.next_id.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Submit asynchronously; the returned channel yields the response.
+    pub fn submit(
+        &self,
+        req: HullRequest,
+    ) -> mpsc::Receiver<Result<HullResponse, RequestError>> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        Metrics::inc(&self.metrics.requests);
+        Metrics::add(&self.metrics.points_in, req.points.len() as u64);
+
+        let prepared = match prepare(&req) {
+            Ok(p) => p,
+            Err(e) => {
+                Metrics::inc(&self.metrics.errors);
+                let _ = reply_tx.send(Err(e));
+                return reply_rx;
+            }
+        };
+        if prepared.points.len() > self.max_points {
+            Metrics::inc(&self.metrics.errors);
+            let _ = reply_tx.send(Err(RequestError::TooLarge {
+                points: prepared.points.len(),
+                max: self.max_points,
+            }));
+            return reply_rx;
+        }
+        if prepared.degenerate {
+            // exact fast path: general position violated; compute inline
+            let t0 = Instant::now();
+            let (upper, lower) = exact_full_hull(&prepared.points);
+            Metrics::inc(&self.metrics.degenerate_fallbacks);
+            Metrics::inc(&self.metrics.responses);
+            Metrics::add(
+                &self.metrics.hull_points_out,
+                (upper.len() + lower.len()) as u64,
+            );
+            let exec_ns = t0.elapsed().as_nanos() as u64;
+            self.metrics.e2e_latency.record_ns(exec_ns);
+            let _ = reply_tx.send(Ok(HullResponse {
+                id: prepared.id,
+                upper,
+                lower,
+                backend: "exact",
+                queue_ns: 0,
+                exec_ns,
+            }));
+            return reply_rx;
+        }
+
+        let item = Item { prepared, enqueued: Instant::now(), reply: reply_tx.clone() };
+        if let Some(tx) = &self.submit_tx {
+            if tx.send(item).is_err() {
+                Metrics::inc(&self.metrics.errors);
+                let _ = reply_tx.send(Err(RequestError::Shutdown));
+            }
+        } else {
+            let _ = reply_tx.send(Err(RequestError::Shutdown));
+        }
+        reply_rx
+    }
+
+    /// Synchronous convenience wrapper.
+    pub fn compute(&self, points: Vec<Point>) -> Result<HullResponse, RequestError> {
+        let req = HullRequest { id: self.next_id(), points };
+        self.submit(req)
+            .recv()
+            .map_err(|_| RequestError::Shutdown)?
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Graceful shutdown: drain queues, join threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.submit_tx.take(); // closes the batcher's input
+        if let Some(h) = self.batcher.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.exec.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::generators::{generate, Distribution};
+    use crate::serial::monotone_chain;
+
+    fn coord(kind: BackendKind) -> Coordinator {
+        Coordinator::start(CoordinatorConfig {
+            backend: kind,
+            batcher: BatcherConfig { max_batch: 4, flush_us: 200, queue_cap: 64 },
+            self_check: true,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn native_roundtrip() {
+        let c = coord(BackendKind::Native);
+        let pts = generate(Distribution::Disk, 100, 1);
+        let resp = c.compute(pts.clone()).unwrap();
+        let (u, l) = monotone_chain::full_hull(&pts);
+        assert_eq!(resp.upper, u);
+        assert_eq!(resp.lower, l);
+        assert_eq!(resp.backend, "native");
+        c.shutdown();
+    }
+
+    #[test]
+    fn many_concurrent_requests() {
+        let c = Arc::new(coord(BackendKind::Native));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for k in 0..10u64 {
+                    let pts =
+                        generate(Distribution::ALL[(k % 7) as usize], 20 + k as usize, t * 100 + k);
+                    let resp = c.compute(pts.clone()).unwrap();
+                    let (u, _) = monotone_chain::full_hull(&pts);
+                    assert_eq!(resp.upper, u);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = c.snapshot().0;
+        assert_eq!(snap.get("responses").unwrap().as_usize(), Some(40));
+        assert_eq!(snap.get("errors").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn degenerate_goes_exact() {
+        let c = coord(BackendKind::Native);
+        let pts = vec![
+            Point::new(0.5, 0.1),
+            Point::new(0.5, 0.9),
+            Point::new(0.1, 0.5),
+            Point::new(0.9, 0.5),
+        ];
+        let resp = c.compute(pts).unwrap();
+        assert_eq!(resp.backend, "exact");
+        assert_eq!(resp.upper.len(), 3);
+        let snap = c.snapshot().0;
+        assert_eq!(snap.get("degenerate_fallbacks").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        let c = coord(BackendKind::Serial);
+        assert!(matches!(c.compute(vec![]), Err(RequestError::Empty)));
+        assert!(matches!(
+            c.compute(vec![Point::new(7.0, 0.0)]),
+            Err(RequestError::OutOfRange(0))
+        ));
+    }
+
+    #[test]
+    fn batching_happens() {
+        let c = Arc::new(coord(BackendKind::Native));
+        // fire a wave of equal-size requests from multiple threads
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                let pts = generate(Distribution::UniformSquare, 50, t);
+                c.compute(pts).unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = c.snapshot().0;
+        let batches = snap.get("batches").unwrap().as_usize().unwrap();
+        assert!(batches < 8, "expected batching, got {batches} batches");
+    }
+
+    #[test]
+    fn shutdown_then_submit_errors() {
+        let mut c = coord(BackendKind::Serial);
+        c.shutdown_inner();
+        let err = c.compute(generate(Distribution::Disk, 10, 1)).unwrap_err();
+        assert_eq!(err, RequestError::Shutdown);
+    }
+}

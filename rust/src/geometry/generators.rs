@@ -1,0 +1,232 @@
+//! Workload generators: the controlled hull-size regimes the benches sweep.
+//!
+//! The paper's dataset (Figure 4) is not published; these distributions
+//! span the behaviours that matter for hull algorithms: expected hull size
+//! O(log n) (uniform square), O(n^(1/3)) (disk), Θ(n) (circle/parabola,
+//! the adversarial case for the merge phases), and 2 (valley — exercises
+//! the mam6 stale-corner paper-bug fix).  All outputs are x-sorted,
+//! x-deduplicated, coordinates in [0, 1], f32-quantized so every backend
+//! (rust native, PRAM sim, PJRT f32 artifacts) sees identical inputs.
+
+use super::point::{dedup_x, sort_by_x, Point};
+use crate::util::rng::Rng;
+
+/// Point distribution families.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Distribution {
+    /// iid uniform on the unit square — expected upper-hull size O(log n).
+    UniformSquare,
+    /// uniform in a disk — expected hull size O(n^(1/3)).
+    Disk,
+    /// on a circle — every point is a hull corner (upper half kept live).
+    Circle,
+    /// on a downward parabola — every point is an UPPER hull corner.
+    Parabola,
+    /// on an upward parabola — upper hull is exactly the two extremes.
+    Valley,
+    /// k tight gaussian clusters spread across the square.
+    Clusters(u8),
+    /// two distant clumps — wide-gap tangents (stress for sampling phases).
+    Bimodal,
+}
+
+impl Distribution {
+    pub const ALL: [Distribution; 7] = [
+        Distribution::UniformSquare,
+        Distribution::Disk,
+        Distribution::Circle,
+        Distribution::Parabola,
+        Distribution::Valley,
+        Distribution::Clusters(5),
+        Distribution::Bimodal,
+    ];
+
+    pub fn name(&self) -> String {
+        match self {
+            Distribution::UniformSquare => "uniform".into(),
+            Distribution::Disk => "disk".into(),
+            Distribution::Circle => "circle".into(),
+            Distribution::Parabola => "parabola".into(),
+            Distribution::Valley => "valley".into(),
+            Distribution::Clusters(k) => format!("clusters{k}"),
+            Distribution::Bimodal => "bimodal".into(),
+        }
+    }
+
+    /// Parse a CLI name ("uniform", "clusters5", ...).
+    pub fn parse(s: &str) -> Option<Distribution> {
+        Some(match s {
+            "uniform" => Distribution::UniformSquare,
+            "disk" => Distribution::Disk,
+            "circle" => Distribution::Circle,
+            "parabola" => Distribution::Parabola,
+            "valley" => Distribution::Valley,
+            "bimodal" => Distribution::Bimodal,
+            _ => {
+                let k = s.strip_prefix("clusters")?.parse().ok()?;
+                Distribution::Clusters(k)
+            }
+        })
+    }
+}
+
+/// Deterministic y-jitter for points on smooth curves.
+///
+/// f32 quantization flattens low-curvature stretches (a parabola apex has
+/// Δy below one ulp) into *exactly collinear* runs, violating the paper's
+/// no-3-collinear assumption and creating tangent ties.  A jitter of 1e-4
+/// (≫ f32 ulp ≈ 6e-8, ≪ feature scale) restores general position with
+/// overwhelming probability while keeping the distribution's character.
+const CURVE_JITTER: f64 = 1e-4;
+
+fn jitter(y: f64, rng: &mut Rng) -> f64 {
+    (y + (rng.f64() - 0.5) * 2.0 * CURVE_JITTER).clamp(0.0, 1.0)
+}
+
+fn raw_points(dist: Distribution, n: usize, rng: &mut Rng) -> Vec<Point> {
+    let mut pts = Vec::with_capacity(n);
+    match dist {
+        Distribution::UniformSquare => {
+            for _ in 0..n {
+                pts.push(Point::new(rng.f64(), rng.f64()));
+            }
+        }
+        Distribution::Disk => {
+            while pts.len() < n {
+                let x = rng.f64() * 2.0 - 1.0;
+                let y = rng.f64() * 2.0 - 1.0;
+                if x * x + y * y <= 1.0 {
+                    pts.push(Point::new(0.5 + x / 2.0, 0.5 + y / 2.0));
+                }
+            }
+        }
+        Distribution::Circle => {
+            for _ in 0..n {
+                let t = rng.f64() * std::f64::consts::TAU;
+                let (x, y) = (0.5 + t.cos() * 0.45, 0.5 + t.sin() * 0.45);
+                let y = jitter(y, rng);
+                pts.push(Point::new(x, y));
+            }
+        }
+        Distribution::Parabola => {
+            for _ in 0..n {
+                let x = rng.f64();
+                let y = 0.1 + 0.8 * (1.0 - (2.0 * x - 1.0) * (2.0 * x - 1.0));
+                pts.push(Point::new(x, jitter(y, rng)));
+            }
+        }
+        Distribution::Valley => {
+            for _ in 0..n {
+                let x = rng.f64();
+                let y = 0.1 + 0.8 * (2.0 * x - 1.0) * (2.0 * x - 1.0);
+                pts.push(Point::new(x, jitter(y, rng)));
+            }
+        }
+        Distribution::Clusters(k) => {
+            let k = k.max(1) as usize;
+            let centers: Vec<Point> = (0..k)
+                .map(|_| Point::new(rng.range_f64(0.15, 0.85), rng.range_f64(0.15, 0.85)))
+                .collect();
+            for i in 0..n {
+                let c = centers[i % k];
+                pts.push(Point::new(
+                    (c.x + rng.gaussian() * 0.03).clamp(0.0, 1.0),
+                    (c.y + rng.gaussian() * 0.03).clamp(0.0, 1.0),
+                ));
+            }
+        }
+        Distribution::Bimodal => {
+            for i in 0..n {
+                let (cx, cy) = if i % 2 == 0 { (0.08, 0.2) } else { (0.92, 0.75) };
+                pts.push(Point::new(
+                    (cx + rng.gaussian() * 0.04).clamp(0.0, 1.0),
+                    (cy + rng.gaussian() * 0.04).clamp(0.0, 1.0),
+                ));
+            }
+        }
+    }
+    pts
+}
+
+/// Generate `n` points: x-sorted, distinct x, f32-quantized, in [0,1]².
+///
+/// Distinct-x is the paper's general-position assumption; duplicates after
+/// f32 quantization are resampled deterministically.
+pub fn generate(dist: Distribution, n: usize, seed: u64) -> Vec<Point> {
+    let mut rng = Rng::new(seed ^ 0xD15_7B17);
+    let mut pts: Vec<Point> = raw_points(dist, n, &mut rng)
+        .into_iter()
+        .map(|p| p.quantize_f32())
+        .collect();
+    sort_by_x(&mut pts);
+    pts = dedup_x(&pts, true);
+    // resample until we have n distinct-x points (duplicates are rare)
+    let mut guard = 0;
+    while pts.len() < n && guard < 64 {
+        let extra = raw_points(dist, n - pts.len() + 8, &mut rng);
+        pts.extend(extra.into_iter().map(|p| p.quantize_f32()));
+        sort_by_x(&mut pts);
+        pts = dedup_x(&pts, true);
+        guard += 1;
+    }
+    pts.truncate(n);
+    assert_eq!(pts.len(), n, "generator could not reach {n} distinct-x points");
+    pts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_sorted_distinct_x_in_range() {
+        for dist in Distribution::ALL {
+            let pts = generate(dist, 256, 7);
+            assert_eq!(pts.len(), 256, "{}", dist.name());
+            for w in pts.windows(2) {
+                assert!(w[0].x < w[1].x, "{}", dist.name());
+            }
+            for p in &pts {
+                assert!((0.0..=1.0).contains(&p.x), "{} {p}", dist.name());
+                assert!((0.0..=1.0).contains(&p.y), "{} {p}", dist.name());
+                // f32-quantized
+                assert_eq!(p.x, p.x as f32 as f64);
+                assert_eq!(p.y, p.y as f32 as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(Distribution::UniformSquare, 100, 42);
+        let b = generate(Distribution::UniformSquare, 100, 42);
+        let c = generate(Distribution::UniformSquare, 100, 43);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for dist in Distribution::ALL {
+            assert_eq!(Distribution::parse(&dist.name()), Some(dist));
+        }
+        assert_eq!(Distribution::parse("nope"), None);
+    }
+
+    #[test]
+    fn parabola_mostly_on_hull() {
+        use crate::geometry::hull_check::brute_force_upper_hull;
+        let pts = generate(Distribution::Parabola, 48, 3);
+        let hull = brute_force_upper_hull(&pts);
+        // f32 quantization may flatten a couple of near-collinear corners
+        assert!(hull.len() >= 44, "hull {}", hull.len());
+    }
+
+    #[test]
+    fn valley_hull_is_two_points() {
+        use crate::geometry::hull_check::brute_force_upper_hull;
+        let pts = generate(Distribution::Valley, 64, 3);
+        let hull = brute_force_upper_hull(&pts);
+        assert!(hull.len() <= 3, "hull {}", hull.len());
+    }
+}

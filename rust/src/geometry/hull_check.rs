@@ -1,0 +1,215 @@
+//! Hull verification: independent validity checks used by tests, the
+//! examples and the coordinator's (optional) self-check mode.
+
+use super::point::Point;
+use super::predicates::{orient2d, Orientation};
+
+/// Why a candidate upper hull was rejected.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HullError {
+    Empty,
+    NotSortedByX(usize),
+    NotStrictlyConvex(usize),
+    NotFromInput(usize),
+    PointAbove(usize),
+    MissingExtreme(&'static str),
+}
+
+impl std::fmt::Display for HullError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HullError::Empty => write!(f, "hull is empty"),
+            HullError::NotSortedByX(i) => write!(f, "hull x-order violated at {i}"),
+            HullError::NotStrictlyConvex(i) => write!(f, "hull not strictly convex at {i}"),
+            HullError::NotFromInput(i) => write!(f, "hull corner {i} not an input point"),
+            HullError::PointAbove(i) => write!(f, "input point {i} above the hull"),
+            HullError::MissingExtreme(w) => write!(f, "{w} extreme point missing"),
+        }
+    }
+}
+
+impl std::error::Error for HullError {}
+
+/// Validate `hull` as THE upper hull of `points` (both x-sorted).
+///
+/// Checks: non-empty, strictly increasing x, strictly convex (every
+/// interior corner strictly above its neighbors' chord), corners are input
+/// points, extremes present, and no input point strictly above any hull
+/// edge.  O(n log h).
+pub fn check_upper_hull(points: &[Point], hull: &[Point]) -> Result<(), HullError> {
+    if hull.is_empty() || points.is_empty() {
+        return Err(HullError::Empty);
+    }
+    for i in 1..hull.len() {
+        if hull[i - 1].x >= hull[i].x {
+            return Err(HullError::NotSortedByX(i));
+        }
+    }
+    for i in 1..hull.len().saturating_sub(1) {
+        // corner strictly above chord (prev -> next)
+        if orient2d(hull[i - 1], hull[i + 1], hull[i]) != Orientation::Left {
+            return Err(HullError::NotStrictlyConvex(i));
+        }
+    }
+    for (i, h) in hull.iter().enumerate() {
+        if !points.iter().any(|p| p == h) {
+            return Err(HullError::NotFromInput(i));
+        }
+    }
+    let first = points.first().unwrap();
+    let last = points.last().unwrap();
+    if hull.first().unwrap() != first {
+        return Err(HullError::MissingExtreme("leftmost"));
+    }
+    if hull.last().unwrap() != last {
+        return Err(HullError::MissingExtreme("rightmost"));
+    }
+    // every input point at-or-below the chain
+    for (i, p) in points.iter().enumerate() {
+        if hull.iter().any(|h| h == p) {
+            continue;
+        }
+        let seg = hull.partition_point(|h| h.x <= p.x);
+        // p.x lies in [hull[seg-1].x, hull[seg].x)
+        if seg == 0 || seg >= hull.len() + 1 {
+            return Err(HullError::PointAbove(i));
+        }
+        let (a, b) = if seg == hull.len() {
+            (hull[seg - 2], hull[seg - 1])
+        } else {
+            (hull[seg - 1], hull[seg])
+        };
+        if orient2d(a, b, *p) == Orientation::Left {
+            return Err(HullError::PointAbove(i));
+        }
+    }
+    Ok(())
+}
+
+/// Brute-force upper hull by definition: a point is a corner iff it is not
+/// strictly below any segment between two other points and not dominated.
+/// O(n^3); test-oracle only.  Input x-sorted, distinct x, general position.
+pub fn brute_force_upper_hull(points: &[Point]) -> Vec<Point> {
+    let n = points.len();
+    if n <= 2 {
+        return points.to_vec();
+    }
+    let mut hull = Vec::new();
+    'cand: for (k, &r) in points.iter().enumerate() {
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if i == k || j == k {
+                    continue;
+                }
+                // r strictly below segment points[i] -> points[j]?
+                let (a, b) = (points[i], points[j]);
+                if a.x < r.x && r.x < b.x && orient2d(a, b, r) == Orientation::Right {
+                    continue 'cand;
+                }
+            }
+        }
+        hull.push(r);
+        let _ = k;
+    }
+    hull
+}
+
+/// Signed doubled area of a closed polygon (CCW positive).
+pub fn polygon_area2(poly: &[Point]) -> f64 {
+    let n = poly.len();
+    let mut s = 0.0;
+    for i in 0..n {
+        let a = poly[i];
+        let b = poly[(i + 1) % n];
+        s += a.x * b.y - b.x * a.y;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::point::sort_by_x;
+    use crate::util::rng::Rng;
+
+    fn pts(v: &[(f64, f64)]) -> Vec<Point> {
+        v.iter().map(|&(x, y)| Point::new(x, y)).collect()
+    }
+
+    #[test]
+    fn accepts_valid_hull() {
+        let points = pts(&[(0.0, 0.0), (0.25, 0.9), (0.5, 0.1), (1.0, 0.2)]);
+        let hull = pts(&[(0.0, 0.0), (0.25, 0.9), (1.0, 0.2)]);
+        check_upper_hull(&points, &hull).unwrap();
+    }
+
+    #[test]
+    fn rejects_missing_corner() {
+        let points = pts(&[(0.0, 0.0), (0.25, 0.9), (0.5, 0.1), (1.0, 0.2)]);
+        let hull = pts(&[(0.0, 0.0), (1.0, 0.2)]); // 0.25-peak left out
+        assert!(matches!(
+            check_upper_hull(&points, &hull),
+            Err(HullError::PointAbove(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_concave_chain() {
+        let points = pts(&[(0.0, 0.5), (0.5, 0.0), (1.0, 0.5)]);
+        let hull = points.clone(); // dip is not a hull corner
+        assert!(matches!(
+            check_upper_hull(&points, &hull),
+            Err(HullError::NotStrictlyConvex(1))
+        ));
+    }
+
+    #[test]
+    fn rejects_foreign_corner() {
+        let points = pts(&[(0.0, 0.0), (1.0, 0.0)]);
+        let hull = pts(&[(0.0, 0.0), (0.5, 2.0), (1.0, 0.0)]);
+        assert!(matches!(
+            check_upper_hull(&points, &hull),
+            Err(HullError::NotFromInput(1))
+        ));
+    }
+
+    #[test]
+    fn rejects_missing_extremes() {
+        let points = pts(&[(0.0, 0.0), (0.5, 1.0), (1.0, 0.0)]);
+        let hull = pts(&[(0.5, 1.0), (1.0, 0.0)]);
+        assert_eq!(
+            check_upper_hull(&points, &hull),
+            Err(HullError::MissingExtreme("leftmost"))
+        );
+    }
+
+    #[test]
+    fn brute_force_matches_known() {
+        let points = pts(&[(0.0, 0.0), (0.2, 0.5), (0.4, 0.3), (0.6, 0.8), (1.0, 0.1)]);
+        let hull = brute_force_upper_hull(&points);
+        assert_eq!(hull, pts(&[(0.0, 0.0), (0.2, 0.5), (0.6, 0.8), (1.0, 0.1)]));
+        check_upper_hull(&points, &hull).unwrap();
+    }
+
+    #[test]
+    fn brute_force_validates_on_random() {
+        let mut rng = Rng::new(17);
+        for _ in 0..50 {
+            let n = rng.range_usize(3, 24);
+            let mut p: Vec<Point> =
+                (0..n).map(|_| Point::new(rng.f64(), rng.f64())).collect();
+            sort_by_x(&mut p);
+            p.dedup_by(|a, b| a.x == b.x);
+            let hull = brute_force_upper_hull(&p);
+            check_upper_hull(&p, &hull).unwrap();
+        }
+    }
+
+    #[test]
+    fn area_sign() {
+        let sq = pts(&[(0., 0.), (1., 0.), (1., 1.), (0., 1.)]);
+        assert!((polygon_area2(&sq) - 2.0).abs() < 1e-12);
+        let cw: Vec<Point> = sq.into_iter().rev().collect();
+        assert!((polygon_area2(&cw) + 2.0).abs() < 1e-12);
+    }
+}

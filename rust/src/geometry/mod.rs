@@ -1,0 +1,10 @@
+//! Geometric substrate: points, REMOTE/hood conventions, robust
+//! orientation predicates, hull verification, workload generators.
+
+pub mod generators;
+pub mod hull_check;
+pub mod point;
+pub mod predicates;
+
+pub use point::{Point, LIVE_X_MAX, REMOTE};
+pub use predicates::{orient2d, Orientation};

@@ -1,0 +1,234 @@
+//! Planar points and the paper's hood-slot conventions.
+//!
+//! The paper stores points as CUDA `float2` with x-coordinates in [0, 1];
+//! any slot with x > 1 is "remote" (dead padding), and the canonical remote
+//! value is REMOTE = (10, 0).  We keep f64 in the rust core (the PJRT
+//! boundary converts to/from f32) and reuse the same conventions.
+
+use std::fmt;
+
+/// Liveness threshold: a slot is live iff `x <= LIVE_X_MAX`.
+pub const LIVE_X_MAX: f64 = 1.0;
+
+/// A point in the plane (f64; constructed from f32 at the wire/PJRT edge).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Point {
+    pub x: f64,
+    pub y: f64,
+}
+
+/// The paper's padding value for dead hood slots.
+pub const REMOTE: Point = Point { x: 10.0, y: 0.0 };
+
+impl Point {
+    pub const fn new(x: f64, y: f64) -> Point {
+        Point { x, y }
+    }
+
+    /// Paper convention: slot is live iff x <= 1.
+    pub fn is_live(&self) -> bool {
+        self.x <= LIVE_X_MAX
+    }
+
+    pub fn is_remote(&self) -> bool {
+        !self.is_live()
+    }
+
+    /// The synthetic point directly below `self` (paper's `y -= 1` trick
+    /// for branch-free neighbor handling at hood ends).
+    pub fn below(&self) -> Point {
+        Point::new(self.x, self.y - 1.0)
+    }
+
+    /// Round-trip through f32 (what the PJRT artifacts compute on).
+    pub fn to_f32_pair(&self) -> (f32, f32) {
+        (self.x as f32, self.y as f32)
+    }
+
+    pub fn from_f32_pair(x: f32, y: f32) -> Point {
+        Point::new(x as f64, y as f64)
+    }
+
+    /// Quantize to f32 grid: makes rust-native and PJRT backends compute on
+    /// identical coordinates.
+    pub fn quantize_f32(&self) -> Point {
+        Point::new(self.x as f32 as f64, self.y as f32 as f64)
+    }
+}
+
+impl fmt::Display for Point {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "({:.6}, {:.6})", self.x, self.y)
+    }
+}
+
+/// Sort points by (x, y); the pipeline requires strictly increasing x.
+pub fn sort_by_x(points: &mut [Point]) {
+    points.sort_by(|a, b| {
+        a.x.partial_cmp(&b.x)
+            .unwrap()
+            .then(a.y.partial_cmp(&b.y).unwrap())
+    });
+}
+
+/// Drop points sharing an x-coordinate, keeping the one with extreme y.
+///
+/// The paper assumes general position (distinct x, no 3 collinear).  For
+/// the *upper* hood only the max-y point of an x-class can be a corner, so
+/// `keep_max_y = true` preserves the upper hull; callers computing lower
+/// hoods pass `false`.  Input must be sorted by (x, y).
+pub fn dedup_x(points: &[Point], keep_max_y: bool) -> Vec<Point> {
+    let mut out: Vec<Point> = Vec::with_capacity(points.len());
+    for &p in points {
+        match out.last_mut() {
+            Some(last) if last.x == p.x => {
+                // sorted by (x, y): p.y >= last.y
+                if keep_max_y {
+                    *last = p;
+                }
+            }
+            _ => out.push(p),
+        }
+    }
+    out
+}
+
+/// Affine map normalizing arbitrary input into the paper's [0,1] x-range
+/// (and a sane y-range), remembering how to undo it.
+#[derive(Clone, Copy, Debug)]
+pub struct Normalizer {
+    pub x_off: f64,
+    pub x_scale: f64,
+    pub y_off: f64,
+    pub y_scale: f64,
+}
+
+impl Normalizer {
+    /// Fit to the bounding box of `points` (must be non-empty, finite).
+    pub fn fit(points: &[Point]) -> Normalizer {
+        assert!(!points.is_empty(), "cannot normalize an empty point set");
+        let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+        let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+        for p in points {
+            x0 = x0.min(p.x);
+            x1 = x1.max(p.x);
+            y0 = y0.min(p.y);
+            y1 = y1.max(p.y);
+        }
+        let xs = if x1 > x0 { x1 - x0 } else { 1.0 };
+        let ys = if y1 > y0 { y1 - y0 } else { 1.0 };
+        Normalizer {
+            x_off: x0,
+            x_scale: xs,
+            y_off: y0,
+            y_scale: ys,
+        }
+    }
+
+    pub fn apply(&self, p: Point) -> Point {
+        Point::new((p.x - self.x_off) / self.x_scale, (p.y - self.y_off) / self.y_scale)
+    }
+
+    pub fn invert(&self, p: Point) -> Point {
+        Point::new(p.x * self.x_scale + self.x_off, p.y * self.y_scale + self.y_off)
+    }
+}
+
+/// Next power of two >= n (n >= 1).
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// Build an initial hood block: points live-left-justified, REMOTE-padded
+/// to `slots` (slots must be a power of two >= points.len()).
+pub fn pad_to_hood(points: &[Point], slots: usize) -> Vec<Point> {
+    assert!(slots.is_power_of_two(), "hood size must be a power of two");
+    assert!(points.len() <= slots, "{} points > {} slots", points.len(), slots);
+    let mut hood = Vec::with_capacity(slots);
+    hood.extend_from_slice(points);
+    hood.resize(slots, REMOTE);
+    hood
+}
+
+/// Extract the live prefix of a hood block.
+pub fn live_prefix(hood: &[Point]) -> &[Point] {
+    let k = hood.iter().take_while(|p| p.is_live()).count();
+    &hood[..k]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn remote_is_dead() {
+        assert!(REMOTE.is_remote());
+        assert!(!Point::new(1.0, 0.5).is_remote());
+        assert!(Point::new(1.0000001, 0.0).is_remote());
+    }
+
+    #[test]
+    fn below_shifts_y() {
+        let p = Point::new(0.25, 0.5).below();
+        assert_eq!(p, Point::new(0.25, -0.5));
+    }
+
+    #[test]
+    fn sorting_and_dedup() {
+        let mut pts = vec![
+            Point::new(0.5, 0.1),
+            Point::new(0.1, 0.9),
+            Point::new(0.5, 0.7),
+            Point::new(0.1, 0.2),
+        ];
+        sort_by_x(&mut pts);
+        assert_eq!(pts[0], Point::new(0.1, 0.2));
+        let up = dedup_x(&pts, true);
+        assert_eq!(up, vec![Point::new(0.1, 0.9), Point::new(0.5, 0.7)]);
+        let lo = dedup_x(&pts, false);
+        assert_eq!(lo, vec![Point::new(0.1, 0.2), Point::new(0.5, 0.1)]);
+    }
+
+    #[test]
+    fn normalizer_roundtrip() {
+        let pts = vec![Point::new(-3.0, 7.0), Point::new(9.0, -2.0), Point::new(1.0, 1.0)];
+        let nm = Normalizer::fit(&pts);
+        for &p in &pts {
+            let q = nm.apply(p);
+            assert!((0.0..=1.0).contains(&q.x), "{q}");
+            assert!((0.0..=1.0).contains(&q.y), "{q}");
+            let r = nm.invert(q);
+            assert!((r.x - p.x).abs() < 1e-12 && (r.y - p.y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn normalizer_degenerate_box() {
+        let pts = vec![Point::new(2.0, 5.0), Point::new(2.0, 5.0)];
+        let nm = Normalizer::fit(&pts);
+        let q = nm.apply(pts[0]);
+        assert!(q.x.is_finite() && q.y.is_finite());
+    }
+
+    #[test]
+    fn hood_padding() {
+        let pts = vec![Point::new(0.1, 0.1), Point::new(0.2, 0.2)];
+        let hood = pad_to_hood(&pts, 8);
+        assert_eq!(hood.len(), 8);
+        assert_eq!(live_prefix(&hood).len(), 2);
+        assert_eq!(hood[7], REMOTE);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn pad_requires_pow2() {
+        pad_to_hood(&[Point::new(0.0, 0.0)], 6);
+    }
+
+    #[test]
+    fn next_pow2_values() {
+        for (n, want) in [(1, 1), (2, 2), (3, 4), (5, 8), (64, 64), (65, 128)] {
+            assert_eq!(next_pow2(n), want);
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! # wagener-hull
+//!
+//! Production-grade reproduction of Ó Dúnlaing's *"CUDA implementation of
+//! Wagener's 2D convex hull PRAM algorithm"* (arXiv CS.DC 2012) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L1** — the match-and-merge tangent search as a Pallas kernel
+//!   (`python/compile/kernels/wagener.py`), AOT-lowered to HLO text;
+//! * **L2** — the staged hood pipeline as a JAX computation
+//!   (`python/compile/model.py`);
+//! * **L3** — this crate: a hull-serving coordinator (router, batcher,
+//!   PJRT executor) plus every substrate the paper depends on: robust
+//!   geometric predicates, serial baselines, a cost-accounting PRAM
+//!   simulator, the Overmars–van Leeuwen optimal-speedup variant,
+//!   visualisation, and a benchmark harness.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod benchkit;
+pub mod config;
+pub mod coordinator;
+pub mod geometry;
+pub mod ovl;
+pub mod pram;
+pub mod runtime;
+pub mod serial;
+pub mod server;
+pub mod util;
+pub mod viz;
+pub mod wagener;

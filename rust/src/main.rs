@@ -1,0 +1,302 @@
+//! `wagener` — CLI launcher for the hull framework.
+//!
+//! Subcommands (hand-rolled parser; no argv crates in this environment):
+//!   gen        generate a point file in the paper's format
+//!   hull       compute a hull from a point file (the paper's main program:
+//!              optional per-stage trace, SVG render, backend choice)
+//!   serve      run the TCP hull service from a TOML config
+//!   client     send a point file to a running server
+//!   occupancy  print the Figure-2 thread-allocation table
+//!   artifacts  list/verify the AOT artifact registry
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use wagener_hull::config::Config;
+use wagener_hull::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
+use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::geometry::point::{pad_to_hood, Point};
+use wagener_hull::runtime::ArtifactRegistry;
+use wagener_hull::server;
+use wagener_hull::viz::svg::{render_hull_svg, SvgOptions};
+use wagener_hull::viz::trace::TraceWriter;
+use wagener_hull::wagener::occupancy::{format_table, occupancy_table};
+use wagener_hull::wagener::stage;
+
+const USAGE: &str = "\
+usage: wagener <command> [options]
+
+commands:
+  gen        --dist <name> --n <count> [--seed <u64>] [--out <file>]
+  hull       <points-file> [--trace <file>] [--svg <file>] [--backend <pjrt|native|serial|pram>]
+             [--artifacts <dir>]
+  serve      [--config <file>] [--addr <host:port>] [--backend <kind>] [--artifacts <dir>]
+  client     --addr <host:port> <points-file>
+  occupancy  --n <count> [--dist <name>] [--seed <u64>]
+  artifacts  [--dir <dir>]
+
+distributions: uniform disk circle parabola valley clusters<k> bimodal
+point file format (paper §2): first line count, then 'x y' per line, x-sorted in [0,1]
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        eprintln!();
+        eprintln!("{USAGE}");
+        std::process::exit(1);
+    }
+}
+
+/// Split args into positional + --flag value pairs.
+fn parse_flags(args: &[String]) -> Result<(Vec<String>, HashMap<String, String>)> {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            let v = it.next().ok_or_else(|| anyhow!("--{name} needs a value"))?;
+            flags.insert(name.to_string(), v.clone());
+        } else {
+            pos.push(a.clone());
+        }
+    }
+    Ok((pos, flags))
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else { bail!("no command") };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "gen" => cmd_gen(rest),
+        "hull" => cmd_hull(rest),
+        "serve" => cmd_serve(rest),
+        "client" => cmd_client(rest),
+        "occupancy" => cmd_occupancy(rest),
+        "artifacts" => cmd_artifacts(rest),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}"),
+    }
+}
+
+/// Read the paper's point-file format.
+fn read_points_file(path: &str) -> Result<Vec<Point>> {
+    let mut text = String::new();
+    if path == "-" {
+        std::io::stdin().read_to_string(&mut text)?;
+    } else {
+        text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    }
+    let mut tokens = text.split_whitespace();
+    let count: usize = tokens
+        .next()
+        .ok_or_else(|| anyhow!("empty file"))?
+        .parse()
+        .context("first token must be the point count")?;
+    let mut pts = Vec::with_capacity(count);
+    for k in 0..count {
+        let x: f64 = tokens
+            .next()
+            .ok_or_else(|| anyhow!("eof at point {k}"))?
+            .parse()?;
+        let y: f64 = tokens
+            .next()
+            .ok_or_else(|| anyhow!("eof at point {k}"))?
+            .parse()?;
+        pts.push(Point::new(x, y));
+    }
+    Ok(pts)
+}
+
+fn write_points(w: &mut impl std::io::Write, pts: &[Point]) -> Result<()> {
+    writeln!(w, "{}", pts.len())?;
+    for p in pts {
+        writeln!(w, "{:.6} {:.6}", p.x, p.y)?;
+    }
+    Ok(())
+}
+
+fn cmd_gen(args: &[String]) -> Result<()> {
+    let (_, flags) = parse_flags(args)?;
+    let dist = flags
+        .get("dist")
+        .map(String::as_str)
+        .unwrap_or("uniform");
+    let dist = Distribution::parse(dist).ok_or_else(|| anyhow!("unknown distribution {dist}"))?;
+    let n: usize = flags.get("n").ok_or_else(|| anyhow!("--n required"))?.parse()?;
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let pts = generate(dist, n, seed);
+    match flags.get("out") {
+        Some(path) => {
+            let mut f = std::fs::File::create(path)?;
+            write_points(&mut f, &pts)?;
+            println!("wrote {n} {} points to {path}", dist.name());
+        }
+        None => write_points(&mut std::io::stdout(), &pts)?,
+    }
+    Ok(())
+}
+
+fn cmd_hull(args: &[String]) -> Result<()> {
+    let (pos, flags) = parse_flags(args)?;
+    let file = pos.first().ok_or_else(|| anyhow!("hull needs a points file"))?;
+    let points = read_points_file(file)?;
+    let backend = flags
+        .get("backend")
+        .map(|s| BackendKind::parse(s).ok_or_else(|| anyhow!("unknown backend {s}")))
+        .transpose()?
+        .unwrap_or(BackendKind::Native);
+
+    // paper's main: echo the points, then compute
+    write_points(&mut std::io::stdout(), &points)?;
+    println!();
+
+    // per-stage trace (paper's optional second argument)
+    let mut stage_hoods: Vec<Vec<Vec<Point>>> = Vec::new();
+    if flags.contains_key("trace") || flags.contains_key("svg") {
+        let mut sorted = points.clone();
+        wagener_hull::geometry::point::sort_by_x(&mut sorted);
+        let slots = sorted.len().next_power_of_two().max(2);
+        let mut hood = pad_to_hood(&sorted, slots);
+        let mut tw = flags
+            .get("trace")
+            .map(|p| std::fs::File::create(p).map(TraceWriter::new))
+            .transpose()?;
+        let mut d = 2;
+        while d < slots {
+            if let Some(tw) = tw.as_mut() {
+                tw.stage(&hood, d)?;
+            }
+            stage_hoods.push(
+                hood.chunks(d)
+                    .map(|b| wagener_hull::geometry::point::live_prefix(b).to_vec())
+                    .collect(),
+            );
+            hood = stage(&hood, d);
+            d *= 2;
+        }
+        if let Some(tw) = tw {
+            tw.finish()?;
+        }
+    }
+
+    let coord = Coordinator::start(CoordinatorConfig {
+        backend,
+        artifacts_dir: PathBuf::from(
+            flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into()),
+        ),
+        ..Default::default()
+    })
+    .map_err(|e| anyhow!(e))?;
+    let resp = coord
+        .compute(points.clone())
+        .map_err(|e| anyhow!("{e}"))?;
+
+    println!("# backend={} queue_ns={} exec_ns={}", resp.backend, resp.queue_ns, resp.exec_ns);
+    println!("# upper hood");
+    write_points(&mut std::io::stdout(), &resp.upper)?;
+    println!("# lower hood");
+    write_points(&mut std::io::stdout(), &resp.lower)?;
+
+    if let Some(svg_path) = flags.get("svg") {
+        let svg = render_hull_svg(
+            &points,
+            &resp.upper,
+            &resp.lower,
+            &stage_hoods,
+            &SvgOptions::default(),
+        );
+        std::fs::write(svg_path, svg)?;
+        println!("# svg written to {svg_path}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let (_, flags) = parse_flags(args)?;
+    let mut cfg = match flags.get("config") {
+        Some(path) => Config::from_file(std::path::Path::new(path))?,
+        None => Config::default(),
+    };
+    if let Some(addr) = flags.get("addr") {
+        cfg.server.addr = addr.clone();
+    }
+    if let Some(b) = flags.get("backend") {
+        cfg.coordinator.backend =
+            BackendKind::parse(b).ok_or_else(|| anyhow!("unknown backend {b}"))?;
+    }
+    if let Some(dir) = flags.get("artifacts") {
+        cfg.coordinator.artifacts_dir = PathBuf::from(dir);
+    }
+
+    let coord = Arc::new(Coordinator::start(cfg.coordinator.clone()).map_err(|e| anyhow!(e))?);
+    let handle = server::serve(coord.clone(), &cfg.server)?;
+    println!(
+        "serving on {} backend={} (Ctrl-C to stop)",
+        handle.local_addr,
+        coord.backend_name()
+    );
+    // block forever
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_client(args: &[String]) -> Result<()> {
+    let (pos, flags) = parse_flags(args)?;
+    let addr = flags.get("addr").ok_or_else(|| anyhow!("--addr required"))?;
+    let file = pos.first().ok_or_else(|| anyhow!("client needs a points file"))?;
+    let points = read_points_file(file)?;
+    let mut client = server::HullClient::connect(addr.as_str())?;
+    let hull = client.hull(&points)?;
+    println!(
+        "# backend={} queue_ns={} exec_ns={}",
+        hull.backend, hull.queue_ns, hull.exec_ns
+    );
+    println!("# upper hood");
+    write_points(&mut std::io::stdout(), &hull.upper)?;
+    println!("# lower hood");
+    write_points(&mut std::io::stdout(), &hull.lower)?;
+    println!("# stats: {}", client.stats()?);
+    Ok(())
+}
+
+fn cmd_occupancy(args: &[String]) -> Result<()> {
+    let (_, flags) = parse_flags(args)?;
+    let n: usize = flags.get("n").ok_or_else(|| anyhow!("--n required"))?.parse()?;
+    let dist = Distribution::parse(flags.get("dist").map(String::as_str).unwrap_or("uniform"))
+        .ok_or_else(|| anyhow!("unknown distribution"))?;
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let slots = n.next_power_of_two().max(4);
+    let pts = generate(dist, n, seed);
+    println!(
+        "# thread allocation (paper Fig. 2): n={n} slots={slots} dist={}",
+        dist.name()
+    );
+    print!("{}", format_table(&occupancy_table(&pts, slots)));
+    Ok(())
+}
+
+fn cmd_artifacts(args: &[String]) -> Result<()> {
+    let (_, flags) = parse_flags(args)?;
+    let dir = flags.get("dir").cloned().unwrap_or_else(|| "artifacts".into());
+    let reg = ArtifactRegistry::load(&dir)?;
+    println!("{:<18} {:>6} {:>6} {:>8} {:>12}", "artifact", "n", "batch", "outputs", "bytes");
+    for meta in reg.iter() {
+        let bytes = std::fs::metadata(&meta.path).map(|m| m.len()).unwrap_or(0);
+        println!(
+            "{:<18} {:>6} {:>6} {:>8} {:>12}",
+            meta.name, meta.n, meta.batch, meta.outputs, bytes
+        );
+    }
+    println!("size classes: {:?}", reg.hull_size_classes());
+    Ok(())
+}

@@ -1,0 +1,15 @@
+//! Overmars–van Leeuwen machinery for the paper's §3 optimal-speedup
+//! sketch: hull chains in balanced trees, logarithmic-time common-tangent
+//! search, and the strip-preprocessed merge pipeline whose *work* (not
+//! just time) the paper argues down from O(n log n) to O(n).
+//!
+//! Experiment E5 measures the predicate-evaluation and data-movement
+//! counts of this variant against the standard Wagener pipeline.
+
+pub mod optimal;
+pub mod tangent_search;
+pub mod treap;
+
+pub use optimal::{optimal_upper_hull, OptimalRun, WorkStats};
+pub use tangent_search::{common_tangent, HullChain};
+pub use treap::Treap;

@@ -1,0 +1,171 @@
+//! The paper's §3 optimal-speedup variant, measured.
+//!
+//! Pipeline (paper sketch): split the x-sorted input into strips, compute
+//! each strip's upper hull serially (O(strip) work each, O(n) total),
+//! store the chains in balanced trees, then merge adjacent chains level by
+//! level using the logarithmic tangent search — split/join instead of the
+//! CUDA version's shift-copy, so merges move O(log) pointers, not O(d)
+//! points.
+//!
+//! Experiment E5 compares this run's work counters against the standard
+//! Wagener pipeline's Θ(n log n) (PRAM counters from wagener::pram_exec):
+//! strip work ≈ n, tangent work ≈ (n / strip) · log²(strip hull), total
+//! ≈ O(n) for strip = log²n — the paper's claim, now a measured number.
+
+use super::tangent_search::{common_tangent, SearchCost};
+use super::treap::Treap;
+use crate::geometry::point::Point;
+use crate::serial::monotone_chain;
+
+/// Work counters for an optimal-variant run (E5's table row).
+#[derive(Clone, Debug, Default)]
+pub struct WorkStats {
+    /// points scanned by the serial per-strip hulls (Θ(n)).
+    pub strip_work: u64,
+    /// number of strips / merge levels / merges performed.
+    pub strips: usize,
+    pub levels: usize,
+    pub merges: u64,
+    /// orientation tests spent in tangent searches (the parallel work).
+    pub tangent_predicate_evals: u64,
+    /// tree accesses during tangent searches.
+    pub tangent_chain_accesses: u64,
+    /// elements physically moved (split/join move none; reported to
+    /// contrast with the CUDA pipeline's Θ(n log n) shift-copies).
+    pub data_moves: u64,
+}
+
+impl WorkStats {
+    /// total accounted work of this variant.
+    pub fn total(&self) -> u64 {
+        self.strip_work + self.tangent_predicate_evals + self.data_moves
+    }
+}
+
+/// Result of an optimal-variant run.
+#[derive(Debug)]
+pub struct OptimalRun {
+    pub hull: Vec<Point>,
+    pub stats: WorkStats,
+}
+
+/// Paper's strip length for n points: log²(n), clamped to [4, n].
+pub fn default_strip_len(n: usize) -> usize {
+    let lg = (n.max(2) as f64).log2();
+    ((lg * lg) as usize).clamp(4, n.max(4))
+}
+
+/// Upper hull via strip preprocessing + OvL merges.
+///
+/// `points` x-sorted distinct-x; `strip_len` 0 picks the paper's log²n.
+pub fn optimal_upper_hull(points: &[Point], strip_len: usize) -> OptimalRun {
+    let n = points.len();
+    let mut stats = WorkStats::default();
+    if n == 0 {
+        return OptimalRun { hull: Vec::new(), stats };
+    }
+    let strip = if strip_len == 0 { default_strip_len(n) } else { strip_len.max(1) };
+
+    // --- strip phase: serial hulls, one balanced tree per strip
+    let mut chains: Vec<Treap> = Vec::with_capacity(n.div_ceil(strip));
+    for (k, chunk) in points.chunks(strip).enumerate() {
+        let hull = monotone_chain::upper_hull(chunk);
+        stats.strip_work += chunk.len() as u64;
+        chains.push(Treap::from_slice(&hull, 0x5741_6765 ^ k as u64));
+    }
+    stats.strips = chains.len();
+
+    // --- merge phase: pairwise, level by level (the paper's passes)
+    while chains.len() > 1 {
+        stats.levels += 1;
+        let mut next = Vec::with_capacity(chains.len().div_ceil(2));
+        let mut iter = chains.into_iter();
+        while let Some(left) = iter.next() {
+            match iter.next() {
+                None => next.push(left),
+                Some(right) => {
+                    let mut cost = SearchCost::default();
+                    let (pi, qi) = common_tangent(&left, &right, &mut cost);
+                    stats.tangent_predicate_evals += cost.predicate_evals;
+                    stats.tangent_chain_accesses += cost.chain_accesses;
+                    stats.merges += 1;
+                    let (keep_l, _) = left.split_at(pi + 1);
+                    let (_, keep_r) = right.split_at(qi);
+                    next.push(keep_l.concat(keep_r));
+                }
+            }
+        }
+        chains = next;
+    }
+
+    let hull = chains.pop().map(|t| t.to_vec()).unwrap_or_default();
+    stats.data_moves += hull.len() as u64; // the single final flatten
+    OptimalRun { hull, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::generators::{generate, Distribution};
+
+    #[test]
+    fn matches_serial_all_distributions() {
+        for dist in Distribution::ALL {
+            for &n in &[1usize, 2, 7, 64, 257, 1000] {
+                let pts = generate(dist, n, 23);
+                let run = optimal_upper_hull(&pts, 0);
+                assert_eq!(
+                    run.hull,
+                    monotone_chain::upper_hull(&pts),
+                    "{} n={n}",
+                    dist.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn strip_lengths_dont_matter_for_correctness() {
+        let pts = generate(Distribution::Circle, 500, 31);
+        let want = monotone_chain::upper_hull(&pts);
+        for strip in [1usize, 2, 3, 16, 100, 500, 1000] {
+            assert_eq!(optimal_upper_hull(&pts, strip).hull, want, "strip={strip}");
+        }
+    }
+
+    #[test]
+    fn strip_work_is_linear() {
+        let pts = generate(Distribution::Parabola, 4096, 7);
+        let run = optimal_upper_hull(&pts, 0);
+        assert_eq!(run.stats.strip_work, 4096);
+        assert_eq!(run.stats.strips, 4096usize.div_ceil(default_strip_len(4096)));
+    }
+
+    #[test]
+    fn tangent_work_is_subquadratic_in_merge_sizes() {
+        // worst case (all points on hull): tangent evals must stay far
+        // below the Θ(n log n) of the standard pipeline
+        let n = 4096;
+        let pts = generate(Distribution::Parabola, n, 7);
+        let run = optimal_upper_hull(&pts, 0);
+        let nlogn = (n as f64 * (n as f64).log2()) as u64;
+        assert!(
+            run.stats.tangent_predicate_evals * 4 < nlogn,
+            "evals {} vs n log n {}",
+            run.stats.tangent_predicate_evals,
+            nlogn
+        );
+    }
+
+    #[test]
+    fn default_strip_is_log_squared() {
+        assert_eq!(default_strip_len(1024), 100);
+        assert_eq!(default_strip_len(4), 4);
+    }
+
+    #[test]
+    fn empty_input() {
+        let run = optimal_upper_hull(&[], 0);
+        assert!(run.hull.is_empty());
+    }
+}

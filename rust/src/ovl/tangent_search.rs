@@ -1,0 +1,257 @@
+//! Logarithmic common-tangent search between two x-separated upper-hull
+//! chains — the paper's "balanced search" of Overmars & van Leeuwen,
+//! expressed with the same LOW/EQUAL/HIGH codes as the CUDA kernel.
+//!
+//! Inner search: for a fixed left-chain corner p, the g-codes along the
+//! right chain read LOW* EQUAL HIGH*, so the touch corner is the largest
+//! rank with code <= EQUAL — one binary search, O(log q) probes.
+//! Outer search: by the paper's Theorem 2.1 the f-codes of (p_i, touch(p_i))
+//! along the left chain are again LOW* EQUAL HIGH*, so p* is the largest
+//! rank with code <= EQUAL — a second binary search whose probes each run
+//! an inner search: O(log p · log q) predicate evaluations total.
+
+use crate::geometry::point::Point;
+use crate::geometry::predicates::left_of;
+use crate::wagener::tangent::Code;
+
+use super::treap::Treap;
+
+/// Rank-indexed read access to a hull chain (array or balanced tree).
+pub trait HullChain {
+    fn len(&self) -> usize;
+    fn get(&self, rank: usize) -> Point;
+}
+
+impl HullChain for &[Point] {
+    fn len(&self) -> usize {
+        (**self).len()
+    }
+    fn get(&self, rank: usize) -> Point {
+        self[rank]
+    }
+}
+
+impl HullChain for Treap {
+    fn len(&self) -> usize {
+        Treap::len(self)
+    }
+    fn get(&self, rank: usize) -> Point {
+        Treap::get(self, rank)
+    }
+}
+
+/// Probe counter: predicate (left_of) evaluations, chain accesses.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SearchCost {
+    pub predicate_evals: u64,
+    pub chain_accesses: u64,
+}
+
+impl std::ops::AddAssign for SearchCost {
+    fn add_assign(&mut self, o: SearchCost) {
+        self.predicate_evals += o.predicate_evals;
+        self.chain_accesses += o.chain_accesses;
+    }
+}
+
+fn neighbor<C: HullChain>(c: &C, rank: usize, next: bool, cost: &mut SearchCost) -> Point {
+    let pt = c.get(rank);
+    if next {
+        if rank + 1 < c.len() {
+            cost.chain_accesses += 1;
+            c.get(rank + 1)
+        } else {
+            pt.below()
+        }
+    } else if rank > 0 {
+        cost.chain_accesses += 1;
+        c.get(rank - 1)
+    } else {
+        pt.below()
+    }
+}
+
+/// g-code of right-chain corner `j` w.r.t. the tangent from point `p`.
+fn g_code<C: HullChain>(p: Point, q_chain: &C, j: usize, cost: &mut SearchCost) -> Code {
+    cost.chain_accesses += 1;
+    let q = q_chain.get(j);
+    let q_next = neighbor(q_chain, j, true, cost);
+    cost.predicate_evals += 1;
+    if left_of(p, q, q_next) {
+        return Code::Low;
+    }
+    let q_prev = neighbor(q_chain, j, false, cost);
+    cost.predicate_evals += 1;
+    if left_of(p, q, q_prev) {
+        Code::High
+    } else {
+        Code::Equal
+    }
+}
+
+/// f-code of left-chain corner `i` w.r.t. the tangent from point `q`.
+fn f_code<C: HullChain>(p_chain: &C, i: usize, q: Point, cost: &mut SearchCost) -> Code {
+    cost.chain_accesses += 1;
+    let p = p_chain.get(i);
+    let p_next = neighbor(p_chain, i, true, cost);
+    cost.predicate_evals += 1;
+    if left_of(p, q, p_next) {
+        return Code::Low;
+    }
+    let p_prev = neighbor(p_chain, i, false, cost);
+    cost.predicate_evals += 1;
+    if left_of(p, q, p_prev) {
+        Code::High
+    } else {
+        Code::Equal
+    }
+}
+
+/// Largest rank in [0, len) with code <= EQUAL (codes are LOW* EQ HIGH*).
+/// Rank 0 is never HIGH (its prev is the synthetic below-point).
+fn last_not_high<F: FnMut(usize) -> Code>(len: usize, mut code: F) -> usize {
+    let (mut lo, mut hi) = (0usize, len - 1);
+    while lo < hi {
+        let mid = (lo + hi + 1) / 2;
+        if code(mid) <= Code::Equal {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    lo
+}
+
+/// Touch corner on `q_chain` of the tangent from external left point `p`.
+pub fn tangent_from_point<C: HullChain>(p: Point, q_chain: &C, cost: &mut SearchCost) -> usize {
+    debug_assert!(q_chain.len() > 0);
+    last_not_high(q_chain.len(), |j| g_code(p, q_chain, j, cost))
+}
+
+/// Common upper tangent (pi, qi) between an x-separated chain pair.
+/// O(log p · log q) predicate evaluations.
+pub fn common_tangent<A: HullChain, B: HullChain>(
+    p_chain: &A,
+    q_chain: &B,
+    cost: &mut SearchCost,
+) -> (usize, usize) {
+    debug_assert!(p_chain.len() > 0 && q_chain.len() > 0);
+    let pi = last_not_high(p_chain.len(), |i| {
+        let p = {
+            let mut c = SearchCost::default();
+            let p = p_chain.get(i);
+            c.chain_accesses += 1;
+            *cost += c;
+            p
+        };
+        let qi = tangent_from_point(p, q_chain, cost);
+        f_code(p_chain, i, q_chain.get(qi), cost)
+    });
+    let qi = tangent_from_point(p_chain.get(pi), q_chain, cost);
+    (pi, qi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::point::sort_by_x;
+    use crate::serial::monotone_chain;
+    use crate::util::rng::Rng;
+
+    fn random_chains(rng: &mut Rng, np: usize, nq: usize) -> (Vec<Point>, Vec<Point>) {
+        let mut p: Vec<Point> = (0..np)
+            .map(|_| Point::new(rng.f64() * 0.45, rng.f64()).quantize_f32())
+            .collect();
+        let mut q: Vec<Point> = (0..nq)
+            .map(|_| Point::new(0.55 + rng.f64() * 0.45, rng.f64()).quantize_f32())
+            .collect();
+        sort_by_x(&mut p);
+        sort_by_x(&mut q);
+        p.dedup_by(|a, b| a.x == b.x);
+        q.dedup_by(|a, b| a.x == b.x);
+        (monotone_chain::upper_hull(&p), monotone_chain::upper_hull(&q))
+    }
+
+    fn brute(p: &[Point], q: &[Point]) -> (usize, usize) {
+        for i in 0..p.len() {
+            for j in 0..q.len() {
+                let all_below = p
+                    .iter()
+                    .chain(q.iter())
+                    .all(|&o| o == p[i] || o == q[j] || !left_of(p[i], q[j], o));
+                if all_below {
+                    return (i, j);
+                }
+            }
+        }
+        panic!("no tangent")
+    }
+
+    #[test]
+    fn matches_brute_force() {
+        let mut rng = Rng::new(71);
+        for _ in 0..300 {
+            let np = rng.range_usize(1, 40);
+            let nq = rng.range_usize(1, 40);
+            let (p, q) = random_chains(&mut rng, np, nq);
+            let mut cost = SearchCost::default();
+            let got = common_tangent(&p.as_slice(), &q.as_slice(), &mut cost);
+            assert_eq!(got, brute(&p, &q), "p={p:?} q={q:?}");
+        }
+    }
+
+    #[test]
+    fn works_on_treaps() {
+        let mut rng = Rng::new(73);
+        for _ in 0..50 {
+            let (p, q) = random_chains(&mut rng, 30, 30);
+            let tp = Treap::from_slice(&p, 1);
+            let tq = Treap::from_slice(&q, 2);
+            let mut cost = SearchCost::default();
+            let got = common_tangent(&tp, &tq, &mut cost);
+            assert_eq!(got, brute(&p, &q));
+        }
+    }
+
+    #[test]
+    fn cost_is_polylogarithmic() {
+        // chains of 2^k parabola corners: evals must grow ~ log^2, far
+        // below linear
+        let mut rng = Rng::new(79);
+        let mut prev = 0u64;
+        for k in [6usize, 8, 10, 12] {
+            let n = 1 << k;
+            let mk = |off: f64, rng: &mut Rng| -> Vec<Point> {
+                let mut v: Vec<Point> = (0..n)
+                    .map(|_| {
+                        let x = rng.f64() * 0.45;
+                        Point::new(off + x, 0.8 - (x - 0.22) * (x - 0.22)).quantize_f32()
+                    })
+                    .collect();
+                sort_by_x(&mut v);
+                v.dedup_by(|a, b| a.x == b.x);
+                monotone_chain::upper_hull(&v)
+            };
+            let p = mk(0.0, &mut rng);
+            let q = mk(0.55, &mut rng);
+            assert!(p.len() > n / 2 && q.len() > n / 2, "need big hulls");
+            let mut cost = SearchCost::default();
+            common_tangent(&p.as_slice(), &q.as_slice(), &mut cost);
+            assert!(
+                cost.predicate_evals <= 4 * ((k + 1) * (k + 1)) as u64,
+                "k={k}: {} evals",
+                cost.predicate_evals
+            );
+            assert!(cost.predicate_evals >= prev / 4, "not degenerate");
+            prev = cost.predicate_evals;
+        }
+    }
+
+    #[test]
+    fn singleton_chains() {
+        let p = vec![Point::new(0.2, 0.5)];
+        let q = vec![Point::new(0.8, 0.3)];
+        let mut cost = SearchCost::default();
+        assert_eq!(common_tangent(&p.as_slice(), &q.as_slice(), &mut cost), (0, 0));
+    }
+}

@@ -1,0 +1,224 @@
+//! Rank-indexed treap over hull corners — the "balanced trees of size
+//! <= log n" in the paper's optimal-speedup sketch.
+//!
+//! Supports O(log n) rank access, split-at-rank and join, which is exactly
+//! what an Overmars–van Leeuwen hull merge needs: after the tangent
+//! (pi, qi) is found, the merged chain is
+//! `left.split(pi+1).0  ++  right.split(qi).1` — two splits and a join,
+//! no element copying (the paper's CUDA version pays O(d) moves instead;
+//! E5 reports that difference as `data_moves`).
+
+use crate::geometry::point::Point;
+use crate::util::rng::Rng;
+
+struct Node {
+    pt: Point,
+    pri: u64,
+    size: usize,
+    left: Option<Box<Node>>,
+    right: Option<Box<Node>>,
+}
+
+fn size(n: &Option<Box<Node>>) -> usize {
+    n.as_ref().map_or(0, |b| b.size)
+}
+
+fn update(n: &mut Box<Node>) {
+    n.size = 1 + size(&n.left) + size(&n.right);
+}
+
+fn split(node: Option<Box<Node>>, k: usize) -> (Option<Box<Node>>, Option<Box<Node>>) {
+    // left gets the first k elements
+    match node {
+        None => (None, None),
+        Some(mut n) => {
+            let ls = size(&n.left);
+            if k <= ls {
+                let (a, b) = split(n.left.take(), k);
+                n.left = b;
+                update(&mut n);
+                (a, Some(n))
+            } else {
+                let (a, b) = split(n.right.take(), k - ls - 1);
+                n.right = a;
+                update(&mut n);
+                (Some(n), b)
+            }
+        }
+    }
+}
+
+fn join(a: Option<Box<Node>>, b: Option<Box<Node>>) -> Option<Box<Node>> {
+    match (a, b) {
+        (None, b) => b,
+        (a, None) => a,
+        (Some(mut x), Some(mut y)) => {
+            if x.pri >= y.pri {
+                x.right = join(x.right.take(), Some(y));
+                update(&mut x);
+                Some(x)
+            } else {
+                y.left = join(Some(x), y.left.take());
+                update(&mut y);
+                Some(y)
+            }
+        }
+    }
+}
+
+/// Balanced (expected) search tree over an x-ordered point sequence.
+pub struct Treap {
+    root: Option<Box<Node>>,
+    rng: Rng,
+}
+
+impl Treap {
+    pub fn new(seed: u64) -> Treap {
+        Treap { root: None, rng: Rng::new(seed) }
+    }
+
+    /// Build from an x-ordered slice (O(n log n) expected; strips are tiny).
+    pub fn from_slice(pts: &[Point], seed: u64) -> Treap {
+        let mut t = Treap::new(seed);
+        for &p in pts {
+            t.push_back(p);
+        }
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        size(&self.root)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.root.is_none()
+    }
+
+    /// Append a point (must be x-after the current last).
+    pub fn push_back(&mut self, p: Point) {
+        let pri = self.rng.next_u64();
+        let node = Some(Box::new(Node { pt: p, pri, size: 1, left: None, right: None }));
+        self.root = join(self.root.take(), node);
+    }
+
+    /// O(log n) access by rank.
+    pub fn get(&self, mut rank: usize) -> Point {
+        assert!(rank < self.len(), "rank {rank} >= len {}", self.len());
+        let mut cur = self.root.as_ref().unwrap();
+        loop {
+            let ls = size(&cur.left);
+            if rank < ls {
+                cur = cur.left.as_ref().unwrap();
+            } else if rank == ls {
+                return cur.pt;
+            } else {
+                rank -= ls + 1;
+                cur = cur.right.as_ref().unwrap();
+            }
+        }
+    }
+
+    /// Split into (first k, rest); self is consumed.
+    pub fn split_at(mut self, k: usize) -> (Treap, Treap) {
+        let (a, b) = split(self.root.take(), k);
+        let seed_a = self.rng.next_u64();
+        let seed_b = self.rng.next_u64();
+        (
+            Treap { root: a, rng: Rng::new(seed_a) },
+            Treap { root: b, rng: Rng::new(seed_b) },
+        )
+    }
+
+    /// Concatenate (all of self x-before all of other).
+    pub fn concat(mut self, mut other: Treap) -> Treap {
+        let root = join(self.root.take(), other.root.take());
+        Treap { root, rng: self.rng }
+    }
+
+    /// In-order traversal to a Vec (O(n); used only at pipeline exit).
+    pub fn to_vec(&self) -> Vec<Point> {
+        fn walk(n: &Option<Box<Node>>, out: &mut Vec<Point>) {
+            if let Some(b) = n {
+                walk(&b.left, out);
+                out.push(b.pt);
+                walk(&b.right, out);
+            }
+        }
+        let mut out = Vec::with_capacity(self.len());
+        walk(&self.root, &mut out);
+        out
+    }
+
+    /// Expected-balance sanity: tree height (test helper).
+    pub fn height(&self) -> usize {
+        fn h(n: &Option<Box<Node>>) -> usize {
+            n.as_ref().map_or(0, |b| 1 + h(&b.left).max(h(&b.right)))
+        }
+        h(&self.root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pts(k: usize) -> Vec<Point> {
+        (0..k).map(|i| Point::new(i as f64 / k as f64, (i * i % 17) as f64)).collect()
+    }
+
+    #[test]
+    fn build_get_roundtrip() {
+        let v = pts(100);
+        let t = Treap::from_slice(&v, 1);
+        assert_eq!(t.len(), 100);
+        for (i, &p) in v.iter().enumerate() {
+            assert_eq!(t.get(i), p);
+        }
+        assert_eq!(t.to_vec(), v);
+    }
+
+    #[test]
+    fn split_and_concat() {
+        let v = pts(37);
+        for k in [0usize, 1, 17, 36, 37] {
+            let t = Treap::from_slice(&v, 2);
+            let (a, b) = t.split_at(k);
+            assert_eq!(a.to_vec(), &v[..k]);
+            assert_eq!(b.to_vec(), &v[k..]);
+            let joined = a.concat(b);
+            assert_eq!(joined.to_vec(), v);
+        }
+    }
+
+    #[test]
+    fn ovl_merge_shape() {
+        // merged = left[..=pi] ++ right[qi..] with two splits and a join
+        let left = pts(20);
+        let right: Vec<Point> =
+            pts(20).iter().map(|p| Point::new(p.x + 1.5, p.y)).collect();
+        let (pi, qi) = (7usize, 13usize);
+        let (keep_l, _) = Treap::from_slice(&left, 3).split_at(pi + 1);
+        let (_, keep_r) = Treap::from_slice(&right, 4).split_at(qi);
+        let merged = keep_l.concat(keep_r);
+        let mut want = left[..=pi].to_vec();
+        want.extend_from_slice(&right[qi..]);
+        assert_eq!(merged.to_vec(), want);
+    }
+
+    #[test]
+    fn expected_logarithmic_height() {
+        let t = Treap::from_slice(&pts(4096), 5);
+        // expected height ~ 3 log2 n ≈ 36; allow slack
+        assert!(t.height() < 60, "height {}", t.height());
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let t = Treap::new(1);
+        assert!(t.is_empty());
+        let mut t = Treap::new(1);
+        t.push_back(Point::new(0.5, 0.5));
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.get(0), Point::new(0.5, 0.5));
+    }
+}

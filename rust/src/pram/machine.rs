@@ -1,0 +1,388 @@
+//! The PRAM machine: synchronous steps over flat shared memory.
+
+use std::collections::HashMap;
+
+/// CUDA-style shared-memory serialization model.
+#[derive(Clone, Copy, Debug)]
+pub struct BankModel {
+    /// number of shared-memory banks (32 on every CUDA generation).
+    pub banks: usize,
+    /// SIMD width — PEs `[w*warp, (w+1)*warp)` form one warp.
+    pub warp: usize,
+    /// bank index stride in machine words (4-byte words on CUDA; our cells
+    /// are one word each).
+    pub word_stride: usize,
+}
+
+impl Default for BankModel {
+    fn default() -> Self {
+        BankModel { banks: 32, warp: 32, word_stride: 1 }
+    }
+}
+
+/// Aggregate counters over the life of the machine.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Counters {
+    /// synchronous parallel steps executed (PRAM time).
+    pub steps: u64,
+    /// total PE activations (PRAM work).
+    pub work: u64,
+    /// shared-memory cell reads / writes.
+    pub reads: u64,
+    pub writes: u64,
+    /// modeled cycles under the bank model (>= steps; == steps iff
+    /// conflict-free).  One step costs `max over warps of (read
+    /// serialization + write serialization)`, min 1.
+    pub modeled_cycles: u64,
+    /// ideal cycles: 1 per step (a conflict-free PRAM).
+    pub ideal_cycles: u64,
+    /// same-cell writes by two PEs in one step (CREW violations).
+    pub write_conflicts: u64,
+    /// a cell read and written in the same step (benign under
+    /// reads-see-old-memory semantics; counted for diagnostics).
+    pub read_write_overlaps: u64,
+    /// largest PE count used in any step.
+    pub max_pes: u64,
+}
+
+impl Counters {
+    /// Bank-conflict slowdown factor (modeled / ideal).
+    pub fn conflict_factor(&self) -> f64 {
+        if self.ideal_cycles == 0 {
+            1.0
+        } else {
+            self.modeled_cycles as f64 / self.ideal_cycles as f64
+        }
+    }
+}
+
+/// Hard errors (write-write conflicts when `strict` is set).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PramError {
+    pub step: u64,
+    pub addr: usize,
+    pub pes: (usize, usize),
+}
+
+impl std::fmt::Display for PramError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "CREW violation at step {}: cell {} written by PEs {} and {}",
+            self.step, self.addr, self.pes.0, self.pes.1
+        )
+    }
+}
+
+impl std::error::Error for PramError {}
+
+/// Per-PE execution context handed to the step closure.
+pub struct PeCtx<'a> {
+    pe: usize,
+    mem: &'a [f64],
+    regs: &'a mut [f64],
+    reads: &'a mut Vec<(usize, usize)>,
+    writes: &'a mut Vec<(usize, f64, usize)>,
+}
+
+impl<'a> PeCtx<'a> {
+    pub fn pe(&self) -> usize {
+        self.pe
+    }
+
+    /// Read a shared cell (sees the memory state before this step).
+    pub fn read(&mut self, addr: usize) -> f64 {
+        self.reads.push((addr, self.pe));
+        self.mem[addr]
+    }
+
+    /// Buffer a shared-cell write (commits at the step barrier).
+    pub fn write(&mut self, addr: usize, val: f64) {
+        self.writes.push((addr, val, self.pe));
+    }
+
+    /// Read a 2-cell point (x at `addr2`, y at `addr2 + 1`).
+    pub fn read_pair(&mut self, addr2: usize) -> (f64, f64) {
+        (self.read(addr2), self.read(addr2 + 1))
+    }
+
+    pub fn write_pair(&mut self, addr2: usize, x: f64, y: f64) {
+        self.write(addr2, x);
+        self.write(addr2 + 1, y);
+    }
+
+    /// Private per-PE register file (not shared memory; not counted).
+    pub fn reg(&self, r: usize) -> f64 {
+        self.regs[r]
+    }
+
+    pub fn set_reg(&mut self, r: usize, v: f64) {
+        self.regs[r] = v;
+    }
+}
+
+/// The machine.
+pub struct Pram {
+    pub mem: Vec<f64>,
+    pub counters: Counters,
+    pub bank_model: BankModel,
+    /// return Err on write-write conflicts instead of counting.
+    pub strict: bool,
+    regs: Vec<f64>,
+    regs_per_pe: usize,
+    reads_buf: Vec<(usize, usize)>,
+    writes_buf: Vec<(usize, f64, usize)>,
+}
+
+impl Pram {
+    /// `cells` words of shared memory; `regs_per_pe` private registers for
+    /// up to `max_pes` PEs.
+    pub fn new(cells: usize, max_pes: usize, regs_per_pe: usize) -> Pram {
+        Pram {
+            mem: vec![0.0; cells],
+            counters: Counters::default(),
+            bank_model: BankModel::default(),
+            strict: true,
+            regs: vec![0.0; max_pes * regs_per_pe],
+            regs_per_pe,
+            reads_buf: Vec::new(),
+            writes_buf: Vec::new(),
+        }
+    }
+
+    /// Run one synchronous step with PEs `0..pes`.
+    ///
+    /// Every PE executes `body(pe, ctx)`; reads observe pre-step memory;
+    /// writes commit at the barrier.  Returns the CREW status.
+    pub fn step<F>(&mut self, pes: usize, body: F) -> Result<(), PramError>
+    where
+        F: Fn(usize, &mut PeCtx<'_>),
+    {
+        self.reads_buf.clear();
+        self.writes_buf.clear();
+        let rpp = self.regs_per_pe;
+        for pe in 0..pes {
+            let mut ctx = PeCtx {
+                pe,
+                mem: &self.mem,
+                regs: &mut self.regs[pe * rpp..(pe + 1) * rpp],
+                reads: &mut self.reads_buf,
+                writes: &mut self.writes_buf,
+            };
+            body(pe, &mut ctx);
+        }
+        self.account(pes)
+    }
+
+    fn account(&mut self, pes: usize) -> Result<(), PramError> {
+        let c = &mut self.counters;
+        c.steps += 1;
+        c.work += pes as u64;
+        c.max_pes = c.max_pes.max(pes as u64);
+        c.reads += self.reads_buf.len() as u64;
+        c.writes += self.writes_buf.len() as u64;
+        c.ideal_cycles += 1;
+
+        // ---- CREW write-conflict detection
+        self.writes_buf.sort_unstable_by_key(|&(addr, _, pe)| (addr, pe));
+        for w in self.writes_buf.windows(2) {
+            if w[0].0 == w[1].0 {
+                c.write_conflicts += 1;
+                if self.strict {
+                    return Err(PramError {
+                        step: c.steps,
+                        addr: w[0].0,
+                        pes: (w[0].2, w[1].2),
+                    });
+                }
+            }
+        }
+        // read-write overlap diagnostics
+        {
+            let mut waddrs: Vec<usize> = self.writes_buf.iter().map(|w| w.0).collect();
+            waddrs.sort_unstable();
+            waddrs.dedup();
+            for &(addr, _) in &self.reads_buf {
+                if waddrs.binary_search(&addr).is_ok() {
+                    c.read_write_overlaps += 1;
+                }
+            }
+        }
+
+        // ---- bank serialization model
+        let bm = self.bank_model;
+        let mut warp_cost: HashMap<usize, (HashMap<usize, Vec<usize>>, HashMap<usize, Vec<usize>>)> =
+            HashMap::new();
+        for &(addr, pe) in &self.reads_buf {
+            let warp = pe / bm.warp;
+            let bank = (addr / bm.word_stride) % bm.banks;
+            warp_cost.entry(warp).or_default().0.entry(bank).or_default().push(addr);
+        }
+        for &(addr, _, pe) in &self.writes_buf {
+            let warp = pe / bm.warp;
+            let bank = (addr / bm.word_stride) % bm.banks;
+            warp_cost.entry(warp).or_default().1.entry(bank).or_default().push(addr);
+        }
+        let mut step_cycles = 1u64;
+        for (_, (rbanks, wbanks)) in warp_cost {
+            let mut cyc = 0u64;
+            for (_, mut addrs) in rbanks {
+                // same-address reads broadcast (CUDA): distinct addresses count
+                addrs.sort_unstable();
+                addrs.dedup();
+                cyc = cyc.max(addrs.len() as u64);
+            }
+            let mut wcyc = 0u64;
+            for (_, mut addrs) in wbanks {
+                addrs.sort_unstable();
+                addrs.dedup();
+                wcyc = wcyc.max(addrs.len() as u64);
+            }
+            step_cycles = step_cycles.max(cyc + wcyc);
+        }
+        c.modeled_cycles += step_cycles;
+
+        // commit writes
+        for &(addr, val, _) in &self.writes_buf {
+            self.mem[addr] = val;
+        }
+        Ok(())
+    }
+
+    /// Convenience: reset counters (memory retained).
+    pub fn reset_counters(&mut self) {
+        self.counters = Counters::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_commits_writes_at_barrier() {
+        let mut m = Pram::new(4, 4, 0);
+        m.mem[0] = 1.0;
+        m.mem[1] = 2.0;
+        // classic swap test: both PEs read old values
+        m.step(2, |pe, ctx| {
+            let v = ctx.read(1 - pe);
+            ctx.write(pe, v);
+        })
+        .unwrap();
+        assert_eq!(m.mem[0], 2.0);
+        assert_eq!(m.mem[1], 1.0);
+    }
+
+    #[test]
+    fn crew_violation_detected() {
+        let mut m = Pram::new(2, 4, 0);
+        let err = m
+            .step(3, |_, ctx| ctx.write(0, 7.0))
+            .unwrap_err();
+        assert_eq!(err.addr, 0);
+        assert_eq!(m.counters.write_conflicts, 1);
+    }
+
+    #[test]
+    fn non_strict_counts_conflicts() {
+        let mut m = Pram::new(2, 4, 0);
+        m.strict = false;
+        m.step(3, |_, ctx| ctx.write(0, 7.0)).unwrap();
+        assert_eq!(m.counters.write_conflicts, 2); // 3 writers -> 2 adjacent pairs
+    }
+
+    #[test]
+    fn exclusive_writes_pass() {
+        let mut m = Pram::new(8, 8, 0);
+        m.step(8, |pe, ctx| ctx.write(pe, pe as f64)).unwrap();
+        assert_eq!(m.counters.write_conflicts, 0);
+        assert_eq!(m.mem[5], 5.0);
+    }
+
+    #[test]
+    fn work_and_steps_counted() {
+        let mut m = Pram::new(8, 8, 0);
+        m.step(8, |_, _| {}).unwrap();
+        m.step(4, |_, _| {}).unwrap();
+        assert_eq!(m.counters.steps, 2);
+        assert_eq!(m.counters.work, 12);
+        assert_eq!(m.counters.max_pes, 8);
+    }
+
+    #[test]
+    fn bank_conflicts_modeled() {
+        // 32 PEs all hitting bank 0 with distinct addresses: 32-way conflict
+        let mut m = Pram::new(32 * 32, 32, 0);
+        m.step(32, |pe, ctx| {
+            let _ = ctx.read(pe * 32); // all map to bank 0
+        })
+        .unwrap();
+        assert_eq!(m.counters.modeled_cycles, 32);
+        assert_eq!(m.counters.ideal_cycles, 1);
+        assert!((m.counters.conflict_factor() - 32.0).abs() < 1e-9);
+
+        // stride-1 reads: conflict-free
+        let mut m2 = Pram::new(32 * 32, 32, 0);
+        m2.step(32, |pe, ctx| {
+            let _ = ctx.read(pe);
+        })
+        .unwrap();
+        assert_eq!(m2.counters.modeled_cycles, 1);
+    }
+
+    #[test]
+    fn broadcast_reads_are_free() {
+        // all PEs read the same cell: CUDA broadcast, 1 cycle
+        let mut m = Pram::new(4, 32, 0);
+        m.step(32, |_, ctx| {
+            let _ = ctx.read(0);
+        })
+        .unwrap();
+        assert_eq!(m.counters.modeled_cycles, 1);
+    }
+
+    #[test]
+    fn read_write_overlap_is_benign_but_counted() {
+        let mut m = Pram::new(2, 2, 0);
+        m.mem[0] = 5.0;
+        m.step(2, |pe, ctx| {
+            if pe == 0 {
+                let v = ctx.read(0);
+                ctx.write(1, v);
+            } else {
+                ctx.write(0, 9.0);
+            }
+        })
+        .unwrap();
+        assert_eq!(m.mem[1], 5.0); // read saw pre-step value
+        assert_eq!(m.mem[0], 9.0);
+        assert_eq!(m.counters.read_write_overlaps, 1);
+    }
+
+    #[test]
+    fn registers_are_private_and_persistent() {
+        let mut m = Pram::new(1, 4, 2);
+        m.step(4, |pe, ctx| ctx.set_reg(0, pe as f64 * 10.0)).unwrap();
+        m.step(4, |pe, ctx| {
+            assert_eq!(ctx.reg(0), pe as f64 * 10.0);
+        })
+        .unwrap();
+        assert_eq!(m.counters.reads, 0); // registers don't touch shared mem
+    }
+
+    #[test]
+    fn warps_cost_independently() {
+        // warp 0 conflict-free, warp 1 has a 4-way conflict: step = 4 cycles
+        let mut m = Pram::new(64 * 33, 64, 0);
+        m.step(64, |pe, ctx| {
+            if pe < 32 {
+                let _ = ctx.read(pe);
+            } else {
+                let _ = ctx.read((pe % 4) * 32); // 4 distinct addrs, bank 0
+            }
+        })
+        .unwrap();
+        assert_eq!(m.counters.modeled_cycles, 4);
+    }
+}

@@ -1,0 +1,17 @@
+//! CREW-PRAM simulator with CUDA-style cost accounting.
+//!
+//! The paper's machine model is Wagener's CREW PRAM, realised on a CUDA
+//! chip whose shared-memory *bank conflicts* made the parallel program
+//! "slow by comparison with another serial program" (paper Conclusions).
+//! This substrate makes both halves of that statement measurable:
+//!
+//! * a synchronous shared-memory machine with per-step write-conflict
+//!   (CREW) checking — a correctness tool: the Wagener phases must be
+//!   exclusive-write, and tests assert zero violations;
+//! * a cost model counting PRAM steps, work (PE-operations), and modeled
+//!   cycles under a 32-bank / 32-lane-warp serialization model — the
+//!   quantity behind experiment E4.
+
+pub mod machine;
+
+pub use machine::{BankModel, Counters, PeCtx, Pram, PramError};

@@ -1,0 +1,231 @@
+//! Artifact registry: discover and describe the AOT-exported HLO modules.
+//!
+//! `python -m compile.aot` writes `artifacts/manifest.json` mapping
+//! artifact names to files and shapes; this module parses it (with the
+//! in-tree JSON parser) and answers "which executable serves a request of
+//! m points at batch b?".
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// What a compiled module computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// upper hood only: (n,2) -> 1-tuple (n,2).
+    Hood,
+    /// batched full hull: (b,n,2) -> 2-tuple ((b,n,2), (b,n,2)).
+    Hull,
+    /// plain-jnp ablation twin of Hood.
+    HoodJnp,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<ArtifactKind> {
+        Ok(match s {
+            "hood" => ArtifactKind::Hood,
+            "hull" => ArtifactKind::Hull,
+            "hood_jnp" => ArtifactKind::HoodJnp,
+            other => bail!("unknown artifact kind {other:?}"),
+        })
+    }
+}
+
+/// One manifest entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub path: PathBuf,
+    pub kind: ArtifactKind,
+    /// hood slots (power of two).
+    pub n: usize,
+    /// batch dimension; 0 for unbatched hood artifacts.
+    pub batch: usize,
+    /// tuple arity of the output.
+    pub outputs: usize,
+    pub input_shape: Vec<usize>,
+}
+
+/// The set of available artifacts.
+#[derive(Clone, Debug)]
+pub struct ArtifactRegistry {
+    pub dir: PathBuf,
+    entries: BTreeMap<String, ArtifactMeta>,
+}
+
+impl ArtifactRegistry {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactRegistry> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        Self::from_manifest_json(dir, &text)
+    }
+
+    /// Parse a manifest document (separated out for tests).
+    pub fn from_manifest_json(dir: PathBuf, text: &str) -> Result<ArtifactRegistry> {
+        let doc = json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let obj = doc.as_obj().ok_or_else(|| anyhow!("manifest: not an object"))?;
+        let mut entries = BTreeMap::new();
+        for (name, meta) in obj {
+            let field = |k: &str| {
+                meta.get(k)
+                    .ok_or_else(|| anyhow!("manifest entry {name}: missing {k}"))
+            };
+            let kind = ArtifactKind::parse(
+                field("kind")?.as_str().ok_or_else(|| anyhow!("{name}: kind"))?,
+            )?;
+            let entry = ArtifactMeta {
+                name: name.clone(),
+                path: dir.join(
+                    field("file")?.as_str().ok_or_else(|| anyhow!("{name}: file"))?,
+                ),
+                kind,
+                n: field("n")?.as_usize().ok_or_else(|| anyhow!("{name}: n"))?,
+                batch: field("batch")?
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("{name}: batch"))?,
+                outputs: field("outputs")?
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("{name}: outputs"))?,
+                input_shape: field("input_shape")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("{name}: input_shape"))?
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect(),
+            };
+            entries.insert(name.clone(), entry);
+        }
+        if entries.is_empty() {
+            bail!("manifest is empty");
+        }
+        Ok(ArtifactRegistry { dir, entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.entries.get(name)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactMeta> {
+        self.entries.values()
+    }
+
+    /// Hull size classes available (sorted n of batched hull artifacts).
+    pub fn hull_size_classes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .entries
+            .values()
+            .filter(|m| m.kind == ArtifactKind::Hull)
+            .map(|m| m.n)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Batch sizes available for hull artifacts of `n` slots (sorted).
+    pub fn hull_batches(&self, n: usize) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .entries
+            .values()
+            .filter(|m| m.kind == ArtifactKind::Hull && m.n == n)
+            .map(|m| m.batch)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Pick the hull artifact for `m` live points at batch `b`:
+    /// smallest size class with n >= max(m, 2), exact batch match required.
+    pub fn select_hull(&self, m: usize, b: usize) -> Result<&ArtifactMeta> {
+        let n = self
+            .hull_size_classes()
+            .into_iter()
+            .find(|&n| n >= m.max(2))
+            .ok_or_else(|| anyhow!("no hull artifact can hold {m} points"))?;
+        self.entries
+            .values()
+            .find(|meta| meta.kind == ArtifactKind::Hull && meta.n == n && meta.batch == b)
+            .ok_or_else(|| anyhow!("no hull artifact for n={n} batch={b}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "hull_n64_b1": {"file": "hull_n64_b1.hlo.txt", "kind": "hull",
+        "n": 64, "batch": 1, "outputs": 2, "input_shape": [1, 64, 2]},
+      "hull_n64_b8": {"file": "hull_n64_b8.hlo.txt", "kind": "hull",
+        "n": 64, "batch": 8, "outputs": 2, "input_shape": [8, 64, 2]},
+      "hull_n256_b1": {"file": "hull_n256_b1.hlo.txt", "kind": "hull",
+        "n": 256, "batch": 1, "outputs": 2, "input_shape": [1, 256, 2]},
+      "hood_n64": {"file": "hood_n64.hlo.txt", "kind": "hood",
+        "n": 64, "batch": 0, "outputs": 1, "input_shape": [64, 2]}
+    }"#;
+
+    fn reg() -> ArtifactRegistry {
+        ArtifactRegistry::from_manifest_json(PathBuf::from("/x"), SAMPLE).unwrap()
+    }
+
+    #[test]
+    fn parses_entries() {
+        let r = reg();
+        let m = r.get("hull_n64_b8").unwrap();
+        assert_eq!(m.kind, ArtifactKind::Hull);
+        assert_eq!((m.n, m.batch, m.outputs), (64, 8, 2));
+        assert_eq!(m.input_shape, vec![8, 64, 2]);
+        assert_eq!(m.path, PathBuf::from("/x/hull_n64_b8.hlo.txt"));
+    }
+
+    #[test]
+    fn size_classes_and_selection() {
+        let r = reg();
+        assert_eq!(r.hull_size_classes(), vec![64, 256]);
+        assert_eq!(r.hull_batches(64), vec![1, 8]);
+        assert_eq!(r.select_hull(10, 1).unwrap().name, "hull_n64_b1");
+        assert_eq!(r.select_hull(64, 8).unwrap().name, "hull_n64_b8");
+        assert_eq!(r.select_hull(65, 1).unwrap().name, "hull_n256_b1");
+        assert!(r.select_hull(257, 1).is_err());
+        assert!(r.select_hull(64, 3).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        for bad in [
+            "{}",
+            r#"{"a": {"file": "f", "kind": "hull"}}"#,
+            r#"{"a": {"file": "f", "kind": "mystery", "n": 1, "batch": 0,
+                 "outputs": 1, "input_shape": []}}"#,
+            "[1,2]",
+        ] {
+            assert!(
+                ArtifactRegistry::from_manifest_json(PathBuf::from("/x"), bad).is_err(),
+                "{bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        // integration sanity: only runs when `make artifacts` has been run
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            let r = ArtifactRegistry::load(dir).unwrap();
+            assert!(r.hull_size_classes().contains(&256));
+            for m in r.iter() {
+                assert!(m.path.exists(), "{} missing", m.path.display());
+            }
+        }
+    }
+}

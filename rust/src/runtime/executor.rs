@@ -1,0 +1,228 @@
+//! PJRT executor: compile-once / execute-many wrapper over the `xla` crate.
+//!
+//! Pattern from /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` (HLO *text*: xla_extension 0.5.1
+//! rejects jax ≥ 0.5 serialized protos) → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.
+//!
+//! The executor is deliberately **not** Send: PJRT handles live on the
+//! backend thread that created them; the coordinator routes work to that
+//! thread over channels (see coordinator::backend).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifacts::{ArtifactKind, ArtifactMeta, ArtifactRegistry};
+use crate::geometry::point::{live_prefix, Point, REMOTE};
+
+/// Cumulative execution statistics (scraped by coordinator metrics).
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub requests: u64,
+    pub compile_ns: u64,
+    pub execute_ns: u64,
+}
+
+/// Compile-cache + execution front-end for hull/hood artifacts.
+pub struct HullExecutor {
+    registry: ArtifactRegistry,
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl HullExecutor {
+    /// Create a CPU PJRT client over the given artifact registry.
+    pub fn new(registry: ArtifactRegistry) -> Result<HullExecutor> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(HullExecutor {
+            registry,
+            client,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let meta = self
+            .registry
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&meta.path)
+            .with_context(|| format!("parsing HLO text {}", meta.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let mut stats = self.stats.borrow_mut();
+        stats.compiles += 1;
+        stats.compile_ns += t0.elapsed().as_nanos() as u64;
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Compile every artifact up front (server warm start).
+    pub fn preload_all(&self) -> Result<()> {
+        let names: Vec<String> = self.registry.iter().map(|m| m.name.clone()).collect();
+        for name in names {
+            self.ensure_compiled(&name)?;
+        }
+        Ok(())
+    }
+
+    /// Flatten and REMOTE-pad request point sets into an f32 literal of
+    /// shape [b, n, 2].
+    fn batch_literal(meta: &ArtifactMeta, batch: &[Vec<Point>]) -> Result<xla::Literal> {
+        let (b, n) = (meta.batch.max(1), meta.n);
+        if batch.len() > b {
+            bail!("batch of {} > artifact batch {}", batch.len(), b);
+        }
+        let mut flat = Vec::with_capacity(b * n * 2);
+        for req in batch {
+            if req.len() > n {
+                bail!("request of {} points > artifact n {}", req.len(), n);
+            }
+            for p in req {
+                let (x, y) = p.to_f32_pair();
+                flat.push(x);
+                flat.push(y);
+            }
+            for _ in req.len()..n {
+                flat.push(REMOTE.x as f32);
+                flat.push(REMOTE.y as f32);
+            }
+        }
+        // pad unused batch rows with fully-REMOTE requests
+        flat.resize(b * n * 2, 0.0);
+        for row in batch.len()..b {
+            for s in 0..n {
+                flat[(row * n + s) * 2] = REMOTE.x as f32;
+                flat[(row * n + s) * 2 + 1] = REMOTE.y as f32;
+            }
+        }
+        let lit = xla::Literal::vec1(&flat);
+        Ok(if meta.batch == 0 {
+            lit.reshape(&[n as i64, 2])?
+        } else {
+            lit.reshape(&[b as i64, n as i64, 2])?
+        })
+    }
+
+    fn literal_to_hoods(lit: &xla::Literal, b: usize, n: usize) -> Result<Vec<Vec<Point>>> {
+        let flat = lit.to_vec::<f32>()?;
+        if flat.len() != b * n * 2 {
+            bail!("unexpected output size {} != {}", flat.len(), b * n * 2);
+        }
+        Ok((0..b)
+            .map(|row| {
+                (0..n)
+                    .map(|s| {
+                        Point::from_f32_pair(flat[(row * n + s) * 2], flat[(row * n + s) * 2 + 1])
+                    })
+                    .collect()
+            })
+            .collect())
+    }
+
+    /// Execute a batched full-hull artifact over up to `meta.batch`
+    /// requests; returns per-request (upper, lower) hull corners.
+    pub fn run_hull(
+        &self,
+        meta: &ArtifactMeta,
+        batch: &[Vec<Point>],
+    ) -> Result<Vec<(Vec<Point>, Vec<Point>)>> {
+        if meta.kind != ArtifactKind::Hull {
+            bail!("{} is not a hull artifact", meta.name);
+        }
+        self.ensure_compiled(&meta.name)?;
+        let input = Self::batch_literal(meta, batch)?;
+        let t0 = Instant::now();
+        let cache = self.cache.borrow();
+        let exe = cache.get(&meta.name).unwrap();
+        let result = exe.execute::<xla::Literal>(&[input])?[0][0].to_literal_sync()?;
+        let (up_lit, lo_lit) = result.to_tuple2()?;
+        {
+            let mut stats = self.stats.borrow_mut();
+            stats.executions += 1;
+            stats.requests += batch.len() as u64;
+            stats.execute_ns += t0.elapsed().as_nanos() as u64;
+        }
+        let b = meta.batch.max(1);
+        let ups = Self::literal_to_hoods(&up_lit, b, meta.n)?;
+        let los = Self::literal_to_hoods(&lo_lit, b, meta.n)?;
+        Ok(ups
+            .into_iter()
+            .zip(los)
+            .take(batch.len())
+            .map(|(u, l)| {
+                (
+                    live_prefix(&u).to_vec(),
+                    live_prefix(&l).to_vec(),
+                )
+            })
+            .collect())
+    }
+
+    /// Execute an unbatched hood artifact (upper hull only).
+    pub fn run_hood(&self, meta: &ArtifactMeta, points: &[Point]) -> Result<Vec<Point>> {
+        if meta.batch != 0 {
+            bail!("{} is not an unbatched hood artifact", meta.name);
+        }
+        self.ensure_compiled(&meta.name)?;
+        let input = Self::batch_literal(meta, std::slice::from_ref(&points.to_vec()))?;
+        let t0 = Instant::now();
+        let cache = self.cache.borrow();
+        let exe = cache.get(&meta.name).unwrap();
+        let result = exe.execute::<xla::Literal>(&[input])?[0][0].to_literal_sync()?;
+        let hood = result.to_tuple1()?;
+        {
+            let mut stats = self.stats.borrow_mut();
+            stats.executions += 1;
+            stats.requests += 1;
+            stats.execute_ns += t0.elapsed().as_nanos() as u64;
+        }
+        let rows = Self::literal_to_hoods(&hood, 1, meta.n)?;
+        Ok(live_prefix(&rows[0]).to_vec())
+    }
+
+    /// Convenience: route m-point requests to the right artifact and run.
+    pub fn hull_auto(
+        &self,
+        batch: &[Vec<Point>],
+    ) -> Result<Vec<(Vec<Point>, Vec<Point>)>> {
+        let m = batch.iter().map(Vec::len).max().unwrap_or(0);
+        // prefer an exact-batch artifact, else the batch-capable one
+        let b = *self
+            .registry
+            .hull_batches(self.registry.select_hull(m, 1).map(|a| a.n).unwrap_or(0))
+            .iter()
+            .filter(|&&cap| cap >= batch.len())
+            .min()
+            .ok_or_else(|| anyhow!("no artifact batch >= {}", batch.len()))?;
+        let meta = self.registry.select_hull(m, b)?.clone();
+        self.run_hull(&meta, batch)
+    }
+}

@@ -1,0 +1,10 @@
+//! L3↔L2 bridge: load AOT-compiled HLO artifacts and execute them on the
+//! PJRT CPU client from the request hot path.  Python never runs here —
+//! the artifacts under `artifacts/` were produced once by
+//! `python -m compile.aot` (see Makefile target `artifacts`).
+
+pub mod artifacts;
+pub mod executor;
+
+pub use artifacts::{ArtifactKind, ArtifactMeta, ArtifactRegistry};
+pub use executor::{HullExecutor, RuntimeStats};

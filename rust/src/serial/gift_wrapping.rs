@@ -1,0 +1,53 @@
+//! Gift wrapping (Jarvis march) restricted to the upper chain — O(n·h)
+//! baseline; the output-sensitive point of comparison for E4.
+
+use crate::geometry::point::Point;
+use crate::geometry::predicates::{orient2d, Orientation};
+
+/// Upper hull of x-sorted, distinct-x points by repeated tangent-finding.
+pub fn upper_hull(points: &[Point]) -> Vec<Point> {
+    let n = points.len();
+    if n <= 2 {
+        return points.to_vec();
+    }
+    let mut hull = vec![points[0]];
+    let mut cur = 0usize;
+    while cur != n - 1 {
+        // the next corner is the point all others lie right of (below)
+        let mut cand = n - 1;
+        for i in (cur + 1)..n - 1 {
+            if orient2d(points[cur], points[cand], points[i]) == Orientation::Left {
+                cand = i;
+            }
+        }
+        hull.push(points[cand]);
+        cur = cand;
+    }
+    hull
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::generators::{generate, Distribution};
+    use crate::serial::monotone_chain;
+
+    #[test]
+    fn matches_monotone_chain() {
+        for dist in Distribution::ALL {
+            let pts = generate(dist, 96, 11);
+            assert_eq!(
+                upper_hull(&pts),
+                monotone_chain::upper_hull(&pts),
+                "{}",
+                dist.name()
+            );
+        }
+    }
+
+    #[test]
+    fn two_points() {
+        let pts = vec![Point::new(0.0, 0.0), Point::new(1.0, 1.0)];
+        assert_eq!(upper_hull(&pts), pts);
+    }
+}

@@ -1,0 +1,125 @@
+//! Graham scan (full hull via polar sort around the bottom-most point).
+//! Secondary serial baseline for E4; also handles unsorted input.
+
+use crate::geometry::point::Point;
+use crate::geometry::predicates::{orient2d, orient2d_value, Orientation};
+
+/// Full convex hull, CCW order starting at the bottom-most (then leftmost)
+/// point.  Handles arbitrary (unsorted) input; collinear points dropped.
+pub fn convex_hull(points: &[Point]) -> Vec<Point> {
+    let n = points.len();
+    if n <= 2 {
+        let mut v = points.to_vec();
+        v.dedup_by(|a, b| a == b);
+        return v;
+    }
+    let pivot = *points
+        .iter()
+        .min_by(|a, b| {
+            a.y.partial_cmp(&b.y)
+                .unwrap()
+                .then(a.x.partial_cmp(&b.x).unwrap())
+        })
+        .unwrap();
+
+    let mut rest: Vec<Point> = points.iter().copied().filter(|&p| p != pivot).collect();
+    // polar sort around pivot; ties (collinear with pivot) by distance
+    rest.sort_by(|&a, &b| {
+        match orient2d(pivot, a, b) {
+            Orientation::Left => std::cmp::Ordering::Less,
+            Orientation::Right => std::cmp::Ordering::Greater,
+            Orientation::Straight => {
+                let da = (a.x - pivot.x).abs() + (a.y - pivot.y).abs();
+                let db = (b.x - pivot.x).abs() + (b.y - pivot.y).abs();
+                da.partial_cmp(&db).unwrap()
+            }
+        }
+    });
+
+    let mut stack = vec![pivot];
+    for p in rest {
+        while stack.len() >= 2
+            && orient2d_value(stack[stack.len() - 2], stack[stack.len() - 1], p) <= 0.0
+        {
+            stack.pop();
+        }
+        stack.push(p);
+    }
+    stack
+}
+
+/// Extract the upper chain (left-to-right) from a CCW hull polygon, for
+/// comparison against the hood pipelines.
+pub fn upper_chain(hull_ccw: &[Point]) -> Vec<Point> {
+    if hull_ccw.len() <= 2 {
+        let mut v = hull_ccw.to_vec();
+        v.sort_by(|a, b| a.x.partial_cmp(&b.x).unwrap());
+        return v;
+    }
+    let leftmost = (0..hull_ccw.len())
+        .min_by(|&i, &j| {
+            let (a, b) = (hull_ccw[i], hull_ccw[j]);
+            a.x.partial_cmp(&b.x).unwrap().then(b.y.partial_cmp(&a.y).unwrap())
+        })
+        .unwrap();
+    let rightmost = (0..hull_ccw.len())
+        .max_by(|&i, &j| {
+            let (a, b) = (hull_ccw[i], hull_ccw[j]);
+            a.x.partial_cmp(&b.x).unwrap().then(b.y.partial_cmp(&a.y).unwrap())
+        })
+        .unwrap();
+    // CCW polygon: walk from rightmost to leftmost gives the upper chain
+    let mut chain = Vec::new();
+    let n = hull_ccw.len();
+    let mut i = rightmost;
+    loop {
+        chain.push(hull_ccw[i]);
+        if i == leftmost {
+            break;
+        }
+        i = (i + 1) % n;
+    }
+    chain.reverse();
+    chain
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::generators::{generate, Distribution};
+    use crate::serial::monotone_chain;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn square_hull() {
+        let pts: Vec<Point> = [(0., 0.), (1., 0.), (1., 1.), (0., 1.), (0.5, 0.5)]
+            .iter()
+            .map(|&(x, y)| Point::new(x, y))
+            .collect();
+        let hull = convex_hull(&pts);
+        assert_eq!(hull.len(), 4);
+        assert!(!hull.contains(&Point::new(0.5, 0.5)));
+    }
+
+    #[test]
+    fn upper_chain_matches_monotone_chain() {
+        for dist in Distribution::ALL {
+            let pts = generate(dist, 64, 5);
+            let hull = convex_hull(&pts);
+            let upper = upper_chain(&hull);
+            let want = monotone_chain::upper_hull(&pts);
+            assert_eq!(upper, want, "{}", dist.name());
+        }
+    }
+
+    #[test]
+    fn unsorted_input_ok() {
+        let mut rng = Rng::new(4);
+        let mut pts = generate(Distribution::Disk, 100, 8);
+        rng.shuffle(&mut pts);
+        let hull = convex_hull(&pts);
+        let mut sorted = pts.clone();
+        crate::geometry::point::sort_by_x(&mut sorted);
+        assert_eq!(upper_chain(&hull), monotone_chain::upper_hull(&sorted));
+    }
+}

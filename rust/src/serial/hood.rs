@@ -1,0 +1,113 @@
+//! Hood-array utilities and the per-stage serial oracle.
+//!
+//! A *hood array* is the paper's central data structure (Figure 1): n
+//! slots split into blocks of d, each block holding the upper-hull corners
+//! of its d input points, left-justified and REMOTE-padded.
+
+use crate::geometry::point::{live_prefix, Point, REMOTE};
+use crate::serial::monotone_chain;
+
+/// Check the paper's block invariant INV(d): every d-block is a valid
+/// hood (live prefix strictly x-increasing, convex, then REMOTE).
+pub fn check_block_invariant(hood: &[Point], d: usize) -> Result<(), String> {
+    use crate::geometry::predicates::{orient2d, Orientation};
+    if hood.len() % d != 0 {
+        return Err(format!("hood len {} not a multiple of d={d}", hood.len()));
+    }
+    for (b, blk) in hood.chunks(d).enumerate() {
+        let live = live_prefix(blk);
+        for (i, p) in blk.iter().enumerate() {
+            if i < live.len() && !p.is_live() {
+                return Err(format!("block {b}: dead slot {i} inside live prefix"));
+            }
+            if i >= live.len() && p.is_live() {
+                return Err(format!("block {b}: live slot {i} after dead slot"));
+            }
+        }
+        for w in live.windows(2) {
+            if w[0].x >= w[1].x {
+                return Err(format!("block {b}: x-order violated"));
+            }
+        }
+        for w in live.windows(3) {
+            if orient2d(w[0], w[2], w[1]) != Orientation::Left {
+                return Err(format!("block {b}: not strictly convex"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Serial oracle for one merge stage (ref_stage in the python twin):
+/// recompute each 2d-block's hood from its live corners by monotone chain.
+pub fn oracle_stage(hood: &[Point], d: usize) -> Vec<Point> {
+    assert_eq!(hood.len() % (2 * d), 0);
+    let mut out = Vec::with_capacity(hood.len());
+    for blk in hood.chunks(2 * d) {
+        // live corners sit in the live prefixes of the two d-halves (not
+        // one contiguous prefix of the 2d block); both are x-sorted and
+        // P's x-range precedes Q's, so a flat filter stays sorted.
+        let live: Vec<Point> = blk.iter().copied().filter(|p| p.is_live()).collect();
+        let merged = monotone_chain::upper_hull(&live);
+        out.extend_from_slice(&merged);
+        out.resize(out.len() + 2 * d - merged.len(), REMOTE);
+    }
+    out
+}
+
+/// Hood of the whole array (n-slot block) via the serial baseline.
+pub fn oracle_hood(points: &[Point], slots: usize) -> Vec<Point> {
+    let hull = monotone_chain::upper_hull(points);
+    let mut out = hull;
+    assert!(out.len() <= slots);
+    out.resize(slots, REMOTE);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::generators::{generate, Distribution};
+    use crate::geometry::point::pad_to_hood;
+
+    #[test]
+    fn oracle_stage_preserves_invariant() {
+        let pts = generate(Distribution::UniformSquare, 64, 21);
+        let mut hood = pad_to_hood(&pts, 64);
+        let mut d = 2;
+        while d < 64 {
+            hood = oracle_stage(&hood, d);
+            check_block_invariant(&hood, 2 * d).unwrap();
+            d *= 2;
+        }
+        let live = live_prefix(&hood).to_vec();
+        assert_eq!(live, monotone_chain::upper_hull(&pts));
+    }
+
+    #[test]
+    fn invariant_rejects_bad_blocks() {
+        // live after dead
+        let hood = vec![REMOTE, Point::new(0.5, 0.5)];
+        assert!(check_block_invariant(&hood, 2).is_err());
+        // x-order violated
+        let hood = vec![Point::new(0.5, 0.5), Point::new(0.2, 0.2)];
+        assert!(check_block_invariant(&hood, 2).is_err());
+        // concave triple
+        let hood = vec![
+            Point::new(0.1, 0.5),
+            Point::new(0.5, 0.1),
+            Point::new(0.9, 0.5),
+            REMOTE,
+        ];
+        assert!(check_block_invariant(&hood, 4).is_err());
+    }
+
+    #[test]
+    fn invariant_accepts_oracle_blocks() {
+        let pts = generate(Distribution::Circle, 32, 2);
+        let hood = pad_to_hood(&pts, 32);
+        check_block_invariant(&hood, 1).unwrap();
+        let out = oracle_stage(&hood, 1);
+        check_block_invariant(&out, 2).unwrap();
+    }
+}

@@ -1,0 +1,11 @@
+//! Serial hull baselines — the "another serial program (not described
+//! here)" the paper compares against in its Conclusions, plus classic
+//! alternatives so E4 can show where each baseline sits.
+
+pub mod gift_wrapping;
+pub mod graham;
+pub mod hood;
+pub mod monotone_chain;
+pub mod quickhull;
+
+pub use monotone_chain::{full_hull, lower_hull, upper_hull};

@@ -1,0 +1,114 @@
+//! Andrew's monotone chain — the canonical O(n) serial hull for x-sorted
+//! input and the primary baseline for experiment E4.
+
+use crate::geometry::point::Point;
+use crate::geometry::predicates::{orient2d, Orientation};
+
+/// Upper hull of x-sorted, distinct-x points (strict turns: collinear
+/// middle points are dropped, matching the Wagener pipeline's output under
+/// the paper's general-position assumption).
+pub fn upper_hull(points: &[Point]) -> Vec<Point> {
+    hull_half(points, Orientation::Left)
+}
+
+/// Lower hull of x-sorted, distinct-x points.
+pub fn lower_hull(points: &[Point]) -> Vec<Point> {
+    hull_half(points, Orientation::Right)
+}
+
+fn hull_half(points: &[Point], keep: Orientation) -> Vec<Point> {
+    let mut stack: Vec<Point> = Vec::with_capacity(16);
+    for &p in points {
+        while stack.len() >= 2
+            && orient2d(stack[stack.len() - 2], p, stack[stack.len() - 1]) != keep
+        {
+            stack.pop();
+        }
+        stack.push(p);
+    }
+    stack
+}
+
+/// Full convex hull as (upper, lower) chains, both left-to-right.
+pub fn full_hull(points: &[Point]) -> (Vec<Point>, Vec<Point>) {
+    (upper_hull(points), lower_hull(points))
+}
+
+/// Closed CCW boundary from the two chains (shared extremes deduplicated).
+pub fn closed_boundary(upper: &[Point], lower: &[Point]) -> Vec<Point> {
+    let mut poly: Vec<Point> = lower.to_vec();
+    for &p in upper.iter().rev().skip(1) {
+        if poly.first() != Some(&p) {
+            poly.push(p);
+        }
+    }
+    poly
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::generators::{generate, Distribution};
+    use crate::geometry::hull_check::{brute_force_upper_hull, check_upper_hull, polygon_area2};
+
+    #[test]
+    fn simple_peak() {
+        let pts: Vec<Point> = [(0.0, 0.0), (0.3, 0.8), (0.6, 0.2), (1.0, 0.4)]
+            .iter()
+            .map(|&(x, y)| Point::new(x, y))
+            .collect();
+        assert_eq!(
+            upper_hull(&pts),
+            vec![pts[0], pts[1], pts[3]],
+        );
+        assert_eq!(lower_hull(&pts), vec![pts[0], pts[2], pts[3]]);
+    }
+
+    #[test]
+    fn matches_brute_force_on_all_distributions() {
+        for dist in Distribution::ALL {
+            for seed in 0..5 {
+                let pts = generate(dist, 40, seed);
+                let got = upper_hull(&pts);
+                check_upper_hull(&pts, &got).unwrap_or_else(|e| {
+                    panic!("{} seed {seed}: {e}", dist.name())
+                });
+                let want = brute_force_upper_hull(&pts);
+                assert_eq!(got, want, "{} seed {seed}", dist.name());
+            }
+        }
+    }
+
+    #[test]
+    fn hull_of_small_inputs() {
+        let p = Point::new(0.5, 0.5);
+        assert_eq!(upper_hull(&[p]), vec![p]);
+        let q = Point::new(0.7, 0.1);
+        assert_eq!(upper_hull(&[p, q]), vec![p, q]);
+        assert_eq!(lower_hull(&[p, q]), vec![p, q]);
+    }
+
+    #[test]
+    fn closed_boundary_is_ccw_simple() {
+        let pts = generate(Distribution::Disk, 200, 9);
+        let (u, l) = full_hull(&pts);
+        let poly = closed_boundary(&u, &l);
+        assert!(polygon_area2(&poly) > 0.0);
+        // first/last extremes shared exactly once
+        assert_eq!(poly.iter().filter(|&&p| p == u[0]).count(), 1);
+        let right = *u.last().unwrap();
+        assert_eq!(poly.iter().filter(|&&p| p == right).count(), 1);
+    }
+
+    #[test]
+    fn collinear_middles_dropped() {
+        // exactly-representable collinear triple
+        let pts = vec![
+            Point::new(0.0, 0.0),
+            Point::new(0.25, 0.25),
+            Point::new(0.5, 0.5),
+        ];
+        assert_eq!(upper_hull(&pts), vec![pts[0], pts[2]]);
+        assert_eq!(lower_hull(&pts), vec![pts[0], pts[2]]);
+    }
+}

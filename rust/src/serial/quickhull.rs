@@ -1,0 +1,96 @@
+//! QuickHull (divide-and-conquer by farthest point) — expected O(n log n),
+//! worst-case O(n²); included as the "fast in practice" baseline for E4.
+
+use crate::geometry::point::Point;
+use crate::geometry::predicates::{orient2d_value, Orientation};
+
+/// Upper hull of x-sorted, distinct-x points.
+pub fn upper_hull(points: &[Point]) -> Vec<Point> {
+    if points.len() <= 2 {
+        return points.to_vec();
+    }
+    let a = points[0];
+    let b = *points.last().unwrap();
+    let mut out = vec![a];
+    recurse(points, a, b, &mut out);
+    out.push(b);
+    out
+}
+
+fn recurse(points: &[Point], a: Point, b: Point, out: &mut Vec<Point>) {
+    // farthest point strictly above chord a->b
+    let mut best: Option<(f64, Point)> = None;
+    for &p in points {
+        if p == a || p == b || p.x <= a.x || p.x >= b.x {
+            continue;
+        }
+        let v = orient2d_value(a, b, p);
+        if v > 0.0 {
+            match best {
+                Some((bv, _)) if bv >= v => {}
+                _ => best = Some((v, p)),
+            }
+        }
+    }
+    if let Some((_, m)) = best {
+        recurse(points, a, m, out);
+        out.push(m);
+        recurse(points, m, b, out);
+    }
+}
+
+/// Full hull (upper, lower) via y-negation.
+pub fn full_hull(points: &[Point]) -> (Vec<Point>, Vec<Point>) {
+    let upper = upper_hull(points);
+    let neg: Vec<Point> = points.iter().map(|p| Point::new(p.x, -p.y)).collect();
+    let lower = upper_hull(&neg)
+        .into_iter()
+        .map(|p| Point::new(p.x, -p.y))
+        .collect();
+    (upper, lower)
+}
+
+/// Note: `orient2d_value`'s sign is exact, so the farthest-point selection
+/// may differ from an exact-arithmetic QuickHull only between two points at
+/// nearly identical heights — which cannot change the final hull: the
+/// recursion keeps every point strictly above each chord.
+const _DOC: Orientation = Orientation::Left;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::generators::{generate, Distribution};
+    use crate::serial::monotone_chain;
+
+    #[test]
+    fn matches_monotone_chain() {
+        for dist in Distribution::ALL {
+            for seed in [1, 2] {
+                let pts = generate(dist, 128, seed);
+                assert_eq!(
+                    upper_hull(&pts),
+                    monotone_chain::upper_hull(&pts),
+                    "{} {seed}",
+                    dist.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn full_hull_matches() {
+        let pts = generate(Distribution::Disk, 200, 3);
+        let (u, l) = full_hull(&pts);
+        let (mu, ml) = monotone_chain::full_hull(&pts);
+        assert_eq!(u, mu);
+        assert_eq!(l, ml);
+    }
+
+    #[test]
+    fn tiny_inputs() {
+        let p = Point::new(0.1, 0.2);
+        let q = Point::new(0.9, 0.8);
+        assert_eq!(upper_hull(&[p]), vec![p]);
+        assert_eq!(upper_hull(&[p, q]), vec![p, q]);
+    }
+}

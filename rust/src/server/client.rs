@@ -1,0 +1,76 @@
+//! Blocking client for the hull service (examples, benches, tests, CLI).
+
+use std::io::{BufReader, BufWriter};
+use std::net::TcpStream;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::geometry::point::Point;
+
+use super::proto::{self, Request, Response};
+
+/// One connection to a hull server.
+pub struct HullClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    next_id: u64,
+}
+
+/// A hull result as seen by the client.
+#[derive(Clone, Debug)]
+pub struct ClientHull {
+    pub id: u64,
+    pub upper: Vec<Point>,
+    pub lower: Vec<Point>,
+    pub backend: String,
+    pub queue_ns: u64,
+    pub exec_ns: u64,
+}
+
+impl HullClient {
+    pub fn connect(addr: impl std::net::ToSocketAddrs) -> Result<HullClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(HullClient { reader, writer: BufWriter::new(stream), next_id: 1 })
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        proto::write_request(&mut self.writer, &Request::Ping)?;
+        match proto::read_response(&mut self.reader).map_err(|e| anyhow!("{e}"))? {
+            Response::Pong => Ok(()),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+
+    /// Request the hull of `points`; blocks for the response.
+    pub fn hull(&mut self, points: &[Point]) -> Result<ClientHull> {
+        let id = self.next_id;
+        self.next_id += 1;
+        proto::write_request(
+            &mut self.writer,
+            &Request::Hull { id, points: points.to_vec() },
+        )?;
+        match proto::read_response(&mut self.reader).map_err(|e| anyhow!("{e}"))? {
+            Response::Hull { id, upper, lower, backend, queue_ns, exec_ns } => {
+                Ok(ClientHull { id, upper, lower, backend, queue_ns, exec_ns })
+            }
+            Response::HullErr { message, .. } => bail!("server: {message}"),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+
+    /// Fetch the metrics snapshot (raw JSON string).
+    pub fn stats(&mut self) -> Result<String> {
+        proto::write_request(&mut self.writer, &Request::Stats)?;
+        match proto::read_response(&mut self.reader).map_err(|e| anyhow!("{e}"))? {
+            Response::Stats(s) => Ok(s),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+
+    pub fn quit(mut self) -> Result<()> {
+        proto::write_request(&mut self.writer, &Request::Quit)?;
+        Ok(())
+    }
+}

@@ -1,0 +1,11 @@
+//! Network front-end: a line-oriented text protocol over TCP (the paper's
+//! own file format extended with framing), a threaded server, and a
+//! blocking client used by the examples, benches and integration tests.
+
+pub mod client;
+pub mod proto;
+pub mod tcp;
+
+pub use client::HullClient;
+pub use proto::{Request, Response};
+pub use tcp::{serve, ServerConfig, ServerHandle};

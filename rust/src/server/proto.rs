@@ -1,0 +1,290 @@
+//! Wire protocol: line-oriented text, extending the paper's point-file
+//! format ("count, then `x y` lines") with request framing.
+//!
+//! ```text
+//! client -> server
+//!   HULL <id> <m>\n  then m lines "x y"     full hull request
+//!   STATS\n                                 metrics snapshot (JSON line)
+//!   PING\n                                  liveness
+//!   QUIT\n                                  close connection
+//!
+//! server -> client
+//!   HULL <id> OK <k_up> <k_lo> <backend> <queue_ns> <exec_ns>\n
+//!     then k_up lines, then k_lo lines, then END\n
+//!   HULL <id> ERR <message...>\n
+//!   STATS <json>\n       PONG\n
+//! ```
+
+use std::io::{BufRead, Write};
+
+use crate::geometry::point::Point;
+
+/// A parsed client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Hull { id: u64, points: Vec<Point> },
+    Stats,
+    Ping,
+    Quit,
+}
+
+/// A server reply (structured; formatting lives in write_response).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Hull {
+        id: u64,
+        upper: Vec<Point>,
+        lower: Vec<Point>,
+        backend: String,
+        queue_ns: u64,
+        exec_ns: u64,
+    },
+    HullErr { id: u64, message: String },
+    Stats(String),
+    Pong,
+}
+
+/// Protocol violations (distinct from request-level errors).
+#[derive(Debug, PartialEq)]
+pub enum ProtoError {
+    Eof,
+    Malformed(String),
+    TooManyPoints(usize),
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::Eof => write!(f, "connection closed"),
+            ProtoError::Malformed(s) => write!(f, "malformed request: {s}"),
+            ProtoError::TooManyPoints(m) => write!(f, "request of {m} points over limit"),
+        }
+    }
+}
+
+/// Hard cap on request size (DoS guard; far above the largest artifact).
+pub const MAX_REQUEST_POINTS: usize = 1 << 22;
+
+fn read_line<R: BufRead>(r: &mut R) -> Result<String, ProtoError> {
+    let mut line = String::new();
+    let n = r
+        .read_line(&mut line)
+        .map_err(|e| ProtoError::Malformed(e.to_string()))?;
+    if n == 0 {
+        return Err(ProtoError::Eof);
+    }
+    Ok(line.trim_end().to_string())
+}
+
+/// Read one request off the stream.
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<Request, ProtoError> {
+    let line = read_line(r)?;
+    let mut it = line.split_whitespace();
+    match it.next() {
+        Some("HULL") => {
+            let id: u64 = it
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| ProtoError::Malformed("HULL needs <id> <m>".into()))?;
+            let m: usize = it
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| ProtoError::Malformed("HULL needs <id> <m>".into()))?;
+            if m > MAX_REQUEST_POINTS {
+                return Err(ProtoError::TooManyPoints(m));
+            }
+            let mut points = Vec::with_capacity(m);
+            for k in 0..m {
+                let pl = read_line(r)?;
+                let mut c = pl.split_whitespace();
+                let (x, y) = match (c.next(), c.next()) {
+                    (Some(a), Some(b)) => (
+                        a.parse::<f64>()
+                            .map_err(|_| ProtoError::Malformed(format!("point {k}: {pl:?}")))?,
+                        b.parse::<f64>()
+                            .map_err(|_| ProtoError::Malformed(format!("point {k}: {pl:?}")))?,
+                    ),
+                    _ => return Err(ProtoError::Malformed(format!("point {k}: {pl:?}"))),
+                };
+                points.push(Point::new(x, y));
+            }
+            Ok(Request::Hull { id, points })
+        }
+        Some("STATS") => Ok(Request::Stats),
+        Some("PING") => Ok(Request::Ping),
+        Some("QUIT") => Ok(Request::Quit),
+        other => Err(ProtoError::Malformed(format!("unknown command {other:?}"))),
+    }
+}
+
+/// Serialize a request (client side).
+pub fn write_request<W: Write>(w: &mut W, req: &Request) -> std::io::Result<()> {
+    match req {
+        Request::Hull { id, points } => {
+            writeln!(w, "HULL {id} {}", points.len())?;
+            for p in points {
+                writeln!(w, "{} {}", p.x, p.y)?;
+            }
+        }
+        Request::Stats => writeln!(w, "STATS")?,
+        Request::Ping => writeln!(w, "PING")?,
+        Request::Quit => writeln!(w, "QUIT")?,
+    }
+    w.flush()
+}
+
+/// Serialize a response (server side).
+pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> std::io::Result<()> {
+    match resp {
+        Response::Hull { id, upper, lower, backend, queue_ns, exec_ns } => {
+            writeln!(
+                w,
+                "HULL {id} OK {} {} {backend} {queue_ns} {exec_ns}",
+                upper.len(),
+                lower.len()
+            )?;
+            for p in upper.iter().chain(lower.iter()) {
+                writeln!(w, "{} {}", p.x, p.y)?;
+            }
+            writeln!(w, "END")?;
+        }
+        Response::HullErr { id, message } => {
+            writeln!(w, "HULL {id} ERR {message}")?;
+        }
+        Response::Stats(json) => writeln!(w, "STATS {json}")?,
+        Response::Pong => writeln!(w, "PONG")?,
+    }
+    w.flush()
+}
+
+/// Read one response off the stream (client side).
+pub fn read_response<R: BufRead>(r: &mut R) -> Result<Response, ProtoError> {
+    let line = read_line(r)?;
+    if let Some(rest) = line.strip_prefix("STATS ") {
+        return Ok(Response::Stats(rest.to_string()));
+    }
+    if line == "PONG" {
+        return Ok(Response::Pong);
+    }
+    let mut it = line.split_whitespace();
+    if it.next() != Some("HULL") {
+        return Err(ProtoError::Malformed(line));
+    }
+    let id: u64 = it
+        .next()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| ProtoError::Malformed(line.clone()))?;
+    match it.next() {
+        Some("OK") => {
+            let k_up: usize = it
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| ProtoError::Malformed(line.clone()))?;
+            let k_lo: usize = it
+                .next()
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| ProtoError::Malformed(line.clone()))?;
+            let backend = it.next().unwrap_or("?").to_string();
+            let queue_ns: u64 = it.next().and_then(|s| s.parse().ok()).unwrap_or(0);
+            let exec_ns: u64 = it.next().and_then(|s| s.parse().ok()).unwrap_or(0);
+            let mut pts = Vec::with_capacity(k_up + k_lo);
+            for _ in 0..k_up + k_lo {
+                let pl = read_line(r)?;
+                let mut c = pl.split_whitespace();
+                let x: f64 = c
+                    .next()
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| ProtoError::Malformed(pl.clone()))?;
+                let y: f64 = c
+                    .next()
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| ProtoError::Malformed(pl.clone()))?;
+                pts.push(Point::new(x, y));
+            }
+            let end = read_line(r)?;
+            if end != "END" {
+                return Err(ProtoError::Malformed(format!("expected END, got {end:?}")));
+            }
+            let lower = pts.split_off(k_up);
+            Ok(Response::Hull { id, upper: pts, lower, backend, queue_ns, exec_ns })
+        }
+        Some("ERR") => {
+            let msg: Vec<&str> = it.collect();
+            Ok(Response::HullErr { id, message: msg.join(" ") })
+        }
+        _ => Err(ProtoError::Malformed(line)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::BufReader;
+
+    fn roundtrip_req(req: Request) -> Request {
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req).unwrap();
+        read_request(&mut BufReader::new(&buf[..])).unwrap()
+    }
+
+    fn roundtrip_resp(resp: Response) -> Response {
+        let mut buf = Vec::new();
+        write_response(&mut buf, &resp).unwrap();
+        read_response(&mut BufReader::new(&buf[..])).unwrap()
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        let req = Request::Hull {
+            id: 42,
+            points: vec![Point::new(0.125, 0.25), Point::new(0.5, 0.75)],
+        };
+        assert_eq!(roundtrip_req(req.clone()), req);
+        assert_eq!(roundtrip_req(Request::Stats), Request::Stats);
+        assert_eq!(roundtrip_req(Request::Ping), Request::Ping);
+        assert_eq!(roundtrip_req(Request::Quit), Request::Quit);
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        let resp = Response::Hull {
+            id: 7,
+            upper: vec![Point::new(0.0, 0.0), Point::new(1.0, 1.0)],
+            lower: vec![Point::new(0.0, 0.0), Point::new(0.5, 0.0), Point::new(1.0, 1.0)],
+            backend: "pjrt".into(),
+            queue_ns: 123,
+            exec_ns: 456,
+        };
+        assert_eq!(roundtrip_resp(resp.clone()), resp);
+        let err = Response::HullErr { id: 9, message: "empty point set".into() };
+        assert_eq!(roundtrip_resp(err.clone()), err);
+        assert_eq!(roundtrip_resp(Response::Pong), Response::Pong);
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        for bad in ["BOGUS\n", "HULL x y\n", "HULL 1 2\n0.5\n0.5 0.5\n", ""] {
+            let r = read_request(&mut BufReader::new(bad.as_bytes()));
+            assert!(r.is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn oversized_rejected() {
+        let line = format!("HULL 1 {}\n", MAX_REQUEST_POINTS + 1);
+        assert_eq!(
+            read_request(&mut BufReader::new(line.as_bytes())),
+            Err(ProtoError::TooManyPoints(MAX_REQUEST_POINTS + 1))
+        );
+    }
+
+    #[test]
+    fn f64_precision_survives() {
+        let p = Point::new(0.1234567890123, 0.000001);
+        let req = Request::Hull { id: 1, points: vec![p] };
+        match roundtrip_req(req) {
+            Request::Hull { points, .. } => assert_eq!(points[0], p),
+            _ => panic!(),
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Threaded TCP server: one accept loop, one handler thread per
+//! connection, all sharing the coordinator (thread-based substitute for
+//! the usual async runtime; connections are long-lived and few, work is
+//! CPU-bound, so thread-per-connection is the right shape here).
+
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::coordinator::{Coordinator, HullRequest};
+use crate::log_info;
+
+use super::proto::{self, ProtoError, Request, Response};
+
+/// Server knobs (config file: `[server]`).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// bind address, e.g. "127.0.0.1:7878"; port 0 picks a free port.
+    pub addr: String,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { addr: "127.0.0.1:7878".into() }
+    }
+}
+
+/// Handle to a running server (shutdown on drop).
+pub struct ServerHandle {
+    pub local_addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    pub connections: Arc<AtomicU64>,
+}
+
+impl ServerHandle {
+    pub fn stop(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // poke the accept loop awake
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+/// Start serving `coordinator` on `cfg.addr` (non-blocking; returns a
+/// handle).  The coordinator must outlive the handle (Arc).
+pub fn serve(coordinator: Arc<Coordinator>, cfg: &ServerConfig) -> std::io::Result<ServerHandle> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let local_addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let connections = Arc::new(AtomicU64::new(0));
+    log_info!("serving on {local_addr} (backend={})", coordinator.backend_name());
+
+    let stop2 = stop.clone();
+    let conns2 = connections.clone();
+    let accept_thread = std::thread::Builder::new()
+        .name("hull-accept".into())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                match stream {
+                    Ok(s) => {
+                        conns2.fetch_add(1, Ordering::Relaxed);
+                        let coord = coordinator.clone();
+                        let _ = std::thread::Builder::new()
+                            .name("hull-conn".into())
+                            .spawn(move || handle_connection(s, coord));
+                    }
+                    Err(e) => {
+                        log_info!("accept error: {e}");
+                    }
+                }
+            }
+        })?;
+
+    Ok(ServerHandle { local_addr, stop, accept_thread: Some(accept_thread), connections })
+}
+
+fn handle_connection(stream: TcpStream, coord: Arc<Coordinator>) {
+    let peer = stream.peer_addr().ok();
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let req = match proto::read_request(&mut reader) {
+            Ok(r) => r,
+            Err(ProtoError::Eof) => break,
+            Err(e) => {
+                let _ = proto::write_response(
+                    &mut writer,
+                    &Response::HullErr { id: 0, message: e.to_string() },
+                );
+                break;
+            }
+        };
+        match req {
+            Request::Quit => break,
+            Request::Ping => {
+                if proto::write_response(&mut writer, &Response::Pong).is_err() {
+                    break;
+                }
+            }
+            Request::Stats => {
+                let snap = coord.snapshot().0.to_string();
+                if proto::write_response(&mut writer, &Response::Stats(snap)).is_err() {
+                    break;
+                }
+            }
+            Request::Hull { id, points } => {
+                let reply = coord.submit(HullRequest { id, points });
+                let resp = match reply.recv() {
+                    Ok(Ok(h)) => Response::Hull {
+                        id,
+                        upper: h.upper,
+                        lower: h.lower,
+                        backend: h.backend.to_string(),
+                        queue_ns: h.queue_ns,
+                        exec_ns: h.exec_ns,
+                    },
+                    Ok(Err(e)) => Response::HullErr { id, message: e.to_string() },
+                    Err(_) => Response::HullErr { id, message: "coordinator gone".into() },
+                };
+                if proto::write_response(&mut writer, &resp).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+    let _ = peer;
+}

@@ -1,0 +1,137 @@
+//! Leveled stderr logger (substitute for `tracing`).
+//!
+//! Level comes from `WAGENER_LOG` (error|warn|info|debug|trace), default
+//! `info`.  Macros live at crate root: `log_info!`, `log_warn!`, ...
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+    fn from_str(s: &str) -> Option<Level> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => return None,
+        })
+    }
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialized
+
+fn init_from_env() -> u8 {
+    let lvl = std::env::var("WAGENER_LOG")
+        .ok()
+        .and_then(|s| Level::from_str(&s))
+        .unwrap_or(Level::Info) as u8;
+    MAX_LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+/// Current maximum enabled level.
+pub fn max_level() -> Level {
+    let raw = MAX_LEVEL.load(Ordering::Relaxed);
+    let raw = if raw == 255 { init_from_env() } else { raw };
+    match raw {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Override the level programmatically (tests, CLI flags).
+pub fn set_level(level: Level) {
+    MAX_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    level <= max_level()
+}
+
+/// Monotonic start-of-process instant for relative timestamps.
+pub fn start_instant() -> Instant {
+    use std::sync::OnceLock;
+    static START: OnceLock<Instant> = OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+/// Log a preformatted record (used by the macros).
+pub fn log_record(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let t = start_instant().elapsed();
+    eprintln!(
+        "[{:>9.4}s {:5} {}] {}",
+        t.as_secs_f64(),
+        level.name(),
+        target,
+        args
+    );
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)+) => { $crate::util::logging::log_record(
+        $crate::util::logging::Level::Error, module_path!(), format_args!($($arg)+)) };
+}
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)+) => { $crate::util::logging::log_record(
+        $crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)+)) };
+}
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)+) => { $crate::util::logging::log_record(
+        $crate::util::logging::Level::Info, module_path!(), format_args!($($arg)+)) };
+}
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)+) => { $crate::util::logging::log_record(
+        $crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)+)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Trace);
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(Level::Debug.name(), "DEBUG");
+        assert_eq!(Level::from_str("TRACE"), Some(Level::Trace));
+        assert_eq!(Level::from_str("bogus"), None);
+    }
+}

@@ -1,0 +1,12 @@
+//! In-tree substrates that a framework would normally pull from crates.io.
+//!
+//! This build environment vendors only the `xla` PJRT bindings and `anyhow`,
+//! so the usual ecosystem crates (rand, serde_json, toml, proptest, tracing)
+//! are re-implemented here as small, tested modules (DESIGN.md
+//! §Substitutions).  Each is scoped to exactly what this project needs.
+
+pub mod json;
+pub mod logging;
+pub mod property;
+pub mod rng;
+pub mod tomlmini;

@@ -1,0 +1,106 @@
+//! Randomized property-testing harness (substitute for `proptest`).
+//!
+//! No shrinking — instead every case is driven by a recorded seed, so a
+//! failure message pins the exact reproducer:
+//! `WAGENER_PROP_SEED=<seed> cargo test <name>` re-runs just that case.
+//! Case counts scale down under `cfg(debug_assertions)`-free CI via
+//! `WAGENER_PROP_CASES`.
+
+use super::rng::Rng;
+
+/// Number of cases to run: env override > explicit request.
+pub fn case_count(default_cases: usize) -> usize {
+    std::env::var("WAGENER_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default_cases)
+}
+
+/// Run `prop` over `cases` seeded RNGs; panic with the failing seed.
+///
+/// The property returns `Err(message)` (or panics) to signal failure.
+pub fn check<F>(name: &str, cases: usize, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    if let Ok(s) = std::env::var("WAGENER_PROP_SEED") {
+        let seed: u64 = s.parse().expect("WAGENER_PROP_SEED must be a u64");
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed under WAGENER_PROP_SEED={seed}: {msg}");
+        }
+        return;
+    }
+    // Base seed derives from the property name so distinct properties do not
+    // share case streams, but runs stay deterministic build-to-build.
+    let base = fnv1a(name.as_bytes());
+    for case in 0..case_count(cases) {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case}: {msg}\n\
+                 reproduce with: WAGENER_PROP_SEED={seed} cargo test"
+            );
+        }
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counter = std::cell::Cell::new(0);
+        check("count", 17, |_| {
+            counter.set(counter.get() + 1);
+            Ok(())
+        });
+        assert_eq!(counter.get(), case_count(17));
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-false", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn seeds_differ_between_cases() {
+        let seen = std::cell::RefCell::new(Vec::new());
+        check("seed-stream", 10, |rng| {
+            seen.borrow_mut().push(rng.next_u64());
+            Ok(())
+        });
+        let v = seen.borrow();
+        let mut uniq = v.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), v.len());
+    }
+}

@@ -1,0 +1,207 @@
+//! Minimal TOML subset parser for the launcher config (substitute for the
+//! `toml` crate).
+//!
+//! Supported grammar — everything `config.rs` needs and nothing more:
+//!   * `[section]` headers (one level),
+//!   * `key = value` with value ∈ {string "..", integer, float, bool},
+//!   * `#` comments and blank lines.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// section -> key -> value; keys outside any section land in section "".
+pub type Table = BTreeMap<String, BTreeMap<String, Value>>;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TomlError {
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+pub fn parse(input: &str) -> Result<Table, TomlError> {
+    let mut table = Table::new();
+    let mut section = String::new();
+    table.entry(section.clone()).or_default();
+    for (lineno, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |m: &str| TomlError {
+            line: lineno + 1,
+            message: m.to_string(),
+        };
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or_else(|| err("unclosed ']'"))?;
+            section = name.trim().to_string();
+            if section.is_empty() {
+                return Err(err("empty section name"));
+            }
+            table.entry(section.clone()).or_default();
+        } else if let Some((k, v)) = line.split_once('=') {
+            let key = k.trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let value = parse_value(v.trim()).map_err(|m| err(&m))?;
+            table
+                .get_mut(&section)
+                .unwrap()
+                .insert(key.to_string(), value);
+        } else {
+            return Err(err("expected 'key = value' or '[section]'"));
+        }
+    }
+    Ok(table)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        // basic escapes only
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    _ => return Err("bad escape".into()),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Value::Str(out));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+/// Convenience: fetch `section.key` with a typed accessor.
+pub fn get<'t>(table: &'t Table, section: &str, key: &str) -> Option<&'t Value> {
+    table.get(section).and_then(|s| s.get(key))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_config() {
+        let src = r#"
+# launcher config
+[server]
+addr = "127.0.0.1:7878"   # bind address
+workers = 4
+
+[batcher]
+max_batch = 8
+flush_us = 500
+enabled = true
+scale = 1.5
+"#;
+        let t = parse(src).unwrap();
+        assert_eq!(
+            get(&t, "server", "addr").unwrap().as_str(),
+            Some("127.0.0.1:7878")
+        );
+        assert_eq!(get(&t, "server", "workers").unwrap().as_int(), Some(4));
+        assert_eq!(get(&t, "batcher", "enabled").unwrap().as_bool(), Some(true));
+        assert_eq!(get(&t, "batcher", "scale").unwrap().as_float(), Some(1.5));
+        assert_eq!(get(&t, "batcher", "max_batch").unwrap().as_float(), Some(8.0));
+    }
+
+    #[test]
+    fn top_level_keys() {
+        let t = parse("x = 1\ny = \"a#b\"").unwrap();
+        assert_eq!(get(&t, "", "x").unwrap().as_int(), Some(1));
+        assert_eq!(get(&t, "", "y").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let t = parse(r#"s = "a\nb\"c""#).unwrap();
+        assert_eq!(get(&t, "", "s").unwrap().as_str(), Some("a\nb\"c"));
+    }
+
+    #[test]
+    fn error_reports_line() {
+        let e = parse("ok = 1\nbroken line").unwrap_err();
+        assert_eq!(e.line, 2);
+        for bad in ["[unclosed", "= 1", "k = ", "k = 'single'"] {
+            assert!(parse(bad).is_err(), "{bad}");
+        }
+    }
+}

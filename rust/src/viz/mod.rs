@@ -1,0 +1,8 @@
+//! Visualisation: the paper's trace format (`show_current_hoods`) and a
+//! `hood2ps`-equivalent renderer targeting SVG (Figures 1 & 4).
+
+pub mod svg;
+pub mod trace;
+
+pub use svg::render_hull_svg;
+pub use trace::{format_hoods, parse_trace, TraceWriter};

@@ -1,0 +1,152 @@
+//! `hood2ps` equivalent: render points, hull chains and (optionally) the
+//! per-stage intermediate hoods to SVG — Figures 1 and 4 of the paper.
+
+use std::fmt::Write as _;
+
+use crate::geometry::point::Point;
+
+/// Rendering options.
+#[derive(Clone, Debug)]
+pub struct SvgOptions {
+    pub width: f64,
+    pub height: f64,
+    pub margin: f64,
+    pub point_radius: f64,
+    /// draw intermediate hoods (stage traces) in fading strokes.
+    pub show_stages: bool,
+}
+
+impl Default for SvgOptions {
+    fn default() -> Self {
+        SvgOptions {
+            width: 640.0,
+            height: 640.0,
+            margin: 20.0,
+            point_radius: 2.0,
+            show_stages: true,
+        }
+    }
+}
+
+fn map(p: Point, o: &SvgOptions) -> (f64, f64) {
+    // input space [0,1]^2, y up -> svg y down
+    (
+        o.margin + p.x * (o.width - 2.0 * o.margin),
+        o.height - o.margin - p.y * (o.height - 2.0 * o.margin),
+    )
+}
+
+fn polyline(points: &[Point], o: &SvgOptions, style: &str, out: &mut String) {
+    if points.len() < 2 {
+        return;
+    }
+    out.push_str("<polyline fill=\"none\" ");
+    out.push_str(style);
+    out.push_str(" points=\"");
+    for p in points {
+        let (x, y) = map(*p, o);
+        let _ = write!(out, "{x:.2},{y:.2} ");
+    }
+    out.push_str("\"/>\n");
+}
+
+/// Render a Figure-4-style picture: input points, final upper/lower hulls
+/// and optional intermediate stage hoods.
+pub fn render_hull_svg(
+    points: &[Point],
+    upper: &[Point],
+    lower: &[Point],
+    stages: &[Vec<Vec<Point>>],
+    opts: &SvgOptions,
+) -> String {
+    let o = opts;
+    let mut s = String::new();
+    let _ = write!(
+        s,
+        "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"{}\" height=\"{}\" \
+         viewBox=\"0 0 {} {}\">\n",
+        o.width, o.height, o.width, o.height
+    );
+    s.push_str("<rect width=\"100%\" height=\"100%\" fill=\"white\"/>\n");
+
+    if o.show_stages {
+        // earlier stages fainter, later stages stronger (Figure 1 feel)
+        let n = stages.len().max(1);
+        for (k, stage) in stages.iter().enumerate() {
+            let alpha = 0.15 + 0.5 * (k as f64 / n as f64);
+            let style = format!(
+                "stroke=\"#4477aa\" stroke-width=\"1\" stroke-opacity=\"{alpha:.2}\""
+            );
+            for hood in stage {
+                polyline(hood, o, &style, &mut s);
+            }
+        }
+    }
+
+    polyline(upper, o, "stroke=\"#cc3311\" stroke-width=\"2\"", &mut s);
+    polyline(lower, o, "stroke=\"#117733\" stroke-width=\"2\"", &mut s);
+
+    for p in points {
+        let (x, y) = map(*p, o);
+        let _ = write!(
+            s,
+            "<circle cx=\"{x:.2}\" cy=\"{y:.2}\" r=\"{}\" fill=\"black\"/>\n",
+            o.point_radius
+        );
+    }
+    for (chain, color) in [(upper, "#cc3311"), (lower, "#117733")] {
+        for p in chain {
+            let (x, y) = map(*p, o);
+            let _ = write!(
+                s,
+                "<circle cx=\"{x:.2}\" cy=\"{y:.2}\" r=\"{}\" fill=\"{color}\"/>\n",
+                o.point_radius + 1.5
+            );
+        }
+    }
+    s.push_str("</svg>\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::generators::{generate, Distribution};
+    use crate::serial::monotone_chain;
+
+    #[test]
+    fn renders_well_formed_svg() {
+        let pts = generate(Distribution::Disk, 64, 1);
+        let (u, l) = monotone_chain::full_hull(&pts);
+        let svg = render_hull_svg(&pts, &u, &l, &[], &SvgOptions::default());
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.trim_end().ends_with("</svg>"));
+        assert_eq!(svg.matches("<circle").count(), 64 + u.len() + l.len());
+        assert_eq!(svg.matches("<polyline").count(), 2);
+    }
+
+    #[test]
+    fn stage_hoods_rendered_when_enabled() {
+        let pts = generate(Distribution::Circle, 16, 2);
+        let (u, l) = monotone_chain::full_hull(&pts);
+        let stages = vec![vec![pts[..8].to_vec(), pts[8..].to_vec()]];
+        let with = render_hull_svg(&pts, &u, &l, &stages, &SvgOptions::default());
+        let without = render_hull_svg(
+            &pts,
+            &u,
+            &l,
+            &stages,
+            &SvgOptions { show_stages: false, ..Default::default() },
+        );
+        assert!(with.matches("<polyline").count() > without.matches("<polyline").count());
+    }
+
+    #[test]
+    fn coordinates_mapped_into_canvas() {
+        let pts = vec![Point::new(0.0, 0.0), Point::new(1.0, 1.0)];
+        let svg = render_hull_svg(&pts, &pts, &pts, &[], &SvgOptions::default());
+        assert!(svg.contains("cx=\"20.00\"")); // margin
+        assert!(svg.contains("cy=\"20.00\""));
+        assert!(svg.contains("cx=\"620.00\""));
+    }
+}

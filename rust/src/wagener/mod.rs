@@ -1,0 +1,20 @@
+//! Wagener's PRAM upper-hull algorithm — the paper's core contribution.
+//!
+//! Three executions of the same algorithm live in this crate:
+//!   * [`stage`]/[`merge`] — direct host implementation (fast native path,
+//!     single source of truth for the phase semantics);
+//!   * [`pram_exec`] — the same phases as explicit processor programs on
+//!     the cost-accounting PRAM simulator (paper-faithful organisation,
+//!     used for experiments E2/E4);
+//!   * the Pallas kernel (`python/compile/kernels/wagener.py`) — executed
+//!     from rust through PJRT artifacts.
+//! All three are differentially tested against the serial oracle.
+
+pub mod merge;
+pub mod occupancy;
+pub mod pram_exec;
+pub mod stage;
+pub mod tangent;
+
+pub use stage::{full_hull, stage, stage_dims, upper_hood, upper_hull};
+pub use tangent::Code;

@@ -1,0 +1,147 @@
+//! Thread-allocation / occupancy tables (paper Figure 2 — experiment E2).
+//!
+//! For each stage the paper launches n/2 threads in n/(2d) blocks of
+//! d1 × d2.  This module reports that geometry plus how many lattice
+//! threads actually had live sample points to work on (the cost of the
+//! paper's padding-not-compression design decision).
+
+use super::stage::{stage, stage_dims};
+use crate::geometry::point::{pad_to_hood, Point};
+
+/// One row of the Figure-2 table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OccupancyRow {
+    pub stage: usize,
+    pub d: usize,
+    pub d1: usize,
+    pub d2: usize,
+    pub blocks: usize,
+    pub threads: usize,
+    /// threads whose P-sample index holds a live corner in mam1..3.
+    pub active_threads: usize,
+    /// live hood corners across all blocks before this stage's merge.
+    pub live_corners: usize,
+}
+
+impl OccupancyRow {
+    pub fn utilization(&self) -> f64 {
+        self.active_threads as f64 / self.threads as f64
+    }
+}
+
+/// Simulate the pipeline on the host and collect per-stage occupancy.
+pub fn occupancy_table(points: &[Point], slots: usize) -> Vec<OccupancyRow> {
+    let mut hood = pad_to_hood(points, slots);
+    let mut rows = Vec::new();
+    let mut d = 2usize;
+    let mut stage_no = 1;
+    while d < slots {
+        let (d1, d2) = stage_dims(d);
+        let blocks = slots / (2 * d);
+        let mut active = 0usize;
+        let mut live = 0usize;
+        for blk in hood.chunks(2 * d) {
+            live += blk.iter().filter(|p| p.is_live()).count();
+            if blk[d].is_remote() {
+                continue; // Q empty: whole block idles (padding passthrough)
+            }
+            // a lattice thread (x, y) is active in mam1..3 iff its sample
+            // i_x = d2*x is live
+            let p_live_samples = (0..d1).filter(|&x| blk[d2 * x].is_live()).count();
+            active += p_live_samples * d2;
+        }
+        rows.push(OccupancyRow {
+            stage: stage_no,
+            d,
+            d1,
+            d2,
+            blocks,
+            threads: slots / 2,
+            active_threads: active,
+            live_corners: live,
+        });
+        hood = stage(&hood, d);
+        d *= 2;
+        stage_no += 1;
+    }
+    rows
+}
+
+/// Render the table in the paper's style.
+pub fn format_table(rows: &[OccupancyRow]) -> String {
+    let mut s = String::from(
+        "stage      d   d1xd2   blocks  threads   active   util%  live-corners\n",
+    );
+    for r in rows {
+        s.push_str(&format!(
+            "{:>5} {:>6}  {:>3}x{:<3} {:>7} {:>8} {:>8} {:>7.1} {:>13}\n",
+            r.stage,
+            r.d,
+            r.d1,
+            r.d2,
+            r.blocks,
+            r.threads,
+            r.active_threads,
+            100.0 * r.utilization(),
+            r.live_corners,
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::generators::{generate, Distribution};
+
+    #[test]
+    fn geometry_matches_paper_launch() {
+        let pts = generate(Distribution::UniformSquare, 1024, 1);
+        let rows = occupancy_table(&pts, 1024);
+        assert_eq!(rows.len(), 9); // log2(1024) - 1 stages
+        for (k, r) in rows.iter().enumerate() {
+            assert_eq!(r.d, 2 << k);
+            assert_eq!(r.d1 * r.d2, r.d);
+            assert_eq!(r.blocks * 2 * r.d, 1024);
+            assert_eq!(r.threads, 512);
+            assert!(r.active_threads <= r.threads);
+        }
+    }
+
+    #[test]
+    fn full_live_input_starts_fully_active() {
+        let pts = generate(Distribution::Parabola, 64, 2);
+        let rows = occupancy_table(&pts, 64);
+        // stage 1: every 2-point block is fully live
+        assert_eq!(rows[0].active_threads, rows[0].threads);
+        // parabola: almost all points stay on the hull (the generator's
+        // general-position jitter may shed a few) -> near-full activity
+        for r in &rows {
+            assert!(r.utilization() >= 0.85, "stage {}: {}", r.stage, r.utilization());
+        }
+    }
+
+    #[test]
+    fn valley_utilization_collapses() {
+        let pts = generate(Distribution::Valley, 256, 2);
+        let rows = occupancy_table(&pts, 256);
+        let last = rows.last().unwrap();
+        // hulls shrink to ~2 corners per block: most sample threads idle
+        assert!(last.utilization() < 0.5, "util {}", last.utilization());
+    }
+
+    #[test]
+    fn padding_blocks_idle() {
+        let pts = generate(Distribution::UniformSquare, 16, 3);
+        let rows = occupancy_table(&pts, 64); // 3/4 of slots are padding
+        assert!(rows[0].active_threads <= 8);
+    }
+
+    #[test]
+    fn table_renders() {
+        let pts = generate(Distribution::Disk, 32, 4);
+        let txt = format_table(&occupancy_table(&pts, 32));
+        assert!(txt.contains("stage"));
+        assert!(txt.lines().count() >= 4);
+    }
+}

@@ -1,0 +1,427 @@
+//! Wagener's algorithm as explicit PE programs on the PRAM simulator.
+//!
+//! This is the paper-faithful execution: one kernel launch per stage,
+//! `n/2` PEs in `n/(2d)` blocks of `d1 × d2`, shared arrays `hood`,
+//! `newhood` (float2) and `scratch` (index) of size n, the six `mam`
+//! phases as synchronous steps separated by barriers (`__syncthreads`).
+//!
+//! Deviations from the published CUDA listing (DESIGN.md §1.1):
+//!   * mam3 guards its write with `y == 0` — the paper lets all d2 threads
+//!     of a qualifying column write the same value, which is common-CRCW,
+//!     not CREW; the simulator's conflict checker would (correctly) trip.
+//!   * mam6 REMOTE-fills the lower half past `pindex` before the shifted
+//!     copy (stale-corner bug fix).
+//!   * phases idle on block pairs whose Q half is empty (input padding);
+//!     the merged hood is then H(P) verbatim.
+//!
+//! Memory map (slot s holds a point at cells 2s, 2s+1):
+//!   hood    cells [0,      2n)
+//!   newhood cells [2n,     4n)
+//!   scratch cells [4n,     5n)    (indices stored as f64; -1 = uninit)
+
+use super::stage::stage_dims;
+use super::tangent::Code;
+use crate::geometry::point::{Point, REMOTE};
+use crate::pram::{Counters, PeCtx, Pram, PramError};
+
+/// Per-stage accounting snapshot (drives experiments E2 / E4).
+#[derive(Clone, Debug)]
+pub struct StageStats {
+    pub d: usize,
+    pub d1: usize,
+    pub d2: usize,
+    pub blocks: usize,
+    pub pes: usize,
+    pub steps: u64,
+    pub work: u64,
+    pub reads: u64,
+    pub writes: u64,
+    pub modeled_cycles: u64,
+    pub ideal_cycles: u64,
+}
+
+/// Result of a full PRAM pipeline run.
+#[derive(Clone, Debug)]
+pub struct PramRun {
+    pub hood: Vec<Point>,
+    pub counters: Counters,
+    pub per_stage: Vec<StageStats>,
+}
+
+struct Layout {
+    n: usize,
+}
+
+impl Layout {
+    fn hood(&self, slot: usize) -> usize {
+        2 * slot
+    }
+    fn newhood(&self, slot: usize) -> usize {
+        2 * self.n + 2 * slot
+    }
+    fn scratch(&self, slot: usize) -> usize {
+        4 * self.n + slot
+    }
+}
+
+fn rd_hood(ctx: &mut PeCtx<'_>, lay: &Layout, slot: usize) -> Point {
+    let (x, y) = ctx.read_pair(lay.hood(slot));
+    Point::new(x, y)
+}
+
+/// Device-side g: same semantics as tangent::g, reading through the PE
+/// context so every access is cost-accounted.  `start` = block start slot,
+/// `i` in [start, start+d), `j` in [start+d, start+2d).
+fn g_dev(ctx: &mut PeCtx<'_>, lay: &Layout, start: usize, d: usize, i: usize, j: usize) -> Code {
+    let p = rd_hood(ctx, lay, i);
+    let q = rd_hood(ctx, lay, j);
+    if p.is_remote() || q.is_remote() {
+        return Code::High;
+    }
+    use crate::geometry::predicates::left_of;
+    let at_end = j + 1 >= start + 2 * d;
+    let nxt_raw = if at_end { q } else { rd_hood(ctx, lay, j + 1) };
+    let q_next = if at_end || nxt_raw.is_remote() { q.below() } else { nxt_raw };
+    if left_of(p, q, q_next) {
+        return Code::Low;
+    }
+    let q_prev = if j == start + d { q.below() } else { rd_hood(ctx, lay, j - 1) };
+    if left_of(p, q, q_prev) {
+        Code::High
+    } else {
+        Code::Equal
+    }
+}
+
+/// Device-side f (see tangent::f).
+fn f_dev(ctx: &mut PeCtx<'_>, lay: &Layout, start: usize, d: usize, i: usize, j: usize) -> Code {
+    let p = rd_hood(ctx, lay, i);
+    let q = rd_hood(ctx, lay, j);
+    if p.is_remote() || q.is_remote() {
+        return Code::High;
+    }
+    use crate::geometry::predicates::left_of;
+    let at_end = i + 1 >= start + d;
+    let nxt_raw = if at_end { p } else { rd_hood(ctx, lay, i + 1) };
+    let p_next = if at_end || nxt_raw.is_remote() { p.below() } else { nxt_raw };
+    if left_of(p, q, p_next) {
+        return Code::Low;
+    }
+    let p_prev = if i == start { p.below() } else { rd_hood(ctx, lay, i - 1) };
+    if left_of(p, q, p_prev) {
+        Code::High
+    } else {
+        Code::Equal
+    }
+}
+
+/// Execute the full pipeline on a fresh PRAM machine (strict CREW: any
+/// write-write conflict — only possible when the input violates the
+/// paper's general-position assumption — is an error).
+///
+/// `points` x-sorted distinct-x; `slots` a power of two >= points.len().
+pub fn run_pipeline(points: &[Point], slots: usize) -> Result<PramRun, PramError> {
+    run_pipeline_with(points, slots, true)
+}
+
+/// Like [`run_pipeline`], with CREW strictness configurable.  Non-strict
+/// mode counts conflicts instead of failing (last write wins) — useful for
+/// cost measurements on data that is not in general position, where tangent
+/// ties make the winning pair ambiguous but the counters stay meaningful.
+pub fn run_pipeline_with(
+    points: &[Point],
+    slots: usize,
+    strict: bool,
+) -> Result<PramRun, PramError> {
+    assert!(slots.is_power_of_two() && slots >= 2);
+    assert!(points.len() <= slots);
+    let n = slots;
+    let lay = Layout { n };
+    let mut m = Pram::new(5 * n, n / 2, 1);
+    m.strict = strict;
+
+    // load input hood (host -> device copy; not cost-accounted, matching
+    // the paper's cudaMemcpy outside the kernel)
+    for (s, p) in points.iter().enumerate() {
+        m.mem[lay.hood(s)] = p.x;
+        m.mem[lay.hood(s) + 1] = p.y;
+    }
+    for s in points.len()..n {
+        m.mem[lay.hood(s)] = REMOTE.x;
+        m.mem[lay.hood(s) + 1] = REMOTE.y;
+    }
+
+    let mut per_stage = Vec::new();
+    let mut d = 2usize;
+    while d < n {
+        let before = m.counters.clone();
+        run_stage(&mut m, &lay, n, d)?;
+        // device newhood -> hood (host-mediated copy in the paper)
+        for s in 0..n {
+            m.mem[lay.hood(s)] = m.mem[lay.newhood(s)];
+            m.mem[lay.hood(s) + 1] = m.mem[lay.newhood(s) + 1];
+        }
+        let (d1, d2) = stage_dims(d);
+        let c = &m.counters;
+        per_stage.push(StageStats {
+            d,
+            d1,
+            d2,
+            blocks: n / (2 * d),
+            pes: n / 2,
+            steps: c.steps - before.steps,
+            work: c.work - before.work,
+            reads: c.reads - before.reads,
+            writes: c.writes - before.writes,
+            modeled_cycles: c.modeled_cycles - before.modeled_cycles,
+            ideal_cycles: c.ideal_cycles - before.ideal_cycles,
+        });
+        d *= 2;
+    }
+
+    let hood = (0..n)
+        .map(|s| Point::new(m.mem[lay.hood(s)], m.mem[lay.hood(s) + 1]))
+        .collect();
+    Ok(PramRun {
+        hood,
+        counters: m.counters.clone(),
+        per_stage,
+    })
+}
+
+/// One kernel launch: all blocks, all phases, with barrier steps.
+fn run_stage(m: &mut Pram, lay: &Layout, n: usize, d: usize) -> Result<(), PramError> {
+    let (d1, d2) = stage_dims(d);
+    let pes = n / 2;
+
+    // decompose a PE id exactly like the paper's block/thread indices
+    let geom = move |pe: usize| {
+        let block = pe / d;
+        let indx = pe % d;
+        let x = indx % d1;
+        let y = indx / d1;
+        let start = block * 2 * d;
+        (start, indx, x, y)
+    };
+
+    // Q-half emptiness test used as the idle guard (broadcast read).
+    let q_alive =
+        |ctx: &mut PeCtx<'_>, lay: &Layout, start: usize| rd_hood(ctx, lay, start + d).is_live();
+
+    // ---- mam0: scratch init
+    m.step(pes, |pe, ctx| {
+        let (start, indx, _, _) = geom(pe);
+        ctx.write(lay.scratch(start + indx), -1.0);
+        ctx.write(lay.scratch(start + indx + d), -1.0);
+    })?;
+
+    // ---- mam1: bracket tangent on H(Q) between samples of stride d1
+    m.step(pes, |pe, ctx| {
+        let (start, _, x, y) = geom(pe);
+        if !q_alive(ctx, lay, start) {
+            return;
+        }
+        let i = start + d2 * x;
+        if rd_hood(ctx, lay, i).is_remote() {
+            return;
+        }
+        let j = start + d + d1 * y;
+        if g_dev(ctx, lay, start, d, i, j) <= Code::Equal
+            && (y == d2 - 1 || g_dev(ctx, lay, start, d, i, j + d1) == Code::High)
+        {
+            ctx.write(lay.scratch(start + x), j as f64);
+        }
+    })?;
+
+    // ---- mam2: refine to the unique EQUAL within the d1-bracket
+    m.step(pes, |pe, ctx| {
+        let (start, _, x, y) = geom(pe);
+        if !q_alive(ctx, lay, start) {
+            return;
+        }
+        let i = start + d2 * x;
+        if rd_hood(ctx, lay, i).is_remote() {
+            return;
+        }
+        let base = ctx.read(lay.scratch(start + x)) as usize;
+        let j = base + y;
+        if g_dev(ctx, lay, start, d, i, j) == Code::Equal {
+            ctx.write(lay.scratch(start + d + x), j as f64);
+        } else if d2 < d1 && g_dev(ctx, lay, start, d, i, j + d2) == Code::Equal {
+            ctx.write(lay.scratch(start + d + x), (j + d2) as f64);
+        }
+    })?;
+
+    // ---- mam3: k0 = max P sample with f <= EQUAL  (y == 0 guard: CREW)
+    m.step(pes, |pe, ctx| {
+        let (start, _, x, y) = geom(pe);
+        if y != 0 || !q_alive(ctx, lay, start) {
+            return;
+        }
+        let i = start + d2 * x;
+        if rd_hood(ctx, lay, i).is_remote() {
+            return;
+        }
+        let j = ctx.read(lay.scratch(start + d + x)) as usize;
+        if f_dev(ctx, lay, start, d, i, j) > Code::Equal {
+            return;
+        }
+        let last = x == d1 - 1 || rd_hood(ctx, lay, i + d2).is_remote();
+        let next_high = last || {
+            let jn = ctx.read(lay.scratch(start + d + x + 1)) as usize;
+            f_dev(ctx, lay, start, d, i + d2, jn) == Code::High
+        };
+        if next_high {
+            ctx.write(lay.scratch(start), i as f64);
+        }
+    })?;
+
+    // ---- mam4: re-bracket on H(Q) with stride d2 for each exact candidate
+    m.step(pes, |pe, ctx| {
+        let (start, _, x, y) = geom(pe);
+        if !q_alive(ctx, lay, start) {
+            return;
+        }
+        let k0 = ctx.read(lay.scratch(start)) as usize;
+        let i = k0 + y;
+        ctx.set_reg(0, i as f64); // register: carried into mam5 (CUDA-style)
+        if rd_hood(ctx, lay, i).is_remote() {
+            return;
+        }
+        let j = start + d + x * d2;
+        if g_dev(ctx, lay, start, d, i, j) <= Code::Equal
+            && (x == d1 - 1 || g_dev(ctx, lay, start, d, i, j + d2) == Code::High)
+        {
+            ctx.write(lay.scratch(start + d + y), j as f64);
+        }
+    })?;
+
+    // ---- mam5: the unique g == f == EQUAL pair is the tangent
+    m.step(pes, |pe, ctx| {
+        let (start, _, x, y) = geom(pe);
+        if x >= d2 || !q_alive(ctx, lay, start) {
+            return;
+        }
+        let i = ctx.reg(0) as usize;
+        if rd_hood(ctx, lay, i).is_remote() {
+            return;
+        }
+        let base = ctx.read(lay.scratch(start + d + y)) as usize;
+        let j = base + x;
+        if g_dev(ctx, lay, start, d, i, j) == Code::Equal
+            && f_dev(ctx, lay, start, d, i, j) == Code::Equal
+        {
+            ctx.write(lay.scratch(start), i as f64);
+            ctx.write(lay.scratch(start + 1), j as f64);
+        }
+    })?;
+
+    // ---- mam6a: lower half copy-or-REMOTE (bug-fixed), upper half REMOTE
+    m.step(pes, |pe, ctx| {
+        let (start, indx, _, _) = geom(pe);
+        if !q_alive(ctx, lay, start) {
+            // Q empty: merged hood is H(P) verbatim (upper half is REMOTE)
+            let p = rd_hood(ctx, lay, start + indx);
+            ctx.write_pair(lay.newhood(start + indx), p.x, p.y);
+            let q = rd_hood(ctx, lay, start + d + indx);
+            ctx.write_pair(lay.newhood(start + d + indx), q.x, q.y);
+            return;
+        }
+        let pindex = ctx.read(lay.scratch(start)) as usize;
+        let p = rd_hood(ctx, lay, start + indx);
+        if start + indx <= pindex {
+            ctx.write_pair(lay.newhood(start + indx), p.x, p.y);
+        } else {
+            ctx.write_pair(lay.newhood(start + indx), REMOTE.x, REMOTE.y);
+        }
+        ctx.write_pair(lay.newhood(start + d + indx), REMOTE.x, REMOTE.y);
+    })?;
+
+    // ---- mam6b: shifted copy of hood[qindex..] to newhood[pindex+1..]
+    m.step(pes, |pe, ctx| {
+        let (start, indx, _, _) = geom(pe);
+        if !q_alive(ctx, lay, start) {
+            return;
+        }
+        let pindex = ctx.read(lay.scratch(start)) as usize;
+        let qindex = ctx.read(lay.scratch(start + 1)) as usize;
+        let shift = qindex - pindex - 1;
+        let src = start + d + indx;
+        if src >= qindex {
+            let p = rd_hood(ctx, lay, src);
+            ctx.write_pair(lay.newhood(src - shift), p.x, p.y);
+        }
+    })?;
+
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::generators::{generate, Distribution};
+    use crate::geometry::point::live_prefix;
+    use crate::serial::monotone_chain;
+
+    #[test]
+    fn pram_matches_serial_all_distributions() {
+        for dist in Distribution::ALL {
+            for &n in &[8usize, 32, 128] {
+                let pts = generate(dist, n, 13);
+                let run = run_pipeline(&pts, n).unwrap();
+                assert_eq!(
+                    live_prefix(&run.hood),
+                    &monotone_chain::upper_hull(&pts)[..],
+                    "{} n={n}",
+                    dist.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pram_is_crew_clean() {
+        // strict mode would have errored; double-check the counter too
+        let pts = generate(Distribution::Circle, 256, 3);
+        let run = run_pipeline(&pts, 256).unwrap();
+        assert_eq!(run.counters.write_conflicts, 0);
+    }
+
+    #[test]
+    fn padded_input() {
+        let pts = generate(Distribution::UniformSquare, 19, 5);
+        let run = run_pipeline(&pts, 32).unwrap();
+        assert_eq!(
+            live_prefix(&run.hood),
+            &monotone_chain::upper_hull(&pts)[..]
+        );
+    }
+
+    #[test]
+    fn time_is_logarithmic_work_is_nlogn() {
+        // 8 steps per stage, log2(n)-1 stages
+        let pts = generate(Distribution::Disk, 256, 9);
+        let run = run_pipeline(&pts, 256).unwrap();
+        let stages = 256usize.trailing_zeros() as u64 - 1;
+        assert_eq!(run.counters.steps, 8 * stages);
+        assert_eq!(run.counters.work, stages * 8 * 128);
+        assert_eq!(run.per_stage.len(), stages as usize);
+        for st in &run.per_stage {
+            assert_eq!(st.steps, 8);
+            assert_eq!(st.pes, 128);
+            assert_eq!(st.d1 * st.d2, st.d);
+        }
+    }
+
+    #[test]
+    fn bank_conflicts_present() {
+        // the paper's observation: the memory-access pattern conflicts
+        let pts = generate(Distribution::Parabola, 512, 4);
+        let run = run_pipeline(&pts, 512).unwrap();
+        assert!(
+            run.counters.conflict_factor() > 1.5,
+            "expected serialization, factor {}",
+            run.counters.conflict_factor()
+        );
+    }
+}

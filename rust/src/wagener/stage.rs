@@ -1,0 +1,152 @@
+//! Stage pipeline: the paper's main loop (`while (d < count)`), host path.
+
+use super::merge;
+use super::merge::merge_block_d;
+use crate::geometry::point::{live_prefix, pad_to_hood, Point};
+
+/// The paper's thread-block shape for hood size d = 2^r:
+/// d1 = 2^⌈r/2⌉, d2 = 2^⌊r/2⌋ (so d1·d2 = d and d2 ≤ d1 ≤ 2·d2).
+pub fn stage_dims(d: usize) -> (usize, usize) {
+    assert!(d.is_power_of_two() && d >= 2, "d must be a power of two >= 2, got {d}");
+    let r = d.trailing_zeros() as usize;
+    (1 << ((r + 1) / 2), 1 << (r / 2))
+}
+
+/// One merge stage into a caller-provided buffer (hot path, §Perf P1).
+pub fn stage_into(hood: &[Point], d: usize, out: &mut [Point]) {
+    assert_eq!(hood.len() % (2 * d), 0, "n={} d={d}", hood.len());
+    assert_eq!(out.len(), hood.len());
+    let (d1, d2) = stage_dims(d);
+    for (blk, out_blk) in hood.chunks(2 * d).zip(out.chunks_mut(2 * d)) {
+        merge::merge_block_into(blk, d1, d2, out_blk);
+    }
+}
+
+/// One merge stage: hoods of size d -> hoods of size 2d over the whole
+/// hood array (the body of the paper's kernel-launch loop).
+pub fn stage(hood: &[Point], d: usize) -> Vec<Point> {
+    let mut out = vec![crate::geometry::point::REMOTE; hood.len()];
+    stage_into(hood, d, &mut out);
+    out
+}
+
+/// Full pipeline: upper hood of x-sorted, distinct-x points as an n-slot
+/// block (n = `slots`, a power of two >= points.len()).
+/// Ping-pongs two buffers — no allocation inside the stage loop.
+pub fn upper_hood(points: &[Point], slots: usize) -> Vec<Point> {
+    let mut cur = pad_to_hood(points, slots);
+    let mut buf = vec![crate::geometry::point::REMOTE; slots];
+    let mut d = 2;
+    while d < slots {
+        stage_into(&cur, d, &mut buf);
+        std::mem::swap(&mut cur, &mut buf);
+        d *= 2;
+    }
+    cur
+}
+
+/// Upper hull corners (live prefix of the final hood).
+pub fn upper_hull(points: &[Point]) -> Vec<Point> {
+    if points.len() <= 2 {
+        return points.to_vec();
+    }
+    let slots = points.len().next_power_of_two();
+    live_prefix(&upper_hood(points, slots)).to_vec()
+}
+
+/// Full hull (upper, lower) via the y-negation trick used by L2.
+pub fn full_hull(points: &[Point]) -> (Vec<Point>, Vec<Point>) {
+    let upper = upper_hull(points);
+    let neg: Vec<Point> = points.iter().map(|p| Point::new(p.x, -p.y)).collect();
+    let lower = upper_hull(&neg)
+        .into_iter()
+        .map(|p| Point::new(p.x, -p.y))
+        .collect();
+    (upper, lower)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::generators::{generate, Distribution};
+    use crate::geometry::hull_check::check_upper_hull;
+    use crate::serial::hood::{check_block_invariant, oracle_stage};
+    use crate::serial::monotone_chain;
+
+    #[test]
+    fn stage_dims_match_paper_schedule() {
+        // paper: d1=2,d2=1 then alternate doubling -> (2,2),(4,2),(4,4)...
+        let (mut d1, mut d2) = (2usize, 1usize);
+        let mut d = 2usize;
+        while d <= 1 << 16 {
+            assert_eq!(stage_dims(d), (d1, d2), "d={d}");
+            if d1 > d2 {
+                d2 *= 2;
+            } else {
+                d1 *= 2;
+            }
+            d *= 2;
+        }
+    }
+
+    #[test]
+    fn pipeline_matches_serial_on_all_distributions() {
+        for dist in Distribution::ALL {
+            for seed in 0..4 {
+                for &n in &[4usize, 16, 64, 256] {
+                    let pts = generate(dist, n, seed);
+                    let got = upper_hull(&pts);
+                    let want = monotone_chain::upper_hull(&pts);
+                    assert_eq!(got, want, "{} n={n} seed={seed}", dist.name());
+                    check_upper_hull(&pts, &got).unwrap();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_stage_matches_oracle_and_invariant() {
+        let pts = generate(Distribution::Disk, 128, 77);
+        let mut hood = pad_to_hood(&pts, 128);
+        let mut d = 2;
+        while d < 128 {
+            let got = stage(&hood, d);
+            let want = oracle_stage(&hood, d);
+            assert_eq!(got, want, "d={d}");
+            check_block_invariant(&got, 2 * d).unwrap();
+            hood = got;
+            d *= 2;
+        }
+    }
+
+    #[test]
+    fn padded_input_any_m() {
+        for m in [1usize, 2, 3, 5, 31, 33, 64, 100] {
+            let pts = generate(Distribution::UniformSquare, m, 5);
+            let slots = m.next_power_of_two().max(2);
+            let hood = upper_hood(&pts, slots);
+            let want = monotone_chain::upper_hull(&pts);
+            assert_eq!(live_prefix(&hood), &want[..], "m={m}");
+        }
+    }
+
+    #[test]
+    fn full_hull_matches_serial() {
+        let pts = generate(Distribution::Circle, 256, 8);
+        let (u, l) = full_hull(&pts);
+        let (su, sl) = monotone_chain::full_hull(&pts);
+        assert_eq!(u, su);
+        assert_eq!(l, sl);
+    }
+
+    #[test]
+    fn oversize_slots_ok() {
+        // m much smaller than slots: whole Q subtrees are REMOTE
+        let pts = generate(Distribution::Bimodal, 5, 1);
+        let hood = upper_hood(&pts, 64);
+        assert_eq!(
+            live_prefix(&hood),
+            &monotone_chain::upper_hull(&pts)[..]
+        );
+    }
+}

@@ -1,0 +1,208 @@
+//! The paper's g / f tangent-classification predicates.
+//!
+//! For a block pair [H(P) | H(Q)] (each half live-left-justified):
+//! `g(i, j)` locates corner `q = blk[j]` of H(Q) relative to the corner
+//! supporting the tangent from `p = blk[i]`; `f(i, j)` locates `p` on H(P)
+//! relative to the tangent from `q`.  Along the respective hood the code
+//! sequence is LOW* EQUAL HIGH* (paper Theorem 2.1 uses the f-monotonicity
+//! over tangent pairs).  The published listings are partially garbled; these
+//! are re-derived from the geometry (DESIGN.md §4.2) and property-tested
+//! against the brute-force tangent.
+
+use crate::geometry::point::Point;
+use crate::geometry::predicates::left_of;
+
+/// Paper's LOW / EQUAL / HIGH classification.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Code {
+    Low,
+    Equal,
+    High,
+}
+
+/// Neighbor of `blk[idx]` in direction `delta` within the hood stored at
+/// `blk[lo..hi]`; the synthetic below-point when absent (paper's
+/// branch-free `y -= atend` trick).
+#[inline]
+fn neighbor(blk: &[Point], idx: usize, next: bool, lo: usize, hi: usize) -> Point {
+    let pt = blk[idx];
+    if next {
+        let at_end = idx + 1 >= hi || !blk[idx + 1].is_live();
+        if at_end {
+            pt.below()
+        } else {
+            blk[idx + 1]
+        }
+    } else {
+        let at_start = idx <= lo;
+        if at_start {
+            pt.below()
+        } else {
+            blk[idx - 1]
+        }
+    }
+}
+
+/// g(i, j): position of H(Q) corner j relative to the tangent-from-p touch
+/// corner.  `i` indexes the P half `[0, d)`, `j` the Q half `[d, 2d)`.
+/// REMOTE p or q ⇒ High.
+#[inline]
+pub fn g(blk: &[Point], i: usize, j: usize, d: usize) -> Code {
+    debug_assert!(i < d && (d..2 * d).contains(&j));
+    let p = blk[i];
+    let q = blk[j];
+    if p.is_remote() || q.is_remote() {
+        return Code::High;
+    }
+    let q_next = neighbor(blk, j, true, d, 2 * d);
+    if left_of(p, q, q_next) {
+        return Code::Low;
+    }
+    let q_prev = neighbor(blk, j, false, d, 2 * d);
+    if left_of(p, q, q_prev) {
+        Code::High
+    } else {
+        Code::Equal
+    }
+}
+
+/// f(i, j): position of H(P) corner i relative to the tangent-from-q touch
+/// corner.  REMOTE p or q ⇒ High.
+#[inline]
+pub fn f(blk: &[Point], i: usize, j: usize, d: usize) -> Code {
+    debug_assert!(i < d && (d..2 * d).contains(&j));
+    let p = blk[i];
+    let q = blk[j];
+    if p.is_remote() || q.is_remote() {
+        return Code::High;
+    }
+    let p_next = neighbor(blk, i, true, 0, d);
+    if left_of(p, q, p_next) {
+        return Code::Low;
+    }
+    let p_prev = neighbor(blk, i, false, 0, d);
+    if left_of(p, q, p_prev) {
+        Code::High
+    } else {
+        Code::Equal
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::generators::{generate, Distribution};
+    use crate::geometry::point::{pad_to_hood, Point, REMOTE};
+    use crate::serial::monotone_chain;
+    use crate::util::rng::Rng;
+
+    /// Build a [H(P) | H(Q)] block pair from two point sets.
+    fn block_pair(p: &[Point], q: &[Point], d: usize) -> Vec<Point> {
+        let mut blk = pad_to_hood(&monotone_chain::upper_hull(p), d);
+        blk.extend(pad_to_hood(&monotone_chain::upper_hull(q), d));
+        blk
+    }
+
+    fn random_pair(rng: &mut Rng, d: usize) -> Vec<Point> {
+        let n = rng.range_usize(1, d + 1);
+        let m = rng.range_usize(1, d + 1);
+        let mut p: Vec<Point> = (0..n)
+            .map(|_| Point::new(rng.f64() * 0.45, rng.f64()).quantize_f32())
+            .collect();
+        let mut q: Vec<Point> = (0..m)
+            .map(|_| Point::new(0.55 + rng.f64() * 0.45, rng.f64()).quantize_f32())
+            .collect();
+        crate::geometry::point::sort_by_x(&mut p);
+        crate::geometry::point::sort_by_x(&mut q);
+        p.dedup_by(|a, b| a.x == b.x);
+        q.dedup_by(|a, b| a.x == b.x);
+        block_pair(&p, &q, d)
+    }
+
+    /// Brute-force common tangent of a block pair: the unique live (i, j)
+    /// with all other live corners strictly right of line i->j.
+    fn brute_tangent(blk: &[Point], d: usize) -> (usize, usize) {
+        let live: Vec<usize> = (0..2 * d).filter(|&t| blk[t].is_live()).collect();
+        for &i in live.iter().filter(|&&t| t < d) {
+            for &j in live.iter().filter(|&&t| t >= d) {
+                if live
+                    .iter()
+                    .all(|&o| o == i || o == j || !left_of(blk[i], blk[j], blk[o]))
+                {
+                    return (i, j);
+                }
+            }
+        }
+        panic!("no tangent");
+    }
+
+    #[test]
+    fn g_sequence_is_monotone() {
+        let mut rng = Rng::new(31);
+        for _ in 0..100 {
+            let d = 8;
+            let blk = random_pair(&mut rng, d);
+            let qlive = (d..2 * d).take_while(|&j| blk[j].is_live()).count();
+            for i in 0..d {
+                if blk[i].is_remote() {
+                    continue;
+                }
+                let codes: Vec<Code> = (d..d + qlive).map(|j| g(&blk, i, j, d)).collect();
+                let eq = codes.iter().filter(|&&c| c == Code::Equal).count();
+                assert_eq!(eq, 1, "exactly one EQUAL: {codes:?}");
+                assert!(codes.windows(2).all(|w| w[0] <= w[1]), "{codes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn f_sequence_is_monotone() {
+        let mut rng = Rng::new(37);
+        for _ in 0..100 {
+            let d = 8;
+            let blk = random_pair(&mut rng, d);
+            let plive = (0..d).take_while(|&i| blk[i].is_live()).count();
+            for j in d..2 * d {
+                if blk[j].is_remote() {
+                    continue;
+                }
+                let codes: Vec<Code> = (0..plive).map(|i| f(&blk, i, j, d)).collect();
+                let eq = codes.iter().filter(|&&c| c == Code::Equal).count();
+                assert_eq!(eq, 1, "exactly one EQUAL: {codes:?}");
+                assert!(codes.windows(2).all(|w| w[0] <= w[1]), "{codes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn double_equal_is_exactly_the_common_tangent() {
+        let mut rng = Rng::new(41);
+        for _ in 0..200 {
+            let d = 8;
+            let blk = random_pair(&mut rng, d);
+            let want = brute_tangent(&blk, d);
+            let mut hits = Vec::new();
+            for i in 0..d {
+                for j in d..2 * d {
+                    if blk[i].is_live()
+                        && blk[j].is_live()
+                        && g(&blk, i, j, d) == Code::Equal
+                        && f(&blk, i, j, d) == Code::Equal
+                    {
+                        hits.push((i, j));
+                    }
+                }
+            }
+            assert_eq!(hits, vec![want]);
+        }
+    }
+
+    #[test]
+    fn remote_is_high() {
+        let pts = generate(Distribution::UniformSquare, 4, 2);
+        let blk = block_pair(&pts[..2], &pts[2..], 4);
+        assert_eq!(blk[3], REMOTE);
+        assert_eq!(g(&blk, 0, 7, 4), Code::High); // remote q
+        assert_eq!(f(&blk, 3, 4, 4), Code::High); // remote p
+    }
+}

@@ -1,0 +1,74 @@
+//! CLI launcher smoke tests: the paper's own workflow end-to-end through
+//! the installed binary (gen -> hull -> trace/svg, occupancy, artifacts).
+
+use std::process::Command;
+
+fn wagener() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_wagener"))
+}
+
+#[test]
+fn gen_then_hull_with_trace_and_svg() {
+    let dir = std::env::temp_dir().join(format!("wagener-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let pts = dir.join("pts.txt");
+    let trace = dir.join("trace.txt");
+    let svg = dir.join("hull.svg");
+
+    let out = wagener()
+        .args(["gen", "--dist", "disk", "--n", "64", "--seed", "9", "--out"])
+        .arg(&pts)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let out = wagener()
+        .arg("hull")
+        .arg(&pts)
+        .arg("--trace")
+        .arg(&trace)
+        .arg("--svg")
+        .arg(&svg)
+        .arg("--backend")
+        .arg("native")
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    assert!(stdout.contains("# upper hood"), "{stdout}");
+    assert!(stdout.contains("# lower hood"));
+
+    // trace parses in the paper's format
+    let trace_text = std::fs::read_to_string(&trace).unwrap();
+    let stages = wagener_hull::viz::trace::parse_trace(&trace_text).unwrap();
+    assert_eq!(stages.len(), 5); // 64 slots -> d = 2..32
+    // svg is well-formed
+    let svg_text = std::fs::read_to_string(&svg).unwrap();
+    assert!(svg_text.starts_with("<svg"));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn occupancy_table_prints() {
+    let out = wagener()
+        .args(["occupancy", "--n", "128", "--dist", "parabola"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    assert!(stdout.contains("stage"), "{stdout}");
+    assert!(stdout.lines().count() >= 7);
+}
+
+#[test]
+fn unknown_command_usage() {
+    let out = wagener().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("usage"));
+}
+
+#[test]
+fn hull_rejects_missing_file() {
+    let out = wagener().args(["hull", "/no/such/file"]).output().unwrap();
+    assert!(!out.status.success());
+}

@@ -1,0 +1,95 @@
+//! Coordinator over the PJRT backend: the full three-layer serving path.
+//! Requires `make artifacts`.
+
+use std::sync::Arc;
+
+use wagener_hull::coordinator::{
+    BackendKind, BatcherConfig, Coordinator, CoordinatorConfig,
+};
+use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::serial::monotone_chain;
+
+fn pjrt_coord(max_batch: usize, flush_us: u64) -> Coordinator {
+    Coordinator::start(CoordinatorConfig {
+        backend: BackendKind::Pjrt,
+        artifacts_dir: format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")).into(),
+        batcher: BatcherConfig { max_batch, flush_us, queue_cap: 256 },
+        self_check: true,
+        preload: false,
+    })
+    .expect("run `make artifacts` before cargo test")
+}
+
+#[test]
+fn pjrt_single_request() {
+    let c = pjrt_coord(1, 200);
+    let pts = generate(Distribution::Circle, 200, 11);
+    let resp = c.compute(pts.clone()).unwrap();
+    let (u, l) = monotone_chain::full_hull(&pts);
+    assert_eq!(resp.upper, u);
+    assert_eq!(resp.lower, l);
+    assert_eq!(resp.backend, "pjrt");
+}
+
+#[test]
+fn pjrt_batched_wave() {
+    let c = Arc::new(pjrt_coord(8, 2000));
+    let mut handles = Vec::new();
+    for t in 0..8u64 {
+        let c = c.clone();
+        handles.push(std::thread::spawn(move || {
+            // same size class so the batcher can group them
+            let pts = generate(Distribution::UniformSquare, 60, 100 + t);
+            let resp = c.compute(pts.clone()).unwrap();
+            let (u, l) = monotone_chain::full_hull(&pts);
+            assert_eq!(resp.upper, u);
+            assert_eq!(resp.lower, l);
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let snap = c.snapshot().0;
+    assert_eq!(snap.get("responses").unwrap().as_usize(), Some(8));
+    let batches = snap.get("batches").unwrap().as_usize().unwrap();
+    assert!(batches < 8, "requests were not batched: {batches} batches");
+}
+
+#[test]
+fn pjrt_mixed_size_classes() {
+    let c = pjrt_coord(4, 300);
+    for (n, seed) in [(10usize, 1u64), (100, 2), (300, 3), (900, 4)] {
+        let pts = generate(Distribution::Disk, n, seed);
+        let resp = c.compute(pts.clone()).unwrap();
+        let (u, l) = monotone_chain::full_hull(&pts);
+        assert_eq!(resp.upper, u, "n={n}");
+        assert_eq!(resp.lower, l, "n={n}");
+    }
+}
+
+#[test]
+fn pjrt_rejects_oversized() {
+    let c = pjrt_coord(1, 100);
+    let max = c.max_points();
+    assert!(max >= 1024);
+    let pts = generate(Distribution::UniformSquare, max + 1, 5);
+    let err = c.compute(pts).unwrap_err();
+    assert!(err.to_string().contains("size class"), "{err}");
+}
+
+#[test]
+fn pjrt_start_fails_cleanly_without_artifacts() {
+    // failure injection: missing artifact dir must fail at startup with a
+    // useful message, not at first request
+    let err = match Coordinator::start(CoordinatorConfig {
+        backend: BackendKind::Pjrt,
+        artifacts_dir: "/nonexistent/artifacts".into(),
+        batcher: BatcherConfig::default(),
+        self_check: false,
+        preload: false,
+    }) {
+        Ok(_) => panic!("started without artifacts?!"),
+        Err(e) => e,
+    };
+    assert!(err.contains("make artifacts"), "{err}");
+}

@@ -1,0 +1,72 @@
+//! Cross-implementation agreement: every hull path in the repo computes
+//! the same answer on the same inputs (serial x3, gift-wrap, native
+//! Wagener, PRAM Wagener, OvL-optimal), across distributions and sizes.
+
+use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::geometry::hull_check::check_upper_hull;
+use wagener_hull::geometry::point::live_prefix;
+use wagener_hull::ovl;
+use wagener_hull::serial::{gift_wrapping, graham, monotone_chain, quickhull};
+use wagener_hull::wagener;
+
+#[test]
+fn all_implementations_agree() {
+    for dist in Distribution::ALL {
+        for &n in &[3usize, 17, 100, 512] {
+            let pts = generate(dist, n, 0xC0FFEE);
+            let want = monotone_chain::upper_hull(&pts);
+            check_upper_hull(&pts, &want).unwrap();
+
+            assert_eq!(quickhull::upper_hull(&pts), want, "quickhull {} {n}", dist.name());
+            assert_eq!(
+                gift_wrapping::upper_hull(&pts),
+                want,
+                "giftwrap {} {n}",
+                dist.name()
+            );
+            assert_eq!(
+                graham::upper_chain(&graham::convex_hull(&pts)),
+                want,
+                "graham {} {n}",
+                dist.name()
+            );
+            assert_eq!(wagener::upper_hull(&pts), want, "wagener {} {n}", dist.name());
+            assert_eq!(
+                ovl::optimal_upper_hull(&pts, 0).hull,
+                want,
+                "ovl {} {n}",
+                dist.name()
+            );
+            let slots = n.next_power_of_two().max(2);
+            let pram = wagener::pram_exec::run_pipeline(&pts, slots).unwrap();
+            assert_eq!(live_prefix(&pram.hood), &want[..], "pram {} {n}", dist.name());
+        }
+    }
+}
+
+#[test]
+fn pram_counters_match_theory_across_sizes() {
+    // time Θ(log n): 8 steps per stage; work Θ(n log n): 8 * n/2 per stage
+    for &n in &[16usize, 64, 256, 1024] {
+        let pts = generate(Distribution::UniformSquare, n, 3);
+        let run = wagener::pram_exec::run_pipeline(&pts, n).unwrap();
+        let stages = (n.trailing_zeros() - 1) as u64;
+        assert_eq!(run.counters.steps, 8 * stages, "n={n}");
+        assert_eq!(run.counters.work, 8 * stages * (n as u64 / 2), "n={n}");
+        assert_eq!(run.counters.write_conflicts, 0, "n={n}");
+    }
+}
+
+#[test]
+fn figure4_scenario_1024_points() {
+    // the paper's sample run: 1024 points end-to-end on every path
+    let pts = generate(Distribution::Disk, 1024, 42);
+    let want = monotone_chain::upper_hull(&pts);
+    assert_eq!(wagener::upper_hull(&pts), want);
+    let run = wagener::pram_exec::run_pipeline(&pts, 1024).unwrap();
+    assert_eq!(live_prefix(&run.hood), &want[..]);
+    assert_eq!(run.per_stage.len(), 9);
+    // occupancy table exists for all 9 stages (Figure 2)
+    let occ = wagener::occupancy::occupancy_table(&pts, 1024);
+    assert_eq!(occ.len(), 9);
+}

@@ -1,0 +1,302 @@
+//! Randomized property tests (in-tree harness; see util::property) over
+//! the invariants that matter: hull semantics across all implementations,
+//! batching/routing behaviour of the coordinator, protocol round-trips,
+//! and the PRAM machine's CREW discipline.
+//!
+//! Reproduce any failure with WAGENER_PROP_SEED=<seed> cargo test <name>.
+
+use wagener_hull::coordinator::{
+    backend::exact_full_hull, BackendKind, BatcherConfig, Coordinator, CoordinatorConfig,
+};
+use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::geometry::hull_check::check_upper_hull;
+use wagener_hull::geometry::point::{live_prefix, sort_by_x, Point};
+use wagener_hull::ovl;
+use wagener_hull::prop_assert;
+use wagener_hull::serial::monotone_chain;
+use wagener_hull::util::property::check;
+use wagener_hull::util::rng::Rng;
+use wagener_hull::wagener;
+
+fn random_dist(rng: &mut Rng) -> Distribution {
+    Distribution::ALL[rng.range_usize(0, Distribution::ALL.len())]
+}
+
+/// Arbitrary *raw* point clouds (not via generators): duplicates, shared
+/// x, tiny clusters — everything a client might send.
+fn raw_points(rng: &mut Rng, max: usize) -> Vec<Point> {
+    let n = rng.range_usize(1, max);
+    let grid = rng.chance(0.3); // 30%: quantize to a coarse grid (forces duplicates)
+    (0..n)
+        .map(|_| {
+            let (mut x, mut y) = (rng.f64(), rng.f64());
+            if grid {
+                x = (x * 8.0).round() / 8.0;
+                y = (y * 8.0).round() / 8.0;
+            }
+            Point::new(x, y)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_wagener_equals_serial() {
+    check("wagener-vs-serial", 60, |rng| {
+        let dist = random_dist(rng);
+        let n = rng.range_usize(1, 300);
+        let pts = generate(dist, n, rng.next_u64());
+        let want = monotone_chain::upper_hull(&pts);
+        let got = wagener::upper_hull(&pts);
+        prop_assert!(got == want, "{} n={n}: wagener != serial", dist.name());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hull_is_valid_hull() {
+    check("hull-validity", 60, |rng| {
+        let dist = random_dist(rng);
+        let n = rng.range_usize(3, 400);
+        let pts = generate(dist, n, rng.next_u64());
+        let hull = wagener::upper_hull(&pts);
+        check_upper_hull(&pts, &hull).map_err(|e| format!("{}: {e}", dist.name()))
+    });
+}
+
+#[test]
+fn prop_pram_is_crew_and_matches() {
+    check("pram-crew", 25, |rng| {
+        let dist = random_dist(rng);
+        let slots = 1usize << rng.range_usize(1, 8);
+        let m = rng.range_usize(1, slots + 1);
+        let pts = generate(dist, m, rng.next_u64());
+        let run = wagener::pram_exec::run_pipeline(&pts, slots)
+            .map_err(|e| format!("CREW violation: {e}"))?;
+        prop_assert!(run.counters.write_conflicts == 0, "write conflicts");
+        let want = monotone_chain::upper_hull(&pts);
+        prop_assert!(
+            live_prefix(&run.hood) == &want[..],
+            "{} m={m} slots={slots}: pram mismatch",
+            dist.name()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ovl_matches_any_strip() {
+    check("ovl-strips", 40, |rng| {
+        let dist = random_dist(rng);
+        let n = rng.range_usize(1, 500);
+        let strip = rng.range_usize(1, n + 2);
+        let pts = generate(dist, n, rng.next_u64());
+        let want = monotone_chain::upper_hull(&pts);
+        let got = ovl::optimal_upper_hull(&pts, strip).hull;
+        prop_assert!(got == want, "{} n={n} strip={strip}", dist.name());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_exact_fallback_handles_anything() {
+    check("exact-fallback", 60, |rng| {
+        let mut pts = raw_points(rng, 80);
+        pts = pts.iter().map(|p| p.quantize_f32()).collect();
+        sort_by_x(&mut pts);
+        pts.dedup();
+        let (upper, lower) = exact_full_hull(&pts);
+        prop_assert!(!upper.is_empty() && !lower.is_empty(), "empty hull");
+        // chains strictly x-increasing, extremes shared
+        for w in upper.windows(2) {
+            prop_assert!(w[0].x < w[1].x, "upper x-order");
+        }
+        for w in lower.windows(2) {
+            prop_assert!(w[0].x < w[1].x, "lower x-order");
+        }
+        // every input point is on-or-below upper and on-or-above lower
+        use wagener_hull::geometry::predicates::{orient2d, Orientation};
+        for p in &pts {
+            for (chain, dir) in [(&upper, Orientation::Left), (&lower, Orientation::Right)] {
+                let seg = chain.partition_point(|h| h.x < p.x);
+                if seg == 0 || seg >= chain.len() {
+                    continue;
+                }
+                let o = orient2d(chain[seg - 1], chain[seg], *p);
+                prop_assert!(o != dir, "point outside hull: {p}");
+            }
+        }
+        Ok(())
+    });
+}
+
+/// ROUTING invariant: every submitted request gets exactly one response
+/// with its own id and its own hull, no matter how requests interleave.
+#[test]
+fn prop_coordinator_routing_preserves_identity() {
+    let coord = Coordinator::start(CoordinatorConfig {
+        backend: BackendKind::Native,
+        batcher: BatcherConfig { max_batch: 5, flush_us: 100, queue_cap: 512 },
+        self_check: false,
+        ..Default::default()
+    })
+    .unwrap();
+    check("routing-identity", 10, |rng| {
+        // a wave of requests with mixed sizes, submitted before any recv
+        let k = rng.range_usize(2, 20);
+        let mut waits = Vec::new();
+        let mut wants = Vec::new();
+        for _ in 0..k {
+            let dist = random_dist(rng);
+            let n = rng.range_usize(1, 120);
+            let pts = generate(dist, n, rng.next_u64());
+            let id = coord.next_id();
+            wants.push((id, monotone_chain::full_hull(&pts)));
+            waits.push(coord.submit(wagener_hull::coordinator::HullRequest {
+                id,
+                points: pts,
+            }));
+        }
+        for (rx, (id, (u, l))) in waits.into_iter().zip(wants) {
+            let resp = rx.recv().map_err(|_| "dropped")?.map_err(|e| e.to_string())?;
+            prop_assert!(resp.id == id, "response id mismatch");
+            prop_assert!(resp.upper == u && resp.lower == l, "hull mismatch for id {id}");
+        }
+        Ok(())
+    });
+}
+
+/// BATCHING invariant: batching must be invisible — the same requests
+/// answered identically at batch 1 and batch 8.
+#[test]
+fn prop_batching_is_transparent() {
+    let mk = |max_batch| {
+        Coordinator::start(CoordinatorConfig {
+            backend: BackendKind::Native,
+            batcher: BatcherConfig { max_batch, flush_us: 100, queue_cap: 512 },
+            self_check: false,
+            ..Default::default()
+        })
+        .unwrap()
+    };
+    let c1 = mk(1);
+    let c8 = mk(8);
+    check("batching-transparent", 10, |rng| {
+        let k = rng.range_usize(2, 12);
+        let reqs: Vec<Vec<Point>> = (0..k)
+            .map(|_| generate(random_dist(rng), rng.range_usize(1, 100), rng.next_u64()))
+            .collect();
+        let a: Vec<_> = reqs
+            .iter()
+            .map(|p| c1.compute(p.clone()).map_err(|e| e.to_string()))
+            .collect::<Result<_, _>>()?;
+        // submit all to the batched coordinator concurrently
+        let waits: Vec<_> = reqs
+            .iter()
+            .map(|p| {
+                c8.submit(wagener_hull::coordinator::HullRequest {
+                    id: c8.next_id(),
+                    points: p.clone(),
+                })
+            })
+            .collect();
+        for (rx, want) in waits.into_iter().zip(a) {
+            let resp = rx.recv().map_err(|_| "dropped")?.map_err(|e| e.to_string())?;
+            prop_assert!(
+                resp.upper == want.upper && resp.lower == want.lower,
+                "batched result differs from unbatched"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// STATE invariant: metrics add up — responses + errors == requests.
+#[test]
+fn prop_metrics_conservation() {
+    check("metrics-conservation", 8, |rng| {
+        let coord = Coordinator::start(CoordinatorConfig {
+            backend: BackendKind::Serial,
+            batcher: BatcherConfig { max_batch: 3, flush_us: 50, queue_cap: 64 },
+            self_check: false,
+            ..Default::default()
+        })
+        .unwrap();
+        let k = rng.range_usize(1, 15);
+        let mut ok = 0usize;
+        let mut err = 0usize;
+        for _ in 0..k {
+            if rng.chance(0.25) {
+                // invalid request
+                let bad = vec![Point::new(5.0, 5.0)];
+                let _ = coord.compute(bad).is_err();
+                err += 1;
+            } else {
+                let pts = raw_points(rng, 60);
+                match coord.compute(pts) {
+                    Ok(_) => ok += 1,
+                    Err(_) => err += 1,
+                }
+            }
+        }
+        let snap = coord.snapshot().0;
+        let resp = snap.get("responses").unwrap().as_usize().unwrap();
+        let errs = snap.get("errors").unwrap().as_usize().unwrap();
+        let reqs = snap.get("requests").unwrap().as_usize().unwrap();
+        prop_assert!(resp == ok, "responses {resp} != ok {ok}");
+        prop_assert!(errs == err, "errors {errs} != {err}");
+        prop_assert!(reqs == k, "requests {reqs} != {k}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_protocol_roundtrip() {
+    use std::io::BufReader;
+    use wagener_hull::server::proto::{
+        read_request, read_response, write_request, write_response, Request, Response,
+    };
+    check("proto-roundtrip", 50, |rng| {
+        let pts = raw_points(rng, 50);
+        let req = Request::Hull { id: rng.next_u64(), points: pts.clone() };
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req).unwrap();
+        let back = read_request(&mut BufReader::new(&buf[..])).map_err(|e| e.to_string())?;
+        prop_assert!(back == req, "request roundtrip");
+
+        let k = rng.range_usize(0, pts.len() + 1);
+        let resp = Response::Hull {
+            id: rng.next_u64(),
+            upper: pts[..k].to_vec(),
+            lower: pts[k..].to_vec(),
+            backend: "pjrt".into(),
+            queue_ns: rng.next_u64() >> 20,
+            exec_ns: rng.next_u64() >> 20,
+        };
+        let mut buf = Vec::new();
+        write_response(&mut buf, &resp).unwrap();
+        let back = read_response(&mut BufReader::new(&buf[..])).map_err(|e| e.to_string())?;
+        prop_assert!(back == resp, "response roundtrip");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_trace_roundtrip() {
+    use wagener_hull::geometry::point::pad_to_hood;
+    use wagener_hull::viz::trace::{format_hoods, parse_trace};
+    check("trace-roundtrip", 30, |rng| {
+        let slots = 1usize << rng.range_usize(1, 8);
+        let m = rng.range_usize(1, slots + 1);
+        let pts = generate(random_dist(rng), m, rng.next_u64());
+        let hood = pad_to_hood(&pts, slots);
+        let d = 1usize << rng.range_usize(0, slots.trailing_zeros() as usize + 1);
+        let mut text = format_hoods(&hood, d);
+        text.push_str("0\n");
+        let stages = parse_trace(&text).map_err(|e| e)?;
+        prop_assert!(stages.len() == 1, "one stage");
+        prop_assert!(stages[0].hoods.len() == slots / d, "hood count");
+        let total: usize = stages[0].hoods.iter().map(Vec::len).sum();
+        prop_assert!(total == m, "live points preserved: {total} != {m}");
+        Ok(())
+    });
+}

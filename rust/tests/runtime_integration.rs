@@ -1,0 +1,124 @@
+//! End-to-end L3↔L2 integration: load real AOT artifacts, execute them on
+//! the PJRT CPU client, and compare against the rust-native Wagener
+//! pipeline and the serial baseline.  Requires `make artifacts`.
+
+use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::geometry::hull_check::check_upper_hull;
+use wagener_hull::runtime::{ArtifactRegistry, HullExecutor};
+use wagener_hull::serial::monotone_chain;
+use wagener_hull::wagener;
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn executor() -> HullExecutor {
+    let reg = ArtifactRegistry::load(artifacts_dir())
+        .expect("run `make artifacts` before cargo test");
+    HullExecutor::new(reg).unwrap()
+}
+
+#[test]
+fn hood_artifact_matches_serial() {
+    let exe = executor();
+    let meta = exe.registry().get("hood_n64").unwrap().clone();
+    for dist in [Distribution::UniformSquare, Distribution::Parabola, Distribution::Valley] {
+        for seed in 0..3 {
+            let pts = generate(dist, 64, seed);
+            let got = exe.run_hood(&meta, &pts).unwrap();
+            let want = monotone_chain::upper_hull(&pts);
+            assert_eq!(got, want, "{} seed {seed}", dist.name());
+        }
+    }
+}
+
+#[test]
+fn hood_artifact_accepts_padding() {
+    let exe = executor();
+    let meta = exe.registry().get("hood_n64").unwrap().clone();
+    for m in [1usize, 2, 7, 33, 64] {
+        let pts = generate(Distribution::Disk, m, 9);
+        let got = exe.run_hood(&meta, &pts).unwrap();
+        assert_eq!(got, monotone_chain::upper_hull(&pts), "m={m}");
+    }
+}
+
+#[test]
+fn hull_artifact_batch1() {
+    let exe = executor();
+    let meta = exe.registry().get("hull_n128_b1").unwrap().clone();
+    let pts = generate(Distribution::Circle, 100, 4);
+    let out = exe.run_hull(&meta, &[pts.clone()]).unwrap();
+    assert_eq!(out.len(), 1);
+    let (up, lo) = &out[0];
+    let (su, sl) = monotone_chain::full_hull(&pts);
+    assert_eq!(up, &su);
+    assert_eq!(lo, &sl);
+    check_upper_hull(&pts, up).unwrap();
+}
+
+#[test]
+fn hull_artifact_batch8_mixed_sizes() {
+    let exe = executor();
+    let meta = exe.registry().get("hull_n64_b8").unwrap().clone();
+    let reqs: Vec<Vec<_>> = (0..5)
+        .map(|k| generate(Distribution::ALL[k % 7], 10 + 9 * k, k as u64))
+        .collect();
+    let out = exe.run_hull(&meta, &reqs).unwrap();
+    assert_eq!(out.len(), 5);
+    for (req, (up, lo)) in reqs.iter().zip(&out) {
+        let (su, sl) = monotone_chain::full_hull(req);
+        assert_eq!(up, &su);
+        assert_eq!(lo, &sl);
+    }
+}
+
+#[test]
+fn pjrt_matches_rust_native_wagener() {
+    // three implementations of the same algorithm agree bit-for-bit on
+    // f32-quantized inputs
+    let exe = executor();
+    let meta = exe.registry().get("hull_n256_b1").unwrap().clone();
+    for seed in 0..3 {
+        let pts = generate(Distribution::UniformSquare, 200, seed);
+        let pjrt = exe.run_hull(&meta, &[pts.clone()]).unwrap();
+        let (nu, nl) = wagener::full_hull(&pts);
+        assert_eq!(pjrt[0].0, nu, "upper seed {seed}");
+        assert_eq!(pjrt[0].1, nl, "lower seed {seed}");
+    }
+}
+
+#[test]
+fn auto_routing_selects_size_class() {
+    let exe = executor();
+    let reqs = vec![generate(Distribution::Disk, 90, 2)];
+    let out = exe.hull_auto(&reqs).unwrap();
+    let (su, sl) = monotone_chain::full_hull(&reqs[0]);
+    assert_eq!(out[0].0, su);
+    assert_eq!(out[0].1, sl);
+}
+
+#[test]
+fn compile_cache_reused() {
+    let exe = executor();
+    let meta = exe.registry().get("hull_n64_b1").unwrap().clone();
+    let pts = generate(Distribution::UniformSquare, 30, 1);
+    for _ in 0..3 {
+        exe.run_hull(&meta, &[pts.clone()]).unwrap();
+    }
+    let stats = exe.stats();
+    assert_eq!(stats.compiles, 1);
+    assert_eq!(stats.executions, 3);
+    assert_eq!(stats.requests, 3);
+}
+
+#[test]
+fn jnp_ablation_twin_matches_pallas_artifact() {
+    let exe = executor();
+    let pallas = exe.registry().get("hood_n256").unwrap().clone();
+    let jnp = exe.registry().get("hood_jnp_n256").unwrap().clone();
+    let pts = generate(Distribution::Clusters(5), 256, 6);
+    let a = exe.run_hood(&pallas, &pts).unwrap();
+    let b = exe.run_hood(&jnp, &pts).unwrap();
+    assert_eq!(a, b);
+}

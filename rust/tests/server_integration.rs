@@ -1,0 +1,116 @@
+//! TCP server end-to-end: real sockets, real coordinator, protocol checks.
+
+use std::sync::Arc;
+
+use wagener_hull::coordinator::{BackendKind, BatcherConfig, Coordinator, CoordinatorConfig};
+use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::geometry::point::Point;
+use wagener_hull::serial::monotone_chain;
+use wagener_hull::server::{serve, HullClient, ServerConfig};
+
+fn start_server(kind: BackendKind) -> (Arc<Coordinator>, wagener_hull::server::ServerHandle) {
+    let coord = Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            backend: kind,
+            batcher: BatcherConfig { max_batch: 4, flush_us: 300, queue_cap: 256 },
+            self_check: true,
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let handle = serve(coord.clone(), &ServerConfig { addr: "127.0.0.1:0".into() }).unwrap();
+    (coord, handle)
+}
+
+#[test]
+fn ping_hull_stats_roundtrip() {
+    let (_coord, handle) = start_server(BackendKind::Native);
+    let mut client = HullClient::connect(handle.local_addr).unwrap();
+    client.ping().unwrap();
+
+    let pts = generate(Distribution::Disk, 120, 7);
+    let hull = client.hull(&pts).unwrap();
+    let (u, l) = monotone_chain::full_hull(&pts);
+    assert_eq!(hull.upper, u);
+    assert_eq!(hull.lower, l);
+    assert_eq!(hull.backend, "native");
+
+    let stats = client.stats().unwrap();
+    let json = wagener_hull::util::json::parse(&stats).unwrap();
+    assert_eq!(json.get("responses").unwrap().as_usize(), Some(1));
+    client.quit().unwrap();
+    handle.stop();
+}
+
+#[test]
+fn many_clients_concurrently() {
+    let (coord, handle) = start_server(BackendKind::Native);
+    let addr = handle.local_addr;
+    let mut join = Vec::new();
+    for t in 0..6u64 {
+        join.push(std::thread::spawn(move || {
+            let mut client = HullClient::connect(addr).unwrap();
+            for k in 0..5u64 {
+                let pts = generate(
+                    Distribution::ALL[(t % 7) as usize],
+                    30 + (t * 5 + k) as usize,
+                    t * 31 + k,
+                );
+                let hull = client.hull(&pts).unwrap();
+                let (u, l) = monotone_chain::full_hull(&pts);
+                assert_eq!(hull.upper, u);
+                assert_eq!(hull.lower, l);
+            }
+        }));
+    }
+    for h in join {
+        h.join().unwrap();
+    }
+    let snap = coord.snapshot().0;
+    assert_eq!(snap.get("responses").unwrap().as_usize(), Some(30));
+    assert_eq!(snap.get("errors").unwrap().as_usize(), Some(0));
+    handle.stop();
+}
+
+#[test]
+fn server_reports_request_errors() {
+    let (_coord, handle) = start_server(BackendKind::Serial);
+    let mut client = HullClient::connect(handle.local_addr).unwrap();
+    // out-of-range point -> structured error, connection stays usable
+    let err = client.hull(&[Point::new(5.0, 5.0)]).unwrap_err();
+    assert!(err.to_string().contains("outside"), "{err}");
+    client.ping().unwrap();
+    handle.stop();
+}
+
+#[test]
+fn degenerate_input_served_exactly() {
+    let (_coord, handle) = start_server(BackendKind::Native);
+    let mut client = HullClient::connect(handle.local_addr).unwrap();
+    let pts = vec![
+        Point::new(0.5, 0.2),
+        Point::new(0.5, 0.8),
+        Point::new(0.1, 0.5),
+        Point::new(0.9, 0.5),
+    ];
+    let hull = client.hull(&pts).unwrap();
+    assert_eq!(hull.backend, "exact");
+    // responses are f32-quantized (the artifact wire type)
+    let q: Vec<Point> = pts.iter().map(|p| p.quantize_f32()).collect();
+    assert_eq!(hull.upper, vec![q[2], q[1], q[3]]);
+    assert_eq!(hull.lower, vec![q[2], q[0], q[3]]);
+    handle.stop();
+}
+
+#[test]
+fn malformed_protocol_line_closes_gracefully() {
+    use std::io::{BufRead, BufReader, Write};
+    let (_coord, handle) = start_server(BackendKind::Serial);
+    let mut stream = std::net::TcpStream::connect(handle.local_addr).unwrap();
+    stream.write_all(b"GARBAGE\n").unwrap();
+    stream.flush().unwrap();
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line).unwrap();
+    assert!(line.contains("ERR"), "{line}");
+    handle.stop();
+}
