@@ -39,6 +39,7 @@ fn main() {
             batcher: BatcherConfig { max_batch: 8, flush_us: 400, queue_cap: 1024 },
             self_check: false,
             preload: backend == BackendKind::Pjrt,
+            ..Default::default()
         })
         .expect("coordinator start (run `make artifacts` for pjrt)"),
     );

@@ -1,16 +1,63 @@
-//! E7 — PJRT execute cost per artifact (compile excluded; compile times
-//! reported as notes) and the pallas-vs-plain-jnp ablation twin.
-//! Requires `make artifacts`; prints a skip note otherwise.
+//! E7 — runtime execution cost, two halves:
+//!
+//! 1. **PRAM engine tiers** (always runs): audited instrument vs fast
+//!    serving tier at n = 4096 and n = 2^16 (uniform disc).  The fast/
+//!    audited speedup is the PR-over-PR perf trajectory recorded in
+//!    BENCH_pram.json (`scripts/tier1.sh` sets WAGENER_BENCH_JSON).
+//! 2. **PJRT artifact execution** (compile excluded; compile times
+//!    reported as notes) and the pallas-vs-plain-jnp ablation twin.
+//!    Requires `make artifacts`; prints a skip note otherwise.
 //!
 //! Run: `cargo bench --bench bench_runtime`
 
+use std::time::Duration;
+
 use wagener_hull::benchkit::{Bencher, Report};
 use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::pram::ExecMode;
 use wagener_hull::runtime::{ArtifactRegistry, HullExecutor};
+use wagener_hull::wagener::pram_exec::run_pipeline_mode;
 
 fn main() {
+    pram_tiers();
+    pjrt_artifacts();
+}
+
+/// Audited vs fast tier on the full Wagener pipeline.
+fn pram_tiers() {
+    let mut report = Report::new("E7a: PRAM engine tiers (audited vs fast)");
+    // the audited tier at n=2^16 takes whole seconds per run; cap the
+    // sample budget instead of inheriting the default 1 s target
+    let b = Bencher {
+        warmup: Duration::from_millis(10),
+        target: Duration::from_millis(
+            if std::env::var("WAGENER_BENCH_FAST").is_ok() { 50 } else { 400 },
+        ),
+        min_iters: 2,
+        max_iters: 10_000,
+    };
+    for &n in &[4096usize, 1 << 16] {
+        let pts = generate(Distribution::Disk, n, 99);
+        let audited = b.run(&format!("pram/audited/disk_n{n}"), || {
+            run_pipeline_mode(&pts, n, ExecMode::Audited, true).unwrap()
+        });
+        let fast = b.run(&format!("pram/fast/disk_n{n}"), || {
+            run_pipeline_mode(&pts, n, ExecMode::Fast, true).unwrap()
+        });
+        report.note(format!(
+            "n={n}: fast tier speedup {:.1}x over the audited instrument",
+            audited.median_ns / fast.median_ns
+        ));
+        report.add(audited);
+        report.add(fast);
+    }
+    report.finish();
+}
+
+/// PJRT execute cost per artifact + the native comparison.
+fn pjrt_artifacts() {
     let b = Bencher::default();
-    let mut report = Report::new("E7: PJRT artifact execution");
+    let mut report = Report::new("E7b: PJRT artifact execution");
     let reg = match ArtifactRegistry::load("artifacts") {
         Ok(r) => r,
         Err(e) => {
@@ -19,7 +66,14 @@ fn main() {
             return;
         }
     };
-    let exe = HullExecutor::new(reg).unwrap();
+    let exe = match HullExecutor::new(reg) {
+        Ok(e) => e,
+        Err(e) => {
+            report.note(format!("SKIPPED: {e:#}"));
+            report.finish();
+            return;
+        }
+    };
 
     // hood artifacts (single request, upper hull only)
     for name in ["hood_n64", "hood_n256", "hood_jnp_n256"] {
@@ -54,10 +108,12 @@ fn main() {
 
     let stats = exe.stats();
     report.note(format!(
-        "compiles={} total_compile_ms={:.0} executions={}",
+        "compiles={} total_compile_ms={:.0} executions={} ref_checks={} ref_mismatches={}",
         stats.compiles,
         stats.compile_ns as f64 / 1e6,
-        stats.executions
+        stats.executions,
+        stats.ref_checks,
+        stats.ref_mismatches,
     ));
     report.finish();
 }

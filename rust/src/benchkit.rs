@@ -172,7 +172,10 @@ impl Report {
         self.notes.push(msg);
     }
 
-    /// Emit the JSON trailer (one line, greppable as BENCH_JSON).
+    /// Emit the JSON trailer (one line, greppable as BENCH_JSON).  When
+    /// `WAGENER_BENCH_JSON=<path>` is set, the same document is appended
+    /// to that file (one JSON object per line) — how `scripts/tier1.sh`
+    /// builds BENCH_pram.json as the cross-PR perf trajectory.
     pub fn finish(self) {
         use crate::util::json::Json;
         let rows: Vec<Json> = self
@@ -197,6 +200,16 @@ impl Report {
             ),
         ]);
         println!("BENCH_JSON {doc}");
+        if let Ok(path) = std::env::var("WAGENER_BENCH_JSON") {
+            if !path.is_empty() {
+                use std::io::Write;
+                let sink = std::fs::OpenOptions::new().create(true).append(true).open(&path);
+                match sink.and_then(|mut f| writeln!(f, "{doc}")) {
+                    Ok(()) => {}
+                    Err(e) => eprintln!("benchkit: cannot append to {path}: {e}"),
+                }
+            }
+        }
     }
 }
 

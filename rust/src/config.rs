@@ -8,6 +8,7 @@
 //! kind = "pjrt"              # pjrt | native | serial | pram
 //! artifacts_dir = "artifacts"
 //! self_check = false
+//! exec_mode = "fast"         # fast | audited  (pram backend tier)
 //!
 //! [batcher]
 //! max_batch = 8              # 0 = backend preference
@@ -20,6 +21,7 @@ use std::path::PathBuf;
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::{BackendKind, CoordinatorConfig};
+use crate::pram::ExecMode;
 use crate::server::ServerConfig;
 use crate::util::tomlmini::{self, Table};
 
@@ -59,6 +61,11 @@ impl Config {
                     "backend.self_check" => {
                         cfg.coordinator.self_check =
                             value.as_bool().ok_or_else(|| anyhow!("{path}: want bool"))?;
+                    }
+                    "backend.exec_mode" => {
+                        let s = value.as_str().ok_or_else(|| anyhow!("{path}: want string"))?;
+                        cfg.coordinator.exec_mode = ExecMode::parse(s)
+                            .ok_or_else(|| anyhow!("{path}: unknown exec mode {s:?}"))?;
                     }
                     "backend.preload" => {
                         cfg.coordinator.preload =
@@ -107,6 +114,7 @@ addr = "0.0.0.0:9000"
 kind = "serial"
 artifacts_dir = "/tmp/arts"
 self_check = true
+exec_mode = "audited"
 [batcher]
 max_batch = 16
 flush_us = 250
@@ -118,6 +126,7 @@ queue_cap = 99
         assert_eq!(cfg.coordinator.backend, BackendKind::Serial);
         assert_eq!(cfg.coordinator.artifacts_dir, PathBuf::from("/tmp/arts"));
         assert!(cfg.coordinator.self_check);
+        assert_eq!(cfg.coordinator.exec_mode, ExecMode::Audited);
         assert_eq!(cfg.coordinator.batcher.max_batch, 16);
         assert_eq!(cfg.coordinator.batcher.flush_us, 250);
         assert_eq!(cfg.coordinator.batcher.queue_cap, 99);
@@ -127,6 +136,7 @@ queue_cap = 99
     fn defaults_when_empty() {
         let cfg = Config::from_toml("").unwrap();
         assert_eq!(cfg.coordinator.backend, BackendKind::Native);
+        assert_eq!(cfg.coordinator.exec_mode, ExecMode::Fast);
         assert_eq!(cfg.server.addr, "127.0.0.1:7878");
     }
 
@@ -134,6 +144,7 @@ queue_cap = 99
     fn rejects_unknown_keys_and_bad_types() {
         assert!(Config::from_toml("[server]\nport = 1").is_err());
         assert!(Config::from_toml("[backend]\nkind = \"cuda\"").is_err());
+        assert!(Config::from_toml("[backend]\nexec_mode = \"warp\"").is_err());
         assert!(Config::from_toml("[batcher]\nmax_batch = \"lots\"").is_err());
         assert!(Config::from_toml("[batcher]\nmax_batch = -3").is_err());
     }

@@ -9,6 +9,7 @@
 use std::path::PathBuf;
 
 use crate::geometry::point::{dedup_x, Point};
+use crate::pram::ExecMode;
 use crate::runtime::{ArtifactRegistry, HullExecutor};
 use crate::serial::monotone_chain;
 use crate::wagener;
@@ -49,15 +50,24 @@ impl BackendKind {
     /// Construct the backend (call on the thread that will own it).
     /// `preload` compiles every hull artifact up front (server warm start;
     /// §Perf P4 — lazy compilation showed up as 10²-second tail latencies).
+    /// `exec_mode` selects the PRAM engine tier: the `pram` backend runs
+    /// on it directly, and under `self_check` the `pjrt` backend
+    /// cross-checks every PJRT result against the PRAM engine on that
+    /// tier ([`HullExecutor::set_reference_check`]).
     pub fn build(
         &self,
         artifacts_dir: &PathBuf,
         preload: bool,
+        exec_mode: ExecMode,
+        self_check: bool,
     ) -> Result<Box<dyn HullBackend>, String> {
         Ok(match self {
             BackendKind::Pjrt => {
                 let reg = ArtifactRegistry::load(artifacts_dir).map_err(|e| e.to_string())?;
-                let exe = HullExecutor::new(reg).map_err(|e| e.to_string())?;
+                let mut exe = HullExecutor::new(reg).map_err(|e| e.to_string())?;
+                if self_check {
+                    exe.set_reference_check(Some(exec_mode));
+                }
                 if preload {
                     let names: Vec<String> = exe
                         .registry()
@@ -73,7 +83,7 @@ impl BackendKind {
             }
             BackendKind::Native => Box::new(NativeBackend),
             BackendKind::Serial => Box::new(SerialBackend),
-            BackendKind::Pram => Box::new(PramBackend),
+            BackendKind::Pram => Box::new(PramBackend { mode: exec_mode }),
         })
     }
 }
@@ -190,27 +200,39 @@ impl HullBackend for SerialBackend {
 
 // ------------------------------------------------------------------ pram
 
-struct PramBackend;
+struct PramBackend {
+    /// `Fast` for serving (parallel, unaudited), `Audited` for the
+    /// cost-model instrument.
+    mode: ExecMode,
+}
 
 impl HullBackend for PramBackend {
     fn name(&self) -> &'static str {
-        "pram"
+        match self.mode {
+            ExecMode::Fast => "pram-fast",
+            ExecMode::Audited => "pram",
+        }
     }
     fn preferred_batch(&self) -> usize {
         1
     }
     fn max_points(&self) -> usize {
-        1 << 14
+        // the unaudited tier can serve far larger requests for the same
+        // latency budget than the instrument can
+        match self.mode {
+            ExecMode::Fast => 1 << 18,
+            ExecMode::Audited => 1 << 14,
+        }
     }
     fn compute(&self, batch: &[Vec<Point>]) -> Result<Vec<(Vec<Point>, Vec<Point>)>, String> {
         batch
             .iter()
             .map(|pts| {
                 let slots = pts.len().next_power_of_two().max(2);
-                let up = wagener::pram_exec::run_pipeline(pts, slots)
+                let up = wagener::pram_exec::run_pipeline_mode(pts, slots, self.mode, true)
                     .map_err(|e| e.to_string())?;
                 let neg: Vec<Point> = pts.iter().map(|p| Point::new(p.x, -p.y)).collect();
-                let lo = wagener::pram_exec::run_pipeline(&neg, slots)
+                let lo = wagener::pram_exec::run_pipeline_mode(&neg, slots, self.mode, true)
                     .map_err(|e| e.to_string())?;
                 let upper = crate::geometry::point::live_prefix(&up.hood).to_vec();
                 let lower: Vec<Point> = crate::geometry::point::live_prefix(&lo.hood)
@@ -249,17 +271,41 @@ mod tests {
 
     #[test]
     fn native_serial_pram_agree() {
-        let native = BackendKind::Native.build(&PathBuf::new(), false).unwrap();
-        let serial = BackendKind::Serial.build(&PathBuf::new(), false).unwrap();
-        let pram = BackendKind::Pram.build(&PathBuf::new(), false).unwrap();
+        let native = BackendKind::Native
+            .build(&PathBuf::new(), false, ExecMode::Fast, false)
+            .unwrap();
+        let serial = BackendKind::Serial
+            .build(&PathBuf::new(), false, ExecMode::Fast, false)
+            .unwrap();
+        let pram = BackendKind::Pram
+            .build(&PathBuf::new(), false, ExecMode::Audited, false)
+            .unwrap();
+        let pram_fast = BackendKind::Pram
+            .build(&PathBuf::new(), false, ExecMode::Fast, false)
+            .unwrap();
         let batch: Vec<Vec<Point>> = (0..3)
             .map(|k| generate(Distribution::ALL[k], 50 + k, k as u64))
             .collect();
         let a = native.compute(&batch).unwrap();
         let b = serial.compute(&batch).unwrap();
         let c = pram.compute(&batch).unwrap();
+        let d = pram_fast.compute(&batch).unwrap();
         assert_eq!(a, b);
         assert_eq!(b, c);
+        assert_eq!(c, d);
+    }
+
+    #[test]
+    fn pram_tiers_report_distinct_names_and_limits() {
+        let audited = BackendKind::Pram
+            .build(&PathBuf::new(), false, ExecMode::Audited, false)
+            .unwrap();
+        let fast = BackendKind::Pram
+            .build(&PathBuf::new(), false, ExecMode::Fast, false)
+            .unwrap();
+        assert_eq!(audited.name(), "pram");
+        assert_eq!(fast.name(), "pram-fast");
+        assert!(fast.max_points() > audited.max_points());
     }
 
     #[test]

@@ -24,6 +24,7 @@ use super::metrics::{Metrics, MetricsSnapshot};
 use super::request::{prepare, HullRequest, HullResponse, RequestError};
 use crate::geometry::hull_check::check_upper_hull;
 use crate::geometry::point::Point;
+use crate::pram::ExecMode;
 
 /// Coordinator configuration (see config.rs for the TOML form).
 #[derive(Clone, Debug)]
@@ -31,10 +32,15 @@ pub struct CoordinatorConfig {
     pub backend: BackendKind,
     pub artifacts_dir: PathBuf,
     pub batcher: BatcherConfig,
-    /// verify every response against the hull checker (paranoia mode).
+    /// verify every response against the hull checker, and (pjrt backend)
+    /// cross-check PJRT results against the PRAM engine on `exec_mode`
+    /// (paranoia mode; divergences land in `RuntimeStats::ref_mismatches`).
     pub self_check: bool,
     /// compile all hull artifacts at startup (pjrt backend only).
     pub preload: bool,
+    /// PRAM engine tier for the `pram` backend: the serving path defaults
+    /// to `Fast`; `Audited` keeps the CREW/bank-model instrument live.
+    pub exec_mode: ExecMode,
 }
 
 impl Default for CoordinatorConfig {
@@ -45,6 +51,7 @@ impl Default for CoordinatorConfig {
             batcher: BatcherConfig::default(),
             self_check: false,
             preload: false,
+            exec_mode: ExecMode::Fast,
         }
     }
 }
@@ -75,7 +82,12 @@ impl Coordinator {
         let exec = std::thread::Builder::new()
             .name("hull-exec".into())
             .spawn(move || {
-                let backend = match exec_cfg.backend.build(&exec_cfg.artifacts_dir, exec_cfg.preload) {
+                let backend = match exec_cfg.backend.build(
+                    &exec_cfg.artifacts_dir,
+                    exec_cfg.preload,
+                    exec_cfg.exec_mode,
+                    exec_cfg.self_check,
+                ) {
                     Ok(b) => {
                         let _ = ready_tx.send(Ok((b.max_points(), b.preferred_batch())));
                         b
@@ -326,6 +338,18 @@ mod tests {
         let snap = c.snapshot().0;
         assert_eq!(snap.get("responses").unwrap().as_usize(), Some(40));
         assert_eq!(snap.get("errors").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn pram_backend_serves_on_the_fast_tier_by_default() {
+        let c = coord(BackendKind::Pram); // CoordinatorConfig::default => Fast
+        let pts = generate(Distribution::Circle, 200, 8);
+        let resp = c.compute(pts.clone()).unwrap();
+        let (u, l) = monotone_chain::full_hull(&pts);
+        assert_eq!(resp.upper, u);
+        assert_eq!(resp.lower, l);
+        assert_eq!(resp.backend, "pram-fast");
+        c.shutdown();
     }
 
     #[test]

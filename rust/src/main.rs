@@ -20,6 +20,7 @@ use wagener_hull::config::Config;
 use wagener_hull::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
 use wagener_hull::geometry::generators::{generate, Distribution};
 use wagener_hull::geometry::point::{pad_to_hood, Point};
+use wagener_hull::pram::ExecMode;
 use wagener_hull::runtime::ArtifactRegistry;
 use wagener_hull::server;
 use wagener_hull::viz::svg::{render_hull_svg, SvgOptions};
@@ -33,8 +34,9 @@ usage: wagener <command> [options]
 commands:
   gen        --dist <name> --n <count> [--seed <u64>] [--out <file>]
   hull       <points-file> [--trace <file>] [--svg <file>] [--backend <pjrt|native|serial|pram>]
-             [--artifacts <dir>]
+             [--artifacts <dir>] [--exec-mode <fast|audited>]
   serve      [--config <file>] [--addr <host:port>] [--backend <kind>] [--artifacts <dir>]
+             [--exec-mode <fast|audited>]
   client     --addr <host:port> <points-file>
   occupancy  --n <count> [--dist <name>] [--seed <u64>]
   artifacts  [--dir <dir>]
@@ -145,6 +147,31 @@ fn cmd_gen(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Parse the optional `--exec-mode <fast|audited>` flag.
+fn parse_exec_mode(flags: &HashMap<String, String>) -> Result<Option<ExecMode>> {
+    flags
+        .get("exec-mode")
+        .map(|s| ExecMode::parse(s).ok_or_else(|| anyhow!("unknown exec mode {s}")))
+        .transpose()
+}
+
+/// `--exec-mode` only changes behaviour on the pram backend (and pjrt
+/// under self_check); surface the no-op instead of silently ignoring it.
+fn warn_if_exec_mode_noop(mode: Option<ExecMode>, backend: BackendKind, self_check: bool) {
+    if let Some(m) = mode {
+        let effective = backend == BackendKind::Pram
+            || (backend == BackendKind::Pjrt && self_check);
+        if !effective {
+            eprintln!(
+                "warning: --exec-mode {} has no effect on the {} backend \
+                 (it selects the pram engine tier)",
+                m.name(),
+                backend.name()
+            );
+        }
+    }
+}
+
 fn cmd_hull(args: &[String]) -> Result<()> {
     let (pos, flags) = parse_flags(args)?;
     let file = pos.first().ok_or_else(|| anyhow!("hull needs a points file"))?;
@@ -154,6 +181,7 @@ fn cmd_hull(args: &[String]) -> Result<()> {
         .map(|s| BackendKind::parse(s).ok_or_else(|| anyhow!("unknown backend {s}")))
         .transpose()?
         .unwrap_or(BackendKind::Native);
+    let exec_mode = parse_exec_mode(&flags)?;
 
     // paper's main: echo the points, then compute
     write_points(&mut std::io::stdout(), &points)?;
@@ -188,14 +216,18 @@ fn cmd_hull(args: &[String]) -> Result<()> {
         }
     }
 
-    let coord = Coordinator::start(CoordinatorConfig {
+    let mut coord_cfg = CoordinatorConfig {
         backend,
         artifacts_dir: PathBuf::from(
             flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into()),
         ),
         ..Default::default()
-    })
-    .map_err(|e| anyhow!(e))?;
+    };
+    if let Some(mode) = exec_mode {
+        coord_cfg.exec_mode = mode;
+    }
+    warn_if_exec_mode_noop(exec_mode, coord_cfg.backend, coord_cfg.self_check);
+    let coord = Coordinator::start(coord_cfg).map_err(|e| anyhow!(e))?;
     let resp = coord
         .compute(points.clone())
         .map_err(|e| anyhow!("{e}"))?;
@@ -236,6 +268,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     if let Some(dir) = flags.get("artifacts") {
         cfg.coordinator.artifacts_dir = PathBuf::from(dir);
     }
+    let exec_mode = parse_exec_mode(&flags)?;
+    if let Some(mode) = exec_mode {
+        cfg.coordinator.exec_mode = mode;
+    }
+    warn_if_exec_mode_noop(exec_mode, cfg.coordinator.backend, cfg.coordinator.self_check);
 
     let coord = Arc::new(Coordinator::start(cfg.coordinator.clone()).map_err(|e| anyhow!(e))?);
     let handle = server::serve(coord.clone(), &cfg.server)?;

@@ -1,16 +1,66 @@
 //! The PRAM machine: synchronous steps over flat shared memory.
+//!
+//! Two execution tiers share one `step` API (see the module docs):
+//!
+//! * **Audited** — full CREW checking and 32-bank serialization modeling,
+//!   with zero steady-state allocation: transaction logs and epoch-stamped
+//!   shadow arrays are allocated once and reused, the write commit is
+//!   sort-free (one pass in program order), and per-warp bank costs use
+//!   fixed 32-slot counters.
+//! * **Fast** — no read logging, no conflict detection, no bank model;
+//!   large steps fan PEs out across scoped worker threads (spawned per
+//!   step via `std::thread::scope` above `fast_parallel_threshold`)
+//!   with per-worker write buffers merged at the step barrier.  This is
+//!   the tier the coordinator/server path runs.
 
-use std::collections::HashMap;
+/// Shared-memory banks on every CUDA generation; per-warp bank counters
+/// are fixed arrays of this size (the audited tier's zero-alloc core).
+pub const MAX_BANKS: usize = 32;
+
+/// Upper bound on fast-tier worker threads per step.
+const MAX_FAST_WORKERS: usize = 16;
+
+/// Which execution tier a [`Pram`] machine runs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecMode {
+    /// CREW checking + bank-conflict cost model (experiments; the paper's
+    /// instrument).  Serial PE dispatch, deterministic counters.
+    #[default]
+    Audited,
+    /// Production tier: parallel PE dispatch, no access auditing.  Only
+    /// `steps`, `work`, `max_pes` and the ideal/modeled cycle floor are
+    /// maintained (a fast step is modeled conflict-free).
+    Fast,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> Option<ExecMode> {
+        Some(match s {
+            "audited" => ExecMode::Audited,
+            "fast" => ExecMode::Fast,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecMode::Audited => "audited",
+            ExecMode::Fast => "fast",
+        }
+    }
+}
 
 /// CUDA-style shared-memory serialization model.
 #[derive(Clone, Copy, Debug)]
 pub struct BankModel {
-    /// number of shared-memory banks (32 on every CUDA generation).
+    /// number of shared-memory banks (32 on every CUDA generation;
+    /// must be <= [`MAX_BANKS`]).
     pub banks: usize,
     /// SIMD width — PEs `[w*warp, (w+1)*warp)` form one warp.
     pub warp: usize,
     /// bank index stride in machine words (4-byte words on CUDA; our cells
-    /// are one word each).
+    /// are one word each).  A pair (`float2`) access is one coalesced
+    /// transaction at stride `2 * word_stride`.
     pub word_stride: usize,
 }
 
@@ -21,13 +71,19 @@ impl Default for BankModel {
 }
 
 /// Aggregate counters over the life of the machine.
+///
+/// The fast tier maintains only `steps`, `work`, `max_pes`,
+/// `ideal_cycles` and `modeled_cycles` (each step modeled conflict-free);
+/// the access-level counters stay 0 there.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Counters {
     /// synchronous parallel steps executed (PRAM time).
     pub steps: u64,
     /// total PE activations (PRAM work).
     pub work: u64,
-    /// shared-memory cell reads / writes.
+    /// shared-memory read / write *transactions*.  A `read_pair` /
+    /// `write_pair` (CUDA `float2`) access counts as ONE coalesced
+    /// transaction, matching the paper's vectorized loads.
     pub reads: u64,
     pub writes: u64,
     /// modeled cycles under the bank model (>= steps; == steps iff
@@ -36,10 +92,12 @@ pub struct Counters {
     pub modeled_cycles: u64,
     /// ideal cycles: 1 per step (a conflict-free PRAM).
     pub ideal_cycles: u64,
-    /// same-cell writes by two PEs in one step (CREW violations).
+    /// cells written by two or more PEs in one step (CREW violations),
+    /// deduplicated per (step, cell): k writers to one cell in one step
+    /// count once.
     pub write_conflicts: u64,
-    /// a cell read and written in the same step (benign under
-    /// reads-see-old-memory semantics; counted for diagnostics).
+    /// read transactions touching a cell also written in the same step
+    /// (benign under reads-see-old-memory semantics; diagnostics).
     pub read_write_overlaps: u64,
     /// largest PE count used in any step.
     pub max_pes: u64,
@@ -76,13 +134,71 @@ impl std::fmt::Display for PramError {
 
 impl std::error::Error for PramError {}
 
+/// One buffered cell write (commits at the step barrier).
+#[derive(Clone, Copy, Debug)]
+struct CellWrite {
+    addr: usize,
+    val: f64,
+    pe: u32,
+}
+
+/// One shared-memory transaction (audited tier only).  `wide` marks a
+/// pair (`float2`) access covering cells `addr` and `addr + 1`.
+#[derive(Clone, Copy, Debug)]
+struct Xact {
+    addr: usize,
+    pe: u32,
+    wide: bool,
+}
+
+/// Reusable transaction logs (audited tier; cleared, never reallocated).
+#[derive(Default)]
+struct XactLog {
+    reads: Vec<Xact>,
+    writes: Vec<Xact>,
+}
+
+/// Epoch-stamped shadow arrays: all per-step bookkeeping without per-step
+/// allocation or sorting.  A stamp equal to the current epoch means "seen
+/// this step/warp"; bumping the epoch invalidates every stamp in O(1).
+#[derive(Default)]
+struct AuditScratch {
+    step_epoch: u64,
+    warp_epoch: u64,
+    /// per cell: step epoch of the last buffered write (CREW detection).
+    write_stamp: Vec<u64>,
+    /// per cell: first writer PE of the current step.
+    write_pe: Vec<u32>,
+    /// per cell: step epoch in which a conflict was already counted
+    /// (dedupe: one conflict per (step, cell)).
+    conflict_stamp: Vec<u64>,
+    /// per (cell, width) key `addr << 1 | wide`: warp epoch of the last
+    /// occurrence (CUDA broadcast — duplicate addresses in a warp count
+    /// once per bank).
+    seen_stamp: Vec<u64>,
+}
+
+impl AuditScratch {
+    fn ensure(&mut self, cells: usize) {
+        if self.write_stamp.len() < cells {
+            self.write_stamp.resize(cells, 0);
+            self.write_pe.resize(cells, 0);
+            self.conflict_stamp.resize(cells, 0);
+        }
+        if self.seen_stamp.len() < 2 * cells {
+            self.seen_stamp.resize(2 * cells, 0);
+        }
+    }
+}
+
 /// Per-PE execution context handed to the step closure.
 pub struct PeCtx<'a> {
     pe: usize,
     mem: &'a [f64],
     regs: &'a mut [f64],
-    reads: &'a mut Vec<(usize, usize)>,
-    writes: &'a mut Vec<(usize, f64, usize)>,
+    writes: &'a mut Vec<CellWrite>,
+    /// `Some` on the audited tier; the fast tier logs nothing.
+    audit: Option<&'a mut XactLog>,
 }
 
 impl<'a> PeCtx<'a> {
@@ -92,23 +208,37 @@ impl<'a> PeCtx<'a> {
 
     /// Read a shared cell (sees the memory state before this step).
     pub fn read(&mut self, addr: usize) -> f64 {
-        self.reads.push((addr, self.pe));
+        if let Some(log) = self.audit.as_deref_mut() {
+            log.reads.push(Xact { addr, pe: self.pe as u32, wide: false });
+        }
         self.mem[addr]
     }
 
     /// Buffer a shared-cell write (commits at the step barrier).
     pub fn write(&mut self, addr: usize, val: f64) {
-        self.writes.push((addr, val, self.pe));
+        if let Some(log) = self.audit.as_deref_mut() {
+            log.writes.push(Xact { addr, pe: self.pe as u32, wide: false });
+        }
+        self.writes.push(CellWrite { addr, val, pe: self.pe as u32 });
     }
 
-    /// Read a 2-cell point (x at `addr2`, y at `addr2 + 1`).
+    /// Read a 2-cell point (x at `addr2`, y at `addr2 + 1`) as ONE
+    /// coalesced transaction (CUDA `float2` load, word_stride 2).
     pub fn read_pair(&mut self, addr2: usize) -> (f64, f64) {
-        (self.read(addr2), self.read(addr2 + 1))
+        if let Some(log) = self.audit.as_deref_mut() {
+            log.reads.push(Xact { addr: addr2, pe: self.pe as u32, wide: true });
+        }
+        (self.mem[addr2], self.mem[addr2 + 1])
     }
 
+    /// Write a 2-cell point as ONE coalesced transaction (both cells still
+    /// commit — and CREW-check — individually).
     pub fn write_pair(&mut self, addr2: usize, x: f64, y: f64) {
-        self.write(addr2, x);
-        self.write(addr2 + 1, y);
+        if let Some(log) = self.audit.as_deref_mut() {
+            log.writes.push(Xact { addr: addr2, pe: self.pe as u32, wide: true });
+        }
+        self.writes.push(CellWrite { addr: addr2, val: x, pe: self.pe as u32 });
+        self.writes.push(CellWrite { addr: addr2 + 1, val: y, pe: self.pe as u32 });
     }
 
     /// Private per-PE register file (not shared memory; not counted).
@@ -126,48 +256,87 @@ pub struct Pram {
     pub mem: Vec<f64>,
     pub counters: Counters,
     pub bank_model: BankModel,
-    /// return Err on write-write conflicts instead of counting.
+    /// return Err on write-write conflicts instead of counting
+    /// (audited tier only; the fast tier never detects conflicts).
     pub strict: bool,
+    /// execution tier; see [`ExecMode`].
+    pub mode: ExecMode,
+    /// fast tier: steps with fewer PEs than this run on the calling
+    /// thread (scoped worker threads don't pay for themselves on small
+    /// launches).
+    pub fast_parallel_threshold: usize,
     regs: Vec<f64>,
     regs_per_pe: usize,
-    reads_buf: Vec<(usize, usize)>,
-    writes_buf: Vec<(usize, f64, usize)>,
+    writes_buf: Vec<CellWrite>,
+    audit_log: XactLog,
+    scratch: AuditScratch,
+    worker_bufs: Vec<Vec<CellWrite>>,
+    /// `available_parallelism()` sampled once at construction (the call
+    /// is a syscall; the fast tier consults it every step).
+    hw_threads: usize,
 }
 
 impl Pram {
     /// `cells` words of shared memory; `regs_per_pe` private registers for
-    /// up to `max_pes` PEs.
+    /// up to `max_pes` PEs.  Runs the audited tier.
     pub fn new(cells: usize, max_pes: usize, regs_per_pe: usize) -> Pram {
+        Pram::with_mode(cells, max_pes, regs_per_pe, ExecMode::Audited)
+    }
+
+    /// Like [`Pram::new`] with an explicit execution tier.
+    pub fn with_mode(cells: usize, max_pes: usize, regs_per_pe: usize, mode: ExecMode) -> Pram {
         Pram {
             mem: vec![0.0; cells],
             counters: Counters::default(),
             bank_model: BankModel::default(),
             strict: true,
+            mode,
+            fast_parallel_threshold: 4096,
             regs: vec![0.0; max_pes * regs_per_pe],
             regs_per_pe,
-            reads_buf: Vec::new(),
             writes_buf: Vec::new(),
+            audit_log: XactLog::default(),
+            scratch: AuditScratch::default(),
+            worker_bufs: Vec::new(),
+            hw_threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
         }
     }
 
     /// Run one synchronous step with PEs `0..pes`.
     ///
     /// Every PE executes `body(pe, ctx)`; reads observe pre-step memory;
-    /// writes commit at the barrier.  Returns the CREW status.
+    /// writes commit at the barrier.  Returns the CREW status (always Ok
+    /// on the fast tier, which does not detect conflicts).
     pub fn step<F>(&mut self, pes: usize, body: F) -> Result<(), PramError>
+    where
+        F: Fn(usize, &mut PeCtx<'_>) + Sync,
+    {
+        match self.mode {
+            ExecMode::Audited => self.step_audited(pes, body),
+            ExecMode::Fast => {
+                self.step_fast(pes, body);
+                Ok(())
+            }
+        }
+    }
+
+    // ------------------------------------------------------------ audited
+
+    fn step_audited<F>(&mut self, pes: usize, body: F) -> Result<(), PramError>
     where
         F: Fn(usize, &mut PeCtx<'_>),
     {
-        self.reads_buf.clear();
         self.writes_buf.clear();
+        self.audit_log.reads.clear();
+        self.audit_log.writes.clear();
         let rpp = self.regs_per_pe;
         for pe in 0..pes {
             let mut ctx = PeCtx {
                 pe,
                 mem: &self.mem,
                 regs: &mut self.regs[pe * rpp..(pe + 1) * rpp],
-                reads: &mut self.reads_buf,
                 writes: &mut self.writes_buf,
+                audit: Some(&mut self.audit_log),
             };
             body(pe, &mut ctx);
         }
@@ -175,78 +344,220 @@ impl Pram {
     }
 
     fn account(&mut self, pes: usize) -> Result<(), PramError> {
-        let c = &mut self.counters;
-        c.steps += 1;
-        c.work += pes as u64;
-        c.max_pes = c.max_pes.max(pes as u64);
-        c.reads += self.reads_buf.len() as u64;
-        c.writes += self.writes_buf.len() as u64;
-        c.ideal_cycles += 1;
+        self.scratch.ensure(self.mem.len());
+        {
+            let c = &mut self.counters;
+            c.steps += 1;
+            c.work += pes as u64;
+            c.max_pes = c.max_pes.max(pes as u64);
+            c.reads += self.audit_log.reads.len() as u64;
+            c.writes += self.audit_log.writes.len() as u64;
+            c.ideal_cycles += 1;
+        }
 
-        // ---- CREW write-conflict detection
-        self.writes_buf.sort_unstable_by_key(|&(addr, _, pe)| (addr, pe));
-        for w in self.writes_buf.windows(2) {
-            if w[0].0 == w[1].0 {
-                c.write_conflicts += 1;
+        // ---- CREW write-conflict detection: sort-free, one pass in
+        // program order over the epoch-stamped shadow array.
+        let sc = &mut self.scratch;
+        sc.step_epoch += 1;
+        let ep = sc.step_epoch;
+        for w in &self.writes_buf {
+            if sc.write_stamp[w.addr] == ep {
+                if sc.conflict_stamp[w.addr] != ep {
+                    sc.conflict_stamp[w.addr] = ep;
+                    self.counters.write_conflicts += 1;
+                }
                 if self.strict {
                     return Err(PramError {
-                        step: c.steps,
-                        addr: w[0].0,
-                        pes: (w[0].2, w[1].2),
+                        step: self.counters.steps,
+                        addr: w.addr,
+                        pes: (sc.write_pe[w.addr] as usize, w.pe as usize),
                     });
                 }
+            } else {
+                sc.write_stamp[w.addr] = ep;
+                sc.write_pe[w.addr] = w.pe;
             }
         }
-        // read-write overlap diagnostics
-        {
-            let mut waddrs: Vec<usize> = self.writes_buf.iter().map(|w| w.0).collect();
-            waddrs.sort_unstable();
-            waddrs.dedup();
-            for &(addr, _) in &self.reads_buf {
-                if waddrs.binary_search(&addr).is_ok() {
-                    c.read_write_overlaps += 1;
-                }
+
+        // read-write overlap diagnostics (per read transaction)
+        for r in &self.audit_log.reads {
+            if sc.write_stamp[r.addr] == ep || (r.wide && sc.write_stamp[r.addr + 1] == ep) {
+                self.counters.read_write_overlaps += 1;
             }
         }
 
         // ---- bank serialization model
-        let bm = self.bank_model;
-        let mut warp_cost: HashMap<usize, (HashMap<usize, Vec<usize>>, HashMap<usize, Vec<usize>>)> =
-            HashMap::new();
-        for &(addr, pe) in &self.reads_buf {
-            let warp = pe / bm.warp;
-            let bank = (addr / bm.word_stride) % bm.banks;
-            warp_cost.entry(warp).or_default().0.entry(bank).or_default().push(addr);
-        }
-        for &(addr, _, pe) in &self.writes_buf {
-            let warp = pe / bm.warp;
-            let bank = (addr / bm.word_stride) % bm.banks;
-            warp_cost.entry(warp).or_default().1.entry(bank).or_default().push(addr);
-        }
-        let mut step_cycles = 1u64;
-        for (_, (rbanks, wbanks)) in warp_cost {
-            let mut cyc = 0u64;
-            for (_, mut addrs) in rbanks {
-                // same-address reads broadcast (CUDA): distinct addresses count
-                addrs.sort_unstable();
-                addrs.dedup();
-                cyc = cyc.max(addrs.len() as u64);
-            }
-            let mut wcyc = 0u64;
-            for (_, mut addrs) in wbanks {
-                addrs.sort_unstable();
-                addrs.dedup();
-                wcyc = wcyc.max(addrs.len() as u64);
-            }
-            step_cycles = step_cycles.max(cyc + wcyc);
-        }
-        c.modeled_cycles += step_cycles;
+        let cycles = Self::bank_cycles(self.bank_model, &self.audit_log, sc);
+        self.counters.modeled_cycles += cycles;
 
-        // commit writes
-        for &(addr, val, _) in &self.writes_buf {
-            self.mem[addr] = val;
+        // commit writes (program order: PEs ran 0..pes serially, so the
+        // last buffered write to a cell wins, deterministically)
+        for w in &self.writes_buf {
+            self.mem[w.addr] = w.val;
         }
         Ok(())
+    }
+
+    /// One step's modeled cycles: max over warps of (read serialization +
+    /// write serialization), min 1.  Both logs are in PE-ascending order
+    /// (serial dispatch), so warps form contiguous runs and a single
+    /// merged pass with fixed `[u32; MAX_BANKS]` counters suffices — no
+    /// maps, no sorting, no allocation.
+    fn bank_cycles(bm: BankModel, log: &XactLog, sc: &mut AuditScratch) -> u64 {
+        assert!(bm.banks <= MAX_BANKS, "bank model supports at most {MAX_BANKS} banks");
+        let banks = bm.banks.max(1);
+        let warp = bm.warp.max(1);
+        let stride = bm.word_stride.max(1);
+        let reads = &log.reads;
+        let writes = &log.writes;
+        let (mut i, mut j) = (0usize, 0usize);
+        let mut step_cycles = 1u64;
+        while i < reads.len() || j < writes.len() {
+            let rw = if i < reads.len() { reads[i].pe as usize / warp } else { usize::MAX };
+            let ww = if j < writes.len() { writes[j].pe as usize / warp } else { usize::MAX };
+            let cur = rw.min(ww);
+
+            let mut rcyc = 0u64;
+            if rw == cur {
+                sc.warp_epoch += 1;
+                let ep = sc.warp_epoch;
+                let mut cnt = [0u32; MAX_BANKS];
+                while i < reads.len() && reads[i].pe as usize / warp == cur {
+                    let x = reads[i];
+                    i += 1;
+                    // same-address accesses broadcast (CUDA): distinct
+                    // (address, width) pairs count, once each
+                    let key = (x.addr << 1) | x.wide as usize;
+                    if sc.seen_stamp[key] != ep {
+                        sc.seen_stamp[key] = ep;
+                        let unit = if x.wide { 2 * stride } else { stride };
+                        let bank = (x.addr / unit) % banks;
+                        cnt[bank] += 1;
+                        rcyc = rcyc.max(cnt[bank] as u64);
+                    }
+                }
+            }
+
+            let mut wcyc = 0u64;
+            if ww == cur {
+                sc.warp_epoch += 1;
+                let ep = sc.warp_epoch;
+                let mut cnt = [0u32; MAX_BANKS];
+                while j < writes.len() && writes[j].pe as usize / warp == cur {
+                    let x = writes[j];
+                    j += 1;
+                    let key = (x.addr << 1) | x.wide as usize;
+                    if sc.seen_stamp[key] != ep {
+                        sc.seen_stamp[key] = ep;
+                        let unit = if x.wide { 2 * stride } else { stride };
+                        let bank = (x.addr / unit) % banks;
+                        cnt[bank] += 1;
+                        wcyc = wcyc.max(cnt[bank] as u64);
+                    }
+                }
+            }
+
+            step_cycles = step_cycles.max(rcyc + wcyc);
+        }
+        step_cycles
+    }
+
+    // --------------------------------------------------------------- fast
+
+    fn step_fast<F>(&mut self, pes: usize, body: F)
+    where
+        F: Fn(usize, &mut PeCtx<'_>) + Sync,
+    {
+        {
+            let c = &mut self.counters;
+            c.steps += 1;
+            c.work += pes as u64;
+            c.max_pes = c.max_pes.max(pes as u64);
+            c.ideal_cycles += 1;
+            c.modeled_cycles += 1; // modeled conflict-free
+        }
+        let rpp = self.regs_per_pe;
+        let workers = Self::fast_workers(pes, self.fast_parallel_threshold, self.hw_threads);
+
+        if workers <= 1 {
+            self.writes_buf.clear();
+            for pe in 0..pes {
+                let mut ctx = PeCtx {
+                    pe,
+                    mem: &self.mem,
+                    regs: &mut self.regs[pe * rpp..(pe + 1) * rpp],
+                    writes: &mut self.writes_buf,
+                    audit: None,
+                };
+                body(pe, &mut ctx);
+            }
+            for w in &self.writes_buf {
+                self.mem[w.addr] = w.val;
+            }
+            return;
+        }
+
+        // parallel dispatch: contiguous PE ranges per worker, private
+        // register windows, per-worker write buffers (reused step-to-step)
+        let chunk = (pes + workers - 1) / workers;
+        while self.worker_bufs.len() < workers {
+            self.worker_bufs.push(Vec::new());
+        }
+        {
+            let mem: &[f64] = &self.mem;
+            let wbufs = &mut self.worker_bufs[..workers];
+            let mut regs_rest: &mut [f64] = &mut self.regs;
+            let mut consumed = 0usize;
+            let body = &body;
+            std::thread::scope(|scope| {
+                for (w, wbuf) in wbufs.iter_mut().enumerate() {
+                    let lo = w * chunk;
+                    let hi = pes.min(lo + chunk);
+                    wbuf.clear();
+                    if lo >= hi {
+                        continue;
+                    }
+                    let take = hi * rpp - consumed;
+                    let (regs_chunk, rest) = std::mem::take(&mut regs_rest).split_at_mut(take);
+                    consumed = hi * rpp;
+                    regs_rest = rest;
+                    scope.spawn(move || {
+                        for pe in lo..hi {
+                            let r0 = (pe - lo) * rpp;
+                            let mut ctx = PeCtx {
+                                pe,
+                                mem,
+                                regs: &mut regs_chunk[r0..r0 + rpp],
+                                writes: &mut *wbuf,
+                                audit: None,
+                            };
+                            body(pe, &mut ctx);
+                        }
+                    });
+                }
+            });
+        }
+        // barrier: merge in worker (= PE-ascending) order, so a conflicting
+        // program resolves identically to the serial fast path
+        for w in 0..workers {
+            let buf = std::mem::take(&mut self.worker_bufs[w]);
+            for cw in &buf {
+                self.mem[cw.addr] = cw.val;
+            }
+            self.worker_bufs[w] = buf; // return the buffer (keep capacity)
+        }
+    }
+
+    /// Worker-count policy: stay serial under the threshold, then give
+    /// every worker at least half a threshold of PEs, capped by the
+    /// machine's parallelism and [`MAX_FAST_WORKERS`].
+    fn fast_workers(pes: usize, threshold: usize, hw: usize) -> usize {
+        let threshold = threshold.max(2);
+        if pes < threshold {
+            return 1;
+        }
+        let by_load = (2 * pes / threshold).max(1);
+        hw.min(by_load).min(MAX_FAST_WORKERS).max(1)
     }
 
     /// Convenience: reset counters (memory retained).
@@ -281,15 +592,28 @@ mod tests {
             .step(3, |_, ctx| ctx.write(0, 7.0))
             .unwrap_err();
         assert_eq!(err.addr, 0);
+        assert_eq!(err.pes, (0, 1));
         assert_eq!(m.counters.write_conflicts, 1);
     }
 
     #[test]
-    fn non_strict_counts_conflicts() {
+    fn non_strict_counts_conflicts_once_per_cell() {
         let mut m = Pram::new(2, 4, 0);
         m.strict = false;
         m.step(3, |_, ctx| ctx.write(0, 7.0)).unwrap();
-        assert_eq!(m.counters.write_conflicts, 2); // 3 writers -> 2 adjacent pairs
+        // 3 writers to one cell = ONE conflicting cell this step
+        assert_eq!(m.counters.write_conflicts, 1);
+        // a second conflicting step counts again
+        m.step(2, |_, ctx| ctx.write(1, 1.0)).unwrap();
+        assert_eq!(m.counters.write_conflicts, 2);
+    }
+
+    #[test]
+    fn conflicts_on_distinct_cells_count_separately() {
+        let mut m = Pram::new(4, 8, 0);
+        m.strict = false;
+        m.step(4, |pe, ctx| ctx.write(pe / 2, pe as f64)).unwrap();
+        assert_eq!(m.counters.write_conflicts, 2); // cells 0 and 1
     }
 
     #[test]
@@ -343,6 +667,41 @@ mod tests {
     }
 
     #[test]
+    fn pair_access_is_one_coalesced_transaction() {
+        // 32 PEs each read the point at slot `pe` (cells 2pe, 2pe+1).
+        // As scalar reads this would conflict (cells 2pe and 2pe+1 hit
+        // even/odd banks twice per warp); as float2 transactions the bank
+        // is (addr/2) % 32 = pe % 32 — conflict-free, like the paper's
+        // vectorized loads.
+        let mut m = Pram::new(64, 32, 0);
+        m.step(32, |pe, ctx| {
+            let _ = ctx.read_pair(2 * pe);
+        })
+        .unwrap();
+        assert_eq!(m.counters.reads, 32); // one transaction per PE
+        assert_eq!(m.counters.modeled_cycles, 1);
+
+        // pair writes coalesce the same way
+        let mut m2 = Pram::new(64, 32, 0);
+        m2.step(32, |pe, ctx| ctx.write_pair(2 * pe, 1.0, 2.0)).unwrap();
+        assert_eq!(m2.counters.writes, 32);
+        assert_eq!(m2.counters.modeled_cycles, 1);
+        assert_eq!(m2.counters.write_conflicts, 0);
+        assert_eq!(m2.mem[63], 2.0);
+    }
+
+    #[test]
+    fn strided_pair_access_conflicts() {
+        // slot stride 32 => pair bank stride 0: full serialization
+        let mut m = Pram::new(2 * 32 * 32, 32, 0);
+        m.step(32, |pe, ctx| {
+            let _ = ctx.read_pair(2 * (pe * 32));
+        })
+        .unwrap();
+        assert_eq!(m.counters.modeled_cycles, 32);
+    }
+
+    #[test]
     fn read_write_overlap_is_benign_but_counted() {
         let mut m = Pram::new(2, 2, 0);
         m.mem[0] = 5.0;
@@ -384,5 +743,110 @@ mod tests {
         })
         .unwrap();
         assert_eq!(m.counters.modeled_cycles, 4);
+    }
+
+    #[test]
+    fn audited_counters_stable_across_repeated_steps() {
+        // the shadow arrays must give identical answers on every step
+        // (epoch discipline: no stale stamps leak between steps)
+        let mut m = Pram::new(64, 32, 0);
+        m.strict = false;
+        for _ in 0..3 {
+            m.step(32, |pe, ctx| {
+                let _ = ctx.read(pe % 8); // 8 distinct cells, banks 0..7
+                ctx.write(pe % 16, 1.0); // 16 cells, 2 writers each
+            })
+            .unwrap();
+        }
+        assert_eq!(m.counters.steps, 3);
+        assert_eq!(m.counters.write_conflicts, 3 * 16);
+        // per warp: reads 1 cycle (distinct banks), writes 1 cycle => 2
+        assert_eq!(m.counters.modeled_cycles, 3 * 2);
+    }
+
+    // ------------------------------------------------------------- fast
+
+    #[test]
+    fn fast_tier_barrier_semantics_match() {
+        let mut m = Pram::with_mode(4, 4, 0, ExecMode::Fast);
+        m.mem[0] = 1.0;
+        m.mem[1] = 2.0;
+        m.step(2, |pe, ctx| {
+            let v = ctx.read(1 - pe);
+            ctx.write(pe, v);
+        })
+        .unwrap();
+        assert_eq!(m.mem[0], 2.0);
+        assert_eq!(m.mem[1], 1.0);
+        assert_eq!(m.counters.steps, 1);
+        assert_eq!(m.counters.work, 2);
+        assert_eq!(m.counters.reads, 0); // fast tier logs nothing
+    }
+
+    #[test]
+    fn fast_parallel_dispatch_matches_serial() {
+        // same program on both dispatch paths; force parallel dispatch by
+        // dropping the threshold to the minimum
+        let n = 1024usize;
+        let run = |threshold: usize| {
+            let mut m = Pram::with_mode(n, n, 1, ExecMode::Fast);
+            m.fast_parallel_threshold = threshold;
+            for s in 0..4u64 {
+                m.step(n, |pe, ctx| {
+                    let v = ctx.read((pe + 1) % n);
+                    ctx.set_reg(0, ctx.reg(0) + v);
+                    ctx.write(pe, v + s as f64);
+                })
+                .unwrap();
+            }
+            (m.mem.clone(), m.counters.clone())
+        };
+        let (serial_mem, serial_c) = run(usize::MAX); // always serial
+        let (par_mem, par_c) = run(2); // parallel whenever possible
+        assert_eq!(serial_mem, par_mem);
+        assert_eq!(serial_c, par_c);
+    }
+
+    #[test]
+    fn fast_registers_persist_across_worker_layouts() {
+        let mut m = Pram::with_mode(1, 256, 1, ExecMode::Fast);
+        m.fast_parallel_threshold = 2;
+        m.step(256, |pe, ctx| ctx.set_reg(0, pe as f64)).unwrap();
+        // different pe count => different chunking; registers must still
+        // map to the same absolute windows
+        m.step(100, |pe, ctx| assert_eq!(ctx.reg(0), pe as f64)).unwrap();
+    }
+
+    #[test]
+    fn fast_and_audited_agree_on_crew_clean_program() {
+        let prog = |m: &mut Pram| {
+            for _ in 0..5 {
+                m.step(64, |pe, ctx| {
+                    let (x, y) = ctx.read_pair(2 * ((pe + 3) % 64));
+                    ctx.write_pair(2 * pe, y, x);
+                })
+                .unwrap();
+            }
+        };
+        let mut a = Pram::new(128, 64, 0);
+        for s in 0..128 {
+            a.mem[s] = (s * 7 % 13) as f64;
+        }
+        let mut f = Pram::with_mode(128, 64, 0, ExecMode::Fast);
+        f.mem.copy_from_slice(&a.mem);
+        f.fast_parallel_threshold = 2;
+        prog(&mut a);
+        prog(&mut f);
+        assert_eq!(a.mem, f.mem);
+        assert_eq!(a.counters.steps, f.counters.steps);
+        assert_eq!(a.counters.work, f.counters.work);
+    }
+
+    #[test]
+    fn exec_mode_parse_roundtrip() {
+        for m in [ExecMode::Audited, ExecMode::Fast] {
+            assert_eq!(ExecMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(ExecMode::parse("gpu"), None);
     }
 }

@@ -11,7 +11,44 @@
 //! * a cost model counting PRAM steps, work (PE-operations), and modeled
 //!   cycles under a 32-bank / 32-lane-warp serialization model — the
 //!   quantity behind experiment E4.
+//!
+//! # Execution tiers
+//!
+//! One `Pram::step` API, two engines, selected by [`ExecMode`]:
+//!
+//! * **`ExecMode::Audited`** (default) — the instrument.  Every shared
+//!   access is logged as a transaction, CREW write-exclusivity is checked
+//!   per step, and the bank model charges `max over warps of (read
+//!   serialization + write serialization)` cycles per step.  The engine
+//!   pays *zero steady-state allocation* for that fidelity: transaction
+//!   logs are reused `Vec`s, per-warp bank counters are fixed
+//!   `[u32; 32]` arrays (banks is always 32 on CUDA), and all per-step
+//!   set-membership questions (which cells were written this step? which
+//!   addresses has this warp already touched?) are answered by
+//!   epoch-stamped shadow arrays — bump one counter and every stamp is
+//!   invalidated in O(1), no clearing, no sorting, no hashing.
+//!   Use it for experiments: the counters are deterministic and
+//!   bit-stable run-to-run.
+//!
+//! * **`ExecMode::Fast`** — the serving engine.  No read logging, no
+//!   conflict detection, no bank model; a step only buffers writes (the
+//!   barrier semantics stay exact) and maintains `steps` / `work` /
+//!   `max_pes` plus a conflict-free cycle floor.  Large launches dispatch
+//!   PEs across scoped worker threads (`std::thread::scope`, per step) —
+//!   contiguous PE ranges per worker, private register windows, and
+//!   per-worker write buffers merged in PE order at the barrier, so
+//!   results are bit-identical to serial dispatch (and to the audited
+//!   tier) on any CREW-clean program.  The coordinator/server `pram`
+//!   backend runs this tier by default; property tests pin the
+//!   fast == audited equivalence across generators and sizes.
+//!
+//! What the audited counters mean: `reads`/`writes` count *transactions*
+//! (a `read_pair`/`write_pair` float2 access is one coalesced
+//! transaction at word-stride 2, as on the paper's hardware);
+//! `write_conflicts` counts conflicting *cells* once per (step, cell);
+//! `modeled_cycles / ideal_cycles` is the bank-serialization factor the
+//! paper blames for losing to the serial program.
 
 pub mod machine;
 
-pub use machine::{BankModel, Counters, PeCtx, Pram, PramError};
+pub use machine::{BankModel, Counters, ExecMode, PeCtx, Pram, PramError, MAX_BANKS};

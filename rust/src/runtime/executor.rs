@@ -17,6 +17,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::artifacts::{ArtifactKind, ArtifactMeta, ArtifactRegistry};
 use crate::geometry::point::{live_prefix, Point, REMOTE};
+use crate::pram::ExecMode;
 
 /// Cumulative execution statistics (scraped by coordinator metrics).
 #[derive(Clone, Debug, Default)]
@@ -26,6 +27,10 @@ pub struct RuntimeStats {
     pub requests: u64,
     pub compile_ns: u64,
     pub execute_ns: u64,
+    /// PJRT results cross-checked against the PRAM engine (see
+    /// [`HullExecutor::set_reference_check`]).
+    pub ref_checks: u64,
+    pub ref_mismatches: u64,
 }
 
 /// Compile-cache + execution front-end for hull/hood artifacts.
@@ -34,6 +39,9 @@ pub struct HullExecutor {
     client: xla::PjRtClient,
     cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
     stats: RefCell<RuntimeStats>,
+    /// when set, every PJRT result is recomputed on the given PRAM engine
+    /// tier and compared; mismatches are counted, not fatal.
+    ref_check: Option<ExecMode>,
 }
 
 impl HullExecutor {
@@ -45,7 +53,18 @@ impl HullExecutor {
             client,
             cache: RefCell::new(HashMap::new()),
             stats: RefCell::new(RuntimeStats::default()),
+            ref_check: None,
         })
+    }
+
+    /// Cross-check every PJRT result against the PRAM engine running on
+    /// `mode` (`Fast` for a cheap shadow oracle, `Audited` to also keep
+    /// the cost model in the loop).  `None` disables the check.  All
+    /// three paths are bit-identical on f32-quantized general-position
+    /// inputs, so any divergence is a real artifact/runtime bug; it is
+    /// counted in [`RuntimeStats::ref_mismatches`], never fatal.
+    pub fn set_reference_check(&mut self, mode: Option<ExecMode>) {
+        self.ref_check = mode;
     }
 
     pub fn registry(&self) -> &ArtifactRegistry {
@@ -173,7 +192,7 @@ impl HullExecutor {
         let b = meta.batch.max(1);
         let ups = Self::literal_to_hoods(&up_lit, b, meta.n)?;
         let los = Self::literal_to_hoods(&lo_lit, b, meta.n)?;
-        Ok(ups
+        let out: Vec<(Vec<Point>, Vec<Point>)> = ups
             .into_iter()
             .zip(los)
             .take(batch.len())
@@ -183,7 +202,33 @@ impl HullExecutor {
                     live_prefix(&l).to_vec(),
                 )
             })
-            .collect())
+            .collect();
+        if let Some(mode) = self.ref_check {
+            let mut stats = self.stats.borrow_mut();
+            for (req, got) in batch.iter().zip(&out) {
+                stats.ref_checks += 1;
+                match Self::reference_full_hull(mode, req) {
+                    Some(want) if want == *got => {}
+                    _ => stats.ref_mismatches += 1,
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// (upper, lower) from the PRAM engine — the reference oracle for
+    /// [`HullExecutor::set_reference_check`].  Non-strict: inputs outside
+    /// general position yield `None`-free best-effort hulls upstream, so
+    /// the oracle never panics the serving path.
+    fn reference_full_hull(mode: ExecMode, pts: &[Point]) -> Option<(Vec<Point>, Vec<Point>)> {
+        let slots = pts.len().next_power_of_two().max(2);
+        let up = crate::wagener::pram_exec::run_pipeline_mode(pts, slots, mode, false).ok()?;
+        let neg: Vec<Point> = pts.iter().map(|p| Point::new(p.x, -p.y)).collect();
+        let lo = crate::wagener::pram_exec::run_pipeline_mode(&neg, slots, mode, false).ok()?;
+        Some((
+            live_prefix(&up.hood).to_vec(),
+            live_prefix(&lo.hood).iter().map(|p| Point::new(p.x, -p.y)).collect(),
+        ))
     }
 
     /// Execute an unbatched hood artifact (upper hull only).
@@ -205,7 +250,19 @@ impl HullExecutor {
             stats.execute_ns += t0.elapsed().as_nanos() as u64;
         }
         let rows = Self::literal_to_hoods(&hood, 1, meta.n)?;
-        Ok(live_prefix(&rows[0]).to_vec())
+        let got = live_prefix(&rows[0]).to_vec();
+        if let Some(mode) = self.ref_check {
+            let mut stats = self.stats.borrow_mut();
+            stats.ref_checks += 1;
+            let slots = points.len().next_power_of_two().max(2);
+            let want = crate::wagener::pram_exec::run_pipeline_mode(points, slots, mode, false)
+                .ok()
+                .map(|r| live_prefix(&r.hood).to_vec());
+            if want.as_deref() != Some(&got[..]) {
+                stats.ref_mismatches += 1;
+            }
+        }
+        Ok(got)
     }
 
     /// Convenience: route m-point requests to the right artifact and run.

@@ -49,6 +49,39 @@ fn gen_then_hull_with_trace_and_svg() {
 }
 
 #[test]
+fn hull_runs_on_both_pram_tiers() {
+    let dir = std::env::temp_dir().join(format!("wagener-cli-tiers-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let pts = dir.join("pts.txt");
+    let out = wagener()
+        .args(["gen", "--dist", "circle", "--n", "48", "--seed", "3", "--out"])
+        .arg(&pts)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    let mut hulls = Vec::new();
+    for mode in ["fast", "audited"] {
+        let out = wagener()
+            .arg("hull")
+            .arg(&pts)
+            .args(["--backend", "pram", "--exec-mode", mode])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{mode}: {}", String::from_utf8_lossy(&out.stderr));
+        let stdout = String::from_utf8(out.stdout).unwrap();
+        assert!(
+            stdout.contains(if mode == "fast" { "backend=pram-fast" } else { "backend=pram" }),
+            "{mode}: {stdout}"
+        );
+        // keep everything from the hull report on (tiers must agree)
+        hulls.push(stdout[stdout.find("# upper hood").unwrap()..].to_string());
+    }
+    assert_eq!(hulls[0], hulls[1], "tiers disagree on the served hull");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn occupancy_table_prints() {
     let out = wagener()
         .args(["occupancy", "--n", "128", "--dist", "parabola"])

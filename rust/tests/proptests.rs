@@ -83,6 +83,45 @@ fn prop_pram_is_crew_and_matches() {
     });
 }
 
+/// TIER invariant (the two-tier engine's contract): the fast serving
+/// tier and the audited instrument produce bit-identical hoods — and
+/// identical final device memory — on every CREW-clean input, across
+/// disc/circle/degenerate generators and n in {8..4096}.
+#[test]
+fn prop_fast_tier_bit_identical_to_audited() {
+    use wagener_hull::pram::ExecMode;
+    use wagener_hull::wagener::pram_exec::run_pipeline_mode;
+    check("fast-vs-audited", 30, |rng| {
+        let dist = random_dist(rng);
+        let slots = 1usize << rng.range_usize(3, 13); // 8 .. 4096
+        let m = rng.range_usize(1, slots + 1);
+        let pts = generate(dist, m, rng.next_u64());
+        let audited = run_pipeline_mode(&pts, slots, ExecMode::Audited, true)
+            .map_err(|e| format!("audited: {e}"))?;
+        let fast = run_pipeline_mode(&pts, slots, ExecMode::Fast, true)
+            .map_err(|e| format!("fast: {e}"))?;
+        // `hood` is the full padded device memory readback, REMOTE slots
+        // included, so equality here is final-mem equality
+        prop_assert!(
+            audited.hood == fast.hood,
+            "{} m={m} slots={slots}: tiers diverge",
+            dist.name()
+        );
+        prop_assert!(
+            audited.counters.steps == fast.counters.steps
+                && audited.counters.work == fast.counters.work,
+            "tier step/work accounting diverges"
+        );
+        let want = monotone_chain::upper_hull(&pts);
+        prop_assert!(
+            live_prefix(&fast.hood) == &want[..],
+            "{} m={m} slots={slots}: fast tier wrong hull",
+            dist.name()
+        );
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_ovl_matches_any_strip() {
     check("ovl-strips", 40, |rng| {

@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Tier-1 gate + perf baseline.
+#
+#   scripts/tier1.sh            # build, test, smoke-bench
+#
+# Runs `cargo build --release && cargo test -q` (the ROADMAP tier-1
+# verify) and then a fast smoke run of bench_runtime with
+# WAGENER_BENCH_JSON pointed at BENCH_pram.json, so every PR leaves a
+# machine-readable perf record (PRAM audited-vs-fast tier timings) for
+# the next PR to compare against.
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+cd "$ROOT"
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "tier1: cargo not found on PATH; install a Rust toolchain" >&2
+    exit 1
+fi
+
+echo "== tier1: cargo build --release =="
+cargo build --release
+
+echo "== tier1: cargo test -q =="
+cargo test -q
+
+echo "== tier1: smoke bench -> BENCH_pram.json =="
+: > "$ROOT/BENCH_pram.json"
+WAGENER_BENCH_FAST=1 WAGENER_BENCH_JSON="$ROOT/BENCH_pram.json" \
+    cargo bench --bench bench_runtime
+
+echo "tier1 OK — bench rows in BENCH_pram.json:"
+cat "$ROOT/BENCH_pram.json"
