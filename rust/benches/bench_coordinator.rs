@@ -1,7 +1,8 @@
 //! E6 — coordinator overhead and batching policy: throughput/latency of
 //! the serving layer itself (native backend so the backend cost is tiny
 //! and the router/batcher dominate), swept over batch size and flush
-//! deadline.
+//! deadline; plus the worker-pool scaling section (E6c) that feeds
+//! `BENCH_coordinator.json` via `scripts/tier1.sh`.
 //!
 //! Run: `cargo bench --bench bench_coordinator`
 
@@ -13,12 +14,16 @@ use wagener_hull::coordinator::{
 };
 use wagener_hull::geometry::generators::{generate, Distribution};
 
-fn coord(max_batch: usize, flush_us: u64) -> Arc<Coordinator> {
+fn coord(max_batch: usize, flush_us: u64, workers: usize) -> Arc<Coordinator> {
     Arc::new(
         Coordinator::start(CoordinatorConfig {
             backend: BackendKind::Native,
             batcher: BatcherConfig { max_batch, flush_us, queue_cap: 4096 },
             self_check: false,
+            workers,
+            // keep the measured work comparable across PRs: the filter
+            // would otherwise shrink the dense inputs before the backend
+            prefilter: false,
             ..Default::default()
         })
         .unwrap(),
@@ -29,14 +34,15 @@ fn main() {
     let b = Bencher::default();
     let pts = generate(Distribution::Disk, 200, 5);
 
-    // direct backend call = the floor (no batcher, no channels)
+    // direct backend call = the floor (no batcher, no channels);
+    // workers=1 keeps E6/E6b measuring router overhead, not the pool
     let mut report = Report::new("E6: coordinator overhead (native backend, 200-pt reqs)");
     report.add(b.run("floor/native_full_hull", || {
         wagener_hull::wagener::full_hull(std::hint::black_box(&pts))
     }));
 
     for (mb, flush) in [(1usize, 50u64), (4, 200), (8, 200), (8, 1000)] {
-        let c = coord(mb, flush);
+        let c = coord(mb, flush, 1);
         let pts2 = pts.clone();
         report.add(b.run(&format!("coordinator/batch{mb}_flush{flush}us"), move || {
             c.compute(pts2.clone()).unwrap()
@@ -47,7 +53,7 @@ fn main() {
     // concurrent wave throughput at different batching policies
     let mut report = Report::new("E6b: wave throughput (8 threads x 25 reqs)");
     for (mb, flush) in [(1usize, 100u64), (8, 400), (16, 800)] {
-        let c = coord(mb, flush);
+        let c = coord(mb, flush, 1);
         report.add(b.run_batched(
             &format!("wave/batch{mb}_flush{flush}us"),
             200,
@@ -81,5 +87,40 @@ fn main() {
             snap.get("mean_batch_size").unwrap()
         ));
     }
+    report.finish();
+
+    // E6c — the worker pool: 1 exec worker vs N, native backend, n=4096
+    // requests each forming their own batch (max_batch=1), fired as a
+    // 4-thread wave.  The acceptance gate for the pool PR: the N-worker
+    // row must beat the 1-worker row.
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+    let n_workers = hw.clamp(2, 8);
+    let mut report =
+        Report::new(&format!("E6c: worker pool 1 vs {n_workers} workers (native, n=4096)"));
+    let inputs: Vec<Vec<_>> = (0..4).map(|t| generate(Distribution::Disk, 4096, t)).collect();
+    for workers in [1usize, n_workers] {
+        let c = coord(1, 100, workers);
+        let inputs = inputs.clone();
+        report.add(b.run_batched(&format!("pool/workers{workers}_n4096"), 32, move || {
+            let mut handles = Vec::new();
+            for pts in inputs.iter().cloned() {
+                let c = c.clone();
+                handles.push(std::thread::spawn(move || {
+                    let waits: Vec<_> = (0..8)
+                        .map(|_| {
+                            c.submit(HullRequest { id: c.next_id(), points: pts.clone() })
+                        })
+                        .collect();
+                    for w in waits {
+                        w.recv().unwrap().unwrap();
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        }));
+    }
+    report.note(format!("hardware threads: {hw}"));
     report.finish();
 }

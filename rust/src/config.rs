@@ -14,6 +14,10 @@
 //! max_batch = 8              # 0 = backend preference
 //! flush_us = 500
 //! queue_cap = 1024
+//!
+//! [coordinator]
+//! workers = 0                # exec worker threads; 0 = hardware threads
+//! prefilter = true           # octagon interior-point pre-filter
 //! ```
 
 use std::path::PathBuf;
@@ -80,6 +84,13 @@ impl Config {
                     "batcher.queue_cap" => {
                         cfg.coordinator.batcher.queue_cap = as_usize(value, &path)?.max(1);
                     }
+                    "coordinator.workers" => {
+                        cfg.coordinator.workers = as_usize(value, &path)?;
+                    }
+                    "coordinator.prefilter" => {
+                        cfg.coordinator.prefilter =
+                            value.as_bool().ok_or_else(|| anyhow!("{path}: want bool"))?;
+                    }
                     _ => return Err(anyhow!("unknown config key: {path}")),
                 }
             }
@@ -119,6 +130,9 @@ exec_mode = "audited"
 max_batch = 16
 flush_us = 250
 queue_cap = 99
+[coordinator]
+workers = 6
+prefilter = false
 "#,
         )
         .unwrap();
@@ -130,6 +144,8 @@ queue_cap = 99
         assert_eq!(cfg.coordinator.batcher.max_batch, 16);
         assert_eq!(cfg.coordinator.batcher.flush_us, 250);
         assert_eq!(cfg.coordinator.batcher.queue_cap, 99);
+        assert_eq!(cfg.coordinator.workers, 6);
+        assert!(!cfg.coordinator.prefilter);
     }
 
     #[test]
@@ -138,6 +154,8 @@ queue_cap = 99
         assert_eq!(cfg.coordinator.backend, BackendKind::Native);
         assert_eq!(cfg.coordinator.exec_mode, ExecMode::Fast);
         assert_eq!(cfg.server.addr, "127.0.0.1:7878");
+        assert_eq!(cfg.coordinator.workers, 0); // 0 = available parallelism
+        assert!(cfg.coordinator.prefilter);
     }
 
     #[test]
@@ -147,5 +165,8 @@ queue_cap = 99
         assert!(Config::from_toml("[backend]\nexec_mode = \"warp\"").is_err());
         assert!(Config::from_toml("[batcher]\nmax_batch = \"lots\"").is_err());
         assert!(Config::from_toml("[batcher]\nmax_batch = -3").is_err());
+        assert!(Config::from_toml("[coordinator]\nworkers = -1").is_err());
+        assert!(Config::from_toml("[coordinator]\nprefilter = 3").is_err());
+        assert!(Config::from_toml("[coordinator]\nthreads = 4").is_err());
     }
 }

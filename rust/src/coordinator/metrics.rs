@@ -97,6 +97,8 @@ pub struct Metrics {
     pub batched_requests: AtomicU64,
     pub points_in: AtomicU64,
     pub hull_points_out: AtomicU64,
+    /// points dropped by the octagon interior-point pre-filter.
+    pub filtered_points: AtomicU64,
     pub queue_latency: Histogram,
     pub exec_latency: Histogram,
     pub e2e_latency: Histogram,
@@ -132,6 +134,7 @@ impl Metrics {
             ),
             ("points_in", g(&self.points_in)),
             ("hull_points_out", g(&self.hull_points_out)),
+            ("filtered_points", g(&self.filtered_points)),
             ("queue_latency", self.queue_latency.to_json()),
             ("exec_latency", self.exec_latency.to_json()),
             ("e2e_latency", self.e2e_latency.to_json()),

@@ -1,6 +1,7 @@
 //! Request/response types and input preprocessing.
 
 use crate::geometry::point::{sort_by_x, Point};
+use crate::geometry::predicates::{orient2d, Orientation};
 
 /// A hull computation request (raw client points, any order).
 #[derive(Clone, Debug)]
@@ -59,6 +60,85 @@ pub struct Prepared {
     pub points: Vec<Point>,
     /// general position violated (duplicate x): needs the exact fallback.
     pub degenerate: bool,
+    /// points discarded by the octagon interior-point pre-filter.
+    pub filtered: usize,
+}
+
+/// Below this, the octagon test costs more than the hull it would save.
+const PREFILTER_MIN_POINTS: usize = 32;
+
+/// Octagon interior-point pre-filter (the CudaChain / GPU-filter trick):
+/// points *strictly* inside the convex polygon spanned by the extreme
+/// points of the 8 directions ±x, ±y, ±(x+y), ±(x−y) cannot be hull
+/// vertices, so large dense inputs shrink before they reach a backend.
+///
+/// Exact by construction: the test uses the robust orientation predicate
+/// and keeps anything on the polygon boundary, so the hull of the kept
+/// set is bit-identical to the hull of the input.  Input must be sorted;
+/// order is preserved.  Filters in place (no per-point allocation —
+/// nothing moves when no point is inside) and returns the number dropped;
+/// 0 when filtering is not worthwhile (small input, degenerate octagon).
+fn octagon_filter(pts: &mut Vec<Point>) -> usize {
+    if pts.len() < PREFILTER_MIN_POINTS {
+        return 0;
+    }
+    // extreme point per direction, counter-clockwise starting at W:
+    //   W = min x, SW = min x+y, S = min y, SE = max x−y,
+    //   E = max x, NE = max x+y, N = max y, NW = min x−y
+    // — all eight maxima from ONE pass over the points (this runs on the
+    // submit() hot path for every request ≥ the size floor)
+    fn keys(p: &Point) -> [f64; 8] {
+        [
+            -p.x,
+            -(p.x + p.y),
+            -p.y,
+            p.x - p.y,
+            p.x,
+            p.x + p.y,
+            p.y,
+            -(p.x - p.y),
+        ]
+    }
+    let mut best = [pts[0]; 8];
+    let mut best_k = keys(&pts[0]);
+    for p in &pts[1..] {
+        let k = keys(p);
+        for dir in 0..8 {
+            if k[dir] > best_k[dir] {
+                best_k[dir] = k[dir];
+                best[dir] = *p;
+            }
+        }
+    }
+    let mut octagon: Vec<Point> = Vec::with_capacity(8);
+    for b in best {
+        if octagon.last() != Some(&b) {
+            octagon.push(b);
+        }
+    }
+    while octagon.len() > 1 && octagon.first() == octagon.last() {
+        octagon.pop();
+    }
+    if octagon.len() < 3 {
+        return 0; // all extremes (near-)coincident: nothing to gain
+    }
+    // tie-breaking among equal-key extremes can in principle produce a
+    // degenerate traversal; a right turn anywhere voids the convexity
+    // proof the filter rests on, so bail out rather than risk dropping a
+    // hull vertex (≤ 8 robust predicate calls)
+    let m = octagon.len();
+    for i in 0..m {
+        let (a, b, c) = (octagon[i], octagon[(i + 1) % m], octagon[(i + 2) % m]);
+        if orient2d(a, b, c) == Orientation::Right {
+            return 0;
+        }
+    }
+    let strictly_inside = |p: &Point| {
+        (0..m).all(|i| orient2d(octagon[i], octagon[(i + 1) % m], *p) == Orientation::Left)
+    };
+    let before = pts.len();
+    pts.retain(|p| !strictly_inside(p));
+    before - pts.len()
 }
 
 /// Validate + canonicalize a request.
@@ -66,8 +146,10 @@ pub struct Prepared {
 /// Points are quantized to f32 (the artifact wire type) and x-sorted; the
 /// paper's coordinate convention ([0,1] x-range, REMOTE = x > 1) is
 /// enforced here, and duplicate x-coordinates (general-position violation)
-/// mark the request for the serial-exact path.
-pub fn prepare(req: &HullRequest) -> Result<Prepared, RequestError> {
+/// mark the request for the serial-exact path.  With `prefilter` set,
+/// interior points are dropped by the octagon pre-filter first (the hull
+/// is unchanged; the count lands in `Prepared::filtered`).
+pub fn prepare(req: &HullRequest, prefilter: bool) -> Result<Prepared, RequestError> {
     if req.points.is_empty() {
         return Err(RequestError::Empty);
     }
@@ -82,13 +164,16 @@ pub fn prepare(req: &HullRequest) -> Result<Prepared, RequestError> {
     let mut pts: Vec<Point> = req.points.iter().map(|p| p.quantize_f32()).collect();
     sort_by_x(&mut pts);
     pts.dedup(); // exact duplicates can always be dropped
+    let filtered = if prefilter { octagon_filter(&mut pts) } else { 0 };
     let degenerate = pts.windows(2).any(|w| w[0].x == w[1].x);
-    Ok(Prepared { id: req.id, points: pts, degenerate })
+    Ok(Prepared { id: req.id, points: pts, degenerate, filtered })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::geometry::generators::{generate, Distribution};
+    use crate::serial::monotone_chain;
 
     fn req(v: &[(f64, f64)]) -> HullRequest {
         HullRequest {
@@ -99,7 +184,7 @@ mod tests {
 
     #[test]
     fn sorts_and_quantizes() {
-        let p = prepare(&req(&[(0.9, 0.1), (0.1, 0.9)])).unwrap();
+        let p = prepare(&req(&[(0.9, 0.1), (0.1, 0.9)]), false).unwrap();
         assert!(p.points[0].x < p.points[1].x);
         assert!(!p.degenerate);
         for pt in &p.points {
@@ -109,27 +194,27 @@ mod tests {
 
     #[test]
     fn rejects_bad_inputs() {
-        assert!(matches!(prepare(&req(&[])), Err(RequestError::Empty)));
+        assert!(matches!(prepare(&req(&[]), false), Err(RequestError::Empty)));
         assert!(matches!(
-            prepare(&req(&[(f64::NAN, 0.0)])),
+            prepare(&req(&[(f64::NAN, 0.0)]), false),
             Err(RequestError::NonFinite(0))
         ));
         assert!(matches!(
-            prepare(&req(&[(0.5, 0.5), (1.5, 0.0)])),
+            prepare(&req(&[(0.5, 0.5), (1.5, 0.0)]), false),
             Err(RequestError::OutOfRange(1))
         ));
     }
 
     #[test]
     fn exact_duplicates_dropped() {
-        let p = prepare(&req(&[(0.5, 0.5), (0.5, 0.5), (0.2, 0.2)])).unwrap();
+        let p = prepare(&req(&[(0.5, 0.5), (0.5, 0.5), (0.2, 0.2)]), false).unwrap();
         assert_eq!(p.points.len(), 2);
         assert!(!p.degenerate);
     }
 
     #[test]
     fn duplicate_x_flags_degenerate() {
-        let p = prepare(&req(&[(0.5, 0.1), (0.5, 0.9), (0.2, 0.2)])).unwrap();
+        let p = prepare(&req(&[(0.5, 0.1), (0.5, 0.9), (0.2, 0.2)]), false).unwrap();
         assert_eq!(p.points.len(), 3);
         assert!(p.degenerate);
     }
@@ -139,7 +224,90 @@ mod tests {
         // two doubles that collide in f32 become a duplicate and are merged
         let a = 0.1f64;
         let b = f64::from_bits(a.to_bits() + 1);
-        let p = prepare(&req(&[(a, 0.3), (b, 0.3)])).unwrap();
+        let p = prepare(&req(&[(a, 0.3), (b, 0.3)]), false).unwrap();
         assert_eq!(p.points.len(), 1);
+    }
+
+    // ------------------------------------------------------- prefilter
+
+    #[test]
+    fn prefilter_preserves_hull_on_every_distribution() {
+        for dist in Distribution::ALL {
+            for &(n, seed) in &[(64usize, 1u64), (500, 2), (4096, 3)] {
+                let pts = generate(dist, n, seed);
+                let raw = HullRequest { id: 1, points: pts };
+                let plain = prepare(&raw, false).unwrap();
+                let filt = prepare(&raw, true).unwrap();
+                assert_eq!(
+                    monotone_chain::full_hull(&plain.points),
+                    monotone_chain::full_hull(&filt.points),
+                    "{} n={n} hull changed by prefilter",
+                    dist.name()
+                );
+                assert_eq!(plain.points.len(), filt.points.len() + filt.filtered);
+            }
+        }
+    }
+
+    #[test]
+    fn prefilter_sheds_interior_points_on_dense_input() {
+        let pts = generate(Distribution::Disk, 4096, 7);
+        let p = prepare(&HullRequest { id: 1, points: pts }, true).unwrap();
+        assert!(
+            p.filtered > 2048,
+            "dense disk kept {} of 4096 points",
+            p.points.len()
+        );
+        // output must remain sorted for the backends
+        assert!(p.points.windows(2).all(|w| w[0].x <= w[1].x));
+    }
+
+    #[test]
+    fn prefilter_skips_small_inputs() {
+        let pts = generate(Distribution::Disk, PREFILTER_MIN_POINTS - 1, 7);
+        let p = prepare(&HullRequest { id: 1, points: pts }, true).unwrap();
+        assert_eq!(p.filtered, 0);
+    }
+
+    #[test]
+    fn prefilter_keeps_octagon_boundary_points() {
+        // the four unit-square corners collapse the octagon to the square
+        // itself; (0.5, 0) lies exactly ON its bottom edge and must be
+        // kept (the interior test is strict), while (0.5, 0.5) is
+        // strictly inside and must go
+        let mut v: Vec<(f64, f64)> = vec![
+            (0.0, 0.0),
+            (1.0, 0.0),
+            (1.0, 1.0),
+            (0.0, 1.0),
+            (0.5, 0.0),
+            (0.5, 0.5),
+        ];
+        for k in 0..40 {
+            v.push((0.25 + 0.01 * k as f64, 0.4)); // interior filler
+        }
+        let p = prepare(&req(&v), true).unwrap();
+        assert!(
+            p.points.contains(&Point::new(0.5, 0.0)),
+            "boundary point dropped by prefilter"
+        );
+        assert!(
+            !p.points.contains(&Point::new(0.5, 0.5)),
+            "interior point survived the prefilter"
+        );
+    }
+
+    #[test]
+    fn prefilter_never_drops_hull_vertices_randomized() {
+        for seed in 0..20u64 {
+            let pts = generate(Distribution::ALL[(seed % 7) as usize], 777, seed);
+            let raw = HullRequest { id: 1, points: pts };
+            let plain = prepare(&raw, false).unwrap();
+            let filt = prepare(&raw, true).unwrap();
+            let (u, l) = monotone_chain::full_hull(&plain.points);
+            for hv in u.iter().chain(l.iter()) {
+                assert!(filt.points.contains(hv), "hull vertex {hv} filtered out");
+            }
+        }
     }
 }

@@ -4,17 +4,23 @@
 //! runtime, and the workload is CPU-bound — see DESIGN.md §Substitutions):
 //!
 //! ```text
-//! callers ──submit()──► [batcher thread] ──batches──► [exec thread]
-//!    ▲  (prepare +              │  size-class queues        │ owns the
-//!    │   degenerate             ▼  deadline flushing        ▼ backend
-//!    │   fast path)      bounded channel             replies + metrics
+//! callers ──submit()──► [batcher thread] ──batches──► [exec pool: N workers]
+//!    ▲  (prepare +              │  size-class queues        │ each worker owns
+//!    │   prefilter +            ▼  deadline flushing        ▼ its OWN backend
+//!    │   degenerate      bounded channel, shared      replies + metrics
+//!    │   fast path)      by all workers (Mutex<Receiver>)
 //!    └──────────────────────── per-request reply channel ◄──┘
 //! ```
+//!
+//! The pool is the host-side analogue of multi-SM dispatch: size classes
+//! execute concurrently instead of head-of-line blocking behind one
+//! thread, and each worker constructs its own backend *on* its thread
+//! (PJRT handles are `!Send`, so backends can never migrate).
 
 use std::path::PathBuf;
-use std::sync::atomic::AtomicU64;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -41,6 +47,13 @@ pub struct CoordinatorConfig {
     /// PRAM engine tier for the `pram` backend: the serving path defaults
     /// to `Fast`; `Audited` keeps the CREW/bank-model instrument live.
     pub exec_mode: ExecMode,
+    /// exec worker threads, each owning its own backend instance
+    /// (0 = one per available hardware thread).
+    pub workers: usize,
+    /// octagon interior-point pre-filter in `prepare()`: large dense
+    /// inputs shrink before they reach a backend (exact — the hull is
+    /// unchanged; dropped points land in the `filtered_points` metric).
+    pub prefilter: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -52,7 +65,24 @@ impl Default for CoordinatorConfig {
             self_check: false,
             preload: false,
             exec_mode: ExecMode::Fast,
+            workers: 0,
+            prefilter: true,
         }
+    }
+}
+
+/// Resolve a `workers` config value (0 = auto).  Auto means one worker
+/// per hardware thread for host backends, but a single worker for
+/// `pjrt`: every pjrt worker loads the artifact registry and (under
+/// `preload`) compiles each artifact, so multiplying executors by core
+/// count must be an explicit choice, never a default.
+fn effective_workers(cfg: &CoordinatorConfig) -> usize {
+    if cfg.workers > 0 {
+        cfg.workers
+    } else if cfg.backend == BackendKind::Pjrt {
+        1
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     }
 }
 
@@ -60,104 +90,178 @@ impl Default for CoordinatorConfig {
 pub struct Coordinator {
     submit_tx: Option<mpsc::SyncSender<Item>>,
     batcher: Option<JoinHandle<()>>,
-    exec: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
     backend_name: &'static str,
     max_points: usize,
+    worker_count: usize,
+    prefilter: bool,
     next_id: AtomicU64,
 }
 
+/// One exec worker: builds its own backend, then pulls batches off the
+/// shared channel until the batcher hangs up.  Holding the receiver lock
+/// only while *dequeuing* (never while computing) is what lets size
+/// classes execute concurrently across the pool.
+fn run_exec_worker(
+    cfg: CoordinatorConfig,
+    metrics: Arc<Metrics>,
+    batch_rx: Arc<Mutex<mpsc::Receiver<BatchMsg>>>,
+    ready_tx: mpsc::Sender<Result<(usize, usize), String>>,
+    hw_threads: usize,
+    busy: Arc<AtomicUsize>,
+) {
+    let backend = match cfg.backend.build(
+        &cfg.artifacts_dir,
+        cfg.preload,
+        cfg.exec_mode,
+        cfg.self_check,
+    ) {
+        Ok(b) => {
+            let _ = ready_tx.send(Ok((b.max_points(), b.preferred_batch())));
+            b
+        }
+        Err(e) => {
+            let _ = ready_tx.send(Err(e));
+            return;
+        }
+    };
+    drop(ready_tx);
+
+    loop {
+        let msg = match batch_rx.lock() {
+            Ok(guard) => guard.recv(),
+            Err(_) => return, // a sibling worker panicked mid-dequeue
+        };
+        let Ok(BatchMsg { items }) = msg else { return };
+        let exec_start = Instant::now();
+        let reqs: Vec<&[Point]> = items.iter().map(|i| i.prepared.points.as_slice()).collect();
+        // Thread budget for this dispatch: an even share of the machine
+        // among the dispatches in flight *right now*.  An idle pool hands
+        // one big request full hardware width; a saturated pool converges
+        // to 1 per worker — never workers × hw threads.  The count is a
+        // heuristic (Relaxed races only soften the split), correctness
+        // never depends on it.
+        let in_flight = busy.fetch_add(1, Ordering::Relaxed) + 1;
+        let width = (hw_threads / in_flight).max(1);
+        // A panic escaping compute would otherwise kill this worker
+        // silently (pool one thread smaller forever) AND leak the busy
+        // gauge (permanently shrinking every survivor's width); contain
+        // it to a per-batch Backend error instead.  Host backends are
+        // stateless and PJRT's RefCell borrows release on unwind, so the
+        // backend stays usable.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            backend.compute(&reqs, width)
+        }))
+        .unwrap_or_else(|p| {
+            let what = p
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| p.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "unknown panic".into());
+            Err(format!("backend panicked: {what}"))
+        });
+        busy.fetch_sub(1, Ordering::Relaxed);
+        let exec_ns = exec_start.elapsed().as_nanos() as u64;
+        Metrics::inc(&metrics.batches);
+        Metrics::add(&metrics.batched_requests, items.len() as u64);
+        metrics.exec_latency.record_ns(exec_ns);
+        match result {
+            Ok(hulls) => {
+                for (item, (upper, lower)) in items.into_iter().zip(hulls) {
+                    let queue_ns = (exec_start - item.enqueued).as_nanos() as u64;
+                    if cfg.self_check {
+                        if let Err(e) = check_upper_hull(&item.prepared.points, &upper) {
+                            Metrics::inc(&metrics.errors);
+                            let _ = item.reply.send(Err(RequestError::Backend(format!(
+                                "self-check failed: {e}"
+                            ))));
+                            continue;
+                        }
+                    }
+                    Metrics::inc(&metrics.responses);
+                    Metrics::add(&metrics.hull_points_out, (upper.len() + lower.len()) as u64);
+                    metrics.e2e_latency.record(item.enqueued.elapsed());
+                    metrics.queue_latency.record_ns(queue_ns);
+                    let _ = item.reply.send(Ok(HullResponse {
+                        id: item.prepared.id,
+                        upper,
+                        lower,
+                        backend: backend.name(),
+                        queue_ns,
+                        exec_ns,
+                    }));
+                }
+            }
+            Err(e) => {
+                for item in items {
+                    Metrics::inc(&metrics.errors);
+                    let _ = item.reply.send(Err(RequestError::Backend(e.clone())));
+                }
+            }
+        }
+    }
+}
+
 impl Coordinator {
-    /// Spawn the batcher + exec threads; fails if the backend cannot be
-    /// constructed (e.g. missing artifacts for `pjrt`).
+    /// Spawn the batcher + the exec worker pool; fails if any backend
+    /// cannot be constructed (e.g. missing artifacts for `pjrt`).
     pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator, String> {
+        let worker_count = effective_workers(&cfg);
         let metrics = Arc::new(Metrics::default());
         let (submit_tx, submit_rx) = mpsc::sync_channel::<Item>(cfg.batcher.queue_cap);
         let (batch_tx, batch_rx) = mpsc::sync_channel::<BatchMsg>(cfg.batcher.queue_cap.max(1));
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
         let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize), String>>();
 
-        // --- exec thread: owns the backend (PJRT handles are !Send)
-        let exec_metrics = metrics.clone();
-        let exec_cfg = cfg.clone();
-        let exec = std::thread::Builder::new()
-            .name("hull-exec".into())
-            .spawn(move || {
-                let backend = match exec_cfg.backend.build(
-                    &exec_cfg.artifacts_dir,
-                    exec_cfg.preload,
-                    exec_cfg.exec_mode,
-                    exec_cfg.self_check,
-                ) {
-                    Ok(b) => {
-                        let _ = ready_tx.send(Ok((b.max_points(), b.preferred_batch())));
-                        b
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                while let Ok(BatchMsg { items }) = batch_rx.recv() {
-                    let exec_start = Instant::now();
-                    let reqs: Vec<Vec<Point>> =
-                        items.iter().map(|i| i.prepared.points.clone()).collect();
-                    let result = backend.compute(&reqs);
-                    let exec_ns = exec_start.elapsed().as_nanos() as u64;
-                    Metrics::inc(&exec_metrics.batches);
-                    Metrics::add(&exec_metrics.batched_requests, items.len() as u64);
-                    exec_metrics.exec_latency.record_ns(exec_ns);
-                    match result {
-                        Ok(hulls) => {
-                            for (item, (upper, lower)) in items.into_iter().zip(hulls) {
-                                let queue_ns =
-                                    (exec_start - item.enqueued).as_nanos() as u64;
-                                if exec_cfg.self_check {
-                                    if let Err(e) =
-                                        check_upper_hull(&item.prepared.points, &upper)
-                                    {
-                                        Metrics::inc(&exec_metrics.errors);
-                                        let _ = item.reply.send(Err(RequestError::Backend(
-                                            format!("self-check failed: {e}"),
-                                        )));
-                                        continue;
-                                    }
-                                }
-                                Metrics::inc(&exec_metrics.responses);
-                                Metrics::add(
-                                    &exec_metrics.hull_points_out,
-                                    (upper.len() + lower.len()) as u64,
-                                );
-                                exec_metrics
-                                    .e2e_latency
-                                    .record(item.enqueued.elapsed());
-                                exec_metrics.queue_latency.record_ns(queue_ns);
-                                let _ = item.reply.send(Ok(HullResponse {
-                                    id: item.prepared.id,
-                                    upper,
-                                    lower,
-                                    backend: backend.name(),
-                                    queue_ns,
-                                    exec_ns,
-                                }));
-                            }
-                        }
-                        Err(e) => {
-                            for item in items {
-                                Metrics::inc(&exec_metrics.errors);
-                                let _ = item
-                                    .reply
-                                    .send(Err(RequestError::Backend(e.clone())));
-                            }
-                        }
-                    }
-                }
-            })
-            .map_err(|e| e.to_string())?;
+        // Shared gauge of dispatches in flight: each worker sizes its
+        // intra-batch / intra-request thread budget as hw / in_flight at
+        // dispatch time, so a lone request on an idle pool still gets
+        // full hardware width while a saturated pool never books
+        // workers × hw transient threads.
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let busy = Arc::new(AtomicUsize::new(0));
 
-        // wait for backend construction before declaring ready
-        let (max_points, pref_batch) = ready_rx
-            .recv()
-            .map_err(|_| "exec thread died during startup".to_string())??;
+        let mut workers = Vec::with_capacity(worker_count);
+        for w in 0..worker_count {
+            let cfg = cfg.clone();
+            let metrics = metrics.clone();
+            let batch_rx = batch_rx.clone();
+            let ready_tx = ready_tx.clone();
+            let busy = busy.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("hull-exec-{w}"))
+                .spawn(move || run_exec_worker(cfg, metrics, batch_rx, ready_tx, hw, busy))
+                .map_err(|e| e.to_string())?;
+            workers.push(handle);
+        }
+        drop(ready_tx);
+
+        // wait for every backend construction before declaring ready
+        let mut max_points = usize::MAX;
+        let mut pref_batch = 1usize;
+        let mut failure: Option<String> = None;
+        for _ in 0..worker_count {
+            match ready_rx.recv() {
+                Ok(Ok((mp, pb))) => {
+                    max_points = max_points.min(mp);
+                    pref_batch = pref_batch.max(pb);
+                }
+                Ok(Err(e)) => failure = Some(e),
+                Err(_) => {
+                    failure.get_or_insert_with(|| "exec worker died during startup".to_string());
+                    break;
+                }
+            }
+        }
+        if let Some(e) = failure {
+            // closing the batch channel sends every surviving worker home
+            drop(batch_tx);
+            for h in workers {
+                let _ = h.join();
+            }
+            return Err(e);
+        }
 
         let max_batch = if cfg.batcher.max_batch == 0 {
             pref_batch.max(1)
@@ -173,10 +277,12 @@ impl Coordinator {
         Ok(Coordinator {
             submit_tx: Some(submit_tx),
             batcher: Some(batcher),
-            exec: Some(exec),
+            workers,
             metrics,
             backend_name: cfg.backend.name(),
             max_points,
+            worker_count,
+            prefilter: cfg.prefilter,
             next_id: AtomicU64::new(1),
         })
     }
@@ -187,6 +293,11 @@ impl Coordinator {
 
     pub fn max_points(&self) -> usize {
         self.max_points
+    }
+
+    /// Number of exec workers in the pool.
+    pub fn workers(&self) -> usize {
+        self.worker_count
     }
 
     /// Allocate a request id (for callers that don't track their own).
@@ -203,7 +314,7 @@ impl Coordinator {
         Metrics::inc(&self.metrics.requests);
         Metrics::add(&self.metrics.points_in, req.points.len() as u64);
 
-        let prepared = match prepare(&req) {
+        let prepared = match prepare(&req, self.prefilter) {
             Ok(p) => p,
             Err(e) => {
                 Metrics::inc(&self.metrics.errors);
@@ -219,8 +330,14 @@ impl Coordinator {
             }));
             return reply_rx;
         }
+        // recorded only for requests that will actually be served, so the
+        // gauge tracks real filter savings (not work thrown away by a
+        // TooLarge rejection)
+        Metrics::add(&self.metrics.filtered_points, prepared.filtered as u64);
         if prepared.degenerate {
-            // exact fast path: general position violated; compute inline
+            // exact fast path: general position violated; compute inline.
+            // All three latency histograms are recorded, matching the
+            // batched path (queue time is genuinely zero here).
             let t0 = Instant::now();
             let (upper, lower) = exact_full_hull(&prepared.points);
             Metrics::inc(&self.metrics.degenerate_fallbacks);
@@ -230,6 +347,8 @@ impl Coordinator {
                 (upper.len() + lower.len()) as u64,
             );
             let exec_ns = t0.elapsed().as_nanos() as u64;
+            self.metrics.exec_latency.record_ns(exec_ns);
+            self.metrics.queue_latency.record_ns(0);
             self.metrics.e2e_latency.record_ns(exec_ns);
             let _ = reply_tx.send(Ok(HullResponse {
                 id: prepared.id,
@@ -266,7 +385,7 @@ impl Coordinator {
         self.metrics.snapshot()
     }
 
-    /// Graceful shutdown: drain queues, join threads.
+    /// Graceful shutdown: drain queues, join every worker.
     pub fn shutdown(mut self) {
         self.shutdown_inner();
     }
@@ -274,10 +393,10 @@ impl Coordinator {
     fn shutdown_inner(&mut self) {
         self.submit_tx.take(); // closes the batcher's input
         if let Some(h) = self.batcher.take() {
-            let _ = h.join();
+            let _ = h.join(); // batcher drains its queues, then drops batch_tx
         }
-        if let Some(h) = self.exec.take() {
-            let _ = h.join();
+        for h in self.workers.drain(..) {
+            let _ = h.join(); // each worker drains the shared channel dry
         }
     }
 }
@@ -293,12 +412,26 @@ mod tests {
     use super::*;
     use crate::geometry::generators::{generate, Distribution};
     use crate::serial::monotone_chain;
+    use std::time::Duration;
 
     fn coord(kind: BackendKind) -> Coordinator {
         Coordinator::start(CoordinatorConfig {
             backend: kind,
             batcher: BatcherConfig { max_batch: 4, flush_us: 200, queue_cap: 64 },
             self_check: true,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    fn coord_workers(kind: BackendKind, workers: usize) -> Coordinator {
+        Coordinator::start(CoordinatorConfig {
+            backend: kind,
+            batcher: BatcherConfig { max_batch: 1, flush_us: 100, queue_cap: 256 },
+            workers,
+            // keep inputs at full size: the head-of-line test needs the
+            // big request to actually be big when it reaches the backend
+            prefilter: false,
             ..Default::default()
         })
         .unwrap()
@@ -353,7 +486,7 @@ mod tests {
     }
 
     #[test]
-    fn degenerate_goes_exact() {
+    fn degenerate_goes_exact_and_records_all_latencies() {
         let c = coord(BackendKind::Native);
         let pts = vec![
             Point::new(0.5, 0.1),
@@ -366,6 +499,15 @@ mod tests {
         assert_eq!(resp.upper.len(), 3);
         let snap = c.snapshot().0;
         assert_eq!(snap.get("degenerate_fallbacks").unwrap().as_usize(), Some(1));
+        // the degenerate fast path must feed every latency histogram
+        // (it used to record only e2e, silently undercounting the rest)
+        for h in ["e2e_latency", "exec_latency", "queue_latency"] {
+            assert_eq!(
+                snap.get(h).unwrap().get("count").unwrap().as_usize(),
+                Some(1),
+                "{h} skipped by the degenerate path"
+            );
+        }
     }
 
     #[test]
@@ -404,5 +546,128 @@ mod tests {
         c.shutdown_inner();
         let err = c.compute(generate(Distribution::Disk, 10, 1)).unwrap_err();
         assert_eq!(err, RequestError::Shutdown);
+    }
+
+    // ------------------------------------------------------- worker pool
+
+    #[test]
+    fn worker_pool_size_resolves() {
+        let c = coord_workers(BackendKind::Serial, 3);
+        assert_eq!(c.workers(), 3);
+        let auto = coord_workers(BackendKind::Serial, 0);
+        assert!(auto.workers() >= 1);
+    }
+
+    /// N-worker results must be bit-identical to the 1-worker path, on
+    /// every host backend (the acceptance parity gate).
+    #[test]
+    fn n_workers_bit_identical_to_one_worker() {
+        for kind in [BackendKind::Native, BackendKind::Serial, BackendKind::Pram] {
+            let c1 = coord_workers(kind, 1);
+            let c4 = coord_workers(kind, 4);
+            let inputs: Vec<Vec<Point>> = (0..12)
+                .map(|k| {
+                    generate(Distribution::ALL[k % 7], 16 + 37 * (k % 5), 1000 + k as u64)
+                })
+                .collect();
+            for pts in &inputs {
+                let a = c1.compute(pts.clone()).unwrap();
+                let b = c4.compute(pts.clone()).unwrap();
+                assert_eq!(a.upper, b.upper, "{} upper diverged", kind.name());
+                assert_eq!(a.lower, b.lower, "{} lower diverged", kind.name());
+                assert_eq!(a.backend, b.backend);
+            }
+            c1.shutdown();
+            c4.shutdown();
+        }
+    }
+
+    /// A small request in its own size class must not queue behind a big
+    /// batch when a second worker is idle.
+    #[test]
+    fn no_head_of_line_blocking_across_size_classes() {
+        let big = generate(Distribution::Disk, 1 << 19, 3);
+        let small = generate(Distribution::Disk, 64, 4);
+
+        // calibrate: how long does the big request take alone?
+        let c = coord_workers(BackendKind::Native, 2);
+        let t0 = Instant::now();
+        c.compute(big.clone()).unwrap();
+        let t_big = t0.elapsed();
+
+        // occupy one worker with the big request, then race the small one
+        let big_rx = c.submit(HullRequest { id: c.next_id(), points: big });
+        std::thread::sleep(Duration::from_millis(20)); // let it reach a worker
+        let t0 = Instant::now();
+        let small_rx = c.submit(HullRequest { id: c.next_id(), points: small });
+        small_rx.recv().unwrap().unwrap();
+        let t_small = t0.elapsed();
+        big_rx.recv().unwrap().unwrap();
+
+        // only meaningful when the big request is actually slow; on very
+        // fast machines the race can't be observed and anything passes
+        if t_big > Duration::from_millis(100) {
+            assert!(
+                t_small < t_big / 2,
+                "small request head-of-line blocked: {t_small:?} vs big {t_big:?}"
+            );
+        }
+        c.shutdown();
+    }
+
+    /// Shutdown must drain: every in-flight request gets a response, all
+    /// workers join, nothing is dropped on the floor.
+    #[test]
+    fn shutdown_drains_all_workers() {
+        let c = coord_workers(BackendKind::Native, 3);
+        let mut waits = Vec::new();
+        for k in 0..30u64 {
+            let pts = generate(Distribution::ALL[(k % 7) as usize], 20 + k as usize, k);
+            waits.push(c.submit(HullRequest { id: k + 1, points: pts }));
+        }
+        let metrics = c.metrics.clone();
+        c.shutdown(); // joins batcher + all workers; queues must drain first
+        for w in waits {
+            w.recv()
+                .expect("reply channel closed without a response")
+                .expect("request failed during drain");
+        }
+        let snap = metrics.snapshot().0;
+        assert_eq!(snap.get("responses").unwrap().as_usize(), Some(30));
+        assert_eq!(snap.get("errors").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn prefilter_counts_interior_points() {
+        let c = Coordinator::start(CoordinatorConfig {
+            backend: BackendKind::Native,
+            self_check: true,
+            prefilter: true,
+            ..Default::default()
+        })
+        .unwrap();
+        let pts = generate(Distribution::Disk, 4096, 9);
+        let resp = c.compute(pts.clone()).unwrap();
+        let (u, l) = monotone_chain::full_hull(&pts);
+        assert_eq!(resp.upper, u);
+        assert_eq!(resp.lower, l);
+        let snap = c.snapshot().0;
+        let filtered = snap.get("filtered_points").unwrap().as_usize().unwrap();
+        assert!(filtered > 2048, "dense disk should shed most interior points: {filtered}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn prefilter_off_is_honored() {
+        let c = Coordinator::start(CoordinatorConfig {
+            backend: BackendKind::Native,
+            prefilter: false,
+            ..Default::default()
+        })
+        .unwrap();
+        c.compute(generate(Distribution::Disk, 4096, 9)).unwrap();
+        let snap = c.snapshot().0;
+        assert_eq!(snap.get("filtered_points").unwrap().as_usize(), Some(0));
+        c.shutdown();
     }
 }

@@ -36,7 +36,7 @@ commands:
   hull       <points-file> [--trace <file>] [--svg <file>] [--backend <pjrt|native|serial|pram>]
              [--artifacts <dir>] [--exec-mode <fast|audited>]
   serve      [--config <file>] [--addr <host:port>] [--backend <kind>] [--artifacts <dir>]
-             [--exec-mode <fast|audited>]
+             [--exec-mode <fast|audited>] [--workers <n>]
   client     --addr <host:port> <points-file>
   occupancy  --n <count> [--dist <name>] [--seed <u64>]
   artifacts  [--dir <dir>]
@@ -155,6 +155,14 @@ fn parse_exec_mode(flags: &HashMap<String, String>) -> Result<Option<ExecMode>> 
         .transpose()
 }
 
+/// Parse the optional `--workers <n>` flag (0 = available parallelism).
+fn parse_workers(flags: &HashMap<String, String>) -> Result<Option<usize>> {
+    flags
+        .get("workers")
+        .map(|s| s.parse::<usize>().context("--workers wants a non-negative integer"))
+        .transpose()
+}
+
 /// `--exec-mode` only changes behaviour on the pram backend (and pjrt
 /// under self_check); surface the no-op instead of silently ignoring it.
 fn warn_if_exec_mode_noop(mode: Option<ExecMode>, backend: BackendKind, self_check: bool) {
@@ -221,6 +229,10 @@ fn cmd_hull(args: &[String]) -> Result<()> {
         artifacts_dir: PathBuf::from(
             flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into()),
         ),
+        // one-shot CLI: a single request is a single one-item batch, so
+        // a pool could never help — pin one worker (no --workers here;
+        // intra-request parallelism comes from the backend itself)
+        workers: 1,
         ..Default::default()
     };
     if let Some(mode) = exec_mode {
@@ -272,14 +284,18 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     if let Some(mode) = exec_mode {
         cfg.coordinator.exec_mode = mode;
     }
+    if let Some(w) = parse_workers(&flags)? {
+        cfg.coordinator.workers = w;
+    }
     warn_if_exec_mode_noop(exec_mode, cfg.coordinator.backend, cfg.coordinator.self_check);
 
     let coord = Arc::new(Coordinator::start(cfg.coordinator.clone()).map_err(|e| anyhow!(e))?);
     let handle = server::serve(coord.clone(), &cfg.server)?;
     println!(
-        "serving on {} backend={} (Ctrl-C to stop)",
+        "serving on {} backend={} workers={} (Ctrl-C to stop)",
         handle.local_addr,
-        coord.backend_name()
+        coord.backend_name(),
+        coord.workers()
     );
     // block forever
     loop {

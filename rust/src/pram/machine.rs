@@ -302,6 +302,15 @@ impl Pram {
         }
     }
 
+    /// Cap the fast tier's per-step PE fan-out (the audited tier is
+    /// serial by construction and ignores this).  Serving worker pools
+    /// pass their per-worker thread share so that total transient
+    /// concurrency across the pool stays at hardware width instead of
+    /// workers × hardware threads.
+    pub fn set_fast_threads(&mut self, n: usize) {
+        self.hw_threads = n.max(1);
+    }
+
     /// Run one synchronous step with PEs `0..pes`.
     ///
     /// Every PE executes `body(pe, ctx)`; reads observe pre-step memory;

@@ -114,13 +114,14 @@ impl HullExecutor {
 
     /// Flatten and REMOTE-pad request point sets into an f32 literal of
     /// shape [b, n, 2].
-    fn batch_literal(meta: &ArtifactMeta, batch: &[Vec<Point>]) -> Result<xla::Literal> {
+    fn batch_literal<S: AsRef<[Point]>>(meta: &ArtifactMeta, batch: &[S]) -> Result<xla::Literal> {
         let (b, n) = (meta.batch.max(1), meta.n);
         if batch.len() > b {
             bail!("batch of {} > artifact batch {}", batch.len(), b);
         }
         let mut flat = Vec::with_capacity(b * n * 2);
         for req in batch {
+            let req = req.as_ref();
             if req.len() > n {
                 bail!("request of {} points > artifact n {}", req.len(), n);
             }
@@ -168,10 +169,10 @@ impl HullExecutor {
 
     /// Execute a batched full-hull artifact over up to `meta.batch`
     /// requests; returns per-request (upper, lower) hull corners.
-    pub fn run_hull(
+    pub fn run_hull<S: AsRef<[Point]>>(
         &self,
         meta: &ArtifactMeta,
-        batch: &[Vec<Point>],
+        batch: &[S],
     ) -> Result<Vec<(Vec<Point>, Vec<Point>)>> {
         if meta.kind != ArtifactKind::Hull {
             bail!("{} is not a hull artifact", meta.name);
@@ -207,7 +208,7 @@ impl HullExecutor {
             let mut stats = self.stats.borrow_mut();
             for (req, got) in batch.iter().zip(&out) {
                 stats.ref_checks += 1;
-                match Self::reference_full_hull(mode, req) {
+                match Self::reference_full_hull(mode, req.as_ref()) {
                     Some(want) if want == *got => {}
                     _ => stats.ref_mismatches += 1,
                 }

@@ -56,6 +56,7 @@ impl HullClient {
                 Ok(ClientHull { id, upper, lower, backend, queue_ns, exec_ns })
             }
             Response::HullErr { message, .. } => bail!("server: {message}"),
+            Response::MalformedErr { message, .. } => bail!("server: malformed frame: {message}"),
             other => bail!("unexpected reply {other:?}"),
         }
     }

@@ -11,7 +11,9 @@
 //! server -> client
 //!   HULL <id> OK <k_up> <k_lo> <backend> <queue_ns> <exec_ns>\n
 //!     then k_up lines, then k_lo lines, then END\n
-//!   HULL <id> ERR <message...>\n
+//!   HULL <id> ERR <message...>\n            request-level failure
+//!   ERR <id|-> <message...>\n               malformed frame (id echoed
+//!                                           when the header parsed)
 //!   STATS <json>\n       PONG\n
 //! ```
 
@@ -40,6 +42,10 @@ pub enum Response {
         exec_ns: u64,
     },
     HullErr { id: u64, message: String },
+    /// Frame-level failure: the request never parsed.  `id` is echoed
+    /// when the frame header got far enough to recover it, so clients
+    /// correlating replies by request id can still match the failure.
+    MalformedErr { id: Option<u64>, message: String },
     Stats(String),
     Pong,
 }
@@ -48,16 +54,46 @@ pub enum Response {
 #[derive(Debug, PartialEq)]
 pub enum ProtoError {
     Eof,
-    Malformed(String),
-    TooManyPoints(usize),
+    /// The frame could not be parsed; `id` is present when the header
+    /// parsed far enough to recover the request id.
+    Malformed { id: Option<u64>, detail: String },
+    /// DoS guard tripped; the header (and thus the id) did parse.
+    TooManyPoints { id: u64, points: usize },
+}
+
+impl ProtoError {
+    fn malformed(detail: impl Into<String>) -> ProtoError {
+        ProtoError::Malformed { id: None, detail: detail.into() }
+    }
+
+    /// Attach a frame id to a mid-frame parse failure (Eof passes through).
+    fn with_id(self, frame_id: u64) -> ProtoError {
+        match self {
+            ProtoError::Malformed { id: None, detail } => {
+                ProtoError::Malformed { id: Some(frame_id), detail }
+            }
+            other => other,
+        }
+    }
+
+    /// The failed frame's id, when it was recoverable.
+    pub fn frame_id(&self) -> Option<u64> {
+        match self {
+            ProtoError::Eof => None,
+            ProtoError::Malformed { id, .. } => *id,
+            ProtoError::TooManyPoints { id, .. } => Some(*id),
+        }
+    }
 }
 
 impl std::fmt::Display for ProtoError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             ProtoError::Eof => write!(f, "connection closed"),
-            ProtoError::Malformed(s) => write!(f, "malformed request: {s}"),
-            ProtoError::TooManyPoints(m) => write!(f, "request of {m} points over limit"),
+            ProtoError::Malformed { detail, .. } => write!(f, "malformed request: {detail}"),
+            ProtoError::TooManyPoints { points, .. } => {
+                write!(f, "request of {points} points over limit")
+            }
         }
     }
 }
@@ -69,7 +105,7 @@ fn read_line<R: BufRead>(r: &mut R) -> Result<String, ProtoError> {
     let mut line = String::new();
     let n = r
         .read_line(&mut line)
-        .map_err(|e| ProtoError::Malformed(e.to_string()))?;
+        .map_err(|e| ProtoError::malformed(e.to_string()))?;
     if n == 0 {
         return Err(ProtoError::Eof);
     }
@@ -82,29 +118,35 @@ pub fn read_request<R: BufRead>(r: &mut R) -> Result<Request, ProtoError> {
     let mut it = line.split_whitespace();
     match it.next() {
         Some("HULL") => {
-            let id: u64 = it
-                .next()
-                .and_then(|s| s.parse().ok())
-                .ok_or_else(|| ProtoError::Malformed("HULL needs <id> <m>".into()))?;
-            let m: usize = it
-                .next()
-                .and_then(|s| s.parse().ok())
-                .ok_or_else(|| ProtoError::Malformed("HULL needs <id> <m>".into()))?;
+            let id: Option<u64> = it.next().and_then(|s| s.parse().ok());
+            let m: Option<usize> = it.next().and_then(|s| s.parse().ok());
+            let (Some(id), Some(m)) = (id, m) else {
+                return Err(ProtoError::Malformed {
+                    id,
+                    detail: "HULL needs <id> <m>".into(),
+                });
+            };
             if m > MAX_REQUEST_POINTS {
-                return Err(ProtoError::TooManyPoints(m));
+                return Err(ProtoError::TooManyPoints { id, points: m });
             }
             let mut points = Vec::with_capacity(m);
             for k in 0..m {
-                let pl = read_line(r)?;
+                let pl = read_line(r).map_err(|e| e.with_id(id))?;
                 let mut c = pl.split_whitespace();
                 let (x, y) = match (c.next(), c.next()) {
                     (Some(a), Some(b)) => (
-                        a.parse::<f64>()
-                            .map_err(|_| ProtoError::Malformed(format!("point {k}: {pl:?}")))?,
-                        b.parse::<f64>()
-                            .map_err(|_| ProtoError::Malformed(format!("point {k}: {pl:?}")))?,
+                        a.parse::<f64>().map_err(|_| {
+                            ProtoError::malformed(format!("point {k}: {pl:?}")).with_id(id)
+                        })?,
+                        b.parse::<f64>().map_err(|_| {
+                            ProtoError::malformed(format!("point {k}: {pl:?}")).with_id(id)
+                        })?,
                     ),
-                    _ => return Err(ProtoError::Malformed(format!("point {k}: {pl:?}"))),
+                    _ => {
+                        return Err(
+                            ProtoError::malformed(format!("point {k}: {pl:?}")).with_id(id)
+                        )
+                    }
                 };
                 points.push(Point::new(x, y));
             }
@@ -113,7 +155,7 @@ pub fn read_request<R: BufRead>(r: &mut R) -> Result<Request, ProtoError> {
         Some("STATS") => Ok(Request::Stats),
         Some("PING") => Ok(Request::Ping),
         Some("QUIT") => Ok(Request::Quit),
-        other => Err(ProtoError::Malformed(format!("unknown command {other:?}"))),
+        other => Err(ProtoError::malformed(format!("unknown command {other:?}"))),
     }
 }
 
@@ -151,6 +193,10 @@ pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> std::io::Result<(
         Response::HullErr { id, message } => {
             writeln!(w, "HULL {id} ERR {message}")?;
         }
+        Response::MalformedErr { id, message } => match id {
+            Some(id) => writeln!(w, "ERR {id} {message}")?,
+            None => writeln!(w, "ERR - {message}")?,
+        },
         Response::Stats(json) => writeln!(w, "STATS {json}")?,
         Response::Pong => writeln!(w, "PONG")?,
     }
@@ -166,24 +212,33 @@ pub fn read_response<R: BufRead>(r: &mut R) -> Result<Response, ProtoError> {
     if line == "PONG" {
         return Ok(Response::Pong);
     }
+    if let Some(rest) = line.strip_prefix("ERR ") {
+        let mut it = rest.splitn(2, ' ');
+        let id_tok = it.next().unwrap_or("-");
+        let id = if id_tok == "-" { None } else { id_tok.parse().ok() };
+        return Ok(Response::MalformedErr {
+            id,
+            message: it.next().unwrap_or("").to_string(),
+        });
+    }
     let mut it = line.split_whitespace();
     if it.next() != Some("HULL") {
-        return Err(ProtoError::Malformed(line));
+        return Err(ProtoError::malformed(line));
     }
     let id: u64 = it
         .next()
         .and_then(|s| s.parse().ok())
-        .ok_or_else(|| ProtoError::Malformed(line.clone()))?;
+        .ok_or_else(|| ProtoError::malformed(line.clone()))?;
     match it.next() {
         Some("OK") => {
             let k_up: usize = it
                 .next()
                 .and_then(|s| s.parse().ok())
-                .ok_or_else(|| ProtoError::Malformed(line.clone()))?;
+                .ok_or_else(|| ProtoError::malformed(line.clone()))?;
             let k_lo: usize = it
                 .next()
                 .and_then(|s| s.parse().ok())
-                .ok_or_else(|| ProtoError::Malformed(line.clone()))?;
+                .ok_or_else(|| ProtoError::malformed(line.clone()))?;
             let backend = it.next().unwrap_or("?").to_string();
             let queue_ns: u64 = it.next().and_then(|s| s.parse().ok()).unwrap_or(0);
             let exec_ns: u64 = it.next().and_then(|s| s.parse().ok()).unwrap_or(0);
@@ -194,16 +249,16 @@ pub fn read_response<R: BufRead>(r: &mut R) -> Result<Response, ProtoError> {
                 let x: f64 = c
                     .next()
                     .and_then(|s| s.parse().ok())
-                    .ok_or_else(|| ProtoError::Malformed(pl.clone()))?;
+                    .ok_or_else(|| ProtoError::malformed(pl.clone()))?;
                 let y: f64 = c
                     .next()
                     .and_then(|s| s.parse().ok())
-                    .ok_or_else(|| ProtoError::Malformed(pl.clone()))?;
+                    .ok_or_else(|| ProtoError::malformed(pl.clone()))?;
                 pts.push(Point::new(x, y));
             }
             let end = read_line(r)?;
             if end != "END" {
-                return Err(ProtoError::Malformed(format!("expected END, got {end:?}")));
+                return Err(ProtoError::malformed(format!("expected END, got {end:?}")));
             }
             let lower = pts.split_off(k_up);
             Ok(Response::Hull { id, upper: pts, lower, backend, queue_ns, exec_ns })
@@ -212,7 +267,7 @@ pub fn read_response<R: BufRead>(r: &mut R) -> Result<Response, ProtoError> {
             let msg: Vec<&str> = it.collect();
             Ok(Response::HullErr { id, message: msg.join(" ") })
         }
-        _ => Err(ProtoError::Malformed(line)),
+        _ => Err(ProtoError::malformed(line)),
     }
 }
 
@@ -259,6 +314,10 @@ mod tests {
         let err = Response::HullErr { id: 9, message: "empty point set".into() };
         assert_eq!(roundtrip_resp(err.clone()), err);
         assert_eq!(roundtrip_resp(Response::Pong), Response::Pong);
+        for id in [Some(31u64), None] {
+            let merr = Response::MalformedErr { id, message: "bad frame".into() };
+            assert_eq!(roundtrip_resp(merr.clone()), merr);
+        }
     }
 
     #[test]
@@ -270,11 +329,27 @@ mod tests {
     }
 
     #[test]
+    fn malformed_frames_echo_the_id_when_parseable() {
+        // bad count token: id parsed, count didn't
+        let e = read_request(&mut BufReader::new(&b"HULL 7 abc\n"[..])).unwrap_err();
+        assert_eq!(e.frame_id(), Some(7));
+        // bad point line: header fully parsed
+        let e = read_request(&mut BufReader::new(&b"HULL 8 1\nnope\n"[..])).unwrap_err();
+        assert_eq!(e.frame_id(), Some(8));
+        // bad id token: nothing to echo
+        let e = read_request(&mut BufReader::new(&b"HULL x 2\n"[..])).unwrap_err();
+        assert_eq!(e.frame_id(), None);
+        // unknown command: nothing to echo
+        let e = read_request(&mut BufReader::new(&b"BOGUS\n"[..])).unwrap_err();
+        assert_eq!(e.frame_id(), None);
+    }
+
+    #[test]
     fn oversized_rejected() {
         let line = format!("HULL 1 {}\n", MAX_REQUEST_POINTS + 1);
         assert_eq!(
             read_request(&mut BufReader::new(line.as_bytes())),
-            Err(ProtoError::TooManyPoints(MAX_REQUEST_POINTS + 1))
+            Err(ProtoError::TooManyPoints { id: 1, points: MAX_REQUEST_POINTS + 1 })
         );
     }
 

@@ -2,11 +2,15 @@
 //! connection, all sharing the coordinator (thread-based substitute for
 //! the usual async runtime; connections are long-lived and few, work is
 //! CPU-bound, so thread-per-connection is the right shape here).
+//!
+//! Handler threads are *tracked*, not detached: `ServerHandle::stop`
+//! shuts every live connection's socket down and joins the handlers, so
+//! nothing races a coordinator shutdown that follows.
 
 use std::io::{BufReader, BufWriter};
-use std::net::{TcpListener, TcpStream};
+use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::coordinator::{Coordinator, HullRequest};
@@ -27,15 +31,44 @@ impl Default for ServerConfig {
     }
 }
 
+/// A live connection: the handler thread plus a socket handle the accept
+/// loop keeps so `stop` can unblock a handler parked in `read_line`.
+struct ConnSlot {
+    id: u64,
+    handle: JoinHandle<()>,
+    stream: TcpStream,
+}
+
+/// Shared connection registry.  The accept loop holds the mutex across
+/// the handler spawn, so a slot is always registered before its handler
+/// can look for it; handlers then remove their own slot on exit
+/// (dropping the tracked stream clone immediately, so a closed client's
+/// socket never lingers in CLOSE_WAIT waiting for the next accept), and
+/// `stop` drains and joins whatever is still live.
+#[derive(Default)]
+struct ConnRegistry {
+    conns: Mutex<Vec<ConnSlot>>,
+    /// active-connection *gauge*: incremented at accept, decremented when
+    /// the handler exits (it used to be a monotonically increasing
+    /// counter mislabeled as "connections").
+    active: AtomicU64,
+    next_id: AtomicU64,
+}
+
 /// Handle to a running server (shutdown on drop).
 pub struct ServerHandle {
     pub local_addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
-    pub connections: Arc<AtomicU64>,
+    registry: Arc<ConnRegistry>,
 }
 
 impl ServerHandle {
+    /// Currently open connections (gauge, not a lifetime total).
+    pub fn active_connections(&self) -> u64 {
+        self.registry.active.load(Ordering::Relaxed)
+    }
+
     pub fn stop(mut self) {
         self.stop_inner();
     }
@@ -46,6 +79,20 @@ impl ServerHandle {
         let _ = TcpStream::connect(self.local_addr);
         if let Some(h) = self.accept_thread.take() {
             let _ = h.join();
+        }
+        // unblock handlers parked on reads, then join every one of them:
+        // after stop() returns, no handler can race a coordinator shutdown.
+        // Read-side only: a handler mid-request still flushes its response
+        // (the coordinator drain guarantee) and exits on the next EOF.
+        let drained: Vec<ConnSlot> = match self.registry.conns.lock() {
+            Ok(mut conns) => conns.drain(..).collect(),
+            Err(_) => return,
+        };
+        for slot in &drained {
+            let _ = slot.stream.shutdown(Shutdown::Read);
+        }
+        for slot in drained {
+            let _ = slot.handle.join();
         }
     }
 }
@@ -62,11 +109,11 @@ pub fn serve(coordinator: Arc<Coordinator>, cfg: &ServerConfig) -> std::io::Resu
     let listener = TcpListener::bind(&cfg.addr)?;
     let local_addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
-    let connections = Arc::new(AtomicU64::new(0));
+    let registry = Arc::new(ConnRegistry::default());
     log_info!("serving on {local_addr} (backend={})", coordinator.backend_name());
 
     let stop2 = stop.clone();
-    let conns2 = connections.clone();
+    let reg2 = registry.clone();
     let accept_thread = std::thread::Builder::new()
         .name("hull-accept".into())
         .spawn(move || {
@@ -76,11 +123,54 @@ pub fn serve(coordinator: Arc<Coordinator>, cfg: &ServerConfig) -> std::io::Resu
                 }
                 match stream {
                     Ok(s) => {
-                        conns2.fetch_add(1, Ordering::Relaxed);
                         let coord = coordinator.clone();
-                        let _ = std::thread::Builder::new()
+                        let reg = reg2.clone();
+                        let tracked = match s.try_clone() {
+                            Ok(t) => t,
+                            Err(_) => continue, // dead socket; skip it
+                        };
+                        reg.active.fetch_add(1, Ordering::Relaxed);
+                        let conn_id = reg.next_id.fetch_add(1, Ordering::Relaxed);
+                        let reg_in = reg.clone();
+                        // hold the registry lock across the spawn: the
+                        // slot is pushed before the handler can possibly
+                        // look for it, so the self-reap below always
+                        // finds it — an instantly-exiting handler just
+                        // blocks on the mutex for the push's duration
+                        let Ok(mut conns) = reg.conns.lock() else {
+                            // poisoned (a handler panicked mid-reap):
+                            // tracking is gone; refuse the connection
+                            reg.active.fetch_sub(1, Ordering::Relaxed);
+                            continue;
+                        };
+                        let spawned = std::thread::Builder::new()
                             .name("hull-conn".into())
-                            .spawn(move || handle_connection(s, coord));
+                            .spawn(move || {
+                                handle_connection(s, coord);
+                                reg_in.active.fetch_sub(1, Ordering::Relaxed);
+                                // self-reap: drop the tracked stream clone
+                                // now, not at the next accept — only the
+                                // coordinator-free tail of this thread
+                                // outlives the slot, so `stop` loses
+                                // nothing by not joining it.  Dropping our
+                                // own JoinHandle merely detaches.
+                                if let Ok(mut conns) = reg_in.conns.lock() {
+                                    if let Some(i) =
+                                        conns.iter().position(|c| c.id == conn_id)
+                                    {
+                                        conns.swap_remove(i);
+                                    }
+                                }
+                            });
+                        match spawned {
+                            Ok(handle) => {
+                                conns.push(ConnSlot { id: conn_id, handle, stream: tracked });
+                            }
+                            Err(e) => {
+                                reg.active.fetch_sub(1, Ordering::Relaxed);
+                                log_info!("spawn error: {e}");
+                            }
+                        }
                     }
                     Err(e) => {
                         log_info!("accept error: {e}");
@@ -89,7 +179,7 @@ pub fn serve(coordinator: Arc<Coordinator>, cfg: &ServerConfig) -> std::io::Resu
             }
         })?;
 
-    Ok(ServerHandle { local_addr, stop, accept_thread: Some(accept_thread), connections })
+    Ok(ServerHandle { local_addr, stop, accept_thread: Some(accept_thread), registry })
 }
 
 fn handle_connection(stream: TcpStream, coord: Arc<Coordinator>) {
@@ -104,10 +194,15 @@ fn handle_connection(stream: TcpStream, coord: Arc<Coordinator>) {
             Ok(r) => r,
             Err(ProtoError::Eof) => break,
             Err(e) => {
-                let _ = proto::write_response(
-                    &mut writer,
-                    &Response::HullErr { id: 0, message: e.to_string() },
-                );
+                // echo the failed frame's id when the header parsed, so
+                // id-correlating clients can still match the failure
+                let resp = match &e {
+                    ProtoError::TooManyPoints { id, .. } => {
+                        Response::HullErr { id: *id, message: e.to_string() }
+                    }
+                    _ => Response::MalformedErr { id: e.frame_id(), message: e.to_string() },
+                };
+                let _ = proto::write_response(&mut writer, &resp);
                 break;
             }
         };

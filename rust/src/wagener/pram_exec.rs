@@ -147,12 +147,31 @@ pub fn run_pipeline_mode(
     mode: ExecMode,
     strict: bool,
 ) -> Result<PramRun, PramError> {
+    run_pipeline_mode_threads(points, slots, mode, strict, 0)
+}
+
+/// Like [`run_pipeline_mode`], with the fast tier's per-step PE fan-out
+/// capped at `fast_threads` (0 = the machine default, one per hardware
+/// thread).  Serving worker pools pass their per-worker thread share so
+/// N pooled machines never book N × hardware-width threads at once; the
+/// hood is bit-identical at any cap (per-worker write buffers merge in
+/// PE order).
+pub fn run_pipeline_mode_threads(
+    points: &[Point],
+    slots: usize,
+    mode: ExecMode,
+    strict: bool,
+    fast_threads: usize,
+) -> Result<PramRun, PramError> {
     assert!(slots.is_power_of_two() && slots >= 2);
     assert!(points.len() <= slots);
     let n = slots;
     let lay = Layout { n };
     let mut m = Pram::with_mode(5 * n, n / 2, 1, mode);
     m.strict = strict;
+    if fast_threads > 0 {
+        m.set_fast_threads(fast_threads);
+    }
 
     // load input hood (host -> device copy; not cost-accounted, matching
     // the paper's cudaMemcpy outside the kernel)

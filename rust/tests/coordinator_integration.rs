@@ -76,6 +76,37 @@ fn pjrt_mixed_size_classes() {
 }
 
 #[test]
+fn pjrt_worker_pool_parity() {
+    // each pjrt worker owns its own executor; N workers must still be
+    // bit-identical to one
+    let mk = |workers: usize| {
+        Coordinator::start(CoordinatorConfig {
+            backend: BackendKind::Pjrt,
+            artifacts_dir: format!("{}/artifacts", env!("CARGO_MANIFEST_DIR")).into(),
+            batcher: BatcherConfig { max_batch: 1, flush_us: 100, queue_cap: 64 },
+            self_check: true,
+            workers,
+            ..Default::default()
+        })
+    };
+    let c1 = match mk(1) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("SKIP (pjrt unavailable — run `make artifacts`): {e}");
+            return;
+        }
+    };
+    let c3 = mk(3).unwrap();
+    for (n, seed) in [(50usize, 1u64), (200, 2), (800, 3)] {
+        let pts = generate(Distribution::Disk, n, seed);
+        let a = c1.compute(pts.clone()).unwrap();
+        let b = c3.compute(pts).unwrap();
+        assert_eq!(a.upper, b.upper, "n={n}");
+        assert_eq!(a.lower, b.lower, "n={n}");
+    }
+}
+
+#[test]
 fn pjrt_rejects_oversized() {
     let Some(c) = pjrt_coord(1, 100) else { return };
     let max = c.max_points();

@@ -114,3 +114,62 @@ fn malformed_protocol_line_closes_gracefully() {
     assert!(line.contains("ERR"), "{line}");
     handle.stop();
 }
+
+#[test]
+fn malformed_hull_frame_echoes_request_id() {
+    use std::io::{BufRead, BufReader, Write};
+    let (_coord, handle) = start_server(BackendKind::Serial);
+    let mut stream = std::net::TcpStream::connect(handle.local_addr).unwrap();
+    // the id parses, the count does not: the error must carry id 9 so a
+    // client correlating replies by request id can match the failure
+    stream.write_all(b"HULL 9 zz\n").unwrap();
+    stream.flush().unwrap();
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR 9 "), "want 'ERR 9 ...', got {line:?}");
+    handle.stop();
+}
+
+/// Poll a gauge until it reaches `want` (connection teardown is async).
+fn wait_gauge(handle: &wagener_hull::server::ServerHandle, want: u64) {
+    let t0 = std::time::Instant::now();
+    while handle.active_connections() != want {
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(5),
+            "gauge stuck at {} (want {want})",
+            handle.active_connections()
+        );
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+}
+
+#[test]
+fn connection_gauge_tracks_active_connections() {
+    let (_coord, handle) = start_server(BackendKind::Serial);
+    assert_eq!(handle.active_connections(), 0);
+    let mut c1 = HullClient::connect(handle.local_addr).unwrap();
+    let mut c2 = HullClient::connect(handle.local_addr).unwrap();
+    c1.ping().unwrap();
+    c2.ping().unwrap();
+    wait_gauge(&handle, 2);
+    c2.quit().unwrap();
+    wait_gauge(&handle, 1); // a gauge, not a lifetime counter
+    c1.quit().unwrap();
+    wait_gauge(&handle, 0);
+    handle.stop();
+}
+
+/// `stop` must join handler threads even when a client still holds its
+/// connection open mid-read (the server shuts the socket down to unblock
+/// the handler); a hang here would fail the test by timeout.
+#[test]
+fn stop_joins_open_connections() {
+    let (_coord, handle) = start_server(BackendKind::Serial);
+    let mut client = HullClient::connect(handle.local_addr).unwrap();
+    client.ping().unwrap();
+    wait_gauge(&handle, 1);
+    // client neither quits nor drops: the handler is parked in read_line
+    handle.stop();
+    // handle consumed; the handler was joined and decremented the gauge
+    drop(client);
+}

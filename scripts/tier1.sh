@@ -1,13 +1,15 @@
 #!/usr/bin/env bash
 # Tier-1 gate + perf baseline.
 #
-#   scripts/tier1.sh            # build, test, smoke-bench
+#   scripts/tier1.sh            # lint, build, test, smoke-bench
 #
-# Runs `cargo build --release && cargo test -q` (the ROADMAP tier-1
-# verify) and then a fast smoke run of bench_runtime with
-# WAGENER_BENCH_JSON pointed at BENCH_pram.json, so every PR leaves a
-# machine-readable perf record (PRAM audited-vs-fast tier timings) for
-# the next PR to compare against.
+# Gates: `cargo fmt --check` and `cargo clippy -D warnings` (when the
+# components are installed), then `cargo build --release && cargo test -q`
+# (the ROADMAP tier-1 verify), then fast smoke runs of bench_runtime and
+# bench_coordinator with WAGENER_BENCH_JSON pointed at BENCH_pram.json /
+# BENCH_coordinator.json, so every PR leaves machine-readable perf records
+# (PRAM tier timings + router/worker-pool throughput) for the next PR to
+# compare against.
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
@@ -16,6 +18,20 @@ cd "$ROOT"
 if ! command -v cargo >/dev/null 2>&1; then
     echo "tier1: cargo not found on PATH; install a Rust toolchain" >&2
     exit 1
+fi
+
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== tier1: cargo fmt --check =="
+    cargo fmt --check
+else
+    echo "tier1: rustfmt not installed; skipping fmt gate" >&2
+fi
+
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== tier1: cargo clippy -D warnings =="
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "tier1: clippy not installed; skipping clippy gate" >&2
 fi
 
 echo "== tier1: cargo build --release =="
@@ -29,5 +45,10 @@ echo "== tier1: smoke bench -> BENCH_pram.json =="
 WAGENER_BENCH_FAST=1 WAGENER_BENCH_JSON="$ROOT/BENCH_pram.json" \
     cargo bench --bench bench_runtime
 
-echo "tier1 OK — bench rows in BENCH_pram.json:"
-cat "$ROOT/BENCH_pram.json"
+echo "== tier1: smoke bench -> BENCH_coordinator.json =="
+: > "$ROOT/BENCH_coordinator.json"
+WAGENER_BENCH_FAST=1 WAGENER_BENCH_JSON="$ROOT/BENCH_coordinator.json" \
+    cargo bench --bench bench_coordinator
+
+echo "tier1 OK — bench rows:"
+cat "$ROOT/BENCH_pram.json" "$ROOT/BENCH_coordinator.json"
