@@ -1,0 +1,107 @@
+//! E8 — streaming sessions: incremental maintenance vs one-shot re-hull.
+//!
+//! Two schedules over n = 2^16 disk points through a session on the
+//! native backend:
+//!   * insert-heavy — a high merge threshold, so after the first re-hull
+//!     almost every insert is an O(log h) interior rejection;
+//!   * merge-heavy — a low threshold, so the tangent/interleave merge
+//!     path and the backend round-trip dominate.
+//! Plus the `merge_hulls` micro rows (tangent vs interleave) and the
+//! one-shot baseline the session numbers are judged against.
+//!
+//! Run: `cargo bench --bench bench_stream` (tier1.sh feeds
+//! BENCH_stream.json via WAGENER_BENCH_JSON).
+
+use std::sync::Arc;
+
+use wagener_hull::benchkit::{black_box, Bencher, Report};
+use wagener_hull::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
+use wagener_hull::geometry::generators::{self, generate, Distribution};
+use wagener_hull::geometry::point::Point;
+use wagener_hull::serial::monotone_chain;
+use wagener_hull::stream::{SessionRegistry, StreamConfig};
+use wagener_hull::wagener::hull_merge::{merge_hulls, MergePath};
+
+fn native_coord() -> Arc<Coordinator> {
+    Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            backend: BackendKind::Native,
+            ..Default::default()
+        })
+        .unwrap(),
+    )
+}
+
+fn main() {
+    let b = Bencher::default();
+    let n = 1usize << 16;
+    let pts = generate(Distribution::Disk, n, 21);
+
+    let mut report = Report::new("E8: streaming sessions (native backend, disk n=2^16)");
+
+    // one-shot baseline: what a stateless server pays on EVERY update
+    {
+        let coord = native_coord();
+        let pts2 = pts.clone();
+        report.add(b.run("stream/oneshot_rehull_n65536", move || {
+            coord.compute(pts2.clone()).unwrap()
+        }));
+    }
+
+    for (name, threshold) in [("insert_heavy", 16384usize), ("merge_heavy", 1024)] {
+        let coord = native_coord();
+        let registry = SessionRegistry::new(
+            StreamConfig { merge_threshold: threshold, idle_ttl_ms: 0, ..Default::default() },
+            coord.metrics.clone(),
+        );
+        let pts2 = pts.clone();
+        let coord2 = coord.clone();
+        report.add(b.run(&format!("stream/{name}_n65536_batch1024"), move || {
+            let sid = registry.open().unwrap();
+            for chunk in pts2.chunks(1024) {
+                registry.add(sid, chunk, &*coord2).unwrap();
+            }
+            let snap = registry.hull(sid, &*coord2).unwrap();
+            registry.close(sid).unwrap();
+            black_box(snap.upper.len())
+        }));
+        let snap = coord.snapshot().0;
+        report.note(format!(
+            "{name}: threshold={threshold} absorbed={} merges={}",
+            snap.get("absorbed_points_total").unwrap(),
+            snap.get("merges_total").unwrap(),
+        ));
+    }
+    report.finish();
+
+    // merge_hulls micro rows: hull ⊕ hull combine cost on both paths
+    let mut report = Report::new("E8b: merge_hulls (hull ⊕ hull combine)");
+    let squeeze = |pts: &[Point], lo: f64, hi: f64| -> Vec<Point> {
+        let mut v = generators::squeeze_x(pts, lo, hi);
+        wagener_hull::geometry::point::sort_by_x(&mut v);
+        // the squeeze can collide distinct x's on the f32 grid; the
+        // serial chains (and merge_hulls' precondition) want distinct x
+        v.dedup_by(|p, q| p.x == q.x);
+        v
+    };
+    let base_a = generate(Distribution::Circle, 4096, 31);
+    let base_b = generate(Distribution::Circle, 4096, 32);
+    for (row, (alo, ahi), (blo, bhi), want) in [
+        ("tangent_disjoint", (0.0, 0.47), (0.53, 1.0), MergePath::Tangent),
+        ("interleave_overlap", (0.0, 0.8), (0.2, 1.0), MergePath::Interleave),
+    ] {
+        let a = squeeze(&base_a, alo, ahi);
+        let b2 = squeeze(&base_b, blo, bhi);
+        let (au, al) = monotone_chain::full_hull(&a);
+        let (bu, bl) = monotone_chain::full_hull(&b2);
+        let ((_, _), path) = merge_hulls((&au, &al), (&bu, &bl));
+        assert_eq!(path, want, "{row} exercised the wrong path");
+        report.add(b.run(&format!("merge_hulls/{row}_h{}x{}", au.len(), bu.len()), || {
+            black_box(merge_hulls(
+                (black_box(&au), black_box(&al)),
+                (black_box(&bu), black_box(&bl)),
+            ))
+        }));
+    }
+    report.finish();
+}

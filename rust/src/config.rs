@@ -18,6 +18,11 @@
 //! [coordinator]
 //! workers = 0                # exec worker threads; 0 = hardware threads
 //! prefilter = true           # octagon interior-point pre-filter
+//!
+//! [stream]
+//! max_sessions = 1024        # open streaming-session cap
+//! merge_threshold = 4096     # pending points that trigger a re-hull
+//! idle_ttl_ms = 60000        # idle session eviction; 0 = never
 //! ```
 
 use std::path::PathBuf;
@@ -27,6 +32,7 @@ use anyhow::{anyhow, Result};
 use crate::coordinator::{BackendKind, CoordinatorConfig};
 use crate::pram::ExecMode;
 use crate::server::ServerConfig;
+use crate::stream::StreamConfig;
 use crate::util::tomlmini::{self, Table};
 
 /// Full launcher configuration.
@@ -34,6 +40,7 @@ use crate::util::tomlmini::{self, Table};
 pub struct Config {
     pub server: ServerConfig,
     pub coordinator: CoordinatorConfig,
+    pub stream: StreamConfig,
 }
 
 impl Config {
@@ -91,6 +98,15 @@ impl Config {
                         cfg.coordinator.prefilter =
                             value.as_bool().ok_or_else(|| anyhow!("{path}: want bool"))?;
                     }
+                    "stream.max_sessions" => {
+                        cfg.stream.max_sessions = as_usize(value, &path)?.max(1);
+                    }
+                    "stream.merge_threshold" => {
+                        cfg.stream.merge_threshold = as_usize(value, &path)?.max(1);
+                    }
+                    "stream.idle_ttl_ms" => {
+                        cfg.stream.idle_ttl_ms = as_usize(value, &path)? as u64;
+                    }
                     _ => return Err(anyhow!("unknown config key: {path}")),
                 }
             }
@@ -133,6 +149,10 @@ queue_cap = 99
 [coordinator]
 workers = 6
 prefilter = false
+[stream]
+max_sessions = 9
+merge_threshold = 128
+idle_ttl_ms = 2500
 "#,
         )
         .unwrap();
@@ -146,6 +166,9 @@ prefilter = false
         assert_eq!(cfg.coordinator.batcher.queue_cap, 99);
         assert_eq!(cfg.coordinator.workers, 6);
         assert!(!cfg.coordinator.prefilter);
+        assert_eq!(cfg.stream.max_sessions, 9);
+        assert_eq!(cfg.stream.merge_threshold, 128);
+        assert_eq!(cfg.stream.idle_ttl_ms, 2500);
     }
 
     #[test]
@@ -156,6 +179,9 @@ prefilter = false
         assert_eq!(cfg.server.addr, "127.0.0.1:7878");
         assert_eq!(cfg.coordinator.workers, 0); // 0 = available parallelism
         assert!(cfg.coordinator.prefilter);
+        assert_eq!(cfg.stream.max_sessions, 1024);
+        assert_eq!(cfg.stream.merge_threshold, 4096);
+        assert_eq!(cfg.stream.idle_ttl_ms, 60_000);
     }
 
     #[test]
@@ -168,5 +194,11 @@ prefilter = false
         assert!(Config::from_toml("[coordinator]\nworkers = -1").is_err());
         assert!(Config::from_toml("[coordinator]\nprefilter = 3").is_err());
         assert!(Config::from_toml("[coordinator]\nthreads = 4").is_err());
+        assert!(Config::from_toml("[stream]\nmax_sessions = \"many\"").is_err());
+        assert!(Config::from_toml("[stream]\nttl = 5").is_err());
+        // 0 is clamped to 1 (a session must merge eventually), ttl 0 = off
+        let cfg = Config::from_toml("[stream]\nmerge_threshold = 0\nidle_ttl_ms = 0").unwrap();
+        assert_eq!(cfg.stream.merge_threshold, 1);
+        assert_eq!(cfg.stream.idle_ttl_ms, 0);
     }
 }

@@ -16,7 +16,7 @@
 
 use std::path::PathBuf;
 
-use crate::geometry::point::{dedup_x, Point};
+use crate::geometry::point::{dedup_x, sort_by_x, Point};
 use crate::pram::ExecMode;
 use crate::runtime::{ArtifactRegistry, HullExecutor};
 use crate::serial::monotone_chain;
@@ -350,6 +350,17 @@ pub fn exact_full_hull(sorted_pts: &[Point]) -> (Vec<Point>, Vec<Point>) {
     let upper = monotone_chain::upper_hull(&dedup_x(sorted_pts, true));
     let lower = monotone_chain::lower_hull(&dedup_x(sorted_pts, false));
     (upper, lower)
+}
+
+/// Canonical one-shot hull of *raw* client points: quantize + sort +
+/// dedup + exact hull — the semantics every backend's served output is
+/// equivalent to (the prefilter is hull-preserving and so omitted).
+/// This is the oracle the streaming/merge suites compare against.
+pub fn canonical_full_hull(raw: &[Point]) -> (Vec<Point>, Vec<Point>) {
+    let mut pts: Vec<Point> = raw.iter().map(|p| p.quantize_f32()).collect();
+    sort_by_x(&mut pts);
+    pts.dedup();
+    exact_full_hull(&pts)
 }
 
 #[cfg(test)]

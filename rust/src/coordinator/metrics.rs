@@ -102,6 +102,20 @@ pub struct Metrics {
     pub queue_latency: Histogram,
     pub exec_latency: Histogram,
     pub e2e_latency: Histogram,
+    // ---- streaming sessions (maintained by stream::SessionRegistry) ----
+    /// currently open sessions (gauge).
+    pub open_sessions: AtomicU64,
+    /// points proven interior and dropped (insert-time rejection + merge
+    /// consolidation), lifetime total across sessions.
+    pub session_absorbed_points: AtomicU64,
+    /// points sitting in pending buffers right now (gauge).
+    pub session_pending_points: AtomicU64,
+    /// incremental re-hulls performed (threshold or explicit flush).
+    pub session_merges: AtomicU64,
+    /// sessions reaped by the idle-TTL sweep.
+    pub session_evictions: AtomicU64,
+    /// wall time of each incremental merge (backend round-trip included).
+    pub session_merge_latency: Histogram,
 }
 
 /// A point-in-time copy, JSON-serializable for the STATS endpoint.
@@ -115,6 +129,12 @@ impl Metrics {
 
     pub fn add(counter: &AtomicU64, v: u64) {
         counter.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Decrement a gauge (callers pair every `sub` with an earlier `add`,
+    /// so this cannot underflow in correct use).
+    pub fn sub(counter: &AtomicU64, v: u64) {
+        counter.fetch_sub(v, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -138,6 +158,12 @@ impl Metrics {
             ("queue_latency", self.queue_latency.to_json()),
             ("exec_latency", self.exec_latency.to_json()),
             ("e2e_latency", self.e2e_latency.to_json()),
+            ("open_sessions", g(&self.open_sessions)),
+            ("absorbed_points_total", g(&self.session_absorbed_points)),
+            ("pending_points_total", g(&self.session_pending_points)),
+            ("merges_total", g(&self.session_merges)),
+            ("session_evictions", g(&self.session_evictions)),
+            ("session_merge_latency", self.session_merge_latency.to_json()),
         ]))
     }
 }
@@ -182,6 +208,25 @@ mod tests {
         assert_eq!(back.get("points_in").unwrap().as_usize(), Some(100));
         assert_eq!(
             back.get("e2e_latency").unwrap().get("count").unwrap().as_usize(),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn snapshot_carries_session_gauges() {
+        let m = Metrics::default();
+        Metrics::add(&m.open_sessions, 3);
+        Metrics::sub(&m.open_sessions, 1);
+        Metrics::add(&m.session_pending_points, 42);
+        Metrics::inc(&m.session_merges);
+        m.session_merge_latency.record_ns(1234);
+        let snap = crate::util::json::parse(&m.snapshot().0.to_string()).unwrap();
+        assert_eq!(snap.get("open_sessions").unwrap().as_usize(), Some(2));
+        assert_eq!(snap.get("pending_points_total").unwrap().as_usize(), Some(42));
+        assert_eq!(snap.get("merges_total").unwrap().as_usize(), Some(1));
+        assert_eq!(snap.get("absorbed_points_total").unwrap().as_usize(), Some(0));
+        assert_eq!(
+            snap.get("session_merge_latency").unwrap().get("count").unwrap().as_usize(),
             Some(1)
         );
     }

@@ -64,6 +64,21 @@ pub struct Prepared {
     pub filtered: usize,
 }
 
+/// Validate raw client points: finite coordinates inside the paper's
+/// [0,1] box.  Shared by `prepare` and the streaming-session insert path
+/// so both reject identical inputs with identical indices.
+pub fn validate_points(points: &[Point]) -> Result<(), RequestError> {
+    for (i, p) in points.iter().enumerate() {
+        if !p.x.is_finite() || !p.y.is_finite() {
+            return Err(RequestError::NonFinite(i));
+        }
+        if !(0.0..=1.0).contains(&p.x) || !(0.0..=1.0).contains(&p.y) {
+            return Err(RequestError::OutOfRange(i));
+        }
+    }
+    Ok(())
+}
+
 /// Below this, the octagon test costs more than the hull it would save.
 const PREFILTER_MIN_POINTS: usize = 32;
 
@@ -153,14 +168,7 @@ pub fn prepare(req: &HullRequest, prefilter: bool) -> Result<Prepared, RequestEr
     if req.points.is_empty() {
         return Err(RequestError::Empty);
     }
-    for (i, p) in req.points.iter().enumerate() {
-        if !p.x.is_finite() || !p.y.is_finite() {
-            return Err(RequestError::NonFinite(i));
-        }
-        if !(0.0..=1.0).contains(&p.x) || !(0.0..=1.0).contains(&p.y) {
-            return Err(RequestError::OutOfRange(i));
-        }
-    }
+    validate_points(&req.points)?;
     let mut pts: Vec<Point> = req.points.iter().map(|p| p.quantize_f32()).collect();
     sort_by_x(&mut pts);
     pts.dedup(); // exact duplicates can always be dropped

@@ -174,6 +174,18 @@ pub fn generate(dist: Distribution, n: usize, seed: u64) -> Vec<Point> {
     pts
 }
 
+/// Affinely rescale a cloud's x-coordinates into `[lo, hi]`
+/// (f32-quantized like all generator output).  Shapes x-disjoint vs
+/// x-overlapping workloads for the hull ⊕ hull merge paths.  The map is
+/// order-preserving, but quantization can collide neighboring x's —
+/// callers feeding chains that require distinct x must dedup afterwards.
+pub fn squeeze_x(points: &[Point], lo: f64, hi: f64) -> Vec<Point> {
+    points
+        .iter()
+        .map(|p| Point::new(lo + p.x * (hi - lo), p.y).quantize_f32())
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -26,6 +26,7 @@ pub mod pram;
 pub mod runtime;
 pub mod serial;
 pub mod server;
+pub mod stream;
 pub mod util;
 pub mod viz;
 pub mod wagener;

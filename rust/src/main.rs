@@ -23,6 +23,7 @@ use wagener_hull::geometry::point::{pad_to_hood, Point};
 use wagener_hull::pram::ExecMode;
 use wagener_hull::runtime::ArtifactRegistry;
 use wagener_hull::server;
+use wagener_hull::stream::SessionRegistry;
 use wagener_hull::viz::svg::{render_hull_svg, SvgOptions};
 use wagener_hull::viz::trace::TraceWriter;
 use wagener_hull::wagener::occupancy::{format_table, occupancy_table};
@@ -35,8 +36,10 @@ commands:
   gen        --dist <name> --n <count> [--seed <u64>] [--out <file>]
   hull       <points-file> [--trace <file>] [--svg <file>] [--backend <pjrt|native|serial|pram>]
              [--artifacts <dir>] [--exec-mode <fast|audited>]
+             [--merge <points-file-2>]   hull both files, then tangent-merge the two hulls
   serve      [--config <file>] [--addr <host:port>] [--backend <kind>] [--artifacts <dir>]
              [--exec-mode <fast|audited>] [--workers <n>]
+             [--max-sessions <n>] [--merge-threshold <n>] [--idle-ttl-ms <n>]
   client     --addr <host:port> <points-file>
   occupancy  --n <count> [--dist <name>] [--seed <u64>]
   artifacts  [--dir <dir>]
@@ -190,6 +193,9 @@ fn cmd_hull(args: &[String]) -> Result<()> {
         .transpose()?
         .unwrap_or(BackendKind::Native);
     let exec_mode = parse_exec_mode(&flags)?;
+    if flags.contains_key("merge") && (flags.contains_key("trace") || flags.contains_key("svg")) {
+        bail!("--merge outputs combined hull chains only; it cannot be used with --trace/--svg");
+    }
 
     // paper's main: echo the points, then compute
     write_points(&mut std::io::stdout(), &points)?;
@@ -240,6 +246,26 @@ fn cmd_hull(args: &[String]) -> Result<()> {
     }
     warn_if_exec_mode_noop(exec_mode, coord_cfg.backend, coord_cfg.self_check);
     let coord = Coordinator::start(coord_cfg).map_err(|e| anyhow!(e))?;
+
+    // --merge: hull both files on the backend, then combine the two
+    // hulls with the paper's common-tangent machinery (the session
+    // subsystem's merge path, exercisable without a server)
+    if let Some(file2) = flags.get("merge") {
+        let points2 = read_points_file(file2)?;
+        let a = coord.compute(points.clone()).map_err(|e| anyhow!("{e}"))?;
+        let b = coord.compute(points2).map_err(|e| anyhow!("{e}"))?;
+        let ((upper, lower), path) = wagener_hull::wagener::merge_hulls(
+            (&a.upper, &a.lower),
+            (&b.upper, &b.lower),
+        );
+        println!("# merge_hulls backend={} path={}", a.backend, path.name());
+        println!("# upper hood");
+        write_points(&mut std::io::stdout(), &upper)?;
+        println!("# lower hood");
+        write_points(&mut std::io::stdout(), &lower)?;
+        return Ok(());
+    }
+
     let resp = coord
         .compute(points.clone())
         .map_err(|e| anyhow!("{e}"))?;
@@ -287,15 +313,39 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     if let Some(w) = parse_workers(&flags)? {
         cfg.coordinator.workers = w;
     }
+    if let Some(v) = flags.get("max-sessions") {
+        cfg.stream.max_sessions =
+            v.parse::<usize>().context("--max-sessions wants a positive integer")?.max(1);
+    }
+    if let Some(v) = flags.get("merge-threshold") {
+        cfg.stream.merge_threshold =
+            v.parse::<usize>().context("--merge-threshold wants a positive integer")?.max(1);
+    }
+    if let Some(v) = flags.get("idle-ttl-ms") {
+        cfg.stream.idle_ttl_ms =
+            v.parse::<u64>().context("--idle-ttl-ms wants a non-negative integer (0 = never)")?;
+    }
     warn_if_exec_mode_noop(exec_mode, cfg.coordinator.backend, cfg.coordinator.self_check);
 
     let coord = Arc::new(Coordinator::start(cfg.coordinator.clone()).map_err(|e| anyhow!(e))?);
-    let handle = server::serve(coord.clone(), &cfg.server)?;
+    let stream_cfg = cfg.stream.clone().clamp_threshold_to(coord.max_points());
+    if stream_cfg.merge_threshold < cfg.stream.merge_threshold {
+        eprintln!(
+            "warning: merge_threshold {} exceeds the {} backend's request cap; clamped to {}",
+            cfg.stream.merge_threshold,
+            coord.backend_name(),
+            stream_cfg.merge_threshold
+        );
+    }
+    let sessions = Arc::new(SessionRegistry::new(stream_cfg.clone(), coord.metrics.clone()));
+    let handle = server::serve_with_sessions(coord.clone(), sessions, &cfg.server)?;
     println!(
-        "serving on {} backend={} workers={} (Ctrl-C to stop)",
+        "serving on {} backend={} workers={} max_sessions={} merge_threshold={} (Ctrl-C to stop)",
         handle.local_addr,
         coord.backend_name(),
-        coord.workers()
+        coord.workers(),
+        stream_cfg.max_sessions,
+        stream_cfg.merge_threshold,
     );
     // block forever
     loop {

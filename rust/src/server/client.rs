@@ -2,6 +2,7 @@
 
 use std::io::{BufReader, BufWriter};
 use std::net::TcpStream;
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -27,12 +28,37 @@ pub struct ClientHull {
     pub exec_ns: u64,
 }
 
+/// `SADD` acknowledgment: lifetime absorbed count, current pending
+/// buffer size, current epoch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SessionAddReply {
+    pub absorbed: u64,
+    pub pending: u64,
+    pub epoch: u64,
+}
+
+/// `SHULL` payload: the authoritative hull and its epoch.
+#[derive(Clone, Debug)]
+pub struct SessionHullReply {
+    pub epoch: u64,
+    pub upper: Vec<Point>,
+    pub lower: Vec<Point>,
+}
+
 impl HullClient {
     pub fn connect(addr: impl std::net::ToSocketAddrs) -> Result<HullClient> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
         let reader = BufReader::new(stream.try_clone()?);
         Ok(HullClient { reader, writer: BufWriter::new(stream), next_id: 1 })
+    }
+
+    /// Bound every blocking read on this connection (`None` = wait
+    /// forever).  Session calls against a loaded server should set one:
+    /// a timeout surfaces as an error instead of a parked client.
+    pub fn set_read_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.reader.get_ref().set_read_timeout(timeout)?;
+        Ok(())
     }
 
     pub fn ping(&mut self) -> Result<()> {
@@ -73,5 +99,57 @@ impl HullClient {
     pub fn quit(mut self) -> Result<()> {
         proto::write_request(&mut self.writer, &Request::Quit)?;
         Ok(())
+    }
+
+    // ------------------------------------------------ streaming sessions
+
+    /// `SOPEN`: open a streaming session; returns its token.
+    pub fn session_open(&mut self) -> Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        proto::write_request(&mut self.writer, &Request::SessionOpen { id })?;
+        match proto::read_response(&mut self.reader).map_err(|e| anyhow!("{e}"))? {
+            Response::SessionOpened { sid, .. } => Ok(sid),
+            Response::SessionErr { message, .. } => bail!("server: {message}"),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+
+    /// `SADD`: insert a batch into the session.
+    pub fn session_add(&mut self, sid: u64, points: &[Point]) -> Result<SessionAddReply> {
+        proto::write_request(
+            &mut self.writer,
+            &Request::SessionAdd { sid, points: points.to_vec() },
+        )?;
+        match proto::read_response(&mut self.reader).map_err(|e| anyhow!("{e}"))? {
+            Response::SessionAdded { absorbed, pending, epoch, .. } => {
+                Ok(SessionAddReply { absorbed, pending, epoch })
+            }
+            Response::SessionErr { message, .. } => bail!("server: {message}"),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+
+    /// `SHULL`: the authoritative session hull (server flushes pending
+    /// first).
+    pub fn session_hull(&mut self, sid: u64) -> Result<SessionHullReply> {
+        proto::write_request(&mut self.writer, &Request::SessionHull { sid })?;
+        match proto::read_response(&mut self.reader).map_err(|e| anyhow!("{e}"))? {
+            Response::SessionHull { epoch, upper, lower, .. } => {
+                Ok(SessionHullReply { epoch, upper, lower })
+            }
+            Response::SessionErr { message, .. } => bail!("server: {message}"),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+
+    /// `SCLOSE`: release the session.
+    pub fn session_close(&mut self, sid: u64) -> Result<()> {
+        proto::write_request(&mut self.writer, &Request::SessionClose { sid })?;
+        match proto::read_response(&mut self.reader).map_err(|e| anyhow!("{e}"))? {
+            Response::SessionClosed { .. } => Ok(()),
+            Response::SessionErr { message, .. } => bail!("server: {message}"),
+            other => bail!("unexpected reply {other:?}"),
+        }
     }
 }

@@ -6,6 +6,6 @@ pub mod client;
 pub mod proto;
 pub mod tcp;
 
-pub use client::HullClient;
-pub use proto::{Request, Response};
-pub use tcp::{serve, ServerConfig, ServerHandle};
+pub use client::{HullClient, SessionAddReply, SessionHullReply};
+pub use proto::{Request, Response, SessionVerb};
+pub use tcp::{serve, serve_with_sessions, ServerConfig, ServerHandle};

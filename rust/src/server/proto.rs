@@ -4,6 +4,10 @@
 //! ```text
 //! client -> server
 //!   HULL <id> <m>\n  then m lines "x y"     full hull request
+//!   SOPEN <id>\n                            open a streaming session
+//!   SADD <sid> <m>\n  then m lines "x y"    insert into a session
+//!   SHULL <sid>\n                           authoritative session hull
+//!   SCLOSE <sid>\n                          close a session
 //!   STATS\n                                 metrics snapshot (JSON line)
 //!   PING\n                                  liveness
 //!   QUIT\n                                  close connection
@@ -12,6 +16,15 @@
 //!   HULL <id> OK <k_up> <k_lo> <backend> <queue_ns> <exec_ns>\n
 //!     then k_up lines, then k_lo lines, then END\n
 //!   HULL <id> ERR <message...>\n            request-level failure
+//!   SOPEN <id> OK <sid>\n                   session token
+//!   SADD <sid> OK <absorbed> <pending> <epoch>\n
+//!   SHULL <sid> OK <epoch> <k_up> <k_lo>\n
+//!     then k_up lines, then k_lo lines, then END\n
+//!   SCLOSE <sid> OK\n
+//!   SOPEN|SADD|SHULL|SCLOSE <sid> ERR <message...>\n
+//!                                           session-level failure (the
+//!                                           sid — the id for SOPEN — is
+//!                                           echoed, same rule as HULL)
 //!   ERR <id|-> <message...>\n               malformed frame (id echoed
 //!                                           when the header parsed)
 //!   STATS <json>\n       PONG\n
@@ -25,9 +38,33 @@ use crate::geometry::point::Point;
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     Hull { id: u64, points: Vec<Point> },
+    SessionOpen { id: u64 },
+    SessionAdd { sid: u64, points: Vec<Point> },
+    SessionHull { sid: u64 },
+    SessionClose { sid: u64 },
     Stats,
     Ping,
     Quit,
+}
+
+/// Which session verb a [`Response::SessionErr`] belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SessionVerb {
+    Open,
+    Add,
+    Hull,
+    Close,
+}
+
+impl SessionVerb {
+    pub fn word(&self) -> &'static str {
+        match self {
+            SessionVerb::Open => "SOPEN",
+            SessionVerb::Add => "SADD",
+            SessionVerb::Hull => "SHULL",
+            SessionVerb::Close => "SCLOSE",
+        }
+    }
 }
 
 /// A server reply (structured; formatting lives in write_response).
@@ -46,6 +83,19 @@ pub enum Response {
     /// when the frame header got far enough to recover it, so clients
     /// correlating replies by request id can still match the failure.
     MalformedErr { id: Option<u64>, message: String },
+    /// `SOPEN` accepted: the session token to use with the other verbs.
+    SessionOpened { id: u64, sid: u64 },
+    /// `SADD` accepted: lifetime absorbed count, current pending count,
+    /// current epoch.
+    SessionAdded { sid: u64, absorbed: u64, pending: u64, epoch: u64 },
+    /// `SHULL` reply: the authoritative hull (pending flushed) and the
+    /// epoch that produced it.
+    SessionHull { sid: u64, epoch: u64, upper: Vec<Point>, lower: Vec<Point> },
+    /// `SCLOSE` accepted.
+    SessionClosed { sid: u64 },
+    /// Session-level failure; the sid (request id for `SOPEN`) is echoed
+    /// under the same rules as `HULL <id> ERR`.
+    SessionErr { verb: SessionVerb, id: u64, message: String },
     Stats(String),
     Pong,
 }
@@ -58,7 +108,9 @@ pub enum ProtoError {
     /// parsed far enough to recover the request id.
     Malformed { id: Option<u64>, detail: String },
     /// DoS guard tripped; the header (and thus the id) did parse.
-    TooManyPoints { id: u64, points: usize },
+    /// `session` distinguishes an `SADD` frame (the error must echo as
+    /// `SADD <sid> ERR …`, not `HULL <id> ERR …`).
+    TooManyPoints { id: u64, points: usize, session: bool },
 }
 
 impl ProtoError {
@@ -112,46 +164,71 @@ fn read_line<R: BufRead>(r: &mut R) -> Result<String, ProtoError> {
     Ok(line.trim_end().to_string())
 }
 
+/// Read the `<id> <m>` header tail + the m-line point block shared by
+/// `HULL` and `SADD` frames.
+fn read_point_block<R: BufRead>(
+    r: &mut R,
+    it: &mut std::str::SplitWhitespace<'_>,
+    verb: &str,
+    session: bool,
+) -> Result<(u64, Vec<Point>), ProtoError> {
+    let id: Option<u64> = it.next().and_then(|s| s.parse().ok());
+    let m: Option<usize> = it.next().and_then(|s| s.parse().ok());
+    let (Some(id), Some(m)) = (id, m) else {
+        return Err(ProtoError::Malformed {
+            id,
+            detail: format!("{verb} needs <id> <m>"),
+        });
+    };
+    if m > MAX_REQUEST_POINTS {
+        return Err(ProtoError::TooManyPoints { id, points: m, session });
+    }
+    let mut points = Vec::with_capacity(m);
+    for k in 0..m {
+        let pl = read_line(r).map_err(|e| e.with_id(id))?;
+        let mut c = pl.split_whitespace();
+        let (x, y) = match (c.next(), c.next()) {
+            (Some(a), Some(b)) => (
+                a.parse::<f64>().map_err(|_| {
+                    ProtoError::malformed(format!("point {k}: {pl:?}")).with_id(id)
+                })?,
+                b.parse::<f64>().map_err(|_| {
+                    ProtoError::malformed(format!("point {k}: {pl:?}")).with_id(id)
+                })?,
+            ),
+            _ => {
+                return Err(ProtoError::malformed(format!("point {k}: {pl:?}")).with_id(id))
+            }
+        };
+        points.push(Point::new(x, y));
+    }
+    Ok((id, points))
+}
+
+/// Parse the lone numeric operand of SOPEN (`<id>`) / SHULL / SCLOSE
+/// (`<sid>`).
+fn parse_sid(it: &mut std::str::SplitWhitespace<'_>, verb: &str) -> Result<u64, ProtoError> {
+    it.next()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| ProtoError::malformed(format!("{verb} needs a numeric id")))
+}
+
 /// Read one request off the stream.
 pub fn read_request<R: BufRead>(r: &mut R) -> Result<Request, ProtoError> {
     let line = read_line(r)?;
     let mut it = line.split_whitespace();
     match it.next() {
         Some("HULL") => {
-            let id: Option<u64> = it.next().and_then(|s| s.parse().ok());
-            let m: Option<usize> = it.next().and_then(|s| s.parse().ok());
-            let (Some(id), Some(m)) = (id, m) else {
-                return Err(ProtoError::Malformed {
-                    id,
-                    detail: "HULL needs <id> <m>".into(),
-                });
-            };
-            if m > MAX_REQUEST_POINTS {
-                return Err(ProtoError::TooManyPoints { id, points: m });
-            }
-            let mut points = Vec::with_capacity(m);
-            for k in 0..m {
-                let pl = read_line(r).map_err(|e| e.with_id(id))?;
-                let mut c = pl.split_whitespace();
-                let (x, y) = match (c.next(), c.next()) {
-                    (Some(a), Some(b)) => (
-                        a.parse::<f64>().map_err(|_| {
-                            ProtoError::malformed(format!("point {k}: {pl:?}")).with_id(id)
-                        })?,
-                        b.parse::<f64>().map_err(|_| {
-                            ProtoError::malformed(format!("point {k}: {pl:?}")).with_id(id)
-                        })?,
-                    ),
-                    _ => {
-                        return Err(
-                            ProtoError::malformed(format!("point {k}: {pl:?}")).with_id(id)
-                        )
-                    }
-                };
-                points.push(Point::new(x, y));
-            }
+            let (id, points) = read_point_block(r, &mut it, "HULL", false)?;
             Ok(Request::Hull { id, points })
         }
+        Some("SOPEN") => Ok(Request::SessionOpen { id: parse_sid(&mut it, "SOPEN")? }),
+        Some("SADD") => {
+            let (sid, points) = read_point_block(r, &mut it, "SADD", true)?;
+            Ok(Request::SessionAdd { sid, points })
+        }
+        Some("SHULL") => Ok(Request::SessionHull { sid: parse_sid(&mut it, "SHULL")? }),
+        Some("SCLOSE") => Ok(Request::SessionClose { sid: parse_sid(&mut it, "SCLOSE")? }),
         Some("STATS") => Ok(Request::Stats),
         Some("PING") => Ok(Request::Ping),
         Some("QUIT") => Ok(Request::Quit),
@@ -168,6 +245,15 @@ pub fn write_request<W: Write>(w: &mut W, req: &Request) -> std::io::Result<()> 
                 writeln!(w, "{} {}", p.x, p.y)?;
             }
         }
+        Request::SessionOpen { id } => writeln!(w, "SOPEN {id}")?,
+        Request::SessionAdd { sid, points } => {
+            writeln!(w, "SADD {sid} {}", points.len())?;
+            for p in points {
+                writeln!(w, "{} {}", p.x, p.y)?;
+            }
+        }
+        Request::SessionHull { sid } => writeln!(w, "SHULL {sid}")?,
+        Request::SessionClose { sid } => writeln!(w, "SCLOSE {sid}")?,
         Request::Stats => writeln!(w, "STATS")?,
         Request::Ping => writeln!(w, "PING")?,
         Request::Quit => writeln!(w, "QUIT")?,
@@ -197,6 +283,21 @@ pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> std::io::Result<(
             Some(id) => writeln!(w, "ERR {id} {message}")?,
             None => writeln!(w, "ERR - {message}")?,
         },
+        Response::SessionOpened { id, sid } => writeln!(w, "SOPEN {id} OK {sid}")?,
+        Response::SessionAdded { sid, absorbed, pending, epoch } => {
+            writeln!(w, "SADD {sid} OK {absorbed} {pending} {epoch}")?;
+        }
+        Response::SessionHull { sid, epoch, upper, lower } => {
+            writeln!(w, "SHULL {sid} OK {epoch} {} {}", upper.len(), lower.len())?;
+            for p in upper.iter().chain(lower.iter()) {
+                writeln!(w, "{} {}", p.x, p.y)?;
+            }
+            writeln!(w, "END")?;
+        }
+        Response::SessionClosed { sid } => writeln!(w, "SCLOSE {sid} OK")?,
+        Response::SessionErr { verb, id, message } => {
+            writeln!(w, "{} {id} ERR {message}", verb.word())?;
+        }
         Response::Stats(json) => writeln!(w, "STATS {json}")?,
         Response::Pong => writeln!(w, "PONG")?,
     }
@@ -222,53 +323,98 @@ pub fn read_response<R: BufRead>(r: &mut R) -> Result<Response, ProtoError> {
         });
     }
     let mut it = line.split_whitespace();
-    if it.next() != Some("HULL") {
+    let verb = it.next().unwrap_or("");
+    if !matches!(verb, "HULL" | "SOPEN" | "SADD" | "SHULL" | "SCLOSE") {
         return Err(ProtoError::malformed(line));
     }
     let id: u64 = it
         .next()
         .and_then(|s| s.parse().ok())
         .ok_or_else(|| ProtoError::malformed(line.clone()))?;
-    match it.next() {
-        Some("OK") => {
-            let k_up: usize = it
-                .next()
-                .and_then(|s| s.parse().ok())
-                .ok_or_else(|| ProtoError::malformed(line.clone()))?;
-            let k_lo: usize = it
-                .next()
-                .and_then(|s| s.parse().ok())
-                .ok_or_else(|| ProtoError::malformed(line.clone()))?;
+    let status = it.next();
+    match (verb, status) {
+        ("HULL", Some("OK")) => {
+            let k_up = next_num(&mut it, verb, "k_up")? as usize;
+            let k_lo = next_num(&mut it, verb, "k_lo")? as usize;
             let backend = it.next().unwrap_or("?").to_string();
             let queue_ns: u64 = it.next().and_then(|s| s.parse().ok()).unwrap_or(0);
             let exec_ns: u64 = it.next().and_then(|s| s.parse().ok()).unwrap_or(0);
-            let mut pts = Vec::with_capacity(k_up + k_lo);
-            for _ in 0..k_up + k_lo {
-                let pl = read_line(r)?;
-                let mut c = pl.split_whitespace();
-                let x: f64 = c
-                    .next()
-                    .and_then(|s| s.parse().ok())
-                    .ok_or_else(|| ProtoError::malformed(pl.clone()))?;
-                let y: f64 = c
-                    .next()
-                    .and_then(|s| s.parse().ok())
-                    .ok_or_else(|| ProtoError::malformed(pl.clone()))?;
-                pts.push(Point::new(x, y));
-            }
-            let end = read_line(r)?;
-            if end != "END" {
-                return Err(ProtoError::malformed(format!("expected END, got {end:?}")));
-            }
-            let lower = pts.split_off(k_up);
-            Ok(Response::Hull { id, upper: pts, lower, backend, queue_ns, exec_ns })
+            let (upper, lower) = read_chains(r, k_up, k_lo)?;
+            Ok(Response::Hull { id, upper, lower, backend, queue_ns, exec_ns })
         }
-        Some("ERR") => {
+        ("SOPEN", Some("OK")) => {
+            Ok(Response::SessionOpened { id, sid: next_num(&mut it, verb, "sid")? })
+        }
+        ("SADD", Some("OK")) => Ok(Response::SessionAdded {
+            sid: id,
+            absorbed: next_num(&mut it, verb, "absorbed")?,
+            pending: next_num(&mut it, verb, "pending")?,
+            epoch: next_num(&mut it, verb, "epoch")?,
+        }),
+        ("SHULL", Some("OK")) => {
+            let epoch = next_num(&mut it, verb, "epoch")?;
+            let k_up = next_num(&mut it, verb, "k_up")? as usize;
+            let k_lo = next_num(&mut it, verb, "k_lo")? as usize;
+            let (upper, lower) = read_chains(r, k_up, k_lo)?;
+            Ok(Response::SessionHull { sid: id, epoch, upper, lower })
+        }
+        ("SCLOSE", Some("OK")) => Ok(Response::SessionClosed { sid: id }),
+        ("HULL", Some("ERR")) => {
             let msg: Vec<&str> = it.collect();
             Ok(Response::HullErr { id, message: msg.join(" ") })
         }
+        (_, Some("ERR")) => {
+            let sverb = match verb {
+                "SOPEN" => SessionVerb::Open,
+                "SADD" => SessionVerb::Add,
+                "SHULL" => SessionVerb::Hull,
+                _ => SessionVerb::Close,
+            };
+            let msg: Vec<&str> = it.collect();
+            Ok(Response::SessionErr { verb: sverb, id, message: msg.join(" ") })
+        }
         _ => Err(ProtoError::malformed(line)),
     }
+}
+
+/// Parse the next whitespace token of a response header as a number.
+fn next_num(
+    it: &mut std::str::SplitWhitespace<'_>,
+    verb: &str,
+    what: &str,
+) -> Result<u64, ProtoError> {
+    it.next()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| ProtoError::malformed(format!("{verb}: bad {what}")))
+}
+
+/// Read `k_up + k_lo` point lines followed by `END` (HULL / SHULL OK
+/// payload).
+fn read_chains<R: BufRead>(
+    r: &mut R,
+    k_up: usize,
+    k_lo: usize,
+) -> Result<(Vec<Point>, Vec<Point>), ProtoError> {
+    let mut pts = Vec::with_capacity(k_up + k_lo);
+    for _ in 0..k_up + k_lo {
+        let pl = read_line(r)?;
+        let mut c = pl.split_whitespace();
+        let x: f64 = c
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| ProtoError::malformed(pl.clone()))?;
+        let y: f64 = c
+            .next()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| ProtoError::malformed(pl.clone()))?;
+        pts.push(Point::new(x, y));
+    }
+    let end = read_line(r)?;
+    if end != "END" {
+        return Err(ProtoError::malformed(format!("expected END, got {end:?}")));
+    }
+    let lower = pts.split_off(k_up);
+    Ok((pts, lower))
 }
 
 #[cfg(test)]
@@ -349,8 +495,87 @@ mod tests {
         let line = format!("HULL 1 {}\n", MAX_REQUEST_POINTS + 1);
         assert_eq!(
             read_request(&mut BufReader::new(line.as_bytes())),
-            Err(ProtoError::TooManyPoints { id: 1, points: MAX_REQUEST_POINTS + 1 })
+            Err(ProtoError::TooManyPoints {
+                id: 1,
+                points: MAX_REQUEST_POINTS + 1,
+                session: false
+            })
         );
+        let line = format!("SADD 9 {}\n", MAX_REQUEST_POINTS + 1);
+        assert_eq!(
+            read_request(&mut BufReader::new(line.as_bytes())),
+            Err(ProtoError::TooManyPoints {
+                id: 9,
+                points: MAX_REQUEST_POINTS + 1,
+                session: true
+            })
+        );
+    }
+
+    // ------------------------------------------------- session verbs
+
+    #[test]
+    fn session_requests_roundtrip() {
+        for req in [
+            Request::SessionOpen { id: 3 },
+            Request::SessionAdd {
+                sid: 17,
+                points: vec![Point::new(0.125, 0.25), Point::new(0.5, 0.75)],
+            },
+            Request::SessionAdd { sid: 18, points: vec![] },
+            Request::SessionHull { sid: 17 },
+            Request::SessionClose { sid: 17 },
+        ] {
+            assert_eq!(roundtrip_req(req.clone()), req);
+        }
+    }
+
+    #[test]
+    fn session_responses_roundtrip() {
+        for resp in [
+            Response::SessionOpened { id: 3, sid: 42 },
+            Response::SessionAdded { sid: 42, absorbed: 7, pending: 11, epoch: 2 },
+            Response::SessionHull {
+                sid: 42,
+                epoch: 5,
+                upper: vec![Point::new(0.0, 0.0), Point::new(1.0, 1.0)],
+                lower: vec![Point::new(0.0, 0.0), Point::new(0.5, 0.0), Point::new(1.0, 1.0)],
+            },
+            Response::SessionHull { sid: 1, epoch: 0, upper: vec![], lower: vec![] },
+            Response::SessionClosed { sid: 42 },
+            Response::SessionErr {
+                verb: SessionVerb::Add,
+                id: 42,
+                message: "unknown-session".into(),
+            },
+            Response::SessionErr {
+                verb: SessionVerb::Open,
+                id: 9,
+                message: "session capacity 8 reached".into(),
+            },
+            Response::SessionErr { verb: SessionVerb::Hull, id: 2, message: "x".into() },
+            Response::SessionErr { verb: SessionVerb::Close, id: 2, message: "x".into() },
+        ] {
+            assert_eq!(roundtrip_resp(resp.clone()), resp);
+        }
+    }
+
+    #[test]
+    fn malformed_session_frames_echo_the_sid_when_parseable() {
+        // bad count token: sid parsed, count didn't
+        let e = read_request(&mut BufReader::new(&b"SADD 7 abc\n"[..])).unwrap_err();
+        assert_eq!(e.frame_id(), Some(7));
+        // bad point line: header fully parsed
+        let e = read_request(&mut BufReader::new(&b"SADD 8 1\nnope\n"[..])).unwrap_err();
+        assert_eq!(e.frame_id(), Some(8));
+        // truncated point block: EOF passes through (no reply possible)
+        let e = read_request(&mut BufReader::new(&b"SADD 8 2\n0.1 0.2\n"[..])).unwrap_err();
+        assert_eq!(e, ProtoError::Eof);
+        // bad sid token: nothing to echo
+        for bad in ["SADD x 2\n", "SOPEN x\n", "SHULL nope\n", "SCLOSE\n", "SOPEN\n"] {
+            let e = read_request(&mut BufReader::new(bad.as_bytes())).unwrap_err();
+            assert_eq!(e.frame_id(), None, "{bad:?}");
+        }
     }
 
     #[test]

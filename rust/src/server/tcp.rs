@@ -15,8 +15,9 @@ use std::thread::JoinHandle;
 
 use crate::coordinator::{Coordinator, HullRequest};
 use crate::log_info;
+use crate::stream::{SessionRegistry, StreamConfig};
 
-use super::proto::{self, ProtoError, Request, Response};
+use super::proto::{self, ProtoError, Request, Response, SessionVerb};
 
 /// Server knobs (config file: `[server]`).
 #[derive(Clone, Debug)]
@@ -61,12 +62,18 @@ pub struct ServerHandle {
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
     registry: Arc<ConnRegistry>,
+    sessions: Arc<SessionRegistry>,
 }
 
 impl ServerHandle {
     /// Currently open connections (gauge, not a lifetime total).
     pub fn active_connections(&self) -> u64 {
         self.registry.active.load(Ordering::Relaxed)
+    }
+
+    /// The streaming-session registry this server serves.
+    pub fn sessions(&self) -> &Arc<SessionRegistry> {
+        &self.sessions
     }
 
     pub fn stop(mut self) {
@@ -104,8 +111,23 @@ impl Drop for ServerHandle {
 }
 
 /// Start serving `coordinator` on `cfg.addr` (non-blocking; returns a
-/// handle).  The coordinator must outlive the handle (Arc).
+/// handle).  The coordinator must outlive the handle (Arc).  Streaming
+/// sessions get a default-configured registry sharing the coordinator's
+/// metrics; use [`serve_with_sessions`] to tune capacity/threshold/TTL
+/// (clamp the threshold with [`StreamConfig::clamp_threshold_to`] — a
+/// threshold above the backend's request cap can never merge).
 pub fn serve(coordinator: Arc<Coordinator>, cfg: &ServerConfig) -> std::io::Result<ServerHandle> {
+    let stream_cfg = StreamConfig::default().clamp_threshold_to(coordinator.max_points());
+    let sessions = Arc::new(SessionRegistry::new(stream_cfg, coordinator.metrics.clone()));
+    serve_with_sessions(coordinator, sessions, cfg)
+}
+
+/// [`serve`] with an explicitly configured session registry.
+pub fn serve_with_sessions(
+    coordinator: Arc<Coordinator>,
+    sessions: Arc<SessionRegistry>,
+    cfg: &ServerConfig,
+) -> std::io::Result<ServerHandle> {
     let listener = TcpListener::bind(&cfg.addr)?;
     let local_addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
@@ -114,6 +136,7 @@ pub fn serve(coordinator: Arc<Coordinator>, cfg: &ServerConfig) -> std::io::Resu
 
     let stop2 = stop.clone();
     let reg2 = registry.clone();
+    let sessions2 = sessions.clone();
     let accept_thread = std::thread::Builder::new()
         .name("hull-accept".into())
         .spawn(move || {
@@ -124,6 +147,7 @@ pub fn serve(coordinator: Arc<Coordinator>, cfg: &ServerConfig) -> std::io::Resu
                 match stream {
                     Ok(s) => {
                         let coord = coordinator.clone();
+                        let sess = sessions2.clone();
                         let reg = reg2.clone();
                         let tracked = match s.try_clone() {
                             Ok(t) => t,
@@ -146,7 +170,7 @@ pub fn serve(coordinator: Arc<Coordinator>, cfg: &ServerConfig) -> std::io::Resu
                         let spawned = std::thread::Builder::new()
                             .name("hull-conn".into())
                             .spawn(move || {
-                                handle_connection(s, coord);
+                                handle_connection(s, coord, sess);
                                 reg_in.active.fetch_sub(1, Ordering::Relaxed);
                                 // self-reap: drop the tracked stream clone
                                 // now, not at the next accept — only the
@@ -179,10 +203,10 @@ pub fn serve(coordinator: Arc<Coordinator>, cfg: &ServerConfig) -> std::io::Resu
             }
         })?;
 
-    Ok(ServerHandle { local_addr, stop, accept_thread: Some(accept_thread), registry })
+    Ok(ServerHandle { local_addr, stop, accept_thread: Some(accept_thread), registry, sessions })
 }
 
-fn handle_connection(stream: TcpStream, coord: Arc<Coordinator>) {
+fn handle_connection(stream: TcpStream, coord: Arc<Coordinator>, sessions: Arc<SessionRegistry>) {
     let peer = stream.peer_addr().ok();
     let mut reader = BufReader::new(match stream.try_clone() {
         Ok(s) => s,
@@ -196,9 +220,17 @@ fn handle_connection(stream: TcpStream, coord: Arc<Coordinator>) {
             Err(e) => {
                 // echo the failed frame's id when the header parsed, so
                 // id-correlating clients can still match the failure
+                // (session frames echo under their own verb)
                 let resp = match &e {
-                    ProtoError::TooManyPoints { id, .. } => {
+                    ProtoError::TooManyPoints { id, session: false, .. } => {
                         Response::HullErr { id: *id, message: e.to_string() }
+                    }
+                    ProtoError::TooManyPoints { id, session: true, .. } => {
+                        Response::SessionErr {
+                            verb: SessionVerb::Add,
+                            id: *id,
+                            message: e.to_string(),
+                        }
                     }
                     _ => Response::MalformedErr { id: e.frame_id(), message: e.to_string() },
                 };
@@ -232,6 +264,68 @@ fn handle_connection(stream: TcpStream, coord: Arc<Coordinator>) {
                     },
                     Ok(Err(e)) => Response::HullErr { id, message: e.to_string() },
                     Err(_) => Response::HullErr { id, message: "coordinator gone".into() },
+                };
+                if proto::write_response(&mut writer, &resp).is_err() {
+                    break;
+                }
+            }
+            Request::SessionOpen { id } => {
+                let resp = match sessions.open() {
+                    Ok(sid) => Response::SessionOpened { id, sid },
+                    Err(e) => Response::SessionErr {
+                        verb: SessionVerb::Open,
+                        id,
+                        message: e.to_string(),
+                    },
+                };
+                if proto::write_response(&mut writer, &resp).is_err() {
+                    break;
+                }
+            }
+            Request::SessionAdd { sid, points } => {
+                let resp = match sessions.add(sid, &points, &*coord) {
+                    Ok(o) => Response::SessionAdded {
+                        sid,
+                        absorbed: o.absorbed,
+                        pending: o.pending as u64,
+                        epoch: o.epoch,
+                    },
+                    Err(e) => Response::SessionErr {
+                        verb: SessionVerb::Add,
+                        id: sid,
+                        message: e.to_string(),
+                    },
+                };
+                if proto::write_response(&mut writer, &resp).is_err() {
+                    break;
+                }
+            }
+            Request::SessionHull { sid } => {
+                let resp = match sessions.hull(sid, &*coord) {
+                    Ok(s) => Response::SessionHull {
+                        sid,
+                        epoch: s.epoch,
+                        upper: s.upper,
+                        lower: s.lower,
+                    },
+                    Err(e) => Response::SessionErr {
+                        verb: SessionVerb::Hull,
+                        id: sid,
+                        message: e.to_string(),
+                    },
+                };
+                if proto::write_response(&mut writer, &resp).is_err() {
+                    break;
+                }
+            }
+            Request::SessionClose { sid } => {
+                let resp = match sessions.close(sid) {
+                    Ok(()) => Response::SessionClosed { sid },
+                    Err(e) => Response::SessionErr {
+                        verb: SessionVerb::Close,
+                        id: sid,
+                        message: e.to_string(),
+                    },
                 };
                 if proto::write_response(&mut writer, &resp).is_err() {
                     break;

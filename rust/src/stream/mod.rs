@@ -1,0 +1,25 @@
+//! Streaming hull sessions: incremental maintenance over long-lived
+//! connections.
+//!
+//! The one-shot pipeline re-hulls every request from scratch and forgets
+//! the answer; under update-heavy traffic almost all of that work is
+//! redundant.  This subsystem keeps per-client state: a [`Session`] holds
+//! the current hull, interior-rejects inserts in O(log h) with exact
+//! predicates (the GPU-filter literature's cheap-rejection trick, applied
+//! against the *true* hull instead of an octagon), buffers the survivors,
+//! and periodically folds them back in — the pending set goes through the
+//! ordinary coordinator backends and the resulting hull⊕hull pair through
+//! the paper's common-tangent merge ([`crate::wagener::hull_merge`]).
+//!
+//! The [`SessionRegistry`] owns the fleet: session tokens, a capacity
+//! cap, idle-TTL eviction (sweeps take the per-session lock, so eviction
+//! can never race an in-flight `SADD`), and the serving metrics
+//! (open-session gauge, absorbed/pending counters, merge latency).
+//! Wire verbs: `SOPEN` / `SADD` / `SHULL` / `SCLOSE` (see
+//! [`crate::server::proto`]).
+
+pub mod registry;
+pub mod session;
+
+pub use registry::{SessionError, SessionHullSnapshot, SessionRegistry, StreamConfig};
+pub use session::{AddOutcome, HullService, Session};

@@ -1,0 +1,483 @@
+//! The session registry: long-lived per-client hull state behind the
+//! stateless serving pipeline.
+//!
+//! Concurrency protocol (the part PR 3's id-echo bugfix list cares
+//! about):
+//!
+//! * every session sits behind its own mutex, so `SADD`s from one client
+//!   serialize while distinct sessions ride different pool workers;
+//! * the eviction sweep takes that per-session lock (`try_lock` — a
+//!   session busy in an `SADD`/merge is by definition not idle) *before*
+//!   deciding, marks the slot `evicted` under the lock, and only then
+//!   removes the map entry.  An operation that raced the sweep and still
+//!   holds an `Arc` to the slot observes the `evicted` flag after
+//!   acquiring the lock and reports `unknown-session` instead of
+//!   mutating a ghost;
+//! * lock order is strictly slot-then-map for the sweeper and
+//!   map-without-slot for operations (ops only clone the `Arc` under the
+//!   map lock), so no cycle exists;
+//! * `close` removes the map entry first (no new operation can find the
+//!   session), then waits on the slot lock so an in-flight `SADD`
+//!   completes before the gauges are settled.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Metrics, RequestError};
+use crate::geometry::point::Point;
+
+use super::session::{AddOutcome, HullService, Session};
+
+/// Streaming-session knobs (config file: `[stream]`).
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    /// open-session cap; `SOPEN` beyond it fails (after an eviction
+    /// sweep gets a chance to free idle slots).
+    pub max_sessions: usize,
+    /// pending-buffer bound: a session re-hulls when this many points
+    /// pend (min 1).
+    pub merge_threshold: usize,
+    /// idle eviction TTL in milliseconds; 0 disables eviction.
+    pub idle_ttl_ms: u64,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig { max_sessions: 1024, merge_threshold: 4096, idle_ttl_ms: 60_000 }
+    }
+}
+
+impl StreamConfig {
+    /// Cap the merge threshold at the serving backend's per-request
+    /// limit.  A threshold above `max_points` could never merge: every
+    /// re-hull of the pending set would be rejected as TooLarge, the
+    /// session would brick, and the "bounded pending buffer" guarantee
+    /// would silently become unbounded growth.
+    pub fn clamp_threshold_to(mut self, max_points: usize) -> StreamConfig {
+        self.merge_threshold = self.merge_threshold.min(max_points.max(1));
+        self
+    }
+}
+
+/// Session-level failures (distinct from request-level [`RequestError`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum SessionError {
+    /// sid never existed, was closed, or was evicted.
+    UnknownSession,
+    /// registry is at `max_sessions`.
+    Capacity { max: usize },
+    /// the insert/merge failed at the request layer.
+    Request(RequestError),
+}
+
+impl std::fmt::Display for SessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionError::UnknownSession => write!(f, "unknown-session"),
+            SessionError::Capacity { max } => write!(f, "session capacity {max} reached"),
+            SessionError::Request(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for SessionError {}
+
+/// `SHULL` payload: the authoritative hull (pending flushed) plus the
+/// epoch that produced it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionHullSnapshot {
+    pub epoch: u64,
+    pub upper: Vec<Point>,
+    pub lower: Vec<Point>,
+}
+
+struct SlotState {
+    session: Session,
+    last_used: Instant,
+    evicted: bool,
+}
+
+struct Slot {
+    state: Mutex<SlotState>,
+}
+
+struct Inner {
+    sessions: Mutex<HashMap<u64, Arc<Slot>>>,
+    next_sid: AtomicU64,
+    cfg: StreamConfig,
+    metrics: Arc<Metrics>,
+}
+
+/// Shared registry of open sessions (wrap in `Arc` to share with the
+/// server).  Owns the idle-eviction sweeper thread; dropping the registry
+/// stops and joins it.
+pub struct SessionRegistry {
+    inner: Arc<Inner>,
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    sweeper: Option<JoinHandle<()>>,
+}
+
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // registry critical sections are short and panic-free; a poisoned
+    // mutex (panic elsewhere on the thread) must not wedge serving
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+impl SessionRegistry {
+    /// Build a registry sharing the coordinator's metrics sink (the
+    /// session gauges ride the same STATS snapshot).
+    pub fn new(cfg: StreamConfig, metrics: Arc<Metrics>) -> SessionRegistry {
+        let inner = Arc::new(Inner {
+            sessions: Mutex::new(HashMap::new()),
+            next_sid: AtomicU64::new(1),
+            cfg,
+            metrics,
+        });
+        let stop = Arc::new((Mutex::new(false), Condvar::new()));
+        let sweeper = if inner.cfg.idle_ttl_ms > 0 {
+            let inner2 = inner.clone();
+            let stop2 = stop.clone();
+            let interval =
+                Duration::from_millis((inner.cfg.idle_ttl_ms / 4).clamp(10, 1000));
+            Some(
+                std::thread::Builder::new()
+                    .name("hull-session-sweep".into())
+                    .spawn(move || {
+                        let (lock, cv) = &*stop2;
+                        let mut stopped = lock_ignore_poison(lock);
+                        while !*stopped {
+                            let (guard, _) = cv
+                                .wait_timeout(stopped, interval)
+                                .unwrap_or_else(PoisonError::into_inner);
+                            stopped = guard;
+                            if *stopped {
+                                return;
+                            }
+                            drop(stopped);
+                            sweep(&inner2);
+                            stopped = lock_ignore_poison(lock);
+                        }
+                    })
+                    .expect("spawn session sweeper"),
+            )
+        } else {
+            None
+        };
+        SessionRegistry { inner, stop, sweeper }
+    }
+
+    /// Open a session; returns its token.  At capacity an eviction sweep
+    /// runs first — only genuinely live sessions can exhaust the cap.
+    pub fn open(&self) -> Result<u64, SessionError> {
+        {
+            let map = lock_ignore_poison(&self.inner.sessions);
+            if map.len() < self.inner.cfg.max_sessions {
+                return Ok(self.insert_session(map));
+            }
+        }
+        sweep(&self.inner); // a second chance: reap idle slots now
+        let map = lock_ignore_poison(&self.inner.sessions);
+        if map.len() < self.inner.cfg.max_sessions {
+            Ok(self.insert_session(map))
+        } else {
+            Err(SessionError::Capacity { max: self.inner.cfg.max_sessions })
+        }
+    }
+
+    fn insert_session(&self, mut map: MutexGuard<'_, HashMap<u64, Arc<Slot>>>) -> u64 {
+        let sid = self.inner.next_sid.fetch_add(1, Ordering::Relaxed);
+        map.insert(
+            sid,
+            Arc::new(Slot {
+                state: Mutex::new(SlotState {
+                    session: Session::new(self.inner.cfg.merge_threshold),
+                    last_used: Instant::now(),
+                    evicted: false,
+                }),
+            }),
+        );
+        Metrics::inc(&self.inner.metrics.open_sessions);
+        sid
+    }
+
+    /// Run `f` under the session's lock, refreshing its idle clock.
+    fn with_session<R>(
+        &self,
+        sid: u64,
+        f: impl FnOnce(&mut Session) -> Result<R, SessionError>,
+    ) -> Result<R, SessionError> {
+        let slot = lock_ignore_poison(&self.inner.sessions)
+            .get(&sid)
+            .cloned()
+            .ok_or(SessionError::UnknownSession)?;
+        let mut st = lock_ignore_poison(&slot.state);
+        if st.evicted {
+            return Err(SessionError::UnknownSession);
+        }
+        let r = f(&mut st.session);
+        st.last_used = Instant::now();
+        r
+    }
+
+    /// `SADD`: validate, interior-reject, pend, merge on threshold.
+    pub fn add(
+        &self,
+        sid: u64,
+        points: &[Point],
+        svc: &dyn HullService,
+    ) -> Result<AddOutcome, SessionError> {
+        let m = &self.inner.metrics;
+        self.with_session(sid, |s| {
+            let (pend0, abs0) = (s.pending_len() as u64, s.absorbed_total());
+            let result = s.add(points, svc);
+            record_session_deltas(m, s, pend0, abs0);
+            result.map_err(SessionError::Request)
+        })
+    }
+
+    /// `SHULL`: flush pending, return the authoritative hull + epoch.
+    pub fn hull(
+        &self,
+        sid: u64,
+        svc: &dyn HullService,
+    ) -> Result<SessionHullSnapshot, SessionError> {
+        let m = &self.inner.metrics;
+        self.with_session(sid, |s| {
+            let (pend0, abs0) = (s.pending_len() as u64, s.absorbed_total());
+            let result = s.flush(svc);
+            record_session_deltas(m, s, pend0, abs0);
+            result.map_err(SessionError::Request)?;
+            let (u, l) = s.hull();
+            Ok(SessionHullSnapshot {
+                epoch: s.epoch(),
+                upper: u.to_vec(),
+                lower: l.to_vec(),
+            })
+        })
+    }
+
+    /// `SCLOSE`: unregister; waits for an in-flight operation to finish.
+    pub fn close(&self, sid: u64) -> Result<(), SessionError> {
+        let slot = lock_ignore_poison(&self.inner.sessions)
+            .remove(&sid)
+            .ok_or(SessionError::UnknownSession)?;
+        let mut st = lock_ignore_poison(&slot.state);
+        st.evicted = true; // a racer still holding the Arc sees a tombstone
+        let m = &self.inner.metrics;
+        Metrics::sub(&m.open_sessions, 1);
+        Metrics::sub(&m.session_pending_points, st.session.pending_len() as u64);
+        Ok(())
+    }
+
+    /// Currently open sessions.
+    pub fn open_sessions(&self) -> usize {
+        lock_ignore_poison(&self.inner.sessions).len()
+    }
+
+    /// Run one eviction sweep synchronously (tests; the sweeper thread
+    /// calls the same routine on its interval).
+    pub fn sweep_now(&self) {
+        sweep(&self.inner);
+    }
+}
+
+impl Drop for SessionRegistry {
+    fn drop(&mut self) {
+        {
+            let (lock, cv) = &*self.stop;
+            *lock_ignore_poison(lock) = true;
+            cv.notify_all();
+        }
+        if let Some(h) = self.sweeper.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Record the metric deltas of one session operation (shared by `add`
+/// and `hull`).  Runs even when the operation failed mid-way: a backend
+/// error can interrupt after points pended and merges ran, so the gauges
+/// must track the session's actual state (or a later close/evict would
+/// underflow them) and completed merges keep their counter + latency
+/// sample (drained from the session, not a possibly-discarded return
+/// value).
+fn record_session_deltas(m: &Metrics, s: &mut Session, pend0: u64, abs0: u64) {
+    Metrics::add(&m.session_absorbed_points, s.absorbed_total() - abs0);
+    gauge_shift(&m.session_pending_points, pend0, s.pending_len() as u64);
+    for ns in s.take_merge_samples() {
+        Metrics::inc(&m.session_merges);
+        m.session_merge_latency.record_ns(ns);
+    }
+}
+
+/// Move a gauge from `before` to `after` without ever underflowing.
+fn gauge_shift(gauge: &AtomicU64, before: u64, after: u64) {
+    if after >= before {
+        Metrics::add(gauge, after - before);
+    } else {
+        Metrics::sub(gauge, before - after);
+    }
+}
+
+/// One eviction pass.  Slot lock first (`try_lock`: busy == not idle),
+/// decision + tombstone under the lock, map removal after.
+fn sweep(inner: &Inner) {
+    if inner.cfg.idle_ttl_ms == 0 {
+        return;
+    }
+    let ttl = Duration::from_millis(inner.cfg.idle_ttl_ms);
+    let snapshot: Vec<(u64, Arc<Slot>)> = lock_ignore_poison(&inner.sessions)
+        .iter()
+        .map(|(sid, slot)| (*sid, slot.clone()))
+        .collect();
+    for (sid, slot) in snapshot {
+        let Ok(mut st) = slot.state.try_lock() else {
+            continue; // in-flight SADD/SHULL: the session is live
+        };
+        if st.evicted || st.last_used.elapsed() < ttl {
+            continue;
+        }
+        st.evicted = true;
+        let pending = st.session.pending_len() as u64;
+        drop(st);
+        let mut map = lock_ignore_poison(&inner.sessions);
+        if map.get(&sid).is_some_and(|s| Arc::ptr_eq(s, &slot)) {
+            map.remove(&sid);
+            drop(map);
+            Metrics::sub(&inner.metrics.open_sessions, 1);
+            Metrics::sub(&inner.metrics.session_pending_points, pending);
+            Metrics::inc(&inner.metrics.session_evictions);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::generators::{generate, Distribution};
+    use crate::stream::session::tests::{oracle, SerialService};
+
+    fn registry(cfg: StreamConfig) -> SessionRegistry {
+        SessionRegistry::new(cfg, Arc::new(Metrics::default()))
+    }
+
+    #[test]
+    fn open_add_hull_close_lifecycle() {
+        let reg = registry(StreamConfig { merge_threshold: 32, ..Default::default() });
+        let svc = SerialService;
+        let sid = reg.open().unwrap();
+        let pts = generate(Distribution::Disk, 200, 4);
+        for chunk in pts.chunks(50) {
+            reg.add(sid, chunk, &svc).unwrap();
+        }
+        let snap = reg.hull(sid, &svc).unwrap();
+        let (wu, wl) = oracle(&pts);
+        assert_eq!(snap.upper, wu);
+        assert_eq!(snap.lower, wl);
+        assert!(snap.epoch >= 1);
+        reg.close(sid).unwrap();
+        assert_eq!(reg.open_sessions(), 0);
+        assert_eq!(reg.close(sid), Err(SessionError::UnknownSession));
+        assert!(matches!(
+            reg.add(sid, &pts[..1], &svc),
+            Err(SessionError::UnknownSession)
+        ));
+    }
+
+    #[test]
+    fn capacity_cap_enforced() {
+        let reg = registry(StreamConfig { max_sessions: 2, idle_ttl_ms: 0, ..Default::default() });
+        let a = reg.open().unwrap();
+        let _b = reg.open().unwrap();
+        assert_eq!(reg.open(), Err(SessionError::Capacity { max: 2 }));
+        reg.close(a).unwrap();
+        reg.open().unwrap();
+    }
+
+    #[test]
+    fn idle_sessions_evicted_after_ttl() {
+        // sweeper disabled-ish (long interval via big ttl? no — drive
+        // sweep_now by hand with a tiny ttl)
+        let reg = registry(StreamConfig { idle_ttl_ms: 30, ..Default::default() });
+        let svc = SerialService;
+        let sid = reg.open().unwrap();
+        reg.add(sid, &[Point::new(0.5, 0.5)], &svc).unwrap();
+        std::thread::sleep(Duration::from_millis(60));
+        reg.sweep_now();
+        assert_eq!(reg.open_sessions(), 0);
+        assert!(matches!(
+            reg.add(sid, &[Point::new(0.1, 0.1)], &svc),
+            Err(SessionError::UnknownSession)
+        ));
+    }
+
+    #[test]
+    fn metrics_track_sessions_and_pending() {
+        let metrics = Arc::new(Metrics::default());
+        let reg = SessionRegistry::new(
+            StreamConfig { merge_threshold: 1000, idle_ttl_ms: 0, ..Default::default() },
+            metrics.clone(),
+        );
+        let svc = SerialService;
+        let sid = reg.open().unwrap();
+        assert_eq!(metrics.open_sessions.load(Ordering::Relaxed), 1);
+        let pts = generate(Distribution::Circle, 40, 2);
+        reg.add(sid, &pts, &svc).unwrap();
+        assert_eq!(metrics.session_pending_points.load(Ordering::Relaxed), 40);
+        reg.hull(sid, &svc).unwrap(); // flush
+        assert_eq!(metrics.session_pending_points.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.session_merges.load(Ordering::Relaxed), 1);
+        assert!(metrics.session_merge_latency.count() == 1);
+        reg.close(sid).unwrap();
+        assert_eq!(metrics.open_sessions.load(Ordering::Relaxed), 0);
+    }
+
+    /// The satellite bugfix: an eviction sweep must never tear a session
+    /// out from under an in-flight SADD.  The slow service pins the
+    /// session lock across the merge while sweeps hammer the registry.
+    #[test]
+    fn eviction_never_races_an_inflight_add() {
+        struct SlowService;
+        impl HullService for SlowService {
+            fn full_hull(
+                &self,
+                points: Vec<Point>,
+            ) -> Result<(Vec<Point>, Vec<Point>), RequestError> {
+                std::thread::sleep(Duration::from_millis(200));
+                SerialService.full_hull(points)
+            }
+        }
+        let reg = Arc::new(registry(StreamConfig {
+            merge_threshold: 4,
+            idle_ttl_ms: 150,
+            ..Default::default()
+        }));
+        let sid = reg.open().unwrap();
+        // the add's merges hold the session lock for ~400 ms — far past
+        // the 150 ms TTL, so the session *looks* idle-expired (stale
+        // last_used) exactly while an operation is in flight
+        let reg2 = reg.clone();
+        let worker = std::thread::spawn(move || {
+            let pts = generate(Distribution::Disk, 8, 1);
+            reg2.add(sid, &pts, &SlowService)
+        });
+        // sweeps during the in-flight add must skip the busy session
+        for _ in 0..20 {
+            reg.sweep_now();
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        let outcome = worker.join().unwrap();
+        assert!(outcome.is_ok(), "in-flight SADD evicted: {outcome:?}");
+        // the add refreshed the idle clock: the session is still live
+        assert_eq!(reg.open_sessions(), 1);
+        let snap = reg.hull(sid, &SerialService).unwrap();
+        assert!(!snap.upper.is_empty());
+        // ...and once genuinely idle again, eviction proceeds
+        std::thread::sleep(Duration::from_millis(250));
+        reg.sweep_now();
+        assert_eq!(reg.open_sessions(), 0);
+    }
+}

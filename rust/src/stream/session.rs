@@ -1,0 +1,365 @@
+//! One streaming hull session: the incremental maintenance state machine.
+//!
+//! A [`Session`] holds the current hull (canonical upper/lower chains), a
+//! bounded pending-point buffer, and an epoch counter.  Inserts are
+//! interior-rejected against the current hull in O(log h) with the exact
+//! orientation predicate — *strictly* interior points can never become
+//! hull vertices of any superset, so they are absorbed on the spot;
+//! everything else (including points exactly ON the boundary, the same
+//! boundary-safety rule as the octagon prefilter) pends.  When the pending
+//! buffer reaches the merge threshold, or on an explicit flush, the
+//! pending set is hulled by the configured backend (through
+//! [`HullService`]) and combined with the current hull by the paper's
+//! tangent machinery ([`crate::wagener::hull_merge::merge_hulls`]).
+//!
+//! Invariant (checked by the integration suite): at every quiescent point,
+//! `inserted == absorbed + pending + hull_points`, and the hull chains are
+//! bit-identical to a one-shot hull of every point ever inserted.
+
+use std::time::Instant;
+
+use crate::coordinator::request::validate_points;
+use crate::coordinator::{Coordinator, RequestError};
+use crate::geometry::point::{sort_by_x, Point};
+use crate::geometry::predicates::{orient2d, Orientation};
+use crate::wagener::hull_merge::merge_hulls;
+
+/// Anything that can turn a raw point set into canonical hull chains —
+/// the session's door into the coordinator's backend pool.  Implemented
+/// by [`Coordinator`]; tests substitute a serial implementation.
+pub trait HullService {
+    fn full_hull(&self, points: Vec<Point>) -> Result<(Vec<Point>, Vec<Point>), RequestError>;
+}
+
+impl HullService for Coordinator {
+    fn full_hull(&self, points: Vec<Point>) -> Result<(Vec<Point>, Vec<Point>), RequestError> {
+        let resp = self.compute(points)?;
+        Ok((resp.upper, resp.lower))
+    }
+}
+
+/// Result of one [`Session::add`] call, echoed on the wire as
+/// `SADD <sid> OK <absorbed> <pending> <epoch>`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AddOutcome {
+    /// lifetime count of points absorbed (interior-rejected at insert or
+    /// swallowed by a merge).
+    pub absorbed: u64,
+    /// points currently pending (post-call).
+    pub pending: usize,
+    /// current epoch (increments once per merge).
+    pub epoch: u64,
+}
+
+/// One client's incremental hull.
+#[derive(Debug)]
+pub struct Session {
+    upper: Vec<Point>,
+    lower: Vec<Point>,
+    pending: Vec<Point>,
+    epoch: u64,
+    inserted: u64,
+    absorbed: u64,
+    /// unique vertex count of the current hull (upper ∪ lower).
+    hull_points: u64,
+    merge_threshold: usize,
+    /// wall time of merges not yet drained by [`Session::take_merge_samples`]
+    /// (buffered here, not in the return value, so completed merges keep
+    /// their latency samples even when a later merge in the same call
+    /// errors out).
+    merge_samples: Vec<u64>,
+}
+
+impl Session {
+    pub fn new(merge_threshold: usize) -> Session {
+        Session {
+            upper: Vec::new(),
+            lower: Vec::new(),
+            pending: Vec::new(),
+            epoch: 0,
+            inserted: 0,
+            absorbed: 0,
+            hull_points: 0,
+            merge_threshold: merge_threshold.max(1),
+            merge_samples: Vec::new(),
+        }
+    }
+
+    /// Insert a batch.  Validation is atomic (any bad point rejects the
+    /// whole batch before anything mutates); a backend failure mid-merge
+    /// leaves already-inserted points pending and is retried by the next
+    /// add/flush.
+    pub fn add(
+        &mut self,
+        points: &[Point],
+        svc: &dyn HullService,
+    ) -> Result<AddOutcome, RequestError> {
+        validate_points(points)?;
+        for p in points {
+            let q = p.quantize_f32();
+            self.inserted += 1;
+            if strictly_inside(&self.upper, &self.lower, q) {
+                self.absorbed += 1;
+            } else {
+                self.pending.push(q);
+                if self.pending.len() >= self.merge_threshold {
+                    self.merge(svc)?;
+                }
+            }
+        }
+        Ok(AddOutcome {
+            absorbed: self.absorbed,
+            pending: self.pending.len(),
+            epoch: self.epoch,
+        })
+    }
+
+    /// Fold any pending points into the hull.  Returns whether a merge
+    /// actually ran.
+    pub fn flush(&mut self, svc: &dyn HullService) -> Result<bool, RequestError> {
+        if self.pending.is_empty() {
+            return Ok(false);
+        }
+        self.merge(svc)?;
+        Ok(true)
+    }
+
+    /// Drain the wall times of merges since the last drain (one sample
+    /// per completed merge, kept across a failing call so metrics never
+    /// lose a merge that did happen).
+    pub fn take_merge_samples(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.merge_samples)
+    }
+
+    /// Re-hull `hull ∪ pending`: the pending set goes through the backend
+    /// pool, the resulting hull⊕hull pair through the tangent merge.
+    fn merge(&mut self, svc: &dyn HullService) -> Result<(), RequestError> {
+        debug_assert!(!self.pending.is_empty());
+        let t0 = Instant::now();
+        let consumed = self.pending.len() as u64;
+        // pending stays in place until the backend answers: a Backend
+        // error must not lose points
+        let (pu, pl) = svc.full_hull(self.pending.clone())?;
+        let (upper, lower) = if self.upper.is_empty() {
+            (pu, pl)
+        } else {
+            let ((u, l), _path) = merge_hulls((&self.upper, &self.lower), (&pu, &pl));
+            (u, l)
+        };
+        let old_hull = self.hull_points;
+        let new_hull = unique_vertices(&upper, &lower);
+        self.upper = upper;
+        self.lower = lower;
+        self.pending.clear();
+        self.hull_points = new_hull;
+        // every consumed point (and every displaced old vertex) that is
+        // not a vertex of the new hull has been proven interior: absorbed
+        self.absorbed += old_hull + consumed - new_hull;
+        self.epoch += 1;
+        self.merge_samples.push(t0.elapsed().as_nanos() as u64);
+        Ok(())
+    }
+
+    /// Current hull chains (pending points NOT included — flush first for
+    /// the authoritative hull).
+    pub fn hull(&self) -> (&[Point], &[Point]) {
+        (&self.upper, &self.lower)
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn inserted_total(&self) -> u64 {
+        self.inserted
+    }
+
+    pub fn absorbed_total(&self) -> u64 {
+        self.absorbed
+    }
+
+    /// Unique vertex count of the current hull.
+    pub fn hull_points(&self) -> u64 {
+        self.hull_points
+    }
+}
+
+/// Distinct points across the two chains (they share their extreme-x
+/// vertices; degenerate hulls may not — count exactly).
+fn unique_vertices(upper: &[Point], lower: &[Point]) -> u64 {
+    let mut all: Vec<Point> = upper.iter().chain(lower.iter()).copied().collect();
+    sort_by_x(&mut all);
+    all.dedup();
+    all.len() as u64
+}
+
+/// Exact strict-interior test against canonical hull chains: strictly
+/// between the extreme x's, strictly below the upper chain, strictly
+/// above the lower chain.  Zero-area hulls (segments, single points,
+/// vertical degenerate edges) contain nothing strictly — boundary-safe by
+/// construction, so absorbing is always hull-preserving bit-for-bit.
+pub fn strictly_inside(upper: &[Point], lower: &[Point], p: Point) -> bool {
+    if upper.len() < 2 || lower.len() < 2 {
+        return false;
+    }
+    let (xl, xr) = (upper[0].x, upper[upper.len() - 1].x);
+    if !(xl < p.x && p.x < xr) {
+        return false;
+    }
+    chain_side(upper, p) == Orientation::Right && chain_side(lower, p) == Orientation::Left
+}
+
+/// Orientation of `p` against the chain segment spanning `p.x`
+/// (chains are x-sorted with strictly increasing x; caller guarantees
+/// `chain[0].x < p.x < chain.last().x`).  O(log h) binary search.
+fn chain_side(chain: &[Point], p: Point) -> Orientation {
+    let k = chain.partition_point(|v| v.x <= p.x);
+    // k >= 1 and k < chain.len() by the caller's range check
+    orient2d(chain[k - 1], chain[k], p)
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::coordinator::backend::canonical_full_hull;
+    use crate::geometry::generators::{generate, Distribution};
+
+    /// Serial stand-in for the coordinator: identical canonicalization
+    /// (quantize, sort, dedup, exact fallback under duplicate x).
+    pub(crate) struct SerialService;
+
+    impl HullService for SerialService {
+        fn full_hull(
+            &self,
+            points: Vec<Point>,
+        ) -> Result<(Vec<Point>, Vec<Point>), RequestError> {
+            if points.is_empty() {
+                return Err(RequestError::Empty);
+            }
+            Ok(canonical_full_hull(&points))
+        }
+    }
+
+    /// One-shot oracle over a raw insert history.
+    pub(crate) fn oracle(points: &[Point]) -> (Vec<Point>, Vec<Point>) {
+        canonical_full_hull(points)
+    }
+
+    #[test]
+    fn strict_interior_rejects_boundary_keeps_inside() {
+        let square = vec![
+            Point::new(0.0, 0.0),
+            Point::new(0.0, 1.0),
+            Point::new(1.0, 0.0),
+            Point::new(1.0, 1.0),
+        ];
+        let (u, l) = oracle(&square);
+        assert!(strictly_inside(&u, &l, Point::new(0.5, 0.5)));
+        assert!(!strictly_inside(&u, &l, Point::new(0.5, 1.0)), "on top edge");
+        assert!(!strictly_inside(&u, &l, Point::new(0.0, 0.5)), "on left edge x");
+        assert!(!strictly_inside(&u, &l, Point::new(1.0, 0.5)), "on right edge x");
+        assert!(!strictly_inside(&u, &l, Point::new(0.5, 0.0)), "on bottom edge");
+    }
+
+    #[test]
+    fn zero_area_hulls_absorb_nothing() {
+        let seg = vec![Point::new(0.1, 0.1), Point::new(0.9, 0.9)];
+        let (u, l) = oracle(&seg);
+        assert!(!strictly_inside(&u, &l, Point::new(0.5, 0.5)), "on the segment");
+        let single = vec![Point::new(0.5, 0.5)];
+        let (u, l) = oracle(&single);
+        assert!(!strictly_inside(&u, &l, Point::new(0.5, 0.5)));
+    }
+
+    #[test]
+    fn session_matches_oracle_with_interleaved_merges() {
+        let svc = SerialService;
+        for dist in Distribution::ALL {
+            let pts = generate(dist, 500, 11);
+            let mut s = Session::new(64);
+            for chunk in pts.chunks(37) {
+                s.add(chunk, &svc).unwrap();
+            }
+            s.flush(&svc).unwrap();
+            let (wu, wl) = oracle(&pts);
+            let (gu, gl) = s.hull();
+            assert_eq!(gu, &wu[..], "{} upper", dist.name());
+            assert_eq!(gl, &wl[..], "{} lower", dist.name());
+            assert_eq!(
+                s.inserted_total(),
+                s.absorbed_total() + s.pending_len() as u64 + s.hull_points(),
+                "{} accounting",
+                dist.name()
+            );
+            assert_eq!(s.pending_len(), 0);
+        }
+    }
+
+    #[test]
+    fn duplicates_and_boundary_points_stay_exact() {
+        let svc = SerialService;
+        let pts = generate(Distribution::Disk, 300, 5);
+        let mut s = Session::new(50);
+        s.add(&pts, &svc).unwrap();
+        s.flush(&svc).unwrap();
+        // re-insert the whole set (every point now interior or a vertex
+        // duplicate), plus exact hull vertices again
+        let (hu, _) = s.hull();
+        let verts: Vec<Point> = hu.to_vec();
+        s.add(&pts, &svc).unwrap();
+        s.add(&verts, &svc).unwrap();
+        s.flush(&svc).unwrap();
+        let (wu, wl) = oracle(&pts);
+        let (gu, gl) = s.hull();
+        assert_eq!(gu, &wu[..]);
+        assert_eq!(gl, &wl[..]);
+        assert_eq!(
+            s.inserted_total(),
+            s.absorbed_total() + s.hull_points(),
+            "duplicates must be fully absorbed"
+        );
+    }
+
+    #[test]
+    fn validation_is_atomic() {
+        let svc = SerialService;
+        let mut s = Session::new(8);
+        let bad = vec![Point::new(0.5, 0.5), Point::new(1.5, 0.0)];
+        assert!(matches!(s.add(&bad, &svc), Err(RequestError::OutOfRange(1))));
+        assert_eq!(s.inserted_total(), 0);
+        assert_eq!(s.pending_len(), 0);
+        let nan = vec![Point::new(f64::NAN, 0.5)];
+        assert!(matches!(s.add(&nan, &svc), Err(RequestError::NonFinite(0))));
+    }
+
+    #[test]
+    fn threshold_triggers_merges_and_epoch() {
+        let svc = SerialService;
+        let pts = generate(Distribution::Circle, 64, 3);
+        let mut s = Session::new(16);
+        let out = s.add(&pts, &svc).unwrap();
+        assert!(out.epoch >= 4, "circle points all pend: {} merges", out.epoch);
+        // one latency sample per merge, buffered until drained
+        assert_eq!(s.take_merge_samples().len() as u64, out.epoch);
+        assert!(s.take_merge_samples().is_empty(), "drain must reset");
+        assert!(s.pending_len() < 16);
+    }
+
+    #[test]
+    fn flush_on_empty_pending_is_a_noop() {
+        let svc = SerialService;
+        let mut s = Session::new(8);
+        assert!(!s.flush(&svc).unwrap());
+        assert_eq!(s.epoch(), 0);
+        s.add(&[Point::new(0.2, 0.2)], &svc).unwrap();
+        assert!(s.flush(&svc).unwrap());
+        assert_eq!(s.epoch(), 1);
+        assert!(!s.flush(&svc).unwrap());
+        assert_eq!(s.epoch(), 1);
+        assert_eq!(s.take_merge_samples().len(), 1);
+    }
+}

@@ -1,0 +1,281 @@
+//! `merge_hulls` — the paper's common-tangent machinery applied to two
+//! *precomputed* convex hulls (hull ⊕ hull inputs, not leaf merges).
+//!
+//! The streaming-session subsystem re-hulls `current hull ∪ pending` on
+//! every merge; re-sorting the union and running a full pipeline would
+//! throw away the structure both sides already have.  Instead:
+//!
+//! * **x-disjoint chains** (one hull entirely left of the other): the
+//!   block-pair tangent search from `merge.rs` (`find_tangent`, the
+//!   paper's mam1..mam5 sampled phases) locates the common tangent in
+//!   O(√h · …) predicate evaluations, and the merged chain is a pair of
+//!   slice copies.  This is exactly the [H(P) | H(Q)] merge the paper
+//!   runs at every pipeline stage, now exposed as a standalone entry
+//!   point.
+//! * **x-overlapping chains** (the common streaming case): the two
+//!   vertex sequences are interleaved by a linear two-pointer merge
+//!   (both are already x-sorted — nothing is re-sorted), x-classes are
+//!   collapsed to their extreme-y representative, and one strict-turn
+//!   scan over the ≤ h₁+h₂ vertices rebuilds the chain.
+//!
+//! Both paths finish with (or consist of) a strict-turn monotone scan,
+//! so the output is *canonical*: bit-identical to the chain a one-shot
+//! hull of the union of the two vertex sets would produce, including
+//! under cross-hull collinearity and duplicate x (exact predicates
+//! throughout).  Correctness does not depend on which touch corner the
+//! sampled phases return when the tangent passes through a collinear
+//! run: every mutually-supporting pair lies on the same support line
+//! (convexity makes local support global), and the trailing scan drops
+//! the collinear middles.
+
+use super::merge::find_tangent;
+use super::stage::stage_dims;
+use crate::geometry::point::{dedup_x, pad_to_hood, Point};
+use crate::serial::monotone_chain;
+
+/// Which strategy merged a chain pair (exposed for tests, the CLI, and
+/// benches — the tangent path is the one the paper's machinery serves).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MergePath {
+    /// One side empty: the other chain verbatim.
+    Trivial,
+    /// x-disjoint chains: sampled common-tangent search (mam1..mam5).
+    Tangent,
+    /// x-overlapping chains: linear interleave + strict-turn rescan.
+    Interleave,
+}
+
+impl MergePath {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MergePath::Trivial => "trivial",
+            MergePath::Tangent => "tangent",
+            MergePath::Interleave => "interleave",
+        }
+    }
+}
+
+/// Merge two *upper-hull* chains (each canonical: x-strictly-increasing,
+/// strict turns only, as every backend produces).  Returns the canonical
+/// upper chain of the union of the two vertex sets and the path taken.
+pub fn merge_upper_hulls(a: &[Point], b: &[Point]) -> (Vec<Point>, MergePath) {
+    if a.is_empty() {
+        return (b.to_vec(), MergePath::Trivial);
+    }
+    if b.is_empty() {
+        return (a.to_vec(), MergePath::Trivial);
+    }
+    // strict inequality: a shared boundary x needs the dedup of the
+    // interleave path, not the tangent's general-position block
+    let (l, r) = if a[a.len() - 1].x < b[0].x {
+        (a, b)
+    } else if b[b.len() - 1].x < a[0].x {
+        (b, a)
+    } else {
+        return (interleave_upper(a, b), MergePath::Interleave);
+    };
+    (tangent_merge_upper(l, r), MergePath::Tangent)
+}
+
+/// Merge two *lower-hull* chains.  Mirrors y and reuses the upper
+/// machinery: negation is exact in f64, so the result stays canonical.
+pub fn merge_lower_hulls(a: &[Point], b: &[Point]) -> (Vec<Point>, MergePath) {
+    fn mirror(chain: &[Point]) -> Vec<Point> {
+        chain.iter().map(|p| Point::new(p.x, -p.y)).collect()
+    }
+    let (merged, path) = merge_upper_hulls(&mirror(a), &mirror(b));
+    (mirror(&merged), path)
+}
+
+/// Merge two full hulls, each given as `(upper, lower)` chains.  The two
+/// chains of one hull share their x-range, so upper and lower always take
+/// the same path; it is returned once.
+pub fn merge_hulls(
+    a: (&[Point], &[Point]),
+    b: (&[Point], &[Point]),
+) -> ((Vec<Point>, Vec<Point>), MergePath) {
+    let (upper, path) = merge_upper_hulls(a.0, b.0);
+    let (lower, _) = merge_lower_hulls(a.1, b.1);
+    ((upper, lower), path)
+}
+
+/// x-disjoint case: the paper's sampled tangent phases over a block pair
+/// [H(L) | H(R)], then two slice copies and a canonicalizing scan.
+fn tangent_merge_upper(l: &[Point], r: &[Point]) -> Vec<Point> {
+    let d = l.len().max(r.len()).next_power_of_two().max(2);
+    let (d1, d2) = stage_dims(d);
+    let mut blk = pad_to_hood(l, d);
+    blk.extend(pad_to_hood(r, d));
+    let t = find_tangent(&blk, d1, d2);
+    // mam6 without the REMOTE fill: the chain is materialized compactly
+    let mut chain = Vec::with_capacity(t.pidx + 1 + (2 * d - t.qidx));
+    chain.extend_from_slice(&l[..=t.pidx]);
+    chain.extend_from_slice(&r[t.qidx - d..]);
+    // the tangent can pass through corners of BOTH chains (cross-hull
+    // collinearity); the strict-turn rescan of the ≤ h₁+h₂ survivors
+    // drops the middles, making the output canonical
+    monotone_chain::upper_hull(&chain)
+}
+
+/// x-overlapping case: linear interleave of two x-sorted chains (no
+/// re-sort), extreme-y per x-class, strict-turn scan.
+fn interleave_upper(a: &[Point], b: &[Point]) -> Vec<Point> {
+    let mut merged = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        let take_a =
+            a[i].x < b[j].x || (a[i].x == b[j].x && a[i].y <= b[j].y);
+        if take_a {
+            merged.push(a[i]);
+            i += 1;
+        } else {
+            merged.push(b[j]);
+            j += 1;
+        }
+    }
+    merged.extend_from_slice(&a[i..]);
+    merged.extend_from_slice(&b[j..]);
+    // duplicate x across the chains: only the max-y representative can
+    // sit on the upper chain (same rule as the exact degenerate path)
+    let merged = dedup_x(&merged, true);
+    monotone_chain::upper_hull(&merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::canonical_full_hull as oracle;
+    use crate::geometry::generators::{generate, squeeze_x, Distribution};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn empty_sides_are_trivial() {
+        let pts = generate(Distribution::Disk, 40, 3);
+        let (u, l) = oracle(&pts);
+        let ((mu, ml), path) = merge_hulls((&u, &l), (&[], &[]));
+        assert_eq!(path, MergePath::Trivial);
+        assert_eq!((mu, ml), (u.clone(), l.clone()));
+        let ((mu, ml), path) = merge_hulls((&[], &[]), (&u, &l));
+        assert_eq!(path, MergePath::Trivial);
+        assert_eq!((mu, ml), (u, l));
+    }
+
+    #[test]
+    fn disjoint_pairs_take_the_tangent_path_and_match_oracle() {
+        let mut rng = Rng::new(71);
+        for case in 0..200 {
+            let da = Distribution::ALL[case % 7];
+            let db = Distribution::ALL[(case + 3) % 7];
+            let a = squeeze_x(&generate(da, rng.range_usize(1, 200), rng.next_u64()), 0.0, 0.47);
+            let b = squeeze_x(&generate(db, rng.range_usize(1, 200), rng.next_u64()), 0.53, 1.0);
+            let (au, al) = oracle(&a);
+            let (bu, bl) = oracle(&b);
+            let ((mu, ml), path) = merge_hulls((&au, &al), (&bu, &bl));
+            assert_eq!(path, MergePath::Tangent, "case {case}");
+            let union: Vec<Point> = a.iter().chain(b.iter()).copied().collect();
+            let (wu, wl) = oracle(&union);
+            assert_eq!(mu, wu, "case {case} upper ({} ∪ {})", da.name(), db.name());
+            assert_eq!(ml, wl, "case {case} lower ({} ∪ {})", da.name(), db.name());
+        }
+    }
+
+    #[test]
+    fn overlapping_pairs_interleave_and_match_oracle() {
+        let mut rng = Rng::new(73);
+        for case in 0..200 {
+            let da = Distribution::ALL[case % 7];
+            let db = Distribution::ALL[(case + 5) % 7];
+            let a = generate(da, rng.range_usize(1, 300), rng.next_u64());
+            let b = generate(db, rng.range_usize(1, 300), rng.next_u64());
+            let (au, al) = oracle(&a);
+            let (bu, bl) = oracle(&b);
+            let ((mu, ml), _path) = merge_hulls((&au, &al), (&bu, &bl));
+            let union: Vec<Point> = a.iter().chain(b.iter()).copied().collect();
+            let (wu, wl) = oracle(&union);
+            assert_eq!(mu, wu, "case {case} upper ({} ∪ {})", da.name(), db.name());
+            assert_eq!(ml, wl, "case {case} lower ({} ∪ {})", da.name(), db.name());
+        }
+    }
+
+    #[test]
+    fn duplicate_x_across_hulls_is_exact() {
+        // both hulls own vertices at x = 0.5 with different y: the merged
+        // chain must keep only the extreme-y representative, exactly like
+        // the one-shot degenerate path
+        let a = vec![
+            Point::new(0.1, 0.4),
+            Point::new(0.5, 0.9),
+            Point::new(0.5, 0.1),
+            Point::new(0.8, 0.4),
+        ];
+        let b = vec![
+            Point::new(0.3, 0.3),
+            Point::new(0.5, 0.95),
+            Point::new(0.5, 0.05),
+            Point::new(0.9, 0.5),
+        ];
+        let (au, al) = oracle(&a);
+        let (bu, bl) = oracle(&b);
+        let ((mu, ml), path) = merge_hulls((&au, &al), (&bu, &bl));
+        assert_eq!(path, MergePath::Interleave);
+        let union: Vec<Point> = a.iter().chain(b.iter()).copied().collect();
+        let (wu, wl) = oracle(&union);
+        assert_eq!(mu, wu);
+        assert_eq!(ml, wl);
+    }
+
+    #[test]
+    fn cross_hull_collinearity_is_canonicalized() {
+        // the common tangent passes through two corners of EACH chain:
+        // only the outermost pair survives (collinear middles dropped),
+        // matching the strict-turn oracle bit-for-bit
+        // exact collinearity on dyadic coordinates:
+        let a = vec![
+            Point::new(0.0, 0.25),
+            Point::new(0.125, 0.375),
+            Point::new(0.25, 0.5),
+            Point::new(0.3125, 0.0625),
+        ];
+        let b = vec![
+            Point::new(0.5, 0.75),
+            Point::new(0.625, 0.875),
+            Point::new(0.75, 0.5),
+        ];
+        // (0.125,0.375),(0.25,0.5),(0.5,0.75),(0.625,0.875) all on y = x + 0.25
+        let (au, al) = oracle(&a);
+        let (bu, bl) = oracle(&b);
+        let ((mu, ml), path) = merge_hulls((&au, &al), (&bu, &bl));
+        assert_eq!(path, MergePath::Tangent);
+        let union: Vec<Point> = a.iter().chain(b.iter()).copied().collect();
+        let (wu, wl) = oracle(&union);
+        assert_eq!(mu, wu, "collinear tangent upper");
+        assert_eq!(ml, wl, "collinear tangent lower");
+    }
+
+    #[test]
+    fn single_point_hulls_merge() {
+        let a = vec![Point::new(0.2, 0.3)];
+        let b = vec![Point::new(0.7, 0.6)];
+        let ((mu, ml), path) = merge_hulls((&a, &a), (&b, &b));
+        assert_eq!(path, MergePath::Tangent);
+        assert_eq!(mu, vec![a[0], b[0]]);
+        assert_eq!(ml, vec![a[0], b[0]]);
+    }
+
+    #[test]
+    fn one_hull_swallowing_the_other() {
+        // b strictly inside a: the merge must return a unchanged
+        let a = generate(Distribution::Circle, 64, 9);
+        let mut b = squeeze_x(&generate(Distribution::Disk, 64, 10), 0.4, 0.6);
+        for p in b.iter_mut() {
+            *p = Point::new(p.x, 0.4 + p.y * 0.2).quantize_f32();
+        }
+        let (au, al) = oracle(&a);
+        let (bu, bl) = oracle(&b);
+        let ((mu, ml), _) = merge_hulls((&au, &al), (&bu, &bl));
+        let union: Vec<Point> = a.iter().chain(b.iter()).copied().collect();
+        let (wu, wl) = oracle(&union);
+        assert_eq!(mu, wu);
+        assert_eq!(ml, wl);
+    }
+}

@@ -10,11 +10,13 @@
 //!     from rust through PJRT artifacts.
 //! All three are differentially tested against the serial oracle.
 
+pub mod hull_merge;
 pub mod merge;
 pub mod occupancy;
 pub mod pram_exec;
 pub mod stage;
 pub mod tangent;
 
+pub use hull_merge::{merge_hulls, MergePath};
 pub use stage::{full_hull, stage, stage_dims, upper_hood, upper_hull};
 pub use tangent::Code;

@@ -82,6 +82,34 @@ fn hull_runs_on_both_pram_tiers() {
 }
 
 #[test]
+fn hull_merge_combines_two_files() {
+    let dir = std::env::temp_dir().join(format!("wagener-cli-merge-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let (a, b) = (dir.join("a.txt"), dir.join("b.txt"));
+    // two x-disjoint clouds, hand-written in the paper's point format:
+    // the merge must take the tangent path and keep only outer corners
+    std::fs::write(&a, "3\n0.1 0.2\n0.2 0.8\n0.3 0.3\n").unwrap();
+    std::fs::write(&b, "3\n0.7 0.4\n0.8 0.9\n0.9 0.1\n").unwrap();
+    let out = wagener()
+        .arg("hull")
+        .arg(&a)
+        .arg("--merge")
+        .arg(&b)
+        .args(["--backend", "serial"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    assert!(stdout.contains("path=tangent"), "{stdout}");
+    assert!(stdout.contains("# upper hood"), "{stdout}");
+    // the merged upper hull of the six points: (0.1,0.2) (0.2,0.8)
+    // (0.8,0.9) (0.9,0.1) — interior corners swallowed by the tangent
+    let upper = stdout.split("# upper hood").nth(1).unwrap();
+    assert!(upper.trim_start().starts_with('4'), "{upper}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn occupancy_table_prints() {
     let out = wagener()
         .args(["occupancy", "--n", "128", "--dist", "parabola"])

@@ -315,6 +315,62 @@ fn prop_protocol_roundtrip() {
         write_response(&mut buf, &resp).unwrap();
         let back = read_response(&mut BufReader::new(&buf[..])).map_err(|e| e.to_string())?;
         prop_assert!(back == resp, "response roundtrip");
+
+        // session verbs ride the same framing
+        let sid = rng.next_u64();
+        let sreq = Request::SessionAdd { sid, points: pts.clone() };
+        let mut buf = Vec::new();
+        write_request(&mut buf, &sreq).unwrap();
+        let back = read_request(&mut BufReader::new(&buf[..])).map_err(|e| e.to_string())?;
+        prop_assert!(back == sreq, "SADD roundtrip");
+
+        let k = rng.range_usize(0, pts.len() + 1);
+        let sresp = Response::SessionHull {
+            sid,
+            epoch: rng.next_u64() >> 8,
+            upper: pts[..k].to_vec(),
+            lower: pts[k..].to_vec(),
+        };
+        let mut buf = Vec::new();
+        write_response(&mut buf, &sresp).unwrap();
+        let back = read_response(&mut BufReader::new(&buf[..])).map_err(|e| e.to_string())?;
+        prop_assert!(back == sresp, "SHULL roundtrip");
+        Ok(())
+    });
+}
+
+/// merge_hulls(hull(A), hull(B)) must be bit-identical to the exact
+/// one-shot hull of A ∪ B — on arbitrary raw clouds (duplicates, shared
+/// x), generator distributions, and forced x-disjoint splits.
+#[test]
+fn prop_merge_hulls_matches_union_oracle() {
+    use wagener_hull::coordinator::backend::canonical_full_hull as canonical;
+    use wagener_hull::wagener::hull_merge::merge_hulls;
+
+    check("merge-hulls-vs-union", 80, |rng| {
+        let (a, b) = if rng.chance(0.5) {
+            // raw clouds: duplicates and duplicate-x welcome
+            (raw_points(rng, 200), raw_points(rng, 200))
+        } else {
+            (
+                generate(random_dist(rng), rng.range_usize(1, 250), rng.next_u64()),
+                generate(random_dist(rng), rng.range_usize(1, 250), rng.next_u64()),
+            )
+        };
+        // 50%: squeeze into disjoint x-bands to force the tangent path
+        let (a, b) = if rng.chance(0.5) {
+            use wagener_hull::geometry::generators::squeeze_x;
+            (squeeze_x(&a, 0.0, 0.45), squeeze_x(&b, 0.55, 1.0))
+        } else {
+            (a, b)
+        };
+        let (au, al) = canonical(&a);
+        let (bu, bl) = canonical(&b);
+        let ((mu, ml), path) = merge_hulls((&au, &al), (&bu, &bl));
+        let union: Vec<Point> = a.iter().chain(b.iter()).copied().collect();
+        let (wu, wl) = canonical(&union);
+        prop_assert!(mu == wu, "upper diverged on {} path", path.name());
+        prop_assert!(ml == wl, "lower diverged on {} path", path.name());
         Ok(())
     });
 }

@@ -6,7 +6,8 @@ use wagener_hull::coordinator::{BackendKind, BatcherConfig, Coordinator, Coordin
 use wagener_hull::geometry::generators::{generate, Distribution};
 use wagener_hull::geometry::point::Point;
 use wagener_hull::serial::monotone_chain;
-use wagener_hull::server::{serve, HullClient, ServerConfig};
+use wagener_hull::server::{serve, serve_with_sessions, HullClient, ServerConfig};
+use wagener_hull::stream::{SessionRegistry, StreamConfig};
 
 fn start_server(kind: BackendKind) -> (Arc<Coordinator>, wagener_hull::server::ServerHandle) {
     let coord = Arc::new(
@@ -156,6 +157,133 @@ fn connection_gauge_tracks_active_connections() {
     wait_gauge(&handle, 1); // a gauge, not a lifetime counter
     c1.quit().unwrap();
     wait_gauge(&handle, 0);
+    handle.stop();
+}
+
+// ---------------------------------------------------- streaming sessions
+
+fn start_session_server(
+    kind: BackendKind,
+    stream_cfg: StreamConfig,
+) -> (Arc<Coordinator>, wagener_hull::server::ServerHandle) {
+    let coord = Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            backend: kind,
+            batcher: BatcherConfig { max_batch: 4, flush_us: 300, queue_cap: 256 },
+            self_check: true,
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let sessions = Arc::new(SessionRegistry::new(stream_cfg, coord.metrics.clone()));
+    let handle =
+        serve_with_sessions(coord.clone(), sessions, &ServerConfig { addr: "127.0.0.1:0".into() })
+            .unwrap();
+    (coord, handle)
+}
+
+#[test]
+fn session_lifecycle_over_tcp_matches_one_shot() {
+    let (_coord, handle) = start_session_server(
+        BackendKind::Native,
+        StreamConfig { merge_threshold: 64, ..Default::default() },
+    );
+    let mut client = HullClient::connect(handle.local_addr).unwrap();
+    client.set_read_timeout(Some(std::time::Duration::from_secs(10))).unwrap();
+
+    let sid = client.session_open().unwrap();
+    let pts = generate(Distribution::Disk, 500, 13);
+    let mut last_epoch = 0;
+    for chunk in pts.chunks(125) {
+        let ack = client.session_add(sid, chunk).unwrap();
+        assert!(ack.epoch >= last_epoch);
+        last_epoch = ack.epoch;
+    }
+    let hull = client.session_hull(sid).unwrap();
+    let (u, l) = monotone_chain::full_hull(&pts);
+    assert_eq!(hull.upper, u);
+    assert_eq!(hull.lower, l);
+    assert!(hull.epoch >= 1);
+
+    // one-shot HULL on the same connection agrees bit-for-bit
+    let oneshot = client.hull(&pts).unwrap();
+    assert_eq!(oneshot.upper, hull.upper);
+    assert_eq!(oneshot.lower, hull.lower);
+
+    // STATS carries the session gauges
+    let stats = client.stats().unwrap();
+    let json = wagener_hull::util::json::parse(&stats).unwrap();
+    assert_eq!(json.get("open_sessions").unwrap().as_usize(), Some(1));
+    assert_eq!(json.get("pending_points_total").unwrap().as_usize(), Some(0));
+    assert!(json.get("merges_total").unwrap().as_usize().unwrap() >= 1);
+    assert!(json.get("absorbed_points_total").unwrap().as_usize().is_some());
+
+    client.session_close(sid).unwrap();
+    let stats = client.stats().unwrap();
+    let json = wagener_hull::util::json::parse(&stats).unwrap();
+    assert_eq!(json.get("open_sessions").unwrap().as_usize(), Some(0));
+    // closed session: distinct unknown-session error, connection usable
+    let err = client.session_add(sid, &pts[..1]).unwrap_err();
+    assert!(err.to_string().contains("unknown-session"), "{err}");
+    client.ping().unwrap();
+    handle.stop();
+}
+
+#[test]
+fn unknown_session_error_echoes_sid_on_the_wire() {
+    use std::io::{BufRead, BufReader, Write};
+    let (_coord, handle) = start_session_server(BackendKind::Serial, StreamConfig::default());
+    let mut stream = std::net::TcpStream::connect(handle.local_addr).unwrap();
+    stream.write_all(b"SADD 777 1\n0.5 0.5\n").unwrap();
+    stream.flush().unwrap();
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line).unwrap();
+    assert_eq!(line.trim_end(), "SADD 777 ERR unknown-session", "{line:?}");
+    handle.stop();
+}
+
+#[test]
+fn malformed_session_frame_echoes_sid() {
+    use std::io::{BufRead, BufReader, Write};
+    let (_coord, handle) = start_session_server(BackendKind::Serial, StreamConfig::default());
+    let mut stream = std::net::TcpStream::connect(handle.local_addr).unwrap();
+    // sid parses, count does not: the id-echo rule extends to SADD
+    stream.write_all(b"SADD 9 zz\n").unwrap();
+    stream.flush().unwrap();
+    let mut line = String::new();
+    BufReader::new(stream).read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR 9 "), "want 'ERR 9 ...', got {line:?}");
+    handle.stop();
+}
+
+#[test]
+fn session_capacity_cap_over_tcp() {
+    let (_coord, handle) = start_session_server(
+        BackendKind::Serial,
+        StreamConfig { max_sessions: 1, idle_ttl_ms: 0, ..Default::default() },
+    );
+    let mut client = HullClient::connect(handle.local_addr).unwrap();
+    let sid = client.session_open().unwrap();
+    let err = client.session_open().unwrap_err();
+    assert!(err.to_string().contains("capacity"), "{err}");
+    client.session_close(sid).unwrap();
+    client.session_open().unwrap();
+    handle.stop();
+}
+
+#[test]
+fn idle_sessions_evicted_over_tcp() {
+    let (_coord, handle) = start_session_server(
+        BackendKind::Serial,
+        StreamConfig { idle_ttl_ms: 40, ..Default::default() },
+    );
+    let mut client = HullClient::connect(handle.local_addr).unwrap();
+    let sid = client.session_open().unwrap();
+    client.session_add(sid, &[Point::new(0.5, 0.5)]).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(80));
+    handle.sessions().sweep_now();
+    let err = client.session_add(sid, &[Point::new(0.2, 0.2)]).unwrap_err();
+    assert!(err.to_string().contains("unknown-session"), "{err}");
     handle.stop();
 }
 

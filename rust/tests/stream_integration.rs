@@ -1,0 +1,193 @@
+//! Streaming-session subsystem end-to-end: incremental ≡ batch on every
+//! host backend, exact accounting, and the eviction/capacity rules —
+//! the acceptance gates of the streaming PR.
+//!
+//! Reproduce any property failure with WAGENER_PROP_SEED=<seed>.
+
+use std::sync::Arc;
+
+use wagener_hull::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
+use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::geometry::point::{sort_by_x, Point};
+use wagener_hull::prop_assert;
+use wagener_hull::serial::monotone_chain;
+use wagener_hull::stream::{SessionError, SessionRegistry, StreamConfig};
+use wagener_hull::util::property::check;
+use wagener_hull::util::rng::Rng;
+
+fn coord(kind: BackendKind) -> Arc<Coordinator> {
+    Arc::new(
+        Coordinator::start(CoordinatorConfig { backend: kind, ..Default::default() }).unwrap(),
+    )
+}
+
+fn registry(coord: &Coordinator, threshold: usize) -> SessionRegistry {
+    SessionRegistry::new(
+        StreamConfig { merge_threshold: threshold, idle_ttl_ms: 0, ..Default::default() },
+        coord.metrics.clone(),
+    )
+}
+
+// One-shot oracle over the raw insert history (quantize + sort + dedup +
+// exact hull, the coordinator's canonicalization); cross-checked against
+// the plain monotone chain in the acceptance test below.
+use wagener_hull::coordinator::backend::canonical_full_hull as mc_oracle;
+
+/// THE acceptance gate: a session fed 2^16 points in 64 batches returns
+/// a hull bit-identical to a one-shot HULL of the same points, on every
+/// host backend, with `absorbed + pending + hull` accounting exact.
+#[test]
+fn acceptance_2e16_in_64_batches_bit_identical_on_every_host_backend() {
+    let n = 1usize << 16;
+    let pts = generate(Distribution::Disk, n, 42);
+    for kind in [BackendKind::Native, BackendKind::Serial, BackendKind::Pram] {
+        let c = coord(kind);
+        let reg = registry(&c, 4096);
+        let sid = reg.open().unwrap();
+        let batch = pts.len() / 64;
+        let mut last = None;
+        for chunk in pts.chunks(batch) {
+            last = Some(reg.add(sid, chunk, &*c).unwrap());
+        }
+        let outcome = last.unwrap();
+        let snap = reg.hull(sid, &*c).unwrap();
+
+        // bit-identity against the one-shot path on the same backend
+        let oneshot = c.compute(pts.clone()).unwrap();
+        assert_eq!(snap.upper, oneshot.upper, "{} upper diverged", kind.name());
+        assert_eq!(snap.lower, oneshot.lower, "{} lower diverged", kind.name());
+        // ...and against the serial oracle (which itself must agree with
+        // the plain monotone chain on the generator's distinct-x set)
+        let (wu, wl) = mc_oracle(&pts);
+        assert_eq!((wu.clone(), wl.clone()), monotone_chain::full_hull(&pts));
+        assert_eq!(snap.upper, wu, "{} upper vs oracle", kind.name());
+        assert_eq!(snap.lower, wl, "{} lower vs oracle", kind.name());
+
+        // exact accounting: every inserted point is absorbed, pending, or
+        // a hull vertex — in the session ledger AND the shared metrics
+        let mut verts: Vec<Point> =
+            snap.upper.iter().chain(snap.lower.iter()).copied().collect();
+        sort_by_x(&mut verts);
+        verts.dedup();
+        let m = c.snapshot().0;
+        let absorbed = m.get("absorbed_points_total").unwrap().as_usize().unwrap();
+        let pending = m.get("pending_points_total").unwrap().as_usize().unwrap();
+        assert_eq!(pending, 0, "{}: SHULL flushed", kind.name());
+        assert_eq!(
+            absorbed + pending + verts.len(),
+            n,
+            "{}: absorbed+pending+hull accounting",
+            kind.name()
+        );
+        assert!(outcome.absorbed as usize <= absorbed);
+        assert!(
+            m.get("merges_total").unwrap().as_usize().unwrap() >= 1,
+            "{}: merges recorded",
+            kind.name()
+        );
+        assert_eq!(m.get("open_sessions").unwrap().as_usize(), Some(1));
+        reg.close(sid).unwrap();
+        assert_eq!(c.snapshot().0.get("open_sessions").unwrap().as_usize(), Some(0));
+    }
+}
+
+/// incremental ≡ batch under random insert schedules: every generator
+/// distribution (incl. the collinear-heavy ones), random batch sizes,
+/// random merge thresholds, and re-inserted duplicates.
+#[test]
+fn prop_incremental_equals_batch() {
+    let c = coord(BackendKind::Native);
+    check("stream-incremental-vs-batch", 40, |rng: &mut Rng| {
+        let dist = Distribution::ALL[rng.range_usize(0, Distribution::ALL.len())];
+        let n = rng.range_usize(1, 1500);
+        let pts = generate(dist, n, rng.next_u64());
+        let threshold = rng.range_usize(1, 400);
+        let reg = registry(&c, threshold);
+        let sid = reg.open().map_err(|e| e.to_string())?;
+        let mut fed: Vec<Point> = Vec::new();
+        let mut rest = &pts[..];
+        while !rest.is_empty() {
+            let take = rng.range_usize(1, rest.len() + 1);
+            reg.add(sid, &rest[..take], &*c).map_err(|e| e.to_string())?;
+            fed.extend_from_slice(&rest[..take]);
+            // sometimes re-feed an earlier slice: duplicates must be
+            // absorbed without disturbing the hull
+            if rng.chance(0.3) && !fed.is_empty() {
+                let k = rng.range_usize(0, fed.len());
+                let dup: Vec<Point> = fed[k..].iter().copied().take(20).collect();
+                reg.add(sid, &dup, &*c).map_err(|e| e.to_string())?;
+                fed.extend(dup);
+            }
+            rest = &rest[take..];
+        }
+        let snap = reg.hull(sid, &*c).map_err(|e| e.to_string())?;
+        let (wu, wl) = mc_oracle(&fed);
+        prop_assert!(
+            snap.upper == wu,
+            "{} n={n} threshold={threshold}: upper diverged",
+            dist.name()
+        );
+        prop_assert!(
+            snap.lower == wl,
+            "{} n={n} threshold={threshold}: lower diverged",
+            dist.name()
+        );
+        reg.close(sid).map_err(|e| e.to_string())?;
+        Ok(())
+    });
+}
+
+/// Interleaved sessions stay isolated: two sessions fed different sets
+/// through the same registry/coordinator never contaminate each other.
+#[test]
+fn sessions_are_isolated() {
+    let c = coord(BackendKind::Native);
+    let reg = registry(&c, 64);
+    let a_pts = generate(Distribution::Circle, 400, 7);
+    let b_pts = generate(Distribution::Valley, 400, 8);
+    let a = reg.open().unwrap();
+    let b = reg.open().unwrap();
+    for (ca, cb) in a_pts.chunks(100).zip(b_pts.chunks(100)) {
+        reg.add(a, ca, &*c).unwrap();
+        reg.add(b, cb, &*c).unwrap();
+    }
+    let sa = reg.hull(a, &*c).unwrap();
+    let sb = reg.hull(b, &*c).unwrap();
+    let (wa_u, wa_l) = mc_oracle(&a_pts);
+    let (wb_u, wb_l) = mc_oracle(&b_pts);
+    assert_eq!((sa.upper, sa.lower), (wa_u, wa_l));
+    assert_eq!((sb.upper, sb.lower), (wb_u, wb_l));
+}
+
+/// Epochs advance once per merge and SHULL reports the epoch that
+/// produced the hull it returns.
+#[test]
+fn epochs_are_coherent() {
+    let c = coord(BackendKind::Native);
+    let reg = registry(&c, 100);
+    let sid = reg.open().unwrap();
+    let pts = generate(Distribution::Circle, 250, 3);
+    let out = reg.add(sid, &pts, &*c).unwrap();
+    assert_eq!(out.epoch, 2, "250 circle points / threshold 100 = 2 merges");
+    let snap = reg.hull(sid, &*c).unwrap(); // flush = merge #3
+    assert_eq!(snap.epoch, 3);
+    let again = reg.hull(sid, &*c).unwrap(); // nothing pending: no epoch bump
+    assert_eq!(again.epoch, 3);
+    assert_eq!(again.upper, snap.upper);
+}
+
+/// Invalid points are rejected atomically with the request-level error,
+/// and the session keeps serving afterwards.
+#[test]
+fn invalid_points_reject_without_corrupting_the_session() {
+    let c = coord(BackendKind::Native);
+    let reg = registry(&c, 64);
+    let sid = reg.open().unwrap();
+    reg.add(sid, &[Point::new(0.3, 0.3)], &*c).unwrap();
+    let err = reg.add(sid, &[Point::new(0.4, 0.4), Point::new(7.0, 0.0)], &*c);
+    assert!(matches!(err, Err(SessionError::Request(_))), "{err:?}");
+    reg.add(sid, &[Point::new(0.9, 0.9)], &*c).unwrap();
+    let snap = reg.hull(sid, &*c).unwrap();
+    let (wu, _) = mc_oracle(&[Point::new(0.3, 0.3), Point::new(0.9, 0.9)]);
+    assert_eq!(snap.upper, wu, "rejected batch must leave no residue");
+}

@@ -5,11 +5,14 @@
 #
 # Gates: `cargo fmt --check` and `cargo clippy -D warnings` (when the
 # components are installed), then `cargo build --release && cargo test -q`
-# (the ROADMAP tier-1 verify), then fast smoke runs of bench_runtime and
-# bench_coordinator with WAGENER_BENCH_JSON pointed at BENCH_pram.json /
-# BENCH_coordinator.json, so every PR leaves machine-readable perf records
-# (PRAM tier timings + router/worker-pool throughput) for the next PR to
-# compare against.
+# (the ROADMAP tier-1 verify), then fast smoke runs of bench_runtime,
+# bench_coordinator and bench_stream with WAGENER_BENCH_JSON pointed at
+# BENCH_pram.json / BENCH_coordinator.json / BENCH_stream.json, so every
+# PR leaves machine-readable perf records (PRAM tier timings, router/
+# worker-pool throughput, streaming-session schedules) for the next PR to
+# compare against.  Every promised BENCH_*.json is then ASSERTED to hold
+# at least one report (a bench that skips a backend must still emit its
+# JSON trailer — an empty trajectory file means the harness regressed).
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
@@ -40,15 +43,32 @@ cargo build --release
 echo "== tier1: cargo test -q =="
 cargo test -q
 
+# A promised bench trajectory that ends up empty is a silent regression
+# (a skipping backend must still write its report); fail loudly instead.
+assert_bench_written() {
+    if ! grep -q '"title"' "$1" 2>/dev/null; then
+        echo "tier1: FAIL — $1 is empty; the bench emitted no JSON report" >&2
+        exit 1
+    fi
+}
+
 echo "== tier1: smoke bench -> BENCH_pram.json =="
 : > "$ROOT/BENCH_pram.json"
 WAGENER_BENCH_FAST=1 WAGENER_BENCH_JSON="$ROOT/BENCH_pram.json" \
     cargo bench --bench bench_runtime
+assert_bench_written "$ROOT/BENCH_pram.json"
 
 echo "== tier1: smoke bench -> BENCH_coordinator.json =="
 : > "$ROOT/BENCH_coordinator.json"
 WAGENER_BENCH_FAST=1 WAGENER_BENCH_JSON="$ROOT/BENCH_coordinator.json" \
     cargo bench --bench bench_coordinator
+assert_bench_written "$ROOT/BENCH_coordinator.json"
+
+echo "== tier1: smoke bench -> BENCH_stream.json =="
+: > "$ROOT/BENCH_stream.json"
+WAGENER_BENCH_FAST=1 WAGENER_BENCH_JSON="$ROOT/BENCH_stream.json" \
+    cargo bench --bench bench_stream
+assert_bench_written "$ROOT/BENCH_stream.json"
 
 echo "tier1 OK — bench rows:"
-cat "$ROOT/BENCH_pram.json" "$ROOT/BENCH_coordinator.json"
+cat "$ROOT/BENCH_pram.json" "$ROOT/BENCH_coordinator.json" "$ROOT/BENCH_stream.json"
