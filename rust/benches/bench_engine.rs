@@ -1,0 +1,109 @@
+//! E9 — the sharded engine: coordinator pools behind one facade.
+//!
+//! Two workloads over n = 2^16 disk points at shards = 1 / 2 / 4, each
+//! shard pinned to a single exec worker so the shard count is the only
+//! variable (auto workers would hand every topology the whole machine):
+//!   * one-shot throughput — a 16-request wave routed cheapest-queue;
+//!     with one shard every request funnels through one batcher thread +
+//!     one shared exec channel, with N shards the wave spreads over N
+//!     independent batcher/pool/metrics pipelines;
+//!   * merge-heavy sessions — 4 concurrent session lifecycles (threshold
+//!     1024, so the tangent-merge path and backend round-trips dominate),
+//!     sid-affine routed, one shard's registry lock per session instead
+//!     of one global lock.
+//!
+//! Run: `cargo bench --bench bench_engine` (tier1.sh feeds
+//! BENCH_engine.json via WAGENER_BENCH_JSON).
+
+use std::sync::Arc;
+
+use wagener_hull::benchkit::{black_box, Bencher, Report};
+use wagener_hull::coordinator::{BackendKind, CoordinatorConfig, HullRequest};
+use wagener_hull::engine::{Engine, EngineConfig};
+use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::stream::StreamConfig;
+
+fn engine(shards: usize, merge_threshold: usize) -> Arc<Engine> {
+    Arc::new(
+        Engine::start(EngineConfig {
+            shards,
+            coordinator: CoordinatorConfig {
+                backend: BackendKind::Native,
+                workers: 1, // fixed width per shard: shards are the variable
+                ..Default::default()
+            },
+            stream: StreamConfig { merge_threshold, idle_ttl_ms: 0, ..Default::default() },
+        })
+        .unwrap(),
+    )
+}
+
+fn main() {
+    let b = Bencher::default();
+    let n = 1usize << 16;
+    let pts = generate(Distribution::Disk, n, 33);
+
+    let mut report = Report::new("E9: sharded engine (native, 1 worker/shard, n=2^16)");
+
+    // one-shot throughput: a 16 x 4096-point wave through the router
+    let wave: Vec<Vec<wagener_hull::geometry::point::Point>> =
+        pts.chunks(n / 16).map(|c| c.to_vec()).collect();
+    for shards in [1usize, 2, 4] {
+        let e = engine(shards, 4096);
+        let wave2 = wave.clone();
+        report.add(b.run(&format!("engine/oneshot_wave16x4096_shards{shards}"), move || {
+            let mut ids = 0u64;
+            let replies: Vec<_> = wave2
+                .iter()
+                .map(|pts| {
+                    ids += 1;
+                    e.submit(HullRequest { id: ids, points: pts.clone() })
+                })
+                .collect();
+            let mut verts = 0usize;
+            for r in replies {
+                verts += r.recv().unwrap().unwrap().upper.len();
+            }
+            black_box(verts)
+        }));
+    }
+
+    // merge-heavy sessions: 4 CONCURRENT lifecycles (one client thread
+    // each, like real connections), low threshold, sid-affine — with one
+    // shard all four contend on one registry + one backend pool, with
+    // four shards each session owns its slice
+    for shards in [1usize, 2, 4] {
+        let e = engine(shards, 1024);
+        let pts2 = pts.clone();
+        report.add(b.run(&format!("engine/sessions4_merge_heavy_shards{shards}"), move || {
+            let sids: Vec<u64> = (0..4).map(|_| e.session_open().unwrap()).collect();
+            let quarter = pts2.len() / 4;
+            let verts: usize = std::thread::scope(|s| {
+                let handles: Vec<_> = sids
+                    .iter()
+                    .enumerate()
+                    .map(|(k, &sid)| {
+                        let (e, pts2) = (&e, &pts2);
+                        s.spawn(move || {
+                            for chunk in pts2[k * quarter..(k + 1) * quarter].chunks(1024) {
+                                e.session_add(sid, chunk).unwrap();
+                            }
+                            e.session_hull(sid).unwrap().upper.len()
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).sum()
+            });
+            for sid in sids {
+                e.session_close(sid).unwrap();
+            }
+            black_box(verts)
+        }));
+    }
+    report.note(
+        "one-shot wave spreads across N batcher/pool pipelines; sessions \
+         pin to their sid's shard (per-shard registry lock + metrics sink)"
+            .to_string(),
+    );
+    report.finish();
+}

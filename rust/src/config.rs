@@ -19,6 +19,9 @@
 //! workers = 0                # exec worker threads; 0 = hardware threads
 //! prefilter = true           # octagon interior-point pre-filter
 //!
+//! [engine]
+//! shards = 1                 # coordinator pools; 0 = auto (pjrt -> 1)
+//!
 //! [stream]
 //! max_sessions = 1024        # open streaming-session cap
 //! merge_threshold = 4096     # pending points that trigger a re-hull
@@ -35,11 +38,26 @@ use crate::server::ServerConfig;
 use crate::stream::StreamConfig;
 use crate::util::tomlmini::{self, Table};
 
+/// `[engine]` section: the shard topology above the coordinator.
+#[derive(Clone, Debug)]
+pub struct EngineSection {
+    /// coordinator-shard count; 0 = auto (pjrt resolves to 1, host
+    /// backends to `clamp(hw/4, 1, 8)` — see `engine::EngineConfig`).
+    pub shards: usize,
+}
+
+impl Default for EngineSection {
+    fn default() -> Self {
+        EngineSection { shards: 1 }
+    }
+}
+
 /// Full launcher configuration.
 #[derive(Clone, Debug, Default)]
 pub struct Config {
     pub server: ServerConfig,
     pub coordinator: CoordinatorConfig,
+    pub engine: EngineSection,
     pub stream: StreamConfig,
 }
 
@@ -98,6 +116,9 @@ impl Config {
                         cfg.coordinator.prefilter =
                             value.as_bool().ok_or_else(|| anyhow!("{path}: want bool"))?;
                     }
+                    "engine.shards" => {
+                        cfg.engine.shards = as_usize(value, &path)?;
+                    }
                     "stream.max_sessions" => {
                         cfg.stream.max_sessions = as_usize(value, &path)?.max(1);
                     }
@@ -149,6 +170,8 @@ queue_cap = 99
 [coordinator]
 workers = 6
 prefilter = false
+[engine]
+shards = 3
 [stream]
 max_sessions = 9
 merge_threshold = 128
@@ -166,6 +189,7 @@ idle_ttl_ms = 2500
         assert_eq!(cfg.coordinator.batcher.queue_cap, 99);
         assert_eq!(cfg.coordinator.workers, 6);
         assert!(!cfg.coordinator.prefilter);
+        assert_eq!(cfg.engine.shards, 3);
         assert_eq!(cfg.stream.max_sessions, 9);
         assert_eq!(cfg.stream.merge_threshold, 128);
         assert_eq!(cfg.stream.idle_ttl_ms, 2500);
@@ -179,6 +203,7 @@ idle_ttl_ms = 2500
         assert_eq!(cfg.server.addr, "127.0.0.1:7878");
         assert_eq!(cfg.coordinator.workers, 0); // 0 = available parallelism
         assert!(cfg.coordinator.prefilter);
+        assert_eq!(cfg.engine.shards, 1); // sharding is opt-in (0 = auto)
         assert_eq!(cfg.stream.max_sessions, 1024);
         assert_eq!(cfg.stream.merge_threshold, 4096);
         assert_eq!(cfg.stream.idle_ttl_ms, 60_000);
@@ -194,6 +219,8 @@ idle_ttl_ms = 2500
         assert!(Config::from_toml("[coordinator]\nworkers = -1").is_err());
         assert!(Config::from_toml("[coordinator]\nprefilter = 3").is_err());
         assert!(Config::from_toml("[coordinator]\nthreads = 4").is_err());
+        assert!(Config::from_toml("[engine]\nshards = -2").is_err());
+        assert!(Config::from_toml("[engine]\npools = 4").is_err());
         assert!(Config::from_toml("[stream]\nmax_sessions = \"many\"").is_err());
         assert!(Config::from_toml("[stream]\nttl = 5").is_err());
         // 0 is clamped to 1 (a session must merge eventually), ttl 0 = off

@@ -1,5 +1,14 @@
 //! Serving metrics: counters + log-bucketed latency histograms with
 //! percentile estimation.  Lock-light: all atomics, safe to share via Arc.
+//!
+//! Snapshots go through [`MetricsFrame`], a plain-value copy in which every
+//! atomic is loaded exactly once.  That single-read rule is what keeps a
+//! multi-shard aggregate internally consistent: the engine takes one frame
+//! per shard and sums the frames, so a gauge pair like `open_sessions` /
+//! `pending_points_total` can never mix reads from two different moments
+//! of the same shard (which could show pending points for a session
+//! another field says is closed).  Frames merge exactly: counters and
+//! gauges sum, histograms merge bucket-wise.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -45,43 +54,98 @@ impl Histogram {
     }
 
     pub fn mean_ns(&self) -> f64 {
-        let c = self.count();
-        if c == 0 {
-            0.0
-        } else {
-            self.sum_ns.load(Ordering::Relaxed) as f64 / c as f64
-        }
+        self.snap().mean_ns()
     }
 
     pub fn max_ns(&self) -> u64 {
         self.max_ns.load(Ordering::Relaxed)
     }
 
-    /// Percentile estimate (upper bucket bound), q in [0, 1].
+    /// Percentile estimate (upper bucket bound), q in [0, 1].  The
+    /// estimator lives on [`HistogramSnapshot`] — one copy of the
+    /// algorithm whether the buckets come from a live histogram or a
+    /// merged multi-shard frame.
     pub fn percentile_ns(&self, q: f64) -> u64 {
-        let total = self.count();
-        if total == 0 {
+        self.snap().percentile_ns(q)
+    }
+
+    /// Plain-value copy of the histogram (each atomic loaded once).
+    pub fn snap(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            counts: std::array::from_fn(|b| self.counts[b].load(Ordering::Relaxed)),
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+            count: self.count.load(Ordering::Relaxed),
+            max_ns: self.max_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of one [`Histogram`].  Unlike the JSON percentile
+/// summary, this keeps the raw buckets, so two snapshots merge *exactly*
+/// (bucket-wise sum) — percentiles of a merged frame are computed from the
+/// combined distribution, never averaged from per-shard percentiles.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    counts: [u64; BUCKETS],
+    sum_ns: u64,
+    count: u64,
+    max_ns: u64,
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> Self {
+        HistogramSnapshot { counts: [0; BUCKETS], sum_ns: 0, count: 0, max_ns: 0 }
+    }
+}
+
+impl HistogramSnapshot {
+    /// Fold `other` in: buckets/sums/counts add, max takes the max.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.sum_ns += other.sum_ns;
+        self.count += other.count;
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    /// Percentile estimate (upper bucket bound), q in [0, 1] — same
+    /// estimator as [`Histogram::percentile_ns`], over the merged buckets.
+    pub fn percentile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
             return 0;
         }
-        let target = ((total as f64) * q).ceil().max(1.0) as u64;
+        let target = ((self.count as f64) * q).ceil().max(1.0) as u64;
         let mut seen = 0u64;
         for (b, c) in self.counts.iter().enumerate() {
-            seen += c.load(Ordering::Relaxed);
+            seen += c;
             if seen >= target {
-                return 1u64 << (b + 1); // bucket upper bound
+                return 1u64 << (b + 1);
             }
         }
-        self.max_ns()
+        self.max_ns
     }
 
     fn to_json(&self) -> Json {
         Json::obj(vec![
-            ("count", Json::Num(self.count() as f64)),
+            ("count", Json::Num(self.count as f64)),
             ("mean_ns", Json::Num(self.mean_ns())),
             ("p50_ns", Json::Num(self.percentile_ns(0.50) as f64)),
             ("p95_ns", Json::Num(self.percentile_ns(0.95) as f64)),
             ("p99_ns", Json::Num(self.percentile_ns(0.99) as f64)),
-            ("max_ns", Json::Num(self.max_ns() as f64)),
+            ("max_ns", Json::Num(self.max_ns as f64)),
         ])
     }
 }
@@ -137,34 +201,133 @@ impl Metrics {
         counter.fetch_sub(v, Ordering::Relaxed);
     }
 
+    /// Plain-value copy of every metric, each atomic loaded exactly once.
+    /// This is the unit of aggregation: the engine snapshots one frame per
+    /// shard and merges the frames, so related gauges always come from the
+    /// same per-shard read.
+    pub fn frame(&self) -> MetricsFrame {
+        let g = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        MetricsFrame {
+            requests: g(&self.requests),
+            responses: g(&self.responses),
+            errors: g(&self.errors),
+            degenerate_fallbacks: g(&self.degenerate_fallbacks),
+            batches: g(&self.batches),
+            batched_requests: g(&self.batched_requests),
+            points_in: g(&self.points_in),
+            hull_points_out: g(&self.hull_points_out),
+            filtered_points: g(&self.filtered_points),
+            queue_latency: self.queue_latency.snap(),
+            exec_latency: self.exec_latency.snap(),
+            e2e_latency: self.e2e_latency.snap(),
+            open_sessions: g(&self.open_sessions),
+            session_absorbed_points: g(&self.session_absorbed_points),
+            session_pending_points: g(&self.session_pending_points),
+            session_merges: g(&self.session_merges),
+            session_evictions: g(&self.session_evictions),
+            session_merge_latency: self.session_merge_latency.snap(),
+        }
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let g = |c: &AtomicU64| Json::Num(c.load(Ordering::Relaxed) as f64);
-        let batches = self.batches.load(Ordering::Relaxed);
-        let breqs = self.batched_requests.load(Ordering::Relaxed);
-        MetricsSnapshot(Json::obj(vec![
-            ("requests", g(&self.requests)),
-            ("responses", g(&self.responses)),
-            ("errors", g(&self.errors)),
-            ("degenerate_fallbacks", g(&self.degenerate_fallbacks)),
-            ("batches", g(&self.batches)),
-            ("batched_requests", g(&self.batched_requests)),
+        MetricsSnapshot(self.frame().to_json())
+    }
+
+    /// One-shot requests in flight right now (three relaxed loads — the
+    /// engine's hot routing signal; use [`Metrics::frame`] when the whole
+    /// consistent picture is needed).
+    pub fn in_flight(&self) -> u64 {
+        let served = self.responses.load(Ordering::Relaxed) + self.errors.load(Ordering::Relaxed);
+        self.requests.load(Ordering::Relaxed).saturating_sub(served)
+    }
+}
+
+/// One coherent point-in-time copy of a [`Metrics`] sink.  Counters and
+/// gauges sum under [`MetricsFrame::merge`]; histograms merge bucket-wise.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MetricsFrame {
+    pub requests: u64,
+    pub responses: u64,
+    pub errors: u64,
+    pub degenerate_fallbacks: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+    pub points_in: u64,
+    pub hull_points_out: u64,
+    pub filtered_points: u64,
+    pub queue_latency: HistogramSnapshot,
+    pub exec_latency: HistogramSnapshot,
+    pub e2e_latency: HistogramSnapshot,
+    pub open_sessions: u64,
+    pub session_absorbed_points: u64,
+    pub session_pending_points: u64,
+    pub session_merges: u64,
+    pub session_evictions: u64,
+    pub session_merge_latency: HistogramSnapshot,
+}
+
+impl MetricsFrame {
+    /// Fold another shard's frame in: counters and gauges sum, histograms
+    /// merge bucket-wise.  `mean_batch_size` is derived at serialization
+    /// time from the merged totals, never averaged.
+    pub fn merge(&mut self, other: &MetricsFrame) {
+        self.requests += other.requests;
+        self.responses += other.responses;
+        self.errors += other.errors;
+        self.degenerate_fallbacks += other.degenerate_fallbacks;
+        self.batches += other.batches;
+        self.batched_requests += other.batched_requests;
+        self.points_in += other.points_in;
+        self.hull_points_out += other.hull_points_out;
+        self.filtered_points += other.filtered_points;
+        self.queue_latency.merge(&other.queue_latency);
+        self.exec_latency.merge(&other.exec_latency);
+        self.e2e_latency.merge(&other.e2e_latency);
+        self.open_sessions += other.open_sessions;
+        self.session_absorbed_points += other.session_absorbed_points;
+        self.session_pending_points += other.session_pending_points;
+        self.session_merges += other.session_merges;
+        self.session_evictions += other.session_evictions;
+        self.session_merge_latency.merge(&other.session_merge_latency);
+    }
+
+    /// One-shot requests currently in flight (submitted, not yet answered
+    /// or failed) — the engine's cheapest-queue routing signal.
+    pub fn in_flight(&self) -> u64 {
+        self.requests.saturating_sub(self.responses + self.errors)
+    }
+
+    /// The STATS JSON object (same shape as the pre-frame snapshot).
+    pub fn to_json(&self) -> Json {
+        let n = |v: u64| Json::Num(v as f64);
+        Json::obj(vec![
+            ("requests", n(self.requests)),
+            ("responses", n(self.responses)),
+            ("errors", n(self.errors)),
+            ("degenerate_fallbacks", n(self.degenerate_fallbacks)),
+            ("batches", n(self.batches)),
+            ("batched_requests", n(self.batched_requests)),
             (
                 "mean_batch_size",
-                Json::Num(if batches == 0 { 0.0 } else { breqs as f64 / batches as f64 }),
+                Json::Num(if self.batches == 0 {
+                    0.0
+                } else {
+                    self.batched_requests as f64 / self.batches as f64
+                }),
             ),
-            ("points_in", g(&self.points_in)),
-            ("hull_points_out", g(&self.hull_points_out)),
-            ("filtered_points", g(&self.filtered_points)),
+            ("points_in", n(self.points_in)),
+            ("hull_points_out", n(self.hull_points_out)),
+            ("filtered_points", n(self.filtered_points)),
             ("queue_latency", self.queue_latency.to_json()),
             ("exec_latency", self.exec_latency.to_json()),
             ("e2e_latency", self.e2e_latency.to_json()),
-            ("open_sessions", g(&self.open_sessions)),
-            ("absorbed_points_total", g(&self.session_absorbed_points)),
-            ("pending_points_total", g(&self.session_pending_points)),
-            ("merges_total", g(&self.session_merges)),
-            ("session_evictions", g(&self.session_evictions)),
+            ("open_sessions", n(self.open_sessions)),
+            ("absorbed_points_total", n(self.session_absorbed_points)),
+            ("pending_points_total", n(self.session_pending_points)),
+            ("merges_total", n(self.session_merges)),
+            ("session_evictions", n(self.session_evictions)),
             ("session_merge_latency", self.session_merge_latency.to_json()),
-        ]))
+        ])
     }
 }
 
@@ -238,5 +401,73 @@ mod tests {
         h.record_ns(99999);
         h.record_ns(50);
         assert_eq!(h.max_ns(), 99999);
+    }
+
+    #[test]
+    fn histogram_snapshots_merge_bucket_wise() {
+        let a = Histogram::default();
+        let b = Histogram::default();
+        for i in 1..=500u64 {
+            a.record_ns(i * 1000);
+        }
+        for i in 501..=1000u64 {
+            b.record_ns(i * 1000);
+        }
+        let mut merged = a.snap();
+        merged.merge(&b.snap());
+        // the merged distribution must equal one histogram fed everything
+        let whole = Histogram::default();
+        for i in 1..=1000u64 {
+            whole.record_ns(i * 1000);
+        }
+        assert_eq!(merged, whole.snap());
+        assert_eq!(merged.count(), 1000);
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(merged.percentile_ns(q), whole.percentile_ns(q), "q={q}");
+        }
+        assert_eq!(merged.max_ns, 1_000_000); // 1000 * 1000 ns
+    }
+
+    #[test]
+    fn frames_merge_counters_gauges_and_histograms() {
+        let a = Metrics::default();
+        let b = Metrics::default();
+        Metrics::add(&a.requests, 3);
+        Metrics::add(&b.requests, 5);
+        Metrics::add(&a.open_sessions, 2);
+        Metrics::add(&b.open_sessions, 7);
+        Metrics::add(&a.session_pending_points, 100);
+        Metrics::add(&b.batches, 2);
+        Metrics::add(&b.batched_requests, 6);
+        a.e2e_latency.record_ns(10);
+        b.e2e_latency.record_ns(1 << 30);
+        let mut merged = a.frame();
+        merged.merge(&b.frame());
+        assert_eq!(merged.requests, 8);
+        assert_eq!(merged.open_sessions, 9);
+        assert_eq!(merged.session_pending_points, 100);
+        assert_eq!(merged.e2e_latency.count(), 2);
+        assert_eq!(merged.e2e_latency.max_ns, 1 << 30);
+        let json = merged.to_json();
+        // mean_batch_size derives from the merged totals (6 reqs / 2 batches)
+        assert_eq!(json.get("mean_batch_size").unwrap().as_f64(), Some(3.0));
+        assert_eq!(json.get("requests").unwrap().as_usize(), Some(8));
+    }
+
+    #[test]
+    fn frame_json_matches_snapshot_json() {
+        let m = Metrics::default();
+        Metrics::inc(&m.requests);
+        Metrics::add(&m.points_in, 41);
+        m.queue_latency.record_ns(77);
+        assert_eq!(m.frame().to_json().to_string(), m.snapshot().0.to_string());
+    }
+
+    #[test]
+    fn in_flight_never_underflows() {
+        let mut f = MetricsFrame { responses: 5, errors: 2, requests: 6, ..Default::default() };
+        assert_eq!(f.in_flight(), 0); // racy relaxed reads can transiently invert
+        f.requests = 10;
+        assert_eq!(f.in_flight(), 3);
     }
 }

@@ -19,6 +19,6 @@ pub mod router;
 
 pub use backend::{BackendKind, HullBackend};
 pub use batcher::BatcherConfig;
-pub use metrics::{Histogram, Metrics, MetricsSnapshot};
+pub use metrics::{Histogram, HistogramSnapshot, Metrics, MetricsFrame, MetricsSnapshot};
 pub use request::{HullRequest, HullResponse, RequestError};
 pub use router::{Coordinator, CoordinatorConfig};

@@ -1,0 +1,493 @@
+//! The engine: N independent coordinator shards behind one facade.
+//!
+//! PR 3/PR 4 left two process-wide chokepoints on the serving path: every
+//! one-shot request funnels through a single batcher thread + one shared
+//! `Mutex<Receiver>` exec channel, and every session op goes through one
+//! global registry map lock.  The engine removes both by *partitioning the
+//! serving state* — the same divide-and-conquer move the hull pipeline
+//! itself makes, lifted one level up:
+//!
+//! ```text
+//! callers ──► [Engine router] ──► shard 0: batcher ─► exec pool ─► metrics
+//!                 │                        └ SessionRegistry slice
+//!                 ├────────────► shard 1: batcher ─► exec pool ─► metrics
+//!                 │                        └ SessionRegistry slice
+//!                 └────────────► …  (N fully independent shards)
+//! ```
+//!
+//! * **One-shot requests** route to the cheapest queue (fewest in-flight
+//!   requests, round-robin tie-break) — shards share nothing, so N shards
+//!   means N batchers and N exec channels with no cross-shard locks.
+//! * **Session verbs** route by a stable function of the sid: shard `i`
+//!   of `N` allocates sids `≡ i+1 (mod N)` (see
+//!   [`SessionRegistry::new_striped`]), and `(sid - 1) % N` sends every
+//!   later verb back to the owning shard, so a session is pinned to one
+//!   shard — one registry slice, one backend pool, one metrics sink — for
+//!   its whole lifetime.  Eviction, capacity and accounting are all
+//!   per-shard; the global `max_sessions` cap is split across shards
+//!   remainder-aware (`M/N + 1` for the first `M mod N` shards).
+//! * **STATS** merges one coherent [`MetricsFrame`] per shard — counters
+//!   and gauges sum, histograms merge bucket-wise — and also reports the
+//!   raw `per_shard` array.  Each gauge is read once per shard, so the
+//!   aggregate can never pair reads from two different moments.
+//!
+//! A 1-shard engine is bit- and protocol-identical to the pre-engine
+//! server: same coordinator, same registry, same wire bytes — the entire
+//! pre-existing integration suite runs unmodified against it.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+
+use crate::coordinator::{
+    BackendKind, Coordinator, CoordinatorConfig, HullRequest, HullResponse, MetricsFrame,
+    MetricsSnapshot, RequestError,
+};
+use crate::geometry::point::Point;
+use crate::stream::{
+    AddOutcome, SessionError, SessionHullSnapshot, SessionRegistry, StreamConfig,
+};
+use crate::util::json::Json;
+
+/// Engine configuration (config file: `[engine]`).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// coordinator-shard count; 0 = auto.  Auto resolves to 1 for the
+    /// `pjrt` backend (each shard's workers load the artifact registry —
+    /// multiplying loaders must be an explicit choice, the PR 3 worker
+    /// rule one level up) and to `clamp(hw_threads / 4, 1, 8)` for host
+    /// backends (each shard carries a batcher thread + worker pool, so
+    /// shards beyond a fraction of the machine only add switching).
+    pub shards: usize,
+    /// per-shard coordinator template.  `workers == 0` (auto) splits the
+    /// hardware threads across shards (`max(1, hw / shards)` each) instead
+    /// of letting every shard claim the whole machine.
+    pub coordinator: CoordinatorConfig,
+    /// stream knobs; `max_sessions` is the GLOBAL cap, split across
+    /// shards remainder-aware.
+    pub stream: StreamConfig,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            shards: 1,
+            coordinator: CoordinatorConfig::default(),
+            stream: StreamConfig::default(),
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Shard count for tests/tools honoring the `ENGINE_SHARDS`
+    /// environment variable (tier1 exports `ENGINE_SHARDS=4` to run the
+    /// server integration suite against a sharded engine).
+    pub fn shards_from_env(default: usize) -> usize {
+        std::env::var("ENGINE_SHARDS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or(default)
+    }
+
+    /// Resolve `shards` (0 = auto; see the field docs for the rule).
+    pub fn effective_shards(&self) -> usize {
+        if self.shards > 0 {
+            self.shards
+        } else if self.coordinator.backend == BackendKind::Pjrt {
+            1
+        } else {
+            let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            (hw / 4).clamp(1, 8)
+        }
+    }
+}
+
+/// One shard: a complete coordinator (own batcher, own exec pool, own
+/// metrics sink) plus its slice of the session space.
+struct Shard {
+    coordinator: Arc<Coordinator>,
+    registry: Arc<SessionRegistry>,
+}
+
+/// Facade over `N` independent coordinator shards.
+pub struct Engine {
+    shards: Vec<Shard>,
+    /// round-robin cursor: rotates the starting shard of the
+    /// cheapest-queue scan so equal-load shards alternate.
+    rr: AtomicUsize,
+    /// the global session cap (sum of the per-shard slices).
+    max_sessions_total: usize,
+    max_points: usize,
+}
+
+impl Engine {
+    /// Build and start `N` shards.  Fails if any shard's backend pool
+    /// cannot be constructed; already-started shards shut down on drop.
+    pub fn start(cfg: EngineConfig) -> Result<Engine, String> {
+        let n = cfg.effective_shards();
+        let mut shard_cfg = cfg.coordinator.clone();
+        if shard_cfg.workers == 0 && n > 1 && shard_cfg.backend != BackendKind::Pjrt {
+            // auto workers must split the machine across shards: N shards
+            // each auto-sizing to every hardware thread would book N× the
+            // cores.  (pjrt auto already resolves to 1 per shard.)
+            let hw = std::thread::available_parallelism().map(|h| h.get()).unwrap_or(1);
+            shard_cfg.workers = (hw / n).max(1);
+        }
+        let mut coordinators = Vec::with_capacity(n);
+        for _ in 0..n {
+            coordinators.push(Arc::new(Coordinator::start(shard_cfg.clone())?));
+        }
+        let max_points =
+            coordinators.iter().map(|c| c.max_points()).min().unwrap_or(usize::MAX);
+        // the same brick-proofing rule serve() applies: a threshold above
+        // the backend's request cap could never merge
+        let stream = cfg.stream.clamp_threshold_to(max_points);
+        let shards = coordinators
+            .into_iter()
+            .enumerate()
+            .map(|(i, coordinator)| {
+                let slice = StreamConfig {
+                    // remainder-aware split: shard i gets M/N, +1 for the
+                    // first M mod N shards, so the slices sum to exactly M
+                    max_sessions: stream.max_sessions / n
+                        + usize::from(i < stream.max_sessions % n),
+                    ..stream.clone()
+                };
+                let registry = Arc::new(SessionRegistry::new_striped(
+                    slice,
+                    coordinator.metrics.clone(),
+                    i as u64 + 1,
+                    n as u64,
+                ));
+                Shard { coordinator, registry }
+            })
+            .collect();
+        Ok(Engine {
+            shards,
+            rr: AtomicUsize::new(0),
+            max_sessions_total: stream.max_sessions,
+            max_points,
+        })
+    }
+
+    /// Wrap an already-built coordinator + registry as a 1-shard engine —
+    /// the compatibility path behind [`crate::server::serve`] /
+    /// [`crate::server::serve_with_sessions`], and the reason the whole
+    /// pre-engine test suite keeps passing byte-for-byte.
+    pub fn single(coordinator: Arc<Coordinator>, registry: Arc<SessionRegistry>) -> Engine {
+        let max_points = coordinator.max_points();
+        let max_sessions_total = registry.max_sessions();
+        Engine {
+            shards: vec![Shard { coordinator, registry }],
+            rr: AtomicUsize::new(0),
+            max_sessions_total,
+            max_points,
+        }
+    }
+
+    // ------------------------------------------------------------ routing
+
+    /// Cheapest-queue shard choice for one-shot work: fewest in-flight
+    /// requests wins; the scan's starting point round-robins so ties (the
+    /// common idle case) alternate instead of piling onto shard 0.  The
+    /// in-flight counts are relaxed reads — a stale value only softens the
+    /// balance, never correctness.
+    fn cheapest_shard(&self) -> &Shard {
+        let n = self.shards.len();
+        if n == 1 {
+            return &self.shards[0];
+        }
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        let mut best = start;
+        let mut best_load = u64::MAX;
+        for k in 0..n {
+            let i = (start + k) % n;
+            let load = self.shards[i].coordinator.metrics.in_flight();
+            if load < best_load {
+                best_load = load;
+                best = i;
+            }
+        }
+        &self.shards[best]
+    }
+
+    /// The shard a sid is pinned to for its lifetime: `(sid - 1) % N`
+    /// inverts the striped allocation.  Unknown sids (including 0, never
+    /// allocated) still land deterministically on some shard, which
+    /// answers `unknown-session` exactly like a standalone registry.
+    fn shard_for_sid(&self, sid: u64) -> &Shard {
+        let n = self.shards.len() as u64;
+        &self.shards[(sid.wrapping_sub(1) % n) as usize]
+    }
+
+    // ----------------------------------------------------------- one-shot
+
+    /// Submit a one-shot request to the cheapest shard; the returned
+    /// channel yields the response.
+    pub fn submit(
+        &self,
+        req: HullRequest,
+    ) -> mpsc::Receiver<Result<HullResponse, RequestError>> {
+        self.cheapest_shard().coordinator.submit(req)
+    }
+
+    /// Synchronous one-shot convenience wrapper.
+    pub fn compute(&self, points: Vec<Point>) -> Result<HullResponse, RequestError> {
+        self.cheapest_shard().coordinator.compute(points)
+    }
+
+    // ----------------------------------------------------------- sessions
+
+    /// `SOPEN`: place the session on the shard with the most free
+    /// capacity (ties broken by shard order), falling back through the
+    /// rest; only when every shard is full does the global cap error
+    /// surface.  The returned sid routes all later verbs to that shard.
+    pub fn session_open(&self) -> Result<u64, SessionError> {
+        if self.shards.len() == 1 {
+            return self.shards[0].registry.open();
+        }
+        let mut order: Vec<usize> = (0..self.shards.len()).collect();
+        order.sort_by_key(|&i| {
+            let r = &self.shards[i].registry;
+            std::cmp::Reverse(r.max_sessions().saturating_sub(r.open_sessions()))
+        });
+        for i in order {
+            match self.shards[i].registry.open() {
+                Ok(sid) => return Ok(sid),
+                Err(SessionError::Capacity { .. }) => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Err(SessionError::Capacity { max: self.max_sessions_total })
+    }
+
+    /// `SADD` on the owning shard (its registry, its backend pool).
+    pub fn session_add(&self, sid: u64, points: &[Point]) -> Result<AddOutcome, SessionError> {
+        let shard = self.shard_for_sid(sid);
+        shard.registry.add(sid, points, &*shard.coordinator)
+    }
+
+    /// `SHULL` on the owning shard (flushes pending first).
+    pub fn session_hull(&self, sid: u64) -> Result<SessionHullSnapshot, SessionError> {
+        let shard = self.shard_for_sid(sid);
+        shard.registry.hull(sid, &*shard.coordinator)
+    }
+
+    /// `SCLOSE` on the owning shard.
+    pub fn session_close(&self, sid: u64) -> Result<(), SessionError> {
+        self.shard_for_sid(sid).registry.close(sid)
+    }
+
+    /// Open sessions across every shard.
+    pub fn open_sessions(&self) -> usize {
+        self.shards.iter().map(|s| s.registry.open_sessions()).sum()
+    }
+
+    /// Run one eviction sweep on every shard (tests; each shard's own
+    /// sweeper thread does this on its interval).
+    pub fn sweep_now(&self) {
+        for s in &self.shards {
+            s.registry.sweep_now();
+        }
+    }
+
+    // ------------------------------------------------------------ metrics
+
+    /// Merged metrics: one coherent [`MetricsFrame`] per shard, summed
+    /// once (counters and gauges sum, histograms merge bucket-wise), plus
+    /// the raw `per_shard` array and the shard count.  For shards = 1 the
+    /// top-level fields equal the lone coordinator's own snapshot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        self.stats(None)
+    }
+
+    /// [`Engine::snapshot`] with the server's connection gauge spliced in
+    /// (`active_connections` is engine-global — connections are not
+    /// sharded — and read exactly once).
+    pub fn stats(&self, active_connections: Option<u64>) -> MetricsSnapshot {
+        let frames: Vec<MetricsFrame> =
+            self.shards.iter().map(|s| s.coordinator.metrics.frame()).collect();
+        let mut merged = MetricsFrame::default();
+        for f in &frames {
+            merged.merge(f);
+        }
+        let Json::Obj(mut obj) = merged.to_json() else { unreachable!("frame json is an object") };
+        obj.insert("shards".into(), Json::Num(self.shards.len() as f64));
+        obj.insert(
+            "per_shard".into(),
+            Json::Arr(frames.iter().map(MetricsFrame::to_json).collect()),
+        );
+        if let Some(active) = active_connections {
+            obj.insert("active_connections".into(), Json::Num(active as f64));
+        }
+        MetricsSnapshot(Json::Obj(obj))
+    }
+
+    // ---------------------------------------------------------- topology
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard `i`'s coordinator (tests, benches, affinity checks).
+    pub fn shard_coordinator(&self, i: usize) -> &Arc<Coordinator> {
+        &self.shards[i].coordinator
+    }
+
+    /// Shard `i`'s registry slice (tests, benches, affinity checks).
+    pub fn shard_registry(&self, i: usize) -> &Arc<SessionRegistry> {
+        &self.shards[i].registry
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.shards[0].coordinator.backend_name()
+    }
+
+    /// The per-request point cap (min across shards; they are identical
+    /// when built by [`Engine::start`]).
+    pub fn max_points(&self) -> usize {
+        self.max_points
+    }
+
+    /// Global session cap (sum of the per-shard slices).
+    pub fn max_sessions(&self) -> usize {
+        self.max_sessions_total
+    }
+
+    /// Effective (possibly clamped) merge threshold.
+    pub fn merge_threshold(&self) -> usize {
+        self.shards[0].registry.merge_threshold()
+    }
+
+    /// Exec workers per shard.
+    pub fn workers_per_shard(&self) -> usize {
+        self.shards[0].coordinator.workers()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::generators::{generate, Distribution};
+
+    fn engine(shards: usize, max_sessions: usize) -> Engine {
+        Engine::start(EngineConfig {
+            shards,
+            coordinator: CoordinatorConfig {
+                backend: BackendKind::Serial,
+                workers: 1,
+                ..Default::default()
+            },
+            stream: StreamConfig { max_sessions, idle_ttl_ms: 0, ..Default::default() },
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn capacity_splits_remainder_aware() {
+        let e = engine(4, 10); // 10 = 3 + 3 + 2 + 2
+        let per: Vec<usize> = (0..4).map(|i| e.shard_registry(i).max_sessions()).collect();
+        assert_eq!(per, vec![3, 3, 2, 2]);
+        assert_eq!(per.iter().sum::<usize>(), 10);
+        assert_eq!(e.max_sessions(), 10);
+    }
+
+    #[test]
+    fn global_cap_enforced_across_shards() {
+        let e = engine(4, 2); // shards 2 and 3 get zero capacity
+        let a = e.session_open().unwrap();
+        let b = e.session_open().unwrap();
+        let err = e.session_open().unwrap_err();
+        assert_eq!(err, SessionError::Capacity { max: 2 });
+        assert_eq!(err.to_string(), "session capacity 2 reached");
+        e.session_close(a).unwrap();
+        e.session_open().unwrap();
+        let _ = b;
+    }
+
+    #[test]
+    fn sids_route_back_to_their_allocating_shard() {
+        let e = engine(4, 100);
+        let mut owned = [0usize; 4];
+        for _ in 0..12 {
+            let before: Vec<usize> =
+                (0..4).map(|i| e.shard_registry(i).open_sessions()).collect();
+            let sid = e.session_open().unwrap();
+            let owner = ((sid - 1) % 4) as usize;
+            owned[owner] += 1;
+            // exactly the sid-residue shard gained a session
+            for (i, b) in before.iter().enumerate() {
+                let now = e.shard_registry(i).open_sessions();
+                assert_eq!(now, b + usize::from(i == owner), "sid {sid} shard {i}");
+            }
+            e.session_add(sid, &[crate::geometry::point::Point::new(0.25, 0.75)])
+                .unwrap();
+        }
+        assert_eq!(e.open_sessions(), 12);
+        // balanced placement spreads the 12 sessions across all 4 shards
+        assert_eq!(owned, [3, 3, 3, 3]);
+    }
+
+    #[test]
+    fn one_shot_routing_spreads_and_answers_exactly() {
+        let e = engine(3, 8);
+        for k in 0..9u64 {
+            let pts = generate(Distribution::ALL[(k % 7) as usize], 40 + k as usize, k);
+            let resp = e.compute(pts.clone()).unwrap();
+            let (u, l) = crate::serial::monotone_chain::full_hull(&pts);
+            assert_eq!(resp.upper, u);
+            assert_eq!(resp.lower, l);
+        }
+        // merged totals account for every request exactly once
+        let snap = e.snapshot().0;
+        assert_eq!(snap.get("responses").unwrap().as_usize(), Some(9));
+        assert_eq!(snap.get("errors").unwrap().as_usize(), Some(0));
+        let per = snap.get("per_shard").unwrap().as_arr().unwrap();
+        assert_eq!(per.len(), 3);
+        let spread: usize = per
+            .iter()
+            .map(|s| s.get("responses").unwrap().as_usize().unwrap())
+            .sum();
+        assert_eq!(spread, 9);
+        assert_eq!(snap.get("shards").unwrap().as_usize(), Some(3));
+    }
+
+    #[test]
+    fn single_wraps_existing_parts_unchanged() {
+        let coord = Arc::new(
+            Coordinator::start(CoordinatorConfig {
+                backend: BackendKind::Serial,
+                workers: 1,
+                ..Default::default()
+            })
+            .unwrap(),
+        );
+        let reg = Arc::new(SessionRegistry::new(
+            StreamConfig { max_sessions: 5, idle_ttl_ms: 0, ..Default::default() },
+            coord.metrics.clone(),
+        ));
+        let e = Engine::single(coord, reg);
+        assert_eq!(e.shard_count(), 1);
+        assert_eq!(e.max_sessions(), 5);
+        let sid = e.session_open().unwrap();
+        assert_eq!(sid, 1); // stride-1 allocation, exactly the old registry
+        e.session_close(sid).unwrap();
+    }
+
+    #[test]
+    fn effective_shards_auto_rules() {
+        let pjrt = EngineConfig {
+            shards: 0,
+            coordinator: CoordinatorConfig {
+                backend: BackendKind::Pjrt,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        assert_eq!(pjrt.effective_shards(), 1, "pjrt auto-resolves to one shard");
+        let host = EngineConfig { shards: 0, ..Default::default() };
+        let n = host.effective_shards();
+        assert!((1..=8).contains(&n), "host auto in [1, 8]: {n}");
+        let explicit = EngineConfig { shards: 6, ..Default::default() };
+        assert_eq!(explicit.effective_shards(), 6);
+    }
+}

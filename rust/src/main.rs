@@ -18,12 +18,12 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use wagener_hull::config::Config;
 use wagener_hull::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
+use wagener_hull::engine::{Engine, EngineConfig};
 use wagener_hull::geometry::generators::{generate, Distribution};
 use wagener_hull::geometry::point::{pad_to_hood, Point};
 use wagener_hull::pram::ExecMode;
 use wagener_hull::runtime::ArtifactRegistry;
 use wagener_hull::server;
-use wagener_hull::stream::SessionRegistry;
 use wagener_hull::viz::svg::{render_hull_svg, SvgOptions};
 use wagener_hull::viz::trace::TraceWriter;
 use wagener_hull::wagener::occupancy::{format_table, occupancy_table};
@@ -38,7 +38,7 @@ commands:
              [--artifacts <dir>] [--exec-mode <fast|audited>]
              [--merge <points-file-2>]   hull both files, then tangent-merge the two hulls
   serve      [--config <file>] [--addr <host:port>] [--backend <kind>] [--artifacts <dir>]
-             [--exec-mode <fast|audited>] [--workers <n>]
+             [--exec-mode <fast|audited>] [--workers <n>] [--shards <n>]
              [--max-sessions <n>] [--merge-threshold <n>] [--idle-ttl-ms <n>]
   client     --addr <host:port> <points-file>
   occupancy  --n <count> [--dist <name>] [--seed <u64>]
@@ -313,6 +313,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     if let Some(w) = parse_workers(&flags)? {
         cfg.coordinator.workers = w;
     }
+    if let Some(v) = flags.get("shards") {
+        cfg.engine.shards = v
+            .parse::<usize>()
+            .context("--shards wants a non-negative integer (0 = auto)")?;
+    }
     if let Some(v) = flags.get("max-sessions") {
         cfg.stream.max_sessions =
             v.parse::<usize>().context("--max-sessions wants a positive integer")?.max(1);
@@ -327,25 +332,32 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
     warn_if_exec_mode_noop(exec_mode, cfg.coordinator.backend, cfg.coordinator.self_check);
 
-    let coord = Arc::new(Coordinator::start(cfg.coordinator.clone()).map_err(|e| anyhow!(e))?);
-    let stream_cfg = cfg.stream.clone().clamp_threshold_to(coord.max_points());
-    if stream_cfg.merge_threshold < cfg.stream.merge_threshold {
+    let engine = Arc::new(
+        Engine::start(EngineConfig {
+            shards: cfg.engine.shards,
+            coordinator: cfg.coordinator.clone(),
+            stream: cfg.stream.clone(),
+        })
+        .map_err(|e| anyhow!(e))?,
+    );
+    if engine.merge_threshold() < cfg.stream.merge_threshold {
         eprintln!(
             "warning: merge_threshold {} exceeds the {} backend's request cap; clamped to {}",
             cfg.stream.merge_threshold,
-            coord.backend_name(),
-            stream_cfg.merge_threshold
+            engine.backend_name(),
+            engine.merge_threshold()
         );
     }
-    let sessions = Arc::new(SessionRegistry::new(stream_cfg.clone(), coord.metrics.clone()));
-    let handle = server::serve_with_sessions(coord.clone(), sessions, &cfg.server)?;
+    let handle = server::serve_engine(engine.clone(), &cfg.server)?;
     println!(
-        "serving on {} backend={} workers={} max_sessions={} merge_threshold={} (Ctrl-C to stop)",
+        "serving on {} backend={} shards={} workers/shard={} max_sessions={} \
+         merge_threshold={} (Ctrl-C to stop)",
         handle.local_addr,
-        coord.backend_name(),
-        coord.workers(),
-        stream_cfg.max_sessions,
-        stream_cfg.merge_threshold,
+        engine.backend_name(),
+        engine.shard_count(),
+        engine.workers_per_shard(),
+        engine.max_sessions(),
+        engine.merge_threshold(),
     );
     // block forever
     loop {

@@ -8,4 +8,4 @@ pub mod tcp;
 
 pub use client::{HullClient, SessionAddReply, SessionHullReply};
 pub use proto::{Request, Response, SessionVerb};
-pub use tcp::{serve, serve_with_sessions, ServerConfig, ServerHandle};
+pub use tcp::{serve, serve_engine, serve_with_sessions, ServerConfig, ServerHandle};

@@ -29,6 +29,12 @@
 //!                                           when the header parsed)
 //!   STATS <json>\n       PONG\n
 //! ```
+//!
+//! The `STATS` JSON object is the engine-merged aggregate (counters and
+//! gauges summed from one coherent per-shard snapshot each, histograms
+//! merged bucket-wise) extended with `shards` (coordinator-shard count),
+//! `per_shard` (the raw per-shard snapshot array) and
+//! `active_connections` (the server's connection gauge).
 
 use std::io::{BufRead, Write};
 

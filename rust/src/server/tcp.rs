@@ -1,11 +1,13 @@
 //! Threaded TCP server: one accept loop, one handler thread per
-//! connection, all sharing the coordinator (thread-based substitute for
-//! the usual async runtime; connections are long-lived and few, work is
-//! CPU-bound, so thread-per-connection is the right shape here).
+//! connection, all sharing the [`Engine`] facade — one-shot requests are
+//! routed to the cheapest coordinator shard, session verbs to their sid's
+//! pinned shard (thread-based substitute for the usual async runtime;
+//! connections are long-lived and few, work is CPU-bound, so
+//! thread-per-connection is the right shape here).
 //!
 //! Handler threads are *tracked*, not detached: `ServerHandle::stop`
 //! shuts every live connection's socket down and joins the handlers, so
-//! nothing races a coordinator shutdown that follows.
+//! nothing races an engine shutdown that follows.
 
 use std::io::{BufReader, BufWriter};
 use std::net::{Shutdown, TcpListener, TcpStream};
@@ -14,6 +16,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::coordinator::{Coordinator, HullRequest};
+use crate::engine::Engine;
 use crate::log_info;
 use crate::stream::{SessionRegistry, StreamConfig};
 
@@ -62,7 +65,7 @@ pub struct ServerHandle {
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
     registry: Arc<ConnRegistry>,
-    sessions: Arc<SessionRegistry>,
+    engine: Arc<Engine>,
 }
 
 impl ServerHandle {
@@ -71,9 +74,17 @@ impl ServerHandle {
         self.registry.active.load(Ordering::Relaxed)
     }
 
-    /// The streaming-session registry this server serves.
+    /// The engine this server serves (shards, registries, metrics).
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    /// Shard 0's session registry — meaningful only for 1-shard engines
+    /// (the [`serve`] / [`serve_with_sessions`] compatibility paths).
+    /// Sharded callers should use [`ServerHandle::engine`] and address
+    /// shards explicitly (`sweep_now` there sweeps every shard).
     pub fn sessions(&self) -> &Arc<SessionRegistry> {
-        &self.sessions
+        self.engine.shard_registry(0)
     }
 
     pub fn stop(mut self) {
@@ -110,33 +121,48 @@ impl Drop for ServerHandle {
     }
 }
 
-/// Start serving `coordinator` on `cfg.addr` (non-blocking; returns a
-/// handle).  The coordinator must outlive the handle (Arc).  Streaming
-/// sessions get a default-configured registry sharing the coordinator's
-/// metrics; use [`serve_with_sessions`] to tune capacity/threshold/TTL
-/// (clamp the threshold with [`StreamConfig::clamp_threshold_to`] — a
-/// threshold above the backend's request cap can never merge).
+/// Deprecated thin wrapper: start serving one `coordinator` on
+/// `cfg.addr`.  Streaming sessions get a default-configured registry
+/// sharing the coordinator's metrics.  New code should build an
+/// [`Engine`] and call [`serve_engine`]; this wraps the coordinator as a
+/// 1-shard engine, which is bit- and protocol-identical.
 pub fn serve(coordinator: Arc<Coordinator>, cfg: &ServerConfig) -> std::io::Result<ServerHandle> {
     let stream_cfg = StreamConfig::default().clamp_threshold_to(coordinator.max_points());
     let sessions = Arc::new(SessionRegistry::new(stream_cfg, coordinator.metrics.clone()));
     serve_with_sessions(coordinator, sessions, cfg)
 }
 
-/// [`serve`] with an explicitly configured session registry.
+/// Deprecated thin wrapper: [`serve`] with an explicitly configured
+/// session registry (clamp the threshold with
+/// [`StreamConfig::clamp_threshold_to`] — a threshold above the backend's
+/// request cap can never merge).  New code should build an [`Engine`] and
+/// call [`serve_engine`].
 pub fn serve_with_sessions(
     coordinator: Arc<Coordinator>,
     sessions: Arc<SessionRegistry>,
     cfg: &ServerConfig,
 ) -> std::io::Result<ServerHandle> {
+    serve_engine(Arc::new(Engine::single(coordinator, sessions)), cfg)
+}
+
+/// Start serving `engine` on `cfg.addr` (non-blocking; returns a handle).
+/// One-shot requests route to the cheapest shard; session verbs follow
+/// their sid's shard; `STATS` returns the merged aggregate plus a
+/// `per_shard` array and the `active_connections` gauge.
+pub fn serve_engine(engine: Arc<Engine>, cfg: &ServerConfig) -> std::io::Result<ServerHandle> {
     let listener = TcpListener::bind(&cfg.addr)?;
     let local_addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
     let registry = Arc::new(ConnRegistry::default());
-    log_info!("serving on {local_addr} (backend={})", coordinator.backend_name());
+    log_info!(
+        "serving on {local_addr} (backend={} shards={})",
+        engine.backend_name(),
+        engine.shard_count()
+    );
 
     let stop2 = stop.clone();
     let reg2 = registry.clone();
-    let sessions2 = sessions.clone();
+    let engine2 = engine.clone();
     let accept_thread = std::thread::Builder::new()
         .name("hull-accept".into())
         .spawn(move || {
@@ -146,8 +172,7 @@ pub fn serve_with_sessions(
                 }
                 match stream {
                     Ok(s) => {
-                        let coord = coordinator.clone();
-                        let sess = sessions2.clone();
+                        let eng = engine2.clone();
                         let reg = reg2.clone();
                         let tracked = match s.try_clone() {
                             Ok(t) => t,
@@ -170,7 +195,7 @@ pub fn serve_with_sessions(
                         let spawned = std::thread::Builder::new()
                             .name("hull-conn".into())
                             .spawn(move || {
-                                handle_connection(s, coord, sess);
+                                handle_connection(s, eng, &reg_in.active);
                                 reg_in.active.fetch_sub(1, Ordering::Relaxed);
                                 // self-reap: drop the tracked stream clone
                                 // now, not at the next accept — only the
@@ -203,10 +228,10 @@ pub fn serve_with_sessions(
             }
         })?;
 
-    Ok(ServerHandle { local_addr, stop, accept_thread: Some(accept_thread), registry, sessions })
+    Ok(ServerHandle { local_addr, stop, accept_thread: Some(accept_thread), registry, engine })
 }
 
-fn handle_connection(stream: TcpStream, coord: Arc<Coordinator>, sessions: Arc<SessionRegistry>) {
+fn handle_connection(stream: TcpStream, engine: Arc<Engine>, active: &AtomicU64) {
     let peer = stream.peer_addr().ok();
     let mut reader = BufReader::new(match stream.try_clone() {
         Ok(s) => s,
@@ -246,13 +271,15 @@ fn handle_connection(stream: TcpStream, coord: Arc<Coordinator>, sessions: Arc<S
                 }
             }
             Request::Stats => {
-                let snap = coord.snapshot().0.to_string();
+                // merged aggregate + per_shard array, plus the server's
+                // connection gauge (engine-global, read exactly once)
+                let snap = engine.stats(Some(active.load(Ordering::Relaxed))).0.to_string();
                 if proto::write_response(&mut writer, &Response::Stats(snap)).is_err() {
                     break;
                 }
             }
             Request::Hull { id, points } => {
-                let reply = coord.submit(HullRequest { id, points });
+                let reply = engine.submit(HullRequest { id, points });
                 let resp = match reply.recv() {
                     Ok(Ok(h)) => Response::Hull {
                         id,
@@ -270,7 +297,7 @@ fn handle_connection(stream: TcpStream, coord: Arc<Coordinator>, sessions: Arc<S
                 }
             }
             Request::SessionOpen { id } => {
-                let resp = match sessions.open() {
+                let resp = match engine.session_open() {
                     Ok(sid) => Response::SessionOpened { id, sid },
                     Err(e) => Response::SessionErr {
                         verb: SessionVerb::Open,
@@ -283,7 +310,7 @@ fn handle_connection(stream: TcpStream, coord: Arc<Coordinator>, sessions: Arc<S
                 }
             }
             Request::SessionAdd { sid, points } => {
-                let resp = match sessions.add(sid, &points, &*coord) {
+                let resp = match engine.session_add(sid, &points) {
                     Ok(o) => Response::SessionAdded {
                         sid,
                         absorbed: o.absorbed,
@@ -301,7 +328,7 @@ fn handle_connection(stream: TcpStream, coord: Arc<Coordinator>, sessions: Arc<S
                 }
             }
             Request::SessionHull { sid } => {
-                let resp = match sessions.hull(sid, &*coord) {
+                let resp = match engine.session_hull(sid) {
                     Ok(s) => Response::SessionHull {
                         sid,
                         epoch: s.epoch,
@@ -319,7 +346,7 @@ fn handle_connection(stream: TcpStream, coord: Arc<Coordinator>, sessions: Arc<S
                 }
             }
             Request::SessionClose { sid } => {
-                let resp = match sessions.close(sid) {
+                let resp = match engine.session_close(sid) {
                     Ok(()) => Response::SessionClosed { sid },
                     Err(e) => Response::SessionErr {
                         verb: SessionVerb::Close,

@@ -18,7 +18,11 @@
 //!   map lock), so no cycle exists;
 //! * `close` removes the map entry first (no new operation can find the
 //!   session), then waits on the slot lock so an in-flight `SADD`
-//!   completes before the gauges are settled.
+//!   completes before the gauges are settled;
+//! * the sweeper thread *parks* (no timeout) while zero sessions are
+//!   open — an idle server does no periodic work.  The open count lives
+//!   under the sweeper condvar's own mutex so the first `SOPEN` can never
+//!   be a lost wakeup, and the sweeper re-parks whenever the map empties.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -104,11 +108,43 @@ struct Slot {
     state: Mutex<SlotState>,
 }
 
+/// Sweeper wake state.  `open` mirrors the session-map size *under the
+/// condvar's own mutex*: the sweeper's "anything to watch?" check and its
+/// wait are atomic against open/close, so a session opened between the
+/// two can never be a lost wakeup.  (The map mutex cannot play this role —
+/// waiting on a condvar releases only the mutex it is paired with.)
+struct SweepState {
+    stopped: bool,
+    open: usize,
+}
+
 struct Inner {
     sessions: Mutex<HashMap<u64, Arc<Slot>>>,
     next_sid: AtomicU64,
+    /// sid allocation stride: a registry embedded as engine shard `i` of
+    /// `N` hands out sids ≡ i+1 (mod N), so `(sid - 1) % N` routes any
+    /// sid back to the shard that owns it for the session's lifetime.
+    sid_stride: u64,
     cfg: StreamConfig,
     metrics: Arc<Metrics>,
+    wake: Arc<(Mutex<SweepState>, Condvar)>,
+}
+
+impl Inner {
+    /// Track a map-size transition and (on 0 → 1) unpark the sweeper.
+    /// Lock order is map/slot → wake, never the reverse: callers may hold
+    /// the map lock (insert MUST, so the +1 lands before the sid is
+    /// visible to a racing close), while the sweeper drops the wake mutex
+    /// before touching map or slot locks — so the order stays acyclic.
+    fn shift_open(&self, delta: isize) {
+        let (lock, cv) = &*self.wake;
+        let mut st = lock_ignore_poison(lock);
+        let was = st.open;
+        st.open = st.open.checked_add_signed(delta).expect("open-session underflow");
+        if was == 0 && st.open > 0 {
+            cv.notify_all();
+        }
+    }
 }
 
 /// Shared registry of open sessions (wrap in `Arc` to share with the
@@ -116,7 +152,6 @@ struct Inner {
 /// stops and joins it.
 pub struct SessionRegistry {
     inner: Arc<Inner>,
-    stop: Arc<(Mutex<bool>, Condvar)>,
     sweeper: Option<JoinHandle<()>>,
 }
 
@@ -130,35 +165,67 @@ impl SessionRegistry {
     /// Build a registry sharing the coordinator's metrics sink (the
     /// session gauges ride the same STATS snapshot).
     pub fn new(cfg: StreamConfig, metrics: Arc<Metrics>) -> SessionRegistry {
+        Self::new_striped(cfg, metrics, 1, 1)
+    }
+
+    /// [`SessionRegistry::new`] for an engine shard: sids start at
+    /// `sid_base` and step by `sid_stride`, so shard `i` of `N`
+    /// (`sid_base = i + 1`, `sid_stride = N`) allocates exactly the sids
+    /// that `(sid - 1) % N == i` routes back to it.  `(1, 1)` is the
+    /// standalone registry (every sid, stride one — today's behaviour).
+    pub fn new_striped(
+        cfg: StreamConfig,
+        metrics: Arc<Metrics>,
+        sid_base: u64,
+        sid_stride: u64,
+    ) -> SessionRegistry {
+        assert!(sid_base >= 1 && sid_stride >= 1, "sid striping must start at 1");
         let inner = Arc::new(Inner {
             sessions: Mutex::new(HashMap::new()),
-            next_sid: AtomicU64::new(1),
+            next_sid: AtomicU64::new(sid_base),
+            sid_stride,
             cfg,
             metrics,
+            wake: Arc::new((
+                Mutex::new(SweepState { stopped: false, open: 0 }),
+                Condvar::new(),
+            )),
         });
-        let stop = Arc::new((Mutex::new(false), Condvar::new()));
         let sweeper = if inner.cfg.idle_ttl_ms > 0 {
             let inner2 = inner.clone();
-            let stop2 = stop.clone();
+            let wake = inner.wake.clone();
             let interval =
                 Duration::from_millis((inner.cfg.idle_ttl_ms / 4).clamp(10, 1000));
             Some(
                 std::thread::Builder::new()
                     .name("hull-session-sweep".into())
                     .spawn(move || {
-                        let (lock, cv) = &*stop2;
-                        let mut stopped = lock_ignore_poison(lock);
-                        while !*stopped {
-                            let (guard, _) = cv
-                                .wait_timeout(stopped, interval)
-                                .unwrap_or_else(PoisonError::into_inner);
-                            stopped = guard;
-                            if *stopped {
+                        let (lock, cv) = &*wake;
+                        let mut st = lock_ignore_poison(lock);
+                        loop {
+                            // park (no timeout) while zero sessions are
+                            // open: an idle server does no periodic work.
+                            // shift_open's 0→1 notify unparks us; the
+                            // check and the wait share `lock`, so the
+                            // wakeup cannot be lost.
+                            while !st.stopped && st.open == 0 {
+                                st = cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+                            }
+                            if st.stopped {
                                 return;
                             }
-                            drop(stopped);
+                            let (guard, _) = cv
+                                .wait_timeout(st, interval)
+                                .unwrap_or_else(PoisonError::into_inner);
+                            st = guard;
+                            if st.stopped {
+                                return;
+                            }
+                            drop(st); // sweep takes map/slot locks: never under `lock`
                             sweep(&inner2);
-                            stopped = lock_ignore_poison(lock);
+                            st = lock_ignore_poison(lock);
+                            // loop: if the sweep (or closes) emptied the
+                            // map, the condition above re-parks us
                         }
                     })
                     .expect("spawn session sweeper"),
@@ -166,7 +233,7 @@ impl SessionRegistry {
         } else {
             None
         };
-        SessionRegistry { inner, stop, sweeper }
+        SessionRegistry { inner, sweeper }
     }
 
     /// Open a session; returns its token.  At capacity an eviction sweep
@@ -188,7 +255,7 @@ impl SessionRegistry {
     }
 
     fn insert_session(&self, mut map: MutexGuard<'_, HashMap<u64, Arc<Slot>>>) -> u64 {
-        let sid = self.inner.next_sid.fetch_add(1, Ordering::Relaxed);
+        let sid = self.inner.next_sid.fetch_add(self.inner.sid_stride, Ordering::Relaxed);
         map.insert(
             sid,
             Arc::new(Slot {
@@ -199,7 +266,14 @@ impl SessionRegistry {
                 }),
             }),
         );
+        // count the open BEFORE the sid becomes visible (the map guard is
+        // still held): a racer guessing the striped sid and closing it
+        // immediately must find the +1 already applied, or its -1 would
+        // underflow.  Taking the wake mutex under the map lock is safe —
+        // the sweeper never takes the map lock while holding it.
         Metrics::inc(&self.inner.metrics.open_sessions);
+        self.inner.shift_open(1);
+        drop(map);
         sid
     }
 
@@ -264,6 +338,7 @@ impl SessionRegistry {
         let slot = lock_ignore_poison(&self.inner.sessions)
             .remove(&sid)
             .ok_or(SessionError::UnknownSession)?;
+        self.inner.shift_open(-1); // sweeper re-parks once the map empties
         let mut st = lock_ignore_poison(&slot.state);
         st.evicted = true; // a racer still holding the Arc sees a tombstone
         let m = &self.inner.metrics;
@@ -277,6 +352,17 @@ impl SessionRegistry {
         lock_ignore_poison(&self.inner.sessions).len()
     }
 
+    /// This registry's open-session cap (an engine shard's slice of the
+    /// global `max_sessions`).
+    pub fn max_sessions(&self) -> usize {
+        self.inner.cfg.max_sessions
+    }
+
+    /// The (possibly clamped) merge threshold sessions are built with.
+    pub fn merge_threshold(&self) -> usize {
+        self.inner.cfg.merge_threshold
+    }
+
     /// Run one eviction sweep synchronously (tests; the sweeper thread
     /// calls the same routine on its interval).
     pub fn sweep_now(&self) {
@@ -287,8 +373,8 @@ impl SessionRegistry {
 impl Drop for SessionRegistry {
     fn drop(&mut self) {
         {
-            let (lock, cv) = &*self.stop;
-            *lock_ignore_poison(lock) = true;
+            let (lock, cv) = &*self.inner.wake;
+            lock_ignore_poison(lock).stopped = true;
             cv.notify_all();
         }
         if let Some(h) = self.sweeper.take() {
@@ -347,6 +433,7 @@ fn sweep(inner: &Inner) {
         if map.get(&sid).is_some_and(|s| Arc::ptr_eq(s, &slot)) {
             map.remove(&sid);
             drop(map);
+            inner.shift_open(-1);
             Metrics::sub(&inner.metrics.open_sessions, 1);
             Metrics::sub(&inner.metrics.session_pending_points, pending);
             Metrics::inc(&inner.metrics.session_evictions);
@@ -433,6 +520,50 @@ mod tests {
         assert!(metrics.session_merge_latency.count() == 1);
         reg.close(sid).unwrap();
         assert_eq!(metrics.open_sessions.load(Ordering::Relaxed), 0);
+    }
+
+    /// Striped allocation (engine shard 2 of 4): sids 3, 7, 11, … — every
+    /// one routes back to this shard under `(sid - 1) % 4 == 2`.
+    #[test]
+    fn striped_sids_stay_on_their_residue_class() {
+        let reg = SessionRegistry::new_striped(
+            StreamConfig { idle_ttl_ms: 0, ..Default::default() },
+            Arc::new(Metrics::default()),
+            3,
+            4,
+        );
+        let sids: Vec<u64> = (0..5).map(|_| reg.open().unwrap()).collect();
+        assert_eq!(sids, vec![3, 7, 11, 15, 19]);
+        for sid in sids {
+            assert_eq!((sid - 1) % 4, 2);
+        }
+    }
+
+    /// The parked-sweeper satellite: the sweeper thread itself (not a
+    /// manual `sweep_now`) must evict an idle session after the first
+    /// `SOPEN` unparks it, and a park → unpark → evict → re-park → unpark
+    /// cycle must keep working (the second open lands after the map
+    /// emptied and the sweeper went back to its no-timeout wait).
+    #[test]
+    fn sweeper_thread_unparks_on_first_open_and_reparks_when_empty() {
+        let reg = registry(StreamConfig { idle_ttl_ms: 30, ..Default::default() });
+        let svc = SerialService;
+        let wait_evicted = |reg: &SessionRegistry| {
+            let t0 = Instant::now();
+            while reg.open_sessions() != 0 {
+                assert!(
+                    t0.elapsed() < Duration::from_secs(5),
+                    "sweeper never evicted the idle session"
+                );
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        };
+        let sid = reg.open().unwrap();
+        reg.add(sid, &[Point::new(0.5, 0.5)], &svc).unwrap();
+        wait_evicted(&reg); // round 1: the open unparked the sweeper
+        let sid2 = reg.open().unwrap();
+        assert_ne!(sid, sid2);
+        wait_evicted(&reg); // round 2: re-park then re-unpark still works
     }
 
     /// The satellite bugfix: an eviction sweep must never tear a session

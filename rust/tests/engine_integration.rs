@@ -1,0 +1,192 @@
+//! Engine-level acceptance gates: a sharded engine must be
+//! indistinguishable from a 1-shard engine on results (bit-identical
+//! hulls for one-shots AND sessions under randomized schedules), exact on
+//! accounting (global `inserted == absorbed + pending + hull_points`),
+//! and strictly sid-affine (a session's traffic never touches another
+//! shard's registry).
+//!
+//! Reproduce any property failure with WAGENER_PROP_SEED=<seed>.
+
+use std::sync::Arc;
+
+use wagener_hull::coordinator::{BackendKind, CoordinatorConfig};
+use wagener_hull::engine::{Engine, EngineConfig};
+use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::geometry::point::{sort_by_x, Point};
+use wagener_hull::prop_assert;
+use wagener_hull::stream::StreamConfig;
+use wagener_hull::util::property::check;
+use wagener_hull::util::rng::Rng;
+
+fn engine(shards: usize, merge_threshold: usize) -> Arc<Engine> {
+    Arc::new(
+        Engine::start(EngineConfig {
+            shards,
+            coordinator: CoordinatorConfig {
+                backend: BackendKind::Native,
+                workers: 1, // 4 shards x 1 worker: cheap and deterministic
+                ..Default::default()
+            },
+            stream: StreamConfig { merge_threshold, idle_ttl_ms: 0, ..Default::default() },
+        })
+        .unwrap(),
+    )
+}
+
+fn unique_vertices(upper: &[Point], lower: &[Point]) -> usize {
+    let mut all: Vec<Point> = upper.iter().chain(lower.iter()).copied().collect();
+    sort_by_x(&mut all);
+    all.dedup();
+    all.len()
+}
+
+/// THE shard-parity gate: one randomized schedule — interleaved one-shot
+/// requests and session lifecycles over every generator distribution,
+/// with duplicate re-feeds and random merge thresholds — replayed through
+/// a 1-shard and a 4-shard engine, must produce bit-identical hulls,
+/// epochs and absorbed/pending ledgers at every step, and the global
+/// accounting invariant must be exact on both engines' merged metrics.
+#[test]
+fn prop_shard_parity_one_vs_four() {
+    check("engine-shard-parity-1v4", 12, |rng: &mut Rng| {
+        let threshold = rng.range_usize(1, 300);
+        let e1 = engine(1, threshold);
+        let e4 = engine(4, threshold);
+
+        // one session per distribution in each engine; k-th opened here
+        // corresponds to k-th opened there (sids differ: striping)
+        let n_sessions = rng.range_usize(2, 6);
+        let sids1: Vec<u64> = (0..n_sessions).map(|_| e1.session_open().unwrap()).collect();
+        let sids4: Vec<u64> = (0..n_sessions).map(|_| e4.session_open().unwrap()).collect();
+        let mut fed: Vec<Vec<Point>> = vec![Vec::new(); n_sessions];
+
+        let steps = rng.range_usize(10, 30);
+        for _ in 0..steps {
+            let dist = Distribution::ALL[rng.range_usize(0, Distribution::ALL.len())];
+            if rng.chance(0.35) {
+                // interleaved one-shot: must be bit-identical across
+                // engines no matter which shard the router picked
+                let pts = generate(dist, rng.range_usize(1, 400), rng.next_u64());
+                let a = e1.compute(pts.clone()).map_err(|e| e.to_string())?;
+                let b = e4.compute(pts).map_err(|e| e.to_string())?;
+                prop_assert!(a.upper == b.upper, "one-shot upper diverged");
+                prop_assert!(a.lower == b.lower, "one-shot lower diverged");
+            } else {
+                let k = rng.range_usize(0, n_sessions);
+                let chunk = if rng.chance(0.25) && !fed[k].is_empty() {
+                    // duplicate re-feed: absorbed on both engines alike
+                    let from = rng.range_usize(0, fed[k].len());
+                    fed[k][from..].iter().copied().take(30).collect()
+                } else {
+                    generate(dist, rng.range_usize(1, 250), rng.next_u64())
+                };
+                let a = e1.session_add(sids1[k], &chunk).map_err(|e| e.to_string())?;
+                let b = e4.session_add(sids4[k], &chunk).map_err(|e| e.to_string())?;
+                prop_assert!(a == b, "session {k}: add outcome diverged: {a:?} vs {b:?}");
+                fed[k].extend(chunk);
+            }
+        }
+
+        // quiesce: flush every session and compare the authoritative hulls
+        let mut hull_points = [0usize; 2];
+        for k in 0..n_sessions {
+            if fed[k].is_empty() {
+                continue; // nothing inserted: SHULL on an empty session
+                          // returns empty chains on both engines alike
+            }
+            let a = e1.session_hull(sids1[k]).map_err(|e| e.to_string())?;
+            let b = e4.session_hull(sids4[k]).map_err(|e| e.to_string())?;
+            prop_assert!(a.epoch == b.epoch, "session {k}: epoch diverged");
+            prop_assert!(a.upper == b.upper, "session {k}: upper diverged");
+            prop_assert!(a.lower == b.lower, "session {k}: lower diverged");
+            hull_points[0] += unique_vertices(&a.upper, &a.lower);
+            hull_points[1] += unique_vertices(&b.upper, &b.lower);
+        }
+
+        // exact global accounting on the MERGED metrics of each engine:
+        // every point ever inserted is absorbed, pending, or a hull vertex
+        let total_inserted: usize = fed.iter().map(Vec::len).sum();
+        for (which, eng) in [(0usize, &e1), (1, &e4)] {
+            let m = eng.snapshot().0;
+            let absorbed = m.get("absorbed_points_total").unwrap().as_usize().unwrap();
+            let pending = m.get("pending_points_total").unwrap().as_usize().unwrap();
+            prop_assert!(pending == 0, "engine {which}: SHULL flushed everything");
+            prop_assert!(
+                absorbed + pending + hull_points[which] == total_inserted,
+                "engine {which}: absorbed({absorbed}) + pending({pending}) + \
+                 hull({}) != inserted({total_inserted})",
+                hull_points[which]
+            );
+            prop_assert!(
+                m.get("open_sessions").unwrap().as_usize() == Some(n_sessions),
+                "engine {which}: open_sessions gauge"
+            );
+        }
+        for k in 0..n_sessions {
+            e1.session_close(sids1[k]).map_err(|e| e.to_string())?;
+            e4.session_close(sids4[k]).map_err(|e| e.to_string())?;
+        }
+        Ok(())
+    });
+}
+
+/// Sid-affinity: every `SADD` for a sid lands on the shard that allocated
+/// it — the other three shards' registries and session gauges never move.
+#[test]
+fn sadds_for_one_sid_never_touch_another_shards_registry() {
+    let e = engine(4, 1_000_000); // huge threshold: everything pends
+    let sid = e.session_open().unwrap();
+    let owner = ((sid - 1) % 4) as usize;
+    let pts = generate(Distribution::Circle, 300, 9);
+    for chunk in pts.chunks(50) {
+        e.session_add(sid, chunk).unwrap();
+    }
+    for i in 0..4 {
+        let frame = e.shard_coordinator(i).metrics.frame();
+        if i == owner {
+            assert_eq!(e.shard_registry(i).open_sessions(), 1);
+            assert_eq!(frame.open_sessions, 1);
+            assert!(frame.session_pending_points > 0, "circle points all pend");
+        } else {
+            assert_eq!(e.shard_registry(i).open_sessions(), 0, "shard {i} touched");
+            assert_eq!(frame.open_sessions, 0, "shard {i} gauge moved");
+            assert_eq!(frame.session_pending_points, 0, "shard {i} pending moved");
+            assert_eq!(frame.session_absorbed_points, 0, "shard {i} absorbed moved");
+        }
+    }
+    // ...and the merged aggregate still sees the whole session
+    let m = e.snapshot().0;
+    assert_eq!(m.get("open_sessions").unwrap().as_usize(), Some(1));
+    assert_eq!(m.get("pending_points_total").unwrap().as_usize(), Some(300));
+    e.session_close(sid).unwrap();
+}
+
+/// Unknown sids answer `unknown-session` from whatever shard the residue
+/// routes to — exactly the standalone-registry behaviour.
+#[test]
+fn unknown_sids_answer_unknown_session_on_every_residue() {
+    let e = engine(4, 64);
+    for sid in [0u64, 1, 2, 3, 4, 999, u64::MAX] {
+        let err = e.session_add(sid, &[Point::new(0.5, 0.5)]).unwrap_err();
+        assert_eq!(err.to_string(), "unknown-session", "sid {sid}");
+    }
+}
+
+/// A closed session's sid routes to the same shard forever: close, then
+/// verify the tombstoned sid is unknown while a new session (necessarily
+/// a different sid) works.
+#[test]
+fn closed_sids_stay_unknown_new_sessions_route_fresh() {
+    let e = engine(4, 64);
+    let sid = e.session_open().unwrap();
+    e.session_add(sid, &[Point::new(0.25, 0.5)]).unwrap();
+    e.session_close(sid).unwrap();
+    assert_eq!(
+        e.session_add(sid, &[Point::new(0.5, 0.5)]).unwrap_err().to_string(),
+        "unknown-session"
+    );
+    let sid2 = e.session_open().unwrap();
+    assert_ne!(sid, sid2);
+    e.session_add(sid2, &[Point::new(0.5, 0.25)]).unwrap();
+    e.session_close(sid2).unwrap();
+}

@@ -1,26 +1,42 @@
-//! TCP server end-to-end: real sockets, real coordinator, protocol checks.
+//! TCP server end-to-end: real sockets, real engine, protocol checks.
+//!
+//! The servers here are built through the [`Engine`] facade with the
+//! shard count taken from `ENGINE_SHARDS` (default 1, the
+//! pre-engine-identical configuration); tier1 re-runs this whole suite
+//! with `ENGINE_SHARDS=4` so the sharded path is exercised end-to-end in
+//! CI.  Every assertion is shard-count independent by design.
 
 use std::sync::Arc;
 
 use wagener_hull::coordinator::{BackendKind, BatcherConfig, Coordinator, CoordinatorConfig};
+use wagener_hull::engine::{Engine, EngineConfig};
 use wagener_hull::geometry::generators::{generate, Distribution};
 use wagener_hull::geometry::point::Point;
 use wagener_hull::serial::monotone_chain;
-use wagener_hull::server::{serve, serve_with_sessions, HullClient, ServerConfig};
-use wagener_hull::stream::{SessionRegistry, StreamConfig};
+use wagener_hull::server::{serve, serve_engine, HullClient, ServerConfig};
+use wagener_hull::stream::StreamConfig;
 
-fn start_server(kind: BackendKind) -> (Arc<Coordinator>, wagener_hull::server::ServerHandle) {
-    let coord = Arc::new(
-        Coordinator::start(CoordinatorConfig {
-            backend: kind,
-            batcher: BatcherConfig { max_batch: 4, flush_us: 300, queue_cap: 256 },
-            self_check: true,
-            ..Default::default()
+fn start_engine(kind: BackendKind, stream_cfg: StreamConfig) -> Arc<Engine> {
+    Arc::new(
+        Engine::start(EngineConfig {
+            shards: EngineConfig::shards_from_env(1),
+            coordinator: CoordinatorConfig {
+                backend: kind,
+                batcher: BatcherConfig { max_batch: 4, flush_us: 300, queue_cap: 256 },
+                self_check: true,
+                ..Default::default()
+            },
+            stream: stream_cfg,
         })
         .unwrap(),
-    );
-    let handle = serve(coord.clone(), &ServerConfig { addr: "127.0.0.1:0".into() }).unwrap();
-    (coord, handle)
+    )
+}
+
+fn start_server(kind: BackendKind) -> (Arc<Engine>, wagener_hull::server::ServerHandle) {
+    let engine = start_engine(kind, StreamConfig::default());
+    let handle =
+        serve_engine(engine.clone(), &ServerConfig { addr: "127.0.0.1:0".into() }).unwrap();
+    (engine, handle)
 }
 
 #[test]
@@ -160,26 +176,46 @@ fn connection_gauge_tracks_active_connections() {
     handle.stop();
 }
 
-// ---------------------------------------------------- streaming sessions
-
-fn start_session_server(
-    kind: BackendKind,
-    stream_cfg: StreamConfig,
-) -> (Arc<Coordinator>, wagener_hull::server::ServerHandle) {
+/// The deprecated `serve(coordinator, ..)` wrapper must keep serving
+/// exactly as before: it wraps the coordinator as a 1-shard engine, and
+/// sessions + one-shots + STATS all work over the same wire bytes.
+#[test]
+fn deprecated_serve_wrapper_is_a_one_shard_engine() {
     let coord = Arc::new(
         Coordinator::start(CoordinatorConfig {
-            backend: kind,
-            batcher: BatcherConfig { max_batch: 4, flush_us: 300, queue_cap: 256 },
+            backend: BackendKind::Serial,
             self_check: true,
             ..Default::default()
         })
         .unwrap(),
     );
-    let sessions = Arc::new(SessionRegistry::new(stream_cfg, coord.metrics.clone()));
+    let handle = serve(coord.clone(), &ServerConfig { addr: "127.0.0.1:0".into() }).unwrap();
+    assert_eq!(handle.engine().shard_count(), 1);
+    let mut client = HullClient::connect(handle.local_addr).unwrap();
+    let pts = generate(Distribution::Circle, 90, 5);
+    let hull = client.hull(&pts).unwrap();
+    let (u, _) = monotone_chain::full_hull(&pts);
+    assert_eq!(hull.upper, u);
+    let sid = client.session_open().unwrap();
+    assert_eq!(sid, 1, "stride-1 sid allocation, exactly the old registry");
+    client.session_close(sid).unwrap();
+    let stats = client.stats().unwrap();
+    let json = wagener_hull::util::json::parse(&stats).unwrap();
+    assert_eq!(json.get("shards").unwrap().as_usize(), Some(1));
+    assert_eq!(json.get("per_shard").unwrap().as_arr().unwrap().len(), 1);
+    handle.stop();
+}
+
+// ---------------------------------------------------- streaming sessions
+
+fn start_session_server(
+    kind: BackendKind,
+    stream_cfg: StreamConfig,
+) -> (Arc<Engine>, wagener_hull::server::ServerHandle) {
+    let engine = start_engine(kind, stream_cfg);
     let handle =
-        serve_with_sessions(coord.clone(), sessions, &ServerConfig { addr: "127.0.0.1:0".into() })
-            .unwrap();
-    (coord, handle)
+        serve_engine(engine.clone(), &ServerConfig { addr: "127.0.0.1:0".into() }).unwrap();
+    (engine, handle)
 }
 
 #[test]
@@ -281,7 +317,7 @@ fn idle_sessions_evicted_over_tcp() {
     let sid = client.session_open().unwrap();
     client.session_add(sid, &[Point::new(0.5, 0.5)]).unwrap();
     std::thread::sleep(std::time::Duration::from_millis(80));
-    handle.sessions().sweep_now();
+    handle.engine().sweep_now(); // sweeps every shard (the sid's included)
     let err = client.session_add(sid, &[Point::new(0.2, 0.2)]).unwrap_err();
     assert!(err.to_string().contains("unknown-session"), "{err}");
     handle.stop();

@@ -5,14 +5,17 @@
 #
 # Gates: `cargo fmt --check` and `cargo clippy -D warnings` (when the
 # components are installed), then `cargo build --release && cargo test -q`
-# (the ROADMAP tier-1 verify), then fast smoke runs of bench_runtime,
-# bench_coordinator and bench_stream with WAGENER_BENCH_JSON pointed at
-# BENCH_pram.json / BENCH_coordinator.json / BENCH_stream.json, so every
-# PR leaves machine-readable perf records (PRAM tier timings, router/
-# worker-pool throughput, streaming-session schedules) for the next PR to
-# compare against.  Every promised BENCH_*.json is then ASSERTED to hold
-# at least one report (a bench that skips a backend must still emit its
-# JSON trailer — an empty trajectory file means the harness regressed).
+# (the ROADMAP tier-1 verify), then the server integration suite once
+# more with ENGINE_SHARDS=4 (the sharded engine path on real sockets),
+# then fast smoke runs of bench_runtime, bench_coordinator, bench_stream
+# and bench_engine with WAGENER_BENCH_JSON pointed at BENCH_pram.json /
+# BENCH_coordinator.json / BENCH_stream.json / BENCH_engine.json, so
+# every PR leaves machine-readable perf records (PRAM tier timings,
+# router/worker-pool throughput, streaming-session schedules, shard
+# scaling) for the next PR to compare against.  Every promised
+# BENCH_*.json is then ASSERTED to hold at least one report (a bench that
+# skips a backend must still emit its JSON trailer — an empty trajectory
+# file means the harness regressed).
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
@@ -43,6 +46,13 @@ cargo build --release
 echo "== tier1: cargo test -q =="
 cargo test -q
 
+# The server integration suite runs once more against a 4-shard engine:
+# the sharded routing/registry/metrics paths must hold on real sockets in
+# CI, not just in unit tests (shard-parity itself lives in
+# engine_integration, which the main test run covers).
+echo "== tier1: server integration suite @ ENGINE_SHARDS=4 =="
+ENGINE_SHARDS=4 cargo test -q --test server_integration
+
 # A promised bench trajectory that ends up empty is a silent regression
 # (a skipping backend must still write its report); fail loudly instead.
 assert_bench_written() {
@@ -70,5 +80,12 @@ WAGENER_BENCH_FAST=1 WAGENER_BENCH_JSON="$ROOT/BENCH_stream.json" \
     cargo bench --bench bench_stream
 assert_bench_written "$ROOT/BENCH_stream.json"
 
+echo "== tier1: smoke bench -> BENCH_engine.json =="
+: > "$ROOT/BENCH_engine.json"
+WAGENER_BENCH_FAST=1 WAGENER_BENCH_JSON="$ROOT/BENCH_engine.json" \
+    cargo bench --bench bench_engine
+assert_bench_written "$ROOT/BENCH_engine.json"
+
 echo "tier1 OK — bench rows:"
-cat "$ROOT/BENCH_pram.json" "$ROOT/BENCH_coordinator.json" "$ROOT/BENCH_stream.json"
+cat "$ROOT/BENCH_pram.json" "$ROOT/BENCH_coordinator.json" "$ROOT/BENCH_stream.json" \
+    "$ROOT/BENCH_engine.json"
