@@ -43,7 +43,8 @@ fn main() {
         })
         .expect("coordinator start (run `make artifacts` for pjrt)"),
     );
-    let handle = serve(coord.clone(), &ServerConfig { addr: "127.0.0.1:0".into() }).unwrap();
+    let cfg = ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() };
+    let handle = serve(coord.clone(), &cfg).unwrap();
     let addr = handle.local_addr;
     println!("server on {addr}");
 

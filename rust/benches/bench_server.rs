@@ -1,0 +1,201 @@
+//! E10 — connection cores and wire formats: the readiness-driven event
+//! loop vs the thread-per-connection shim, and text vs binary framing.
+//!
+//! Two reports:
+//!   * E10: request round-trips through a server holding N idle
+//!     connections while M adder threads pound streaming sessions —
+//!     the threaded baseline pays a parked thread per idle connection,
+//!     the event loop (io_threads = 1/2/4) multiplexes them;
+//!   * E10b: frame-decode and encode micro rows, text vs binary, where
+//!     the packed little-endian format skips all float parsing.
+//!
+//! Run: `cargo bench --bench bench_server` (tier1.sh feeds
+//! BENCH_server.json via WAGENER_BENCH_JSON; WAGENER_BENCH_FAST=1
+//! shrinks the fleet and the sampling budget).
+
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use wagener_hull::benchkit::{black_box, Bencher, Report};
+use wagener_hull::coordinator::{BackendKind, BatcherConfig, CoordinatorConfig};
+use wagener_hull::engine::{Engine, EngineConfig};
+use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::server::{
+    frame, proto, serve_engine, serve_engine_threaded, HullClient, Request, Response,
+    ServerConfig, ServerHandle, WireProto,
+};
+use wagener_hull::stream::StreamConfig;
+
+fn start_engine() -> Arc<Engine> {
+    Arc::new(
+        Engine::start(EngineConfig {
+            shards: 1,
+            coordinator: CoordinatorConfig {
+                backend: BackendKind::Serial,
+                batcher: BatcherConfig { max_batch: 4, flush_us: 200, queue_cap: 1024 },
+                self_check: false,
+                ..Default::default()
+            },
+            stream: StreamConfig::default(),
+        })
+        .unwrap(),
+    )
+}
+
+fn main() {
+    let b = Bencher::default();
+    let fast = std::env::var("WAGENER_BENCH_FAST").is_ok();
+    let idle_target: usize = if fast { 64 } else { 1024 };
+    let adders: usize = if fast { 2 } else { 4 };
+    // idle fleet + adders + bench clients all live in this process: make
+    // sure the fd budget holds both socket ends, or shrink the fleet
+    #[cfg(unix)]
+    let idle_target = {
+        let got = wagener_hull::server::raise_nofile_limit((idle_target as u64) * 2 + 512);
+        idle_target.min((got.saturating_sub(512) / 2) as usize)
+    };
+
+    let mut report = Report::new(&format!(
+        "E10: connection cores — {idle_target} idle conns + {adders} session adders (serial backend)"
+    ));
+
+    // (label, threaded-shim?, io_threads)
+    let cores: &[(&str, bool, usize)] = &[
+        ("threaded", true, 0),
+        ("event_io1", false, 1),
+        ("event_io2", false, 2),
+        ("event_io4", false, 4),
+    ];
+    for &(label, threaded, io_threads) in cores {
+        let cfg = ServerConfig { addr: "127.0.0.1:0".into(), io_threads };
+        let handle: ServerHandle = if threaded {
+            serve_engine_threaded(start_engine(), &cfg).unwrap()
+        } else {
+            serve_engine(start_engine(), &cfg).unwrap()
+        };
+        let addr = handle.local_addr;
+
+        // park the idle fleet (the threaded shim pays a thread each)
+        let mut idle: Vec<TcpStream> = Vec::with_capacity(idle_target);
+        for _ in 0..idle_target {
+            match TcpStream::connect(addr) {
+                Ok(s) => idle.push(s),
+                Err(_) => break,
+            }
+        }
+
+        // M adder threads keep streaming sessions hot in the background
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut adder_threads = Vec::with_capacity(adders);
+        for t in 0..adders {
+            let stop = stop.clone();
+            adder_threads.push(std::thread::spawn(move || {
+                let mut c = HullClient::connect_with(addr, WireProto::Binary).unwrap();
+                c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+                let sid = c.session_open().unwrap();
+                let pts = generate(Distribution::Disk, 64, 900 + t as u64);
+                while !stop.load(Ordering::Relaxed) {
+                    if c.session_add(sid, &pts).is_err() {
+                        break;
+                    }
+                }
+                let _ = c.session_close(sid);
+            }));
+        }
+
+        // measured client: round-trip latency through the crowd
+        let mut ct = HullClient::connect_with(addr, WireProto::Text).unwrap();
+        let mut cb = HullClient::connect_with(addr, WireProto::Binary).unwrap();
+        ct.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        cb.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let pts = generate(Distribution::Disk, 64, 42);
+
+        report.add(b.run(&format!("server/{label}/ping_rtt"), || ct.ping().unwrap()));
+        report.add(b.run(&format!("server/{label}/hull64_text_rtt"), || {
+            ct.hull(&pts).unwrap().upper.len()
+        }));
+        report.add(
+            b.run(&format!("server/{label}/hull64_binary_rtt"), || {
+                cb.hull(&pts).unwrap().upper.len()
+            }),
+        );
+
+        // pipelined binary pings: per-frame cost once syscalls amortize
+        let mut batch = Vec::new();
+        for _ in 0..64 {
+            frame::encode_request(&mut batch, &Request::Ping);
+        }
+        let pipe = TcpStream::connect(addr).unwrap();
+        pipe.set_nodelay(true).unwrap();
+        pipe.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut pipe_reader = BufReader::new(pipe.try_clone().unwrap());
+        let mut pipe_writer = pipe;
+        report.add(b.run_batched(&format!("server/{label}/pipelined_ping_x64"), 64, || {
+            pipe_writer.write_all(&batch).unwrap();
+            for _ in 0..64 {
+                frame::read_response(&mut pipe_reader).unwrap();
+            }
+        }));
+
+        report.note(format!(
+            "{label}: gauge held {} connections during the run",
+            handle.active_connections()
+        ));
+
+        stop.store(true, Ordering::SeqCst);
+        for t in adder_threads {
+            let _ = t.join();
+        }
+        drop((ct, cb, pipe_writer, pipe_reader, idle));
+        handle.stop();
+    }
+    report.finish();
+
+    // ---------------------------------------------- E10b: frame micro
+    let mut report = Report::new("E10b: frame decode/encode — text vs binary");
+    for n in [16usize, 1024] {
+        let req = Request::Hull { id: 1, points: generate(Distribution::Disk, n, 7) };
+        let mut bin = Vec::new();
+        frame::encode_request(&mut bin, &req);
+        let mut txt = Vec::new();
+        proto::write_request(&mut txt, &req).unwrap();
+        report.add(b.run(&format!("decode/text_hull_n{n}"), || {
+            match proto::decode_text_request(black_box(&txt)) {
+                Ok(proto::Decoded::Frame(r, _)) => r,
+                other => panic!("{other:?}"),
+            }
+        }));
+        report.add(b.run(&format!("decode/binary_hull_n{n}"), || {
+            match frame::decode_request(black_box(&bin)) {
+                Ok(proto::Decoded::Frame(r, _)) => r,
+                other => panic!("{other:?}"),
+            }
+        }));
+        report.note(format!("n={n}: {} text bytes vs {} binary bytes", txt.len(), bin.len()));
+    }
+    {
+        let pts = generate(Distribution::Circle, 256, 9);
+        let resp = Response::Hull {
+            id: 1,
+            upper: pts[..128].to_vec(),
+            lower: pts[128..].to_vec(),
+            backend: "serial".into(),
+            queue_ns: 1234,
+            exec_ns: 5678,
+        };
+        report.add(b.run("encode/text_hull_resp_k256", || {
+            let mut v = Vec::new();
+            proto::write_response(&mut v, &resp).unwrap();
+            v.len()
+        }));
+        report.add(b.run("encode/binary_hull_resp_k256", || {
+            let mut v = Vec::new();
+            frame::encode_response(&mut v, &resp);
+            v.len()
+        }));
+    }
+    report.finish();
+}

@@ -3,6 +3,7 @@
 //! ```toml
 //! [server]
 //! addr = "127.0.0.1:7878"
+//! io_threads = 0             # event-loop threads; 0 = auto (cores/4, 1..=4)
 //!
 //! [backend]
 //! kind = "pjrt"              # pjrt | native | serial | pram
@@ -76,6 +77,9 @@ impl Config {
                             .as_str()
                             .ok_or_else(|| anyhow!("{path}: want string"))?
                             .to_string();
+                    }
+                    "server.io_threads" => {
+                        cfg.server.io_threads = as_usize(value, &path)?;
                     }
                     "backend.kind" => {
                         let s = value.as_str().ok_or_else(|| anyhow!("{path}: want string"))?;
@@ -158,6 +162,7 @@ mod tests {
             r#"
 [server]
 addr = "0.0.0.0:9000"
+io_threads = 2
 [backend]
 kind = "serial"
 artifacts_dir = "/tmp/arts"
@@ -180,6 +185,7 @@ idle_ttl_ms = 2500
         )
         .unwrap();
         assert_eq!(cfg.server.addr, "0.0.0.0:9000");
+        assert_eq!(cfg.server.io_threads, 2);
         assert_eq!(cfg.coordinator.backend, BackendKind::Serial);
         assert_eq!(cfg.coordinator.artifacts_dir, PathBuf::from("/tmp/arts"));
         assert!(cfg.coordinator.self_check);
@@ -201,6 +207,7 @@ idle_ttl_ms = 2500
         assert_eq!(cfg.coordinator.backend, BackendKind::Native);
         assert_eq!(cfg.coordinator.exec_mode, ExecMode::Fast);
         assert_eq!(cfg.server.addr, "127.0.0.1:7878");
+        assert_eq!(cfg.server.io_threads, 0); // 0 = auto-sized event loop pool
         assert_eq!(cfg.coordinator.workers, 0); // 0 = available parallelism
         assert!(cfg.coordinator.prefilter);
         assert_eq!(cfg.engine.shards, 1); // sharding is opt-in (0 = auto)
@@ -212,6 +219,8 @@ idle_ttl_ms = 2500
     #[test]
     fn rejects_unknown_keys_and_bad_types() {
         assert!(Config::from_toml("[server]\nport = 1").is_err());
+        assert!(Config::from_toml("[server]\nio_threads = -1").is_err());
+        assert!(Config::from_toml("[server]\nio_threads = \"all\"").is_err());
         assert!(Config::from_toml("[backend]\nkind = \"cuda\"").is_err());
         assert!(Config::from_toml("[backend]\nexec_mode = \"warp\"").is_err());
         assert!(Config::from_toml("[batcher]\nmax_batch = \"lots\"").is_err());

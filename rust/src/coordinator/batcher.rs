@@ -10,7 +10,7 @@ use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use super::request::{HullResponse, Prepared, RequestError};
+use super::request::{HullReply, Prepared};
 
 /// Batching policy knobs (config file: `[batcher]`).
 #[derive(Clone, Copy, Debug)]
@@ -29,11 +29,11 @@ impl Default for BatcherConfig {
     }
 }
 
-/// A queued request with its reply channel.
+/// A queued request with its reply destination.
 pub(crate) struct Item {
     pub prepared: Prepared,
     pub enqueued: Instant,
-    pub reply: mpsc::Sender<Result<HullResponse, RequestError>>,
+    pub reply: HullReply,
 }
 
 /// A flushed batch (all items share a size class).
@@ -112,6 +112,7 @@ pub(crate) fn run_batcher(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::{HullResponse, RequestError};
     use crate::geometry::point::Point;
 
     fn item(m: usize, reply: mpsc::Sender<Result<HullResponse, RequestError>>) -> Item {
@@ -125,7 +126,7 @@ mod tests {
                 filtered: 0,
             },
             enqueued: Instant::now(),
-            reply,
+            reply: HullReply::Channel(reply),
         }
     }
 

@@ -331,6 +331,86 @@ impl MetricsFrame {
     }
 }
 
+/// Gauges owned by one I/O event-loop thread (written only from that
+/// thread, read by STATS).
+#[derive(Debug, Default)]
+pub struct IoLoopMetrics {
+    /// connections currently registered with this loop (gauge).
+    pub open_connections: AtomicU64,
+    /// bytes read off sockets by this loop, lifetime.
+    pub bytes_in: AtomicU64,
+    /// bytes written to sockets by this loop, lifetime.
+    pub bytes_out: AtomicU64,
+}
+
+/// I/O-layer metrics for the event-loop server: shared counters plus one
+/// gauge block per loop thread, folded into STATS under the `io` key.
+#[derive(Debug)]
+pub struct IoMetrics {
+    /// connections accepted, lifetime.
+    pub accepted: AtomicU64,
+    /// complete text frames decoded.
+    pub frames_text: AtomicU64,
+    /// complete binary frames decoded.
+    pub frames_binary: AtomicU64,
+    /// times a connection's reads were paused on a full write buffer.
+    pub backpressure_stalls: AtomicU64,
+    /// wall time spent decoding each complete frame.
+    pub decode_latency: Histogram,
+    pub loops: Vec<IoLoopMetrics>,
+}
+
+impl IoMetrics {
+    pub fn new(io_threads: usize) -> IoMetrics {
+        IoMetrics {
+            accepted: AtomicU64::new(0),
+            frames_text: AtomicU64::new(0),
+            frames_binary: AtomicU64::new(0),
+            backpressure_stalls: AtomicU64::new(0),
+            decode_latency: Histogram::default(),
+            loops: (0..io_threads).map(|_| IoLoopMetrics::default()).collect(),
+        }
+    }
+
+    /// Connections open across all loops right now.
+    pub fn open_connections(&self) -> u64 {
+        self.loops.iter().map(|l| l.open_connections.load(Ordering::Relaxed)).sum()
+    }
+
+    /// The `io` object of the STATS JSON.
+    pub fn to_json(&self) -> Json {
+        let g = |c: &AtomicU64| Json::Num(c.load(Ordering::Relaxed) as f64);
+        let per_loop: Vec<Json> = self
+            .loops
+            .iter()
+            .map(|l| {
+                Json::obj(vec![
+                    ("open_connections", g(&l.open_connections)),
+                    ("bytes_in", g(&l.bytes_in)),
+                    ("bytes_out", g(&l.bytes_out)),
+                ])
+            })
+            .collect();
+        let sum = |f: fn(&IoLoopMetrics) -> &AtomicU64| {
+            Json::Num(
+                self.loops.iter().map(|l| f(l).load(Ordering::Relaxed)).sum::<u64>() as f64,
+            )
+        };
+        Json::obj(vec![
+            ("io_threads", Json::Num(self.loops.len() as f64)),
+            ("accepted", g(&self.accepted)),
+            ("open_connections", sum(|l| &l.open_connections)),
+            ("bytes_in", sum(|l| &l.bytes_in)),
+            ("bytes_out", sum(|l| &l.bytes_out)),
+            ("frames_text", g(&self.frames_text)),
+            ("frames_binary", g(&self.frames_binary)),
+            ("backpressure_stalls", g(&self.backpressure_stalls)),
+            ("decode_latency", self.decode_latency.snap().to_json()),
+            ("per_loop", Json::Arr(per_loop)),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -461,6 +541,27 @@ mod tests {
         Metrics::add(&m.points_in, 41);
         m.queue_latency.record_ns(77);
         assert_eq!(m.frame().to_json().to_string(), m.snapshot().0.to_string());
+    }
+
+    #[test]
+    fn io_metrics_fold_per_loop_gauges() {
+        let io = IoMetrics::new(2);
+        Metrics::inc(&io.accepted);
+        Metrics::add(&io.loops[0].open_connections, 3);
+        Metrics::add(&io.loops[1].open_connections, 4);
+        Metrics::add(&io.loops[1].bytes_in, 100);
+        Metrics::inc(&io.frames_binary);
+        io.decode_latency.record_ns(500);
+        assert_eq!(io.open_connections(), 7);
+        let j = crate::util::json::parse(&io.to_json().to_string()).unwrap();
+        assert_eq!(j.get("io_threads").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("open_connections").unwrap().as_usize(), Some(7));
+        assert_eq!(j.get("bytes_in").unwrap().as_usize(), Some(100));
+        assert_eq!(j.get("frames_binary").unwrap().as_usize(), Some(1));
+        assert_eq!(
+            j.get("decode_latency").unwrap().get("count").unwrap().as_usize(),
+            Some(1)
+        );
     }
 
     #[test]

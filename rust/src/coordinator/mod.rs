@@ -19,6 +19,9 @@ pub mod router;
 
 pub use backend::{BackendKind, HullBackend};
 pub use batcher::BatcherConfig;
-pub use metrics::{Histogram, HistogramSnapshot, Metrics, MetricsFrame, MetricsSnapshot};
-pub use request::{HullRequest, HullResponse, RequestError};
+pub use metrics::{
+    Histogram, HistogramSnapshot, IoLoopMetrics, IoMetrics, Metrics, MetricsFrame,
+    MetricsSnapshot,
+};
+pub use request::{HullReply, HullRequest, HullResponse, RequestError};
 pub use router::{Coordinator, CoordinatorConfig};

@@ -22,6 +22,58 @@ pub struct HullResponse {
     pub exec_ns: u64,
 }
 
+/// Where a finished hull computation gets delivered.
+///
+/// `Channel` is the classic blocking path: the submitter parks on the
+/// receiver.  `Sink` is the non-blocking path for the event-loop server:
+/// the closure runs on whichever thread completes the request (the
+/// caller's for early rejections, an exec worker's otherwise), so ten
+/// thousand in-flight requests cost zero parked threads.
+pub enum HullReply {
+    Channel(std::sync::mpsc::Sender<Result<HullResponse, RequestError>>),
+    Sink(SinkReply),
+}
+
+impl HullReply {
+    /// Wrap a completion callback as a reply destination.
+    pub fn sink(f: impl FnOnce(Result<HullResponse, RequestError>) + Send + 'static) -> HullReply {
+        HullReply::Sink(SinkReply(Some(Box::new(f))))
+    }
+
+    /// Deliver the result, consuming the reply.  A hung-up channel
+    /// receiver is ignored, matching the old `let _ = tx.send(..)` sites.
+    pub fn send(self, result: Result<HullResponse, RequestError>) {
+        match self {
+            HullReply::Channel(tx) => {
+                let _ = tx.send(result);
+            }
+            HullReply::Sink(s) => s.call(result),
+        }
+    }
+}
+
+/// A callback reply that can never be lost: if the holder drops it
+/// without answering (e.g. the batcher discards queued items during
+/// shutdown), the callback still fires with `Shutdown` — the sink
+/// analogue of a dropped channel sender disconnecting its receiver.
+pub struct SinkReply(Option<Box<dyn FnOnce(Result<HullResponse, RequestError>) + Send>>);
+
+impl SinkReply {
+    fn call(mut self, result: Result<HullResponse, RequestError>) {
+        if let Some(f) = self.0.take() {
+            f(result);
+        }
+    }
+}
+
+impl Drop for SinkReply {
+    fn drop(&mut self) {
+        if let Some(f) = self.0.take() {
+            f(Err(RequestError::Shutdown));
+        }
+    }
+}
+
 /// Input rejection reasons.
 #[derive(Clone, Debug, PartialEq)]
 pub enum RequestError {

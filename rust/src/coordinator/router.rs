@@ -27,7 +27,7 @@ use std::time::Instant;
 use super::backend::{exact_full_hull, BackendKind};
 use super::batcher::{run_batcher, BatchMsg, BatcherConfig, Item};
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::request::{prepare, HullRequest, HullResponse, RequestError};
+use super::request::{prepare, HullReply, HullRequest, HullResponse, RequestError};
 use crate::geometry::hull_check::check_upper_hull;
 use crate::geometry::point::Point;
 use crate::pram::ExecMode;
@@ -173,7 +173,7 @@ fn run_exec_worker(
                     if cfg.self_check {
                         if let Err(e) = check_upper_hull(&item.prepared.points, &upper) {
                             Metrics::inc(&metrics.errors);
-                            let _ = item.reply.send(Err(RequestError::Backend(format!(
+                            item.reply.send(Err(RequestError::Backend(format!(
                                 "self-check failed: {e}"
                             ))));
                             continue;
@@ -183,7 +183,7 @@ fn run_exec_worker(
                     Metrics::add(&metrics.hull_points_out, (upper.len() + lower.len()) as u64);
                     metrics.e2e_latency.record(item.enqueued.elapsed());
                     metrics.queue_latency.record_ns(queue_ns);
-                    let _ = item.reply.send(Ok(HullResponse {
+                    item.reply.send(Ok(HullResponse {
                         id: item.prepared.id,
                         upper,
                         lower,
@@ -196,7 +196,7 @@ fn run_exec_worker(
             Err(e) => {
                 for item in items {
                     Metrics::inc(&metrics.errors);
-                    let _ = item.reply.send(Err(RequestError::Backend(e.clone())));
+                    item.reply.send(Err(RequestError::Backend(e.clone())));
                 }
             }
         }
@@ -311,6 +311,16 @@ impl Coordinator {
         req: HullRequest,
     ) -> mpsc::Receiver<Result<HullResponse, RequestError>> {
         let (reply_tx, reply_rx) = mpsc::channel();
+        self.submit_with(req, HullReply::Channel(reply_tx));
+        reply_rx
+    }
+
+    /// Submit with an arbitrary reply destination — the non-blocking
+    /// entry for the event-loop server.  A [`HullReply::Sink`] closure
+    /// runs on whichever thread finishes the request: this one for early
+    /// rejections and the degenerate fast path, an exec worker's after a
+    /// batched dispatch.
+    pub fn submit_with(&self, req: HullRequest, reply: HullReply) {
         Metrics::inc(&self.metrics.requests);
         Metrics::add(&self.metrics.points_in, req.points.len() as u64);
 
@@ -318,17 +328,17 @@ impl Coordinator {
             Ok(p) => p,
             Err(e) => {
                 Metrics::inc(&self.metrics.errors);
-                let _ = reply_tx.send(Err(e));
-                return reply_rx;
+                reply.send(Err(e));
+                return;
             }
         };
         if prepared.points.len() > self.max_points {
             Metrics::inc(&self.metrics.errors);
-            let _ = reply_tx.send(Err(RequestError::TooLarge {
+            reply.send(Err(RequestError::TooLarge {
                 points: prepared.points.len(),
                 max: self.max_points,
             }));
-            return reply_rx;
+            return;
         }
         // recorded only for requests that will actually be served, so the
         // gauge tracks real filter savings (not work thrown away by a
@@ -350,7 +360,7 @@ impl Coordinator {
             self.metrics.exec_latency.record_ns(exec_ns);
             self.metrics.queue_latency.record_ns(0);
             self.metrics.e2e_latency.record_ns(exec_ns);
-            let _ = reply_tx.send(Ok(HullResponse {
+            reply.send(Ok(HullResponse {
                 id: prepared.id,
                 upper,
                 lower,
@@ -358,19 +368,20 @@ impl Coordinator {
                 queue_ns: 0,
                 exec_ns,
             }));
-            return reply_rx;
+            return;
         }
 
-        let item = Item { prepared, enqueued: Instant::now(), reply: reply_tx.clone() };
-        if let Some(tx) = &self.submit_tx {
-            if tx.send(item).is_err() {
-                Metrics::inc(&self.metrics.errors);
-                let _ = reply_tx.send(Err(RequestError::Shutdown));
+        match &self.submit_tx {
+            Some(tx) => {
+                let item = Item { prepared, enqueued: Instant::now(), reply };
+                // a refused send hands the item (and its reply) back
+                if let Err(mpsc::SendError(item)) = tx.send(item) {
+                    Metrics::inc(&self.metrics.errors);
+                    item.reply.send(Err(RequestError::Shutdown));
+                }
             }
-        } else {
-            let _ = reply_tx.send(Err(RequestError::Shutdown));
+            None => reply.send(Err(RequestError::Shutdown)),
         }
-        reply_rx
     }
 
     /// Synchronous convenience wrapper.

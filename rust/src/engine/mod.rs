@@ -39,8 +39,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 
 use crate::coordinator::{
-    BackendKind, Coordinator, CoordinatorConfig, HullRequest, HullResponse, MetricsFrame,
-    MetricsSnapshot, RequestError,
+    BackendKind, Coordinator, CoordinatorConfig, HullReply, HullRequest, HullResponse,
+    IoMetrics, MetricsFrame, MetricsSnapshot, RequestError,
 };
 use crate::geometry::point::Point;
 use crate::stream::{
@@ -230,6 +230,22 @@ impl Engine {
         self.cheapest_shard().coordinator.submit(req)
     }
 
+    /// Submit a one-shot request with an explicit reply destination
+    /// (see [`Coordinator::submit_with`]).
+    pub fn submit_with(&self, req: HullRequest, reply: HullReply) {
+        self.cheapest_shard().coordinator.submit_with(req, reply);
+    }
+
+    /// Non-blocking submit for the event-loop server: `f` runs on
+    /// whichever thread completes the request — never parks the caller.
+    pub fn submit_into(
+        &self,
+        req: HullRequest,
+        f: impl FnOnce(Result<HullResponse, RequestError>) + Send + 'static,
+    ) {
+        self.submit_with(req, HullReply::sink(f));
+    }
+
     /// Synchronous one-shot convenience wrapper.
     pub fn compute(&self, points: Vec<Point>) -> Result<HullResponse, RequestError> {
         self.cheapest_shard().coordinator.compute(points)
@@ -304,6 +320,17 @@ impl Engine {
     /// (`active_connections` is engine-global — connections are not
     /// sharded — and read exactly once).
     pub fn stats(&self, active_connections: Option<u64>) -> MetricsSnapshot {
+        self.stats_io(active_connections, None)
+    }
+
+    /// [`Engine::stats`] with the event-loop server's I/O gauges spliced
+    /// in under the `io` key (per-loop connection counts, bytes in/out,
+    /// frame counters, decode latency, backpressure stalls).
+    pub fn stats_io(
+        &self,
+        active_connections: Option<u64>,
+        io: Option<&IoMetrics>,
+    ) -> MetricsSnapshot {
         let frames: Vec<MetricsFrame> =
             self.shards.iter().map(|s| s.coordinator.metrics.frame()).collect();
         let mut merged = MetricsFrame::default();
@@ -318,6 +345,9 @@ impl Engine {
         );
         if let Some(active) = active_connections {
             obj.insert("active_connections".into(), Json::Num(active as f64));
+        }
+        if let Some(io) = io {
+            obj.insert("io".into(), io.to_json());
         }
         MetricsSnapshot(Json::Obj(obj))
     }

@@ -38,9 +38,9 @@ commands:
              [--artifacts <dir>] [--exec-mode <fast|audited>]
              [--merge <points-file-2>]   hull both files, then tangent-merge the two hulls
   serve      [--config <file>] [--addr <host:port>] [--backend <kind>] [--artifacts <dir>]
-             [--exec-mode <fast|audited>] [--workers <n>] [--shards <n>]
+             [--exec-mode <fast|audited>] [--workers <n>] [--shards <n>] [--io-threads <n>]
              [--max-sessions <n>] [--merge-threshold <n>] [--idle-ttl-ms <n>]
-  client     --addr <host:port> <points-file>
+  client     --addr <host:port> [--proto <text|binary|auto>] <points-file>
   occupancy  --n <count> [--dist <name>] [--seed <u64>]
   artifacts  [--dir <dir>]
 
@@ -318,6 +318,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             .parse::<usize>()
             .context("--shards wants a non-negative integer (0 = auto)")?;
     }
+    if let Some(v) = flags.get("io-threads") {
+        cfg.server.io_threads = v
+            .parse::<usize>()
+            .context("--io-threads wants a non-negative integer (0 = auto)")?;
+    }
     if let Some(v) = flags.get("max-sessions") {
         cfg.stream.max_sessions =
             v.parse::<usize>().context("--max-sessions wants a positive integer")?.max(1);
@@ -370,7 +375,14 @@ fn cmd_client(args: &[String]) -> Result<()> {
     let addr = flags.get("addr").ok_or_else(|| anyhow!("--addr required"))?;
     let file = pos.first().ok_or_else(|| anyhow!("client needs a points file"))?;
     let points = read_points_file(file)?;
-    let mut client = server::HullClient::connect(addr.as_str())?;
+    // the server auto-detects per connection, so "auto" just means "let
+    // the client pick": the compact binary framing
+    let proto = match flags.get("proto").map(String::as_str) {
+        None | Some("text") => server::WireProto::Text,
+        Some("binary") | Some("auto") => server::WireProto::Binary,
+        Some(other) => bail!("unknown protocol {other:?} (want text, binary or auto)"),
+    };
+    let mut client = server::HullClient::connect_with(addr.as_str(), proto)?;
     let hull = client.hull(&points)?;
     println!(
         "# backend={} queue_ns={} exec_ns={}",

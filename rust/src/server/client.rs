@@ -9,12 +9,25 @@ use anyhow::{anyhow, bail, Result};
 use crate::geometry::point::Point;
 
 use super::proto::{self, Request, Response};
+use super::frame;
+
+/// Which wire encoding this client speaks.  The server auto-detects per
+/// connection from the first byte, so no negotiation round-trip exists:
+/// a client just starts talking in its chosen protocol.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireProto {
+    /// Line-oriented text (the paper's file format extended with framing).
+    Text,
+    /// Length-prefixed binary frames with packed little-endian f64 pairs.
+    Binary,
+}
 
 /// One connection to a hull server.
 pub struct HullClient {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
     next_id: u64,
+    proto: WireProto,
 }
 
 /// A hull result as seen by the client.
@@ -47,10 +60,40 @@ pub struct SessionHullReply {
 
 impl HullClient {
     pub fn connect(addr: impl std::net::ToSocketAddrs) -> Result<HullClient> {
+        Self::connect_with(addr, WireProto::Text)
+    }
+
+    /// Connect speaking `proto` — same verbs, same replies, different
+    /// encoding on the wire.
+    pub fn connect_with(
+        addr: impl std::net::ToSocketAddrs,
+        proto: WireProto,
+    ) -> Result<HullClient> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
         let reader = BufReader::new(stream.try_clone()?);
-        Ok(HullClient { reader, writer: BufWriter::new(stream), next_id: 1 })
+        Ok(HullClient { reader, writer: BufWriter::new(stream), next_id: 1, proto })
+    }
+
+    /// The wire encoding this connection speaks.
+    pub fn wire_proto(&self) -> WireProto {
+        self.proto
+    }
+
+    fn send(&mut self, req: &Request) -> Result<()> {
+        match self.proto {
+            WireProto::Text => proto::write_request(&mut self.writer, req)?,
+            WireProto::Binary => frame::write_request(&mut self.writer, req)?,
+        }
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Response> {
+        match self.proto {
+            WireProto::Text => proto::read_response(&mut self.reader),
+            WireProto::Binary => frame::read_response(&mut self.reader),
+        }
+        .map_err(|e| anyhow!("{e}"))
     }
 
     /// Bound every blocking read on this connection (`None` = wait
@@ -62,8 +105,8 @@ impl HullClient {
     }
 
     pub fn ping(&mut self) -> Result<()> {
-        proto::write_request(&mut self.writer, &Request::Ping)?;
-        match proto::read_response(&mut self.reader).map_err(|e| anyhow!("{e}"))? {
+        self.send(&Request::Ping)?;
+        match self.recv()? {
             Response::Pong => Ok(()),
             other => bail!("unexpected reply {other:?}"),
         }
@@ -73,11 +116,8 @@ impl HullClient {
     pub fn hull(&mut self, points: &[Point]) -> Result<ClientHull> {
         let id = self.next_id;
         self.next_id += 1;
-        proto::write_request(
-            &mut self.writer,
-            &Request::Hull { id, points: points.to_vec() },
-        )?;
-        match proto::read_response(&mut self.reader).map_err(|e| anyhow!("{e}"))? {
+        self.send(&Request::Hull { id, points: points.to_vec() })?;
+        match self.recv()? {
             Response::Hull { id, upper, lower, backend, queue_ns, exec_ns } => {
                 Ok(ClientHull { id, upper, lower, backend, queue_ns, exec_ns })
             }
@@ -89,15 +129,15 @@ impl HullClient {
 
     /// Fetch the metrics snapshot (raw JSON string).
     pub fn stats(&mut self) -> Result<String> {
-        proto::write_request(&mut self.writer, &Request::Stats)?;
-        match proto::read_response(&mut self.reader).map_err(|e| anyhow!("{e}"))? {
+        self.send(&Request::Stats)?;
+        match self.recv()? {
             Response::Stats(s) => Ok(s),
             other => bail!("unexpected reply {other:?}"),
         }
     }
 
     pub fn quit(mut self) -> Result<()> {
-        proto::write_request(&mut self.writer, &Request::Quit)?;
+        self.send(&Request::Quit)?;
         Ok(())
     }
 
@@ -107,8 +147,8 @@ impl HullClient {
     pub fn session_open(&mut self) -> Result<u64> {
         let id = self.next_id;
         self.next_id += 1;
-        proto::write_request(&mut self.writer, &Request::SessionOpen { id })?;
-        match proto::read_response(&mut self.reader).map_err(|e| anyhow!("{e}"))? {
+        self.send(&Request::SessionOpen { id })?;
+        match self.recv()? {
             Response::SessionOpened { sid, .. } => Ok(sid),
             Response::SessionErr { message, .. } => bail!("server: {message}"),
             other => bail!("unexpected reply {other:?}"),
@@ -117,11 +157,8 @@ impl HullClient {
 
     /// `SADD`: insert a batch into the session.
     pub fn session_add(&mut self, sid: u64, points: &[Point]) -> Result<SessionAddReply> {
-        proto::write_request(
-            &mut self.writer,
-            &Request::SessionAdd { sid, points: points.to_vec() },
-        )?;
-        match proto::read_response(&mut self.reader).map_err(|e| anyhow!("{e}"))? {
+        self.send(&Request::SessionAdd { sid, points: points.to_vec() })?;
+        match self.recv()? {
             Response::SessionAdded { absorbed, pending, epoch, .. } => {
                 Ok(SessionAddReply { absorbed, pending, epoch })
             }
@@ -133,8 +170,8 @@ impl HullClient {
     /// `SHULL`: the authoritative session hull (server flushes pending
     /// first).
     pub fn session_hull(&mut self, sid: u64) -> Result<SessionHullReply> {
-        proto::write_request(&mut self.writer, &Request::SessionHull { sid })?;
-        match proto::read_response(&mut self.reader).map_err(|e| anyhow!("{e}"))? {
+        self.send(&Request::SessionHull { sid })?;
+        match self.recv()? {
             Response::SessionHull { epoch, upper, lower, .. } => {
                 Ok(SessionHullReply { epoch, upper, lower })
             }
@@ -145,8 +182,8 @@ impl HullClient {
 
     /// `SCLOSE`: release the session.
     pub fn session_close(&mut self, sid: u64) -> Result<()> {
-        proto::write_request(&mut self.writer, &Request::SessionClose { sid })?;
-        match proto::read_response(&mut self.reader).map_err(|e| anyhow!("{e}"))? {
+        self.send(&Request::SessionClose { sid })?;
+        match self.recv()? {
             Response::SessionClosed { .. } => Ok(()),
             Response::SessionErr { message, .. } => bail!("server: {message}"),
             other => bail!("unexpected reply {other:?}"),

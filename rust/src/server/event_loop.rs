@@ -1,0 +1,806 @@
+//! Readiness-driven connection core: a small pool of I/O event-loop
+//! threads drives every connection through non-blocking sockets and
+//! level-triggered readiness (`sys::Poller` — epoll on Linux), so 10k+
+//! mostly-idle connections multiplex onto a handful of threads instead
+//! of 10k parked handler stacks.
+//!
+//! Shape per connection: read buffer -> frame decoder (text or binary,
+//! auto-detected on the first byte) -> engine dispatch -> write buffer
+//! with high/low-watermark backpressure.  Cheap verbs (`PING`, `STATS`)
+//! are answered inline on the I/O thread; everything that can block
+//! (session verbs take registry locks, one-shot `HULL` preprocessing is
+//! CPU-bound) is bounced to a small dispatch pool, and one-shot hulls
+//! complete through [`Engine::submit_into`] — the exec worker's
+//! completion callback posts the encoded response back to the owning
+//! loop through its completion queue and self-pipe waker, so no thread
+//! ever parks waiting for a batch.
+//!
+//! Responses stay in request order because a connection stops decoding
+//! while a dispatched request is in flight (`busy`); pipelined frames
+//! wait in the read buffer, exactly like the thread-per-connection shim
+//! that serves one request at a time.  Both cores build responses with
+//! the shared helpers in `server::mod`, so their wire output is
+//! identical by construction.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{HullRequest, IoMetrics, Metrics};
+use crate::engine::Engine;
+use crate::{log_debug, log_info};
+
+use super::frame;
+use super::proto::{self, Decoded, Request, Response};
+use super::sys::{self, EV_READ, EV_WRITE};
+use super::ServerConfig;
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKER: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// Pause decoding new requests once this much response data is queued
+/// unsent; the client must drain before we produce more.
+const HIGH_WATER: usize = 1 << 20;
+/// Resume below this.
+const LOW_WATER: usize = 256 * 1024;
+/// Per-readiness-event read budget: a firehose sender cannot starve the
+/// other connections on this loop (level-triggering re-arms us).
+const READ_BUDGET: usize = 256 * 1024;
+const READ_CHUNK: usize = 16 * 1024;
+/// Compact the write buffer once this much has been consumed.
+const COMPACT_AT: usize = 64 * 1024;
+/// Bound on the stop-time drain of in-flight requests and unsent bytes.
+const DRAIN_MS: u64 = 2000;
+
+/// Pick the loop count: explicit if configured, else `cores/4` in 1..=4.
+fn effective_io_threads(configured: usize) -> usize {
+    if configured != 0 {
+        return configured.clamp(1, 64);
+    }
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    (hw / 4).clamp(1, 4)
+}
+
+/// An encoded response ready to be appended to a connection's write
+/// buffer, posted by a dispatch-pool or exec-worker thread.
+struct Completion {
+    token: u64,
+    bytes: Vec<u8>,
+}
+
+/// The cross-thread face of one event loop: new connections and
+/// finished responses land here; the waker gets the loop's attention.
+struct LoopShared {
+    waker: sys::Waker,
+    inbox: Mutex<Vec<TcpStream>>,
+    completions: Mutex<Vec<Completion>>,
+}
+
+/// A request bounced off the I/O thread to the dispatch pool.
+struct Job {
+    shared: Arc<LoopShared>,
+    token: u64,
+    binary: bool,
+    req: Request,
+}
+
+struct PoolShared {
+    jobs: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+    stop: AtomicBool,
+}
+
+impl PoolShared {
+    fn submit(&self, job: Job) {
+        if let Ok(mut q) = self.jobs.lock() {
+            q.push_back(job);
+            self.cv.notify_one();
+        }
+    }
+}
+
+/// Fixed pool of worker threads for the verbs an I/O thread must not run
+/// inline.  Bounded concurrency replaces thread-per-connection: the pool
+/// is the only place session locks are taken and hull preprocessing runs.
+struct DispatchPool {
+    shared: Arc<PoolShared>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl DispatchPool {
+    fn start(engine: Arc<Engine>, workers: usize) -> std::io::Result<DispatchPool> {
+        let shared = Arc::new(PoolShared {
+            jobs: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            stop: AtomicBool::new(false),
+        });
+        let mut threads = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let sh = shared.clone();
+            let eng = engine.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("hull-dispatch-{i}"))
+                    .spawn(move || run_worker(&eng, &sh))?,
+            );
+        }
+        Ok(DispatchPool { shared, threads })
+    }
+
+    /// Finish queued jobs, then join the workers.
+    fn stop(self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        for t in self.threads {
+            let _ = t.join();
+        }
+    }
+}
+
+fn run_worker(engine: &Engine, shared: &PoolShared) {
+    loop {
+        let job = {
+            let Ok(mut q) = shared.jobs.lock() else { return };
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = match shared.cv.wait(q) {
+                    Ok(guard) => guard,
+                    Err(_) => return,
+                };
+            }
+        };
+        run_job(engine, job);
+    }
+}
+
+fn run_job(engine: &Engine, job: Job) {
+    let Job { shared, token, binary, req } = job;
+    match req {
+        Request::Hull { id, points } => {
+            // Preprocessing runs here (inside submit), the batch on an
+            // exec worker; the callback fires wherever the request
+            // finishes and never parks this thread.
+            engine.submit_into(HullRequest { id, points }, move |result| {
+                deliver(&shared, token, binary, &super::hull_response(id, result));
+            });
+        }
+        Request::SessionOpen { id } => {
+            let resp = super::session_open_response(engine, id);
+            deliver(&shared, token, binary, &resp);
+        }
+        Request::SessionAdd { sid, points } => {
+            let resp = super::session_add_response(engine, sid, &points);
+            deliver(&shared, token, binary, &resp);
+        }
+        Request::SessionHull { sid } => {
+            let resp = super::session_hull_response(engine, sid);
+            deliver(&shared, token, binary, &resp);
+        }
+        Request::SessionClose { sid } => {
+            let resp = super::session_close_response(engine, sid);
+            deliver(&shared, token, binary, &resp);
+        }
+        Request::Ping | Request::Stats | Request::Quit => {
+            unreachable!("inline verbs are answered on the I/O thread")
+        }
+    }
+}
+
+/// Encode `resp` in the connection's protocol and post it to the owning
+/// loop.  A loop that already exited just never drains the queue.
+fn deliver(shared: &LoopShared, token: u64, binary: bool, resp: &Response) {
+    let mut bytes = Vec::new();
+    if binary {
+        frame::encode_response(&mut bytes, resp);
+    } else {
+        let _ = proto::write_response(&mut bytes, resp);
+    }
+    if let Ok(mut c) = shared.completions.lock() {
+        c.push(Completion { token, bytes });
+    }
+    shared.waker.wake();
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Proto {
+    Unknown,
+    Text,
+    Binary,
+}
+
+/// Per-connection state machine.
+struct Conn {
+    stream: TcpStream,
+    peer: String,
+    proto: Proto,
+    /// Unconsumed input; complete frames are decoded out of the front.
+    rbuf: Vec<u8>,
+    /// Encoded, unsent responses; `woff` is the flushed prefix.
+    wbuf: Vec<u8>,
+    woff: usize,
+    /// Currently registered poller interest (valid while `registered`).
+    interest: u32,
+    registered: bool,
+    /// A dispatched request is in flight: decoding is paused so the
+    /// response order matches the request order.
+    busy: bool,
+    /// Write buffer crossed `HIGH_WATER`: reads are paused until the
+    /// client drains below `LOW_WATER`.
+    paused: bool,
+    /// Flush what is queued, then close (after `QUIT`, a protocol error,
+    /// or EOF).
+    closing: bool,
+    /// Peer half-closed its sending side; buffered frames still run.
+    read_closed: bool,
+    frames: u64,
+}
+
+struct EventLoop {
+    index: usize,
+    poller: sys::Poller,
+    conns: HashMap<u64, Conn>,
+    shared: Arc<LoopShared>,
+    /// Every loop's shared face, for round-robin accept handoff.
+    peers: Vec<Arc<LoopShared>>,
+    rr: usize,
+    /// Loop 0 owns the listener.
+    listener: Option<TcpListener>,
+    engine: Arc<Engine>,
+    io: Arc<IoMetrics>,
+    pool: Arc<PoolShared>,
+    stop: Arc<AtomicBool>,
+    next_token: Arc<AtomicU64>,
+    draining: bool,
+}
+
+impl EventLoop {
+    fn run(mut self) {
+        let mut events: Vec<sys::Event> = Vec::new();
+        let mut deadline: Option<Instant> = None;
+        loop {
+            if self.stop.load(Ordering::SeqCst) && !self.draining {
+                self.begin_drain();
+                deadline = Some(Instant::now() + Duration::from_millis(DRAIN_MS));
+            }
+            if self.draining {
+                if self.conns.is_empty() {
+                    break;
+                }
+                if let Some(d) = deadline {
+                    if Instant::now() >= d {
+                        break;
+                    }
+                }
+            }
+            let timeout = if self.draining { 25 } else { -1 };
+            if let Err(e) = self.poller.wait(&mut events, timeout) {
+                log_info!("io loop {}: poll error: {e}", self.index);
+                break;
+            }
+            for ev in events.iter().copied() {
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_burst(),
+                    TOKEN_WAKER => self.shared.waker.drain(),
+                    token => self.conn_event(token, ev),
+                }
+            }
+            self.apply_completions();
+            if !self.draining {
+                self.adopt_inbox();
+            }
+        }
+        let leftover: Vec<u64> = self.conns.keys().copied().collect();
+        for token in leftover {
+            self.close_conn(token);
+        }
+    }
+
+    /// Stop accepting and reading; flush what is queued, let in-flight
+    /// requests land, close everything that is already settled.
+    fn begin_drain(&mut self) {
+        self.draining = true;
+        if let Some(l) = self.listener.take() {
+            let _ = self.poller.delete(l.as_raw_fd());
+        }
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for token in tokens {
+            let settled = match self.conns.get(&token) {
+                Some(c) => !c.busy && c.woff == c.wbuf.len(),
+                None => continue,
+            };
+            if settled {
+                self.close_conn(token);
+            } else {
+                self.update_interest(token);
+            }
+        }
+    }
+
+    fn accept_burst(&mut self) {
+        loop {
+            let accepted = match &self.listener {
+                Some(l) => l.accept(),
+                None => return,
+            };
+            match accepted {
+                Ok((stream, _)) => {
+                    Metrics::inc(&self.io.accepted);
+                    let idx = self.rr % self.peers.len();
+                    self.rr = self.rr.wrapping_add(1);
+                    if idx == self.index {
+                        self.adopt(stream);
+                    } else {
+                        if let Ok(mut inbox) = self.peers[idx].inbox.lock() {
+                            inbox.push(stream);
+                        }
+                        self.peers[idx].waker.wake();
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) => {
+                    log_info!("accept error: {e}");
+                    return;
+                }
+            }
+        }
+    }
+
+    fn adopt_inbox(&mut self) {
+        let incoming: Vec<TcpStream> = match self.shared.inbox.lock() {
+            Ok(mut inbox) => {
+                if inbox.is_empty() {
+                    return;
+                }
+                inbox.drain(..).collect()
+            }
+            Err(_) => return,
+        };
+        for stream in incoming {
+            self.adopt(stream);
+        }
+    }
+
+    /// Take ownership of an accepted connection on this loop.
+    fn adopt(&mut self, stream: TcpStream) {
+        let _ = stream.set_nodelay(true);
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        let token = self.next_token.fetch_add(1, Ordering::Relaxed);
+        if self.poller.add(stream.as_raw_fd(), token, EV_READ).is_err() {
+            return;
+        }
+        let peer = match stream.peer_addr() {
+            Ok(p) => p.to_string(),
+            Err(_) => "<unknown>".into(),
+        };
+        log_debug!("conn {peer}: connected (loop {})", self.index);
+        Metrics::inc(&self.io.loops[self.index].open_connections);
+        self.conns.insert(
+            token,
+            Conn {
+                stream,
+                peer,
+                proto: Proto::Unknown,
+                rbuf: Vec::new(),
+                wbuf: Vec::new(),
+                woff: 0,
+                interest: EV_READ,
+                registered: true,
+                busy: false,
+                paused: false,
+                closing: false,
+                read_closed: false,
+                frames: 0,
+            },
+        );
+    }
+
+    fn close_conn(&mut self, token: u64) {
+        if let Some(conn) = self.conns.remove(&token) {
+            if conn.registered {
+                let _ = self.poller.delete(conn.stream.as_raw_fd());
+            }
+            Metrics::sub(&self.io.loops[self.index].open_connections, 1);
+            let proto = match conn.proto {
+                Proto::Unknown => "undetected",
+                Proto::Text => "text",
+                Proto::Binary => "binary",
+            };
+            log_debug!(
+                "conn {}: disconnected after {} frame(s) ({proto}, loop {})",
+                conn.peer,
+                conn.frames,
+                self.index
+            );
+        }
+    }
+
+    fn conn_event(&mut self, token: u64, ev: sys::Event) {
+        let Some(conn) = self.conns.get(&token) else {
+            return; // stale event for a connection closed this iteration
+        };
+        let skip_read = conn.read_closed || self.draining;
+        if ev.writable && !self.flush_conn(token) {
+            self.close_conn(token);
+            return;
+        }
+        if ev.readable && !skip_read && !self.read_conn(token) {
+            self.close_conn(token);
+            return;
+        }
+        self.post_io(token);
+    }
+
+    /// Decode what is decodable, flush what is flushable, then settle the
+    /// connection's fate and poller interest.
+    fn post_io(&mut self, token: u64) {
+        self.decode_conn(token);
+        if !self.flush_conn(token) {
+            self.close_conn(token);
+            return;
+        }
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        if conn.read_closed && !conn.busy {
+            // the decoder ran dry and nothing more can arrive
+            conn.closing = true;
+        }
+        if conn.closing && !conn.busy && conn.woff == conn.wbuf.len() {
+            self.close_conn(token);
+            return;
+        }
+        self.update_interest(token);
+    }
+
+    /// Drain the socket into the read buffer (bounded per event).
+    /// Returns false when the connection is dead.
+    fn read_conn(&mut self, token: u64) -> bool {
+        let Some(conn) = self.conns.get_mut(&token) else { return true };
+        let mut chunk = [0u8; READ_CHUNK];
+        let budget = conn.rbuf.len() + READ_BUDGET;
+        loop {
+            match conn.stream.read(&mut chunk) {
+                Ok(0) => {
+                    conn.read_closed = true;
+                    return true;
+                }
+                Ok(n) => {
+                    conn.rbuf.extend_from_slice(&chunk[..n]);
+                    Metrics::add(&self.io.loops[self.index].bytes_in, n as u64);
+                    if n < chunk.len() || conn.rbuf.len() >= budget {
+                        return true;
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+    }
+
+    /// Decode and dispatch frames until the buffer runs dry, a dispatched
+    /// request pauses the connection, or a protocol error ends it.
+    fn decode_conn(&mut self, token: u64) {
+        enum Step {
+            Wait,
+            Frame(Request, bool),
+            Fail(Response),
+        }
+        loop {
+            let step = {
+                let Some(conn) = self.conns.get_mut(&token) else { return };
+                if conn.busy || conn.closing || conn.rbuf.is_empty() {
+                    return;
+                }
+                if conn.proto == Proto::Unknown {
+                    conn.proto = if conn.rbuf[0] == frame::REQ_MAGIC {
+                        Proto::Binary
+                    } else {
+                        Proto::Text
+                    };
+                    log_debug!(
+                        "conn {}: protocol={}",
+                        conn.peer,
+                        if conn.proto == Proto::Binary { "binary" } else { "text" }
+                    );
+                }
+                let binary = conn.proto == Proto::Binary;
+                let started = Instant::now();
+                let decoded = if binary {
+                    frame::decode_request(&conn.rbuf)
+                } else {
+                    proto::decode_text_request(&conn.rbuf)
+                };
+                match decoded {
+                    Ok(Decoded::Need(_)) => Step::Wait,
+                    Ok(Decoded::Frame(req, used)) => {
+                        self.io.decode_latency.record(started.elapsed());
+                        Metrics::inc(if binary {
+                            &self.io.frames_binary
+                        } else {
+                            &self.io.frames_text
+                        });
+                        conn.rbuf.drain(..used);
+                        conn.frames += 1;
+                        Step::Frame(req, binary)
+                    }
+                    Err(e) => Step::Fail(super::proto_error_response(&e)),
+                }
+            };
+            match step {
+                Step::Wait => return,
+                Step::Frame(req, binary) => self.handle_request(token, binary, req),
+                Step::Fail(resp) => {
+                    // same as the threaded shim: answer (echoing the id
+                    // when the header parsed), then end the connection
+                    self.enqueue(token, &resp);
+                    if let Some(conn) = self.conns.get_mut(&token) {
+                        conn.closing = true;
+                    }
+                    return;
+                }
+            }
+        }
+    }
+
+    fn handle_request(&mut self, token: u64, binary: bool, req: Request) {
+        match req {
+            Request::Ping => self.enqueue(token, &Response::Pong),
+            Request::Stats => {
+                // merged aggregate + per_shard array + the I/O core's
+                // gauges; cheap (atomics only), so answered inline
+                let active = self.io.open_connections();
+                let snap = self.engine.stats_io(Some(active), Some(&self.io)).0.to_string();
+                self.enqueue(token, &Response::Stats(snap));
+            }
+            Request::Quit => {
+                if let Some(conn) = self.conns.get_mut(&token) {
+                    conn.closing = true;
+                }
+            }
+            req => {
+                if let Some(conn) = self.conns.get_mut(&token) {
+                    conn.busy = true;
+                    self.pool.submit(Job { shared: self.shared.clone(), token, binary, req });
+                }
+            }
+        }
+    }
+
+    /// Append an inline response to the write buffer in the connection's
+    /// protocol.
+    fn enqueue(&mut self, token: u64, resp: &Response) {
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        if conn.proto == Proto::Binary {
+            frame::encode_response(&mut conn.wbuf, resp);
+        } else {
+            let _ = proto::write_response(&mut conn.wbuf, resp);
+        }
+        if !conn.paused && conn.wbuf.len() - conn.woff >= HIGH_WATER {
+            conn.paused = true;
+            Metrics::inc(&self.io.backpressure_stalls);
+        }
+    }
+
+    /// Write as much of the buffered output as the socket accepts.
+    /// Returns false when the connection is dead.
+    fn flush_conn(&mut self, token: u64) -> bool {
+        let Some(conn) = self.conns.get_mut(&token) else { return true };
+        while conn.woff < conn.wbuf.len() {
+            match conn.stream.write(&conn.wbuf[conn.woff..]) {
+                Ok(0) => return false,
+                Ok(n) => {
+                    conn.woff += n;
+                    Metrics::add(&self.io.loops[self.index].bytes_out, n as u64);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => return false,
+            }
+        }
+        if conn.woff == conn.wbuf.len() {
+            conn.wbuf.clear();
+            conn.woff = 0;
+        } else if conn.woff >= COMPACT_AT {
+            conn.wbuf.drain(..conn.woff);
+            conn.woff = 0;
+        }
+        if conn.paused && conn.wbuf.len() - conn.woff < LOW_WATER {
+            conn.paused = false;
+        }
+        true
+    }
+
+    /// Pull finished responses posted by dispatch/exec threads into
+    /// their connections' write buffers.
+    fn apply_completions(&mut self) {
+        let done: Vec<Completion> = match self.shared.completions.lock() {
+            Ok(mut c) => {
+                if c.is_empty() {
+                    return;
+                }
+                c.drain(..).collect()
+            }
+            Err(_) => return,
+        };
+        for c in done {
+            let Some(conn) = self.conns.get_mut(&c.token) else {
+                continue; // connection died while its request ran
+            };
+            conn.busy = false;
+            conn.wbuf.extend_from_slice(&c.bytes);
+            if !conn.paused && conn.wbuf.len() - conn.woff >= HIGH_WATER {
+                conn.paused = true;
+                Metrics::inc(&self.io.backpressure_stalls);
+            }
+            // resume: decode any pipelined frames, flush, re-arm
+            self.post_io(c.token);
+        }
+    }
+
+    /// Register exactly the interest the state machine needs; a
+    /// connection needing neither (in-flight request, nothing to write)
+    /// is deregistered entirely so hangup storms cannot spin the loop.
+    fn update_interest(&mut self, token: u64) {
+        let draining = self.draining;
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        let mut want = 0u32;
+        if !conn.closing && !conn.busy && !conn.paused && !conn.read_closed && !draining {
+            want |= EV_READ;
+        }
+        if conn.woff < conn.wbuf.len() {
+            want |= EV_WRITE;
+        }
+        let fd = conn.stream.as_raw_fd();
+        if want == 0 {
+            if conn.registered {
+                let _ = self.poller.delete(fd);
+                conn.registered = false;
+            }
+        } else if !conn.registered {
+            if self.poller.add(fd, token, want).is_ok() {
+                conn.registered = true;
+                conn.interest = want;
+            }
+        } else if want != conn.interest && self.poller.modify(fd, token, want).is_ok() {
+            conn.interest = want;
+        }
+    }
+}
+
+/// Handle to a running event-loop server (shutdown on drop).
+pub(crate) struct EventHandle {
+    pub(crate) local_addr: std::net::SocketAddr,
+    engine: Arc<Engine>,
+    io: Arc<IoMetrics>,
+    stop: Arc<AtomicBool>,
+    loops: Vec<Arc<LoopShared>>,
+    threads: Vec<JoinHandle<()>>,
+    pool: Option<DispatchPool>,
+}
+
+impl EventHandle {
+    pub(crate) fn active_connections(&self) -> u64 {
+        self.io.open_connections()
+    }
+
+    pub(crate) fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    fn stop_inner(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for shared in &self.loops {
+            shared.waker.wake();
+        }
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        if let Some(pool) = self.pool.take() {
+            pool.stop();
+        }
+    }
+}
+
+impl Drop for EventHandle {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+/// Start the event-loop core on `cfg.addr` (non-blocking; returns a
+/// handle).
+pub(crate) fn serve_event(engine: Arc<Engine>, cfg: &ServerConfig) -> std::io::Result<EventHandle> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    listener.set_nonblocking(true)?;
+    let local_addr = listener.local_addr()?;
+    // best-effort FD headroom: 10k+ connections need more than the
+    // common 1024 soft default
+    sys::raise_nofile_limit(1 << 16);
+
+    let io_threads = effective_io_threads(cfg.io_threads);
+    let io = Arc::new(IoMetrics::new(io_threads));
+    let stop = Arc::new(AtomicBool::new(false));
+    let next_token = Arc::new(AtomicU64::new(FIRST_CONN_TOKEN));
+    log_info!(
+        "serving on {local_addr} (backend={} shards={} core=event io_threads={io_threads})",
+        engine.backend_name(),
+        engine.shard_count()
+    );
+
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let pool = DispatchPool::start(engine.clone(), hw.clamp(4, 16))?;
+
+    let mut shareds = Vec::with_capacity(io_threads);
+    for _ in 0..io_threads {
+        shareds.push(Arc::new(LoopShared {
+            waker: sys::Waker::new()?,
+            inbox: Mutex::new(Vec::new()),
+            completions: Mutex::new(Vec::new()),
+        }));
+    }
+
+    let mut listener = Some(listener);
+    let mut threads = Vec::with_capacity(io_threads);
+    for (i, shared) in shareds.iter().enumerate() {
+        let mut poller = sys::Poller::new()?;
+        poller.add(shared.waker.fd(), TOKEN_WAKER, EV_READ)?;
+        let own_listener = if i == 0 {
+            let l = listener.take().expect("loop 0 takes the listener");
+            poller.add(l.as_raw_fd(), TOKEN_LISTENER, EV_READ)?;
+            Some(l)
+        } else {
+            None
+        };
+        let lp = EventLoop {
+            index: i,
+            poller,
+            conns: HashMap::new(),
+            shared: shared.clone(),
+            peers: shareds.clone(),
+            rr: i,
+            listener: own_listener,
+            engine: engine.clone(),
+            io: io.clone(),
+            pool: pool.shared.clone(),
+            stop: stop.clone(),
+            next_token: next_token.clone(),
+            draining: false,
+        };
+        threads.push(
+            std::thread::Builder::new().name(format!("hull-io-{i}")).spawn(move || lp.run())?,
+        );
+    }
+
+    Ok(EventHandle { local_addr, engine, io, stop, loops: shareds, threads, pool: Some(pool) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn io_thread_auto_sizing_is_clamped() {
+        assert_eq!(effective_io_threads(3), 3);
+        assert_eq!(effective_io_threads(999), 64);
+        let auto = effective_io_threads(0);
+        assert!((1..=4).contains(&auto), "auto = {auto}");
+    }
+
+    #[test]
+    fn watermarks_leave_room_to_resume() {
+        assert!(LOW_WATER < HIGH_WATER);
+        assert!(COMPACT_AT <= LOW_WATER);
+    }
+}

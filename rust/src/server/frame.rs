@@ -1,0 +1,662 @@
+//! Binary wire format: length-prefixed frames with packed little-endian
+//! f64 point pairs — the zero-copy alternative to the text protocol (no
+//! per-coordinate float formatting/parsing on the hot path).
+//!
+//! ```text
+//! request  = C7 01 <verb u8> <id u64 LE> <count u32 LE> count×(x f64 LE, y f64 LE)
+//!   verbs: 1 HULL  2 SOPEN  3 SADD  4 SHULL  5 SCLOSE  6 STATS  7 PING  8 QUIT
+//!   `id` carries the request id (HULL/SOPEN), the sid (SADD/SHULL/SCLOSE),
+//!   or 0 (STATS/PING/QUIT); `count` is nonzero only for HULL/SADD.
+//!
+//! response = C8 01 <kind u8> <flag u8> <id u64 LE> <plen u32 LE> plen payload bytes
+//!   kinds: 1 HullOk   [queue_ns u64][exec_ns u64][k_up u32][k_lo u32]
+//!                     (k_up+k_lo)×16 point bytes, backend utf8 = rest
+//!          2 HullErr  message utf8 = payload
+//!          3 Malformed  flag=1 when the failed frame's id was recovered
+//!                     (id field echoes it), message utf8 = payload
+//!          4 SOpened  [sid u64]
+//!          5 SAdded   [absorbed u64][pending u64][epoch u64]
+//!          6 SHullOk  [epoch u64][k_up u32][k_lo u32] + point bytes
+//!          7 SClosed  (empty)
+//!          8 SErr     flag = session verb (1 SOPEN 2 SADD 3 SHULL 4 SCLOSE),
+//!                     message utf8 = payload
+//!          9 Stats    JSON utf8 = payload
+//!         10 Pong     (empty)
+//! ```
+//!
+//! A connection's first byte selects the protocol: `0xC7` means binary,
+//! anything else (text verbs start with ASCII `H`/`S`/`P`/`Q`) falls back
+//! to the line protocol.  Decoders are incremental ([`Decoded::Need`]
+//! reports the total bytes required), reject oversized counts *before*
+//! any payload is buffered (the same `MAX_REQUEST_POINTS` DoS guard as
+//! the text path, with the same id-echo rules), and never allocate more
+//! than a small multiple of the bytes actually received.
+
+use std::io::{Read, Write};
+
+use crate::geometry::point::Point;
+
+use super::proto::{Decoded, ProtoError, Request, Response, SessionVerb, MAX_REQUEST_POINTS};
+
+/// First byte of every binary request frame (the auto-detection octet).
+pub const REQ_MAGIC: u8 = 0xC7;
+/// First byte of every binary response frame.
+pub const RESP_MAGIC: u8 = 0xC8;
+/// Wire format version.
+pub const VERSION: u8 = 0x01;
+
+const REQ_HEADER: usize = 15; // magic + ver + verb + id + count
+const RESP_HEADER: usize = 16; // magic + ver + kind + flag + id + plen
+
+const V_HULL: u8 = 1;
+const V_SOPEN: u8 = 2;
+const V_SADD: u8 = 3;
+const V_SHULL: u8 = 4;
+const V_SCLOSE: u8 = 5;
+const V_STATS: u8 = 6;
+const V_PING: u8 = 7;
+const V_QUIT: u8 = 8;
+
+const K_HULL_OK: u8 = 1;
+const K_HULL_ERR: u8 = 2;
+const K_MALFORMED: u8 = 3;
+const K_SOPENED: u8 = 4;
+const K_SADDED: u8 = 5;
+const K_SHULL_OK: u8 = 6;
+const K_SCLOSED: u8 = 7;
+const K_SERR: u8 = 8;
+const K_STATS: u8 = 9;
+const K_PONG: u8 = 10;
+
+/// Largest acceptable response payload: two full chains of the largest
+/// request plus generous header/JSON slack.  Anything bigger is a corrupt
+/// length prefix, rejected before allocation.
+const MAX_RESPONSE_PAYLOAD: usize = MAX_REQUEST_POINTS * 32 + (1 << 20);
+
+fn malformed(detail: impl Into<String>) -> ProtoError {
+    ProtoError::Malformed { id: None, detail: detail.into() }
+}
+
+fn verb_code(v: SessionVerb) -> u8 {
+    match v {
+        SessionVerb::Open => 1,
+        SessionVerb::Add => 2,
+        SessionVerb::Hull => 3,
+        SessionVerb::Close => 4,
+    }
+}
+
+fn verb_from_code(c: u8) -> Option<SessionVerb> {
+    Some(match c {
+        1 => SessionVerb::Open,
+        2 => SessionVerb::Add,
+        3 => SessionVerb::Hull,
+        4 => SessionVerb::Close,
+        _ => return None,
+    })
+}
+
+// ------------------------------------------------------------- encoding
+
+fn push_points(out: &mut Vec<u8>, pts: &[Point]) {
+    out.reserve(pts.len() * 16);
+    for p in pts {
+        out.extend_from_slice(&p.x.to_le_bytes());
+        out.extend_from_slice(&p.y.to_le_bytes());
+    }
+}
+
+fn req_header(out: &mut Vec<u8>, verb: u8, id: u64, count: u32) {
+    out.push(REQ_MAGIC);
+    out.push(VERSION);
+    out.push(verb);
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(&count.to_le_bytes());
+}
+
+/// Serialize a request into `out` (appends; does not clear).
+pub fn encode_request(out: &mut Vec<u8>, req: &Request) {
+    match req {
+        Request::Hull { id, points } => {
+            req_header(out, V_HULL, *id, points.len() as u32);
+            push_points(out, points);
+        }
+        Request::SessionOpen { id } => req_header(out, V_SOPEN, *id, 0),
+        Request::SessionAdd { sid, points } => {
+            req_header(out, V_SADD, *sid, points.len() as u32);
+            push_points(out, points);
+        }
+        Request::SessionHull { sid } => req_header(out, V_SHULL, *sid, 0),
+        Request::SessionClose { sid } => req_header(out, V_SCLOSE, *sid, 0),
+        Request::Stats => req_header(out, V_STATS, 0, 0),
+        Request::Ping => req_header(out, V_PING, 0, 0),
+        Request::Quit => req_header(out, V_QUIT, 0, 0),
+    }
+}
+
+fn resp_header(out: &mut Vec<u8>, kind: u8, flag: u8, id: u64, plen: usize) {
+    out.push(RESP_MAGIC);
+    out.push(VERSION);
+    out.push(kind);
+    out.push(flag);
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(&(plen as u32).to_le_bytes());
+}
+
+/// Serialize a response into `out` (appends; does not clear).
+pub fn encode_response(out: &mut Vec<u8>, resp: &Response) {
+    match resp {
+        Response::Hull { id, upper, lower, backend, queue_ns, exec_ns } => {
+            let npts = upper.len() + lower.len();
+            resp_header(out, K_HULL_OK, 0, *id, 24 + npts * 16 + backend.len());
+            out.extend_from_slice(&queue_ns.to_le_bytes());
+            out.extend_from_slice(&exec_ns.to_le_bytes());
+            out.extend_from_slice(&(upper.len() as u32).to_le_bytes());
+            out.extend_from_slice(&(lower.len() as u32).to_le_bytes());
+            push_points(out, upper);
+            push_points(out, lower);
+            out.extend_from_slice(backend.as_bytes());
+        }
+        Response::HullErr { id, message } => {
+            resp_header(out, K_HULL_ERR, 0, *id, message.len());
+            out.extend_from_slice(message.as_bytes());
+        }
+        Response::MalformedErr { id, message } => {
+            resp_header(out, K_MALFORMED, u8::from(id.is_some()), id.unwrap_or(0), message.len());
+            out.extend_from_slice(message.as_bytes());
+        }
+        Response::SessionOpened { id, sid } => {
+            resp_header(out, K_SOPENED, 0, *id, 8);
+            out.extend_from_slice(&sid.to_le_bytes());
+        }
+        Response::SessionAdded { sid, absorbed, pending, epoch } => {
+            resp_header(out, K_SADDED, 0, *sid, 24);
+            out.extend_from_slice(&absorbed.to_le_bytes());
+            out.extend_from_slice(&pending.to_le_bytes());
+            out.extend_from_slice(&epoch.to_le_bytes());
+        }
+        Response::SessionHull { sid, epoch, upper, lower } => {
+            let npts = upper.len() + lower.len();
+            resp_header(out, K_SHULL_OK, 0, *sid, 16 + npts * 16);
+            out.extend_from_slice(&epoch.to_le_bytes());
+            out.extend_from_slice(&(upper.len() as u32).to_le_bytes());
+            out.extend_from_slice(&(lower.len() as u32).to_le_bytes());
+            push_points(out, upper);
+            push_points(out, lower);
+        }
+        Response::SessionClosed { sid } => resp_header(out, K_SCLOSED, 0, *sid, 0),
+        Response::SessionErr { verb, id, message } => {
+            resp_header(out, K_SERR, verb_code(*verb), *id, message.len());
+            out.extend_from_slice(message.as_bytes());
+        }
+        Response::Stats(json) => {
+            resp_header(out, K_STATS, 0, 0, json.len());
+            out.extend_from_slice(json.as_bytes());
+        }
+        Response::Pong => resp_header(out, K_PONG, 0, 0, 0),
+    }
+}
+
+// ------------------------------------------------------------- decoding
+
+fn read_points(bytes: &[u8], count: usize) -> Vec<Point> {
+    debug_assert_eq!(bytes.len(), count * 16);
+    let mut pts = Vec::with_capacity(count);
+    for pair in bytes.chunks_exact(16) {
+        let x = f64::from_le_bytes(pair[..8].try_into().unwrap());
+        let y = f64::from_le_bytes(pair[8..].try_into().unwrap());
+        pts.push(Point::new(x, y));
+    }
+    pts
+}
+
+/// Decode one request frame from the front of `buf`.  `Need(n)` means the
+/// caller must supply `n` total bytes before retrying; errors follow the
+/// text protocol's id-echo rules (the id is echoed whenever the fixed
+/// header parsed).
+pub fn decode_request(buf: &[u8]) -> Result<Decoded<Request>, ProtoError> {
+    if buf.len() < REQ_HEADER {
+        return Ok(Decoded::Need(REQ_HEADER));
+    }
+    if buf[0] != REQ_MAGIC {
+        return Err(malformed(format!("bad frame magic 0x{:02X}", buf[0])));
+    }
+    if buf[1] != VERSION {
+        return Err(malformed(format!("unsupported frame version {}", buf[1])));
+    }
+    let verb = buf[2];
+    let id = u64::from_le_bytes(buf[3..11].try_into().unwrap());
+    let count = u32::from_le_bytes(buf[11..15].try_into().unwrap()) as usize;
+    match verb {
+        V_HULL | V_SADD => {
+            if count > MAX_REQUEST_POINTS {
+                return Err(ProtoError::TooManyPoints {
+                    id,
+                    points: count,
+                    session: verb == V_SADD,
+                });
+            }
+            let need = REQ_HEADER + count * 16;
+            if buf.len() < need {
+                return Ok(Decoded::Need(need));
+            }
+            let points = read_points(&buf[REQ_HEADER..need], count);
+            let req = if verb == V_HULL {
+                Request::Hull { id, points }
+            } else {
+                Request::SessionAdd { sid: id, points }
+            };
+            Ok(Decoded::Frame(req, need))
+        }
+        V_SOPEN | V_SHULL | V_SCLOSE | V_STATS | V_PING | V_QUIT => {
+            if count != 0 {
+                return Err(ProtoError::Malformed {
+                    id: Some(id),
+                    detail: format!("verb {verb} carries no point payload (count {count})"),
+                });
+            }
+            let req = match verb {
+                V_SOPEN => Request::SessionOpen { id },
+                V_SHULL => Request::SessionHull { sid: id },
+                V_SCLOSE => Request::SessionClose { sid: id },
+                V_STATS => Request::Stats,
+                V_PING => Request::Ping,
+                _ => Request::Quit,
+            };
+            Ok(Decoded::Frame(req, REQ_HEADER))
+        }
+        other => Err(ProtoError::Malformed {
+            id: Some(id),
+            detail: format!("unknown verb {other}"),
+        }),
+    }
+}
+
+/// Bounds-checked little cursor over a response payload.
+struct Cur<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtoError> {
+        if self.b.len() < n {
+            return Err(malformed("truncated response payload"));
+        }
+        let (head, tail) = self.b.split_at(n);
+        self.b = tail;
+        Ok(head)
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtoError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtoError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn points(&mut self, count: usize) -> Result<Vec<Point>, ProtoError> {
+        let bytes = self.take(count * 16)?;
+        Ok(read_points(bytes, count))
+    }
+
+    fn rest_utf8(self) -> String {
+        String::from_utf8_lossy(self.b).into_owned()
+    }
+}
+
+/// Decode one response frame from the front of `buf` (client side).
+pub fn decode_response(buf: &[u8]) -> Result<Decoded<Response>, ProtoError> {
+    if buf.len() < RESP_HEADER {
+        return Ok(Decoded::Need(RESP_HEADER));
+    }
+    if buf[0] != RESP_MAGIC {
+        return Err(malformed(format!("bad response magic 0x{:02X}", buf[0])));
+    }
+    if buf[1] != VERSION {
+        return Err(malformed(format!("unsupported frame version {}", buf[1])));
+    }
+    let kind = buf[2];
+    let flag = buf[3];
+    let id = u64::from_le_bytes(buf[4..12].try_into().unwrap());
+    let plen = u32::from_le_bytes(buf[12..16].try_into().unwrap()) as usize;
+    if plen > MAX_RESPONSE_PAYLOAD {
+        return Err(malformed(format!("response payload {plen} over limit")));
+    }
+    let need = RESP_HEADER + plen;
+    if buf.len() < need {
+        return Ok(Decoded::Need(need));
+    }
+    let mut cur = Cur { b: &buf[RESP_HEADER..need] };
+    let resp = match kind {
+        K_HULL_OK => {
+            let queue_ns = cur.u64()?;
+            let exec_ns = cur.u64()?;
+            let k_up = cur.u32()? as usize;
+            let k_lo = cur.u32()? as usize;
+            let upper = cur.points(k_up)?;
+            let lower = cur.points(k_lo)?;
+            Response::Hull { id, upper, lower, backend: cur.rest_utf8(), queue_ns, exec_ns }
+        }
+        K_HULL_ERR => Response::HullErr { id, message: cur.rest_utf8() },
+        K_MALFORMED => Response::MalformedErr {
+            id: (flag == 1).then_some(id),
+            message: cur.rest_utf8(),
+        },
+        K_SOPENED => Response::SessionOpened { id, sid: cur.u64()? },
+        K_SADDED => Response::SessionAdded {
+            sid: id,
+            absorbed: cur.u64()?,
+            pending: cur.u64()?,
+            epoch: cur.u64()?,
+        },
+        K_SHULL_OK => {
+            let epoch = cur.u64()?;
+            let k_up = cur.u32()? as usize;
+            let k_lo = cur.u32()? as usize;
+            let upper = cur.points(k_up)?;
+            let lower = cur.points(k_lo)?;
+            Response::SessionHull { sid: id, epoch, upper, lower }
+        }
+        K_SCLOSED => Response::SessionClosed { sid: id },
+        K_SERR => Response::SessionErr {
+            verb: verb_from_code(flag)
+                .ok_or_else(|| malformed(format!("unknown session verb code {flag}")))?,
+            id,
+            message: cur.rest_utf8(),
+        },
+        K_STATS => Response::Stats(cur.rest_utf8()),
+        K_PONG => Response::Pong,
+        other => return Err(malformed(format!("unknown response kind {other}"))),
+    };
+    Ok(Decoded::Frame(resp, need))
+}
+
+// ------------------------------------------------------ blocking shims
+
+/// Drive an incremental decoder over a blocking reader: grow the buffer
+/// to exactly what `Need` reports, never over-reading past the frame (the
+/// next frame's bytes stay in the stream).  EOF before the first byte —
+/// or mid-frame, matching the text reader — surfaces as [`ProtoError::Eof`].
+fn read_frame<T, R: Read>(
+    r: &mut R,
+    decode: fn(&[u8]) -> Result<Decoded<T>, ProtoError>,
+) -> Result<T, ProtoError> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        match decode(&buf)? {
+            Decoded::Frame(t, _) => return Ok(t),
+            Decoded::Need(n) => {
+                let old = buf.len();
+                debug_assert!(n > old, "decoder must make progress");
+                buf.resize(n, 0);
+                if let Err(e) = r.read_exact(&mut buf[old..]) {
+                    return Err(match e.kind() {
+                        std::io::ErrorKind::UnexpectedEof => ProtoError::Eof,
+                        _ => malformed(e.to_string()),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Read one binary request off a blocking stream (threaded shim).
+pub fn read_request<R: Read>(r: &mut R) -> Result<Request, ProtoError> {
+    read_frame(r, decode_request)
+}
+
+/// Read one binary response off a blocking stream (client side).
+pub fn read_response<R: Read>(r: &mut R) -> Result<Response, ProtoError> {
+    read_frame(r, decode_response)
+}
+
+/// Serialize + flush a request (client side).
+pub fn write_request<W: Write>(w: &mut W, req: &Request) -> std::io::Result<()> {
+    let mut buf = Vec::new();
+    encode_request(&mut buf, req);
+    w.write_all(&buf)?;
+    w.flush()
+}
+
+/// Serialize + flush a response (server side).
+pub fn write_response<W: Write>(w: &mut W, resp: &Response) -> std::io::Result<()> {
+    let mut buf = Vec::new();
+    encode_response(&mut buf, resp);
+    w.write_all(&buf)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pts(v: &[(f64, f64)]) -> Vec<Point> {
+        v.iter().map(|&(x, y)| Point::new(x, y)).collect()
+    }
+
+    fn roundtrip_req(req: Request) -> Request {
+        let mut buf = Vec::new();
+        encode_request(&mut buf, &req);
+        match decode_request(&buf).unwrap() {
+            Decoded::Frame(r, used) => {
+                assert_eq!(used, buf.len(), "frame must consume exactly its bytes");
+                r
+            }
+            Decoded::Need(n) => panic!("complete frame reported Need({n})"),
+        }
+    }
+
+    fn roundtrip_resp(resp: Response) -> Response {
+        let mut buf = Vec::new();
+        encode_response(&mut buf, &resp);
+        match decode_response(&buf).unwrap() {
+            Decoded::Frame(r, used) => {
+                assert_eq!(used, buf.len());
+                r
+            }
+            Decoded::Need(n) => panic!("complete frame reported Need({n})"),
+        }
+    }
+
+    #[test]
+    fn requests_roundtrip_bit_exact() {
+        for req in [
+            Request::Hull { id: 42, points: pts(&[(0.125, 0.25), (0.5, 0.75)]) },
+            Request::Hull { id: 0, points: vec![] },
+            Request::Hull { id: u64::MAX, points: pts(&[(0.1234567890123, 0.000001)]) },
+            Request::SessionOpen { id: 3 },
+            Request::SessionAdd { sid: 17, points: pts(&[(0.0, 1.0), (1.0, 0.0)]) },
+            Request::SessionAdd { sid: 18, points: vec![] },
+            Request::SessionHull { sid: 17 },
+            Request::SessionClose { sid: 17 },
+            Request::Stats,
+            Request::Ping,
+            Request::Quit,
+        ] {
+            assert_eq!(roundtrip_req(req.clone()), req);
+        }
+    }
+
+    #[test]
+    fn responses_roundtrip_bit_exact() {
+        for resp in [
+            Response::Hull {
+                id: 7,
+                upper: pts(&[(0.0, 0.0), (1.0, 1.0)]),
+                lower: pts(&[(0.0, 0.0), (0.5, 0.0), (1.0, 1.0)]),
+                backend: "pjrt".into(),
+                queue_ns: 123,
+                exec_ns: 456,
+            },
+            Response::Hull {
+                id: 1,
+                upper: vec![],
+                lower: vec![],
+                backend: String::new(),
+                queue_ns: 0,
+                exec_ns: 0,
+            },
+            Response::HullErr { id: 9, message: "empty point set".into() },
+            Response::MalformedErr { id: Some(31), message: "bad frame".into() },
+            Response::MalformedErr { id: None, message: "bad frame".into() },
+            Response::SessionOpened { id: 3, sid: 42 },
+            Response::SessionAdded { sid: 42, absorbed: 7, pending: 11, epoch: 2 },
+            Response::SessionHull {
+                sid: 42,
+                epoch: 5,
+                upper: pts(&[(0.0, 0.0), (1.0, 1.0)]),
+                lower: pts(&[(0.0, 0.0), (0.5, 0.0), (1.0, 1.0)]),
+            },
+            Response::SessionHull { sid: 1, epoch: 0, upper: vec![], lower: vec![] },
+            Response::SessionClosed { sid: 42 },
+            Response::SessionErr { verb: SessionVerb::Add, id: 42, message: "nope".into() },
+            Response::SessionErr { verb: SessionVerb::Open, id: 9, message: "full".into() },
+            Response::SessionErr { verb: SessionVerb::Hull, id: 2, message: "x".into() },
+            Response::SessionErr { verb: SessionVerb::Close, id: 2, message: "x".into() },
+            Response::Stats(r#"{"requests":1}"#.into()),
+            Response::Pong,
+        ] {
+            assert_eq!(roundtrip_resp(resp.clone()), resp);
+        }
+    }
+
+    #[test]
+    fn nan_and_infinity_coordinates_survive_the_wire() {
+        // the decoder is transport, not validation: non-finite values ride
+        // through bit-exactly and are rejected by the engine, exactly like
+        // the text protocol (Rust's f64 parser accepts "NaN"/"inf" too)
+        let mut buf = Vec::new();
+        encode_request(
+            &mut buf,
+            &Request::Hull { id: 1, points: pts(&[(f64::NAN, f64::INFINITY)]) },
+        );
+        match decode_request(&buf).unwrap() {
+            Decoded::Frame(Request::Hull { points, .. }, _) => {
+                assert!(points[0].x.is_nan());
+                assert_eq!(points[0].y, f64::INFINITY);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn incremental_need_is_exact() {
+        let req = Request::Hull { id: 5, points: pts(&[(0.1, 0.2), (0.3, 0.4)]) };
+        let mut buf = Vec::new();
+        encode_request(&mut buf, &req);
+        assert_eq!(buf.len(), 15 + 32);
+        // empty: need the header
+        assert!(matches!(decode_request(&[]).unwrap(), Decoded::Need(15)));
+        // header only: need the full frame
+        assert!(matches!(decode_request(&buf[..15]).unwrap(), Decoded::Need(n) if n == 47));
+        // one byte short
+        assert!(matches!(decode_request(&buf[..46]).unwrap(), Decoded::Need(47)));
+        // trailing bytes of the next frame are not consumed
+        let mut two = buf.clone();
+        encode_request(&mut two, &Request::Ping);
+        match decode_request(&two).unwrap() {
+            Decoded::Frame(r, used) => {
+                assert_eq!(r, req);
+                assert_eq!(used, 47);
+            }
+            other => panic!("{other:?}"),
+        }
+        match decode_request(&two[47..]).unwrap() {
+            Decoded::Frame(Request::Ping, 15) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_version_rejected() {
+        let e = decode_request(&[0x00; 15]).unwrap_err();
+        assert_eq!(e.frame_id(), None);
+        let mut buf = Vec::new();
+        encode_request(&mut buf, &Request::Ping);
+        buf[1] = 9; // bogus version
+        assert!(decode_request(&buf).is_err());
+        let e = decode_response(&[0x00; 16]).unwrap_err();
+        assert_eq!(e.frame_id(), None);
+    }
+
+    #[test]
+    fn oversized_count_rejected_before_payload() {
+        // header claims MAX+1 points with zero payload bytes present: the
+        // guard must fire from the header alone (no Need, no allocation)
+        let mut buf = Vec::new();
+        req_header(&mut buf, V_HULL, 1, (MAX_REQUEST_POINTS + 1) as u32);
+        assert_eq!(
+            decode_request(&buf),
+            Err(ProtoError::TooManyPoints {
+                id: 1,
+                points: MAX_REQUEST_POINTS + 1,
+                session: false
+            })
+        );
+        let mut buf = Vec::new();
+        req_header(&mut buf, V_SADD, 9, (MAX_REQUEST_POINTS + 1) as u32);
+        assert_eq!(
+            decode_request(&buf),
+            Err(ProtoError::TooManyPoints {
+                id: 9,
+                points: MAX_REQUEST_POINTS + 1,
+                session: true
+            })
+        );
+    }
+
+    #[test]
+    fn malformed_binary_frames_echo_the_id_when_parseable() {
+        // unknown verb: header parsed, id echoes
+        let mut buf = Vec::new();
+        req_header(&mut buf, 200, 77, 0);
+        assert_eq!(decode_request(&buf).unwrap_err().frame_id(), Some(77));
+        // payload on a payload-less verb: id echoes
+        let mut buf = Vec::new();
+        req_header(&mut buf, V_PING, 5, 3);
+        assert_eq!(decode_request(&buf).unwrap_err().frame_id(), Some(5));
+        // bad magic: nothing to echo
+        assert_eq!(decode_request(&[0xFF; 15]).unwrap_err().frame_id(), None);
+    }
+
+    #[test]
+    fn corrupt_response_length_rejected() {
+        let mut buf = Vec::new();
+        resp_header(&mut buf, K_STATS, 0, 0, MAX_RESPONSE_PAYLOAD + 1);
+        assert!(decode_response(&buf).is_err());
+        // truncated payload inside a declared-valid length
+        let mut buf = Vec::new();
+        resp_header(&mut buf, K_SOPENED, 0, 1, 4); // SOpened needs 8
+        buf.extend_from_slice(&[0u8; 4]);
+        assert!(decode_response(&buf).is_err());
+    }
+
+    #[test]
+    fn blocking_reader_matches_decoder_and_reports_eof() {
+        let req = Request::SessionAdd { sid: 6, points: pts(&[(0.5, 0.5)]) };
+        let mut buf = Vec::new();
+        write_request(&mut buf, &req).unwrap();
+        assert_eq!(read_request(&mut &buf[..]).unwrap(), req);
+        // empty stream: Eof
+        assert_eq!(read_request(&mut &b""[..]).unwrap_err(), ProtoError::Eof);
+        // mid-frame truncation: Eof passthrough, like the text reader
+        assert_eq!(read_request(&mut &buf[..10]).unwrap_err(), ProtoError::Eof);
+        assert_eq!(read_request(&mut &buf[..20]).unwrap_err(), ProtoError::Eof);
+        let resp = Response::Pong;
+        let mut rbuf = Vec::new();
+        write_response(&mut rbuf, &resp).unwrap();
+        assert_eq!(read_response(&mut &rbuf[..]).unwrap(), resp);
+    }
+
+    #[test]
+    fn auto_detection_octet_is_unambiguous() {
+        // no text verb starts with the binary magic
+        for first in [b'H', b'S', b'P', b'Q', b'E'] {
+            assert_ne!(first, REQ_MAGIC);
+        }
+        let mut buf = Vec::new();
+        encode_request(&mut buf, &Request::Quit);
+        assert_eq!(buf[0], REQ_MAGIC);
+    }
+}

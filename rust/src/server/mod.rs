@@ -1,11 +1,219 @@
-//! Network front-end: a line-oriented text protocol over TCP (the paper's
-//! own file format extended with framing), a threaded server, and a
-//! blocking client used by the examples, benches and integration tests.
+//! Network front-end: two wire protocols (line-oriented text and
+//! length-prefixed binary, auto-detected per connection on the first
+//! byte), two connection cores (the readiness-driven event loop on unix,
+//! a thread-per-connection compatibility shim everywhere), and a blocking
+//! client used by the examples, benches, CLI and integration tests.
+//!
+//! Both cores funnel every verb through the response builders at the
+//! bottom of this module, so the `{text,binary} x {threaded,event-loop}`
+//! matrix produces identical responses by construction — the protocol
+//! parity suite (`rust/tests/proto_parity.rs`) checks the product.
 
 pub mod client;
+#[cfg(unix)]
+mod event_loop;
+pub mod frame;
 pub mod proto;
+#[cfg(unix)]
+pub(crate) mod sys;
 pub mod tcp;
 
-pub use client::{HullClient, SessionAddReply, SessionHullReply};
+pub use client::{HullClient, SessionAddReply, SessionHullReply, WireProto};
 pub use proto::{Request, Response, SessionVerb};
-pub use tcp::{serve, serve_engine, serve_with_sessions, ServerConfig, ServerHandle};
+#[cfg(unix)]
+pub use sys::{nofile_limit, raise_nofile_limit};
+
+use std::sync::Arc;
+
+use crate::coordinator::{Coordinator, HullResponse, RequestError};
+use crate::engine::Engine;
+use crate::geometry::point::Point;
+use crate::stream::{SessionRegistry, StreamConfig};
+
+use proto::ProtoError;
+
+/// Server knobs (config file: `[server]`).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// bind address, e.g. "127.0.0.1:7878"; port 0 picks a free port.
+    pub addr: String,
+    /// I/O event-loop threads for the readiness-driven core
+    /// (0 = auto: `clamp(cores / 4, 1, 4)`).  Ignored by the threaded
+    /// compatibility shim, which spawns one handler thread per
+    /// connection regardless.
+    pub io_threads: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { addr: "127.0.0.1:7878".into(), io_threads: 0 }
+    }
+}
+
+/// Handle to a running server (shutdown on drop), wrapping whichever
+/// connection core is driving the listener.
+pub struct ServerHandle {
+    pub local_addr: std::net::SocketAddr,
+    core: HandleCore,
+}
+
+enum HandleCore {
+    Threaded(tcp::ThreadedHandle),
+    #[cfg(unix)]
+    Event(event_loop::EventHandle),
+}
+
+impl ServerHandle {
+    /// Currently open connections (gauge, not a lifetime total).
+    pub fn active_connections(&self) -> u64 {
+        match &self.core {
+            HandleCore::Threaded(h) => h.active_connections(),
+            #[cfg(unix)]
+            HandleCore::Event(h) => h.active_connections(),
+        }
+    }
+
+    /// The engine this server serves (shards, registries, metrics).
+    pub fn engine(&self) -> &Arc<Engine> {
+        match &self.core {
+            HandleCore::Threaded(h) => h.engine(),
+            #[cfg(unix)]
+            HandleCore::Event(h) => h.engine(),
+        }
+    }
+
+    /// Shard 0's session registry — meaningful only for 1-shard engines
+    /// (the [`serve`] / [`serve_with_sessions`] compatibility paths).
+    /// Sharded callers should use [`ServerHandle::engine`] and address
+    /// shards explicitly (`sweep_now` there sweeps every shard).
+    pub fn sessions(&self) -> &Arc<SessionRegistry> {
+        self.engine().shard_registry(0)
+    }
+
+    /// Stop accepting, drain in-flight work, join every server thread.
+    /// After this returns nothing races an engine shutdown that follows.
+    pub fn stop(self) {
+        // Drop runs the core-specific shutdown.
+    }
+}
+
+/// Deprecated thin wrapper: start serving one `coordinator` on
+/// `cfg.addr`.  Streaming sessions get a default-configured registry
+/// sharing the coordinator's metrics.  New code should build an
+/// [`Engine`] and call [`serve_engine`]; this wraps the coordinator as a
+/// 1-shard engine, which is bit- and protocol-identical.
+pub fn serve(coordinator: Arc<Coordinator>, cfg: &ServerConfig) -> std::io::Result<ServerHandle> {
+    let stream_cfg = StreamConfig::default().clamp_threshold_to(coordinator.max_points());
+    let sessions = Arc::new(SessionRegistry::new(stream_cfg, coordinator.metrics.clone()));
+    serve_with_sessions(coordinator, sessions, cfg)
+}
+
+/// Deprecated thin wrapper: [`serve`] with an explicitly configured
+/// session registry (clamp the threshold with
+/// [`StreamConfig::clamp_threshold_to`] — a threshold above the backend's
+/// request cap can never merge).  New code should build an [`Engine`] and
+/// call [`serve_engine`].
+pub fn serve_with_sessions(
+    coordinator: Arc<Coordinator>,
+    sessions: Arc<SessionRegistry>,
+    cfg: &ServerConfig,
+) -> std::io::Result<ServerHandle> {
+    serve_engine(Arc::new(Engine::single(coordinator, sessions)), cfg)
+}
+
+/// Start serving `engine` on `cfg.addr` (non-blocking; returns a handle).
+/// One-shot requests route to the cheapest shard; session verbs follow
+/// their sid's shard; `STATS` returns the merged aggregate plus a
+/// `per_shard` array and the `active_connections` gauge.
+///
+/// On unix this runs the readiness-driven event loop (`cfg.io_threads`
+/// loops multiplexing every connection); elsewhere it falls back to the
+/// thread-per-connection shim.
+pub fn serve_engine(engine: Arc<Engine>, cfg: &ServerConfig) -> std::io::Result<ServerHandle> {
+    #[cfg(unix)]
+    {
+        let h = event_loop::serve_event(engine, cfg)?;
+        Ok(ServerHandle { local_addr: h.local_addr, core: HandleCore::Event(h) })
+    }
+    #[cfg(not(unix))]
+    {
+        serve_engine_threaded(engine, cfg)
+    }
+}
+
+/// [`serve_engine`] on the thread-per-connection compatibility shim —
+/// the reference core the parity suite measures the event loop against.
+pub fn serve_engine_threaded(
+    engine: Arc<Engine>,
+    cfg: &ServerConfig,
+) -> std::io::Result<ServerHandle> {
+    let h = tcp::serve_threaded(engine, cfg)?;
+    Ok(ServerHandle { local_addr: h.local_addr, core: HandleCore::Threaded(h) })
+}
+
+// ---------------------------------------------------------------- parity
+// Request -> Response mapping shared verbatim by both connection cores.
+
+/// Map a decode failure to its error response: echo the failed frame's
+/// id when the header parsed, so id-correlating clients can still match
+/// the failure (session frames echo under their own verb).
+pub(crate) fn proto_error_response(e: &ProtoError) -> Response {
+    match e {
+        ProtoError::TooManyPoints { id, session: false, .. } => {
+            Response::HullErr { id: *id, message: e.to_string() }
+        }
+        ProtoError::TooManyPoints { id, session: true, .. } => {
+            Response::SessionErr { verb: SessionVerb::Add, id: *id, message: e.to_string() }
+        }
+        _ => Response::MalformedErr { id: e.frame_id(), message: e.to_string() },
+    }
+}
+
+pub(crate) fn hull_response(id: u64, result: Result<HullResponse, RequestError>) -> Response {
+    match result {
+        Ok(h) => Response::Hull {
+            id,
+            upper: h.upper,
+            lower: h.lower,
+            backend: h.backend.to_string(),
+            queue_ns: h.queue_ns,
+            exec_ns: h.exec_ns,
+        },
+        Err(e) => Response::HullErr { id, message: e.to_string() },
+    }
+}
+
+pub(crate) fn session_open_response(engine: &Engine, id: u64) -> Response {
+    match engine.session_open() {
+        Ok(sid) => Response::SessionOpened { id, sid },
+        Err(e) => Response::SessionErr { verb: SessionVerb::Open, id, message: e.to_string() },
+    }
+}
+
+pub(crate) fn session_add_response(engine: &Engine, sid: u64, points: &[Point]) -> Response {
+    match engine.session_add(sid, points) {
+        Ok(o) => Response::SessionAdded {
+            sid,
+            absorbed: o.absorbed,
+            pending: o.pending as u64,
+            epoch: o.epoch,
+        },
+        Err(e) => Response::SessionErr { verb: SessionVerb::Add, id: sid, message: e.to_string() },
+    }
+}
+
+pub(crate) fn session_hull_response(engine: &Engine, sid: u64) -> Response {
+    match engine.session_hull(sid) {
+        Ok(s) => Response::SessionHull { sid, epoch: s.epoch, upper: s.upper, lower: s.lower },
+        Err(e) => Response::SessionErr { verb: SessionVerb::Hull, id: sid, message: e.to_string() },
+    }
+}
+
+pub(crate) fn session_close_response(engine: &Engine, sid: u64) -> Response {
+    match engine.session_close(sid) {
+        Ok(()) => Response::SessionClosed { sid },
+        Err(e) => {
+            Response::SessionErr { verb: SessionVerb::Close, id: sid, message: e.to_string() }
+        }
+    }
+}

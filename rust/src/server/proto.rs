@@ -159,6 +159,86 @@ impl std::fmt::Display for ProtoError {
 /// Hard cap on request size (DoS guard; far above the largest artifact).
 pub const MAX_REQUEST_POINTS: usize = 1 << 22;
 
+/// Longest text line the incremental decoder will buffer before declaring
+/// the frame malformed.  A valid line is two f64 tokens (< 64 bytes); the
+/// guard only exists so an unterminated garbage stream cannot grow a
+/// connection's read buffer without bound.
+pub const MAX_TEXT_LINE: usize = 64 * 1024;
+
+/// Result of one incremental decode attempt over a byte buffer.
+#[derive(Debug, PartialEq)]
+pub enum Decoded<T> {
+    /// A complete frame, plus the number of bytes it consumed from the
+    /// front of the buffer.
+    Frame(T, usize),
+    /// Incomplete: the decoder needs at least this many TOTAL buffered
+    /// bytes before it can make progress (for the text protocol this is
+    /// simply `buf.len() + 1` — "any more input might finish the line").
+    Need(usize),
+}
+
+/// Incrementally decode one text-protocol request from the front of
+/// `buf` (the event-loop counterpart of [`read_request`]).
+///
+/// Parity with the blocking reader is by construction, not by a parallel
+/// implementation: this function only finds the frame's extent (header
+/// line + point lines for `HULL`/`SADD`), then delegates the actual parse
+/// to [`read_request`] over exactly those bytes, so every accept/reject
+/// decision and every error (id echo included) is bit-identical to the
+/// threaded path.  When the extent itself cannot be determined — a
+/// malformed header or an oversized count — delegation over the header
+/// line alone reproduces the exact error the blocking reader would raise.
+pub fn decode_text_request(buf: &[u8]) -> Result<Decoded<Request>, ProtoError> {
+    let Some(eol) = buf.iter().position(|&b| b == b'\n') else {
+        if buf.len() >= MAX_TEXT_LINE {
+            return Err(ProtoError::malformed("header line over limit without newline"));
+        }
+        return Ok(Decoded::Need(buf.len() + 1));
+    };
+    let header_end = eol + 1;
+    let header = String::from_utf8_lossy(&buf[..eol]);
+    let mut it = header.split_whitespace();
+    let verb = it.next().unwrap_or("");
+    let (frame_id, extra_lines) = match verb {
+        "HULL" | "SADD" => {
+            let id: Option<u64> = it.next().and_then(|s| s.parse().ok());
+            let m: Option<usize> = it.next().and_then(|s| s.parse().ok());
+            match (id, m) {
+                (Some(id), Some(m)) if m <= MAX_REQUEST_POINTS => (Some(id), m),
+                // bad header, or the DoS guard will trip: read_request
+                // over the header line alone raises the identical error
+                (id, _) => (id, 0),
+            }
+        }
+        _ => (None, 0),
+    };
+    let mut end = header_end;
+    for _ in 0..extra_lines {
+        match buf[end..].iter().position(|&b| b == b'\n') {
+            Some(p) if p < MAX_TEXT_LINE => end += p + 1,
+            Some(_) => {
+                let e = ProtoError::malformed("point line over limit");
+                return Err(match frame_id {
+                    Some(id) => e.with_id(id),
+                    None => e,
+                });
+            }
+            None => {
+                if buf.len() - end >= MAX_TEXT_LINE {
+                    let e = ProtoError::malformed("point line over limit without newline");
+                    return Err(match frame_id {
+                        Some(id) => e.with_id(id),
+                        None => e,
+                    });
+                }
+                return Ok(Decoded::Need(buf.len() + 1));
+            }
+        }
+    }
+    let req = read_request(&mut &buf[..end])?;
+    Ok(Decoded::Frame(req, end))
+}
+
 fn read_line<R: BufRead>(r: &mut R) -> Result<String, ProtoError> {
     let mut line = String::new();
     let n = r
@@ -582,6 +662,103 @@ mod tests {
             let e = read_request(&mut BufReader::new(bad.as_bytes())).unwrap_err();
             assert_eq!(e.frame_id(), None, "{bad:?}");
         }
+    }
+
+    // -------------------------------------------- incremental decoder
+
+    /// Every complete frame must decode identically through the
+    /// incremental path and the blocking reader, consuming exactly the
+    /// bytes it wrote.
+    fn assert_incremental_matches(bytes: &[u8]) {
+        let blocking = read_request(&mut BufReader::new(bytes));
+        match decode_text_request(bytes) {
+            Ok(Decoded::Frame(req, used)) => {
+                assert_eq!(used, bytes.len());
+                assert_eq!(Ok(req), blocking);
+            }
+            Ok(Decoded::Need(n)) => panic!("complete frame reported Need({n})"),
+            Err(e) => assert_eq!(Err(e), blocking),
+        }
+    }
+
+    #[test]
+    fn incremental_text_decode_matches_blocking_reader() {
+        let frames: &[&[u8]] = &[
+            b"HULL 42 2\n0.125 0.25\n0.5 0.75\n",
+            b"HULL 1 0\n",
+            b"SOPEN 3\n",
+            b"SADD 17 1\n0.5 0.5\n",
+            b"SADD 18 0\n",
+            b"SHULL 17\n",
+            b"SCLOSE 17\n",
+            b"STATS\n",
+            b"PING\n",
+            b"QUIT\n",
+            // malformed frames must fail identically (same id echo)
+            b"BOGUS\n",
+            b"HULL x y\n",
+            b"HULL 7 abc\n",
+            b"HULL 8 1\nnope\n",
+            b"SADD 7 abc\n",
+            b"SOPEN x\n",
+        ];
+        for f in frames {
+            assert_incremental_matches(f);
+        }
+    }
+
+    #[test]
+    fn incremental_text_decode_is_exactly_framed() {
+        let bytes = b"HULL 5 2\n0.1 0.2\n0.3 0.4\nPING\n";
+        // prefixes are incomplete, never errors
+        for cut in 0..bytes.len() - 6 {
+            match decode_text_request(&bytes[..cut]).unwrap() {
+                Decoded::Need(n) => assert_eq!(n, cut + 1),
+                Decoded::Frame(req, used) => panic!("early frame {req:?} at {used}"),
+            }
+        }
+        // the full buffer yields the HULL frame and leaves PING unread
+        match decode_text_request(bytes).unwrap() {
+            Decoded::Frame(Request::Hull { id: 5, points }, used) => {
+                assert_eq!(points.len(), 2);
+                assert_eq!(&bytes[used..], b"PING\n");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn incremental_text_decode_oversized_needs_no_payload() {
+        // the DoS guard must fire from the header line alone
+        let line = format!("HULL 1 {}\n", MAX_REQUEST_POINTS + 1);
+        assert_eq!(
+            decode_text_request(line.as_bytes()),
+            Err(ProtoError::TooManyPoints {
+                id: 1,
+                points: MAX_REQUEST_POINTS + 1,
+                session: false
+            })
+        );
+        let line = format!("SADD 9 {}\n", MAX_REQUEST_POINTS + 1);
+        assert_eq!(
+            decode_text_request(line.as_bytes()),
+            Err(ProtoError::TooManyPoints {
+                id: 9,
+                points: MAX_REQUEST_POINTS + 1,
+                session: true
+            })
+        );
+    }
+
+    #[test]
+    fn incremental_text_decode_bounds_unterminated_lines() {
+        // an endless header line must be rejected, not buffered forever
+        let junk = vec![b'A'; MAX_TEXT_LINE];
+        assert!(decode_text_request(&junk).is_err());
+        // an endless point line too, echoing the parsed id
+        let mut buf = b"HULL 3 1\n".to_vec();
+        buf.resize(buf.len() + MAX_TEXT_LINE, b'7');
+        assert_eq!(decode_text_request(&buf).unwrap_err().frame_id(), Some(3));
     }
 
     #[test]

@@ -1,0 +1,508 @@
+//! Minimal readiness-notification syscalls for the event loop: an
+//! `epoll(7)` poller on Linux with a `poll(2)` fallback on other unixes,
+//! a self-pipe waker, and NOFILE rlimit helpers — all via raw `extern
+//! "C"` declarations against the libc that `std` already links, so no
+//! external crate (and no async runtime) is needed.
+//!
+//! Scope is deliberately tiny: level-triggered readiness on sockets plus
+//! a cross-thread wake primitive.  Everything else (non-blocking mode,
+//! accept, read/write) goes through `std::net`.
+
+use std::io;
+use std::os::raw::{c_int, c_void};
+use std::os::unix::io::RawFd;
+
+/// Interest in readability.
+pub const EV_READ: u32 = 0b01;
+/// Interest in writability.
+pub const EV_WRITE: u32 = 0b10;
+
+/// One readiness event.  Error/hangup conditions are folded into the
+/// readiness flags (mio-style): a dead socket reports readable, the next
+/// `read` returns 0 or an error, and the connection closes through the
+/// normal path.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+fn last_errno() -> io::Error {
+    io::Error::last_os_error()
+}
+
+fn cvt(ret: c_int) -> io::Result<c_int> {
+    if ret < 0 {
+        Err(last_errno())
+    } else {
+        Ok(ret)
+    }
+}
+
+// ---------------------------------------------------------------- linux
+
+#[cfg(target_os = "linux")]
+mod imp {
+    use super::*;
+
+    // The kernel packs epoll_event on x86_64 (12 bytes); other arches use
+    // natural alignment.  Getting this wrong corrupts every second event.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLL_CTL_MOD: c_int = 3;
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+    const EPOLL_CLOEXEC: c_int = 0x80000;
+
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    const MAX_EVENTS: usize = 1024;
+
+    /// Level-triggered epoll instance.
+    pub struct Poller {
+        epfd: c_int,
+        buf: Vec<EpollEvent>,
+    }
+
+    fn mask(interest: u32) -> u32 {
+        let mut m = 0u32;
+        if interest & EV_READ != 0 {
+            m |= EPOLLIN | EPOLLRDHUP;
+        }
+        if interest & EV_WRITE != 0 {
+            m |= EPOLLOUT;
+        }
+        m
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            let epfd = cvt(unsafe { epoll_create1(EPOLL_CLOEXEC) })?;
+            Ok(Poller { epfd, buf: vec![EpollEvent { events: 0, data: 0 }; MAX_EVENTS] })
+        }
+
+        fn ctl(&mut self, op: c_int, fd: RawFd, token: u64, interest: u32) -> io::Result<()> {
+            let mut ev = EpollEvent { events: mask(interest), data: token };
+            cvt(unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) })?;
+            Ok(())
+        }
+
+        pub fn add(&mut self, fd: RawFd, token: u64, interest: u32) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, interest)
+        }
+
+        pub fn modify(&mut self, fd: RawFd, token: u64, interest: u32) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, interest)
+        }
+
+        pub fn delete(&mut self, fd: RawFd) -> io::Result<()> {
+            let mut ev = EpollEvent { events: 0, data: 0 };
+            cvt(unsafe { epoll_ctl(self.epfd, EPOLL_CTL_DEL, fd, &mut ev) })?;
+            Ok(())
+        }
+
+        /// Wait for readiness; `timeout_ms < 0` blocks indefinitely.
+        /// EINTR returns an empty event set instead of an error.
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+            out.clear();
+            let n = unsafe {
+                epoll_wait(self.epfd, self.buf.as_mut_ptr(), MAX_EVENTS as c_int, timeout_ms)
+            };
+            if n < 0 {
+                let e = last_errno();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for ev in self.buf.iter().take(n as usize).copied() {
+                let bits = { ev.events };
+                let token = { ev.data };
+                out.push(Event {
+                    token,
+                    readable: bits & (EPOLLIN | EPOLLRDHUP | EPOLLERR | EPOLLHUP) != 0,
+                    writable: bits & (EPOLLOUT | EPOLLERR | EPOLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe { close(self.epfd) };
+        }
+    }
+}
+
+// ------------------------------------------------------ other unixes
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod imp {
+    use super::*;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct PollFd {
+        fd: c_int,
+        events: i16,
+        revents: i16,
+    }
+
+    const POLLIN: i16 = 0x001;
+    const POLLOUT: i16 = 0x004;
+    const POLLERR: i16 = 0x008;
+    const POLLHUP: i16 = 0x010;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: std::os::raw::c_uint, timeout: c_int) -> c_int;
+    }
+
+    /// `poll(2)`-backed poller: O(n) per wait, fine as a portability
+    /// fallback (the Linux build — every deployment target — uses epoll).
+    pub struct Poller {
+        interests: Vec<(RawFd, u64, u32)>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller { interests: Vec::new() })
+        }
+
+        pub fn add(&mut self, fd: RawFd, token: u64, interest: u32) -> io::Result<()> {
+            self.interests.push((fd, token, interest));
+            Ok(())
+        }
+
+        pub fn modify(&mut self, fd: RawFd, token: u64, interest: u32) -> io::Result<()> {
+            match self.interests.iter_mut().find(|(f, _, _)| *f == fd) {
+                Some(slot) => {
+                    *slot = (fd, token, interest);
+                    Ok(())
+                }
+                None => Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered")),
+            }
+        }
+
+        pub fn delete(&mut self, fd: RawFd) -> io::Result<()> {
+            self.interests.retain(|(f, _, _)| *f != fd);
+            Ok(())
+        }
+
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+            out.clear();
+            let mut fds: Vec<PollFd> = self
+                .interests
+                .iter()
+                .map(|&(fd, _, interest)| {
+                    let mut events = 0i16;
+                    if interest & EV_READ != 0 {
+                        events |= POLLIN;
+                    }
+                    if interest & EV_WRITE != 0 {
+                        events |= POLLOUT;
+                    }
+                    PollFd { fd, events, revents: 0 }
+                })
+                .collect();
+            let n = unsafe {
+                poll(fds.as_mut_ptr(), fds.len() as std::os::raw::c_uint, timeout_ms)
+            };
+            if n < 0 {
+                let e = last_errno();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for (pfd, &(_, token, _)) in fds.iter().zip(self.interests.iter()) {
+                let r = pfd.revents;
+                if r == 0 {
+                    continue;
+                }
+                out.push(Event {
+                    token,
+                    readable: r & (POLLIN | POLLERR | POLLHUP) != 0,
+                    writable: r & (POLLOUT | POLLERR | POLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+pub use imp::Poller;
+
+// ----------------------------------------------------------- self-pipe
+
+extern "C" {
+    fn pipe(fds: *mut c_int) -> c_int;
+    fn fcntl(fd: c_int, cmd: c_int, arg: c_int) -> c_int;
+    fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+    fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+}
+
+mod fd_close {
+    use super::c_int;
+    extern "C" {
+        pub fn close(fd: c_int) -> c_int;
+    }
+}
+
+const F_GETFL: c_int = 3;
+const F_SETFL: c_int = 4;
+const F_SETFD: c_int = 2;
+const FD_CLOEXEC: c_int = 1;
+#[cfg(target_os = "linux")]
+const O_NONBLOCK: c_int = 0o4000;
+#[cfg(all(unix, not(target_os = "linux")))]
+const O_NONBLOCK: c_int = 0x0004;
+
+fn set_nonblocking_cloexec(fd: RawFd) -> io::Result<()> {
+    let flags = cvt(unsafe { fcntl(fd, F_GETFL, 0) })?;
+    cvt(unsafe { fcntl(fd, F_SETFL, flags | O_NONBLOCK) })?;
+    cvt(unsafe { fcntl(fd, F_SETFD, FD_CLOEXEC) })?;
+    Ok(())
+}
+
+/// A self-pipe wake primitive: any thread calls [`Waker::wake`], the
+/// owning event loop sees the read end become readable and calls
+/// [`Waker::drain`].  Both ends are non-blocking, so a full pipe makes
+/// `wake` a no-op (the loop is already pending wake-up) and a wake after
+/// the loop closed its end fails harmlessly (Rust ignores `SIGPIPE`).
+pub struct Waker {
+    read_fd: RawFd,
+    write_fd: RawFd,
+}
+
+// Raw fds are plain integers; writes to a pipe are atomic at this size.
+unsafe impl Send for Waker {}
+unsafe impl Sync for Waker {}
+
+impl Waker {
+    pub fn new() -> io::Result<Waker> {
+        let mut fds = [0 as c_int; 2];
+        cvt(unsafe { pipe(fds.as_mut_ptr()) })?;
+        let (r, w) = (fds[0], fds[1]);
+        for fd in [r, w] {
+            if let Err(e) = set_nonblocking_cloexec(fd) {
+                unsafe {
+                    fd_close::close(r);
+                    fd_close::close(w);
+                }
+                return Err(e);
+            }
+        }
+        Ok(Waker { read_fd: r, write_fd: w })
+    }
+
+    /// The fd to register with [`Poller::add`] under `EV_READ`.
+    pub fn fd(&self) -> RawFd {
+        self.read_fd
+    }
+
+    /// Make the owning loop's next `wait` return immediately.
+    pub fn wake(&self) {
+        let byte = 1u8;
+        unsafe { write(self.write_fd, &byte as *const u8 as *const c_void, 1) };
+    }
+
+    /// Swallow all queued wake bytes (call when the read end polls ready).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        loop {
+            let n = unsafe { read(self.read_fd, buf.as_mut_ptr() as *mut c_void, buf.len()) };
+            if n <= 0 || (n as usize) < buf.len() {
+                break;
+            }
+        }
+    }
+}
+
+impl Drop for Waker {
+    fn drop(&mut self) {
+        unsafe {
+            fd_close::close(self.read_fd);
+            fd_close::close(self.write_fd);
+        }
+    }
+}
+
+// ------------------------------------------------------------- rlimits
+
+#[repr(C)]
+struct Rlimit {
+    cur: u64,
+    max: u64,
+}
+
+#[cfg(target_os = "linux")]
+const RLIMIT_NOFILE: c_int = 7;
+#[cfg(all(unix, not(target_os = "linux")))]
+const RLIMIT_NOFILE: c_int = 8;
+
+extern "C" {
+    fn getrlimit(resource: c_int, rlim: *mut Rlimit) -> c_int;
+    fn setrlimit(resource: c_int, rlim: *const Rlimit) -> c_int;
+}
+
+/// Current `(soft, hard)` open-file limit.
+pub fn nofile_limit() -> io::Result<(u64, u64)> {
+    let mut r = Rlimit { cur: 0, max: 0 };
+    cvt(unsafe { getrlimit(RLIMIT_NOFILE, &mut r) })?;
+    Ok((r.cur, r.max))
+}
+
+/// Best-effort raise of the soft NOFILE limit toward `want` (capped at
+/// the hard limit); returns the effective soft limit afterwards.  Used by
+/// the 10k-connection integration test, which skips when the box refuses.
+pub fn raise_nofile_limit(want: u64) -> u64 {
+    let Ok((cur, max)) = nofile_limit() else { return 0 };
+    if cur >= want {
+        return cur;
+    }
+    let target = want.min(max);
+    let r = Rlimit { cur: target, max };
+    if unsafe { setrlimit(RLIMIT_NOFILE, &r) } == 0 {
+        target
+    } else {
+        cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read as _, Write as _};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    #[test]
+    fn waker_wakes_and_drains() {
+        let mut poller = Poller::new().unwrap();
+        let waker = Waker::new().unwrap();
+        poller.add(waker.fd(), 1, EV_READ).unwrap();
+        let mut events = Vec::new();
+
+        // no wake: times out empty
+        poller.wait(&mut events, 0).unwrap();
+        assert!(events.is_empty());
+
+        waker.wake();
+        waker.wake(); // coalesces
+        poller.wait(&mut events, 1000).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 1);
+        assert!(events[0].readable);
+        waker.drain();
+
+        // drained: quiet again
+        poller.wait(&mut events, 0).unwrap();
+        assert!(events.is_empty());
+    }
+
+    #[test]
+    fn waker_wakes_from_another_thread() {
+        let mut poller = Poller::new().unwrap();
+        let waker = std::sync::Arc::new(Waker::new().unwrap());
+        poller.add(waker.fd(), 7, EV_READ).unwrap();
+        let w2 = waker.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            w2.wake();
+        });
+        let mut events = Vec::new();
+        poller.wait(&mut events, 5000).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 7);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn socket_readiness_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+
+        let mut poller = Poller::new().unwrap();
+        poller.add(server.as_raw_fd(), 42, EV_READ).unwrap();
+        let mut events = Vec::new();
+
+        poller.wait(&mut events, 0).unwrap();
+        assert!(events.is_empty(), "no data yet");
+
+        client.write_all(b"hi").unwrap();
+        client.flush().unwrap();
+        poller.wait(&mut events, 2000).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 42);
+        assert!(events[0].readable);
+
+        // level-triggered: still readable until consumed
+        poller.wait(&mut events, 100).unwrap();
+        assert_eq!(events.len(), 1);
+        let mut s = server;
+        let mut buf = [0u8; 8];
+        assert_eq!(s.read(&mut buf).unwrap(), 2);
+
+        // modify to write interest: an idle socket is instantly writable
+        poller.modify(s.as_raw_fd(), 43, EV_WRITE).unwrap();
+        poller.wait(&mut events, 1000).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].token, 43);
+        assert!(events[0].writable);
+
+        poller.delete(s.as_raw_fd()).unwrap();
+        poller.wait(&mut events, 0).unwrap();
+        assert!(events.is_empty());
+    }
+
+    #[test]
+    fn peer_close_reports_readable() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+
+        let mut poller = Poller::new().unwrap();
+        poller.add(server.as_raw_fd(), 9, EV_READ).unwrap();
+        drop(client);
+        let mut events = Vec::new();
+        poller.wait(&mut events, 2000).unwrap();
+        assert_eq!(events.len(), 1);
+        assert!(events[0].readable, "hangup folds into readability");
+    }
+
+    #[test]
+    fn nofile_limits_query() {
+        let (cur, max) = nofile_limit().unwrap();
+        assert!(cur > 0 && max >= cur);
+        // raising toward the current value is a no-op that reports cur
+        assert_eq!(raise_nofile_limit(cur), cur);
+    }
+}

@@ -1,42 +1,37 @@
-//! Threaded TCP server: one accept loop, one handler thread per
-//! connection, all sharing the [`Engine`] facade — one-shot requests are
-//! routed to the cheapest coordinator shard, session verbs to their sid's
-//! pinned shard (thread-based substitute for the usual async runtime;
-//! connections are long-lived and few, work is CPU-bound, so
-//! thread-per-connection is the right shape here).
+//! Thread-per-connection compatibility shim: one accept loop, one
+//! handler thread per connection, all sharing the [`Engine`] facade —
+//! one-shot requests are routed to the cheapest coordinator shard,
+//! session verbs to their sid's pinned shard.  The readiness-driven
+//! event loop (`server::event_loop`) is the default core on unix; this
+//! shim is the reference implementation the parity suite measures it
+//! against, and the only core on non-unix targets.
 //!
-//! Handler threads are *tracked*, not detached: `ServerHandle::stop`
-//! shuts every live connection's socket down and joins the handlers, so
-//! nothing races an engine shutdown that follows.
+//! Handler threads are *tracked*, not detached: `ThreadedHandle` shuts
+//! every live connection's socket down and joins the handlers on stop,
+//! so nothing races an engine shutdown that follows.  The accept loop is
+//! woken by a self-pipe on unix (a loopback connect-poke cannot reach a
+//! wildcard bind like `0.0.0.0:0`), with the poke kept as the non-unix
+//! fallback.
 
-use std::io::{BufReader, BufWriter};
+use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::fd::AsRawFd;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use crate::coordinator::{Coordinator, HullRequest};
+use crate::coordinator::HullRequest;
 use crate::engine::Engine;
-use crate::log_info;
-use crate::stream::{SessionRegistry, StreamConfig};
+use crate::{log_debug, log_info};
 
-use super::proto::{self, ProtoError, Request, Response, SessionVerb};
-
-/// Server knobs (config file: `[server]`).
-#[derive(Clone, Debug)]
-pub struct ServerConfig {
-    /// bind address, e.g. "127.0.0.1:7878"; port 0 picks a free port.
-    pub addr: String,
-}
-
-impl Default for ServerConfig {
-    fn default() -> Self {
-        ServerConfig { addr: "127.0.0.1:7878".into() }
-    }
-}
+#[cfg(unix)]
+use super::sys;
+use super::proto::{self, ProtoError, Request, Response};
+use super::{frame, ServerConfig};
 
 /// A live connection: the handler thread plus a socket handle the accept
-/// loop keeps so `stop` can unblock a handler parked in `read_line`.
+/// loop keeps so `stop` can unblock a handler parked in a blocking read.
 struct ConnSlot {
     id: u64,
     handle: JoinHandle<()>,
@@ -59,41 +54,33 @@ struct ConnRegistry {
     next_id: AtomicU64,
 }
 
-/// Handle to a running server (shutdown on drop).
-pub struct ServerHandle {
-    pub local_addr: std::net::SocketAddr,
+/// Handle to a running threaded server (shutdown on drop).
+pub(crate) struct ThreadedHandle {
+    pub(crate) local_addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
     registry: Arc<ConnRegistry>,
     engine: Arc<Engine>,
+    #[cfg(unix)]
+    waker: Arc<sys::Waker>,
 }
 
-impl ServerHandle {
-    /// Currently open connections (gauge, not a lifetime total).
-    pub fn active_connections(&self) -> u64 {
+impl ThreadedHandle {
+    pub(crate) fn active_connections(&self) -> u64 {
         self.registry.active.load(Ordering::Relaxed)
     }
 
-    /// The engine this server serves (shards, registries, metrics).
-    pub fn engine(&self) -> &Arc<Engine> {
+    pub(crate) fn engine(&self) -> &Arc<Engine> {
         &self.engine
-    }
-
-    /// Shard 0's session registry — meaningful only for 1-shard engines
-    /// (the [`serve`] / [`serve_with_sessions`] compatibility paths).
-    /// Sharded callers should use [`ServerHandle::engine`] and address
-    /// shards explicitly (`sweep_now` there sweeps every shard).
-    pub fn sessions(&self) -> &Arc<SessionRegistry> {
-        self.engine.shard_registry(0)
-    }
-
-    pub fn stop(mut self) {
-        self.stop_inner();
     }
 
     fn stop_inner(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // poke the accept loop awake
+        // wake the accept loop: self-pipe on unix (works for wildcard
+        // binds), loopback connect-poke elsewhere
+        #[cfg(unix)]
+        self.waker.wake();
+        #[cfg(not(unix))]
         let _ = TcpStream::connect(self.local_addr);
         if let Some(h) = self.accept_thread.take() {
             let _ = h.join();
@@ -115,250 +102,250 @@ impl ServerHandle {
     }
 }
 
-impl Drop for ServerHandle {
+impl Drop for ThreadedHandle {
     fn drop(&mut self) {
         self.stop_inner();
     }
 }
 
-/// Deprecated thin wrapper: start serving one `coordinator` on
-/// `cfg.addr`.  Streaming sessions get a default-configured registry
-/// sharing the coordinator's metrics.  New code should build an
-/// [`Engine`] and call [`serve_engine`]; this wraps the coordinator as a
-/// 1-shard engine, which is bit- and protocol-identical.
-pub fn serve(coordinator: Arc<Coordinator>, cfg: &ServerConfig) -> std::io::Result<ServerHandle> {
-    let stream_cfg = StreamConfig::default().clamp_threshold_to(coordinator.max_points());
-    let sessions = Arc::new(SessionRegistry::new(stream_cfg, coordinator.metrics.clone()));
-    serve_with_sessions(coordinator, sessions, cfg)
-}
-
-/// Deprecated thin wrapper: [`serve`] with an explicitly configured
-/// session registry (clamp the threshold with
-/// [`StreamConfig::clamp_threshold_to`] — a threshold above the backend's
-/// request cap can never merge).  New code should build an [`Engine`] and
-/// call [`serve_engine`].
-pub fn serve_with_sessions(
-    coordinator: Arc<Coordinator>,
-    sessions: Arc<SessionRegistry>,
+/// Start the threaded core on `cfg.addr` (non-blocking; returns a handle).
+pub(crate) fn serve_threaded(
+    engine: Arc<Engine>,
     cfg: &ServerConfig,
-) -> std::io::Result<ServerHandle> {
-    serve_engine(Arc::new(Engine::single(coordinator, sessions)), cfg)
-}
-
-/// Start serving `engine` on `cfg.addr` (non-blocking; returns a handle).
-/// One-shot requests route to the cheapest shard; session verbs follow
-/// their sid's shard; `STATS` returns the merged aggregate plus a
-/// `per_shard` array and the `active_connections` gauge.
-pub fn serve_engine(engine: Arc<Engine>, cfg: &ServerConfig) -> std::io::Result<ServerHandle> {
+) -> std::io::Result<ThreadedHandle> {
     let listener = TcpListener::bind(&cfg.addr)?;
     let local_addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
     let registry = Arc::new(ConnRegistry::default());
     log_info!(
-        "serving on {local_addr} (backend={} shards={})",
+        "serving on {local_addr} (backend={} shards={} core=threaded)",
         engine.backend_name(),
         engine.shard_count()
     );
 
+    #[cfg(unix)]
+    let waker = Arc::new(sys::Waker::new()?);
+    #[cfg(unix)]
+    let poller = {
+        listener.set_nonblocking(true)?;
+        let mut p = sys::Poller::new()?;
+        p.add(listener.as_raw_fd(), 0, sys::EV_READ)?;
+        p.add(waker.fd(), 1, sys::EV_READ)?;
+        p
+    };
+
     let stop2 = stop.clone();
     let reg2 = registry.clone();
     let engine2 = engine.clone();
+    #[cfg(unix)]
+    let waker2 = waker.clone();
     let accept_thread = std::thread::Builder::new()
         .name("hull-accept".into())
         .spawn(move || {
-            for stream in listener.incoming() {
-                if stop2.load(Ordering::SeqCst) {
-                    break;
-                }
-                match stream {
-                    Ok(s) => {
-                        let eng = engine2.clone();
-                        let reg = reg2.clone();
-                        let tracked = match s.try_clone() {
-                            Ok(t) => t,
-                            Err(_) => continue, // dead socket; skip it
-                        };
-                        reg.active.fetch_add(1, Ordering::Relaxed);
-                        let conn_id = reg.next_id.fetch_add(1, Ordering::Relaxed);
-                        let reg_in = reg.clone();
-                        // hold the registry lock across the spawn: the
-                        // slot is pushed before the handler can possibly
-                        // look for it, so the self-reap below always
-                        // finds it — an instantly-exiting handler just
-                        // blocks on the mutex for the push's duration
-                        let Ok(mut conns) = reg.conns.lock() else {
-                            // poisoned (a handler panicked mid-reap):
-                            // tracking is gone; refuse the connection
-                            reg.active.fetch_sub(1, Ordering::Relaxed);
-                            continue;
-                        };
-                        let spawned = std::thread::Builder::new()
-                            .name("hull-conn".into())
-                            .spawn(move || {
-                                handle_connection(s, eng, &reg_in.active);
-                                reg_in.active.fetch_sub(1, Ordering::Relaxed);
-                                // self-reap: drop the tracked stream clone
-                                // now, not at the next accept — only the
-                                // coordinator-free tail of this thread
-                                // outlives the slot, so `stop` loses
-                                // nothing by not joining it.  Dropping our
-                                // own JoinHandle merely detaches.
-                                if let Ok(mut conns) = reg_in.conns.lock() {
-                                    if let Some(i) =
-                                        conns.iter().position(|c| c.id == conn_id)
-                                    {
-                                        conns.swap_remove(i);
-                                    }
-                                }
-                            });
-                        match spawned {
-                            Ok(handle) => {
-                                conns.push(ConnSlot { id: conn_id, handle, stream: tracked });
-                            }
-                            Err(e) => {
-                                reg.active.fetch_sub(1, Ordering::Relaxed);
-                                log_info!("spawn error: {e}");
-                            }
-                        }
-                    }
-                    Err(e) => {
-                        log_info!("accept error: {e}");
-                    }
-                }
-            }
+            #[cfg(unix)]
+            accept_loop_unix(listener, poller, &waker2, &stop2, &reg2, &engine2);
+            #[cfg(not(unix))]
+            accept_loop_blocking(listener, &stop2, &reg2, &engine2);
         })?;
 
-    Ok(ServerHandle { local_addr, stop, accept_thread: Some(accept_thread), registry, engine })
+    Ok(ThreadedHandle {
+        local_addr,
+        stop,
+        accept_thread: Some(accept_thread),
+        registry,
+        engine,
+        #[cfg(unix)]
+        waker,
+    })
 }
 
-fn handle_connection(stream: TcpStream, engine: Arc<Engine>, active: &AtomicU64) {
-    let peer = stream.peer_addr().ok();
-    let mut reader = BufReader::new(match stream.try_clone() {
-        Ok(s) => s,
-        Err(_) => return,
-    });
-    let mut writer = BufWriter::new(stream);
-    loop {
-        let req = match proto::read_request(&mut reader) {
-            Ok(r) => r,
-            Err(ProtoError::Eof) => break,
-            Err(e) => {
-                // echo the failed frame's id when the header parsed, so
-                // id-correlating clients can still match the failure
-                // (session frames echo under their own verb)
-                let resp = match &e {
-                    ProtoError::TooManyPoints { id, session: false, .. } => {
-                        Response::HullErr { id: *id, message: e.to_string() }
+/// Non-blocking accept loop parked in poll over {listener, self-pipe}:
+/// a `stop` wakes it without needing a routable loopback connect.
+#[cfg(unix)]
+fn accept_loop_unix(
+    listener: TcpListener,
+    mut poller: sys::Poller,
+    waker: &sys::Waker,
+    stop: &AtomicBool,
+    registry: &Arc<ConnRegistry>,
+    engine: &Arc<Engine>,
+) {
+    let mut events = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        if let Err(e) = poller.wait(&mut events, -1) {
+            log_info!("accept poll error: {e}");
+            break;
+        }
+        let mut accept_ready = false;
+        for ev in &events {
+            if ev.token == 1 {
+                waker.drain();
+            } else {
+                accept_ready = true;
+            }
+        }
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        if !accept_ready {
+            continue;
+        }
+        loop {
+            match listener.accept() {
+                Ok((s, _)) => {
+                    // accepted sockets must be blocking regardless of
+                    // what the listener's flag was inherited as
+                    if s.set_nonblocking(false).is_err() {
+                        continue;
                     }
-                    ProtoError::TooManyPoints { id, session: true, .. } => {
-                        Response::SessionErr {
-                            verb: SessionVerb::Add,
-                            id: *id,
-                            message: e.to_string(),
-                        }
-                    }
-                    _ => Response::MalformedErr { id: e.frame_id(), message: e.to_string() },
-                };
-                let _ = proto::write_response(&mut writer, &resp);
-                break;
-            }
-        };
-        match req {
-            Request::Quit => break,
-            Request::Ping => {
-                if proto::write_response(&mut writer, &Response::Pong).is_err() {
-                    break;
+                    accept_one(s, registry, engine);
                 }
-            }
-            Request::Stats => {
-                // merged aggregate + per_shard array, plus the server's
-                // connection gauge (engine-global, read exactly once)
-                let snap = engine.stats(Some(active.load(Ordering::Relaxed))).0.to_string();
-                if proto::write_response(&mut writer, &Response::Stats(snap)).is_err() {
-                    break;
-                }
-            }
-            Request::Hull { id, points } => {
-                let reply = engine.submit(HullRequest { id, points });
-                let resp = match reply.recv() {
-                    Ok(Ok(h)) => Response::Hull {
-                        id,
-                        upper: h.upper,
-                        lower: h.lower,
-                        backend: h.backend.to_string(),
-                        queue_ns: h.queue_ns,
-                        exec_ns: h.exec_ns,
-                    },
-                    Ok(Err(e)) => Response::HullErr { id, message: e.to_string() },
-                    Err(_) => Response::HullErr { id, message: "coordinator gone".into() },
-                };
-                if proto::write_response(&mut writer, &resp).is_err() {
-                    break;
-                }
-            }
-            Request::SessionOpen { id } => {
-                let resp = match engine.session_open() {
-                    Ok(sid) => Response::SessionOpened { id, sid },
-                    Err(e) => Response::SessionErr {
-                        verb: SessionVerb::Open,
-                        id,
-                        message: e.to_string(),
-                    },
-                };
-                if proto::write_response(&mut writer, &resp).is_err() {
-                    break;
-                }
-            }
-            Request::SessionAdd { sid, points } => {
-                let resp = match engine.session_add(sid, &points) {
-                    Ok(o) => Response::SessionAdded {
-                        sid,
-                        absorbed: o.absorbed,
-                        pending: o.pending as u64,
-                        epoch: o.epoch,
-                    },
-                    Err(e) => Response::SessionErr {
-                        verb: SessionVerb::Add,
-                        id: sid,
-                        message: e.to_string(),
-                    },
-                };
-                if proto::write_response(&mut writer, &resp).is_err() {
-                    break;
-                }
-            }
-            Request::SessionHull { sid } => {
-                let resp = match engine.session_hull(sid) {
-                    Ok(s) => Response::SessionHull {
-                        sid,
-                        epoch: s.epoch,
-                        upper: s.upper,
-                        lower: s.lower,
-                    },
-                    Err(e) => Response::SessionErr {
-                        verb: SessionVerb::Hull,
-                        id: sid,
-                        message: e.to_string(),
-                    },
-                };
-                if proto::write_response(&mut writer, &resp).is_err() {
-                    break;
-                }
-            }
-            Request::SessionClose { sid } => {
-                let resp = match engine.session_close(sid) {
-                    Ok(()) => Response::SessionClosed { sid },
-                    Err(e) => Response::SessionErr {
-                        verb: SessionVerb::Close,
-                        id: sid,
-                        message: e.to_string(),
-                    },
-                };
-                if proto::write_response(&mut writer, &resp).is_err() {
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => {
+                    log_info!("accept error: {e}");
                     break;
                 }
             }
         }
     }
-    let _ = peer;
+}
+
+#[cfg(not(unix))]
+fn accept_loop_blocking(
+    listener: TcpListener,
+    stop: &AtomicBool,
+    registry: &Arc<ConnRegistry>,
+    engine: &Arc<Engine>,
+) {
+    for stream in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match stream {
+            Ok(s) => accept_one(s, registry, engine),
+            Err(e) => log_info!("accept error: {e}"),
+        }
+    }
+}
+
+/// Track and spawn the handler for one accepted connection.
+fn accept_one(s: TcpStream, registry: &Arc<ConnRegistry>, engine: &Arc<Engine>) {
+    let eng = engine.clone();
+    let tracked = match s.try_clone() {
+        Ok(t) => t,
+        Err(_) => return, // dead socket; skip it
+    };
+    registry.active.fetch_add(1, Ordering::Relaxed);
+    let conn_id = registry.next_id.fetch_add(1, Ordering::Relaxed);
+    let reg_in = registry.clone();
+    // hold the registry lock across the spawn: the slot is pushed before
+    // the handler can possibly look for it, so the self-reap below always
+    // finds it — an instantly-exiting handler just blocks on the mutex
+    // for the push's duration
+    let Ok(mut conns) = registry.conns.lock() else {
+        // poisoned (a handler panicked mid-reap): tracking is gone;
+        // refuse the connection
+        registry.active.fetch_sub(1, Ordering::Relaxed);
+        return;
+    };
+    let spawned = std::thread::Builder::new().name("hull-conn".into()).spawn(move || {
+        handle_connection(s, eng, &reg_in.active);
+        reg_in.active.fetch_sub(1, Ordering::Relaxed);
+        // self-reap: drop the tracked stream clone now, not at the next
+        // accept — only the coordinator-free tail of this thread outlives
+        // the slot, so `stop` loses nothing by not joining it.  Dropping
+        // our own JoinHandle merely detaches.
+        if let Ok(mut conns) = reg_in.conns.lock() {
+            if let Some(i) = conns.iter().position(|c| c.id == conn_id) {
+                conns.swap_remove(i);
+            }
+        }
+    });
+    match spawned {
+        Ok(handle) => {
+            conns.push(ConnSlot { id: conn_id, handle, stream: tracked });
+        }
+        Err(e) => {
+            registry.active.fetch_sub(1, Ordering::Relaxed);
+            log_info!("spawn error: {e}");
+        }
+    }
+}
+
+fn write_response<W: Write>(w: &mut W, binary: bool, resp: &Response) -> std::io::Result<()> {
+    if binary {
+        frame::write_response(w, resp)
+    } else {
+        proto::write_response(w, resp)
+    }
+}
+
+fn handle_connection(stream: TcpStream, engine: Arc<Engine>, active: &AtomicU64) {
+    let peer = match stream.peer_addr() {
+        Ok(p) => p.to_string(),
+        Err(_) => "<unknown>".into(),
+    };
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut writer = BufWriter::new(stream);
+    log_debug!("conn {peer}: connected");
+
+    // Per-connection protocol auto-detection: peek the first octet
+    // without consuming it.  `REQ_MAGIC` can never begin a text verb
+    // (those are printable ASCII), so one byte decides for the whole
+    // connection.
+    let binary = match reader.fill_buf() {
+        Ok(buf) if !buf.is_empty() => buf[0] == frame::REQ_MAGIC,
+        _ => {
+            log_debug!("conn {peer}: disconnected before the first byte");
+            return;
+        }
+    };
+    log_debug!("conn {peer}: protocol={}", if binary { "binary" } else { "text" });
+
+    let mut frames: u64 = 0;
+    loop {
+        let read = if binary {
+            frame::read_request(&mut reader)
+        } else {
+            proto::read_request(&mut reader)
+        };
+        let req = match read {
+            Ok(r) => r,
+            Err(ProtoError::Eof) => break,
+            Err(e) => {
+                let _ = write_response(&mut writer, binary, &super::proto_error_response(&e));
+                break;
+            }
+        };
+        frames += 1;
+        let resp = match req {
+            Request::Quit => break,
+            Request::Ping => Response::Pong,
+            Request::Stats => {
+                // merged aggregate + per_shard array, plus the server's
+                // connection gauge (engine-global, read exactly once)
+                Response::Stats(engine.stats(Some(active.load(Ordering::Relaxed))).0.to_string())
+            }
+            Request::Hull { id, points } => {
+                let reply = engine.submit(HullRequest { id, points });
+                match reply.recv() {
+                    Ok(result) => super::hull_response(id, result),
+                    Err(_) => Response::HullErr { id, message: "coordinator gone".into() },
+                }
+            }
+            Request::SessionOpen { id } => super::session_open_response(&engine, id),
+            Request::SessionAdd { sid, points } => {
+                super::session_add_response(&engine, sid, &points)
+            }
+            Request::SessionHull { sid } => super::session_hull_response(&engine, sid),
+            Request::SessionClose { sid } => super::session_close_response(&engine, sid),
+        };
+        if write_response(&mut writer, binary, &resp).is_err() {
+            break;
+        }
+    }
+    log_debug!("conn {peer}: disconnected after {frames} frame(s)");
 }

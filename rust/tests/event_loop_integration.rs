@@ -1,0 +1,296 @@
+//! Event-loop connection core end-to-end: multiplexing scale, shutdown
+//! semantics, pipelining/ordering, half-close, and the threaded shim's
+//! compatibility guarantees.  Runs with `ENGINE_SHARDS=1` and `=4` in
+//! tier1 like the rest of the server suites.
+
+use std::io::{BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use wagener_hull::coordinator::{BackendKind, BatcherConfig, CoordinatorConfig};
+use wagener_hull::engine::{Engine, EngineConfig};
+use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::serial::monotone_chain;
+use wagener_hull::server::{
+    frame, proto, serve_engine, serve_engine_threaded, HullClient, Request, Response, ServerConfig,
+    ServerHandle, WireProto,
+};
+use wagener_hull::stream::StreamConfig;
+
+fn start_engine(kind: BackendKind) -> Arc<Engine> {
+    Arc::new(
+        Engine::start(EngineConfig {
+            shards: EngineConfig::shards_from_env(1),
+            coordinator: CoordinatorConfig {
+                backend: kind,
+                batcher: BatcherConfig { max_batch: 4, flush_us: 300, queue_cap: 256 },
+                self_check: true,
+                ..Default::default()
+            },
+            stream: StreamConfig::default(),
+        })
+        .unwrap(),
+    )
+}
+
+fn start_event(kind: BackendKind, io_threads: usize) -> ServerHandle {
+    serve_engine(
+        start_engine(kind),
+        &ServerConfig { addr: "127.0.0.1:0".into(), io_threads },
+    )
+    .unwrap()
+}
+
+fn wait_gauge(handle: &ServerHandle, want: u64, within: Duration) {
+    let t0 = Instant::now();
+    while handle.active_connections() != want {
+        assert!(
+            t0.elapsed() < within,
+            "gauge stuck at {} (want {want})",
+            handle.active_connections()
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// The full streaming-session lifecycle over the event core in binary
+/// framing, verified against the serial oracle.
+#[test]
+fn binary_session_lifecycle_over_event_core() {
+    let handle = start_event(BackendKind::Native, 2);
+    let mut c = HullClient::connect_with(handle.local_addr, WireProto::Binary).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+
+    let sid = c.session_open().unwrap();
+    let pts = generate(Distribution::Disk, 400, 17);
+    let mut last_epoch = 0;
+    for chunk in pts.chunks(100) {
+        let ack = c.session_add(sid, chunk).unwrap();
+        assert!(ack.epoch >= last_epoch);
+        last_epoch = ack.epoch;
+    }
+    let hull = c.session_hull(sid).unwrap();
+    let (u, l) = monotone_chain::full_hull(&pts);
+    assert_eq!(hull.upper, u);
+    assert_eq!(hull.lower, l);
+
+    // one-shot on the same connection agrees bit-for-bit
+    let oneshot = c.hull(&pts).unwrap();
+    assert_eq!(oneshot.upper, hull.upper);
+    assert_eq!(oneshot.lower, hull.lower);
+
+    c.session_close(sid).unwrap();
+    let err = c.session_hull(sid).unwrap_err();
+    assert!(err.to_string().contains("unknown-session"), "{err}");
+    c.ping().unwrap();
+    c.quit().unwrap();
+    handle.stop();
+}
+
+/// The acceptance bar for the tentpole: ≥10k mostly-idle connections
+/// multiplexed onto 4 I/O threads, with the server still answering
+/// through the crowd.  Skips (loudly) when the fd limit cannot be
+/// raised far enough — CI containers usually allow it, laptops vary.
+#[cfg(unix)]
+#[test]
+fn idle_connection_fleet_multiplexes_on_four_loops() {
+    use wagener_hull::server::{nofile_limit, raise_nofile_limit};
+
+    const FLEET: usize = 10_000;
+    // client fd + server fd per connection, plus generous slack
+    let want = (FLEET as u64) * 2 + 1_000;
+    let got = raise_nofile_limit(want);
+    if got < want {
+        let limits = nofile_limit().ok();
+        eprintln!(
+            "SKIP idle_connection_fleet: fd limit {got} < {want} (rlimit {limits:?}) — \
+             raise `ulimit -n` to run the 10k-connection test"
+        );
+        return;
+    }
+
+    let handle = start_event(BackendKind::Serial, 4);
+    let mut conns: Vec<TcpStream> = Vec::with_capacity(FLEET);
+    for i in 0..FLEET {
+        // a brief retry absorbs transient accept-backlog pressure while
+        // the loops adopt the burst
+        let mut attempt = 0;
+        let s = loop {
+            match TcpStream::connect(handle.local_addr) {
+                Ok(s) => break s,
+                Err(_) if attempt < 5 => {
+                    attempt += 1;
+                    std::thread::sleep(Duration::from_millis(20 * attempt));
+                }
+                Err(e) => panic!("connect {i}/{FLEET} failed: {e}"),
+            }
+        };
+        conns.push(s);
+    }
+    wait_gauge(&handle, FLEET as u64, Duration::from_secs(60));
+
+    // the loops must still serve while holding the whole fleet: ping
+    // through a sample of the idle crowd
+    for s in conns.iter_mut().step_by(1000) {
+        s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        s.write_all(b"PING\n").unwrap();
+        let mut buf = [0u8; 5];
+        s.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"PONG\n");
+    }
+    // and a fresh request still gets in and out
+    let mut c = HullClient::connect_with(handle.local_addr, WireProto::Binary).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    c.ping().unwrap();
+    c.quit().unwrap();
+
+    drop(conns);
+    wait_gauge(&handle, 0, Duration::from_secs(60));
+    handle.stop();
+}
+
+/// Regression for the shutdown waker: `stop` must return promptly even
+/// when the server is bound to a wildcard address (the old threaded
+/// core poked itself awake by connecting to its own `local_addr`, which
+/// is unroutable for `0.0.0.0`), on BOTH cores.
+#[test]
+fn stop_returns_promptly_on_wildcard_bind() {
+    let cfg = ServerConfig { addr: "0.0.0.0:0".into(), ..Default::default() };
+    let cores: Vec<(&str, ServerHandle)> = vec![
+        ("event", serve_engine(start_engine(BackendKind::Serial), &cfg).unwrap()),
+        ("threaded", serve_engine_threaded(start_engine(BackendKind::Serial), &cfg).unwrap()),
+    ];
+    for (core, handle) in cores {
+        let port = handle.local_addr.port();
+        let mut c = HullClient::connect(("127.0.0.1", port)).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        c.ping().unwrap();
+
+        let (tx, rx) = std::sync::mpsc::channel();
+        let stopper = std::thread::spawn(move || {
+            handle.stop();
+            let _ = tx.send(());
+        });
+        rx.recv_timeout(Duration::from_secs(10))
+            .unwrap_or_else(|_| panic!("{core} core: stop() hung on a wildcard bind"));
+        stopper.join().unwrap();
+        drop(c);
+    }
+}
+
+/// Pipelined binary requests on one connection come back complete and
+/// in request order (the `busy` flag serializes decode past a
+/// dispatched request, exactly like the one-at-a-time threaded shim).
+#[test]
+fn pipelined_binary_requests_answered_in_order() {
+    let handle = start_event(BackendKind::Native, 1);
+    let mut s = TcpStream::connect(handle.local_addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+
+    const N: u64 = 200;
+    let mut batch = Vec::new();
+    for id in 1..=N {
+        let points = generate(Distribution::Disk, 30 + (id % 7) as usize, id);
+        frame::encode_request(&mut batch, &Request::Hull { id, points });
+    }
+    frame::encode_request(&mut batch, &Request::Ping);
+    s.write_all(&batch).unwrap();
+    s.flush().unwrap();
+
+    let mut r = BufReader::new(s);
+    for want in 1..=N {
+        match frame::read_response(&mut r).unwrap() {
+            Response::Hull { id, upper, lower, .. } => {
+                assert_eq!(id, want, "responses out of order");
+                assert!(!upper.is_empty() && !lower.is_empty());
+            }
+            other => panic!("request {want}: {other:?}"),
+        }
+    }
+    assert_eq!(frame::read_response(&mut r).unwrap(), Response::Pong);
+    handle.stop();
+}
+
+/// A peer that sends its frames and half-closes still gets every
+/// buffered response before the server closes its side.
+#[test]
+fn half_close_still_serves_buffered_frames() {
+    let handle = start_event(BackendKind::Serial, 1);
+    let mut s = TcpStream::connect(handle.local_addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    s.write_all(b"PING\nPING\nPING\n").unwrap();
+    s.flush().unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut all = Vec::new();
+    s.read_to_end(&mut all).unwrap();
+    assert_eq!(&all, b"PONG\nPONG\nPONG\n");
+    handle.stop();
+}
+
+/// The event core's `STATS` carries the I/O gauges (frame counters per
+/// protocol, open connections, decode latency) under the `io` key.
+#[cfg(unix)]
+#[test]
+fn event_core_stats_reports_io_gauges() {
+    let handle = start_event(BackendKind::Serial, 2);
+    let mut ct = HullClient::connect_with(handle.local_addr, WireProto::Text).unwrap();
+    let mut cb = HullClient::connect_with(handle.local_addr, WireProto::Binary).unwrap();
+    ct.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    cb.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    ct.ping().unwrap();
+    cb.ping().unwrap();
+
+    let stats = cb.stats().unwrap();
+    let json = wagener_hull::util::json::parse(&stats).unwrap();
+    let io = json.get("io").expect("event-core STATS carries an io object");
+    assert!(io.get("frames_text").unwrap().as_usize().unwrap() >= 1, "{stats}");
+    assert!(io.get("frames_binary").unwrap().as_usize().unwrap() >= 2, "{stats}");
+    assert!(io.get("open_connections").unwrap().as_usize().unwrap() >= 2, "{stats}");
+    assert!(io.get("decode_latency").is_some(), "{stats}");
+    assert_eq!(json.get("active_connections").unwrap().as_usize(), Some(2), "{stats}");
+
+    ct.quit().unwrap();
+    cb.quit().unwrap();
+    handle.stop();
+}
+
+/// The threaded compatibility shim keeps its old contract — and now
+/// speaks binary too: gauge tracking, binary round-trips, and a stop
+/// that joins every handler thread.
+#[test]
+fn threaded_shim_serves_binary_and_joins_on_stop() {
+    let handle = serve_engine_threaded(
+        start_engine(BackendKind::Native),
+        &ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+    )
+    .unwrap();
+    let mut c = HullClient::connect_with(handle.local_addr, WireProto::Binary).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    let pts = generate(Distribution::Circle, 120, 3);
+    let hull = c.hull(&pts).unwrap();
+    let (u, l) = monotone_chain::full_hull(&pts);
+    assert_eq!(hull.upper, u);
+    assert_eq!(hull.lower, l);
+    wait_gauge(&handle, 1, Duration::from_secs(5));
+    // stop with the connection still open: the shim must shut the
+    // socket down and join the handler rather than hang
+    handle.stop();
+    drop(c);
+}
+
+/// `proto` re-export sanity: the text decoder the event loop uses is
+/// reachable for downstream callers building their own tooling.
+#[test]
+fn exported_decoders_are_usable_standalone() {
+    match proto::decode_text_request(b"PING\n").unwrap() {
+        proto::Decoded::Frame(Request::Ping, 5) => {}
+        other => panic!("{other:?}"),
+    }
+    let mut buf = Vec::new();
+    frame::encode_request(&mut buf, &Request::Quit);
+    match frame::decode_request(&buf).unwrap() {
+        proto::Decoded::Frame(Request::Quit, n) => assert_eq!(n, buf.len()),
+        other => panic!("{other:?}"),
+    }
+}

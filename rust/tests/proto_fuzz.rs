@@ -1,0 +1,354 @@
+//! Deterministic protocol fuzzing: seeded random inputs through every
+//! decoder (text request, binary request, binary response), run as a
+//! normal `#[test]` with a bounded iteration budget so it rides in the
+//! tier-1 suite (no external fuzzer, no wall-clock dependence).
+//!
+//! Properties checked on every input:
+//!   * no panic (the driver is this test completing);
+//!   * no unbounded buffering: `Decoded::Need(n)` always makes progress
+//!     (`n > buf.len()`) and never exceeds the protocol's hard caps, so
+//!     a hostile frame cannot talk a connection into a huge allocation;
+//!   * id echo: any rejection whose header parsed far enough to carry a
+//!     request id reports it through [`ProtoError::frame_id`] — the rule
+//!     clients rely on to correlate failures;
+//!   * valid frames survive encode -> decode bit-exactly, and every
+//!     strict prefix of a valid frame is `Need`, never an error.
+
+use wagener_hull::geometry::point::Point;
+use wagener_hull::server::proto::{
+    self, Decoded, ProtoError, Request, MAX_REQUEST_POINTS, MAX_TEXT_LINE,
+};
+use wagener_hull::server::{frame, Response, SessionVerb};
+use wagener_hull::util::rng::Rng;
+
+const REQ_HEADER: usize = 15;
+const RESP_HEADER: usize = 16;
+/// Largest total-bytes value a request decoder may ever ask for.
+const REQ_NEED_CEIL: usize = REQ_HEADER + MAX_REQUEST_POINTS * 16;
+/// Mirrors `frame::MAX_RESPONSE_PAYLOAD` (private) plus header slack.
+const RESP_NEED_CEIL: usize = RESP_HEADER + MAX_REQUEST_POINTS * 32 + (1 << 20);
+
+/// The id a *binary* request rejection must echo: present whenever the
+/// fixed header is complete with the right magic and version.
+fn expected_binary_id(buf: &[u8]) -> Option<u64> {
+    if buf.len() >= REQ_HEADER && buf[0] == frame::REQ_MAGIC && buf[1] == frame::VERSION {
+        Some(u64::from_le_bytes(buf[3..11].try_into().unwrap()))
+    } else {
+        None
+    }
+}
+
+/// The id a *text* rejection must echo: a complete `HULL`/`SADD` header
+/// line whose id token parses.  (Other verbs never fail once their sid
+/// parses, so the property is only meaningful for the point-block verbs.)
+fn expected_text_id(buf: &[u8]) -> Option<u64> {
+    let eol = buf.iter().position(|&b| b == b'\n')?;
+    let line = std::str::from_utf8(&buf[..eol]).ok()?;
+    let mut it = line.split_whitespace();
+    if !matches!(it.next(), Some("HULL") | Some("SADD")) {
+        return None;
+    }
+    it.next()?.parse().ok()
+}
+
+fn check_binary_request(buf: &[u8]) {
+    match frame::decode_request(buf) {
+        Ok(Decoded::Need(n)) => {
+            assert!(n > buf.len(), "Need({n}) makes no progress at len {}", buf.len());
+            assert!(n <= REQ_NEED_CEIL, "Need({n}) over the request cap");
+        }
+        Ok(Decoded::Frame(_, used)) => {
+            assert!(used <= buf.len() && used >= REQ_HEADER, "used {used} of {}", buf.len());
+        }
+        Err(e) => {
+            if let Some(id) = expected_binary_id(buf) {
+                assert_eq!(e.frame_id(), Some(id), "lost the id echo: {e}");
+            }
+        }
+    }
+}
+
+fn check_text_request(buf: &[u8]) {
+    match proto::decode_text_request(buf) {
+        Ok(Decoded::Need(n)) => {
+            // the text decoder can only ask for "one more byte"
+            assert_eq!(n, buf.len() + 1);
+            assert!(n <= REQ_NEED_CEIL.max(MAX_TEXT_LINE * 2));
+        }
+        Ok(Decoded::Frame(_, used)) => assert!(used <= buf.len() && used > 0),
+        Err(e) => {
+            if !matches!(e, ProtoError::Eof) {
+                if let Some(id) = expected_text_id(buf) {
+                    assert_eq!(e.frame_id(), Some(id), "lost the id echo: {e} in {buf:?}");
+                }
+            }
+        }
+    }
+}
+
+fn check_binary_response(buf: &[u8]) {
+    match frame::decode_response(buf) {
+        Ok(Decoded::Need(n)) => {
+            assert!(n > buf.len());
+            assert!(n <= RESP_NEED_CEIL, "Need({n}) over the response cap");
+        }
+        Ok(Decoded::Frame(_, used)) => assert!(used <= buf.len() && used >= RESP_HEADER),
+        Err(_) => {} // client-side: any rejection just drops the connection
+    }
+}
+
+fn random_bytes(rng: &mut Rng, max_len: usize) -> Vec<u8> {
+    let len = rng.range_usize(0, max_len + 1);
+    (0..len).map(|_| rng.next_u64() as u8).collect()
+}
+
+fn random_points(rng: &mut Rng, max: usize) -> Vec<Point> {
+    let n = rng.range_usize(0, max + 1);
+    (0..n).map(|_| Point::new(rng.f64(), rng.f64())).collect()
+}
+
+fn random_request(rng: &mut Rng) -> Request {
+    match rng.below(8) {
+        0 => Request::Hull { id: rng.next_u64(), points: random_points(rng, 8) },
+        1 => Request::SessionOpen { id: rng.next_u64() },
+        2 => Request::SessionAdd { sid: rng.next_u64(), points: random_points(rng, 8) },
+        3 => Request::SessionHull { sid: rng.next_u64() },
+        4 => Request::SessionClose { sid: rng.next_u64() },
+        5 => Request::Stats,
+        6 => Request::Ping,
+        _ => Request::Quit,
+    }
+}
+
+fn random_response(rng: &mut Rng) -> Response {
+    match rng.below(10) {
+        0 => Response::Hull {
+            id: rng.next_u64(),
+            upper: random_points(rng, 6),
+            lower: random_points(rng, 6),
+            backend: "native".into(),
+            queue_ns: rng.next_u64(),
+            exec_ns: rng.next_u64(),
+        },
+        1 => Response::HullErr { id: rng.next_u64(), message: "e".repeat(rng.range_usize(0, 40)) },
+        2 => Response::MalformedErr {
+            id: rng.chance(0.5).then(|| rng.next_u64()),
+            message: "m".repeat(rng.range_usize(0, 40)),
+        },
+        3 => Response::SessionOpened { id: rng.next_u64(), sid: rng.next_u64() },
+        4 => Response::SessionAdded {
+            sid: rng.next_u64(),
+            absorbed: rng.next_u64(),
+            pending: rng.next_u64(),
+            epoch: rng.next_u64(),
+        },
+        5 => Response::SessionHull {
+            sid: rng.next_u64(),
+            epoch: rng.next_u64(),
+            upper: random_points(rng, 6),
+            lower: random_points(rng, 6),
+        },
+        6 => Response::SessionClosed { sid: rng.next_u64() },
+        7 => Response::SessionErr {
+            verb: [SessionVerb::Open, SessionVerb::Add, SessionVerb::Hull, SessionVerb::Close]
+                [rng.range_usize(0, 4)],
+            id: rng.next_u64(),
+            message: "x".repeat(rng.range_usize(0, 40)),
+        },
+        8 => Response::Stats("{\"requests\":1}".into()),
+        _ => Response::Pong,
+    }
+}
+
+// ------------------------------------------------------- random inputs
+
+#[test]
+fn random_bytes_never_panic_or_overcommit() {
+    let mut rng = Rng::new(0xF0CC_0001);
+    for i in 0..6000u32 {
+        // mostly short, occasionally kilobytes (line-length guard paths)
+        let max = if i % 50 == 0 { 4096 } else { 64 };
+        let buf = random_bytes(&mut rng, max);
+        check_binary_request(&buf);
+        check_text_request(&buf);
+        check_binary_response(&buf);
+    }
+}
+
+/// Random inputs that *start like* real frames reach much deeper parser
+/// states than raw noise: seed the prefix, randomize the rest.
+#[test]
+fn magic_prefixed_bytes_never_panic_and_echo_ids() {
+    let mut rng = Rng::new(0xF0CC_0002);
+    for _ in 0..6000u32 {
+        let mut buf = vec![frame::REQ_MAGIC];
+        if rng.chance(0.8) {
+            buf.push(frame::VERSION);
+        }
+        buf.extend(random_bytes(&mut rng, 48));
+        check_binary_request(&buf);
+        let mut rbuf = vec![frame::RESP_MAGIC];
+        if rng.chance(0.8) {
+            rbuf.push(frame::VERSION);
+        }
+        rbuf.extend(random_bytes(&mut rng, 48));
+        check_binary_response(&rbuf);
+    }
+}
+
+/// Token soup: structurally plausible text frames (real verbs, junk
+/// operands, stray point lines) exercise every branch of the header and
+/// point-block parsers.
+#[test]
+fn text_token_soup_never_panics_and_echoes_ids() {
+    const VERBS: &[&str] =
+        &["HULL", "SADD", "SOPEN", "SHULL", "SCLOSE", "STATS", "PING", "QUIT", "BOGUS", ""];
+    const OPERANDS: &[&str] =
+        &["0", "1", "7", "42", "-1", "zz", "1e9", "0.5", "99999999999999999999", ""];
+    const POINT_LINES: &[&str] = &["0.1 0.2", "0.5", "x y", "0.3 0.4 0.5", "", "NaN inf"];
+    let mut rng = Rng::new(0xF0CC_0003);
+    for _ in 0..8000u32 {
+        let mut s = String::new();
+        s.push_str(VERBS[rng.range_usize(0, VERBS.len())]);
+        for _ in 0..rng.range_usize(0, 4) {
+            s.push(' ');
+            s.push_str(OPERANDS[rng.range_usize(0, OPERANDS.len())]);
+        }
+        s.push('\n');
+        for _ in 0..rng.range_usize(0, 4) {
+            s.push_str(POINT_LINES[rng.range_usize(0, POINT_LINES.len())]);
+            s.push('\n');
+        }
+        let mut buf = s.into_bytes();
+        if rng.chance(0.2) {
+            // occasionally cut mid-line so Need paths run too
+            buf.truncate(rng.range_usize(0, buf.len() + 1));
+        }
+        check_text_request(&buf);
+    }
+}
+
+// ------------------------------------------- corpus: valid + mutated
+
+#[test]
+fn valid_frames_roundtrip_and_prefixes_are_need() {
+    let mut rng = Rng::new(0xF0CC_0004);
+    for _ in 0..1500u32 {
+        let req = random_request(&mut rng);
+
+        let mut bin = Vec::new();
+        frame::encode_request(&mut bin, &req);
+        match frame::decode_request(&bin) {
+            Ok(Decoded::Frame(got, used)) => {
+                assert_eq!(got, req);
+                assert_eq!(used, bin.len());
+            }
+            other => panic!("valid binary frame: {other:?}"),
+        }
+
+        let mut txt = Vec::new();
+        proto::write_request(&mut txt, &req).unwrap();
+        match proto::decode_text_request(&txt) {
+            Ok(Decoded::Frame(got, used)) => {
+                assert_eq!(got, req);
+                assert_eq!(used, txt.len());
+            }
+            other => panic!("valid text frame: {other:?}"),
+        }
+
+        // strict prefixes: always Need, never an error or a phantom frame
+        for (is_bin, buf) in [(true, &bin), (false, &txt)] {
+            for _ in 0..3 {
+                let cut = rng.range_usize(0, buf.len());
+                let decoded = if is_bin {
+                    frame::decode_request(&buf[..cut])
+                } else {
+                    proto::decode_text_request(&buf[..cut])
+                };
+                match decoded {
+                    Ok(Decoded::Need(n)) => assert!(n > cut),
+                    Ok(Decoded::Frame(..)) => panic!("phantom frame in a {cut}-byte prefix"),
+                    Err(e) => panic!("prefix of a valid frame errored: {e}"),
+                }
+            }
+        }
+
+        let resp = random_response(&mut rng);
+        let mut rbin = Vec::new();
+        frame::encode_response(&mut rbin, &resp);
+        match frame::decode_response(&rbin) {
+            Ok(Decoded::Frame(got, used)) => {
+                assert_eq!(got, resp);
+                assert_eq!(used, rbin.len());
+            }
+            other => panic!("valid response frame: {other:?}"),
+        }
+        for _ in 0..3 {
+            let cut = rng.range_usize(0, rbin.len());
+            match frame::decode_response(&rbin[..cut]) {
+                Ok(Decoded::Need(n)) => assert!(n > cut),
+                Ok(Decoded::Frame(..)) => panic!("phantom response in a {cut}-byte prefix"),
+                Err(e) => panic!("prefix of a valid response errored: {e}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn mutated_frames_never_panic_and_keep_the_id_echo() {
+    let mut rng = Rng::new(0xF0CC_0005);
+    for _ in 0..3000u32 {
+        let req = random_request(&mut rng);
+        let mut bin = Vec::new();
+        frame::encode_request(&mut bin, &req);
+        let mut txt = Vec::new();
+        proto::write_request(&mut txt, &req).unwrap();
+        for buf in [&mut bin, &mut txt] {
+            for _ in 0..rng.range_usize(1, 5) {
+                let at = rng.range_usize(0, buf.len());
+                buf[at] = rng.next_u64() as u8;
+            }
+            if rng.chance(0.3) {
+                buf.truncate(rng.range_usize(0, buf.len() + 1));
+            }
+        }
+        // the expected ids are recomputed from the MUTATED bytes, so the
+        // echo property is checked against what actually hit the wire
+        check_binary_request(&bin);
+        check_text_request(&txt);
+
+        let resp = random_response(&mut rng);
+        let mut rbin = Vec::new();
+        frame::encode_response(&mut rbin, &resp);
+        for _ in 0..rng.range_usize(1, 5) {
+            let at = rng.range_usize(0, rbin.len());
+            rbin[at] = rng.next_u64() as u8;
+        }
+        check_binary_response(&rbin);
+    }
+}
+
+/// The DoS guard is total: EVERY count over the cap is rejected from
+/// the header alone with the id echoed, on both wire formats.
+#[test]
+fn oversized_counts_always_reject_before_payload() {
+    let mut rng = Rng::new(0xF0CC_0006);
+    for _ in 0..500u32 {
+        let id = rng.next_u64();
+        let span = u32::MAX as u64 - MAX_REQUEST_POINTS as u64 - 1;
+        let over = (MAX_REQUEST_POINTS as u64 + 1 + rng.below(span)) as u32;
+        for verb in [1u8, 3] {
+            // header only — no payload bytes exist to buffer
+            let mut buf = vec![frame::REQ_MAGIC, frame::VERSION, verb];
+            buf.extend_from_slice(&id.to_le_bytes());
+            buf.extend_from_slice(&over.to_le_bytes());
+            let e = frame::decode_request(&buf).unwrap_err();
+            assert_eq!(e.frame_id(), Some(id), "binary verb {verb} count {over}");
+        }
+        for verb in ["HULL", "SADD"] {
+            let line = format!("{verb} {id} {over}\n");
+            let e = proto::decode_text_request(line.as_bytes()).unwrap_err();
+            assert_eq!(e.frame_id(), Some(id), "text {verb} count {over}");
+        }
+    }
+}

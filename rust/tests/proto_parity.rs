@@ -1,0 +1,297 @@
+//! Protocol parity: the `{text, binary} x {threaded-shim, event-loop}`
+//! matrix must produce identical responses for every verb and every
+//! error path.
+//!
+//! Both cores build responses through the shared helpers in
+//! `server::mod` and both text decoders share one parser, so parity is
+//! by construction — this suite checks the product end-to-end over real
+//! sockets: structured results through [`HullClient`] in both
+//! encodings, and raw response *bytes* for the deterministic error and
+//! pipelining paths.
+//!
+//! Every assertion is shard-count independent (tier1 re-runs the suite
+//! with `ENGINE_SHARDS=4`): session ids are never baked into expected
+//! values, and `STATS` is checked for shape, not bytes.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use wagener_hull::coordinator::{BackendKind, BatcherConfig, CoordinatorConfig};
+use wagener_hull::engine::{Engine, EngineConfig};
+use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::geometry::point::Point;
+use wagener_hull::serial::monotone_chain;
+use wagener_hull::server::{
+    frame, proto, serve_engine, serve_engine_threaded, HullClient, ServerConfig, ServerHandle,
+    SessionVerb, WireProto,
+};
+use wagener_hull::stream::StreamConfig;
+
+fn start_engine(kind: BackendKind) -> Arc<Engine> {
+    Arc::new(
+        Engine::start(EngineConfig {
+            shards: EngineConfig::shards_from_env(1),
+            coordinator: CoordinatorConfig {
+                backend: kind,
+                batcher: BatcherConfig { max_batch: 4, flush_us: 300, queue_cap: 256 },
+                self_check: true,
+                ..Default::default()
+            },
+            stream: StreamConfig::default(),
+        })
+        .unwrap(),
+    )
+}
+
+fn cfg() -> ServerConfig {
+    ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() }
+}
+
+/// Start both connection cores, each on its own (identically
+/// configured) engine so per-run state like sid allocation advances in
+/// lockstep across the matrix.
+fn start_cores(kind: BackendKind) -> Vec<(&'static str, ServerHandle)> {
+    vec![
+        ("event", serve_engine(start_engine(kind), &cfg()).unwrap()),
+        ("threaded", serve_engine_threaded(start_engine(kind), &cfg()).unwrap()),
+    ]
+}
+
+// ------------------------------------------------- structured matrix
+
+/// Run every verb (happy + error paths) through one client and record a
+/// normalized transcript.  Excluded on purpose: sids (allocation
+/// advances across runs on a shared engine), `queue_ns`/`exec_ns`
+/// (wall-clock), and `STATS` bytes (core-specific gauges) — everything
+/// else must be bit-identical across the whole matrix.
+fn run_verbs(addr: std::net::SocketAddr, proto: WireProto) -> Vec<String> {
+    let mut t: Vec<String> = Vec::new();
+    let mut c = HullClient::connect_with(addr, proto).unwrap();
+    c.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    assert_eq!(c.wire_proto(), proto);
+
+    c.ping().unwrap();
+    t.push("PONG".into());
+
+    let pts = generate(Distribution::Disk, 160, 11);
+    let h = c.hull(&pts).unwrap();
+    let (u, l) = monotone_chain::full_hull(&pts);
+    assert_eq!(h.upper, u);
+    assert_eq!(h.lower, l);
+    t.push(format!("HULL {:?} {:?} {}", h.upper, h.lower, h.backend));
+
+    // request-level failure: out-of-range coordinate
+    let e = c.hull(&[Point::new(5.0, 5.0)]).unwrap_err();
+    t.push(format!("HULL-ERR {e}"));
+    // request-level failure: empty point set
+    let e = c.hull(&[]).unwrap_err();
+    t.push(format!("HULL-EMPTY {e}"));
+
+    // session lifecycle (the sid value itself stays out of the transcript)
+    let sid = c.session_open().unwrap();
+    t.push("SOPEN OK".into());
+    let chunk = generate(Distribution::Circle, 100, 23);
+    let a1 = c.session_add(sid, &chunk[..50]).unwrap();
+    t.push(format!("SADD1 {a1:?}"));
+    let a2 = c.session_add(sid, &chunk[50..]).unwrap();
+    t.push(format!("SADD2 {a2:?}"));
+    let sh = c.session_hull(sid).unwrap();
+    t.push(format!("SHULL {} {:?} {:?}", sh.epoch, sh.upper, sh.lower));
+    c.session_close(sid).unwrap();
+    t.push("SCLOSE OK".into());
+    // closed sid: the distinct unknown-session error, connection usable
+    let e = c.session_add(sid, &chunk[..1]).unwrap_err();
+    t.push(format!("SADD-STALE {e}"));
+    let e = c.session_hull(sid).unwrap_err();
+    t.push(format!("SHULL-STALE {e}"));
+    let e = c.session_close(sid).unwrap_err();
+    t.push(format!("SCLOSE-STALE {e}"));
+
+    // STATS: shape only (the event core adds its own "io" gauges)
+    let stats = c.stats().unwrap();
+    let json = wagener_hull::util::json::parse(&stats).unwrap();
+    assert!(json.get("responses").is_some(), "{stats}");
+    assert!(json.get("active_connections").is_some(), "{stats}");
+    assert!(json.get("open_sessions").is_some(), "{stats}");
+
+    c.ping().unwrap();
+    t.push("PONG2".into());
+    c.quit().unwrap();
+    t
+}
+
+#[test]
+fn verb_matrix_identical_across_cores_and_protocols() {
+    let mut cells: Vec<(String, Vec<String>)> = Vec::new();
+    for (core, handle) in start_cores(BackendKind::Native) {
+        for proto in [WireProto::Text, WireProto::Binary] {
+            cells.push((format!("{core}/{proto:?}"), run_verbs(handle.local_addr, proto)));
+        }
+        handle.stop();
+    }
+    let (base_name, base) = cells[0].clone();
+    for (name, t) in &cells[1..] {
+        assert_eq!(t, &base, "{name} diverges from {base_name}");
+    }
+}
+
+// ------------------------------------------------- raw byte parity
+
+/// Write `payload`, half-close, read everything the server sends until
+/// it closes.  Both cores treat EOF-after-complete-frames as "serve the
+/// buffered frames, then close", so this captures a full deterministic
+/// exchange.
+fn raw_exchange(addr: std::net::SocketAddr, payload: &[u8]) -> Vec<u8> {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    s.write_all(payload).unwrap();
+    s.flush().unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    buf
+}
+
+fn assert_byte_parity(payloads: &[(&str, Vec<u8>)]) {
+    let cores = start_cores(BackendKind::Serial);
+    for (what, payload) in payloads {
+        let mut replies: Vec<(&'static str, Vec<u8>)> = Vec::new();
+        for (core, handle) in &cores {
+            replies.push((*core, raw_exchange(handle.local_addr, payload)));
+        }
+        let (base_core, base) = &replies[0];
+        for (core, bytes) in &replies[1..] {
+            assert_eq!(
+                bytes, base,
+                "{what}: {core} bytes diverge from {base_core}\n  {core}: {bytes:?}\n  {base_core}: {base:?}"
+            );
+        }
+    }
+    for (_, handle) in cores {
+        handle.stop();
+    }
+}
+
+#[test]
+fn text_wire_bytes_identical_across_cores() {
+    let oversized_hull = format!("HULL 1 {}\n", proto::MAX_REQUEST_POINTS + 1).into_bytes();
+    let oversized_sadd = format!("SADD 9 {}\n", proto::MAX_REQUEST_POINTS + 1).into_bytes();
+    assert_byte_parity(&[
+        ("unknown command", b"GARBAGE\n".to_vec()),
+        ("bad count echoes id", b"HULL 9 zz\n".to_vec()),
+        ("bad session count echoes sid", b"SADD 9 zz\n".to_vec()),
+        ("bad id: nothing to echo", b"HULL x y\n".to_vec()),
+        ("bad sid: nothing to echo", b"SOPEN x\n".to_vec()),
+        ("bad point line echoes id", b"HULL 8 1\nnope\n".to_vec()),
+        ("oversized HULL trips the DoS guard", oversized_hull),
+        ("oversized SADD trips the DoS guard", oversized_sadd),
+        ("valid frame before garbage still answers", b"PING\nGARBAGE\n".to_vec()),
+        ("pipelined valid frames", b"PING\nSHULL 123456 ignored-operand\nPING\nQUIT\n".to_vec()),
+        ("truncated point block closes silently", b"HULL 5 2\n0.1 0.2\n".to_vec()),
+        ("empty connection closes silently", Vec::new()),
+    ]);
+}
+
+/// `[magic, version, verb, id, count]` — a hand-rolled binary request
+/// header for frames `encode_request` refuses to produce.
+fn bin_header(verb: u8, id: u64, count: u32) -> Vec<u8> {
+    let mut b = vec![frame::REQ_MAGIC, frame::VERSION, verb];
+    b.extend_from_slice(&id.to_le_bytes());
+    b.extend_from_slice(&count.to_le_bytes());
+    b
+}
+
+#[test]
+fn binary_wire_bytes_identical_across_cores() {
+    let mut pipelined = Vec::new();
+    frame::encode_request(&mut pipelined, &proto::Request::Ping);
+    frame::encode_request(&mut pipelined, &proto::Request::Ping);
+    frame::encode_request(&mut pipelined, &proto::Request::Quit);
+
+    let mut valid_then_garbage = Vec::new();
+    frame::encode_request(&mut valid_then_garbage, &proto::Request::Ping);
+    valid_then_garbage.extend_from_slice(&bin_header(200, 77, 0));
+
+    let mut bad_version = bin_header(1, 4, 0);
+    bad_version[1] = 9;
+
+    let truncated = bin_header(1, 5, 2); // HULL claiming 2 points, none sent
+
+    assert_byte_parity(&[
+        ("unknown verb echoes id", bin_header(200, 77, 0)),
+        ("payload on a payload-less verb echoes id", bin_header(7, 5, 3)),
+        ("bad version: nothing to echo", bad_version),
+        (
+            "oversized HULL trips the DoS guard",
+            bin_header(1, 1, (proto::MAX_REQUEST_POINTS + 1) as u32),
+        ),
+        (
+            "oversized SADD trips the DoS guard",
+            bin_header(3, 9, (proto::MAX_REQUEST_POINTS + 1) as u32),
+        ),
+        ("valid frame before garbage still answers", valid_then_garbage),
+        ("pipelined valid frames", pipelined),
+        ("truncated frame closes silently", truncated),
+    ]);
+}
+
+/// The binary error responses don't just match across cores — they must
+/// carry the documented id echo and kind when decoded.
+#[test]
+fn binary_error_frames_echo_ids_on_both_cores() {
+    let cores = start_cores(BackendKind::Serial);
+    for (core, handle) in &cores {
+        // unknown verb: header parsed, id 77 echoes as MalformedErr
+        let bytes = raw_exchange(handle.local_addr, &bin_header(200, 77, 0));
+        match frame::decode_response(&bytes).unwrap() {
+            proto::Decoded::Frame(proto::Response::MalformedErr { id, .. }, used) => {
+                assert_eq!(id, Some(77), "{core}");
+                assert_eq!(used, bytes.len(), "{core}: trailing bytes after the error");
+            }
+            other => panic!("{core}: {other:?}"),
+        }
+        let over = (proto::MAX_REQUEST_POINTS + 1) as u32;
+        // oversized HULL: a HULL-level error on id 1, same as text
+        let bytes = raw_exchange(handle.local_addr, &bin_header(1, 1, over));
+        match frame::decode_response(&bytes).unwrap() {
+            proto::Decoded::Frame(proto::Response::HullErr { id: 1, .. }, _) => {}
+            other => panic!("{core}: {other:?}"),
+        }
+        // oversized SADD: a session error on sid 9 under the SADD verb
+        let bytes = raw_exchange(handle.local_addr, &bin_header(3, 9, over));
+        match frame::decode_response(&bytes).unwrap() {
+            proto::Decoded::Frame(
+                proto::Response::SessionErr { verb: SessionVerb::Add, id: 9, .. },
+                _,
+            ) => {}
+            other => panic!("{core}: {other:?}"),
+        }
+    }
+    for (_, handle) in cores {
+        handle.stop();
+    }
+}
+
+/// A text client and a binary client asking the same engine the same
+/// question get numerically identical hulls (the encodings carry f64
+/// bit patterns either way).
+#[test]
+fn text_and_binary_hulls_agree_point_for_point() {
+    for (_, handle) in start_cores(BackendKind::Native) {
+        let pts = generate(Distribution::Bimodal, 300, 99);
+        let mut ct = HullClient::connect_with(handle.local_addr, WireProto::Text).unwrap();
+        let mut cb = HullClient::connect_with(handle.local_addr, WireProto::Binary).unwrap();
+        ct.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        cb.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        let ht = ct.hull(&pts).unwrap();
+        let hb = cb.hull(&pts).unwrap();
+        assert_eq!(ht.upper, hb.upper);
+        assert_eq!(ht.lower, hb.lower);
+        assert_eq!(ht.backend, hb.backend);
+        ct.quit().unwrap();
+        cb.quit().unwrap();
+        handle.stop();
+    }
+}

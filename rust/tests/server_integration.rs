@@ -32,10 +32,13 @@ fn start_engine(kind: BackendKind, stream_cfg: StreamConfig) -> Arc<Engine> {
     )
 }
 
+fn loopback_cfg() -> ServerConfig {
+    ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() }
+}
+
 fn start_server(kind: BackendKind) -> (Arc<Engine>, wagener_hull::server::ServerHandle) {
     let engine = start_engine(kind, StreamConfig::default());
-    let handle =
-        serve_engine(engine.clone(), &ServerConfig { addr: "127.0.0.1:0".into() }).unwrap();
+    let handle = serve_engine(engine.clone(), &loopback_cfg()).unwrap();
     (engine, handle)
 }
 
@@ -189,7 +192,7 @@ fn deprecated_serve_wrapper_is_a_one_shard_engine() {
         })
         .unwrap(),
     );
-    let handle = serve(coord.clone(), &ServerConfig { addr: "127.0.0.1:0".into() }).unwrap();
+    let handle = serve(coord.clone(), &loopback_cfg()).unwrap();
     assert_eq!(handle.engine().shard_count(), 1);
     let mut client = HullClient::connect(handle.local_addr).unwrap();
     let pts = generate(Distribution::Circle, 90, 5);
@@ -213,8 +216,7 @@ fn start_session_server(
     stream_cfg: StreamConfig,
 ) -> (Arc<Engine>, wagener_hull::server::ServerHandle) {
     let engine = start_engine(kind, stream_cfg);
-    let handle =
-        serve_engine(engine.clone(), &ServerConfig { addr: "127.0.0.1:0".into() }).unwrap();
+    let handle = serve_engine(engine.clone(), &loopback_cfg()).unwrap();
     (engine, handle)
 }
 

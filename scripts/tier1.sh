@@ -5,14 +5,15 @@
 #
 # Gates: `cargo fmt --check` and `cargo clippy -D warnings` (when the
 # components are installed), then `cargo build --release && cargo test -q`
-# (the ROADMAP tier-1 verify), then the server integration suite once
-# more with ENGINE_SHARDS=4 (the sharded engine path on real sockets),
-# then fast smoke runs of bench_runtime, bench_coordinator, bench_stream
-# and bench_engine with WAGENER_BENCH_JSON pointed at BENCH_pram.json /
-# BENCH_coordinator.json / BENCH_stream.json / BENCH_engine.json, so
-# every PR leaves machine-readable perf records (PRAM tier timings,
-# router/worker-pool throughput, streaming-session schedules, shard
-# scaling) for the next PR to compare against.  Every promised
+# (the ROADMAP tier-1 verify), then the socket-facing suites once more
+# with ENGINE_SHARDS=4 (the sharded engine path on real sockets), then
+# fast smoke runs of bench_runtime, bench_coordinator, bench_stream,
+# bench_engine and bench_server with WAGENER_BENCH_JSON pointed at
+# BENCH_pram.json / BENCH_coordinator.json / BENCH_stream.json /
+# BENCH_engine.json / BENCH_server.json, so every PR leaves
+# machine-readable perf records (PRAM tier timings, router/worker-pool
+# throughput, streaming-session schedules, shard scaling, connection-core
+# and wire-format costs) for the next PR to compare against.  Every promised
 # BENCH_*.json is then ASSERTED to hold at least one report (a bench that
 # skips a backend must still emit its JSON trailer — an empty trajectory
 # file means the harness regressed).
@@ -46,12 +47,15 @@ cargo build --release
 echo "== tier1: cargo test -q =="
 cargo test -q
 
-# The server integration suite runs once more against a 4-shard engine:
-# the sharded routing/registry/metrics paths must hold on real sockets in
+# The socket-facing suites run once more against a 4-shard engine: the
+# sharded routing/registry/metrics paths must hold on real sockets in
 # CI, not just in unit tests (shard-parity itself lives in
-# engine_integration, which the main test run covers).
-echo "== tier1: server integration suite @ ENGINE_SHARDS=4 =="
-ENGINE_SHARDS=4 cargo test -q --test server_integration
+# engine_integration, which the main test run covers).  proto_parity and
+# event_loop_integration join server_integration here so both connection
+# cores and both wire formats are exercised on the sharded path too.
+echo "== tier1: server suites @ ENGINE_SHARDS=4 =="
+ENGINE_SHARDS=4 cargo test -q --test server_integration \
+    --test proto_parity --test event_loop_integration
 
 # A promised bench trajectory that ends up empty is a silent regression
 # (a skipping backend must still write its report); fail loudly instead.
@@ -86,6 +90,12 @@ WAGENER_BENCH_FAST=1 WAGENER_BENCH_JSON="$ROOT/BENCH_engine.json" \
     cargo bench --bench bench_engine
 assert_bench_written "$ROOT/BENCH_engine.json"
 
+echo "== tier1: smoke bench -> BENCH_server.json =="
+: > "$ROOT/BENCH_server.json"
+WAGENER_BENCH_FAST=1 WAGENER_BENCH_JSON="$ROOT/BENCH_server.json" \
+    cargo bench --bench bench_server
+assert_bench_written "$ROOT/BENCH_server.json"
+
 echo "tier1 OK — bench rows:"
 cat "$ROOT/BENCH_pram.json" "$ROOT/BENCH_coordinator.json" "$ROOT/BENCH_stream.json" \
-    "$ROOT/BENCH_engine.json"
+    "$ROOT/BENCH_engine.json" "$ROOT/BENCH_server.json"
