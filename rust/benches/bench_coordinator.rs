@@ -65,10 +65,7 @@ fn main() {
                         let pts = generate(Distribution::Disk, 150, t);
                         let waits: Vec<_> = (0..25)
                             .map(|_| {
-                                c.submit(HullRequest {
-                                    id: c.next_id(),
-                                    points: pts.clone(),
-                                })
+                                c.submit(HullRequest::new(c.next_id(), pts.clone()))
                             })
                             .collect();
                         for w in waits {
@@ -108,7 +105,7 @@ fn main() {
                 handles.push(std::thread::spawn(move || {
                     let waits: Vec<_> = (0..8)
                         .map(|_| {
-                            c.submit(HullRequest { id: c.next_id(), points: pts.clone() })
+                            c.submit(HullRequest::new(c.next_id(), pts.clone()))
                         })
                         .collect();
                     for w in waits {

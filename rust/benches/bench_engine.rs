@@ -33,6 +33,7 @@ fn engine(shards: usize, merge_threshold: usize) -> Arc<Engine> {
                 ..Default::default()
             },
             stream: StreamConfig { merge_threshold, idle_ttl_ms: 0, ..Default::default() },
+            ..Default::default()
         })
         .unwrap(),
     )
@@ -57,7 +58,7 @@ fn main() {
                 .iter()
                 .map(|pts| {
                     ids += 1;
-                    e.submit(HullRequest { id: ids, points: pts.clone() })
+                    e.submit(HullRequest::new(ids, pts.clone()))
                 })
                 .collect();
             let mut verts = 0usize;

@@ -1,0 +1,183 @@
+//! E11 — robustness under overload: latency and shed rate at ~2× the
+//! measured capacity, with admission control off (`max_queued = 0`,
+//! the queue absorbs everything) vs on (a bounded in-flight ceiling
+//! sheds the excess as typed `overloaded` rejections).
+//!
+//! Per mode the report carries a closed-loop baseline row (which also
+//! calibrates the service time used to pace the overload), an open-loop
+//! burst row at 2× capacity (wall time per request, pacing + drain),
+//! and notes with the shed rate and the sojourn p50/p95/max of the
+//! requests that were actually served.  The headline contrast: without
+//! shedding every request is eventually served but sojourn latency
+//! balloons with queue depth; with shedding the served requests keep
+//! near-baseline sojourns and the excess fails fast.
+//!
+//! Run: `cargo bench --bench bench_robustness` (tier1.sh feeds
+//! BENCH_robustness.json via WAGENER_BENCH_JSON; WAGENER_BENCH_FAST=1
+//! shrinks the burst).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use wagener_hull::benchkit::{Bencher, Report};
+use wagener_hull::coordinator::{
+    BackendKind, BatcherConfig, CoordinatorConfig, HullRequest, RequestError,
+};
+use wagener_hull::engine::{Engine, EngineConfig};
+use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::geometry::point::Point;
+use wagener_hull::stream::StreamConfig;
+
+fn start_engine(max_queued: usize) -> Arc<Engine> {
+    Arc::new(
+        Engine::start(EngineConfig {
+            shards: 1,
+            coordinator: CoordinatorConfig {
+                backend: BackendKind::Serial,
+                workers: 1,
+                batcher: BatcherConfig { max_batch: 1, flush_us: 100, queue_cap: 8192 },
+                self_check: false,
+                ..Default::default()
+            },
+            stream: StreamConfig::default(),
+            max_queued,
+        })
+        .unwrap(),
+    )
+}
+
+struct BurstTally {
+    ok: AtomicUsize,
+    shed: AtomicUsize,
+    other: AtomicUsize,
+    done: AtomicUsize,
+    /// sojourn (submit → completion) of every SERVED request, in ns
+    sojourn_ns: Mutex<Vec<f64>>,
+}
+
+impl BurstTally {
+    fn new() -> Self {
+        BurstTally {
+            ok: AtomicUsize::new(0),
+            shed: AtomicUsize::new(0),
+            other: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            sojourn_ns: Mutex::new(Vec::new()),
+        }
+    }
+}
+
+/// Submit `burst` copies of `pts` open-loop at one request per
+/// `interval` (≈ 2× capacity when `interval` is half the service time),
+/// then wait for every one to resolve — shed requests fail fast, queued
+/// ones drain at the backend's pace.
+fn run_burst(
+    e: &Arc<Engine>,
+    pts: &[Point],
+    burst: usize,
+    interval: Duration,
+    tally: &Arc<BurstTally>,
+) {
+    // the tally accumulates across repeated bench iterations; this burst
+    // is drained once `done` has advanced by exactly `burst`
+    let done0 = tally.done.load(Ordering::Acquire);
+    let t0 = Instant::now();
+    for k in 0..burst {
+        // open-loop pacing against the global clock (sleep drift does not
+        // accumulate: each slot is an absolute offset from the start)
+        let due = interval * k as u32;
+        let now = t0.elapsed();
+        if now < due {
+            std::thread::sleep(due - now);
+        }
+        let submitted = Instant::now();
+        let tally = tally.clone();
+        e.submit_into(HullRequest::new(k as u64 + 1, pts.to_vec()), move |res| {
+            match res {
+                Ok(_) => {
+                    let ns = submitted.elapsed().as_nanos() as f64;
+                    tally.sojourn_ns.lock().unwrap().push(ns);
+                    tally.ok.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(RequestError::Overloaded) => {
+                    tally.shed.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(_) => {
+                    tally.other.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            tally.done.fetch_add(1, Ordering::Relaxed);
+        });
+    }
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while tally.done.load(Ordering::Acquire) < done0 + burst {
+        assert!(Instant::now() < deadline, "burst did not drain within 60s");
+        std::thread::sleep(Duration::from_micros(200));
+    }
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() as f64 * p) as usize).min(sorted.len() - 1)]
+}
+
+fn main() {
+    let b = Bencher::default();
+    let fast = std::env::var("WAGENER_BENCH_FAST").is_ok();
+    let burst: usize = if fast { 200 } else { 800 };
+    let pts = generate(Distribution::Disk, 8192, 42);
+
+    let mut report = Report::new(&format!(
+        "E11: overload robustness — {burst}-request bursts at 2x capacity, shedding off vs on"
+    ));
+
+    // (label, max_queued): 0 = unbounded queue, bounded = shed the excess
+    for &(label, max_queued) in &[("shed_off", 0usize), ("shed_on", 64usize)] {
+        let e = start_engine(max_queued);
+
+        // closed-loop baseline: one request in flight, no queueing — this
+        // row is also the capacity calibration for the burst pacing
+        let baseline = b.run(&format!("robustness/{label}/closed_loop_rtt"), || {
+            e.compute(pts.clone()).unwrap().upper.len()
+        });
+        let service = Duration::from_nanos(baseline.mean_ns.max(1.0) as u64);
+        report.add(baseline);
+
+        // open-loop burst at 2× capacity: one submit per service/2
+        let interval = service / 2;
+        let tally = Arc::new(BurstTally::new());
+        report.add(b.run_batched(
+            &format!("robustness/{label}/overload_2x_wall_per_req"),
+            burst,
+            || run_burst(&e, &pts, burst, interval, &tally),
+        ));
+
+        let ok = tally.ok.load(Ordering::Acquire);
+        let shed = tally.shed.load(Ordering::Acquire);
+        let other = tally.other.load(Ordering::Acquire);
+        let total = ok + shed + other;
+        let mut sojourns = tally.sojourn_ns.lock().unwrap().clone();
+        sojourns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        report.note(format!(
+            "{label} (max_queued={max_queued}): served {ok}/{total}, shed {shed} \
+             ({:.1}%), other {other}; served sojourn p50 {:.0} µs, p95 {:.0} µs, \
+             max {:.0} µs (closed-loop {:.0} µs)",
+            100.0 * shed as f64 / total.max(1) as f64,
+            percentile(&sojourns, 0.50) / 1e3,
+            percentile(&sojourns, 0.95) / 1e3,
+            sojourns.last().copied().unwrap_or(0.0) / 1e3,
+            service.as_nanos() as f64 / 1e3,
+        ));
+        let snap = e.snapshot().0;
+        report.note(format!(
+            "{label}: engine shed_total={} deadline_exceeded_total={} retries_total={}",
+            snap.get("shed_total").and_then(|v| v.as_usize()).unwrap_or(0),
+            snap.get("deadline_exceeded_total").and_then(|v| v.as_usize()).unwrap_or(0),
+            snap.get("retries_total").and_then(|v| v.as_usize()).unwrap_or(0),
+        ));
+    }
+    report.finish();
+}

@@ -40,6 +40,7 @@ fn start_engine() -> Arc<Engine> {
                 ..Default::default()
             },
             stream: StreamConfig::default(),
+            ..Default::default()
         })
         .unwrap(),
     )
@@ -70,7 +71,7 @@ fn main() {
         ("event_io4", false, 4),
     ];
     for &(label, threaded, io_threads) in cores {
-        let cfg = ServerConfig { addr: "127.0.0.1:0".into(), io_threads };
+        let cfg = ServerConfig { addr: "127.0.0.1:0".into(), io_threads, ..Default::default() };
         let handle: ServerHandle = if threaded {
             serve_engine_threaded(start_engine(), &cfg).unwrap()
         } else {
@@ -157,7 +158,7 @@ fn main() {
     // ---------------------------------------------- E10b: frame micro
     let mut report = Report::new("E10b: frame decode/encode — text vs binary");
     for n in [16usize, 1024] {
-        let req = Request::Hull { id: 1, points: generate(Distribution::Disk, n, 7) };
+        let req = Request::Hull { id: 1, points: generate(Distribution::Disk, n, 7), tmo_ms: None };
         let mut bin = Vec::new();
         frame::encode_request(&mut bin, &req);
         let mut txt = Vec::new();

@@ -4,6 +4,9 @@
 //! [server]
 //! addr = "127.0.0.1:7878"
 //! io_threads = 0             # event-loop threads; 0 = auto (cores/4, 1..=4)
+//! request_timeout_ms = 0     # default per-request deadline; 0 = none
+//! max_proto_errors = 8       # consecutive text protocol errors before
+//!                            # disconnect; 0 = never
 //!
 //! [backend]
 //! kind = "pjrt"              # pjrt | native | serial | pram
@@ -19,9 +22,15 @@
 //! [coordinator]
 //! workers = 0                # exec worker threads; 0 = hardware threads
 //! prefilter = true           # octagon interior-point pre-filter
+//! breaker_cooldown_ms = 1000 # circuit-breaker open -> half-open probe
+//!                            # delay after repeated backend failures;
+//!                            # 0 disables the breaker
 //!
 //! [engine]
 //! shards = 1                 # coordinator pools; 0 = auto (pjrt -> 1)
+//! max_queued = 0             # per-shard in-flight ceiling before new
+//!                            # one-shots/SADDs shed with "overloaded";
+//!                            # 0 = unbounded
 //!
 //! [stream]
 //! max_sessions = 1024        # open streaming-session cap
@@ -45,11 +54,15 @@ pub struct EngineSection {
     /// coordinator-shard count; 0 = auto (pjrt resolves to 1, host
     /// backends to `clamp(hw/4, 1, 8)` — see `engine::EngineConfig`).
     pub shards: usize,
+    /// per-shard in-flight ceiling: past it new one-shot requests and
+    /// `SADD`s answer the typed error `overloaded` (cheapest-sibling
+    /// routing is tried first).  0 = unbounded.
+    pub max_queued: usize,
 }
 
 impl Default for EngineSection {
     fn default() -> Self {
-        EngineSection { shards: 1 }
+        EngineSection { shards: 1, max_queued: 0 }
     }
 }
 
@@ -80,6 +93,12 @@ impl Config {
                     }
                     "server.io_threads" => {
                         cfg.server.io_threads = as_usize(value, &path)?;
+                    }
+                    "server.request_timeout_ms" => {
+                        cfg.server.request_timeout_ms = as_usize(value, &path)? as u64;
+                    }
+                    "server.max_proto_errors" => {
+                        cfg.server.max_proto_errors = as_usize(value, &path)? as u32;
                     }
                     "backend.kind" => {
                         let s = value.as_str().ok_or_else(|| anyhow!("{path}: want string"))?;
@@ -120,8 +139,14 @@ impl Config {
                         cfg.coordinator.prefilter =
                             value.as_bool().ok_or_else(|| anyhow!("{path}: want bool"))?;
                     }
+                    "coordinator.breaker_cooldown_ms" => {
+                        cfg.coordinator.breaker_cooldown_ms = as_usize(value, &path)? as u64;
+                    }
                     "engine.shards" => {
                         cfg.engine.shards = as_usize(value, &path)?;
+                    }
+                    "engine.max_queued" => {
+                        cfg.engine.max_queued = as_usize(value, &path)?;
                     }
                     "stream.max_sessions" => {
                         cfg.stream.max_sessions = as_usize(value, &path)?.max(1);
@@ -163,6 +188,8 @@ mod tests {
 [server]
 addr = "0.0.0.0:9000"
 io_threads = 2
+request_timeout_ms = 750
+max_proto_errors = 3
 [backend]
 kind = "serial"
 artifacts_dir = "/tmp/arts"
@@ -175,8 +202,10 @@ queue_cap = 99
 [coordinator]
 workers = 6
 prefilter = false
+breaker_cooldown_ms = 125
 [engine]
 shards = 3
+max_queued = 64
 [stream]
 max_sessions = 9
 merge_threshold = 128
@@ -186,6 +215,8 @@ idle_ttl_ms = 2500
         .unwrap();
         assert_eq!(cfg.server.addr, "0.0.0.0:9000");
         assert_eq!(cfg.server.io_threads, 2);
+        assert_eq!(cfg.server.request_timeout_ms, 750);
+        assert_eq!(cfg.server.max_proto_errors, 3);
         assert_eq!(cfg.coordinator.backend, BackendKind::Serial);
         assert_eq!(cfg.coordinator.artifacts_dir, PathBuf::from("/tmp/arts"));
         assert!(cfg.coordinator.self_check);
@@ -195,7 +226,9 @@ idle_ttl_ms = 2500
         assert_eq!(cfg.coordinator.batcher.queue_cap, 99);
         assert_eq!(cfg.coordinator.workers, 6);
         assert!(!cfg.coordinator.prefilter);
+        assert_eq!(cfg.coordinator.breaker_cooldown_ms, 125);
         assert_eq!(cfg.engine.shards, 3);
+        assert_eq!(cfg.engine.max_queued, 64);
         assert_eq!(cfg.stream.max_sessions, 9);
         assert_eq!(cfg.stream.merge_threshold, 128);
         assert_eq!(cfg.stream.idle_ttl_ms, 2500);
@@ -211,6 +244,10 @@ idle_ttl_ms = 2500
         assert_eq!(cfg.coordinator.workers, 0); // 0 = available parallelism
         assert!(cfg.coordinator.prefilter);
         assert_eq!(cfg.engine.shards, 1); // sharding is opt-in (0 = auto)
+        assert_eq!(cfg.engine.max_queued, 0); // shedding is opt-in
+        assert_eq!(cfg.server.request_timeout_ms, 0); // deadlines are opt-in
+        assert_eq!(cfg.server.max_proto_errors, 8);
+        assert_eq!(cfg.coordinator.breaker_cooldown_ms, 1000);
         assert_eq!(cfg.stream.max_sessions, 1024);
         assert_eq!(cfg.stream.merge_threshold, 4096);
         assert_eq!(cfg.stream.idle_ttl_ms, 60_000);

@@ -8,9 +8,11 @@
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use super::request::{HullReply, Prepared};
+use super::metrics::Metrics;
+use super::request::{HullReply, Prepared, RequestError};
 
 /// Batching policy knobs (config file: `[batcher]`).
 #[derive(Clone, Copy, Debug)]
@@ -36,9 +38,42 @@ pub(crate) struct Item {
     pub reply: HullReply,
 }
 
-/// A flushed batch (all items share a size class).
+/// A flushed batch (all items share a size class).  An EMPTY batch is the
+/// batcher's shutdown pill: it sends one per exec worker after draining,
+/// and a worker that dequeues one exits (workers hold a retry sender
+/// clone, so the channel alone can never disconnect — see `run_exec_worker`).
 pub(crate) struct BatchMsg {
     pub items: Vec<Item>,
+    /// dispatch attempt: 0 = first, 1 = the one bounded retry after a
+    /// backend failure (re-enqueued so a different worker picks it up).
+    pub attempt: u8,
+}
+
+/// Answer one deadline-expired item (`errors` + `deadline_exceeded`; the
+/// request was admitted, so the error keeps `in_flight` balanced).
+pub(crate) fn expire_item(item: Item, metrics: &Metrics) {
+    Metrics::inc(&metrics.errors);
+    Metrics::inc(&metrics.deadline_exceeded);
+    metrics.queue_latency.record(item.enqueued.elapsed());
+    item.reply.send(Err(RequestError::DeadlineExceeded));
+}
+
+/// Drop every already-expired item from a batch, answering each with
+/// `deadline-exceeded`.  Shared by the batcher (dequeue/flush) and the
+/// exec workers (pre-dispatch check).
+pub(crate) fn reap_expired(items: &mut Vec<Item>, metrics: &Metrics) {
+    let now = Instant::now();
+    if items.iter().any(|i| i.prepared.expired(now)) {
+        let mut kept = Vec::with_capacity(items.len());
+        for item in items.drain(..) {
+            if item.prepared.expired(now) {
+                expire_item(item, metrics);
+            } else {
+                kept.push(item);
+            }
+        }
+        *items = kept;
+    }
 }
 
 /// Size-class key: smallest power of two >= the request's point count
@@ -48,20 +83,27 @@ pub fn size_class(m: usize) -> usize {
 }
 
 /// The batcher loop: runs on its own thread until the submit side closes.
+/// On its way out it sends one empty pill per exec worker so the pool can
+/// drain deterministically even though workers hold retry sender clones.
 pub(crate) fn run_batcher(
     rx: mpsc::Receiver<Item>,
     tx: mpsc::SyncSender<BatchMsg>,
     max_batch: usize,
     flush_us: u64,
+    workers: usize,
+    metrics: Arc<Metrics>,
 ) {
     let flush = Duration::from_micros(flush_us.max(1));
     let mut queues: BTreeMap<usize, Vec<Item>> = BTreeMap::new();
 
-    let flush_class = |items: Vec<Item>, tx: &mpsc::SyncSender<BatchMsg>| {
+    let flush_class = |mut items: Vec<Item>, tx: &mpsc::SyncSender<BatchMsg>| {
+        // request deadlines are enforced at dequeue: an expired item is
+        // answered here instead of occupying a worker slot
+        reap_expired(&mut items, &metrics);
         if !items.is_empty() {
             // receiver gone => shutting down; drop items (their reply
             // channels die, submitters observe Shutdown)
-            let _ = tx.send(BatchMsg { items });
+            let _ = tx.send(BatchMsg { items, attempt: 0 });
         }
     };
 
@@ -79,18 +121,30 @@ pub(crate) fn run_batcher(
         };
         match rx.recv_timeout(wait) {
             Ok(item) => {
-                let class = size_class(item.prepared.points.len());
-                let q = queues.entry(class).or_default();
-                q.push(item);
-                if q.len() >= max_batch {
-                    let items = std::mem::take(q);
-                    flush_class(items, &tx);
+                if item.prepared.expired(Instant::now()) {
+                    // expired while waiting in the submit queue: answer
+                    // now, never enqueue (the sweep below still runs)
+                    expire_item(item, &metrics);
+                } else {
+                    let class = size_class(item.prepared.points.len());
+                    let q = queues.entry(class).or_default();
+                    q.push(item);
+                    if q.len() >= max_batch {
+                        let items = std::mem::take(q);
+                        flush_class(items, &tx);
+                    }
                 }
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {}
             Err(mpsc::RecvTimeoutError::Disconnected) => {
                 for (_, q) in std::mem::take(&mut queues) {
                     flush_class(q, &tx);
+                }
+                // one pill per worker: each consumes exactly one and exits
+                for _ in 0..workers {
+                    if tx.send(BatchMsg { items: Vec::new(), attempt: 0 }).is_err() {
+                        break;
+                    }
                 }
                 return;
             }
@@ -116,6 +170,14 @@ mod tests {
     use crate::geometry::point::Point;
 
     fn item(m: usize, reply: mpsc::Sender<Result<HullResponse, RequestError>>) -> Item {
+        item_deadline(m, reply, None)
+    }
+
+    fn item_deadline(
+        m: usize,
+        reply: mpsc::Sender<Result<HullResponse, RequestError>>,
+        deadline: Option<Instant>,
+    ) -> Item {
         Item {
             prepared: Prepared {
                 id: m as u64,
@@ -124,10 +186,23 @@ mod tests {
                     .collect(),
                 degenerate: false,
                 filtered: 0,
+                deadline,
             },
             enqueued: Instant::now(),
             reply: HullReply::Channel(reply),
         }
+    }
+
+    fn spawn_batcher(
+        irx: mpsc::Receiver<Item>,
+        btx: mpsc::SyncSender<BatchMsg>,
+        max_batch: usize,
+        flush_us: u64,
+    ) -> (std::thread::JoinHandle<()>, Arc<Metrics>) {
+        let metrics = Arc::new(Metrics::default());
+        let m2 = metrics.clone();
+        let h = std::thread::spawn(move || run_batcher(irx, btx, max_batch, flush_us, 1, m2));
+        (h, metrics)
     }
 
     #[test]
@@ -143,7 +218,7 @@ mod tests {
     fn flushes_when_batch_full() {
         let (itx, irx) = mpsc::channel();
         let (btx, brx) = mpsc::sync_channel(16);
-        let h = std::thread::spawn(move || run_batcher(irx, btx, 3, 100_000));
+        let (h, _m) = spawn_batcher(irx, btx, 3, 100_000);
         let (rtx, _rrx) = mpsc::channel();
         for _ in 0..3 {
             itx.send(item(10, rtx.clone())).unwrap();
@@ -158,7 +233,7 @@ mod tests {
     fn flushes_on_deadline() {
         let (itx, irx) = mpsc::channel();
         let (btx, brx) = mpsc::sync_channel(16);
-        let h = std::thread::spawn(move || run_batcher(irx, btx, 100, 2_000));
+        let (h, _m) = spawn_batcher(irx, btx, 100, 2_000);
         let (rtx, _rrx) = mpsc::channel();
         itx.send(item(10, rtx.clone())).unwrap();
         let t0 = Instant::now();
@@ -173,7 +248,7 @@ mod tests {
     fn separates_size_classes() {
         let (itx, irx) = mpsc::channel();
         let (btx, brx) = mpsc::sync_channel(16);
-        let h = std::thread::spawn(move || run_batcher(irx, btx, 2, 50_000));
+        let (h, _m) = spawn_batcher(irx, btx, 2, 50_000);
         let (rtx, _rrx) = mpsc::channel();
         itx.send(item(10, rtx.clone())).unwrap(); // class 16
         itx.send(item(100, rtx.clone())).unwrap(); // class 128
@@ -198,7 +273,7 @@ mod tests {
         let (itx, irx) = mpsc::channel();
         let (btx, brx) = mpsc::sync_channel(64);
         let flush_us = 3_000u64;
-        let h = std::thread::spawn(move || run_batcher(irx, btx, 1000, flush_us));
+        let (h, _m) = spawn_batcher(irx, btx, 1000, flush_us);
         let (rtx, _rrx) = mpsc::channel();
 
         let feeder = std::thread::spawn(move || {
@@ -235,11 +310,59 @@ mod tests {
         h.join().unwrap();
     }
 
+    /// An item whose deadline passed while queued is answered
+    /// `deadline-exceeded` at dequeue and never reaches a worker.
+    #[test]
+    fn expired_items_answered_at_dequeue() {
+        let (itx, irx) = mpsc::channel();
+        let (btx, brx) = mpsc::sync_channel(16);
+        let (h, metrics) = spawn_batcher(irx, btx, 2, 1_000);
+        let (rtx, rrx) = mpsc::channel();
+        // already expired on arrival
+        itx.send(item_deadline(10, rtx.clone(), Some(Instant::now() - Duration::from_millis(1))))
+            .unwrap();
+        match rrx.recv_timeout(Duration::from_secs(2)).unwrap() {
+            Err(RequestError::DeadlineExceeded) => {}
+            other => panic!("expected deadline-exceeded, got {other:?}"),
+        }
+        // live item still flows through normally
+        itx.send(item_deadline(10, rtx.clone(), Some(Instant::now() + Duration::from_secs(60))))
+            .unwrap();
+        let batch = brx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(batch.items.len(), 1);
+        assert_eq!(metrics.deadline_exceeded.load(std::sync::atomic::Ordering::Relaxed), 1);
+        assert_eq!(metrics.errors.load(std::sync::atomic::Ordering::Relaxed), 1);
+        drop(itx);
+        h.join().unwrap();
+    }
+
+    /// The drain path ends with one empty pill per worker so the pool can
+    /// exit even though workers hold retry sender clones.
+    #[test]
+    fn drain_emits_one_pill_per_worker() {
+        let (itx, irx) = mpsc::channel();
+        let (btx, brx) = mpsc::sync_channel(16);
+        let metrics = Arc::new(Metrics::default());
+        let h = std::thread::spawn(move || run_batcher(irx, btx, 100, 1_000, 3, metrics));
+        let (rtx, _rrx) = mpsc::channel();
+        itx.send(item(5, rtx.clone())).unwrap();
+        drop(itx);
+        let batch = brx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(batch.items.len(), 1);
+        assert_eq!(batch.attempt, 0);
+        for _ in 0..3 {
+            let pill = brx.recv_timeout(Duration::from_secs(2)).unwrap();
+            assert!(pill.items.is_empty(), "pill carried items");
+        }
+        assert!(brx.recv_timeout(Duration::from_millis(100)).is_err());
+        h.join().unwrap();
+    }
+
     #[test]
     fn drains_on_disconnect() {
         let (itx, irx) = mpsc::channel();
         let (btx, brx) = mpsc::sync_channel(16);
-        let h = std::thread::spawn(move || run_batcher(irx, btx, 100, 1_000_000));
+        let (h, _m) = spawn_batcher(irx, btx, 100, 1_000_000);
         let (rtx, _rrx) = mpsc::channel();
         itx.send(item(5, rtx.clone())).unwrap();
         drop(itx);

@@ -166,6 +166,20 @@ pub struct Metrics {
     pub queue_latency: Histogram,
     pub exec_latency: Histogram,
     pub e2e_latency: Histogram,
+    // ---- robustness (deadlines, shedding, failover) ----
+    /// requests answered `deadline-exceeded` (admission, batcher dequeue,
+    /// or pre-dispatch expiry).  Every one also counts in `errors`.
+    pub deadline_exceeded: AtomicU64,
+    /// requests answered `overloaded` by admission control (the shard was
+    /// at its `max_queued` ceiling).  NOT part of `errors`: shed requests
+    /// never entered the pipeline, so they must not skew `in_flight`.
+    pub shed: AtomicU64,
+    /// batches re-dispatched after a backend failure (one bounded retry).
+    pub retries: AtomicU64,
+    /// circuit-breaker state gauge: 0 closed, 1 open, 2 half-open.
+    /// Merged across shards it reads as "sum of shard states" — use
+    /// `per_shard` for the individual breakers.
+    pub breaker_state: AtomicU64,
     // ---- streaming sessions (maintained by stream::SessionRegistry) ----
     /// currently open sessions (gauge).
     pub open_sessions: AtomicU64,
@@ -220,6 +234,10 @@ impl Metrics {
             queue_latency: self.queue_latency.snap(),
             exec_latency: self.exec_latency.snap(),
             e2e_latency: self.e2e_latency.snap(),
+            deadline_exceeded: g(&self.deadline_exceeded),
+            shed: g(&self.shed),
+            retries: g(&self.retries),
+            breaker_state: g(&self.breaker_state),
             open_sessions: g(&self.open_sessions),
             session_absorbed_points: g(&self.session_absorbed_points),
             session_pending_points: g(&self.session_pending_points),
@@ -258,6 +276,10 @@ pub struct MetricsFrame {
     pub queue_latency: HistogramSnapshot,
     pub exec_latency: HistogramSnapshot,
     pub e2e_latency: HistogramSnapshot,
+    pub deadline_exceeded: u64,
+    pub shed: u64,
+    pub retries: u64,
+    pub breaker_state: u64,
     pub open_sessions: u64,
     pub session_absorbed_points: u64,
     pub session_pending_points: u64,
@@ -283,6 +305,10 @@ impl MetricsFrame {
         self.queue_latency.merge(&other.queue_latency);
         self.exec_latency.merge(&other.exec_latency);
         self.e2e_latency.merge(&other.e2e_latency);
+        self.deadline_exceeded += other.deadline_exceeded;
+        self.shed += other.shed;
+        self.retries += other.retries;
+        self.breaker_state += other.breaker_state;
         self.open_sessions += other.open_sessions;
         self.session_absorbed_points += other.session_absorbed_points;
         self.session_pending_points += other.session_pending_points;
@@ -321,6 +347,10 @@ impl MetricsFrame {
             ("queue_latency", self.queue_latency.to_json()),
             ("exec_latency", self.exec_latency.to_json()),
             ("e2e_latency", self.e2e_latency.to_json()),
+            ("deadline_exceeded_total", n(self.deadline_exceeded)),
+            ("shed_total", n(self.shed)),
+            ("retries_total", n(self.retries)),
+            ("breaker_state", n(self.breaker_state)),
             ("open_sessions", n(self.open_sessions)),
             ("absorbed_points_total", n(self.session_absorbed_points)),
             ("pending_points_total", n(self.session_pending_points)),
@@ -472,6 +502,27 @@ mod tests {
             snap.get("session_merge_latency").unwrap().get("count").unwrap().as_usize(),
             Some(1)
         );
+    }
+
+    #[test]
+    fn robustness_counters_snapshot_and_merge() {
+        let a = Metrics::default();
+        let b = Metrics::default();
+        Metrics::add(&a.deadline_exceeded, 2);
+        Metrics::add(&b.shed, 3);
+        Metrics::inc(&a.retries);
+        b.breaker_state.store(1, Ordering::Relaxed);
+        let mut merged = a.frame();
+        merged.merge(&b.frame());
+        assert_eq!(merged.deadline_exceeded, 2);
+        assert_eq!(merged.shed, 3);
+        assert_eq!(merged.retries, 1);
+        assert_eq!(merged.breaker_state, 1);
+        let j = crate::util::json::parse(&merged.to_json().to_string()).unwrap();
+        assert_eq!(j.get("deadline_exceeded_total").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("shed_total").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("retries_total").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("breaker_state").unwrap().as_usize(), Some(1));
     }
 
     #[test]

@@ -24,4 +24,4 @@ pub use metrics::{
     MetricsSnapshot,
 };
 pub use request::{HullReply, HullRequest, HullResponse, RequestError};
-pub use router::{Coordinator, CoordinatorConfig};
+pub use router::{Breaker, Coordinator, CoordinatorConfig};

@@ -1,5 +1,7 @@
 //! Request/response types and input preprocessing.
 
+use std::time::Instant;
+
 use crate::geometry::point::{sort_by_x, Point};
 use crate::geometry::predicates::{orient2d, Orientation};
 
@@ -8,6 +10,22 @@ use crate::geometry::predicates::{orient2d, Orientation};
 pub struct HullRequest {
     pub id: u64,
     pub points: Vec<Point>,
+    /// Absolute completion deadline.  A request past it answers
+    /// `deadline-exceeded` instead of occupying a worker; `None` waits
+    /// forever (the pre-deadline behaviour).
+    pub deadline: Option<Instant>,
+}
+
+impl HullRequest {
+    pub fn new(id: u64, points: Vec<Point>) -> HullRequest {
+        HullRequest { id, points, deadline: None }
+    }
+
+    /// Attach an absolute deadline (builder-style).
+    pub fn with_deadline(mut self, deadline: Option<Instant>) -> HullRequest {
+        self.deadline = deadline;
+        self
+    }
 }
 
 /// A completed hull: upper and lower chains, left-to-right, plus timings.
@@ -83,6 +101,12 @@ pub enum RequestError {
     TooLarge { points: usize, max: usize },
     Backend(String),
     Shutdown,
+    /// The request's deadline passed before a worker could answer it
+    /// (admission, batcher dequeue, or pre-dispatch check).
+    DeadlineExceeded,
+    /// Load shedding: every candidate shard was at its
+    /// `[engine] max_queued` ceiling when the request arrived.
+    Overloaded,
 }
 
 impl std::fmt::Display for RequestError {
@@ -98,6 +122,11 @@ impl std::fmt::Display for RequestError {
             }
             RequestError::Backend(e) => write!(f, "backend failure: {e}"),
             RequestError::Shutdown => write!(f, "coordinator is shutting down"),
+            // single tokens: these are the wire-visible typed errors the
+            // README's robustness vocabulary documents (clients match on
+            // them), so keep them machine-parseable
+            RequestError::DeadlineExceeded => write!(f, "deadline-exceeded"),
+            RequestError::Overloaded => write!(f, "overloaded"),
         }
     }
 }
@@ -114,6 +143,15 @@ pub struct Prepared {
     pub degenerate: bool,
     /// points discarded by the octagon interior-point pre-filter.
     pub filtered: usize,
+    /// absolute completion deadline carried from the request.
+    pub deadline: Option<Instant>,
+}
+
+impl Prepared {
+    /// True once the deadline has passed (`None` never expires).
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
 }
 
 /// Validate raw client points: finite coordinates inside the paper's
@@ -226,7 +264,7 @@ pub fn prepare(req: &HullRequest, prefilter: bool) -> Result<Prepared, RequestEr
     pts.dedup(); // exact duplicates can always be dropped
     let filtered = if prefilter { octagon_filter(&mut pts) } else { 0 };
     let degenerate = pts.windows(2).any(|w| w[0].x == w[1].x);
-    Ok(Prepared { id: req.id, points: pts, degenerate, filtered })
+    Ok(Prepared { id: req.id, points: pts, degenerate, filtered, deadline: req.deadline })
 }
 
 #[cfg(test)]
@@ -236,10 +274,7 @@ mod tests {
     use crate::serial::monotone_chain;
 
     fn req(v: &[(f64, f64)]) -> HullRequest {
-        HullRequest {
-            id: 1,
-            points: v.iter().map(|&(x, y)| Point::new(x, y)).collect(),
-        }
+        HullRequest::new(1, v.iter().map(|&(x, y)| Point::new(x, y)).collect())
     }
 
     #[test]
@@ -295,7 +330,7 @@ mod tests {
         for dist in Distribution::ALL {
             for &(n, seed) in &[(64usize, 1u64), (500, 2), (4096, 3)] {
                 let pts = generate(dist, n, seed);
-                let raw = HullRequest { id: 1, points: pts };
+                let raw = HullRequest::new(1, pts);
                 let plain = prepare(&raw, false).unwrap();
                 let filt = prepare(&raw, true).unwrap();
                 assert_eq!(
@@ -312,7 +347,7 @@ mod tests {
     #[test]
     fn prefilter_sheds_interior_points_on_dense_input() {
         let pts = generate(Distribution::Disk, 4096, 7);
-        let p = prepare(&HullRequest { id: 1, points: pts }, true).unwrap();
+        let p = prepare(&HullRequest::new(1, pts), true).unwrap();
         assert!(
             p.filtered > 2048,
             "dense disk kept {} of 4096 points",
@@ -325,7 +360,7 @@ mod tests {
     #[test]
     fn prefilter_skips_small_inputs() {
         let pts = generate(Distribution::Disk, PREFILTER_MIN_POINTS - 1, 7);
-        let p = prepare(&HullRequest { id: 1, points: pts }, true).unwrap();
+        let p = prepare(&HullRequest::new(1, pts), true).unwrap();
         assert_eq!(p.filtered, 0);
     }
 
@@ -361,7 +396,7 @@ mod tests {
     fn prefilter_never_drops_hull_vertices_randomized() {
         for seed in 0..20u64 {
             let pts = generate(Distribution::ALL[(seed % 7) as usize], 777, seed);
-            let raw = HullRequest { id: 1, points: pts };
+            let raw = HullRequest::new(1, pts);
             let plain = prepare(&raw, false).unwrap();
             let filt = prepare(&raw, true).unwrap();
             let (u, l) = monotone_chain::full_hull(&plain.points);

@@ -22,12 +22,13 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use super::backend::{exact_full_hull, BackendKind};
-use super::batcher::{run_batcher, BatchMsg, BatcherConfig, Item};
+use super::backend::{exact_full_hull, BackendKind, HullBackend};
+use super::batcher::{reap_expired, run_batcher, BatchMsg, BatcherConfig, Item};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::request::{prepare, HullReply, HullRequest, HullResponse, RequestError};
+use crate::fault::{FaultAction, FaultPlan};
 use crate::geometry::hull_check::check_upper_hull;
 use crate::geometry::point::Point;
 use crate::pram::ExecMode;
@@ -54,6 +55,14 @@ pub struct CoordinatorConfig {
     /// inputs shrink before they reach a backend (exact — the hull is
     /// unchanged; dropped points land in the `filtered_points` metric).
     pub prefilter: bool,
+    /// circuit-breaker cooldown: after repeated consecutive backend
+    /// failures the breaker opens and the router stops feeding this
+    /// coordinator; the first routing probe after the cooldown half-opens
+    /// it.  `0` disables the breaker entirely.
+    pub breaker_cooldown_ms: u64,
+    /// deterministic fault schedule injected into every exec worker's
+    /// dispatch (chaos tests only; `None` in production).
+    pub fault_plan: Option<Arc<FaultPlan>>,
 }
 
 impl Default for CoordinatorConfig {
@@ -67,6 +76,8 @@ impl Default for CoordinatorConfig {
             exec_mode: ExecMode::Fast,
             workers: 0,
             prefilter: true,
+            breaker_cooldown_ms: 1000,
+            fault_plan: None,
         }
     }
 }
@@ -86,12 +97,118 @@ fn effective_workers(cfg: &CoordinatorConfig) -> usize {
     }
 }
 
+/// Consecutive batch failures before the breaker trips open.
+const BREAKER_TRIP: u32 = 3;
+
+/// Per-coordinator circuit breaker.  Exec workers report every batch
+/// outcome; the engine's router asks [`Breaker::blocked`] before feeding
+/// this shard.  Closed → (BREAKER_TRIP consecutive failures) → open →
+/// (cooldown elapses, first router probe) → half-open → one success
+/// closes it again, one failure re-opens it.  The current mode is
+/// exported as the `breaker_state` gauge (0 closed, 1 open, 2 half-open).
+#[derive(Debug)]
+pub struct Breaker {
+    /// zero = breaker disabled (never blocks, never trips).
+    cooldown: Duration,
+    state: Mutex<BreakerState>,
+    metrics: Arc<Metrics>,
+}
+
+#[derive(Debug)]
+struct BreakerState {
+    mode: u8, // 0 closed, 1 open, 2 half-open
+    consecutive: u32,
+    opened_at: Option<Instant>,
+}
+
+impl Breaker {
+    fn new(cooldown_ms: u64, metrics: Arc<Metrics>) -> Breaker {
+        Breaker {
+            cooldown: Duration::from_millis(cooldown_ms),
+            state: Mutex::new(BreakerState { mode: 0, consecutive: 0, opened_at: None }),
+            metrics,
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, BreakerState> {
+        self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    fn set_mode(&self, st: &mut BreakerState, mode: u8) {
+        st.mode = mode;
+        self.metrics.breaker_state.store(mode as u64, Ordering::Relaxed);
+    }
+
+    /// A batch dispatched cleanly: reset the failure streak; a half-open
+    /// probe succeeding closes the breaker.
+    pub fn on_success(&self) {
+        if self.cooldown.is_zero() {
+            return;
+        }
+        let mut st = self.lock();
+        st.consecutive = 0;
+        if st.mode != 0 {
+            self.set_mode(&mut st, 0);
+            st.opened_at = None;
+        }
+    }
+
+    /// A batch failed (backend error or contained panic).  Trips open on
+    /// the BREAKER_TRIP-th consecutive failure; a half-open probe failing
+    /// re-opens; failures while already open re-stamp the cooldown.
+    pub fn on_failure(&self) {
+        if self.cooldown.is_zero() {
+            return;
+        }
+        let mut st = self.lock();
+        st.consecutive = st.consecutive.saturating_add(1);
+        match st.mode {
+            0 if st.consecutive >= BREAKER_TRIP => {
+                self.set_mode(&mut st, 1);
+                st.opened_at = Some(Instant::now());
+            }
+            1 | 2 => {
+                self.set_mode(&mut st, 1);
+                st.opened_at = Some(Instant::now());
+            }
+            _ => {}
+        }
+    }
+
+    /// Should the router keep new work away from this coordinator?
+    /// While open, the first call after the cooldown flips to half-open
+    /// and answers `false` — that caller's request becomes the probe.
+    pub fn blocked(&self) -> bool {
+        if self.cooldown.is_zero() {
+            return false;
+        }
+        let mut st = self.lock();
+        match st.mode {
+            0 => false,
+            2 => true, // probe already in flight; wait for its verdict
+            _ => match st.opened_at {
+                Some(t) if t.elapsed() < self.cooldown => true,
+                _ => {
+                    self.set_mode(&mut st, 2);
+                    false
+                }
+            },
+        }
+    }
+
+    /// Current mode (0 closed, 1 open, 2 half-open).
+    pub fn state(&self) -> u8 {
+        self.lock().mode
+    }
+}
+
 /// Handle to a running coordinator.
 pub struct Coordinator {
     submit_tx: Option<mpsc::SyncSender<Item>>,
     batcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
+    breaker: Arc<Breaker>,
     backend_name: &'static str,
     max_points: usize,
     worker_count: usize,
@@ -99,14 +216,104 @@ pub struct Coordinator {
     next_id: AtomicU64,
 }
 
+/// One dispatch attempt: scheduled fault injection (chaos tests) and the
+/// backend call, both inside panic containment.  A panic escaping
+/// compute would otherwise kill the worker silently (pool one thread
+/// smaller forever); contain it to a per-batch error instead.  Host
+/// backends are stateless and PJRT's RefCell borrows release on unwind,
+/// so the backend stays usable.
+fn dispatch_batch(
+    backend: &dyn HullBackend,
+    items: &[Item],
+    width: usize,
+    fault: Option<&FaultPlan>,
+) -> Result<Vec<(Vec<Point>, Vec<Point>)>, String> {
+    let reqs: Vec<&[Point]> = items.iter().map(|i| i.prepared.points.as_slice()).collect();
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        if let Some(plan) = fault {
+            match plan.next() {
+                Some(FaultAction::Panic) => panic!("fault-plan: injected panic"),
+                Some(FaultAction::Error) => return Err("fault-plan: injected error".into()),
+                Some(FaultAction::Delay(d)) => std::thread::sleep(d),
+                None => {}
+            }
+        }
+        backend.compute(&reqs, width)
+    }))
+    .unwrap_or_else(|p| {
+        let what = p
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| p.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "unknown panic".into());
+        Err(format!("backend panicked: {what}"))
+    })
+}
+
+/// Answer every item of a successfully dispatched batch.
+fn deliver_success(
+    items: Vec<Item>,
+    hulls: Vec<(Vec<Point>, Vec<Point>)>,
+    backend_name: &'static str,
+    self_check: bool,
+    exec_start: Instant,
+    exec_ns: u64,
+    metrics: &Metrics,
+) {
+    for (item, (upper, lower)) in items.into_iter().zip(hulls) {
+        let queue_ns = (exec_start - item.enqueued).as_nanos() as u64;
+        if self_check {
+            if let Err(e) = check_upper_hull(&item.prepared.points, &upper) {
+                Metrics::inc(&metrics.errors);
+                item.reply
+                    .send(Err(RequestError::Backend(format!("self-check failed: {e}"))));
+                continue;
+            }
+        }
+        Metrics::inc(&metrics.responses);
+        Metrics::add(&metrics.hull_points_out, (upper.len() + lower.len()) as u64);
+        metrics.e2e_latency.record(item.enqueued.elapsed());
+        metrics.queue_latency.record_ns(queue_ns);
+        item.reply.send(Ok(HullResponse {
+            id: item.prepared.id,
+            upper,
+            lower,
+            backend: backend_name,
+            queue_ns,
+            exec_ns,
+        }));
+    }
+}
+
+/// Fail every item of a batch whose retries are exhausted.
+fn deliver_failure(items: Vec<Item>, e: &str, metrics: &Metrics) {
+    for item in items {
+        Metrics::inc(&metrics.errors);
+        item.reply.send(Err(RequestError::Backend(e.to_string())));
+    }
+}
+
+/// Jittered failover backoff, deterministic per batch (keyed on the
+/// first request id) so chaos runs reproduce: 1–4 ms.
+fn retry_backoff(seed: u64) -> Duration {
+    let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    Duration::from_millis(1 + ((z ^ (z >> 31)) & 3))
+}
+
 /// One exec worker: builds its own backend, then pulls batches off the
-/// shared channel until the batcher hangs up.  Holding the receiver lock
-/// only while *dequeuing* (never while computing) is what lets size
-/// classes execute concurrently across the pool.
+/// shared channel until the batcher sends its shutdown pill (workers
+/// hold retry senders into the same channel, so plain disconnection can
+/// never happen while the pool lives).  Holding the receiver lock only
+/// while *dequeuing* (never while computing) is what lets size classes
+/// execute concurrently across the pool.
 fn run_exec_worker(
     cfg: CoordinatorConfig,
     metrics: Arc<Metrics>,
     batch_rx: Arc<Mutex<mpsc::Receiver<BatchMsg>>>,
+    retry_tx: mpsc::SyncSender<BatchMsg>,
+    breaker: Arc<Breaker>,
     ready_tx: mpsc::Sender<Result<(usize, usize), String>>,
     hw_threads: usize,
     busy: Arc<AtomicUsize>,
@@ -133,34 +340,26 @@ fn run_exec_worker(
             Ok(guard) => guard.recv(),
             Err(_) => return, // a sibling worker panicked mid-dequeue
         };
-        let Ok(BatchMsg { items }) = msg else { return };
-        let exec_start = Instant::now();
-        let reqs: Vec<&[Point]> = items.iter().map(|i| i.prepared.points.as_slice()).collect();
+        let Ok(BatchMsg { mut items, attempt }) = msg else { return };
+        if items.is_empty() {
+            return; // shutdown pill — one per worker, sent by the batcher
+        }
+        // Deadline gate: never spend a dispatch on requests that expired
+        // while queued.
+        reap_expired(&mut items, &metrics);
+        if items.is_empty() {
+            continue;
+        }
         // Thread budget for this dispatch: an even share of the machine
         // among the dispatches in flight *right now*.  An idle pool hands
         // one big request full hardware width; a saturated pool converges
         // to 1 per worker — never workers × hw threads.  The count is a
         // heuristic (Relaxed races only soften the split), correctness
         // never depends on it.
+        let exec_start = Instant::now();
         let in_flight = busy.fetch_add(1, Ordering::Relaxed) + 1;
         let width = (hw_threads / in_flight).max(1);
-        // A panic escaping compute would otherwise kill this worker
-        // silently (pool one thread smaller forever) AND leak the busy
-        // gauge (permanently shrinking every survivor's width); contain
-        // it to a per-batch Backend error instead.  Host backends are
-        // stateless and PJRT's RefCell borrows release on unwind, so the
-        // backend stays usable.
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            backend.compute(&reqs, width)
-        }))
-        .unwrap_or_else(|p| {
-            let what = p
-                .downcast_ref::<&str>()
-                .map(|s| s.to_string())
-                .or_else(|| p.downcast_ref::<String>().cloned())
-                .unwrap_or_else(|| "unknown panic".into());
-            Err(format!("backend panicked: {what}"))
-        });
+        let result = dispatch_batch(&*backend, &items, width, cfg.fault_plan.as_deref());
         busy.fetch_sub(1, Ordering::Relaxed);
         let exec_ns = exec_start.elapsed().as_nanos() as u64;
         Metrics::inc(&metrics.batches);
@@ -168,35 +367,67 @@ fn run_exec_worker(
         metrics.exec_latency.record_ns(exec_ns);
         match result {
             Ok(hulls) => {
-                for (item, (upper, lower)) in items.into_iter().zip(hulls) {
-                    let queue_ns = (exec_start - item.enqueued).as_nanos() as u64;
-                    if cfg.self_check {
-                        if let Err(e) = check_upper_hull(&item.prepared.points, &upper) {
-                            Metrics::inc(&metrics.errors);
-                            item.reply.send(Err(RequestError::Backend(format!(
-                                "self-check failed: {e}"
-                            ))));
-                            continue;
-                        }
-                    }
-                    Metrics::inc(&metrics.responses);
-                    Metrics::add(&metrics.hull_points_out, (upper.len() + lower.len()) as u64);
-                    metrics.e2e_latency.record(item.enqueued.elapsed());
-                    metrics.queue_latency.record_ns(queue_ns);
-                    item.reply.send(Ok(HullResponse {
-                        id: item.prepared.id,
-                        upper,
-                        lower,
-                        backend: backend.name(),
-                        queue_ns,
-                        exec_ns,
-                    }));
-                }
+                breaker.on_success();
+                deliver_success(
+                    items,
+                    hulls,
+                    backend.name(),
+                    cfg.self_check,
+                    exec_start,
+                    exec_ns,
+                    &metrics,
+                );
             }
             Err(e) => {
-                for item in items {
-                    Metrics::inc(&metrics.errors);
-                    item.reply.send(Err(RequestError::Backend(e.clone())));
+                breaker.on_failure();
+                if attempt > 0 {
+                    deliver_failure(items, &e, &metrics);
+                    continue;
+                }
+                // Bounded failover: back off briefly (jittered), then
+                // re-enqueue the batch once so a different worker — with
+                // its own backend instance — picks it up.  try_send keeps
+                // this deadlock-free: a full queue (or a draining
+                // coordinator) falls back to an inline second attempt on
+                // this worker instead of blocking it.
+                Metrics::inc(&metrics.retries);
+                std::thread::sleep(retry_backoff(items[0].prepared.id));
+                let mut items = match retry_tx.try_send(BatchMsg { items, attempt: 1 }) {
+                    Ok(()) => continue,
+                    Err(mpsc::TrySendError::Full(m))
+                    | Err(mpsc::TrySendError::Disconnected(m)) => m.items,
+                };
+                reap_expired(&mut items, &metrics);
+                if items.is_empty() {
+                    continue;
+                }
+                let retry_start = Instant::now();
+                let in_flight = busy.fetch_add(1, Ordering::Relaxed) + 1;
+                let width = (hw_threads / in_flight).max(1);
+                let result =
+                    dispatch_batch(&*backend, &items, width, cfg.fault_plan.as_deref());
+                busy.fetch_sub(1, Ordering::Relaxed);
+                let retry_ns = retry_start.elapsed().as_nanos() as u64;
+                Metrics::inc(&metrics.batches);
+                Metrics::add(&metrics.batched_requests, items.len() as u64);
+                metrics.exec_latency.record_ns(retry_ns);
+                match result {
+                    Ok(hulls) => {
+                        breaker.on_success();
+                        deliver_success(
+                            items,
+                            hulls,
+                            backend.name(),
+                            cfg.self_check,
+                            retry_start,
+                            retry_ns,
+                            &metrics,
+                        );
+                    }
+                    Err(e) => {
+                        breaker.on_failure();
+                        deliver_failure(items, &e, &metrics);
+                    }
                 }
             }
         }
@@ -209,6 +440,7 @@ impl Coordinator {
     pub fn start(cfg: CoordinatorConfig) -> Result<Coordinator, String> {
         let worker_count = effective_workers(&cfg);
         let metrics = Arc::new(Metrics::default());
+        let breaker = Arc::new(Breaker::new(cfg.breaker_cooldown_ms, metrics.clone()));
         let (submit_tx, submit_rx) = mpsc::sync_channel::<Item>(cfg.batcher.queue_cap);
         let (batch_tx, batch_rx) = mpsc::sync_channel::<BatchMsg>(cfg.batcher.queue_cap.max(1));
         let batch_rx = Arc::new(Mutex::new(batch_rx));
@@ -227,11 +459,15 @@ impl Coordinator {
             let cfg = cfg.clone();
             let metrics = metrics.clone();
             let batch_rx = batch_rx.clone();
+            let retry_tx = batch_tx.clone();
+            let breaker = breaker.clone();
             let ready_tx = ready_tx.clone();
             let busy = busy.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("hull-exec-{w}"))
-                .spawn(move || run_exec_worker(cfg, metrics, batch_rx, ready_tx, hw, busy))
+                .spawn(move || {
+                    run_exec_worker(cfg, metrics, batch_rx, retry_tx, breaker, ready_tx, hw, busy)
+                })
                 .map_err(|e| e.to_string())?;
             workers.push(handle);
         }
@@ -240,12 +476,14 @@ impl Coordinator {
         // wait for every backend construction before declaring ready
         let mut max_points = usize::MAX;
         let mut pref_batch = 1usize;
+        let mut ready_ok = 0usize;
         let mut failure: Option<String> = None;
         for _ in 0..worker_count {
             match ready_rx.recv() {
                 Ok(Ok((mp, pb))) => {
                     max_points = max_points.min(mp);
                     pref_batch = pref_batch.max(pb);
+                    ready_ok += 1;
                 }
                 Ok(Err(e)) => failure = Some(e),
                 Err(_) => {
@@ -255,7 +493,13 @@ impl Coordinator {
             }
         }
         if let Some(e) = failure {
-            // closing the batch channel sends every surviving worker home
+            // workers hold retry senders, so dropping batch_tx alone can
+            // no longer disconnect the channel: send each surviving
+            // worker (exactly the ready_ok that built a backend) its
+            // shutdown pill, then join everyone.
+            for _ in 0..ready_ok {
+                let _ = batch_tx.send(BatchMsg { items: Vec::new(), attempt: 0 });
+            }
             drop(batch_tx);
             for h in workers {
                 let _ = h.join();
@@ -269,9 +513,12 @@ impl Coordinator {
             cfg.batcher.max_batch
         };
         let flush_us = cfg.batcher.flush_us;
+        let batcher_metrics = metrics.clone();
         let batcher = std::thread::Builder::new()
             .name("hull-batcher".into())
-            .spawn(move || run_batcher(submit_rx, batch_tx, max_batch, flush_us))
+            .spawn(move || {
+                run_batcher(submit_rx, batch_tx, max_batch, flush_us, worker_count, batcher_metrics)
+            })
             .map_err(|e| e.to_string())?;
 
         Ok(Coordinator {
@@ -279,6 +526,7 @@ impl Coordinator {
             batcher: Some(batcher),
             workers,
             metrics,
+            breaker,
             backend_name: cfg.backend.name(),
             max_points,
             worker_count,
@@ -298,6 +546,12 @@ impl Coordinator {
     /// Number of exec workers in the pool.
     pub fn workers(&self) -> usize {
         self.worker_count
+    }
+
+    /// This coordinator's circuit breaker (the engine router consults it
+    /// before feeding the shard; chaos tests observe its mode).
+    pub fn breaker(&self) -> &Breaker {
+        &self.breaker
     }
 
     /// Allocate a request id (for callers that don't track their own).
@@ -386,7 +640,7 @@ impl Coordinator {
 
     /// Synchronous convenience wrapper.
     pub fn compute(&self, points: Vec<Point>) -> Result<HullResponse, RequestError> {
-        let req = HullRequest { id: self.next_id(), points };
+        let req = HullRequest::new(self.next_id(), points);
         self.submit(req)
             .recv()
             .map_err(|_| RequestError::Shutdown)?
@@ -607,10 +861,10 @@ mod tests {
         let t_big = t0.elapsed();
 
         // occupy one worker with the big request, then race the small one
-        let big_rx = c.submit(HullRequest { id: c.next_id(), points: big });
+        let big_rx = c.submit(HullRequest::new(c.next_id(), big));
         std::thread::sleep(Duration::from_millis(20)); // let it reach a worker
         let t0 = Instant::now();
-        let small_rx = c.submit(HullRequest { id: c.next_id(), points: small });
+        let small_rx = c.submit(HullRequest::new(c.next_id(), small));
         small_rx.recv().unwrap().unwrap();
         let t_small = t0.elapsed();
         big_rx.recv().unwrap().unwrap();
@@ -634,7 +888,7 @@ mod tests {
         let mut waits = Vec::new();
         for k in 0..30u64 {
             let pts = generate(Distribution::ALL[(k % 7) as usize], 20 + k as usize, k);
-            waits.push(c.submit(HullRequest { id: k + 1, points: pts }));
+            waits.push(c.submit(HullRequest::new(k + 1, pts)));
         }
         let metrics = c.metrics.clone();
         c.shutdown(); // joins batcher + all workers; queues must drain first
@@ -646,6 +900,106 @@ mod tests {
         let snap = metrics.snapshot().0;
         assert_eq!(snap.get("responses").unwrap().as_usize(), Some(30));
         assert_eq!(snap.get("errors").unwrap().as_usize(), Some(0));
+    }
+
+    // ------------------------------------------------------- robustness
+
+    #[test]
+    fn injected_panic_fails_over_to_a_retry_and_succeeds() {
+        let c = Coordinator::start(CoordinatorConfig {
+            backend: BackendKind::Native,
+            batcher: BatcherConfig { max_batch: 1, flush_us: 100, queue_cap: 64 },
+            workers: 2,
+            // dispatch 0 panics; the failover dispatch (index 1) is clean
+            fault_plan: Some(crate::fault::FaultPlan::from_steps(&[(
+                0,
+                crate::fault::FaultAction::Panic,
+            )])),
+            ..Default::default()
+        })
+        .unwrap();
+        let pts = generate(Distribution::Disk, 80, 5);
+        let resp = c.compute(pts.clone()).unwrap();
+        let (u, _) = monotone_chain::full_hull(&pts);
+        assert_eq!(resp.upper, u, "failover result must be bit-identical");
+        let snap = c.snapshot().0;
+        assert_eq!(snap.get("retries_total").unwrap().as_usize(), Some(1));
+        assert_eq!(snap.get("responses").unwrap().as_usize(), Some(1));
+        assert_eq!(snap.get("errors").unwrap().as_usize(), Some(0));
+        c.shutdown();
+    }
+
+    #[test]
+    fn fault_on_both_attempts_surfaces_backend_error() {
+        let c = Coordinator::start(CoordinatorConfig {
+            backend: BackendKind::Native,
+            batcher: BatcherConfig { max_batch: 1, flush_us: 100, queue_cap: 64 },
+            workers: 2,
+            fault_plan: Some(crate::fault::FaultPlan::from_steps(&[
+                (0, crate::fault::FaultAction::Error),
+                (1, crate::fault::FaultAction::Panic),
+            ])),
+            ..Default::default()
+        })
+        .unwrap();
+        let err = c.compute(generate(Distribution::Disk, 80, 6)).unwrap_err();
+        assert!(matches!(err, RequestError::Backend(_)), "got {err:?}");
+        let snap = c.snapshot().0;
+        assert_eq!(snap.get("retries_total").unwrap().as_usize(), Some(1));
+        assert_eq!(snap.get("errors").unwrap().as_usize(), Some(1));
+        c.shutdown();
+    }
+
+    #[test]
+    fn expired_request_answers_deadline_exceeded() {
+        let c = coord(BackendKind::Native);
+        let pts = generate(Distribution::Disk, 80, 7);
+        // deadline already in the past when the batcher dequeues it
+        let req = HullRequest::new(1, pts).with_deadline(Some(Instant::now()));
+        let err = c.submit(req).recv().unwrap().unwrap_err();
+        assert_eq!(err, RequestError::DeadlineExceeded);
+        assert_eq!(err.to_string(), "deadline-exceeded");
+        let snap = c.snapshot().0;
+        assert_eq!(snap.get("deadline_exceeded_total").unwrap().as_usize(), Some(1));
+        assert_eq!(snap.get("errors").unwrap().as_usize(), Some(1));
+        assert_eq!(snap.get("responses").unwrap().as_usize(), Some(0));
+        c.shutdown();
+    }
+
+    #[test]
+    fn breaker_trips_half_opens_and_recovers() {
+        let metrics = Arc::new(Metrics::default());
+        let b = Breaker::new(40, metrics.clone());
+        assert!(!b.blocked());
+        b.on_failure();
+        b.on_failure();
+        assert!(!b.blocked(), "below the trip threshold");
+        b.on_failure(); // third consecutive failure trips it
+        assert!(b.blocked());
+        assert_eq!(b.state(), 1);
+        assert_eq!(metrics.snapshot().0.get("breaker_state").unwrap().as_usize(), Some(1));
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(!b.blocked(), "cooldown elapsed: first caller is the probe");
+        assert_eq!(b.state(), 2, "half-open while the probe is in flight");
+        assert!(b.blocked(), "second caller waits for the probe verdict");
+        b.on_failure(); // probe failed: re-open
+        assert_eq!(b.state(), 1);
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(!b.blocked());
+        b.on_success(); // probe succeeded: close
+        assert_eq!(b.state(), 0);
+        assert!(!b.blocked());
+        assert_eq!(metrics.snapshot().0.get("breaker_state").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn breaker_cooldown_zero_disables() {
+        let b = Breaker::new(0, Arc::new(Metrics::default()));
+        for _ in 0..10 {
+            b.on_failure();
+        }
+        assert!(!b.blocked(), "disabled breaker never blocks");
+        assert_eq!(b.state(), 0);
     }
 
     #[test]

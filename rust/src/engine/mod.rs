@@ -37,10 +37,11 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
+use std::time::Instant;
 
 use crate::coordinator::{
     BackendKind, Coordinator, CoordinatorConfig, HullReply, HullRequest, HullResponse,
-    IoMetrics, MetricsFrame, MetricsSnapshot, RequestError,
+    IoMetrics, Metrics, MetricsFrame, MetricsSnapshot, RequestError,
 };
 use crate::geometry::point::Point;
 use crate::stream::{
@@ -65,6 +66,12 @@ pub struct EngineConfig {
     /// stream knobs; `max_sessions` is the GLOBAL cap, split across
     /// shards remainder-aware.
     pub stream: StreamConfig,
+    /// admission ceiling per shard (config: `[engine] max_queued`,
+    /// 0 = unbounded): a shard with this many requests in flight stops
+    /// admitting; when every healthy shard is at its ceiling new one-shot
+    /// requests and `SADD`s answer `overloaded` immediately instead of
+    /// queueing (load shedding — see `shed_total`).
+    pub max_queued: usize,
 }
 
 impl Default for EngineConfig {
@@ -73,6 +80,7 @@ impl Default for EngineConfig {
             shards: 1,
             coordinator: CoordinatorConfig::default(),
             stream: StreamConfig::default(),
+            max_queued: 0,
         }
     }
 }
@@ -117,6 +125,8 @@ pub struct Engine {
     /// the global session cap (sum of the per-shard slices).
     max_sessions_total: usize,
     max_points: usize,
+    /// per-shard admission ceiling (0 = unbounded).
+    max_queued: usize,
 }
 
 impl Engine {
@@ -166,6 +176,7 @@ impl Engine {
             rr: AtomicUsize::new(0),
             max_sessions_total: stream.max_sessions,
             max_points,
+            max_queued: cfg.max_queued,
         })
     }
 
@@ -181,33 +192,65 @@ impl Engine {
             rr: AtomicUsize::new(0),
             max_sessions_total,
             max_points,
+            max_queued: 0,
         }
     }
 
     // ------------------------------------------------------------ routing
 
-    /// Cheapest-queue shard choice for one-shot work: fewest in-flight
-    /// requests wins; the scan's starting point round-robins so ties (the
-    /// common idle case) alternate instead of piling onto shard 0.  The
-    /// in-flight counts are relaxed reads — a stale value only softens the
-    /// balance, never correctness.
-    fn cheapest_shard(&self) -> &Shard {
+    /// Admission-controlled shard choice for one-shot work.  Cheapest
+    /// queue wins (fewest in-flight requests, round-robin rotated start
+    /// so ties alternate), with two rejection layers on top:
+    ///
+    /// * shards whose circuit breaker is open are skipped — except that
+    ///   the first caller after the cooldown is routed in as the
+    ///   half-open probe;
+    /// * shards at the `max_queued` ceiling are skipped (sibling shards
+    ///   absorb the spill); when every healthy shard is at its ceiling
+    ///   the request is shed with `overloaded`.
+    ///
+    /// The in-flight counts are relaxed reads — a stale value only
+    /// softens the balance, never correctness.
+    fn route_one_shot(&self) -> Result<&Shard, RequestError> {
         let n = self.shards.len();
-        if n == 1 {
-            return &self.shards[0];
-        }
-        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
-        let mut best = start;
-        let mut best_load = u64::MAX;
+        let start =
+            if n == 1 { 0 } else { self.rr.fetch_add(1, Ordering::Relaxed) % n };
+        let mut best: Option<(usize, u64)> = None;
+        let mut any_healthy = false;
         for k in 0..n {
             let i = (start + k) % n;
-            let load = self.shards[i].coordinator.metrics.in_flight();
-            if load < best_load {
-                best_load = load;
-                best = i;
+            let c = &self.shards[i].coordinator;
+            if c.breaker().blocked() {
+                continue;
+            }
+            if c.breaker().state() == 2 {
+                // this caller just flipped the breaker open → half-open:
+                // its request IS the probe, ceiling notwithstanding
+                return Ok(&self.shards[i]);
+            }
+            any_healthy = true;
+            let load = c.metrics.in_flight();
+            if self.max_queued != 0 && load >= self.max_queued as u64 {
+                continue; // at ceiling: let a sibling absorb it
+            }
+            let better = match best {
+                None => true,
+                Some((_, b)) => load < b,
+            };
+            if better {
+                best = Some((i, load));
             }
         }
-        &self.shards[best]
+        match best {
+            Some((i, _)) => Ok(&self.shards[i]),
+            None if any_healthy => {
+                // every healthy shard is at its ceiling: shed, charged to
+                // the scan's starting shard (merged STATS sum per-shard)
+                Metrics::inc(&self.shards[start].coordinator.metrics.shed);
+                Err(RequestError::Overloaded)
+            }
+            None => Err(RequestError::Backend("circuit breaker open".into())),
+        }
     }
 
     /// The shard a sid is pinned to for its lifetime: `(sid - 1) % N`
@@ -221,19 +264,27 @@ impl Engine {
 
     // ----------------------------------------------------------- one-shot
 
-    /// Submit a one-shot request to the cheapest shard; the returned
-    /// channel yields the response.
+    /// Submit a one-shot request to the cheapest admitting shard; the
+    /// returned channel yields the response (immediately `overloaded`
+    /// when every healthy shard is at its ceiling).
     pub fn submit(
         &self,
         req: HullRequest,
     ) -> mpsc::Receiver<Result<HullResponse, RequestError>> {
-        self.cheapest_shard().coordinator.submit(req)
+        let (tx, rx) = mpsc::channel();
+        self.submit_with(req, HullReply::Channel(tx));
+        rx
     }
 
     /// Submit a one-shot request with an explicit reply destination
-    /// (see [`Coordinator::submit_with`]).
+    /// (see [`Coordinator::submit_with`]).  Admission rejections
+    /// (`overloaded`, circuit-broken `backend`) answer through `reply`
+    /// on the calling thread.
     pub fn submit_with(&self, req: HullRequest, reply: HullReply) {
-        self.cheapest_shard().coordinator.submit_with(req, reply);
+        match self.route_one_shot() {
+            Ok(shard) => shard.coordinator.submit_with(req, reply),
+            Err(e) => reply.send(Err(e)),
+        }
     }
 
     /// Non-blocking submit for the event-loop server: `f` runs on
@@ -248,7 +299,7 @@ impl Engine {
 
     /// Synchronous one-shot convenience wrapper.
     pub fn compute(&self, points: Vec<Point>) -> Result<HullResponse, RequestError> {
-        self.cheapest_shard().coordinator.compute(points)
+        self.route_one_shot()?.coordinator.compute(points)
     }
 
     // ----------------------------------------------------------- sessions
@@ -278,7 +329,33 @@ impl Engine {
 
     /// `SADD` on the owning shard (its registry, its backend pool).
     pub fn session_add(&self, sid: u64, points: &[Point]) -> Result<AddOutcome, SessionError> {
+        self.session_add_deadline(sid, points, None)
+    }
+
+    /// [`Engine::session_add`] with the request's deadline: an `SADD`
+    /// whose budget already expired answers `deadline-exceeded` without
+    /// touching the session, and a pinned shard at its admission ceiling
+    /// answers `overloaded` (sessions cannot spill to siblings — the sid
+    /// owns its shard — so the ceiling sheds instead of rerouting).
+    /// Neither rejection counts into `errors`: the request never entered
+    /// the coordinator pipeline, so `in_flight` must not be disturbed.
+    pub fn session_add_deadline(
+        &self,
+        sid: u64,
+        points: &[Point],
+        deadline: Option<Instant>,
+    ) -> Result<AddOutcome, SessionError> {
         let shard = self.shard_for_sid(sid);
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            Metrics::inc(&shard.coordinator.metrics.deadline_exceeded);
+            return Err(SessionError::Request(RequestError::DeadlineExceeded));
+        }
+        if self.max_queued != 0
+            && shard.coordinator.metrics.in_flight() >= self.max_queued as u64
+        {
+            Metrics::inc(&shard.coordinator.metrics.shed);
+            return Err(SessionError::Request(RequestError::Overloaded));
+        }
         shard.registry.add(sid, points, &*shard.coordinator)
     }
 
@@ -400,6 +477,10 @@ mod tests {
     use crate::geometry::generators::{generate, Distribution};
 
     fn engine(shards: usize, max_sessions: usize) -> Engine {
+        engine_queued(shards, max_sessions, 0)
+    }
+
+    fn engine_queued(shards: usize, max_sessions: usize, max_queued: usize) -> Engine {
         Engine::start(EngineConfig {
             shards,
             coordinator: CoordinatorConfig {
@@ -408,6 +489,7 @@ mod tests {
                 ..Default::default()
             },
             stream: StreamConfig { max_sessions, idle_ttl_ms: 0, ..Default::default() },
+            max_queued,
         })
         .unwrap()
     }
@@ -500,6 +582,100 @@ mod tests {
         assert_eq!(e.max_sessions(), 5);
         let sid = e.session_open().unwrap();
         assert_eq!(sid, 1); // stride-1 allocation, exactly the old registry
+        e.session_close(sid).unwrap();
+    }
+
+    // ------------------------------------------------ admission control
+
+    /// Simulate load by bumping the raw `requests` counter (in_flight =
+    /// requests − responses − errors, all relaxed atomics) — fully
+    /// deterministic, no racing against real workers.
+    fn fake_in_flight(e: &Engine, shard: usize, n: u64) {
+        Metrics::add(&e.shard_coordinator(shard).metrics.requests, n);
+    }
+
+    fn drain_fake(e: &Engine, shard: usize, n: u64) {
+        Metrics::add(&e.shard_coordinator(shard).metrics.responses, n);
+    }
+
+    #[test]
+    fn overload_sheds_with_typed_error() {
+        let e = engine_queued(1, 4, 2);
+        fake_in_flight(&e, 0, 2); // at the ceiling
+        let pts = generate(Distribution::Disk, 40, 1);
+        let err = e.compute(pts.clone()).unwrap_err();
+        assert_eq!(err, RequestError::Overloaded);
+        assert_eq!(err.to_string(), "overloaded");
+        let snap = e.snapshot().0;
+        assert_eq!(snap.get("shed_total").unwrap().as_usize(), Some(1));
+        // shed requests never entered the pipeline: no error counted
+        assert_eq!(snap.get("errors").unwrap().as_usize(), Some(0));
+        drain_fake(&e, 0, 2); // load drains: admission resumes
+        e.compute(pts).unwrap();
+    }
+
+    #[test]
+    fn ceiling_spills_to_sibling_shard_first() {
+        let e = engine_queued(2, 4, 1);
+        fake_in_flight(&e, 0, 1); // shard 0 full, shard 1 idle
+        for k in 0..4u64 {
+            e.compute(generate(Distribution::Disk, 30 + k as usize, k)).unwrap();
+        }
+        let shard1 = e.shard_coordinator(1).metrics.frame();
+        assert_eq!(shard1.responses, 4, "all traffic must spill to the idle sibling");
+        assert_eq!(e.snapshot().0.get("shed_total").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn tripped_breaker_diverts_then_recovers_via_probe() {
+        let e = engine_queued(2, 4, 0);
+        // trip shard 0's breaker (3 consecutive batch failures)
+        for _ in 0..3 {
+            e.shard_coordinator(0).breaker().on_failure();
+        }
+        assert_eq!(e.shard_coordinator(0).breaker().state(), 1);
+        for k in 0..4u64 {
+            e.compute(generate(Distribution::Disk, 25 + k as usize, k)).unwrap();
+        }
+        assert_eq!(
+            e.shard_coordinator(1).metrics.frame().responses,
+            4,
+            "open breaker must divert everything to the healthy shard"
+        );
+        // cooldown default is 1s — too long for a test; force-expire by
+        // the only supported path: a successful probe closes the breaker
+        e.shard_coordinator(0).breaker().on_success();
+        assert_eq!(e.shard_coordinator(0).breaker().state(), 0);
+    }
+
+    #[test]
+    fn all_shards_broken_answers_backend_error() {
+        let e = engine_queued(1, 4, 0);
+        for _ in 0..3 {
+            e.shard_coordinator(0).breaker().on_failure();
+        }
+        let err = e.compute(generate(Distribution::Disk, 30, 2)).unwrap_err();
+        assert!(matches!(err, RequestError::Backend(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn session_add_sheds_and_honors_deadline() {
+        let e = engine_queued(1, 4, 1);
+        let sid = e.session_open().unwrap();
+        let pts = [crate::geometry::point::Point::new(0.25, 0.75)];
+        // expired budget: typed deadline-exceeded, session untouched
+        let err = e
+            .session_add_deadline(sid, &pts, Some(Instant::now()))
+            .unwrap_err();
+        assert_eq!(err.to_string(), "deadline-exceeded");
+        // shard at ceiling: typed overloaded
+        fake_in_flight(&e, 0, 1);
+        let err = e.session_add_deadline(sid, &pts, None).unwrap_err();
+        assert_eq!(err.to_string(), "overloaded");
+        assert_eq!(e.snapshot().0.get("shed_total").unwrap().as_usize(), Some(1));
+        // load drains: the add lands
+        drain_fake(&e, 0, 1);
+        e.session_add(sid, &pts).unwrap();
         e.session_close(sid).unwrap();
     }
 

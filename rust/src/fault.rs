@@ -1,0 +1,175 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is a seeded, step-indexed schedule of faults: every
+//! dispatch site that carries a plan calls [`FaultPlan::next`] exactly
+//! once per attempt, and the plan answers "inject nothing" or one of the
+//! three [`FaultAction`]s for that global step index.  Because the index
+//! is a single shared counter and the schedule is fixed up front, a run
+//! with a given plan is reproducible: the chaos suite
+//! (`rust/tests/chaos_integration.rs`) replays the same plan against the
+//! same inputs and asserts identical outcomes.
+//!
+//! Two injection points consume plans:
+//!
+//! * coordinator exec workers (`CoordinatorConfig::fault_plan`) — the
+//!   action fires inside the worker's `catch_unwind`, exercising the
+//!   panic-containment, bounded-retry and circuit-breaker paths;
+//! * the session merge path, via [`FaultyService`] wrapping any
+//!   [`HullService`] handed to the registry.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::RequestError;
+use crate::geometry::point::Point;
+use crate::stream::HullService;
+
+/// One injected fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Panic at the dispatch site (workers contain it via `catch_unwind`;
+    /// session callers see the unwind).
+    Panic,
+    /// Fail the dispatch with a typed `backend` error without computing.
+    Error,
+    /// Sleep before computing — deadline pressure without failure.
+    Delay(Duration),
+}
+
+/// A fixed schedule mapping dispatch indices to faults, consumed through
+/// one shared step counter (clones of the `Arc` share the cursor, so a
+/// plan spans every worker of a coordinator).
+#[derive(Debug)]
+pub struct FaultPlan {
+    /// `(step index, action)`, unordered; tiny, scanned linearly.
+    steps: Vec<(u64, FaultAction)>,
+    cursor: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Plan from explicit `(dispatch index, action)` pairs.
+    pub fn from_steps(steps: &[(u64, FaultAction)]) -> Arc<FaultPlan> {
+        Arc::new(FaultPlan { steps: steps.to_vec(), cursor: AtomicU64::new(0) })
+    }
+
+    /// Seeded pseudo-random plan over the first `horizon` dispatches:
+    /// each step independently faults with probability `percent`/100,
+    /// cycling through `menu` for the action.  Same seed, same plan.
+    pub fn seeded(seed: u64, horizon: u64, percent: u64, menu: &[FaultAction]) -> Arc<FaultPlan> {
+        let mut steps = Vec::new();
+        if !menu.is_empty() {
+            let mut pick = 0usize;
+            for step in 0..horizon {
+                if splitmix64(seed.wrapping_add(step)) % 100 < percent {
+                    steps.push((step, menu[pick % menu.len()]));
+                    pick += 1;
+                }
+            }
+        }
+        Arc::new(FaultPlan { steps, cursor: AtomicU64::new(0) })
+    }
+
+    /// Claim the next dispatch index and return its scheduled action, if
+    /// any.  Exactly one call per dispatch attempt.
+    pub fn next(&self) -> Option<FaultAction> {
+        let step = self.cursor.fetch_add(1, Ordering::Relaxed);
+        self.steps.iter().find(|(s, _)| *s == step).map(|(_, a)| *a)
+    }
+
+    /// Dispatches claimed so far (assertions; monotone).
+    pub fn taken(&self) -> u64 {
+        self.cursor.load(Ordering::Relaxed)
+    }
+
+    /// Scheduled fault count.
+    pub fn planned(&self) -> usize {
+        self.steps.len()
+    }
+}
+
+/// splitmix64 — the crate's stock no-dependency mixer.
+fn splitmix64(seed: u64) -> u64 {
+    let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// [`HullService`] adapter injecting a plan into the session merge path:
+/// `Panic` unwinds out of the merge (the registry's poison-tolerant locks
+/// keep the session usable), `Error` surfaces as a `backend` session
+/// error, `Delay` stalls the merge.
+pub struct FaultyService<S> {
+    inner: S,
+    plan: Arc<FaultPlan>,
+}
+
+impl<S> FaultyService<S> {
+    pub fn new(inner: S, plan: Arc<FaultPlan>) -> FaultyService<S> {
+        FaultyService { inner, plan }
+    }
+}
+
+impl<S: HullService> HullService for FaultyService<S> {
+    fn full_hull(&self, points: Vec<Point>) -> Result<(Vec<Point>, Vec<Point>), RequestError> {
+        match self.plan.next() {
+            Some(FaultAction::Panic) => panic!("fault-plan: injected panic"),
+            Some(FaultAction::Error) => {
+                return Err(RequestError::Backend("fault-plan: injected error".into()))
+            }
+            Some(FaultAction::Delay(d)) => std::thread::sleep(d),
+            None => {}
+        }
+        self.inner.full_hull(points)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn explicit_steps_fire_at_their_index() {
+        let plan = FaultPlan::from_steps(&[(1, FaultAction::Panic), (3, FaultAction::Error)]);
+        assert_eq!(plan.next(), None); // step 0
+        assert_eq!(plan.next(), Some(FaultAction::Panic)); // step 1
+        assert_eq!(plan.next(), None); // step 2
+        assert_eq!(plan.next(), Some(FaultAction::Error)); // step 3
+        assert_eq!(plan.next(), None); // past the horizon
+        assert_eq!(plan.taken(), 5);
+        assert_eq!(plan.planned(), 2);
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible_and_seed_sensitive() {
+        let a = FaultPlan::seeded(42, 256, 25, &[FaultAction::Panic, FaultAction::Error]);
+        let b = FaultPlan::seeded(42, 256, 25, &[FaultAction::Panic, FaultAction::Error]);
+        let c = FaultPlan::seeded(43, 256, 25, &[FaultAction::Panic, FaultAction::Error]);
+        assert_eq!(a.steps, b.steps, "same seed, same schedule");
+        assert_ne!(a.steps, c.steps, "different seed, different schedule");
+        assert!(a.planned() > 0, "25% of 256 steps should schedule faults");
+        // ~25% hit rate, loosely bounded
+        assert!(a.planned() < 128, "got {}", a.planned());
+    }
+
+    #[test]
+    fn faulty_service_maps_actions() {
+        struct Ok2;
+        impl HullService for Ok2 {
+            fn full_hull(
+                &self,
+                points: Vec<Point>,
+            ) -> Result<(Vec<Point>, Vec<Point>), RequestError> {
+                Ok((points.clone(), points))
+            }
+        }
+        let plan = FaultPlan::from_steps(&[(0, FaultAction::Error)]);
+        let svc = FaultyService::new(Ok2, plan);
+        let err = svc.full_hull(vec![Point::new(0.0, 0.0)]).unwrap_err();
+        assert!(matches!(err, RequestError::Backend(_)));
+        // step 1 has no fault: passes through
+        let (u, _) = svc.full_hull(vec![Point::new(0.5, 0.5)]).unwrap();
+        assert_eq!(u.len(), 1);
+    }
+}

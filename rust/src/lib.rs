@@ -21,6 +21,7 @@ pub mod benchkit;
 pub mod config;
 pub mod coordinator;
 pub mod engine;
+pub mod fault;
 pub mod geometry;
 pub mod ovl;
 pub mod pram;

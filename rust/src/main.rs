@@ -40,7 +40,10 @@ commands:
   serve      [--config <file>] [--addr <host:port>] [--backend <kind>] [--artifacts <dir>]
              [--exec-mode <fast|audited>] [--workers <n>] [--shards <n>] [--io-threads <n>]
              [--max-sessions <n>] [--merge-threshold <n>] [--idle-ttl-ms <n>]
-  client     --addr <host:port> [--proto <text|binary|auto>] <points-file>
+             [--request-timeout-ms <n>] [--max-queued <n>] [--breaker-cooldown-ms <n>]
+             [--max-proto-errors <n>]
+  client     --addr <host:port> [--proto <text|binary|auto>] [--tmo <ms>]
+             [--connect-retries <n>] <points-file>
   occupancy  --n <count> [--dist <name>] [--seed <u64>]
   artifacts  [--dir <dir>]
 
@@ -335,11 +338,32 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         cfg.stream.idle_ttl_ms =
             v.parse::<u64>().context("--idle-ttl-ms wants a non-negative integer (0 = never)")?;
     }
+    if let Some(v) = flags.get("request-timeout-ms") {
+        cfg.server.request_timeout_ms = v
+            .parse::<u64>()
+            .context("--request-timeout-ms wants a non-negative integer (0 = none)")?;
+    }
+    if let Some(v) = flags.get("max-queued") {
+        cfg.engine.max_queued = v
+            .parse::<usize>()
+            .context("--max-queued wants a non-negative integer (0 = unbounded)")?;
+    }
+    if let Some(v) = flags.get("breaker-cooldown-ms") {
+        cfg.coordinator.breaker_cooldown_ms = v
+            .parse::<u64>()
+            .context("--breaker-cooldown-ms wants a non-negative integer (0 = disabled)")?;
+    }
+    if let Some(v) = flags.get("max-proto-errors") {
+        cfg.server.max_proto_errors = v
+            .parse::<u32>()
+            .context("--max-proto-errors wants a non-negative integer (0 = never)")?;
+    }
     warn_if_exec_mode_noop(exec_mode, cfg.coordinator.backend, cfg.coordinator.self_check);
 
     let engine = Arc::new(
         Engine::start(EngineConfig {
             shards: cfg.engine.shards,
+            max_queued: cfg.engine.max_queued,
             coordinator: cfg.coordinator.clone(),
             stream: cfg.stream.clone(),
         })
@@ -382,8 +406,25 @@ fn cmd_client(args: &[String]) -> Result<()> {
         Some("binary") | Some("auto") => server::WireProto::Binary,
         Some(other) => bail!("unknown protocol {other:?} (want text, binary or auto)"),
     };
-    let mut client = server::HullClient::connect_with(addr.as_str(), proto)?;
-    let hull = client.hull(&points)?;
+    let tmo_ms: Option<u32> = flags
+        .get("tmo")
+        .map(|s| s.parse().context("--tmo wants a millisecond budget"))
+        .transpose()?;
+    let retries: u32 = flags
+        .get("connect-retries")
+        .map(|s| s.parse().context("--connect-retries wants a count"))
+        .transpose()?
+        .unwrap_or(1);
+    // connect_with is bounded by DEFAULT_CONNECT_TIMEOUT (and
+    // connect_retry layers jittered backoff on top), so an unresponsive
+    // host fails fast instead of parking the client forever
+    let mut client = server::HullClient::connect_retry(
+        addr.as_str(),
+        proto,
+        retries,
+        std::time::Duration::from_millis(200),
+    )?;
+    let hull = client.hull_deadline(&points, tmo_ms)?;
     println!(
         "# backend={} queue_ns={} exec_ns={}",
         hull.backend, hull.queue_ns, hull.exec_ns

@@ -1,8 +1,8 @@
 //! Blocking client for the hull service (examples, benches, tests, CLI).
 
 use std::io::{BufReader, BufWriter};
-use std::net::TcpStream;
-use std::time::Duration;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -58,21 +58,91 @@ pub struct SessionHullReply {
     pub lower: Vec<Point>,
 }
 
+/// Default bound on connection establishment: a dead or unroutable host
+/// surfaces as an error instead of a client parked in `connect(2)`.
+pub const DEFAULT_CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+
 impl HullClient {
-    pub fn connect(addr: impl std::net::ToSocketAddrs) -> Result<HullClient> {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<HullClient> {
         Self::connect_with(addr, WireProto::Text)
     }
 
     /// Connect speaking `proto` — same verbs, same replies, different
-    /// encoding on the wire.
-    pub fn connect_with(
-        addr: impl std::net::ToSocketAddrs,
+    /// encoding on the wire.  Bounded by [`DEFAULT_CONNECT_TIMEOUT`];
+    /// use [`HullClient::connect_with_timeout`] to choose the bound (or
+    /// wait forever).
+    pub fn connect_with(addr: impl ToSocketAddrs, proto: WireProto) -> Result<HullClient> {
+        Self::connect_with_timeout(addr, proto, Some(DEFAULT_CONNECT_TIMEOUT))
+    }
+
+    /// [`HullClient::connect_with`] with an explicit connect timeout
+    /// (`None` = the OS default, potentially minutes).  Every resolved
+    /// address is tried before giving up.
+    pub fn connect_with_timeout(
+        addr: impl ToSocketAddrs,
         proto: WireProto,
+        timeout: Option<Duration>,
     ) -> Result<HullClient> {
-        let stream = TcpStream::connect(addr)?;
+        let stream = match timeout {
+            None => TcpStream::connect(addr)?,
+            Some(t) => {
+                let mut last: Option<std::io::Error> = None;
+                let mut stream = None;
+                for sa in addr.to_socket_addrs()? {
+                    match TcpStream::connect_timeout(&sa, t) {
+                        Ok(s) => {
+                            stream = Some(s);
+                            break;
+                        }
+                        Err(e) => last = Some(e),
+                    }
+                }
+                match stream {
+                    Some(s) => s,
+                    None => {
+                        return Err(match last {
+                            Some(e) => e.into(),
+                            None => anyhow!("address resolved to nothing"),
+                        })
+                    }
+                }
+            }
+        };
         stream.set_nodelay(true)?;
         let reader = BufReader::new(stream.try_clone()?);
         Ok(HullClient { reader, writer: BufWriter::new(stream), next_id: 1, proto })
+    }
+
+    /// Connect with bounded retry: up to `attempts` tries, sleeping a
+    /// jittered exponential backoff (`backoff`, `2*backoff`, `4*backoff`,
+    /// …, each plus up to 25% jitter) between failures.  For scripts and
+    /// tests racing a server that is still binding its listener.
+    pub fn connect_retry(
+        addr: impl ToSocketAddrs + Clone,
+        proto: WireProto,
+        attempts: u32,
+        backoff: Duration,
+    ) -> Result<HullClient> {
+        let attempts = attempts.max(1);
+        let mut last = None;
+        for i in 0..attempts {
+            match Self::connect_with(addr.clone(), proto) {
+                Ok(c) => return Ok(c),
+                Err(e) => last = Some(e),
+            }
+            if i + 1 < attempts {
+                let exp = backoff.saturating_mul(1u32 << i.min(16));
+                // wall-clock nanos as a jitter source: no rand dependency,
+                // and reproducibility across retries is worthless anyway
+                let nanos = SystemTime::now()
+                    .duration_since(UNIX_EPOCH)
+                    .map(|d| d.subsec_nanos())
+                    .unwrap_or(0) as u64;
+                let jitter = (exp.as_millis() as u64 / 4).saturating_add(1);
+                std::thread::sleep(exp + Duration::from_millis(nanos % jitter));
+            }
+        }
+        Err(last.unwrap_or_else(|| anyhow!("no connect attempts made")))
     }
 
     /// The wire encoding this connection speaks.
@@ -114,9 +184,18 @@ impl HullClient {
 
     /// Request the hull of `points`; blocks for the response.
     pub fn hull(&mut self, points: &[Point]) -> Result<ClientHull> {
+        self.hull_deadline(points, None)
+    }
+
+    /// [`HullClient::hull`] with a per-request deadline budget in
+    /// milliseconds (`TMO=` token / binary deadline header).  The server
+    /// answers `deadline-exceeded` instead of computing a hull it cannot
+    /// deliver in time; the budget can only tighten the server's
+    /// configured default.
+    pub fn hull_deadline(&mut self, points: &[Point], tmo_ms: Option<u32>) -> Result<ClientHull> {
         let id = self.next_id;
         self.next_id += 1;
-        self.send(&Request::Hull { id, points: points.to_vec() })?;
+        self.send(&Request::Hull { id, points: points.to_vec(), tmo_ms })?;
         match self.recv()? {
             Response::Hull { id, upper, lower, backend, queue_ns, exec_ns } => {
                 Ok(ClientHull { id, upper, lower, backend, queue_ns, exec_ns })
@@ -157,7 +236,18 @@ impl HullClient {
 
     /// `SADD`: insert a batch into the session.
     pub fn session_add(&mut self, sid: u64, points: &[Point]) -> Result<SessionAddReply> {
-        self.send(&Request::SessionAdd { sid, points: points.to_vec() })?;
+        self.session_add_deadline(sid, points, None)
+    }
+
+    /// [`HullClient::session_add`] with a per-request deadline budget in
+    /// milliseconds (see [`HullClient::hull_deadline`]).
+    pub fn session_add_deadline(
+        &mut self,
+        sid: u64,
+        points: &[Point],
+        tmo_ms: Option<u32>,
+    ) -> Result<SessionAddReply> {
+        self.send(&Request::SessionAdd { sid, points: points.to_vec(), tmo_ms })?;
         match self.recv()? {
             Response::SessionAdded { absorbed, pending, epoch, .. } => {
                 Ok(SessionAddReply { absorbed, pending, epoch })

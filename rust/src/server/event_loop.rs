@@ -38,7 +38,8 @@ use crate::{log_debug, log_info};
 use super::frame;
 use super::proto::{self, Decoded, Request, Response};
 use super::sys::{self, EV_READ, EV_WRITE};
-use super::ServerConfig;
+use super::tcp::ConnOpts;
+use super::{request_deadline, ServerConfig};
 
 const TOKEN_LISTENER: u64 = 0;
 const TOKEN_WAKER: u64 = 1;
@@ -88,6 +89,9 @@ struct Job {
     token: u64,
     binary: bool,
     req: Request,
+    /// Effective deadline, stamped at frame arrival on the I/O thread so
+    /// pool queueing time counts against the budget.
+    deadline: Option<Instant>,
 }
 
 struct PoolShared {
@@ -165,13 +169,14 @@ fn run_worker(engine: &Engine, shared: &PoolShared) {
 }
 
 fn run_job(engine: &Engine, job: Job) {
-    let Job { shared, token, binary, req } = job;
+    let Job { shared, token, binary, req, deadline } = job;
     match req {
-        Request::Hull { id, points } => {
+        Request::Hull { id, points, .. } => {
             // Preprocessing runs here (inside submit), the batch on an
             // exec worker; the callback fires wherever the request
             // finishes and never parks this thread.
-            engine.submit_into(HullRequest { id, points }, move |result| {
+            let req = HullRequest::new(id, points).with_deadline(deadline);
+            engine.submit_into(req, move |result| {
                 deliver(&shared, token, binary, &super::hull_response(id, result));
             });
         }
@@ -179,8 +184,8 @@ fn run_job(engine: &Engine, job: Job) {
             let resp = super::session_open_response(engine, id);
             deliver(&shared, token, binary, &resp);
         }
-        Request::SessionAdd { sid, points } => {
-            let resp = super::session_add_response(engine, sid, &points);
+        Request::SessionAdd { sid, points, .. } => {
+            let resp = super::session_add_response(engine, sid, &points, deadline);
             deliver(&shared, token, binary, &resp);
         }
         Request::SessionHull { sid } => {
@@ -244,6 +249,9 @@ struct Conn {
     /// Peer half-closed its sending side; buffered frames still run.
     read_closed: bool,
     frames: u64,
+    /// Consecutive recoverable protocol errors (text only; reset by any
+    /// well-formed frame).  At `max_proto_errors` the connection is cut.
+    proto_errors: u32,
 }
 
 struct EventLoop {
@@ -261,6 +269,7 @@ struct EventLoop {
     pool: Arc<PoolShared>,
     stop: Arc<AtomicBool>,
     next_token: Arc<AtomicU64>,
+    opts: ConnOpts,
     draining: bool,
 }
 
@@ -403,6 +412,7 @@ impl EventLoop {
                 closing: false,
                 read_closed: false,
                 frames: 0,
+                proto_errors: 0,
             },
         );
     }
@@ -495,8 +505,11 @@ impl EventLoop {
         enum Step {
             Wait,
             Frame(Request, bool),
-            Fail(Response),
+            /// A protocol error: the response, plus the bad prefix to
+            /// discard to resync (0 = unrecoverable, cut the connection).
+            Fail(Response, usize),
         }
+        let max_proto_errors = self.opts.max_proto_errors;
         loop {
             let step = {
                 let Some(conn) = self.conns.get_mut(&token) else { return };
@@ -518,9 +531,10 @@ impl EventLoop {
                 let binary = conn.proto == Proto::Binary;
                 let started = Instant::now();
                 let decoded = if binary {
-                    frame::decode_request(&conn.rbuf)
+                    // a bad binary frame loses framing: resync 0, fatal
+                    frame::decode_request(&conn.rbuf).map_err(|e| (e, 0))
                 } else {
-                    proto::decode_text_request(&conn.rbuf)
+                    proto::decode_text_request_resync(&conn.rbuf)
                 };
                 match decoded {
                     Ok(Decoded::Need(_)) => Step::Wait,
@@ -533,22 +547,35 @@ impl EventLoop {
                         });
                         conn.rbuf.drain(..used);
                         conn.frames += 1;
+                        conn.proto_errors = 0;
                         Step::Frame(req, binary)
                     }
-                    Err(e) => Step::Fail(super::proto_error_response(&e)),
+                    Err((e, resync)) => Step::Fail(super::proto_error_response(&e), resync),
                 }
             };
             match step {
                 Step::Wait => return,
                 Step::Frame(req, binary) => self.handle_request(token, binary, req),
-                Step::Fail(resp) => {
-                    // same as the threaded shim: answer (echoing the id
-                    // when the header parsed), then end the connection
+                Step::Fail(resp, resync) => {
+                    // answer (echoing the id when the header parsed);
+                    // text connections resync on the next line up to the
+                    // consecutive-abuse ceiling, binary ends immediately
                     self.enqueue(token, &resp);
-                    if let Some(conn) = self.conns.get_mut(&token) {
+                    let Some(conn) = self.conns.get_mut(&token) else { return };
+                    conn.proto_errors += 1;
+                    let over = max_proto_errors != 0 && conn.proto_errors >= max_proto_errors;
+                    if resync == 0 || over {
+                        if over {
+                            log_info!(
+                                "conn {}: disconnecting after {} consecutive protocol errors",
+                                conn.peer,
+                                conn.proto_errors
+                            );
+                        }
                         conn.closing = true;
+                        return;
                     }
-                    return;
+                    conn.rbuf.drain(..resync);
                 }
             }
         }
@@ -570,9 +597,21 @@ impl EventLoop {
                 }
             }
             req => {
+                let deadline = match &req {
+                    Request::Hull { tmo_ms, .. } | Request::SessionAdd { tmo_ms, .. } => {
+                        request_deadline(self.opts.request_timeout_ms, *tmo_ms)
+                    }
+                    _ => None,
+                };
                 if let Some(conn) = self.conns.get_mut(&token) {
                     conn.busy = true;
-                    self.pool.submit(Job { shared: self.shared.clone(), token, binary, req });
+                    self.pool.submit(Job {
+                        shared: self.shared.clone(),
+                        token,
+                        binary,
+                        req,
+                        deadline,
+                    });
                 }
             }
         }
@@ -776,6 +815,7 @@ pub(crate) fn serve_event(engine: Arc<Engine>, cfg: &ServerConfig) -> std::io::R
             pool: pool.shared.clone(),
             stop: stop.clone(),
             next_token: next_token.clone(),
+            opts: ConnOpts::from_config(cfg),
             draining: false,
         };
         threads.push(

@@ -3,10 +3,15 @@
 //! per-coordinate float formatting/parsing on the hot path).
 //!
 //! ```text
-//! request  = C7 01 <verb u8> <id u64 LE> <count u32 LE> count×(x f64 LE, y f64 LE)
+//! request  = C7 01 <verb u8> <id u64 LE> <count u32 LE> [tmo u32 LE] count×(x f64 LE, y f64 LE)
 //!   verbs: 1 HULL  2 SOPEN  3 SADD  4 SHULL  5 SCLOSE  6 STATS  7 PING  8 QUIT
 //!   `id` carries the request id (HULL/SOPEN), the sid (SADD/SHULL/SCLOSE),
 //!   or 0 (STATS/PING/QUIT); `count` is nonzero only for HULL/SADD.
+//!   The verb byte's high bit (0x80) flags a per-request deadline: when
+//!   set on HULL/SADD, a `u32` deadline budget in milliseconds follows the
+//!   fixed header (before the point payload).  The flag is invalid on
+//!   payload-less verbs.  Decoders that predate the flag see an unknown
+//!   verb and answer `Malformed` — never a silently misparsed frame.
 //!
 //! response = C8 01 <kind u8> <flag u8> <id u64 LE> <plen u32 LE> plen payload bytes
 //!   kinds: 1 HullOk   [queue_ns u64][exec_ns u64][k_up u32][k_lo u32]
@@ -46,6 +51,8 @@ pub const RESP_MAGIC: u8 = 0xC8;
 pub const VERSION: u8 = 0x01;
 
 const REQ_HEADER: usize = 15; // magic + ver + verb + id + count
+/// Verb-byte flag: a u32 deadline (ms) follows the fixed request header.
+const F_DEADLINE: u8 = 0x80;
 const RESP_HEADER: usize = 16; // magic + ver + kind + flag + id + plen
 
 const V_HULL: u8 = 1;
@@ -114,16 +121,26 @@ fn req_header(out: &mut Vec<u8>, verb: u8, id: u64, count: u32) {
     out.extend_from_slice(&count.to_le_bytes());
 }
 
+fn req_header_tmo(out: &mut Vec<u8>, verb: u8, id: u64, count: u32, tmo_ms: Option<u32>) {
+    match tmo_ms {
+        Some(ms) => {
+            req_header(out, verb | F_DEADLINE, id, count);
+            out.extend_from_slice(&ms.to_le_bytes());
+        }
+        None => req_header(out, verb, id, count),
+    }
+}
+
 /// Serialize a request into `out` (appends; does not clear).
 pub fn encode_request(out: &mut Vec<u8>, req: &Request) {
     match req {
-        Request::Hull { id, points } => {
-            req_header(out, V_HULL, *id, points.len() as u32);
+        Request::Hull { id, points, tmo_ms } => {
+            req_header_tmo(out, V_HULL, *id, points.len() as u32, *tmo_ms);
             push_points(out, points);
         }
         Request::SessionOpen { id } => req_header(out, V_SOPEN, *id, 0),
-        Request::SessionAdd { sid, points } => {
-            req_header(out, V_SADD, *sid, points.len() as u32);
+        Request::SessionAdd { sid, points, tmo_ms } => {
+            req_header_tmo(out, V_SADD, *sid, points.len() as u32, *tmo_ms);
             push_points(out, points);
         }
         Request::SessionHull { sid } => req_header(out, V_SHULL, *sid, 0),
@@ -224,7 +241,8 @@ pub fn decode_request(buf: &[u8]) -> Result<Decoded<Request>, ProtoError> {
     if buf[1] != VERSION {
         return Err(malformed(format!("unsupported frame version {}", buf[1])));
     }
-    let verb = buf[2];
+    let has_tmo = buf[2] & F_DEADLINE != 0;
+    let verb = buf[2] & !F_DEADLINE;
     let id = u64::from_le_bytes(buf[3..11].try_into().unwrap());
     let count = u32::from_le_bytes(buf[11..15].try_into().unwrap()) as usize;
     match verb {
@@ -236,19 +254,28 @@ pub fn decode_request(buf: &[u8]) -> Result<Decoded<Request>, ProtoError> {
                     session: verb == V_SADD,
                 });
             }
-            let need = REQ_HEADER + count * 16;
+            let body = REQ_HEADER + if has_tmo { 4 } else { 0 };
+            let need = body + count * 16;
             if buf.len() < need {
                 return Ok(Decoded::Need(need));
             }
-            let points = read_points(&buf[REQ_HEADER..need], count);
+            let tmo_ms = has_tmo
+                .then(|| u32::from_le_bytes(buf[REQ_HEADER..body].try_into().unwrap()));
+            let points = read_points(&buf[body..need], count);
             let req = if verb == V_HULL {
-                Request::Hull { id, points }
+                Request::Hull { id, points, tmo_ms }
             } else {
-                Request::SessionAdd { sid: id, points }
+                Request::SessionAdd { sid: id, points, tmo_ms }
             };
             Ok(Decoded::Frame(req, need))
         }
         V_SOPEN | V_SHULL | V_SCLOSE | V_STATS | V_PING | V_QUIT => {
+            if has_tmo {
+                return Err(ProtoError::Malformed {
+                    id: Some(id),
+                    detail: format!("verb {verb} does not carry a deadline"),
+                });
+            }
             if count != 0 {
                 return Err(ProtoError::Malformed {
                     id: Some(id),
@@ -462,12 +489,20 @@ mod tests {
     #[test]
     fn requests_roundtrip_bit_exact() {
         for req in [
-            Request::Hull { id: 42, points: pts(&[(0.125, 0.25), (0.5, 0.75)]) },
-            Request::Hull { id: 0, points: vec![] },
-            Request::Hull { id: u64::MAX, points: pts(&[(0.1234567890123, 0.000001)]) },
+            Request::Hull { id: 42, points: pts(&[(0.125, 0.25), (0.5, 0.75)]), tmo_ms: None },
+            Request::Hull { id: 0, points: vec![], tmo_ms: None },
+            Request::Hull {
+                id: u64::MAX,
+                points: pts(&[(0.1234567890123, 0.000001)]),
+                tmo_ms: Some(250),
+            },
             Request::SessionOpen { id: 3 },
-            Request::SessionAdd { sid: 17, points: pts(&[(0.0, 1.0), (1.0, 0.0)]) },
-            Request::SessionAdd { sid: 18, points: vec![] },
+            Request::SessionAdd {
+                sid: 17,
+                points: pts(&[(0.0, 1.0), (1.0, 0.0)]),
+                tmo_ms: Some(u32::MAX),
+            },
+            Request::SessionAdd { sid: 18, points: vec![], tmo_ms: None },
             Request::SessionHull { sid: 17 },
             Request::SessionClose { sid: 17 },
             Request::Stats,
@@ -529,7 +564,7 @@ mod tests {
         let mut buf = Vec::new();
         encode_request(
             &mut buf,
-            &Request::Hull { id: 1, points: pts(&[(f64::NAN, f64::INFINITY)]) },
+            &Request::Hull { id: 1, points: pts(&[(f64::NAN, f64::INFINITY)]), tmo_ms: None },
         );
         match decode_request(&buf).unwrap() {
             Decoded::Frame(Request::Hull { points, .. }, _) => {
@@ -542,7 +577,7 @@ mod tests {
 
     #[test]
     fn incremental_need_is_exact() {
-        let req = Request::Hull { id: 5, points: pts(&[(0.1, 0.2), (0.3, 0.4)]) };
+        let req = Request::Hull { id: 5, points: pts(&[(0.1, 0.2), (0.3, 0.4)]), tmo_ms: None };
         let mut buf = Vec::new();
         encode_request(&mut buf, &req);
         assert_eq!(buf.len(), 15 + 32);
@@ -566,6 +601,26 @@ mod tests {
             Decoded::Frame(Request::Ping, 15) => {}
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn deadline_flag_extends_the_frame_exactly() {
+        let req =
+            Request::Hull { id: 5, points: pts(&[(0.1, 0.2), (0.3, 0.4)]), tmo_ms: Some(750) };
+        let mut buf = Vec::new();
+        encode_request(&mut buf, &req);
+        // header + 4-byte deadline + 2×16 points, flag in the verb byte
+        assert_eq!(buf.len(), 15 + 4 + 32);
+        assert_eq!(buf[2], 1 | 0x80);
+        assert_eq!(u32::from_le_bytes(buf[15..19].try_into().unwrap()), 750);
+        // header alone reports the deadline-inclusive total
+        assert!(matches!(decode_request(&buf[..15]).unwrap(), Decoded::Need(51)));
+        assert!(matches!(decode_request(&buf[..50]).unwrap(), Decoded::Need(51)));
+        assert_eq!(roundtrip_req(req.clone()), req);
+        // the flag is rejected on payload-less verbs, id echoed
+        let mut bad = Vec::new();
+        req_header(&mut bad, V_PING | F_DEADLINE, 9, 0);
+        assert_eq!(decode_request(&bad).unwrap_err().frame_id(), Some(9));
     }
 
     #[test]
@@ -634,7 +689,7 @@ mod tests {
 
     #[test]
     fn blocking_reader_matches_decoder_and_reports_eof() {
-        let req = Request::SessionAdd { sid: 6, points: pts(&[(0.5, 0.5)]) };
+        let req = Request::SessionAdd { sid: 6, points: pts(&[(0.5, 0.5)]), tmo_ms: None };
         let mut buf = Vec::new();
         write_request(&mut buf, &req).unwrap();
         assert_eq!(read_request(&mut &buf[..]).unwrap(), req);

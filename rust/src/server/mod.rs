@@ -24,6 +24,7 @@ pub use proto::{Request, Response, SessionVerb};
 pub use sys::{nofile_limit, raise_nofile_limit};
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::{Coordinator, HullResponse, RequestError};
 use crate::engine::Engine;
@@ -42,11 +43,25 @@ pub struct ServerConfig {
     /// compatibility shim, which spawns one handler thread per
     /// connection regardless.
     pub io_threads: usize,
+    /// Default per-request deadline budget in milliseconds, stamped at
+    /// frame arrival (0 = no default).  A client `TMO=`/frame deadline
+    /// can only tighten this, never extend it.
+    pub request_timeout_ms: u64,
+    /// Disconnect a connection after this many *consecutive* recoverable
+    /// protocol errors (reset by any well-formed frame).  Binary decode
+    /// failures stay fatal immediately — framing is lost.  0 disables
+    /// the guard.
+    pub max_proto_errors: u32,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { addr: "127.0.0.1:7878".into(), io_threads: 0 }
+        ServerConfig {
+            addr: "127.0.0.1:7878".into(),
+            io_threads: 0,
+            request_timeout_ms: 0,
+            max_proto_errors: 8,
+        }
     }
 }
 
@@ -154,6 +169,20 @@ pub fn serve_engine_threaded(
 // ---------------------------------------------------------------- parity
 // Request -> Response mapping shared verbatim by both connection cores.
 
+/// Effective deadline for a frame that arrived now: the client's
+/// `TMO=`/frame budget caps the server default (a client can tighten the
+/// server's ceiling but never extend it).  `None` when neither side set
+/// one.
+pub(crate) fn request_deadline(server_timeout_ms: u64, tmo_ms: Option<u32>) -> Option<Instant> {
+    let server = (server_timeout_ms != 0).then_some(server_timeout_ms);
+    let client = tmo_ms.map(u64::from);
+    let budget_ms = match (server, client) {
+        (Some(s), Some(c)) => Some(s.min(c)),
+        (s, c) => s.or(c),
+    };
+    budget_ms.map(|ms| Instant::now() + Duration::from_millis(ms))
+}
+
 /// Map a decode failure to its error response: echo the failed frame's
 /// id when the header parsed, so id-correlating clients can still match
 /// the failure (session frames echo under their own verb).
@@ -190,8 +219,13 @@ pub(crate) fn session_open_response(engine: &Engine, id: u64) -> Response {
     }
 }
 
-pub(crate) fn session_add_response(engine: &Engine, sid: u64, points: &[Point]) -> Response {
-    match engine.session_add(sid, points) {
+pub(crate) fn session_add_response(
+    engine: &Engine,
+    sid: u64,
+    points: &[Point],
+    deadline: Option<Instant>,
+) -> Response {
+    match engine.session_add_deadline(sid, points, deadline) {
         Ok(o) => Response::SessionAdded {
             sid,
             absorbed: o.absorbed,

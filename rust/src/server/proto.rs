@@ -3,9 +3,9 @@
 //!
 //! ```text
 //! client -> server
-//!   HULL <id> <m>\n  then m lines "x y"     full hull request
+//!   HULL <id> <m> [TMO=<ms>]\n  then m lines "x y"   full hull request
 //!   SOPEN <id>\n                            open a streaming session
-//!   SADD <sid> <m>\n  then m lines "x y"    insert into a session
+//!   SADD <sid> <m> [TMO=<ms>]\n  then m lines "x y"  insert into a session
 //!   SHULL <sid>\n                           authoritative session hull
 //!   SCLOSE <sid>\n                          close a session
 //!   STATS\n                                 metrics snapshot (JSON line)
@@ -35,17 +35,25 @@
 //! merged bucket-wise) extended with `shards` (coordinator-shard count),
 //! `per_shard` (the raw per-shard snapshot array) and
 //! `active_connections` (the server's connection gauge).
+//!
+//! The optional `TMO=<ms>` header token is a per-request deadline
+//! override in milliseconds from arrival (caps the server's configured
+//! `request_timeout_ms`); an expired request answers the typed error
+//! `deadline-exceeded`.  Unrecognized trailing header tokens are ignored
+//! — old servers serve new clients, minus the deadline.
 
 use std::io::{BufRead, Write};
 
 use crate::geometry::point::Point;
 
-/// A parsed client request.
+/// A parsed client request.  `tmo_ms` is the optional per-request
+/// deadline budget (text: `TMO=<ms>` header token; binary: the deadline
+/// header extension behind the verb flag bit).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
-    Hull { id: u64, points: Vec<Point> },
+    Hull { id: u64, points: Vec<Point>, tmo_ms: Option<u32> },
     SessionOpen { id: u64 },
-    SessionAdd { sid: u64, points: Vec<Point> },
+    SessionAdd { sid: u64, points: Vec<Point>, tmo_ms: Option<u32> },
     SessionHull { sid: u64 },
     SessionClose { sid: u64 },
     Stats,
@@ -189,9 +197,21 @@ pub enum Decoded<T> {
 /// malformed header or an oversized count — delegation over the header
 /// line alone reproduces the exact error the blocking reader would raise.
 pub fn decode_text_request(buf: &[u8]) -> Result<Decoded<Request>, ProtoError> {
+    decode_text_request_resync(buf).map_err(|(e, _)| e)
+}
+
+/// [`decode_text_request`], but a parse failure also reports how many
+/// bytes the blocking reader would have consumed before erroring — the
+/// prefix an event-loop connection discards to resynchronize on the next
+/// line and keep serving (text framing is line-oriented, so one bad
+/// frame need not end the connection).  `0` means framing is genuinely
+/// lost (an unterminated over-limit line): the caller must disconnect.
+pub fn decode_text_request_resync(
+    buf: &[u8],
+) -> Result<Decoded<Request>, (ProtoError, usize)> {
     let Some(eol) = buf.iter().position(|&b| b == b'\n') else {
         if buf.len() >= MAX_TEXT_LINE {
-            return Err(ProtoError::malformed("header line over limit without newline"));
+            return Err((ProtoError::malformed("header line over limit without newline"), 0));
         }
         return Ok(Decoded::Need(buf.len() + 1));
     };
@@ -218,25 +238,38 @@ pub fn decode_text_request(buf: &[u8]) -> Result<Decoded<Request>, ProtoError> {
             Some(p) if p < MAX_TEXT_LINE => end += p + 1,
             Some(_) => {
                 let e = ProtoError::malformed("point line over limit");
-                return Err(match frame_id {
-                    Some(id) => e.with_id(id),
-                    None => e,
-                });
+                return Err((
+                    match frame_id {
+                        Some(id) => e.with_id(id),
+                        None => e,
+                    },
+                    0,
+                ));
             }
             None => {
                 if buf.len() - end >= MAX_TEXT_LINE {
                     let e = ProtoError::malformed("point line over limit without newline");
-                    return Err(match frame_id {
-                        Some(id) => e.with_id(id),
-                        None => e,
-                    });
+                    return Err((
+                        match frame_id {
+                            Some(id) => e.with_id(id),
+                            None => e,
+                        },
+                        0,
+                    ));
                 }
                 return Ok(Decoded::Need(buf.len() + 1));
             }
         }
     }
-    let req = read_request(&mut &buf[..end])?;
-    Ok(Decoded::Frame(req, end))
+    // delegate the parse to the blocking reader over exactly the frame's
+    // bytes; on failure the advanced slice reveals how many bytes it
+    // consumed (header + point lines up to the bad one) — the resync
+    // prefix
+    let mut frame_bytes = &buf[..end];
+    match read_request(&mut frame_bytes) {
+        Ok(req) => Ok(Decoded::Frame(req, end)),
+        Err(e) => Err((e, end - frame_bytes.len())),
+    }
 }
 
 fn read_line<R: BufRead>(r: &mut R) -> Result<String, ProtoError> {
@@ -250,14 +283,15 @@ fn read_line<R: BufRead>(r: &mut R) -> Result<String, ProtoError> {
     Ok(line.trim_end().to_string())
 }
 
-/// Read the `<id> <m>` header tail + the m-line point block shared by
-/// `HULL` and `SADD` frames.
+/// Read the `<id> <m> [TMO=<ms>]` header tail + the m-line point block
+/// shared by `HULL` and `SADD` frames.  Trailing header tokens other
+/// than `TMO=` are ignored (forward compatibility).
 fn read_point_block<R: BufRead>(
     r: &mut R,
     it: &mut std::str::SplitWhitespace<'_>,
     verb: &str,
     session: bool,
-) -> Result<(u64, Vec<Point>), ProtoError> {
+) -> Result<(u64, Vec<Point>, Option<u32>), ProtoError> {
     let id: Option<u64> = it.next().and_then(|s| s.parse().ok());
     let m: Option<usize> = it.next().and_then(|s| s.parse().ok());
     let (Some(id), Some(m)) = (id, m) else {
@@ -268,6 +302,12 @@ fn read_point_block<R: BufRead>(
     };
     if m > MAX_REQUEST_POINTS {
         return Err(ProtoError::TooManyPoints { id, points: m, session });
+    }
+    let mut tmo_ms: Option<u32> = None;
+    for tok in it.by_ref() {
+        if let Some(ms) = tok.strip_prefix("TMO=").and_then(|v| v.parse::<u32>().ok()) {
+            tmo_ms = Some(ms);
+        }
     }
     let mut points = Vec::with_capacity(m);
     for k in 0..m {
@@ -288,7 +328,7 @@ fn read_point_block<R: BufRead>(
         };
         points.push(Point::new(x, y));
     }
-    Ok((id, points))
+    Ok((id, points, tmo_ms))
 }
 
 /// Parse the lone numeric operand of SOPEN (`<id>`) / SHULL / SCLOSE
@@ -305,13 +345,13 @@ pub fn read_request<R: BufRead>(r: &mut R) -> Result<Request, ProtoError> {
     let mut it = line.split_whitespace();
     match it.next() {
         Some("HULL") => {
-            let (id, points) = read_point_block(r, &mut it, "HULL", false)?;
-            Ok(Request::Hull { id, points })
+            let (id, points, tmo_ms) = read_point_block(r, &mut it, "HULL", false)?;
+            Ok(Request::Hull { id, points, tmo_ms })
         }
         Some("SOPEN") => Ok(Request::SessionOpen { id: parse_sid(&mut it, "SOPEN")? }),
         Some("SADD") => {
-            let (sid, points) = read_point_block(r, &mut it, "SADD", true)?;
-            Ok(Request::SessionAdd { sid, points })
+            let (sid, points, tmo_ms) = read_point_block(r, &mut it, "SADD", true)?;
+            Ok(Request::SessionAdd { sid, points, tmo_ms })
         }
         Some("SHULL") => Ok(Request::SessionHull { sid: parse_sid(&mut it, "SHULL")? }),
         Some("SCLOSE") => Ok(Request::SessionClose { sid: parse_sid(&mut it, "SCLOSE")? }),
@@ -325,15 +365,21 @@ pub fn read_request<R: BufRead>(r: &mut R) -> Result<Request, ProtoError> {
 /// Serialize a request (client side).
 pub fn write_request<W: Write>(w: &mut W, req: &Request) -> std::io::Result<()> {
     match req {
-        Request::Hull { id, points } => {
-            writeln!(w, "HULL {id} {}", points.len())?;
+        Request::Hull { id, points, tmo_ms } => {
+            match tmo_ms {
+                Some(ms) => writeln!(w, "HULL {id} {} TMO={ms}", points.len())?,
+                None => writeln!(w, "HULL {id} {}", points.len())?,
+            }
             for p in points {
                 writeln!(w, "{} {}", p.x, p.y)?;
             }
         }
         Request::SessionOpen { id } => writeln!(w, "SOPEN {id}")?,
-        Request::SessionAdd { sid, points } => {
-            writeln!(w, "SADD {sid} {}", points.len())?;
+        Request::SessionAdd { sid, points, tmo_ms } => {
+            match tmo_ms {
+                Some(ms) => writeln!(w, "SADD {sid} {} TMO={ms}", points.len())?,
+                None => writeln!(w, "SADD {sid} {}", points.len())?,
+            }
             for p in points {
                 writeln!(w, "{} {}", p.x, p.y)?;
             }
@@ -525,11 +571,39 @@ mod tests {
         let req = Request::Hull {
             id: 42,
             points: vec![Point::new(0.125, 0.25), Point::new(0.5, 0.75)],
+            tmo_ms: None,
         };
         assert_eq!(roundtrip_req(req.clone()), req);
         assert_eq!(roundtrip_req(Request::Stats), Request::Stats);
         assert_eq!(roundtrip_req(Request::Ping), Request::Ping);
         assert_eq!(roundtrip_req(Request::Quit), Request::Quit);
+    }
+
+    #[test]
+    fn deadline_token_roundtrips_and_parses() {
+        // explicit deadline survives a write/read roundtrip on both verbs
+        let hull = Request::Hull { id: 5, points: vec![Point::new(0.5, 0.5)], tmo_ms: Some(250) };
+        assert_eq!(roundtrip_req(hull.clone()), hull);
+        let sadd =
+            Request::SessionAdd { sid: 9, points: vec![Point::new(0.1, 0.2)], tmo_ms: Some(40) };
+        assert_eq!(roundtrip_req(sadd.clone()), sadd);
+        // wire form is the documented TMO= token
+        let mut buf = Vec::new();
+        write_request(&mut buf, &hull).unwrap();
+        assert!(buf.starts_with(b"HULL 5 1 TMO=250\n"), "{:?}", String::from_utf8_lossy(&buf));
+        // hand-written frame parses
+        let req = read_request(&mut BufReader::new(&b"HULL 7 1 TMO=125\n0.5 0.5\n"[..])).unwrap();
+        assert_eq!(req, Request::Hull { id: 7, points: vec![Point::new(0.5, 0.5)], tmo_ms: Some(125) });
+        // unknown / malformed trailing tokens are ignored, not fatal
+        for frame in
+            [&b"HULL 7 0 FUTURE=1\n"[..], &b"HULL 7 0 TMO=abc\n"[..], &b"HULL 7 0 TMO=\n"[..]]
+        {
+            let req = read_request(&mut BufReader::new(frame)).unwrap();
+            assert_eq!(req, Request::Hull { id: 7, points: vec![], tmo_ms: None }, "{frame:?}");
+        }
+        // the incremental decoder agrees bit-for-bit
+        assert_incremental_matches(b"HULL 7 1 TMO=125\n0.5 0.5\n");
+        assert_incremental_matches(b"SADD 9 1 TMO=40\n0.1 0.2\n");
     }
 
     #[test]
@@ -607,8 +681,9 @@ mod tests {
             Request::SessionAdd {
                 sid: 17,
                 points: vec![Point::new(0.125, 0.25), Point::new(0.5, 0.75)],
+                tmo_ms: None,
             },
-            Request::SessionAdd { sid: 18, points: vec![] },
+            Request::SessionAdd { sid: 18, points: vec![], tmo_ms: None },
             Request::SessionHull { sid: 17 },
             Request::SessionClose { sid: 17 },
         ] {
@@ -719,7 +794,7 @@ mod tests {
         }
         // the full buffer yields the HULL frame and leaves PING unread
         match decode_text_request(bytes).unwrap() {
-            Decoded::Frame(Request::Hull { id: 5, points }, used) => {
+            Decoded::Frame(Request::Hull { id: 5, points, .. }, used) => {
                 assert_eq!(points.len(), 2);
                 assert_eq!(&bytes[used..], b"PING\n");
             }
@@ -751,6 +826,29 @@ mod tests {
     }
 
     #[test]
+    fn resync_extent_matches_blocking_consumption() {
+        // bad header: the header line is the whole resync prefix
+        let (e, used) = decode_text_request_resync(b"BOGUS\nPING\n").unwrap_err();
+        assert_eq!(e.frame_id(), None);
+        assert_eq!(used, 6);
+        // bad count: header line only
+        let (e, used) = decode_text_request_resync(b"HULL 7 abc\nPING\n").unwrap_err();
+        assert_eq!(e.frame_id(), Some(7));
+        assert_eq!(used, 11);
+        // bad first point of two: header + the bad line, the second point
+        // line is left to be (mis)read as the next frame — exactly what
+        // the blocking reader consumes
+        let bytes = b"HULL 1 2\n0.5\n0.5 0.5\n";
+        let (e, used) = decode_text_request_resync(bytes).unwrap_err();
+        assert_eq!(e.frame_id(), Some(1));
+        assert_eq!(&bytes[used..], b"0.5 0.5\n");
+        // unterminated over-limit garbage: resync impossible
+        let junk = vec![b'A'; MAX_TEXT_LINE];
+        let (_, used) = decode_text_request_resync(&junk).unwrap_err();
+        assert_eq!(used, 0);
+    }
+
+    #[test]
     fn incremental_text_decode_bounds_unterminated_lines() {
         // an endless header line must be rejected, not buffered forever
         let junk = vec![b'A'; MAX_TEXT_LINE];
@@ -764,7 +862,7 @@ mod tests {
     #[test]
     fn f64_precision_survives() {
         let p = Point::new(0.1234567890123, 0.000001);
-        let req = Request::Hull { id: 1, points: vec![p] };
+        let req = Request::Hull { id: 1, points: vec![p], tmo_ms: None };
         match roundtrip_req(req) {
             Request::Hull { points, .. } => assert_eq!(points[0], p),
             _ => panic!(),

@@ -28,7 +28,24 @@ use crate::{log_debug, log_info};
 #[cfg(unix)]
 use super::sys;
 use super::proto::{self, ProtoError, Request, Response};
-use super::{frame, ServerConfig};
+use super::{frame, request_deadline, ServerConfig};
+
+/// Per-connection robustness knobs, copied out of [`ServerConfig`] at
+/// startup so handler threads never chase the config.
+#[derive(Clone, Copy)]
+pub(crate) struct ConnOpts {
+    pub(crate) request_timeout_ms: u64,
+    pub(crate) max_proto_errors: u32,
+}
+
+impl ConnOpts {
+    pub(crate) fn from_config(cfg: &ServerConfig) -> Self {
+        ConnOpts {
+            request_timeout_ms: cfg.request_timeout_ms,
+            max_proto_errors: cfg.max_proto_errors,
+        }
+    }
+}
 
 /// A live connection: the handler thread plus a socket handle the accept
 /// loop keeps so `stop` can unblock a handler parked in a blocking read.
@@ -137,15 +154,16 @@ pub(crate) fn serve_threaded(
     let stop2 = stop.clone();
     let reg2 = registry.clone();
     let engine2 = engine.clone();
+    let opts = ConnOpts::from_config(cfg);
     #[cfg(unix)]
     let waker2 = waker.clone();
     let accept_thread = std::thread::Builder::new()
         .name("hull-accept".into())
         .spawn(move || {
             #[cfg(unix)]
-            accept_loop_unix(listener, poller, &waker2, &stop2, &reg2, &engine2);
+            accept_loop_unix(listener, poller, &waker2, &stop2, &reg2, &engine2, opts);
             #[cfg(not(unix))]
-            accept_loop_blocking(listener, &stop2, &reg2, &engine2);
+            accept_loop_blocking(listener, &stop2, &reg2, &engine2, opts);
         })?;
 
     Ok(ThreadedHandle {
@@ -169,6 +187,7 @@ fn accept_loop_unix(
     stop: &AtomicBool,
     registry: &Arc<ConnRegistry>,
     engine: &Arc<Engine>,
+    opts: ConnOpts,
 ) {
     let mut events = Vec::new();
     while !stop.load(Ordering::SeqCst) {
@@ -198,7 +217,7 @@ fn accept_loop_unix(
                     if s.set_nonblocking(false).is_err() {
                         continue;
                     }
-                    accept_one(s, registry, engine);
+                    accept_one(s, registry, engine, opts);
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
                 Err(e) => {
@@ -216,20 +235,21 @@ fn accept_loop_blocking(
     stop: &AtomicBool,
     registry: &Arc<ConnRegistry>,
     engine: &Arc<Engine>,
+    opts: ConnOpts,
 ) {
     for stream in listener.incoming() {
         if stop.load(Ordering::SeqCst) {
             break;
         }
         match stream {
-            Ok(s) => accept_one(s, registry, engine),
+            Ok(s) => accept_one(s, registry, engine, opts),
             Err(e) => log_info!("accept error: {e}"),
         }
     }
 }
 
 /// Track and spawn the handler for one accepted connection.
-fn accept_one(s: TcpStream, registry: &Arc<ConnRegistry>, engine: &Arc<Engine>) {
+fn accept_one(s: TcpStream, registry: &Arc<ConnRegistry>, engine: &Arc<Engine>, opts: ConnOpts) {
     let eng = engine.clone();
     let tracked = match s.try_clone() {
         Ok(t) => t,
@@ -249,7 +269,7 @@ fn accept_one(s: TcpStream, registry: &Arc<ConnRegistry>, engine: &Arc<Engine>) 
         return;
     };
     let spawned = std::thread::Builder::new().name("hull-conn".into()).spawn(move || {
-        handle_connection(s, eng, &reg_in.active);
+        handle_connection(s, eng, &reg_in.active, opts);
         reg_in.active.fetch_sub(1, Ordering::Relaxed);
         // self-reap: drop the tracked stream clone now, not at the next
         // accept — only the coordinator-free tail of this thread outlives
@@ -280,7 +300,7 @@ fn write_response<W: Write>(w: &mut W, binary: bool, resp: &Response) -> std::io
     }
 }
 
-fn handle_connection(stream: TcpStream, engine: Arc<Engine>, active: &AtomicU64) {
+fn handle_connection(stream: TcpStream, engine: Arc<Engine>, active: &AtomicU64, opts: ConnOpts) {
     let peer = match stream.peer_addr() {
         Ok(p) => p.to_string(),
         Err(_) => "<unknown>".into(),
@@ -306,6 +326,7 @@ fn handle_connection(stream: TcpStream, engine: Arc<Engine>, active: &AtomicU64)
     log_debug!("conn {peer}: protocol={}", if binary { "binary" } else { "text" });
 
     let mut frames: u64 = 0;
+    let mut proto_errors: u32 = 0;
     loop {
         let read = if binary {
             frame::read_request(&mut reader)
@@ -317,10 +338,25 @@ fn handle_connection(stream: TcpStream, engine: Arc<Engine>, active: &AtomicU64)
             Err(ProtoError::Eof) => break,
             Err(e) => {
                 let _ = write_response(&mut writer, binary, &super::proto_error_response(&e));
-                break;
+                if binary {
+                    // a bad binary frame loses framing: always fatal
+                    break;
+                }
+                // text framing is line-oriented: answer and resync on the
+                // next line, up to the consecutive-abuse ceiling
+                proto_errors += 1;
+                if opts.max_proto_errors != 0 && proto_errors >= opts.max_proto_errors {
+                    log_info!(
+                        "conn {peer}: disconnecting after {proto_errors} \
+                         consecutive protocol errors"
+                    );
+                    break;
+                }
+                continue;
             }
         };
         frames += 1;
+        proto_errors = 0;
         let resp = match req {
             Request::Quit => break,
             Request::Ping => Response::Pong,
@@ -329,16 +365,18 @@ fn handle_connection(stream: TcpStream, engine: Arc<Engine>, active: &AtomicU64)
                 // connection gauge (engine-global, read exactly once)
                 Response::Stats(engine.stats(Some(active.load(Ordering::Relaxed))).0.to_string())
             }
-            Request::Hull { id, points } => {
-                let reply = engine.submit(HullRequest { id, points });
+            Request::Hull { id, points, tmo_ms } => {
+                let deadline = request_deadline(opts.request_timeout_ms, tmo_ms);
+                let reply = engine.submit(HullRequest::new(id, points).with_deadline(deadline));
                 match reply.recv() {
                     Ok(result) => super::hull_response(id, result),
                     Err(_) => Response::HullErr { id, message: "coordinator gone".into() },
                 }
             }
             Request::SessionOpen { id } => super::session_open_response(&engine, id),
-            Request::SessionAdd { sid, points } => {
-                super::session_add_response(&engine, sid, &points)
+            Request::SessionAdd { sid, points, tmo_ms } => {
+                let deadline = request_deadline(opts.request_timeout_ms, tmo_ms);
+                super::session_add_response(&engine, sid, &points, deadline)
             }
             Request::SessionHull { sid } => super::session_hull_response(&engine, sid),
             Request::SessionClose { sid } => super::session_close_response(&engine, sid),

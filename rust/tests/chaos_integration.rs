@@ -1,0 +1,382 @@
+//! Chaos acceptance gates: the deterministic fault-injection harness
+//! driven end-to-end through the engine.
+//!
+//! A seeded [`FaultPlan`] is injected into every exec worker of every
+//! shard (the `Arc` cursor is shared, so one global step index spans the
+//! whole engine).  Requests are submitted strictly sequentially — one in
+//! flight at a time — which pins the dispatch order and makes the whole
+//! run a pure function of the seed:
+//!
+//! * same seed → bit-for-bit identical outcome sequence (hulls AND typed
+//!   errors), at 1 shard and at 4;
+//! * whenever a result IS returned it is bit-identical to the no-fault
+//!   oracle (the serial monotone chain for one-shots, a fault-free twin
+//!   engine for sessions);
+//! * every request resolves within [`RESOLVE_BUDGET`] with a typed
+//!   outcome — success, `deadline-exceeded`, `overloaded`, or a
+//!   `backend` error — never a hang;
+//! * the books stay balanced: per-shard `requests == responses + errors`
+//!   (so `in_flight` cannot underflow) and the session ledger
+//!   `inserted == absorbed + pending + hull_points` stays exact.
+//!
+//! `ENGINE_SHARDS=4` reruns the env-driven tests against a sharded
+//! engine (tier1 does both passes).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use wagener_hull::coordinator::{
+    BackendKind, BatcherConfig, CoordinatorConfig, HullRequest, RequestError,
+};
+use wagener_hull::engine::{Engine, EngineConfig};
+use wagener_hull::fault::{FaultAction, FaultPlan};
+use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::geometry::point::{sort_by_x, Point};
+use wagener_hull::serial::monotone_chain;
+use wagener_hull::stream::StreamConfig;
+
+/// Every submitted request must resolve within this bound or the suite
+/// fails — the "no request hangs under faults" gate.
+const RESOLVE_BUDGET: Duration = Duration::from_secs(30);
+
+/// What one request produced: the hull chains, or the typed error text.
+type Outcome = Result<(Vec<Point>, Vec<Point>), String>;
+
+fn chaos_engine(shards: usize, plan: Arc<FaultPlan>, cooldown_ms: u64) -> Engine {
+    Engine::start(EngineConfig {
+        shards,
+        coordinator: CoordinatorConfig {
+            backend: BackendKind::Native,
+            workers: 2, // failover needs a second worker to retry on
+            // one request per batch: the dispatch (= fault-plan step)
+            // sequence is then exactly the request sequence
+            batcher: BatcherConfig { max_batch: 1, flush_us: 100, queue_cap: 64 },
+            breaker_cooldown_ms: cooldown_ms,
+            fault_plan: Some(plan),
+            ..Default::default()
+        },
+        stream: StreamConfig { idle_ttl_ms: 0, merge_threshold: 48, ..Default::default() },
+        max_queued: 0,
+    })
+    .unwrap()
+}
+
+fn workload(n: usize) -> Vec<Vec<Point>> {
+    (0..n)
+        .map(|k| {
+            let dist = Distribution::ALL[k % Distribution::ALL.len()];
+            generate(dist, 16 + 7 * k, k as u64)
+        })
+        .collect()
+}
+
+/// Submit the inputs one at a time (strictly sequential — the property
+/// that makes a faulted run deterministic) and collect every outcome.
+fn run_schedule(e: &Engine, inputs: &[Vec<Point>]) -> Vec<Outcome> {
+    inputs
+        .iter()
+        .enumerate()
+        .map(|(k, pts)| {
+            let rx = e.submit(HullRequest::new(k as u64 + 1, pts.clone()));
+            let result = rx
+                .recv_timeout(RESOLVE_BUDGET)
+                .unwrap_or_else(|_| panic!("request {k} did not resolve within budget"));
+            result.map(|r| (r.upper, r.lower)).map_err(|e| e.to_string())
+        })
+        .collect()
+}
+
+/// The full typed-error vocabulary a chaos run may answer with.
+fn typed_error(msg: &str) -> bool {
+    msg == "deadline-exceeded"
+        || msg == "overloaded"
+        || msg == "unknown-session"
+        || msg.starts_with("backend failure:")
+}
+
+/// Per-shard ledger balance: every request that entered the pipeline was
+/// answered exactly once, so the derived `in_flight` gauge is zero (and
+/// by construction can never have gone negative).
+fn assert_books_balanced(e: &Engine) {
+    for i in 0..e.shard_count() {
+        let f = e.shard_coordinator(i).metrics.frame();
+        assert_eq!(
+            f.requests,
+            f.responses + f.errors,
+            "shard {i}: requests {} != responses {} + errors {}",
+            f.requests,
+            f.responses,
+            f.errors
+        );
+        assert_eq!(f.in_flight(), 0, "shard {i}: in-flight gauge did not drain");
+    }
+}
+
+fn unique_vertices(upper: &[Point], lower: &[Point]) -> usize {
+    let mut all: Vec<Point> = upper.iter().chain(lower.iter()).copied().collect();
+    sort_by_x(&mut all);
+    all.dedup();
+    all.len()
+}
+
+/// THE determinism gate: the same seeded plan replayed against the same
+/// inputs produces a bit-for-bit identical outcome sequence, every
+/// returned hull is bit-identical to the no-fault serial oracle, and
+/// every error is typed.  Runs at `ENGINE_SHARDS` shards (default 1).
+#[test]
+fn same_seed_same_outcomes_and_hulls_match_the_no_fault_oracle() {
+    let shards = EngineConfig::shards_from_env(1);
+    let inputs = workload(40);
+    let menu = [
+        FaultAction::Error,
+        FaultAction::Panic,
+        FaultAction::Delay(Duration::from_millis(1)),
+    ];
+    let mut runs = Vec::new();
+    for _ in 0..2 {
+        let plan = FaultPlan::seeded(0xC0FFEE, 4096, 20, &menu);
+        assert!(plan.planned() > 0, "a 20% plan over 4096 steps must schedule faults");
+        // hour-long cooldown: a tripped breaker stays tripped for the
+        // whole run, so no wall-clock race can change the outcome
+        let e = chaos_engine(shards, plan.clone(), 3_600_000);
+        let outcomes = run_schedule(&e, &inputs);
+        assert!(plan.taken() > 0, "the plan cursor must have been consumed");
+        assert_books_balanced(&e);
+        runs.push(outcomes);
+    }
+    assert_eq!(runs[0], runs[1], "same seed diverged between two runs");
+    let mut ok = 0usize;
+    for (k, outcome) in runs[0].iter().enumerate() {
+        match outcome {
+            Ok((upper, lower)) => {
+                ok += 1;
+                let (u, l) = monotone_chain::full_hull(&inputs[k]);
+                assert_eq!(*upper, u, "request {k}: upper diverged from oracle");
+                assert_eq!(*lower, l, "request {k}: lower diverged from oracle");
+            }
+            Err(msg) => assert!(typed_error(msg), "request {k}: untyped error {msg:?}"),
+        }
+    }
+    assert!(ok > 0, "a 20% fault rate must let most requests through");
+}
+
+/// The same determinism property pinned at 4 shards: the plan cursor is
+/// shared across all four coordinators, so sequential submission keeps
+/// the global dispatch order — and therefore every outcome — fixed.
+#[test]
+fn four_shard_chaos_is_equally_deterministic() {
+    let inputs = workload(28);
+    let menu = [FaultAction::Panic, FaultAction::Error];
+    let mut runs = Vec::new();
+    for _ in 0..2 {
+        let plan = FaultPlan::seeded(0xBADD_CAFE, 4096, 20, &menu);
+        let e = chaos_engine(4, plan, 3_600_000);
+        let outcomes = run_schedule(&e, &inputs);
+        assert_books_balanced(&e);
+        runs.push(outcomes);
+    }
+    assert_eq!(runs[0], runs[1], "4-shard run diverged between replays");
+    for (k, outcome) in runs[0].iter().enumerate() {
+        if let Ok((upper, lower)) = outcome {
+            let (u, l) = monotone_chain::full_hull(&inputs[k]);
+            assert_eq!((upper, lower), (&u, &l), "request {k} diverged from oracle");
+        }
+    }
+}
+
+/// Expired budgets answer the typed `deadline-exceeded` error (counted
+/// in `deadline_exceeded_total` AND in `errors`, so the in-flight gauge
+/// drains exactly) while unexpired requests on the same connection keep
+/// computing oracle-identical hulls.
+#[test]
+fn expired_deadlines_answer_typed_error_without_unbalancing_the_books() {
+    let shards = EngineConfig::shards_from_env(1);
+    let e = chaos_engine(shards, FaultPlan::from_steps(&[]), 0);
+    let inputs = workload(12);
+    let mut expired = 0u64;
+    for (k, pts) in inputs.iter().enumerate() {
+        // every third request arrives already out of budget
+        let deadline = (k % 3 == 0).then(Instant::now);
+        let rx = e.submit(HullRequest::new(k as u64 + 1, pts.clone()).with_deadline(deadline));
+        let outcome = rx.recv_timeout(RESOLVE_BUDGET).expect("request must resolve");
+        if k % 3 == 0 {
+            expired += 1;
+            assert_eq!(outcome.unwrap_err().to_string(), "deadline-exceeded", "request {k}");
+        } else {
+            let resp = outcome.unwrap_or_else(|e| panic!("request {k}: {e}"));
+            let (u, l) = monotone_chain::full_hull(pts);
+            assert_eq!((resp.upper, resp.lower), (u, l), "request {k}");
+        }
+    }
+    let snap = e.snapshot().0;
+    assert_eq!(
+        snap.get("deadline_exceeded_total").unwrap().as_usize(),
+        Some(expired as usize)
+    );
+    assert_books_balanced(&e);
+}
+
+/// Breaker lifecycle under an explicit panic storm: both attempts of the
+/// first two requests fault (exhausting the bounded retry), the third
+/// consecutive batch failure trips the breaker open, an open breaker
+/// rejects at admission WITHOUT consuming a dispatch, and after the
+/// cooldown the next request becomes the half-open probe that closes it.
+#[test]
+fn panic_storm_trips_the_breaker_and_a_probe_recovers_it() {
+    let plan = FaultPlan::from_steps(&[
+        (0, FaultAction::Panic),
+        (1, FaultAction::Panic),
+        (2, FaultAction::Error),
+        (3, FaultAction::Panic),
+    ]);
+    let e = chaos_engine(1, plan.clone(), 1000);
+    let pts = generate(Distribution::Circle, 64, 11);
+    for k in 0..2 {
+        let err = e.compute(pts.clone()).unwrap_err();
+        assert!(matches!(err, RequestError::Backend(_)), "request {k}: got {err:?}");
+    }
+    assert_eq!(plan.taken(), 4, "2 requests x (dispatch + failover retry)");
+    assert_eq!(e.shard_coordinator(0).breaker().state(), 1, "3rd failure must trip");
+    // open breaker: rejected at admission, no plan step consumed
+    let err = e.compute(pts.clone()).unwrap_err();
+    assert!(matches!(err, RequestError::Backend(_)), "got {err:?}");
+    assert_eq!(plan.taken(), 4, "breaker-open rejection must not dispatch");
+    // cooldown elapses: the next request IS the half-open probe; the
+    // plan is exhausted so it succeeds and closes the breaker
+    std::thread::sleep(Duration::from_millis(1200));
+    let resp = e.compute(pts.clone()).unwrap();
+    let (u, l) = monotone_chain::full_hull(&pts);
+    assert_eq!((resp.upper, resp.lower), (u, l));
+    assert_eq!(e.shard_coordinator(0).breaker().state(), 0, "probe must close it");
+    let snap = e.snapshot().0;
+    assert_eq!(snap.get("retries_total").unwrap().as_usize(), Some(2));
+    assert_eq!(snap.get("breaker_state").unwrap().as_usize(), Some(0));
+    assert_books_balanced(&e);
+}
+
+/// Sessions under pure Delay chaos (perturbation without failure): every
+/// add outcome, epoch and hull must be bit-identical to a fault-free
+/// twin engine fed the same schedule, and the global session ledger
+/// `inserted == absorbed + pending + hull_points` must be exact on both.
+#[test]
+fn delay_chaos_keeps_sessions_bit_identical_to_the_no_fault_run() {
+    let shards = EngineConfig::shards_from_env(1);
+    let delayed = chaos_engine(
+        shards,
+        FaultPlan::seeded(7, 4096, 30, &[FaultAction::Delay(Duration::from_micros(300))]),
+        0,
+    );
+    let control = chaos_engine(shards, FaultPlan::from_steps(&[]), 0);
+    let n_sessions = 3usize;
+    let sids_d: Vec<u64> = (0..n_sessions).map(|_| delayed.session_open().unwrap()).collect();
+    let sids_c: Vec<u64> = (0..n_sessions).map(|_| control.session_open().unwrap()).collect();
+    let mut fed = vec![0usize; n_sessions];
+    for step in 0..24usize {
+        let dist = Distribution::ALL[step % Distribution::ALL.len()];
+        let pts = generate(dist, 20 + 3 * step, step as u64 + 100);
+        if step % 4 == 3 {
+            // interleaved one-shot stirring the same exec pools
+            let a = delayed.compute(pts.clone()).unwrap();
+            let b = control.compute(pts).unwrap();
+            assert_eq!((a.upper, a.lower), (b.upper, b.lower), "one-shot {step} diverged");
+        } else {
+            let k = step % n_sessions;
+            let a = delayed.session_add(sids_d[k], &pts).unwrap();
+            let b = control.session_add(sids_c[k], &pts).unwrap();
+            assert_eq!(a, b, "session {k} step {step}: add outcome diverged");
+            fed[k] += pts.len();
+        }
+    }
+    let mut hull_points = 0usize;
+    for k in 0..n_sessions {
+        let a = delayed.session_hull(sids_d[k]).unwrap();
+        let b = control.session_hull(sids_c[k]).unwrap();
+        assert_eq!(a.epoch, b.epoch, "session {k}: epoch diverged");
+        assert_eq!(a.upper, b.upper, "session {k}: upper diverged");
+        assert_eq!(a.lower, b.lower, "session {k}: lower diverged");
+        hull_points += unique_vertices(&a.upper, &a.lower);
+    }
+    // exact accounting on the delayed engine's merged metrics: every
+    // point ever inserted is absorbed, pending, or a hull vertex
+    let inserted: usize = fed.iter().sum();
+    let m = delayed.snapshot().0;
+    let absorbed = m.get("absorbed_points_total").unwrap().as_usize().unwrap();
+    let pending = m.get("pending_points_total").unwrap().as_usize().unwrap();
+    assert_eq!(pending, 0, "SHULL must have flushed every pending point");
+    assert_eq!(absorbed + pending + hull_points, inserted, "session ledger drifted");
+    for k in 0..n_sessions {
+        delayed.session_close(sids_d[k]).unwrap();
+        control.session_close(sids_c[k]).unwrap();
+    }
+    assert_eq!(delayed.open_sessions(), 0);
+    assert_books_balanced(&delayed);
+    assert_books_balanced(&control);
+}
+
+/// Mixed chaos (errors, panics, delays, expired deadlines, a breaker
+/// that may cycle) over interleaved one-shots and session traffic: every
+/// request resolves with a typed outcome within budget and no gauge ever
+/// underflows — the ledgers drain to zero once the sessions close.
+#[test]
+fn mixed_chaos_never_underflows_gauges_and_resolves_everything() {
+    let shards = EngineConfig::shards_from_env(1);
+    let menu = [
+        FaultAction::Error,
+        FaultAction::Delay(Duration::from_micros(300)),
+        FaultAction::Panic,
+    ];
+    let plan = FaultPlan::seeded(99, 4096, 25, &menu);
+    let e = chaos_engine(shards, plan, 30);
+    let sid = e.session_open().unwrap();
+    let mut attempted = 0usize;
+    let (mut ok, mut failed) = (0usize, 0usize);
+    for step in 0..36usize {
+        let dist = Distribution::ALL[step % Distribution::ALL.len()];
+        let pts = generate(dist, 24 + 5 * step, step as u64 + 500);
+        let outcome: Result<(), String> = match step % 3 {
+            0 => {
+                // one-shot, occasionally with an already-expired budget
+                let deadline = (step % 9 == 0 && step > 0).then(Instant::now);
+                let rx =
+                    e.submit(HullRequest::new(step as u64 + 1, pts.clone()).with_deadline(deadline));
+                rx.recv_timeout(RESOLVE_BUDGET)
+                    .expect("one-shot must resolve within budget")
+                    .map(|resp| {
+                        let (u, l) = monotone_chain::full_hull(&pts);
+                        assert_eq!((resp.upper, resp.lower), (u, l), "step {step}");
+                    })
+                    .map_err(|e| e.to_string())
+            }
+            _ => {
+                // a failed add may still have pended points before the
+                // merge faulted, so the gauge bound counts every attempt
+                attempted += pts.len();
+                e.session_add(sid, &pts).map(|_| ()).map_err(|e| e.to_string())
+            }
+        };
+        match outcome {
+            Ok(()) => ok += 1,
+            Err(msg) => {
+                failed += 1;
+                assert!(typed_error(&msg), "step {step}: untyped error {msg:?}");
+            }
+        }
+        if (0..e.shard_count()).any(|i| e.shard_coordinator(i).breaker().state() != 0) {
+            // give a tripped breaker its cooldown so later steps probe it
+            std::thread::sleep(Duration::from_millis(40));
+        }
+    }
+    assert_eq!(ok + failed, 36, "every step must resolve one way or the other");
+    // the pending gauge is bounded by what was ever offered — an
+    // underflow would read as an astronomically large value here
+    let m = e.snapshot().0;
+    let pending = m.get("pending_points_total").unwrap().as_usize().unwrap();
+    assert!(pending <= attempted, "pending {pending} > attempted {attempted}: underflow");
+    assert_eq!(m.get("open_sessions").unwrap().as_usize(), Some(1));
+    // closing the session must release its share of the gauges exactly
+    e.session_close(sid).unwrap();
+    let m = e.snapshot().0;
+    assert_eq!(m.get("open_sessions").unwrap().as_usize(), Some(0));
+    assert_eq!(m.get("pending_points_total").unwrap().as_usize(), Some(0));
+    assert_books_balanced(&e);
+}

@@ -28,6 +28,7 @@ fn engine(shards: usize, merge_threshold: usize) -> Arc<Engine> {
                 ..Default::default()
             },
             stream: StreamConfig { merge_threshold, idle_ttl_ms: 0, ..Default::default() },
+            ..Default::default()
         })
         .unwrap(),
     )

@@ -29,6 +29,7 @@ fn start_engine(kind: BackendKind) -> Arc<Engine> {
                 ..Default::default()
             },
             stream: StreamConfig::default(),
+            ..Default::default()
         })
         .unwrap(),
     )
@@ -37,7 +38,7 @@ fn start_engine(kind: BackendKind) -> Arc<Engine> {
 fn start_event(kind: BackendKind, io_threads: usize) -> ServerHandle {
     serve_engine(
         start_engine(kind),
-        &ServerConfig { addr: "127.0.0.1:0".into(), io_threads },
+        &ServerConfig { addr: "127.0.0.1:0".into(), io_threads, ..Default::default() },
     )
     .unwrap()
 }
@@ -192,7 +193,7 @@ fn pipelined_binary_requests_answered_in_order() {
     let mut batch = Vec::new();
     for id in 1..=N {
         let points = generate(Distribution::Disk, 30 + (id % 7) as usize, id);
-        frame::encode_request(&mut batch, &Request::Hull { id, points });
+        frame::encode_request(&mut batch, &Request::Hull { id, points, tmo_ms: None });
     }
     frame::encode_request(&mut batch, &Request::Ping);
     s.write_all(&batch).unwrap();
@@ -277,6 +278,168 @@ fn threaded_shim_serves_binary_and_joins_on_stop() {
     // socket down and join the handler rather than hang
     handle.stop();
     drop(c);
+}
+
+/// Backpressure lifecycle: a client that pipelines big hull requests
+/// without reading drives the write buffer past the 1 MiB high-water
+/// (reads pause, `backpressure_stalls` increments), draining below the
+/// low-water resumes reads, every response still arrives complete and in
+/// order, and the stall is counted exactly once.
+#[test]
+fn backpressure_pause_resumes_after_drain_and_stalls_once() {
+    // 48 requests of 32k circle points (~524 KiB of response each, ~25 MiB
+    // total) overwhelm whatever the loopback kernel buffers absorb, so the
+    // write buffer must cross the high-water.  Decode is serialized behind
+    // the in-flight request, so the buffer grows one response at a time:
+    // once the drain starts, a fresh response lands in kernel space ahead
+    // of an actively reading client and the stall cannot re-fire.
+    const N: u64 = 48;
+    const PTS: usize = 1 << 15;
+    let handle = start_event(BackendKind::Native, 1);
+    let addr = handle.local_addr;
+    let s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+
+    // writer thread: the firehose must keep pushing while the test
+    // thread watches the gauge (our own writes block once the server
+    // pauses reads and the kernel buffers fill)
+    let writer = {
+        let mut s = s.try_clone().unwrap();
+        std::thread::spawn(move || {
+            for id in 1..=N {
+                let points = generate(Distribution::Circle, PTS, id);
+                let mut buf = Vec::new();
+                frame::encode_request(&mut buf, &Request::Hull { id, points, tmo_ms: None });
+                s.write_all(&buf).unwrap();
+            }
+            s.flush().unwrap();
+        })
+    };
+
+    // watch the stall fire through a second connection's STATS
+    let mut stats_c = HullClient::connect_with(addr, WireProto::Binary).unwrap();
+    stats_c.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+    let stalls = |c: &mut HullClient| -> usize {
+        let json = wagener_hull::util::json::parse(&c.stats().unwrap()).unwrap();
+        json.get("io").unwrap().get("backpressure_stalls").unwrap().as_usize().unwrap()
+    };
+    let t0 = Instant::now();
+    while stalls(&mut stats_c) == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(60),
+            "write buffer never crossed the high-water mark"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // drain: every pipelined response still arrives, complete, in order
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    for want in 1..=N {
+        match frame::read_response(&mut r).unwrap() {
+            Response::Hull { id, upper, lower, .. } => {
+                assert_eq!(id, want, "responses out of order across the stall");
+                let (u, l) = monotone_chain::full_hull(&generate(Distribution::Circle, PTS, want));
+                assert_eq!((upper, lower), (u, l), "response {want} corrupted across the stall");
+            }
+            other => panic!("request {want}: {other:?}"),
+        }
+    }
+    writer.join().unwrap();
+
+    // reads resumed: the same connection answers fresh frames
+    let mut ping = Vec::new();
+    frame::encode_request(&mut ping, &Request::Ping);
+    let mut s2 = s.try_clone().unwrap();
+    s2.write_all(&ping).unwrap();
+    s2.flush().unwrap();
+    assert_eq!(frame::read_response(&mut r).unwrap(), Response::Pong);
+
+    assert_eq!(stalls(&mut stats_c), 1, "stall must be counted exactly once");
+    stats_c.quit().unwrap();
+    handle.stop();
+}
+
+/// The abuse guard, on BOTH cores: recoverable text protocol errors are
+/// answered and the connection lives on, a good frame resets the
+/// counter, and the configured burst of consecutive errors disconnects.
+#[test]
+fn text_proto_error_storm_disconnects_after_the_configured_limit() {
+    use std::io::BufRead;
+
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_proto_errors: 3,
+        ..Default::default()
+    };
+    let cores: Vec<(&str, ServerHandle)> = vec![
+        ("event", serve_engine(start_engine(BackendKind::Serial), &cfg).unwrap()),
+        ("threaded", serve_engine_threaded(start_engine(BackendKind::Serial), &cfg).unwrap()),
+    ];
+    for (core, handle) in cores {
+        let mut s = TcpStream::connect(handle.local_addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        let mut read_line = |r: &mut BufReader<TcpStream>| {
+            line.clear();
+            r.read_line(&mut line).unwrap();
+            line.clone()
+        };
+
+        // two bad frames: answered, connection stays up (limit is 3)
+        for k in 0..2 {
+            s.write_all(b"BOGUS\n").unwrap();
+            let reply = read_line(&mut r);
+            assert!(reply.starts_with("ERR"), "{core} error {k}: {reply:?}");
+        }
+        // a recoverable mid-stream error resyncs at line granularity on
+        // the event core too, and the good frame resets the counter
+        s.write_all(b"HULL 1 abc\nPING\n").unwrap();
+        assert!(read_line(&mut r).starts_with("ERR"), "{core}: bad HULL header");
+        assert_eq!(read_line(&mut r), "PONG\n", "{core}: resync lost framing");
+
+        // three consecutive errors: each answered, then disconnected
+        s.write_all(b"BOGUS\nBOGUS\nBOGUS\n").unwrap();
+        for k in 0..3 {
+            let reply = read_line(&mut r);
+            assert!(reply.starts_with("ERR"), "{core} storm {k}: {reply:?}");
+        }
+        assert_eq!(read_line(&mut r), "", "{core}: must disconnect at the limit");
+        handle.stop();
+    }
+}
+
+/// Binary framing stays fatal on the first protocol error regardless of
+/// `max_proto_errors`: a corrupt frame is answered, then the connection
+/// closes (resync inside a length-prefixed stream is hopeless).
+#[test]
+fn binary_proto_error_is_fatal_on_first_strike() {
+    let cfg = ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_proto_errors: 8,
+        ..Default::default()
+    };
+    let cores: Vec<(&str, ServerHandle)> = vec![
+        ("event", serve_engine(start_engine(BackendKind::Serial), &cfg).unwrap()),
+        ("threaded", serve_engine_threaded(start_engine(BackendKind::Serial), &cfg).unwrap()),
+    ];
+    for (core, handle) in cores {
+        let mut s = TcpStream::connect(handle.local_addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        // valid magic + version, unknown verb 9: parseable header, bad frame
+        s.write_all(&[frame::REQ_MAGIC, frame::VERSION, 9, 7, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0])
+            .unwrap();
+        s.flush().unwrap();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        match frame::read_response(&mut r) {
+            Ok(Response::MalformedErr { .. }) => {}
+            other => panic!("{core}: wanted a malformed-frame error, got {other:?}"),
+        }
+        let mut rest = Vec::new();
+        r.read_to_end(&mut rest).unwrap();
+        assert!(rest.is_empty(), "{core}: binary error must close the connection");
+        handle.stop();
+    }
 }
 
 /// `proto` re-export sanity: the text decoder the event loop uses is

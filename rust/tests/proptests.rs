@@ -190,10 +190,7 @@ fn prop_coordinator_routing_preserves_identity() {
             let pts = generate(dist, n, rng.next_u64());
             let id = coord.next_id();
             wants.push((id, monotone_chain::full_hull(&pts)));
-            waits.push(coord.submit(wagener_hull::coordinator::HullRequest {
-                id,
-                points: pts,
-            }));
+            waits.push(coord.submit(wagener_hull::coordinator::HullRequest::new(id, pts)));
         }
         for (rx, (id, (u, l))) in waits.into_iter().zip(wants) {
             let resp = rx.recv().map_err(|_| "dropped")?.map_err(|e| e.to_string())?;
@@ -232,10 +229,7 @@ fn prop_batching_is_transparent() {
         let waits: Vec<_> = reqs
             .iter()
             .map(|p| {
-                c8.submit(wagener_hull::coordinator::HullRequest {
-                    id: c8.next_id(),
-                    points: p.clone(),
-                })
+                c8.submit(wagener_hull::coordinator::HullRequest::new(c8.next_id(), p.clone()))
             })
             .collect();
         for (rx, want) in waits.into_iter().zip(a) {
@@ -296,7 +290,7 @@ fn prop_protocol_roundtrip() {
     };
     check("proto-roundtrip", 50, |rng| {
         let pts = raw_points(rng, 50);
-        let req = Request::Hull { id: rng.next_u64(), points: pts.clone() };
+        let req = Request::Hull { id: rng.next_u64(), points: pts.clone(), tmo_ms: None };
         let mut buf = Vec::new();
         write_request(&mut buf, &req).unwrap();
         let back = read_request(&mut BufReader::new(&buf[..])).map_err(|e| e.to_string())?;
@@ -318,7 +312,7 @@ fn prop_protocol_roundtrip() {
 
         // session verbs ride the same framing
         let sid = rng.next_u64();
-        let sreq = Request::SessionAdd { sid, points: pts.clone() };
+        let sreq = Request::SessionAdd { sid, points: pts.clone(), tmo_ms: None };
         let mut buf = Vec::new();
         write_request(&mut buf, &sreq).unwrap();
         let back = read_request(&mut BufReader::new(&buf[..])).map_err(|e| e.to_string())?;

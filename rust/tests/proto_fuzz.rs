@@ -109,9 +109,9 @@ fn random_points(rng: &mut Rng, max: usize) -> Vec<Point> {
 
 fn random_request(rng: &mut Rng) -> Request {
     match rng.below(8) {
-        0 => Request::Hull { id: rng.next_u64(), points: random_points(rng, 8) },
+        0 => Request::Hull { id: rng.next_u64(), points: random_points(rng, 8), tmo_ms: None },
         1 => Request::SessionOpen { id: rng.next_u64() },
-        2 => Request::SessionAdd { sid: rng.next_u64(), points: random_points(rng, 8) },
+        2 => Request::SessionAdd { sid: rng.next_u64(), points: random_points(rng, 8), tmo_ms: None },
         3 => Request::SessionHull { sid: rng.next_u64() },
         4 => Request::SessionClose { sid: rng.next_u64() },
         5 => Request::Stats,

@@ -40,6 +40,7 @@ fn start_engine(kind: BackendKind) -> Arc<Engine> {
                 ..Default::default()
             },
             stream: StreamConfig::default(),
+            ..Default::default()
         })
         .unwrap(),
     )

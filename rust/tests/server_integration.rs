@@ -27,6 +27,7 @@ fn start_engine(kind: BackendKind, stream_cfg: StreamConfig) -> Arc<Engine> {
                 ..Default::default()
             },
             stream: stream_cfg,
+            ..Default::default()
         })
         .unwrap(),
     )

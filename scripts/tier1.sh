@@ -8,12 +8,13 @@
 # (the ROADMAP tier-1 verify), then the socket-facing suites once more
 # with ENGINE_SHARDS=4 (the sharded engine path on real sockets), then
 # fast smoke runs of bench_runtime, bench_coordinator, bench_stream,
-# bench_engine and bench_server with WAGENER_BENCH_JSON pointed at
-# BENCH_pram.json / BENCH_coordinator.json / BENCH_stream.json /
-# BENCH_engine.json / BENCH_server.json, so every PR leaves
-# machine-readable perf records (PRAM tier timings, router/worker-pool
-# throughput, streaming-session schedules, shard scaling, connection-core
-# and wire-format costs) for the next PR to compare against.  Every promised
+# bench_engine, bench_server and bench_robustness with WAGENER_BENCH_JSON
+# pointed at BENCH_pram.json / BENCH_coordinator.json / BENCH_stream.json /
+# BENCH_engine.json / BENCH_server.json / BENCH_robustness.json, so every
+# PR leaves machine-readable perf records (PRAM tier timings,
+# router/worker-pool throughput, streaming-session schedules, shard
+# scaling, connection-core and wire-format costs, overload shed/latency
+# contrasts) for the next PR to compare against.  Every promised
 # BENCH_*.json is then ASSERTED to hold at least one report (a bench that
 # skips a backend must still emit its JSON trailer — an empty trajectory
 # file means the harness regressed).
@@ -53,9 +54,12 @@ cargo test -q
 # engine_integration, which the main test run covers).  proto_parity and
 # event_loop_integration join server_integration here so both connection
 # cores and both wire formats are exercised on the sharded path too.
+# chaos_integration joins so the deterministic fault harness proves the
+# same seed → same outcomes property against a sharded engine as well.
 echo "== tier1: server suites @ ENGINE_SHARDS=4 =="
 ENGINE_SHARDS=4 cargo test -q --test server_integration \
-    --test proto_parity --test event_loop_integration
+    --test proto_parity --test event_loop_integration \
+    --test chaos_integration
 
 # A promised bench trajectory that ends up empty is a silent regression
 # (a skipping backend must still write its report); fail loudly instead.
@@ -96,6 +100,12 @@ WAGENER_BENCH_FAST=1 WAGENER_BENCH_JSON="$ROOT/BENCH_server.json" \
     cargo bench --bench bench_server
 assert_bench_written "$ROOT/BENCH_server.json"
 
+echo "== tier1: smoke bench -> BENCH_robustness.json =="
+: > "$ROOT/BENCH_robustness.json"
+WAGENER_BENCH_FAST=1 WAGENER_BENCH_JSON="$ROOT/BENCH_robustness.json" \
+    cargo bench --bench bench_robustness
+assert_bench_written "$ROOT/BENCH_robustness.json"
+
 echo "tier1 OK — bench rows:"
 cat "$ROOT/BENCH_pram.json" "$ROOT/BENCH_coordinator.json" "$ROOT/BENCH_stream.json" \
-    "$ROOT/BENCH_engine.json" "$ROOT/BENCH_server.json"
+    "$ROOT/BENCH_engine.json" "$ROOT/BENCH_server.json" "$ROOT/BENCH_robustness.json"
