@@ -42,6 +42,7 @@ fn start_engine(max_queued: usize) -> Arc<Engine> {
             },
             stream: StreamConfig::default(),
             max_queued,
+            ..Default::default()
         })
         .unwrap(),
     )

@@ -1,0 +1,182 @@
+//! E12 — durable sessions: what a checkpoint costs and what durability
+//! does to streaming throughput.
+//!
+//! Three groups:
+//!   * snapshot write latency vs session size — cold (every chunk is
+//!     new) vs warm (steady state: the content-addressed store already
+//!     holds yesterday's chunks, so the write is hash + dedup probe);
+//!   * restore latency vs session size (read + decode + verify);
+//!   * the merge-heavy schedule from E8 with checkpointing off, on a
+//!     MemStore, and on an FsStore — the end-to-end overhead a session
+//!     pays for crash durability.
+//!
+//! Run: `cargo bench --bench bench_store` (tier1.sh feeds
+//! BENCH_store.json via WAGENER_BENCH_JSON; WAGENER_BENCH_FAST=1
+//! shrinks the point counts).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use wagener_hull::benchkit::{black_box, Bencher, Report};
+use wagener_hull::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
+use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::store::{self, FsStore, MemStore, SessionState, SnapshotStore};
+use wagener_hull::stream::{SessionRegistry, StreamConfig};
+
+fn native_coord() -> Arc<Coordinator> {
+    Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            backend: BackendKind::Native,
+            ..Default::default()
+        })
+        .unwrap(),
+    )
+}
+
+/// Scratch directory for the FsStore rows, removed on drop.
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        let path = std::env::temp_dir()
+            .join(format!("wagener-bench-store-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&path);
+        std::fs::create_dir_all(&path).unwrap();
+        TempDir(path)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// Produce the realistic checkpoint state of a session that streamed
+/// `n` disk points through a merge-heavy schedule: run it for real and
+/// read back the close-time snapshot.
+fn session_state(n: usize, threshold: usize) -> SessionState {
+    let coord = native_coord();
+    let store: Arc<MemStore> = Arc::new(MemStore::new());
+    let reg = SessionRegistry::new_striped_with_store(
+        StreamConfig { merge_threshold: threshold, idle_ttl_ms: 0, ..Default::default() },
+        coord.metrics.clone(),
+        1,
+        1,
+        Some(store.clone()),
+    );
+    let pts = generate(Distribution::Disk, n, 4242);
+    let sid = reg.open().unwrap();
+    for chunk in pts.chunks(1024) {
+        reg.add(sid, chunk, &*coord).unwrap();
+    }
+    reg.close(sid, &*coord).unwrap();
+    store::read_snapshot(&*store, sid).unwrap().unwrap()
+}
+
+fn main() {
+    let b = Bencher::default();
+    let fast = std::env::var("WAGENER_BENCH_FAST").is_ok();
+    let sizes: &[usize] = if fast { &[1 << 12, 1 << 14] } else { &[1 << 12, 1 << 14, 1 << 16] };
+
+    let mut report = Report::new(
+        "E12: snapshot store — checkpoint write/restore latency vs session size",
+    );
+    for &n in sizes {
+        let state = session_state(n, 1024);
+        let report_bytes = {
+            let probe = MemStore::new();
+            store::write_snapshot(&probe, 1, &state).unwrap().bytes_written
+        };
+        report.note(format!(
+            "n={n}: hull {}+{} pts, ledger {} epochs, cold snapshot {} bytes",
+            state.upper.len(),
+            state.lower.len(),
+            state.ledger.len(),
+            report_bytes,
+        ));
+
+        // cold: every chunk is new to the store (first checkpoint ever)
+        let st = state.clone();
+        report.add(b.run(&format!("store/write_mem_cold_n{n}"), move || {
+            let fresh = MemStore::new();
+            black_box(store::write_snapshot(&fresh, 1, &st).unwrap().bytes_written)
+        }));
+
+        // warm: steady state — the previous checkpoint's chunks are
+        // already present, so writes are hash + dedup probe + manifest
+        let warm = MemStore::new();
+        store::write_snapshot(&warm, 1, &state).unwrap();
+        let st = state.clone();
+        report.add(b.run(&format!("store/write_mem_warm_n{n}"), move || {
+            black_box(store::write_snapshot(&warm, 1, &st).unwrap().bytes_written)
+        }));
+
+        // restore: manifest read + chunk fetch + integrity verify + decode
+        let full = MemStore::new();
+        store::write_snapshot(&full, 1, &state).unwrap();
+        report.add(b.run(&format!("store/restore_mem_n{n}"), move || {
+            black_box(store::read_snapshot(&full, 1).unwrap().unwrap().epoch)
+        }));
+    }
+
+    // FsStore rows at the largest size: the same write/restore but with
+    // tmp-file + fsync-less rename commit on a real filesystem
+    {
+        let n = *sizes.last().unwrap();
+        let state = session_state(n, 1024);
+        let dir = TempDir::new("latency");
+        let fs = FsStore::open(&dir.0).unwrap();
+        store::write_snapshot(&fs, 1, &state).unwrap();
+        let st = state.clone();
+        let fs2 = FsStore::open(&dir.0).unwrap();
+        report.add(b.run(&format!("store/write_fs_warm_n{n}"), move || {
+            black_box(store::write_snapshot(&fs2, 1, &st).unwrap().bytes_written)
+        }));
+        report.add(b.run(&format!("store/restore_fs_n{n}"), move || {
+            black_box(store::read_snapshot(&fs, 1).unwrap().unwrap().epoch)
+        }));
+    }
+    report.finish();
+
+    // end-to-end: the E8 merge-heavy schedule with durability off vs on
+    let n = if fast { 1 << 13 } else { 1 << 15 };
+    let pts = generate(Distribution::Disk, n, 21);
+    let mut report = Report::new(&format!(
+        "E12b: merge-heavy session (threshold=1024, disk n={n}) — checkpointing off vs on"
+    ));
+    let dir = TempDir::new("throughput");
+    let stores: [(&str, Option<Arc<dyn SnapshotStore>>); 3] = [
+        ("off", None),
+        ("mem", Some(Arc::new(MemStore::new()))),
+        ("fs", Some(Arc::new(FsStore::open(&dir.0).unwrap()))),
+    ];
+    for (label, store) in stores {
+        let coord = native_coord();
+        let reg = SessionRegistry::new_striped_with_store(
+            StreamConfig { merge_threshold: 1024, idle_ttl_ms: 0, ..Default::default() },
+            coord.metrics.clone(),
+            1,
+            1,
+            store,
+        );
+        let pts2 = pts.clone();
+        let coord2 = coord.clone();
+        report.add(b.run(&format!("store/session_checkpoint_{label}_n{n}"), move || {
+            let sid = reg.open().unwrap();
+            for chunk in pts2.chunks(1024) {
+                reg.add(sid, chunk, &*coord2).unwrap();
+            }
+            let snap = reg.hull(sid, &*coord2).unwrap();
+            reg.close(sid, &*coord2).unwrap();
+            black_box(snap.upper.len())
+        }));
+        let snap = coord.snapshot().0;
+        report.note(format!(
+            "{label}: snapshots_written={} snapshot_bytes={}",
+            snap.get("snapshots_written_total").unwrap(),
+            snap.get("snapshot_bytes_total").unwrap(),
+        ));
+    }
+    report.finish();
+}

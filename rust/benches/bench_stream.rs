@@ -62,7 +62,7 @@ fn main() {
                 registry.add(sid, chunk, &*coord2).unwrap();
             }
             let snap = registry.hull(sid, &*coord2).unwrap();
-            registry.close(sid).unwrap();
+            registry.close(sid, &*coord2).unwrap();
             black_box(snap.upper.len())
         }));
         let snap = coord.snapshot().0;

@@ -31,11 +31,15 @@
 //! max_queued = 0             # per-shard in-flight ceiling before new
 //!                            # one-shots/SADDs shed with "overloaded";
 //!                            # 0 = unbounded
+//! placement = "stripe"       # session -> shard map: stripe | ring
 //!
 //! [stream]
 //! max_sessions = 1024        # open streaming-session cap
 //! merge_threshold = 4096     # pending points that trigger a re-hull
 //! idle_ttl_ms = 60000        # idle session eviction; 0 = never
+//!
+//! [store]
+//! dir = ""                   # snapshot-store directory; "" = durability off
 //! ```
 
 use std::path::PathBuf;
@@ -43,6 +47,7 @@ use std::path::PathBuf;
 use anyhow::{anyhow, Result};
 
 use crate::coordinator::{BackendKind, CoordinatorConfig};
+use crate::engine::PlacementKind;
 use crate::pram::ExecMode;
 use crate::server::ServerConfig;
 use crate::stream::StreamConfig;
@@ -58,12 +63,23 @@ pub struct EngineSection {
     /// `SADD`s answer the typed error `overloaded` (cheapest-sibling
     /// routing is tried first).  0 = unbounded.
     pub max_queued: usize,
+    /// session -> shard map: `stripe` (PR 5's `(sid-1) % N`) or `ring`
+    /// (consistent hashing — stable under shard-count changes).
+    pub placement: PlacementKind,
 }
 
 impl Default for EngineSection {
     fn default() -> Self {
-        EngineSection { shards: 1, max_queued: 0 }
+        EngineSection { shards: 1, max_queued: 0, placement: PlacementKind::Stripe }
     }
+}
+
+/// `[store]` section: the durable snapshot store.
+#[derive(Clone, Debug, Default)]
+pub struct StoreSection {
+    /// Snapshot-store directory.  `None` (or `""` in TOML) runs without
+    /// durability: sessions live and die with the process, pre-PR 8.
+    pub dir: Option<PathBuf>,
 }
 
 /// Full launcher configuration.
@@ -73,6 +89,7 @@ pub struct Config {
     pub coordinator: CoordinatorConfig,
     pub engine: EngineSection,
     pub stream: StreamConfig,
+    pub store: StoreSection,
 }
 
 impl Config {
@@ -148,6 +165,15 @@ impl Config {
                     "engine.max_queued" => {
                         cfg.engine.max_queued = as_usize(value, &path)?;
                     }
+                    "engine.placement" => {
+                        let s = value.as_str().ok_or_else(|| anyhow!("{path}: want string"))?;
+                        cfg.engine.placement = PlacementKind::parse(s)
+                            .ok_or_else(|| anyhow!("{path}: unknown placement {s:?}"))?;
+                    }
+                    "store.dir" => {
+                        let s = value.as_str().ok_or_else(|| anyhow!("{path}: want string"))?;
+                        cfg.store.dir = (!s.is_empty()).then(|| PathBuf::from(s));
+                    }
                     "stream.max_sessions" => {
                         cfg.stream.max_sessions = as_usize(value, &path)?.max(1);
                     }
@@ -206,10 +232,13 @@ breaker_cooldown_ms = 125
 [engine]
 shards = 3
 max_queued = 64
+placement = "ring"
 [stream]
 max_sessions = 9
 merge_threshold = 128
 idle_ttl_ms = 2500
+[store]
+dir = "/tmp/snaps"
 "#,
         )
         .unwrap();
@@ -229,6 +258,8 @@ idle_ttl_ms = 2500
         assert_eq!(cfg.coordinator.breaker_cooldown_ms, 125);
         assert_eq!(cfg.engine.shards, 3);
         assert_eq!(cfg.engine.max_queued, 64);
+        assert_eq!(cfg.engine.placement, PlacementKind::Ring);
+        assert_eq!(cfg.store.dir, Some(PathBuf::from("/tmp/snaps")));
         assert_eq!(cfg.stream.max_sessions, 9);
         assert_eq!(cfg.stream.merge_threshold, 128);
         assert_eq!(cfg.stream.idle_ttl_ms, 2500);
@@ -251,6 +282,8 @@ idle_ttl_ms = 2500
         assert_eq!(cfg.stream.max_sessions, 1024);
         assert_eq!(cfg.stream.merge_threshold, 4096);
         assert_eq!(cfg.stream.idle_ttl_ms, 60_000);
+        assert_eq!(cfg.engine.placement, PlacementKind::Stripe); // ring is opt-in
+        assert_eq!(cfg.store.dir, None); // durability is opt-in
     }
 
     #[test]
@@ -267,6 +300,12 @@ idle_ttl_ms = 2500
         assert!(Config::from_toml("[coordinator]\nthreads = 4").is_err());
         assert!(Config::from_toml("[engine]\nshards = -2").is_err());
         assert!(Config::from_toml("[engine]\npools = 4").is_err());
+        assert!(Config::from_toml("[engine]\nplacement = \"rendezvous\"").is_err());
+        assert!(Config::from_toml("[store]\ndir = 7").is_err());
+        assert!(Config::from_toml("[store]\npath = \"x\"").is_err());
+        // empty dir string means "durability off", not a cwd store
+        let cfg = Config::from_toml("[store]\ndir = \"\"").unwrap();
+        assert_eq!(cfg.store.dir, None);
         assert!(Config::from_toml("[stream]\nmax_sessions = \"many\"").is_err());
         assert!(Config::from_toml("[stream]\nttl = 5").is_err());
         // 0 is clamped to 1 (a session must merge eventually), ttl 0 = off

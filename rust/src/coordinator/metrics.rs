@@ -194,6 +194,14 @@ pub struct Metrics {
     pub session_evictions: AtomicU64,
     /// wall time of each incremental merge (backend round-trip included).
     pub session_merge_latency: Histogram,
+    // ---- durable sessions (snapshot store) ----
+    /// session snapshots committed to the store (merge, close, evict).
+    pub snapshots_written: AtomicU64,
+    /// sessions restored from the store by `SOPEN <sid>`.
+    pub restores: AtomicU64,
+    /// bytes actually written to the store (new chunks + manifests;
+    /// deduplicated chunks cost nothing).
+    pub snapshot_bytes: AtomicU64,
 }
 
 /// A point-in-time copy, JSON-serializable for the STATS endpoint.
@@ -244,6 +252,9 @@ impl Metrics {
             session_merges: g(&self.session_merges),
             session_evictions: g(&self.session_evictions),
             session_merge_latency: self.session_merge_latency.snap(),
+            snapshots_written: g(&self.snapshots_written),
+            restores: g(&self.restores),
+            snapshot_bytes: g(&self.snapshot_bytes),
         }
     }
 
@@ -286,6 +297,9 @@ pub struct MetricsFrame {
     pub session_merges: u64,
     pub session_evictions: u64,
     pub session_merge_latency: HistogramSnapshot,
+    pub snapshots_written: u64,
+    pub restores: u64,
+    pub snapshot_bytes: u64,
 }
 
 impl MetricsFrame {
@@ -315,6 +329,9 @@ impl MetricsFrame {
         self.session_merges += other.session_merges;
         self.session_evictions += other.session_evictions;
         self.session_merge_latency.merge(&other.session_merge_latency);
+        self.snapshots_written += other.snapshots_written;
+        self.restores += other.restores;
+        self.snapshot_bytes += other.snapshot_bytes;
     }
 
     /// One-shot requests currently in flight (submitted, not yet answered
@@ -357,6 +374,9 @@ impl MetricsFrame {
             ("merges_total", n(self.session_merges)),
             ("session_evictions", n(self.session_evictions)),
             ("session_merge_latency", self.session_merge_latency.to_json()),
+            ("snapshots_written_total", n(self.snapshots_written)),
+            ("restores_total", n(self.restores)),
+            ("snapshot_bytes_total", n(self.snapshot_bytes)),
         ])
     }
 }
@@ -523,6 +543,25 @@ mod tests {
         assert_eq!(j.get("shed_total").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("retries_total").unwrap().as_usize(), Some(1));
         assert_eq!(j.get("breaker_state").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn snapshot_counters_merge_and_serialize() {
+        let a = Metrics::default();
+        let b = Metrics::default();
+        Metrics::add(&a.snapshots_written, 2);
+        Metrics::inc(&b.restores);
+        Metrics::add(&a.snapshot_bytes, 640);
+        Metrics::add(&b.snapshot_bytes, 360);
+        let mut merged = a.frame();
+        merged.merge(&b.frame());
+        assert_eq!(merged.snapshots_written, 2);
+        assert_eq!(merged.restores, 1);
+        assert_eq!(merged.snapshot_bytes, 1000);
+        let j = crate::util::json::parse(&merged.to_json().to_string()).unwrap();
+        assert_eq!(j.get("snapshots_written_total").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("restores_total").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("snapshot_bytes_total").unwrap().as_usize(), Some(1000));
     }
 
     #[test]

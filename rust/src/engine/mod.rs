@@ -35,8 +35,11 @@
 //! server: same coordinator, same registry, same wire bytes — the entire
 //! pre-existing integration suite runs unmodified against it.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+pub mod placement;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, PoisonError, RwLock};
 use std::time::Instant;
 
 use crate::coordinator::{
@@ -44,13 +47,17 @@ use crate::coordinator::{
     IoMetrics, Metrics, MetricsFrame, MetricsSnapshot, RequestError,
 };
 use crate::geometry::point::Point;
+use crate::log_warn;
+use crate::store::{self, SessionState, SnapshotStore};
 use crate::stream::{
     AddOutcome, SessionError, SessionHullSnapshot, SessionRegistry, StreamConfig,
 };
 use crate::util::json::Json;
 
+pub use placement::{Placement, PlacementKind, Ring, Stripe};
+
 /// Engine configuration (config file: `[engine]`).
-#[derive(Clone, Debug)]
+#[derive(Clone)]
 pub struct EngineConfig {
     /// coordinator-shard count; 0 = auto.  Auto resolves to 1 for the
     /// `pjrt` backend (each shard's workers load the artifact registry —
@@ -72,6 +79,27 @@ pub struct EngineConfig {
     /// requests and `SADD`s answer `overloaded` immediately instead of
     /// queueing (load shedding — see `shed_total`).
     pub max_queued: usize,
+    /// sid → shard routing policy (config: `[engine] placement`); see
+    /// [`placement`] for the two implementations.
+    pub placement: PlacementKind,
+    /// snapshot store (config: `[store] dir`): sessions checkpoint on
+    /// merge/close/evict/shutdown, `SOPEN <sid>` restores, and rebalance
+    /// has a durable fallback.  `None` = sessions are memory-only
+    /// (pre-PR 8 behaviour).
+    pub store: Option<Arc<dyn SnapshotStore>>,
+}
+
+impl std::fmt::Debug for EngineConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EngineConfig")
+            .field("shards", &self.shards)
+            .field("coordinator", &self.coordinator)
+            .field("stream", &self.stream)
+            .field("max_queued", &self.max_queued)
+            .field("placement", &self.placement)
+            .field("store", &self.store.is_some())
+            .finish()
+    }
 }
 
 impl Default for EngineConfig {
@@ -81,6 +109,8 @@ impl Default for EngineConfig {
             coordinator: CoordinatorConfig::default(),
             stream: StreamConfig::default(),
             max_queued: 0,
+            placement: PlacementKind::Stripe,
+            store: None,
         }
     }
 }
@@ -127,6 +157,29 @@ pub struct Engine {
     max_points: usize,
     /// per-shard admission ceiling (0 = unbounded).
     max_queued: usize,
+    /// sid → shard routing policy (pure function of the sid).
+    placement: Box<dyn Placement>,
+    /// sessions routed away from their designated shard (capacity spill
+    /// at open, explicit [`Engine::rebalance`]).  `rebalance` holds the
+    /// WRITE lock across the whole detach + install move, so any op that
+    /// reads the routing mid-move blocks until the session has landed.
+    overrides: RwLock<HashMap<u64, usize>>,
+    /// engine-global sid allocator for [`PlacementKind::Ring`] (stripe
+    /// placement keeps the per-registry striped allocators): hands out
+    /// 1, 2, 3, … — the exact sequence a 1-shard engine produces, which
+    /// is what the shards=1 vs shards=N parity gates compare against.
+    next_sid: AtomicU64,
+    /// snapshot store for `SOPEN <sid>` restores + rebalance fallback
+    /// (the per-shard registries hold their own clones for checkpoints).
+    store: Option<Arc<dyn SnapshotStore>>,
+}
+
+fn read_lock<T>(l: &RwLock<T>) -> std::sync::RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn write_lock<T>(l: &RwLock<T>) -> std::sync::RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
 }
 
 impl Engine {
@@ -162,11 +215,12 @@ impl Engine {
                         + usize::from(i < stream.max_sessions % n),
                     ..stream.clone()
                 };
-                let registry = Arc::new(SessionRegistry::new_striped(
+                let registry = Arc::new(SessionRegistry::new_striped_with_store(
                     slice,
                     coordinator.metrics.clone(),
                     i as u64 + 1,
                     n as u64,
+                    cfg.store.clone(),
                 ));
                 Shard { coordinator, registry }
             })
@@ -177,6 +231,10 @@ impl Engine {
             max_sessions_total: stream.max_sessions,
             max_points,
             max_queued: cfg.max_queued,
+            placement: cfg.placement.build(n),
+            overrides: RwLock::new(HashMap::new()),
+            next_sid: AtomicU64::new(1),
+            store: cfg.store,
         })
     }
 
@@ -187,12 +245,17 @@ impl Engine {
     pub fn single(coordinator: Arc<Coordinator>, registry: Arc<SessionRegistry>) -> Engine {
         let max_points = coordinator.max_points();
         let max_sessions_total = registry.max_sessions();
+        let store = registry.store();
         Engine {
             shards: vec![Shard { coordinator, registry }],
             rr: AtomicUsize::new(0),
             max_sessions_total,
             max_points,
             max_queued: 0,
+            placement: PlacementKind::Stripe.build(1),
+            overrides: RwLock::new(HashMap::new()),
+            next_sid: AtomicU64::new(1),
+            store,
         }
     }
 
@@ -253,13 +316,46 @@ impl Engine {
         }
     }
 
-    /// The shard a sid is pinned to for its lifetime: `(sid - 1) % N`
-    /// inverts the striped allocation.  Unknown sids (including 0, never
-    /// allocated) still land deterministically on some shard, which
-    /// answers `unknown-session` exactly like a standalone registry.
-    fn shard_for_sid(&self, sid: u64) -> &Shard {
-        let n = self.shards.len() as u64;
-        &self.shards[(sid.wrapping_sub(1) % n) as usize]
+    /// The shard a sid routes to *right now*: the rebalance override map
+    /// first (read lock — blocks while a rebalance is mid-move), then the
+    /// placement function.  Unknown sids (including 0, never allocated)
+    /// still land deterministically on some shard, which answers
+    /// `unknown-session` exactly like a standalone registry.
+    fn shard_index_for_sid(&self, sid: u64) -> usize {
+        if self.shards.len() == 1 {
+            return 0;
+        }
+        if let Some(&i) = read_lock(&self.overrides).get(&sid) {
+            return i;
+        }
+        self.placement.shard_for(sid)
+    }
+
+    /// Run a session op against the sid's current shard, retrying when
+    /// the routing changed underneath it.  A rebalance detaches the
+    /// session (ops racing in see `unknown-session` from the donor shard)
+    /// while holding the override write lock; re-reading the routing
+    /// blocks on that lock until the move lands, and the op retries only
+    /// if the answer actually changed — a genuinely unknown sid still
+    /// errors on the first pass.
+    fn with_routing<T>(
+        &self,
+        sid: u64,
+        mut op: impl FnMut(&Shard) -> Result<T, SessionError>,
+    ) -> Result<T, SessionError> {
+        let mut idx = self.shard_index_for_sid(sid);
+        loop {
+            match op(&self.shards[idx]) {
+                Err(SessionError::UnknownSession) => {
+                    let now = self.shard_index_for_sid(sid);
+                    if now == idx {
+                        return Err(SessionError::UnknownSession);
+                    }
+                    idx = now;
+                }
+                r => return r,
+            }
+        }
     }
 
     // ----------------------------------------------------------- one-shot
@@ -304,11 +400,22 @@ impl Engine {
 
     // ----------------------------------------------------------- sessions
 
-    /// `SOPEN`: place the session on the shard with the most free
-    /// capacity (ties broken by shard order), falling back through the
-    /// rest; only when every shard is full does the global cap error
-    /// surface.  The returned sid routes all later verbs to that shard.
+    /// `SOPEN`: open a fresh session.
+    ///
+    /// * **Stripe** — place on the shard with the most free capacity
+    ///   (ties broken by shard order), falling back through the rest;
+    ///   the shard's striped allocator picks the sid.  PR 5 behaviour,
+    ///   unchanged.
+    /// * **Ring** — allocate the next engine-global sid (1, 2, 3, …) and
+    ///   install it on its ring-designated shard, spilling clockwise to
+    ///   ring successors when that shard is full (recorded as a routing
+    ///   override so later verbs find it).
+    ///
+    /// Only when every shard is full does the global cap error surface.
     pub fn session_open(&self) -> Result<u64, SessionError> {
+        if self.placement.kind() == PlacementKind::Ring {
+            return self.session_open_ring();
+        }
         if self.shards.len() == 1 {
             return self.shards[0].registry.open();
         }
@@ -325,6 +432,95 @@ impl Engine {
             }
         }
         Err(SessionError::Capacity { max: self.max_sessions_total })
+    }
+
+    fn session_open_ring(&self) -> Result<u64, SessionError> {
+        let sid = self.next_sid.fetch_add(1, Ordering::Relaxed);
+        let fresh = SessionState {
+            merge_threshold: self.shards[0].registry.merge_threshold(),
+            ..SessionState::default()
+        };
+        let order = self.placement.order_for(sid);
+        let designated = order[0];
+        for &i in &order {
+            match self.shards[i].registry.install(sid, fresh.clone()) {
+                Ok(()) => {
+                    if i != designated {
+                        write_lock(&self.overrides).insert(sid, i);
+                    }
+                    return Ok(sid);
+                }
+                Err(SessionError::Capacity { .. }) => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Err(SessionError::Capacity { max: self.max_sessions_total })
+    }
+
+    /// `SOPEN <sid>`: restore a snapshotted session at its original sid —
+    /// the durable-session half of open.  Answers `unknown-session` when
+    /// no store is configured or the store has no manifest for the sid,
+    /// `session already open` when it is currently live, and the typed
+    /// `snapshot-corrupt` / `snapshot-io` errors when the stored bytes
+    /// fail verification.  The restored hull, pending buffer, epoch and
+    /// ledger are bit-identical to the last checkpoint.
+    pub fn session_restore(&self, sid: u64) -> Result<u64, SessionError> {
+        let Some(st) = &self.store else {
+            return Err(SessionError::UnknownSession);
+        };
+        if sid == 0 {
+            return Err(SessionError::UnknownSession);
+        }
+        let idx = self.shard_index_for_sid(sid);
+        let shard = &self.shards[idx];
+        let state = store::read_snapshot(st.as_ref(), sid)
+            .map_err(SessionError::Snapshot)?
+            .ok_or(SessionError::UnknownSession)?;
+        shard.registry.install(sid, state)?;
+        // a restored sid must never be re-issued by a later fresh open
+        self.next_sid.fetch_max(sid + 1, Ordering::Relaxed);
+        Metrics::inc(&shard.coordinator.metrics.restores);
+        Ok(sid)
+    }
+
+    /// Move a live session to another shard: detach from its current
+    /// home, install on `target`, and record the routing override (or
+    /// clear it when the move lands the session back on its designated
+    /// shard).  The override write lock is held across the whole move, so
+    /// concurrent verbs for the sid block in [`Engine::with_routing`]'s
+    /// re-route read rather than observing the gap; nothing about the
+    /// session's hull, epoch, or accounting changes — the PR 5 parity
+    /// gates hold across an arbitrary interleaving of rebalances.
+    pub fn rebalance(&self, sid: u64, target: usize) -> Result<(), SessionError> {
+        assert!(target < self.shards.len(), "rebalance target out of range");
+        let mut ov = write_lock(&self.overrides);
+        let src = ov.get(&sid).copied().unwrap_or_else(|| self.placement.shard_for(sid));
+        if src == target {
+            return Ok(());
+        }
+        let state = self.shards[src].registry.detach(sid)?;
+        if let Err(e) = self.shards[target].registry.install(sid, state.clone()) {
+            // the move failed; the session must survive.  Its old slot
+            // can have been claimed by a racing open, so fall back to the
+            // durable store if re-install also refuses.
+            if self.shards[src].registry.install(sid, state.clone()).is_err() {
+                match &self.store {
+                    Some(st) => {
+                        if let Err(e2) = store::write_snapshot(st.as_ref(), sid, &state) {
+                            log_warn!("session {sid}: lost in failed rebalance: {e2}");
+                        }
+                    }
+                    None => log_warn!("session {sid}: lost in failed rebalance (no store)"),
+                }
+            }
+            return Err(e);
+        }
+        if self.placement.shard_for(sid) == target {
+            ov.remove(&sid);
+        } else {
+            ov.insert(sid, target);
+        }
+        Ok(())
     }
 
     /// `SADD` on the owning shard (its registry, its backend pool).
@@ -345,29 +541,47 @@ impl Engine {
         points: &[Point],
         deadline: Option<Instant>,
     ) -> Result<AddOutcome, SessionError> {
-        let shard = self.shard_for_sid(sid);
-        if deadline.is_some_and(|d| Instant::now() >= d) {
-            Metrics::inc(&shard.coordinator.metrics.deadline_exceeded);
-            return Err(SessionError::Request(RequestError::DeadlineExceeded));
-        }
-        if self.max_queued != 0
-            && shard.coordinator.metrics.in_flight() >= self.max_queued as u64
-        {
-            Metrics::inc(&shard.coordinator.metrics.shed);
-            return Err(SessionError::Request(RequestError::Overloaded));
-        }
-        shard.registry.add(sid, points, &*shard.coordinator)
+        self.with_routing(sid, |shard| {
+            if deadline.is_some_and(|d| Instant::now() >= d) {
+                Metrics::inc(&shard.coordinator.metrics.deadline_exceeded);
+                return Err(SessionError::Request(RequestError::DeadlineExceeded));
+            }
+            if self.max_queued != 0
+                && shard.coordinator.metrics.in_flight() >= self.max_queued as u64
+            {
+                Metrics::inc(&shard.coordinator.metrics.shed);
+                return Err(SessionError::Request(RequestError::Overloaded));
+            }
+            shard.registry.add(sid, points, &*shard.coordinator)
+        })
     }
 
     /// `SHULL` on the owning shard (flushes pending first).
     pub fn session_hull(&self, sid: u64) -> Result<SessionHullSnapshot, SessionError> {
-        let shard = self.shard_for_sid(sid);
-        shard.registry.hull(sid, &*shard.coordinator)
+        self.session_hull_at(sid, None)
     }
 
-    /// `SCLOSE` on the owning shard.
+    /// `SHULL <sid> [<epoch>]`: the live hull (flushing pending) when
+    /// `epoch` is `None`, or the immutable historical hull as of the
+    /// requested epoch from the session's ledger (no flush — a past
+    /// epoch cannot change).  Epoch 0 is the empty hull every session
+    /// starts from; an epoch beyond the session's current one answers
+    /// `unknown-epoch`.
+    pub fn session_hull_at(
+        &self,
+        sid: u64,
+        epoch: Option<u64>,
+    ) -> Result<SessionHullSnapshot, SessionError> {
+        self.with_routing(sid, |shard| match epoch {
+            None => shard.registry.hull(sid, &*shard.coordinator),
+            Some(e) => shard.registry.hull_at(sid, e),
+        })
+    }
+
+    /// `SCLOSE` on the owning shard: flushes (the final merge), writes a
+    /// last checkpoint when a store is configured, then unregisters.
     pub fn session_close(&self, sid: u64) -> Result<(), SessionError> {
-        self.shard_for_sid(sid).registry.close(sid)
+        self.with_routing(sid, |shard| shard.registry.close(sid, &*shard.coordinator))
     }
 
     /// Open sessions across every shard.
@@ -435,6 +649,17 @@ impl Engine {
         self.shards.len()
     }
 
+    /// The routing policy in force.
+    pub fn placement_kind(&self) -> PlacementKind {
+        self.placement.kind()
+    }
+
+    /// The sid's current shard index (overrides included) — tests,
+    /// affinity checks, rebalance tooling.
+    pub fn shard_of(&self, sid: u64) -> usize {
+        self.shard_index_for_sid(sid)
+    }
+
     /// Shard `i`'s coordinator (tests, benches, affinity checks).
     pub fn shard_coordinator(&self, i: usize) -> &Arc<Coordinator> {
         &self.shards[i].coordinator
@@ -490,6 +715,28 @@ mod tests {
             },
             stream: StreamConfig { max_sessions, idle_ttl_ms: 0, ..Default::default() },
             max_queued,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    fn engine_placed(
+        shards: usize,
+        max_sessions: usize,
+        placement: PlacementKind,
+        store: Option<Arc<dyn crate::store::SnapshotStore>>,
+    ) -> Engine {
+        Engine::start(EngineConfig {
+            shards,
+            coordinator: CoordinatorConfig {
+                backend: BackendKind::Serial,
+                workers: 1,
+                ..Default::default()
+            },
+            stream: StreamConfig { max_sessions, idle_ttl_ms: 0, ..Default::default() },
+            max_queued: 0,
+            placement,
+            store,
         })
         .unwrap()
     }
@@ -677,6 +924,148 @@ mod tests {
         drain_fake(&e, 0, 1);
         e.session_add(sid, &pts).unwrap();
         e.session_close(sid).unwrap();
+    }
+
+    // ------------------------------------- placement, rebalance, restore
+
+    #[test]
+    fn ring_allocates_sequential_sids_and_routes_back() {
+        let e = engine_placed(4, 100, PlacementKind::Ring, None);
+        assert_eq!(e.placement_kind(), PlacementKind::Ring);
+        for expect in 1..=12u64 {
+            let sid = e.session_open().unwrap();
+            assert_eq!(sid, expect, "ring sids are the global 1,2,3,… sequence");
+            let owner = e.shard_of(sid);
+            assert_eq!(
+                e.shard_registry(owner).open_sessions()
+                    + (0..4)
+                        .filter(|&i| i != owner)
+                        .map(|i| e.shard_registry(i).open_sessions())
+                        .sum::<usize>(),
+                expect as usize
+            );
+            e.session_add(sid, &[crate::geometry::point::Point::new(0.25, 0.75)])
+                .unwrap();
+        }
+        assert_eq!(e.open_sessions(), 12);
+        // routing really is the ring function: each sid's verbs landed on
+        // the shard the ring designates
+        for sid in 1..=12u64 {
+            let snap = e.session_hull(sid).unwrap();
+            assert_eq!(snap.epoch, 1, "sid {sid} flushed exactly once");
+            e.session_close(sid).unwrap();
+        }
+        assert_eq!(e.open_sessions(), 0);
+    }
+
+    #[test]
+    fn ring_spills_to_successor_when_designated_shard_is_full() {
+        // 2 shards, global cap 2 → 1 slot each.  Opening 2 sessions must
+        // succeed regardless of which shards the ring designates; at
+        // least one lives off its designated shard iff both hash to the
+        // same shard — and verbs still find every session.
+        let e = engine_placed(2, 2, PlacementKind::Ring, None);
+        let a = e.session_open().unwrap();
+        let b = e.session_open().unwrap();
+        assert_eq!(e.open_sessions(), 2);
+        assert_ne!(e.shard_of(a), e.shard_of(b), "1-slot shards force a spread");
+        for sid in [a, b] {
+            e.session_add(sid, &[crate::geometry::point::Point::new(0.5, 0.25)])
+                .unwrap();
+            e.session_close(sid).unwrap();
+        }
+        let err = {
+            let c = e.session_open().unwrap();
+            let d = e.session_open().unwrap();
+            let err = e.session_open().unwrap_err();
+            let _ = (c, d);
+            err
+        };
+        assert_eq!(err, SessionError::Capacity { max: 2 });
+    }
+
+    #[test]
+    fn rebalance_is_invisible_to_the_session() {
+        let e = engine(2, 10);
+        let sid = e.session_open().unwrap();
+        let pts = generate(Distribution::Circle, 300, 42);
+        let (first, rest) = pts.split_at(130);
+        e.session_add(sid, first).unwrap();
+        let home = e.shard_of(sid);
+        let away = 1 - home;
+        e.rebalance(sid, away).unwrap();
+        assert_eq!(e.shard_of(sid), away);
+        // gauges moved with the session
+        assert_eq!(e.shard_registry(away).open_sessions(), 1);
+        assert_eq!(e.shard_registry(home).open_sessions(), 0);
+        e.session_add(sid, rest).unwrap();
+        let snap = e.session_hull(sid).unwrap();
+        let (u, l) = crate::serial::monotone_chain::full_hull(&pts);
+        assert_eq!(snap.upper, u);
+        assert_eq!(snap.lower, l);
+        // moving back to the designated shard clears the override
+        e.rebalance(sid, home).unwrap();
+        assert!(read_lock(&e.overrides).is_empty());
+        e.session_close(sid).unwrap();
+        assert_eq!(e.session_hull(sid).unwrap_err(), SessionError::UnknownSession);
+    }
+
+    #[test]
+    fn rebalance_of_unknown_sid_and_same_shard_are_exact() {
+        let e = engine(2, 10);
+        assert_eq!(e.rebalance(999, 1).unwrap_err(), SessionError::UnknownSession);
+        let sid = e.session_open().unwrap();
+        let here = e.shard_of(sid);
+        e.rebalance(sid, here).unwrap(); // no-op, not an error
+        assert_eq!(e.shard_of(sid), here);
+    }
+
+    #[test]
+    fn restore_after_engine_restart_is_bit_identical() {
+        use crate::store::MemStore;
+        let store: Arc<MemStore> = Arc::new(MemStore::new());
+        let pts = generate(Distribution::Disk, 400, 7);
+        let (before, after) = pts.split_at(250);
+        let (sid, hull_mid) = {
+            let e = engine_placed(2, 10, PlacementKind::Stripe, Some(store.clone()));
+            let sid = e.session_open().unwrap();
+            e.session_add(sid, before).unwrap();
+            let snap = e.session_hull(sid).unwrap();
+            (sid, snap)
+            // engine drops here: clean-shutdown checkpoint
+        };
+        let e = engine_placed(2, 10, PlacementKind::Stripe, Some(store.clone()));
+        assert_eq!(e.open_sessions(), 0);
+        assert_eq!(e.session_restore(sid).unwrap(), sid);
+        let snap = e.session_hull(sid).unwrap();
+        assert_eq!(snap.epoch, hull_mid.epoch);
+        assert_eq!(snap.upper, hull_mid.upper);
+        assert_eq!(snap.lower, hull_mid.lower);
+        // the continued session converges on the same hull as one that
+        // never restarted
+        e.session_add(sid, after).unwrap();
+        let fin = e.session_hull(sid).unwrap();
+        let (u, l) = crate::serial::monotone_chain::full_hull(&pts);
+        assert_eq!(fin.upper, u);
+        assert_eq!(fin.lower, l);
+        // restoring a live session is a typed error, not a duplicate
+        assert_eq!(e.session_restore(sid).unwrap_err(), SessionError::AlreadyOpen);
+        // restored sids are fenced off from fresh allocation
+        let fresh = e.session_open().unwrap();
+        assert_ne!(fresh, sid);
+        let snap = e.snapshot().0;
+        assert_eq!(snap.get("restores_total").unwrap().as_usize(), Some(1));
+        assert!(snap.get("snapshots_written_total").unwrap().as_usize().unwrap() >= 1);
+    }
+
+    #[test]
+    fn restore_without_store_or_snapshot_is_unknown_session() {
+        let e = engine(2, 10);
+        assert_eq!(e.session_restore(42).unwrap_err(), SessionError::UnknownSession);
+        let store: Arc<crate::store::MemStore> = Arc::new(crate::store::MemStore::new());
+        let e = engine_placed(2, 10, PlacementKind::Stripe, Some(store));
+        assert_eq!(e.session_restore(42).unwrap_err(), SessionError::UnknownSession);
+        assert_eq!(e.session_restore(0).unwrap_err(), SessionError::UnknownSession);
     }
 
     #[test]

@@ -1,0 +1,274 @@
+//! Pluggable sid → shard placement.
+//!
+//! PR 5 hard-wired the session routing function into the engine:
+//! `(sid - 1) % N` inverts the striped allocation, so a sid names its
+//! shard forever.  That coupling blocks two things the durable-session
+//! work needs: moving a live session between shards (rebalance) and
+//! routing policies whose assignment survives a change in shard count
+//! better than striping does.  This module extracts the routing decision
+//! behind the [`Placement`] trait:
+//!
+//! * [`Stripe`] — the PR 5 function, still the default.  Sids are
+//!   allocated striped per shard (shard `i` of `N` hands out sids
+//!   `≡ i+1 (mod N)`), and `(sid - 1) % N` routes them back.
+//! * [`Ring`] — a consistent-hash ring with virtual nodes.  Sids are
+//!   allocated from one engine-global counter (1, 2, 3, … — the same
+//!   sequence a 1-shard engine produces, which is what keeps the
+//!   shards=1 vs shards=N parity gates meaningful under both
+//!   placements), and each sid's designated shard is the ring successor
+//!   of its hash.  `VNODES` virtual nodes per shard smooth the split.
+//!
+//! Either way the placement is a *pure function* of the sid — the engine
+//! layers an override map on top for sessions moved by
+//! [`crate::engine::Engine::rebalance`].
+
+/// Virtual nodes per shard on the [`Ring`]: enough that the largest
+/// shard's share of the keyspace stays within a few percent of 1/N.
+pub const VNODES: usize = 64;
+
+/// Which placement policy to build (config: `[engine] placement`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PlacementKind {
+    #[default]
+    Stripe,
+    Ring,
+}
+
+impl PlacementKind {
+    pub fn parse(s: &str) -> Option<PlacementKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "stripe" => Some(PlacementKind::Stripe),
+            "ring" => Some(PlacementKind::Ring),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PlacementKind::Stripe => "stripe",
+            PlacementKind::Ring => "ring",
+        }
+    }
+
+    /// Placement for tests/tools honoring the `ENGINE_PLACEMENT`
+    /// environment variable (tier1 exports `ENGINE_PLACEMENT=ring` to run
+    /// the restart suite against ring routing).
+    pub fn from_env(default: PlacementKind) -> PlacementKind {
+        std::env::var("ENGINE_PLACEMENT")
+            .ok()
+            .and_then(|s| PlacementKind::parse(&s))
+            .unwrap_or(default)
+    }
+
+    pub fn build(self, shards: usize) -> Box<dyn Placement> {
+        match self {
+            PlacementKind::Stripe => Box::new(Stripe::new(shards)),
+            PlacementKind::Ring => Box::new(Ring::new(shards, VNODES)),
+        }
+    }
+}
+
+/// A deterministic sid → shard assignment.  Implementations are pure
+/// (no interior state), so every caller computes the same answer and the
+/// engine's rebalance overrides are the only source of divergence.
+pub trait Placement: Send + Sync {
+    fn kind(&self) -> PlacementKind;
+
+    /// The designated shard for `sid`, in `0..shards`.
+    fn shard_for(&self, sid: u64) -> usize;
+
+    /// Fallback order when the designated shard has no capacity: every
+    /// shard exactly once, designated first.  For the ring this walks
+    /// successors clockwise, so a full shard spills to its ring
+    /// neighbour — the same shard that would own the sid if the full one
+    /// left the ring.
+    fn order_for(&self, sid: u64) -> Vec<usize>;
+}
+
+/// PR 5's striped routing: `(sid - 1) % N`.
+pub struct Stripe {
+    shards: usize,
+}
+
+impl Stripe {
+    pub fn new(shards: usize) -> Stripe {
+        assert!(shards > 0, "placement over zero shards");
+        Stripe { shards }
+    }
+}
+
+impl Placement for Stripe {
+    fn kind(&self) -> PlacementKind {
+        PlacementKind::Stripe
+    }
+
+    fn shard_for(&self, sid: u64) -> usize {
+        (sid.wrapping_sub(1) % self.shards as u64) as usize
+    }
+
+    fn order_for(&self, sid: u64) -> Vec<usize> {
+        let d = self.shard_for(sid);
+        (0..self.shards).map(|k| (d + k) % self.shards).collect()
+    }
+}
+
+/// SplitMix64 finalizer: cheap, well-mixed, and stable across platforms
+/// — the ring layout must be identical in every process that computes it.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Consistent-hash ring: each shard contributes `vnodes` points at
+/// `mix64(shard << 32 | v)`; a sid belongs to the first point clockwise
+/// from `mix64(sid)` (wrapping).
+pub struct Ring {
+    shards: usize,
+    /// (position, shard), sorted by position.
+    points: Vec<(u64, usize)>,
+}
+
+impl Ring {
+    pub fn new(shards: usize, vnodes: usize) -> Ring {
+        assert!(shards > 0, "placement over zero shards");
+        assert!(vnodes > 0, "ring needs at least one vnode per shard");
+        let mut points = Vec::with_capacity(shards * vnodes);
+        for shard in 0..shards {
+            for v in 0..vnodes {
+                points.push((mix64((shard as u64) << 32 | v as u64), shard));
+            }
+        }
+        points.sort_unstable();
+        Ring { shards, points }
+    }
+
+    /// Index into `points` of the successor of hash `h` (wrapping).
+    fn successor(&self, h: u64) -> usize {
+        match self.points.binary_search(&(h, usize::MAX)) {
+            Ok(i) => i,
+            Err(i) if i == self.points.len() => 0,
+            Err(i) => i,
+        }
+    }
+}
+
+impl Placement for Ring {
+    fn kind(&self) -> PlacementKind {
+        PlacementKind::Ring
+    }
+
+    fn shard_for(&self, sid: u64) -> usize {
+        self.points[self.successor(mix64(sid))].1
+    }
+
+    fn order_for(&self, sid: u64) -> Vec<usize> {
+        let start = self.successor(mix64(sid));
+        let mut seen = vec![false; self.shards];
+        let mut order = Vec::with_capacity(self.shards);
+        for k in 0..self.points.len() {
+            let shard = self.points[(start + k) % self.points.len()].1;
+            if !seen[shard] {
+                seen[shard] = true;
+                order.push(shard);
+                if order.len() == self.shards {
+                    break;
+                }
+            }
+        }
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parses_and_names() {
+        assert_eq!(PlacementKind::parse("stripe"), Some(PlacementKind::Stripe));
+        assert_eq!(PlacementKind::parse("RING"), Some(PlacementKind::Ring));
+        assert_eq!(PlacementKind::parse("hash"), None);
+        assert_eq!(PlacementKind::Ring.name(), "ring");
+        assert_eq!(PlacementKind::default(), PlacementKind::Stripe);
+    }
+
+    #[test]
+    fn stripe_matches_pr5_routing() {
+        let p = Stripe::new(4);
+        for sid in 1..=32u64 {
+            assert_eq!(p.shard_for(sid), ((sid - 1) % 4) as usize);
+        }
+        assert_eq!(p.order_for(6), vec![1, 2, 3, 0]);
+        assert_eq!(p.kind(), PlacementKind::Stripe);
+    }
+
+    #[test]
+    fn ring_is_deterministic_and_total() {
+        let a = Ring::new(4, VNODES);
+        let b = Ring::new(4, VNODES);
+        for sid in 1..=1000u64 {
+            let s = a.shard_for(sid);
+            assert!(s < 4);
+            assert_eq!(s, b.shard_for(sid), "same ring, same answer");
+        }
+    }
+
+    #[test]
+    fn ring_spreads_sids_across_shards() {
+        let r = Ring::new(4, VNODES);
+        let mut counts = [0usize; 4];
+        for sid in 1..=4000u64 {
+            counts[r.shard_for(sid)] += 1;
+        }
+        for (i, c) in counts.iter().enumerate() {
+            // perfect split is 1000; vnode smoothing keeps every shard
+            // within a loose factor of it
+            assert!((400..=1800).contains(c), "shard {i} owns {c} of 4000");
+        }
+    }
+
+    #[test]
+    fn ring_order_visits_every_shard_once_designated_first() {
+        let r = Ring::new(5, 16);
+        for sid in [1u64, 2, 77, 1234, u64::MAX] {
+            let order = r.order_for(sid);
+            assert_eq!(order.len(), 5);
+            assert_eq!(order[0], r.shard_for(sid));
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2, 3, 4], "order {order:?} is a permutation");
+        }
+    }
+
+    #[test]
+    fn single_shard_rings_route_everything_to_zero() {
+        let r = Ring::new(1, VNODES);
+        for sid in 1..=64u64 {
+            assert_eq!(r.shard_for(sid), 0);
+            assert_eq!(r.order_for(sid), vec![0]);
+        }
+    }
+
+    #[test]
+    fn ring_assignment_is_stable_when_shards_are_added() {
+        // the consistent-hash property: going 4 → 5 shards only moves
+        // sids whose successor arc now belongs to the new shard; sids
+        // that stay must keep their old assignment
+        let small = Ring::new(4, VNODES);
+        let big = Ring::new(5, VNODES);
+        let mut moved = 0usize;
+        let total = 4000u64;
+        for sid in 1..=total {
+            let (a, b) = (small.shard_for(sid), big.shard_for(sid));
+            if a != b {
+                assert_eq!(b, 4, "sid {sid} moved to an old shard ({a} -> {b})");
+                moved += 1;
+            }
+        }
+        // expected movement is ~1/5 of the keyspace, never the bulk of it
+        assert!(moved > 0, "a fifth shard must claim something");
+        assert!((moved as f64) < 0.40 * total as f64, "moved {moved} of {total}");
+    }
+}

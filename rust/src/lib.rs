@@ -28,6 +28,7 @@ pub mod pram;
 pub mod runtime;
 pub mod serial;
 pub mod server;
+pub mod store;
 pub mod stream;
 pub mod util;
 pub mod viz;

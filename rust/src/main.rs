@@ -18,7 +18,8 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use wagener_hull::config::Config;
 use wagener_hull::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
-use wagener_hull::engine::{Engine, EngineConfig};
+use wagener_hull::engine::{Engine, EngineConfig, PlacementKind};
+use wagener_hull::store::{FsStore, SnapshotStore};
 use wagener_hull::geometry::generators::{generate, Distribution};
 use wagener_hull::geometry::point::{pad_to_hood, Point};
 use wagener_hull::pram::ExecMode;
@@ -41,7 +42,7 @@ commands:
              [--exec-mode <fast|audited>] [--workers <n>] [--shards <n>] [--io-threads <n>]
              [--max-sessions <n>] [--merge-threshold <n>] [--idle-ttl-ms <n>]
              [--request-timeout-ms <n>] [--max-queued <n>] [--breaker-cooldown-ms <n>]
-             [--max-proto-errors <n>]
+             [--max-proto-errors <n>] [--store-dir <dir>] [--placement <stripe|ring>]
   client     --addr <host:port> [--proto <text|binary|auto>] [--tmo <ms>]
              [--connect-retries <n>] <points-file>
   occupancy  --n <count> [--dist <name>] [--seed <u64>]
@@ -358,14 +359,29 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             .parse::<u32>()
             .context("--max-proto-errors wants a non-negative integer (0 = never)")?;
     }
+    if let Some(v) = flags.get("placement") {
+        cfg.engine.placement =
+            PlacementKind::parse(v).ok_or_else(|| anyhow!("unknown placement {v:?}"))?;
+    }
+    if let Some(v) = flags.get("store-dir") {
+        cfg.store.dir = (!v.is_empty()).then(|| PathBuf::from(v));
+    }
     warn_if_exec_mode_noop(exec_mode, cfg.coordinator.backend, cfg.coordinator.self_check);
 
+    let store: Option<Arc<dyn SnapshotStore>> = match &cfg.store.dir {
+        None => None,
+        Some(dir) => Some(Arc::new(
+            FsStore::open(dir).with_context(|| format!("opening store {}", dir.display()))?,
+        )),
+    };
     let engine = Arc::new(
         Engine::start(EngineConfig {
             shards: cfg.engine.shards,
             max_queued: cfg.engine.max_queued,
             coordinator: cfg.coordinator.clone(),
             stream: cfg.stream.clone(),
+            placement: cfg.engine.placement,
+            store,
         })
         .map_err(|e| anyhow!(e))?,
     );
@@ -379,14 +395,16 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
     let handle = server::serve_engine(engine.clone(), &cfg.server)?;
     println!(
-        "serving on {} backend={} shards={} workers/shard={} max_sessions={} \
-         merge_threshold={} (Ctrl-C to stop)",
+        "serving on {} backend={} shards={} placement={} workers/shard={} max_sessions={} \
+         merge_threshold={} store={} (Ctrl-C to stop)",
         handle.local_addr,
         engine.backend_name(),
         engine.shard_count(),
+        engine.placement_kind().name(),
         engine.workers_per_shard(),
         engine.max_sessions(),
         engine.merge_threshold(),
+        cfg.store.dir.as_deref().map(|d| d.display().to_string()).unwrap_or_else(|| "off".into()),
     );
     // block forever
     loop {

@@ -224,9 +224,22 @@ impl HullClient {
 
     /// `SOPEN`: open a streaming session; returns its token.
     pub fn session_open(&mut self) -> Result<u64> {
+        self.session_open_inner(None)
+    }
+
+    /// `SOPEN <id> <sid>`: restore session `sid` from the server's
+    /// snapshot store (its last checkpoint).  Fails with
+    /// `unknown-session` when no snapshot exists, `session already open`
+    /// when the sid is live, and `snapshot-corrupt`/`snapshot-io` when
+    /// the stored bytes don't verify.
+    pub fn session_restore(&mut self, sid: u64) -> Result<u64> {
+        self.session_open_inner(Some(sid))
+    }
+
+    fn session_open_inner(&mut self, restore: Option<u64>) -> Result<u64> {
         let id = self.next_id;
         self.next_id += 1;
-        self.send(&Request::SessionOpen { id })?;
+        self.send(&Request::SessionOpen { id, restore })?;
         match self.recv()? {
             Response::SessionOpened { sid, .. } => Ok(sid),
             Response::SessionErr { message, .. } => bail!("server: {message}"),
@@ -260,7 +273,19 @@ impl HullClient {
     /// `SHULL`: the authoritative session hull (server flushes pending
     /// first).
     pub fn session_hull(&mut self, sid: u64) -> Result<SessionHullReply> {
-        self.send(&Request::SessionHull { sid })?;
+        self.session_hull_inner(sid, None)
+    }
+
+    /// `SHULL <sid> <epoch>`: the hull exactly as it stood at a
+    /// historical epoch (0 = empty, current epoch = live hull; pending
+    /// points are *not* flushed).  `unknown-epoch` when the epoch is
+    /// beyond the session's current one.
+    pub fn session_hull_at(&mut self, sid: u64, epoch: u64) -> Result<SessionHullReply> {
+        self.session_hull_inner(sid, Some(epoch))
+    }
+
+    fn session_hull_inner(&mut self, sid: u64, epoch: Option<u64>) -> Result<SessionHullReply> {
+        self.send(&Request::SessionHull { sid, epoch })?;
         match self.recv()? {
             Response::SessionHull { epoch, upper, lower, .. } => {
                 Ok(SessionHullReply { epoch, upper, lower })

@@ -180,16 +180,16 @@ fn run_job(engine: &Engine, job: Job) {
                 deliver(&shared, token, binary, &super::hull_response(id, result));
             });
         }
-        Request::SessionOpen { id } => {
-            let resp = super::session_open_response(engine, id);
+        Request::SessionOpen { id, restore } => {
+            let resp = super::session_open_response(engine, id, restore);
             deliver(&shared, token, binary, &resp);
         }
         Request::SessionAdd { sid, points, .. } => {
             let resp = super::session_add_response(engine, sid, &points, deadline);
             deliver(&shared, token, binary, &resp);
         }
-        Request::SessionHull { sid } => {
-            let resp = super::session_hull_response(engine, sid);
+        Request::SessionHull { sid, epoch } => {
+            let resp = super::session_hull_response(engine, sid, epoch);
             deliver(&shared, token, binary, &resp);
         }
         Request::SessionClose { sid } => {

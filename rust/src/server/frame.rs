@@ -12,6 +12,11 @@
 //!   fixed header (before the point payload).  The flag is invalid on
 //!   payload-less verbs.  Decoders that predate the flag see an unknown
 //!   verb and answer `Malformed` — never a silently misparsed frame.
+//!   Bit 0x40 flags a `u64 LE` operand extension after the fixed header,
+//!   valid only on SOPEN (the sid of a snapshotted session to restore)
+//!   and SHULL (the epoch of a historical hull to read) — the binary form
+//!   of the text protocol's optional second operand.  It is rejected on
+//!   every other verb under the same no-silent-misparse rule.
 //!
 //! response = C8 01 <kind u8> <flag u8> <id u64 LE> <plen u32 LE> plen payload bytes
 //!   kinds: 1 HullOk   [queue_ns u64][exec_ns u64][k_up u32][k_lo u32]
@@ -53,6 +58,9 @@ pub const VERSION: u8 = 0x01;
 const REQ_HEADER: usize = 15; // magic + ver + verb + id + count
 /// Verb-byte flag: a u32 deadline (ms) follows the fixed request header.
 const F_DEADLINE: u8 = 0x80;
+/// Verb-byte flag: a u64 operand (restore sid for SOPEN, epoch for
+/// SHULL) follows the fixed request header.
+const F_ARG: u8 = 0x40;
 const RESP_HEADER: usize = 16; // magic + ver + kind + flag + id + plen
 
 const V_HULL: u8 = 1;
@@ -138,12 +146,24 @@ pub fn encode_request(out: &mut Vec<u8>, req: &Request) {
             req_header_tmo(out, V_HULL, *id, points.len() as u32, *tmo_ms);
             push_points(out, points);
         }
-        Request::SessionOpen { id } => req_header(out, V_SOPEN, *id, 0),
+        Request::SessionOpen { id, restore } => match restore {
+            Some(sid) => {
+                req_header(out, V_SOPEN | F_ARG, *id, 0);
+                out.extend_from_slice(&sid.to_le_bytes());
+            }
+            None => req_header(out, V_SOPEN, *id, 0),
+        },
         Request::SessionAdd { sid, points, tmo_ms } => {
             req_header_tmo(out, V_SADD, *sid, points.len() as u32, *tmo_ms);
             push_points(out, points);
         }
-        Request::SessionHull { sid } => req_header(out, V_SHULL, *sid, 0),
+        Request::SessionHull { sid, epoch } => match epoch {
+            Some(e) => {
+                req_header(out, V_SHULL | F_ARG, *sid, 0);
+                out.extend_from_slice(&e.to_le_bytes());
+            }
+            None => req_header(out, V_SHULL, *sid, 0),
+        },
         Request::SessionClose { sid } => req_header(out, V_SCLOSE, *sid, 0),
         Request::Stats => req_header(out, V_STATS, 0, 0),
         Request::Ping => req_header(out, V_PING, 0, 0),
@@ -242,11 +262,18 @@ pub fn decode_request(buf: &[u8]) -> Result<Decoded<Request>, ProtoError> {
         return Err(malformed(format!("unsupported frame version {}", buf[1])));
     }
     let has_tmo = buf[2] & F_DEADLINE != 0;
-    let verb = buf[2] & !F_DEADLINE;
+    let has_arg = buf[2] & F_ARG != 0;
+    let verb = buf[2] & !(F_DEADLINE | F_ARG);
     let id = u64::from_le_bytes(buf[3..11].try_into().unwrap());
     let count = u32::from_le_bytes(buf[11..15].try_into().unwrap()) as usize;
     match verb {
         V_HULL | V_SADD => {
+            if has_arg {
+                return Err(ProtoError::Malformed {
+                    id: Some(id),
+                    detail: format!("verb {verb} carries no operand extension"),
+                });
+            }
             if count > MAX_REQUEST_POINTS {
                 return Err(ProtoError::TooManyPoints {
                     id,
@@ -282,15 +309,32 @@ pub fn decode_request(buf: &[u8]) -> Result<Decoded<Request>, ProtoError> {
                     detail: format!("verb {verb} carries no point payload (count {count})"),
                 });
             }
+            if has_arg && verb != V_SOPEN && verb != V_SHULL {
+                return Err(ProtoError::Malformed {
+                    id: Some(id),
+                    detail: format!("verb {verb} carries no operand extension"),
+                });
+            }
+            let (arg, need) = if has_arg {
+                let need = REQ_HEADER + 8;
+                if buf.len() < need {
+                    return Ok(Decoded::Need(need));
+                }
+                let arg =
+                    u64::from_le_bytes(buf[REQ_HEADER..need].try_into().unwrap());
+                (Some(arg), need)
+            } else {
+                (None, REQ_HEADER)
+            };
             let req = match verb {
-                V_SOPEN => Request::SessionOpen { id },
-                V_SHULL => Request::SessionHull { sid: id },
+                V_SOPEN => Request::SessionOpen { id, restore: arg },
+                V_SHULL => Request::SessionHull { sid: id, epoch: arg },
                 V_SCLOSE => Request::SessionClose { sid: id },
                 V_STATS => Request::Stats,
                 V_PING => Request::Ping,
                 _ => Request::Quit,
             };
-            Ok(Decoded::Frame(req, REQ_HEADER))
+            Ok(Decoded::Frame(req, need))
         }
         other => Err(ProtoError::Malformed {
             id: Some(id),
@@ -496,14 +540,17 @@ mod tests {
                 points: pts(&[(0.1234567890123, 0.000001)]),
                 tmo_ms: Some(250),
             },
-            Request::SessionOpen { id: 3 },
+            Request::SessionOpen { id: 3, restore: None },
+            Request::SessionOpen { id: 4, restore: Some(u64::MAX) },
             Request::SessionAdd {
                 sid: 17,
                 points: pts(&[(0.0, 1.0), (1.0, 0.0)]),
                 tmo_ms: Some(u32::MAX),
             },
             Request::SessionAdd { sid: 18, points: vec![], tmo_ms: None },
-            Request::SessionHull { sid: 17 },
+            Request::SessionHull { sid: 17, epoch: None },
+            Request::SessionHull { sid: 17, epoch: Some(0) },
+            Request::SessionHull { sid: 17, epoch: Some(12) },
             Request::SessionClose { sid: 17 },
             Request::Stats,
             Request::Ping,
@@ -621,6 +668,42 @@ mod tests {
         let mut bad = Vec::new();
         req_header(&mut bad, V_PING | F_DEADLINE, 9, 0);
         assert_eq!(decode_request(&bad).unwrap_err().frame_id(), Some(9));
+    }
+
+    #[test]
+    fn arg_flag_extends_the_frame_exactly() {
+        let req = Request::SessionHull { sid: 17, epoch: Some(5) };
+        let mut buf = Vec::new();
+        encode_request(&mut buf, &req);
+        // header + 8-byte epoch, flag in the verb byte
+        assert_eq!(buf.len(), 15 + 8);
+        assert_eq!(buf[2], V_SHULL | F_ARG);
+        assert_eq!(u64::from_le_bytes(buf[15..23].try_into().unwrap()), 5);
+        // header alone reports the operand-inclusive total
+        assert!(matches!(decode_request(&buf[..15]).unwrap(), Decoded::Need(23)));
+        assert!(matches!(decode_request(&buf[..22]).unwrap(), Decoded::Need(23)));
+        assert_eq!(roundtrip_req(req.clone()), req);
+        // SOPEN restore rides the same extension
+        let req = Request::SessionOpen { id: 2, restore: Some(17) };
+        let mut buf = Vec::new();
+        encode_request(&mut buf, &req);
+        assert_eq!(buf[2], V_SOPEN | F_ARG);
+        assert_eq!(roundtrip_req(req.clone()), req);
+        // the flag is rejected on every other verb, id echoed
+        for verb in [V_HULL, V_SADD, V_SCLOSE, V_STATS, V_PING, V_QUIT] {
+            let mut bad = Vec::new();
+            req_header(&mut bad, verb | F_ARG, 9, 0);
+            bad.extend_from_slice(&0u64.to_le_bytes());
+            assert_eq!(
+                decode_request(&bad).unwrap_err().frame_id(),
+                Some(9),
+                "verb {verb} must reject the operand flag"
+            );
+        }
+        // flagless frames keep the 15-byte extent (wire compat)
+        let mut buf = Vec::new();
+        encode_request(&mut buf, &Request::SessionHull { sid: 17, epoch: None });
+        assert_eq!(buf.len(), 15);
     }
 
     #[test]

@@ -212,8 +212,16 @@ pub(crate) fn hull_response(id: u64, result: Result<HullResponse, RequestError>)
     }
 }
 
-pub(crate) fn session_open_response(engine: &Engine, id: u64) -> Response {
-    match engine.session_open() {
+pub(crate) fn session_open_response(
+    engine: &Engine,
+    id: u64,
+    restore: Option<u64>,
+) -> Response {
+    let opened = match restore {
+        None => engine.session_open(),
+        Some(sid) => engine.session_restore(sid),
+    };
+    match opened {
         Ok(sid) => Response::SessionOpened { id, sid },
         Err(e) => Response::SessionErr { verb: SessionVerb::Open, id, message: e.to_string() },
     }
@@ -236,8 +244,8 @@ pub(crate) fn session_add_response(
     }
 }
 
-pub(crate) fn session_hull_response(engine: &Engine, sid: u64) -> Response {
-    match engine.session_hull(sid) {
+pub(crate) fn session_hull_response(engine: &Engine, sid: u64, epoch: Option<u64>) -> Response {
+    match engine.session_hull_at(sid, epoch) {
         Ok(s) => Response::SessionHull { sid, epoch: s.epoch, upper: s.upper, lower: s.lower },
         Err(e) => Response::SessionErr { verb: SessionVerb::Hull, id: sid, message: e.to_string() },
     }

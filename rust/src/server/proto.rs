@@ -5,8 +5,10 @@
 //! client -> server
 //!   HULL <id> <m> [TMO=<ms>]\n  then m lines "x y"   full hull request
 //!   SOPEN <id>\n                            open a streaming session
+//!   SOPEN <id> <sid>\n                      restore a snapshotted session
 //!   SADD <sid> <m> [TMO=<ms>]\n  then m lines "x y"  insert into a session
 //!   SHULL <sid>\n                           authoritative session hull
+//!   SHULL <sid> <epoch>\n                   historical hull at <epoch>
 //!   SCLOSE <sid>\n                          close a session
 //!   STATS\n                                 metrics snapshot (JSON line)
 //!   PING\n                                  liveness
@@ -41,6 +43,17 @@
 //! `request_timeout_ms`); an expired request answers the typed error
 //! `deadline-exceeded`.  Unrecognized trailing header tokens are ignored
 //! — old servers serve new clients, minus the deadline.
+//!
+//! The optional second operand of `SOPEN` / `SHULL` is the durable-session
+//! extension (PR 8): `SOPEN <id> <sid>` restores the snapshotted session
+//! `<sid>` (errors `unknown-session` when nothing is stored under it,
+//! `session already open` when it is live, or the typed
+//! `snapshot-corrupt` / `snapshot-io` on bad bytes), and `SHULL <sid>
+//! <epoch>` reads the immutable historical hull as of `<epoch>` from the
+//! session's ledger without flushing (epoch 0 is the empty hull; a future
+//! epoch errors `unknown-epoch`).  Unlike unknown header *tokens*, a
+//! malformed second operand is rejected — silently ignoring it would
+//! serve the live hull where history was asked for.
 
 use std::io::{BufRead, Write};
 
@@ -52,9 +65,13 @@ use crate::geometry::point::Point;
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     Hull { id: u64, points: Vec<Point>, tmo_ms: Option<u32> },
-    SessionOpen { id: u64 },
+    /// `restore` names a snapshotted sid to bring back; `None` opens a
+    /// fresh session.
+    SessionOpen { id: u64, restore: Option<u64> },
     SessionAdd { sid: u64, points: Vec<Point>, tmo_ms: Option<u32> },
-    SessionHull { sid: u64 },
+    /// `epoch` selects a historical hull from the session's ledger;
+    /// `None` is the live (flushing) read.
+    SessionHull { sid: u64, epoch: Option<u64> },
     SessionClose { sid: u64 },
     Stats,
     Ping,
@@ -331,12 +348,31 @@ fn read_point_block<R: BufRead>(
     Ok((id, points, tmo_ms))
 }
 
-/// Parse the lone numeric operand of SOPEN (`<id>`) / SHULL / SCLOSE
+/// Parse the first numeric operand of SOPEN (`<id>`) / SHULL / SCLOSE
 /// (`<sid>`).
 fn parse_sid(it: &mut std::str::SplitWhitespace<'_>, verb: &str) -> Result<u64, ProtoError> {
     it.next()
         .and_then(|s| s.parse().ok())
         .ok_or_else(|| ProtoError::malformed(format!("{verb} needs a numeric id")))
+}
+
+/// Parse the optional second numeric operand of SOPEN (`<sid>` to
+/// restore) / SHULL (`<epoch>`).  Present-but-unparseable is malformed —
+/// it selects *which* result the client gets, so it must never be
+/// silently dropped — and the already-parsed first operand is echoed.
+fn parse_opt_operand(
+    it: &mut std::str::SplitWhitespace<'_>,
+    first: u64,
+    verb: &str,
+    what: &str,
+) -> Result<Option<u64>, ProtoError> {
+    match it.next() {
+        None => Ok(None),
+        Some(tok) => tok.parse().map(Some).map_err(|_| ProtoError::Malformed {
+            id: Some(first),
+            detail: format!("{verb}: bad {what} {tok:?}"),
+        }),
+    }
 }
 
 /// Read one request off the stream.
@@ -348,12 +384,20 @@ pub fn read_request<R: BufRead>(r: &mut R) -> Result<Request, ProtoError> {
             let (id, points, tmo_ms) = read_point_block(r, &mut it, "HULL", false)?;
             Ok(Request::Hull { id, points, tmo_ms })
         }
-        Some("SOPEN") => Ok(Request::SessionOpen { id: parse_sid(&mut it, "SOPEN")? }),
+        Some("SOPEN") => {
+            let id = parse_sid(&mut it, "SOPEN")?;
+            let restore = parse_opt_operand(&mut it, id, "SOPEN", "restore sid")?;
+            Ok(Request::SessionOpen { id, restore })
+        }
         Some("SADD") => {
             let (sid, points, tmo_ms) = read_point_block(r, &mut it, "SADD", true)?;
             Ok(Request::SessionAdd { sid, points, tmo_ms })
         }
-        Some("SHULL") => Ok(Request::SessionHull { sid: parse_sid(&mut it, "SHULL")? }),
+        Some("SHULL") => {
+            let sid = parse_sid(&mut it, "SHULL")?;
+            let epoch = parse_opt_operand(&mut it, sid, "SHULL", "epoch")?;
+            Ok(Request::SessionHull { sid, epoch })
+        }
         Some("SCLOSE") => Ok(Request::SessionClose { sid: parse_sid(&mut it, "SCLOSE")? }),
         Some("STATS") => Ok(Request::Stats),
         Some("PING") => Ok(Request::Ping),
@@ -374,7 +418,10 @@ pub fn write_request<W: Write>(w: &mut W, req: &Request) -> std::io::Result<()> 
                 writeln!(w, "{} {}", p.x, p.y)?;
             }
         }
-        Request::SessionOpen { id } => writeln!(w, "SOPEN {id}")?,
+        Request::SessionOpen { id, restore } => match restore {
+            Some(sid) => writeln!(w, "SOPEN {id} {sid}")?,
+            None => writeln!(w, "SOPEN {id}")?,
+        },
         Request::SessionAdd { sid, points, tmo_ms } => {
             match tmo_ms {
                 Some(ms) => writeln!(w, "SADD {sid} {} TMO={ms}", points.len())?,
@@ -384,7 +431,10 @@ pub fn write_request<W: Write>(w: &mut W, req: &Request) -> std::io::Result<()> 
                 writeln!(w, "{} {}", p.x, p.y)?;
             }
         }
-        Request::SessionHull { sid } => writeln!(w, "SHULL {sid}")?,
+        Request::SessionHull { sid, epoch } => match epoch {
+            Some(e) => writeln!(w, "SHULL {sid} {e}")?,
+            None => writeln!(w, "SHULL {sid}")?,
+        },
         Request::SessionClose { sid } => writeln!(w, "SCLOSE {sid}")?,
         Request::Stats => writeln!(w, "STATS")?,
         Request::Ping => writeln!(w, "PING")?,
@@ -677,18 +727,45 @@ mod tests {
     #[test]
     fn session_requests_roundtrip() {
         for req in [
-            Request::SessionOpen { id: 3 },
+            Request::SessionOpen { id: 3, restore: None },
+            Request::SessionOpen { id: 4, restore: Some(99) },
             Request::SessionAdd {
                 sid: 17,
                 points: vec![Point::new(0.125, 0.25), Point::new(0.5, 0.75)],
                 tmo_ms: None,
             },
             Request::SessionAdd { sid: 18, points: vec![], tmo_ms: None },
-            Request::SessionHull { sid: 17 },
+            Request::SessionHull { sid: 17, epoch: None },
+            Request::SessionHull { sid: 17, epoch: Some(0) },
+            Request::SessionHull { sid: 17, epoch: Some(3) },
             Request::SessionClose { sid: 17 },
         ] {
             assert_eq!(roundtrip_req(req.clone()), req);
         }
+    }
+
+    #[test]
+    fn optional_second_operand_parses_strictly() {
+        // wire form of the extended verbs
+        let mut buf = Vec::new();
+        write_request(&mut buf, &Request::SessionHull { sid: 7, epoch: Some(2) }).unwrap();
+        assert_eq!(buf, b"SHULL 7 2\n");
+        let mut buf = Vec::new();
+        write_request(&mut buf, &Request::SessionOpen { id: 1, restore: Some(42) }).unwrap();
+        assert_eq!(buf, b"SOPEN 1 42\n");
+        // a present-but-garbage operand is malformed, echoing the first
+        // operand — NOT silently treated as a live read / fresh open
+        for bad in ["SHULL 7 abc\n", "SHULL 7 -1\n", "SOPEN 1 x\n"] {
+            let e = read_request(&mut BufReader::new(bad.as_bytes())).unwrap_err();
+            assert!(
+                matches!(e, ProtoError::Malformed { id: Some(_), .. }),
+                "{bad:?} -> {e:?}"
+            );
+            // the incremental decoder rejects identically
+            assert_incremental_matches(bad.as_bytes());
+        }
+        assert_incremental_matches(b"SHULL 7 2\n");
+        assert_incremental_matches(b"SOPEN 1 42\n");
     }
 
     #[test]

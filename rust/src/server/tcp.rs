@@ -373,12 +373,14 @@ fn handle_connection(stream: TcpStream, engine: Arc<Engine>, active: &AtomicU64,
                     Err(_) => Response::HullErr { id, message: "coordinator gone".into() },
                 }
             }
-            Request::SessionOpen { id } => super::session_open_response(&engine, id),
+            Request::SessionOpen { id, restore } => {
+                super::session_open_response(&engine, id, restore)
+            }
             Request::SessionAdd { sid, points, tmo_ms } => {
                 let deadline = request_deadline(opts.request_timeout_ms, tmo_ms);
                 super::session_add_response(&engine, sid, &points, deadline)
             }
-            Request::SessionHull { sid } => super::session_hull_response(&engine, sid),
+            Request::SessionHull { sid, epoch } => super::session_hull_response(&engine, sid, epoch),
             Request::SessionClose { sid } => super::session_close_response(&engine, sid),
         };
         if write_response(&mut writer, binary, &resp).is_err() {

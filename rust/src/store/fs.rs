@@ -1,0 +1,265 @@
+//! Filesystem [`SnapshotStore`] (`[store] dir` / `serve --store-dir`).
+//!
+//! Layout:
+//!
+//! ```text
+//! <dir>/chunks/<sha256-hex>     packed LE f64 pairs
+//! <dir>/sessions/<sid>.json     manifest (the commit point)
+//! ```
+//!
+//! Every write lands in a unique temp file in the destination directory
+//! and is `rename(2)`d into place, so readers never observe a torn chunk
+//! or manifest and a crashed writer leaves only `.tmp-*` litter (swept on
+//! open).  Chunks are immutable once placed; a name collision means the
+//! bytes already exist and the write is skipped (dedup).
+
+use std::fs;
+use std::io::{ErrorKind, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::{ChunkId, SnapshotStore, StoreError};
+
+pub struct FsStore {
+    chunks: PathBuf,
+    sessions: PathBuf,
+    tmp_seq: AtomicU64,
+}
+
+fn io_err(what: &str, path: &Path, e: std::io::Error) -> StoreError {
+    StoreError::Io(format!("{what} {}: {e}", path.display()))
+}
+
+impl FsStore {
+    /// Open (creating if needed) a store rooted at `dir`; sweeps temp
+    /// litter left by a crashed writer.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<FsStore, StoreError> {
+        let root: PathBuf = dir.into();
+        let chunks = root.join("chunks");
+        let sessions = root.join("sessions");
+        for d in [&chunks, &sessions] {
+            fs::create_dir_all(d).map_err(|e| io_err("creating", d, e))?;
+            if let Ok(entries) = fs::read_dir(d) {
+                for entry in entries.flatten() {
+                    if entry.file_name().to_string_lossy().starts_with(".tmp-") {
+                        let _ = fs::remove_file(entry.path());
+                    }
+                }
+            }
+        }
+        Ok(FsStore { chunks, sessions, tmp_seq: AtomicU64::new(0) })
+    }
+
+    /// Temp-write `data` next to `dest`, then rename into place.
+    fn commit(&self, dir: &Path, dest: &Path, data: &[u8]) -> Result<(), StoreError> {
+        let tmp = dir.join(format!(
+            ".tmp-{}-{}",
+            std::process::id(),
+            self.tmp_seq.fetch_add(1, Ordering::Relaxed)
+        ));
+        let write = (|| -> std::io::Result<()> {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(data)?;
+            f.sync_all()
+        })();
+        if let Err(e) = write {
+            let _ = fs::remove_file(&tmp);
+            return Err(io_err("writing", &tmp, e));
+        }
+        fs::rename(&tmp, dest).map_err(|e| {
+            let _ = fs::remove_file(&tmp);
+            io_err("committing", dest, e)
+        })
+    }
+
+    fn manifest_path(&self, sid: u64) -> PathBuf {
+        self.sessions.join(format!("{sid}.json"))
+    }
+}
+
+impl SnapshotStore for FsStore {
+    fn put_chunk(&self, data: &[u8]) -> Result<(ChunkId, bool), StoreError> {
+        let id = ChunkId::of(data);
+        let dest = self.chunks.join(id.to_hex());
+        if dest.exists() {
+            return Ok((id, false));
+        }
+        self.commit(&self.chunks, &dest, data)?;
+        Ok((id, true))
+    }
+
+    fn get_chunk(&self, id: ChunkId) -> Result<Vec<u8>, StoreError> {
+        let path = self.chunks.join(id.to_hex());
+        let data = match fs::read(&path) {
+            Ok(d) => d,
+            Err(e) if e.kind() == ErrorKind::NotFound => {
+                return Err(StoreError::Corrupt(format!("missing chunk {id}")))
+            }
+            Err(e) => return Err(io_err("reading", &path, e)),
+        };
+        if ChunkId::of(&data) != id {
+            return Err(StoreError::Corrupt(format!("chunk {id} fails hash verification")));
+        }
+        Ok(data)
+    }
+
+    fn put_manifest(&self, sid: u64, text: &str) -> Result<(), StoreError> {
+        self.commit(&self.sessions, &self.manifest_path(sid), text.as_bytes())
+    }
+
+    fn get_manifest(&self, sid: u64) -> Result<Option<String>, StoreError> {
+        let path = self.manifest_path(sid);
+        match fs::read_to_string(&path) {
+            Ok(s) => Ok(Some(s)),
+            Err(e) if e.kind() == ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(io_err("reading", &path, e)),
+        }
+    }
+
+    fn list_sids(&self) -> Result<Vec<u64>, StoreError> {
+        let entries =
+            fs::read_dir(&self.sessions).map_err(|e| io_err("listing", &self.sessions, e))?;
+        let mut sids = Vec::new();
+        for entry in entries {
+            let entry = entry.map_err(|e| io_err("listing", &self.sessions, e))?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if let Some(stem) = name.strip_suffix(".json") {
+                if let Ok(sid) = stem.parse::<u64>() {
+                    sids.push(sid);
+                }
+            }
+        }
+        sids.sort_unstable();
+        Ok(sids)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::{read_snapshot, write_snapshot, SessionState};
+    use std::sync::atomic::AtomicU32;
+
+    static DIR_SEQ: AtomicU32 = AtomicU32::new(0);
+
+    /// Unique scratch dir, removed on drop.
+    pub(crate) struct TempDir(pub PathBuf);
+
+    impl TempDir {
+        pub(crate) fn new(tag: &str) -> TempDir {
+            let dir = std::env::temp_dir().join(format!(
+                "wagener-{tag}-{}-{}",
+                std::process::id(),
+                DIR_SEQ.fetch_add(1, Ordering::Relaxed)
+            ));
+            let _ = fs::remove_dir_all(&dir);
+            TempDir(dir)
+        }
+    }
+
+    impl Drop for TempDir {
+        fn drop(&mut self) {
+            let _ = fs::remove_dir_all(&self.0);
+        }
+    }
+
+    use crate::geometry::point::Point;
+
+    fn state() -> SessionState {
+        SessionState {
+            epoch: 0,
+            merge_threshold: 8,
+            inserted: 2,
+            absorbed: 0,
+            upper: vec![],
+            lower: vec![],
+            pending: vec![Point::new(0.25, 0.5), Point::new(0.75, -0.5)],
+            ledger: vec![],
+        }
+    }
+
+    #[test]
+    fn fs_roundtrip_and_dedup() {
+        let tmp = TempDir::new("fsstore");
+        let store = FsStore::open(&tmp.0).unwrap();
+        let (id, wrote) = store.put_chunk(b"hello world").unwrap();
+        assert!(wrote);
+        let (id2, wrote2) = store.put_chunk(b"hello world").unwrap();
+        assert_eq!(id, id2);
+        assert!(!wrote2);
+        assert_eq!(store.get_chunk(id).unwrap(), b"hello world");
+
+        write_snapshot(&store, 12, &state()).unwrap();
+        // reopening (a "restart") sees the same bytes
+        let reopened = FsStore::open(&tmp.0).unwrap();
+        assert_eq!(read_snapshot(&reopened, 12).unwrap().unwrap(), state());
+        assert_eq!(reopened.list_sids().unwrap(), vec![12]);
+        assert_eq!(reopened.get_manifest(99).unwrap(), None);
+    }
+
+    #[test]
+    fn manifest_replace_is_atomic_overwrite() {
+        let tmp = TempDir::new("fsstore-manifest");
+        let store = FsStore::open(&tmp.0).unwrap();
+        store.put_manifest(1, "first").unwrap();
+        store.put_manifest(1, "second").unwrap();
+        assert_eq!(store.get_manifest(1).unwrap().as_deref(), Some("second"));
+        // no temp litter survives a normal write sequence
+        let leftovers: Vec<_> = fs::read_dir(tmp.0.join("sessions"))
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().starts_with(".tmp-"))
+            .collect();
+        assert!(leftovers.is_empty());
+    }
+
+    #[test]
+    fn on_disk_corruption_is_typed() {
+        let tmp = TempDir::new("fsstore-corrupt");
+        let store = FsStore::open(&tmp.0).unwrap();
+        write_snapshot(&store, 5, &state()).unwrap();
+
+        // flip one byte in every chunk file and expect snapshot-corrupt
+        for entry in fs::read_dir(tmp.0.join("chunks")).unwrap().flatten() {
+            let path = entry.path();
+            let mut data = fs::read(&path).unwrap();
+            if data.is_empty() {
+                continue;
+            }
+            data[0] ^= 0x40;
+            fs::write(&path, &data).unwrap();
+            let err = read_snapshot(&store, 5).unwrap_err();
+            assert!(err.to_string().starts_with("snapshot-corrupt"), "{err}");
+            data[0] ^= 0x40;
+            fs::write(&path, &data).unwrap();
+        }
+
+        // truncate a chunk file (torn write simulation)
+        let victim = fs::read_dir(tmp.0.join("chunks"))
+            .unwrap()
+            .flatten()
+            .map(|e| e.path())
+            .find(|p| fs::metadata(p).map(|m| m.len() >= 16).unwrap_or(false))
+            .unwrap();
+        let data = fs::read(&victim).unwrap();
+        fs::write(&victim, &data[..data.len() - 3]).unwrap();
+        let err = read_snapshot(&store, 5).unwrap_err();
+        assert!(err.to_string().starts_with("snapshot-corrupt"), "{err}");
+
+        // deleting the chunk is also corruption, not a panic
+        fs::remove_file(&victim).unwrap();
+        let err = read_snapshot(&store, 5).unwrap_err();
+        assert!(err.to_string().starts_with("snapshot-corrupt"), "{err}");
+    }
+
+    #[test]
+    fn open_sweeps_tmp_litter() {
+        let tmp = TempDir::new("fsstore-litter");
+        let store = FsStore::open(&tmp.0).unwrap();
+        drop(store);
+        fs::write(tmp.0.join("chunks").join(".tmp-999-0"), b"half a chunk").unwrap();
+        let _ = FsStore::open(&tmp.0).unwrap();
+        assert!(!tmp.0.join("chunks").join(".tmp-999-0").exists());
+    }
+}

@@ -1,0 +1,84 @@
+//! In-memory [`SnapshotStore`]: tests, crash-restart simulation (drop the
+//! engine, keep the store), and rebalance transfers.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, MutexGuard};
+
+use super::{ChunkId, SnapshotStore, StoreError};
+
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[derive(Default)]
+pub struct MemStore {
+    chunks: Mutex<HashMap<ChunkId, Vec<u8>>>,
+    manifests: Mutex<HashMap<u64, String>>,
+}
+
+impl MemStore {
+    pub fn new() -> MemStore {
+        MemStore::default()
+    }
+
+    /// Test hook: mutate a stored chunk's bytes in place (bit flips,
+    /// truncation) to exercise corruption detection.  Returns false if
+    /// the chunk does not exist.
+    pub fn tamper_chunk(&self, id: ChunkId, f: impl FnOnce(&mut Vec<u8>)) -> bool {
+        let mut chunks = lock_ignore_poison(&self.chunks);
+        match chunks.get_mut(&id) {
+            Some(data) => {
+                f(data);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Test hook: drop a chunk entirely (dangling manifest reference).
+    pub fn remove_chunk(&self, id: ChunkId) -> bool {
+        lock_ignore_poison(&self.chunks).remove(&id).is_some()
+    }
+
+    /// Every chunk currently stored (sorted for determinism).
+    pub fn chunk_ids(&self) -> Vec<ChunkId> {
+        let mut ids: Vec<ChunkId> = lock_ignore_poison(&self.chunks).keys().copied().collect();
+        ids.sort();
+        ids
+    }
+}
+
+impl SnapshotStore for MemStore {
+    fn put_chunk(&self, data: &[u8]) -> Result<(ChunkId, bool), StoreError> {
+        let id = ChunkId::of(data);
+        let mut chunks = lock_ignore_poison(&self.chunks);
+        let wrote = chunks.insert(id, data.to_vec()).is_none();
+        Ok((id, wrote))
+    }
+
+    fn get_chunk(&self, id: ChunkId) -> Result<Vec<u8>, StoreError> {
+        let chunks = lock_ignore_poison(&self.chunks);
+        let data = chunks
+            .get(&id)
+            .ok_or_else(|| StoreError::Corrupt(format!("missing chunk {id}")))?;
+        if ChunkId::of(data) != id {
+            return Err(StoreError::Corrupt(format!("chunk {id} fails hash verification")));
+        }
+        Ok(data.clone())
+    }
+
+    fn put_manifest(&self, sid: u64, text: &str) -> Result<(), StoreError> {
+        lock_ignore_poison(&self.manifests).insert(sid, text.to_string());
+        Ok(())
+    }
+
+    fn get_manifest(&self, sid: u64) -> Result<Option<String>, StoreError> {
+        Ok(lock_ignore_poison(&self.manifests).get(&sid).cloned())
+    }
+
+    fn list_sids(&self) -> Result<Vec<u64>, StoreError> {
+        let mut sids: Vec<u64> = lock_ignore_poison(&self.manifests).keys().copied().collect();
+        sids.sort_unstable();
+        Ok(sids)
+    }
+}

@@ -1,0 +1,547 @@
+//! Content-addressed session snapshot store.
+//!
+//! A streaming session checkpoints as:
+//!
+//!   * **chunks** — packed little-endian `f64` pairs (16 bytes/point),
+//!     named by the sha256 of their bytes.  Identical chains across
+//!     epochs or sessions dedup to one chunk.
+//!   * a **manifest** — one versioned JSON document per sid listing
+//!     `{epoch, hull_chunks, pending_chunks, ledger, checksums}` plus the
+//!     scalar counters needed to restore accounting bit-identically.
+//!
+//! Chunks are written before the manifest that references them, so a
+//! crash can orphan chunks but never commit a manifest with dangling
+//! references.  Every chunk read is re-hashed; any mismatch, truncation,
+//! or malformed manifest surfaces as the typed [`StoreError::Corrupt`]
+//! ("snapshot-corrupt" on the wire), never a panic or a wrong hull.
+//!
+//! Two impls: [`MemStore`] (tests, rebalance transfers) and [`FsStore`]
+//! (`[store] dir`; atomic temp-file + rename commits).
+
+mod fs;
+mod mem;
+pub mod sha256;
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::geometry::point::Point;
+use crate::util::json::{self, Json};
+
+pub use fs::FsStore;
+pub use mem::MemStore;
+
+/// Manifest schema version written by this build.
+pub const MANIFEST_VERSION: u64 = 1;
+
+/// Pending points are split into blocks of this many points so an
+/// unmerged tail rewrites only its last partial chunk per checkpoint.
+pub const PENDING_CHUNK_POINTS: usize = 4096;
+
+/// sha256 content id of a chunk.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ChunkId(pub [u8; 32]);
+
+impl ChunkId {
+    pub fn of(data: &[u8]) -> ChunkId {
+        ChunkId(sha256::sha256(data))
+    }
+
+    pub fn to_hex(&self) -> String {
+        self.0.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    pub fn from_hex(s: &str) -> Option<ChunkId> {
+        if s.len() != 64 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+            return None;
+        }
+        let mut out = [0u8; 32];
+        for (i, byte) in out.iter_mut().enumerate() {
+            *byte = u8::from_str_radix(&s[2 * i..2 * i + 2], 16).ok()?;
+        }
+        Some(ChunkId(out))
+    }
+}
+
+impl fmt::Debug for ChunkId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ChunkId({})", self.to_hex())
+    }
+}
+
+impl fmt::Display for ChunkId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.to_hex())
+    }
+}
+
+/// Store failures.  `Corrupt` is the typed durability error: its wire
+/// form always starts with the machine-parseable token `snapshot-corrupt`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StoreError {
+    /// Chunk bytes, manifest structure, or checksums fail verification.
+    Corrupt(String),
+    /// Underlying I/O failed (disk full, permissions, ...).
+    Io(String),
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::Corrupt(d) => write!(f, "snapshot-corrupt: {d}"),
+            StoreError::Io(d) => write!(f, "snapshot-io: {d}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+/// Backing storage for chunks + manifests.  Implementations must make
+/// `put_manifest` atomic (readers see the old or the new manifest, never
+/// a torn one) and `get_chunk` verifying (re-hash on read).
+pub trait SnapshotStore: Send + Sync {
+    /// Store `data` under its content id.  Returns the id and whether
+    /// the chunk was newly written (false = dedup hit).
+    fn put_chunk(&self, data: &[u8]) -> Result<(ChunkId, bool), StoreError>;
+
+    /// Fetch a chunk and verify its hash; a missing or mutated chunk is
+    /// `Corrupt`.
+    fn get_chunk(&self, id: ChunkId) -> Result<Vec<u8>, StoreError>;
+
+    /// Atomically install `text` as the manifest for `sid`.
+    fn put_manifest(&self, sid: u64, text: &str) -> Result<(), StoreError>;
+
+    /// The manifest for `sid`, or `None` if it was never snapshotted.
+    fn get_manifest(&self, sid: u64) -> Result<Option<String>, StoreError>;
+
+    /// Every sid with a committed manifest.
+    fn list_sids(&self) -> Result<Vec<u64>, StoreError>;
+}
+
+// ---------------------------------------------------------- point codec
+
+/// Pack points as little-endian f64 pairs (16 bytes/point); the inverse
+/// of [`decode_points`].  Bit-exact: f64 -> bytes -> f64 is the identity.
+pub fn encode_points(pts: &[Point]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(pts.len() * 16);
+    for p in pts {
+        out.extend_from_slice(&p.x.to_le_bytes());
+        out.extend_from_slice(&p.y.to_le_bytes());
+    }
+    out
+}
+
+/// Unpack a point chunk; a length that is not a multiple of 16 means the
+/// chunk was truncated or spliced.
+pub fn decode_points(bytes: &[u8]) -> Result<Vec<Point>, StoreError> {
+    if bytes.len() % 16 != 0 {
+        return Err(StoreError::Corrupt(format!(
+            "point chunk length {} not a multiple of 16",
+            bytes.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 16);
+    for pair in bytes.chunks_exact(16) {
+        let x = f64::from_le_bytes(pair[..8].try_into().unwrap());
+        let y = f64::from_le_bytes(pair[8..].try_into().unwrap());
+        out.push(Point::new(x, y));
+    }
+    Ok(out)
+}
+
+// ------------------------------------------------------- session state
+
+/// One epoch's delta record: the pending survivors consumed by the merge
+/// plus the resulting canonical chains.  `ledger[e-1]` reconstructs the
+/// hull as of epoch `e`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LedgerEntry {
+    pub survivors: Vec<Point>,
+    pub upper: Vec<Point>,
+    pub lower: Vec<Point>,
+}
+
+/// The complete logical state of a session — everything a restore needs
+/// to be bit-identical to the uninterrupted original, including the
+/// epoch ledger that serves `SHULL <sid> <epoch>` time travel.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct SessionState {
+    pub epoch: u64,
+    pub merge_threshold: usize,
+    pub inserted: u64,
+    pub absorbed: u64,
+    pub upper: Vec<Point>,
+    pub lower: Vec<Point>,
+    pub pending: Vec<Point>,
+    pub ledger: Vec<LedgerEntry>,
+}
+
+/// Byte accounting for one checkpoint (feeds `snapshot_bytes_total`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WriteReport {
+    /// Bytes physically written: new chunks + the manifest.  Dedup'd
+    /// chunks cost nothing.
+    pub bytes_written: u64,
+}
+
+// ------------------------------------------------------ snapshot write
+
+struct ChunkWriter<'a> {
+    store: &'a dyn SnapshotStore,
+    checksums: BTreeMap<String, Json>,
+    bytes_written: u64,
+}
+
+impl<'a> ChunkWriter<'a> {
+    fn put(&mut self, pts: &[Point]) -> Result<String, StoreError> {
+        let data = encode_points(pts);
+        let (id, wrote) = self.store.put_chunk(&data)?;
+        if wrote {
+            self.bytes_written += data.len() as u64;
+        }
+        let hex = id.to_hex();
+        self.checksums.insert(hex.clone(), Json::Num(data.len() as f64));
+        Ok(hex)
+    }
+}
+
+/// Checkpoint `state` for `sid`: chunks first, manifest last (commit
+/// point).  Returns byte accounting for metrics.
+pub fn write_snapshot(
+    store: &dyn SnapshotStore,
+    sid: u64,
+    state: &SessionState,
+) -> Result<WriteReport, StoreError> {
+    let mut w = ChunkWriter { store, checksums: BTreeMap::new(), bytes_written: 0 };
+
+    let upper = w.put(&state.upper)?;
+    let lower = w.put(&state.lower)?;
+    let mut pending = Vec::new();
+    for block in state.pending.chunks(PENDING_CHUNK_POINTS.max(1)) {
+        pending.push(Json::Str(w.put(block)?));
+    }
+    let mut ledger = Vec::with_capacity(state.ledger.len());
+    for entry in &state.ledger {
+        let survivors = w.put(&entry.survivors)?;
+        let e_upper = w.put(&entry.upper)?;
+        let e_lower = w.put(&entry.lower)?;
+        ledger.push(Json::obj(vec![
+            ("survivors", Json::Str(survivors)),
+            ("upper", Json::Str(e_upper)),
+            ("lower", Json::Str(e_lower)),
+        ]));
+    }
+
+    let manifest = Json::obj(vec![
+        ("version", Json::Num(MANIFEST_VERSION as f64)),
+        ("sid", Json::Num(sid as f64)),
+        ("epoch", Json::Num(state.epoch as f64)),
+        ("merge_threshold", Json::Num(state.merge_threshold as f64)),
+        ("inserted", Json::Num(state.inserted as f64)),
+        ("absorbed", Json::Num(state.absorbed as f64)),
+        (
+            "hull_chunks",
+            Json::obj(vec![("upper", Json::Str(upper)), ("lower", Json::Str(lower))]),
+        ),
+        ("pending_chunks", Json::Arr(pending)),
+        ("ledger", Json::Arr(ledger)),
+        ("checksums", Json::Obj(w.checksums.clone())),
+    ]);
+    let text = manifest.to_string();
+    store.put_manifest(sid, &text)?;
+    Ok(WriteReport { bytes_written: w.bytes_written + text.len() as u64 })
+}
+
+// ------------------------------------------------------- snapshot read
+
+struct ChunkReader<'a> {
+    store: &'a dyn SnapshotStore,
+    checksums: &'a BTreeMap<String, Json>,
+}
+
+impl<'a> ChunkReader<'a> {
+    fn get(&self, hex: &str) -> Result<Vec<Point>, StoreError> {
+        let id = ChunkId::from_hex(hex)
+            .ok_or_else(|| StoreError::Corrupt(format!("bad chunk id {hex:?}")))?;
+        let want_len = self
+            .checksums
+            .get(hex)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| StoreError::Corrupt(format!("chunk {hex} missing from checksums")))?;
+        let data = self.store.get_chunk(id)?;
+        if data.len() as f64 != want_len {
+            return Err(StoreError::Corrupt(format!(
+                "chunk {hex}: manifest says {want_len} bytes, store has {}",
+                data.len()
+            )));
+        }
+        decode_points(&data)
+    }
+}
+
+fn field<'a>(m: &'a Json, key: &str) -> Result<&'a Json, StoreError> {
+    m.get(key)
+        .ok_or_else(|| StoreError::Corrupt(format!("manifest missing {key:?}")))
+}
+
+fn field_u64(m: &Json, key: &str) -> Result<u64, StoreError> {
+    let v = field(m, key)?
+        .as_f64()
+        .ok_or_else(|| StoreError::Corrupt(format!("manifest {key:?} not a number")))?;
+    if v < 0.0 || v.fract() != 0.0 {
+        return Err(StoreError::Corrupt(format!("manifest {key:?} not a non-negative integer")));
+    }
+    Ok(v as u64)
+}
+
+fn field_str<'a>(m: &'a Json, key: &str) -> Result<&'a str, StoreError> {
+    field(m, key)?
+        .as_str()
+        .ok_or_else(|| StoreError::Corrupt(format!("manifest {key:?} not a string")))
+}
+
+/// Load the snapshot for `sid`; `None` when no manifest exists.  Every
+/// structural or integrity failure is `Corrupt` — restore either yields
+/// the exact checkpointed state or a typed error.
+pub fn read_snapshot(
+    store: &dyn SnapshotStore,
+    sid: u64,
+) -> Result<Option<SessionState>, StoreError> {
+    let Some(text) = store.get_manifest(sid)? else {
+        return Ok(None);
+    };
+    let manifest = json::parse(&text)
+        .map_err(|e| StoreError::Corrupt(format!("manifest for sid {sid}: {e}")))?;
+
+    let version = field_u64(&manifest, "version")?;
+    if version != MANIFEST_VERSION {
+        return Err(StoreError::Corrupt(format!(
+            "manifest version {version} (this build reads {MANIFEST_VERSION})"
+        )));
+    }
+    let checksums = field(&manifest, "checksums")?
+        .as_obj()
+        .ok_or_else(|| StoreError::Corrupt("manifest checksums not an object".into()))?;
+    let r = ChunkReader { store, checksums };
+
+    let hulls = field(&manifest, "hull_chunks")?;
+    let upper = r.get(field_str(hulls, "upper")?)?;
+    let lower = r.get(field_str(hulls, "lower")?)?;
+
+    let mut pending = Vec::new();
+    let pending_chunks = field(&manifest, "pending_chunks")?
+        .as_arr()
+        .ok_or_else(|| StoreError::Corrupt("pending_chunks not an array".into()))?;
+    for c in pending_chunks {
+        let hex = c
+            .as_str()
+            .ok_or_else(|| StoreError::Corrupt("pending chunk id not a string".into()))?;
+        pending.extend(r.get(hex)?);
+    }
+
+    let epoch = field_u64(&manifest, "epoch")?;
+    let ledger_arr = field(&manifest, "ledger")?
+        .as_arr()
+        .ok_or_else(|| StoreError::Corrupt("ledger not an array".into()))?;
+    if ledger_arr.len() as u64 != epoch {
+        return Err(StoreError::Corrupt(format!(
+            "ledger has {} entries but epoch is {epoch}",
+            ledger_arr.len()
+        )));
+    }
+    let mut ledger = Vec::with_capacity(ledger_arr.len());
+    for entry in ledger_arr {
+        ledger.push(LedgerEntry {
+            survivors: r.get(field_str(entry, "survivors")?)?,
+            upper: r.get(field_str(entry, "upper")?)?,
+            lower: r.get(field_str(entry, "lower")?)?,
+        });
+    }
+
+    Ok(Some(SessionState {
+        epoch,
+        merge_threshold: field_u64(&manifest, "merge_threshold")?.max(1) as usize,
+        inserted: field_u64(&manifest, "inserted")?,
+        absorbed: field_u64(&manifest, "absorbed")?,
+        upper,
+        lower,
+        pending,
+        ledger,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pts(v: &[(f64, f64)]) -> Vec<Point> {
+        v.iter().map(|&(x, y)| Point::new(x, y)).collect()
+    }
+
+    fn sample_state() -> SessionState {
+        let upper = pts(&[(0.0, 0.0), (0.5, 0.9), (1.0, 0.1)]);
+        let lower = pts(&[(0.0, 0.0), (0.4, -0.5), (1.0, 0.1)]);
+        SessionState {
+            epoch: 2,
+            merge_threshold: 64,
+            inserted: 41,
+            absorbed: 30,
+            upper: upper.clone(),
+            lower: lower.clone(),
+            pending: pts(&[(0.25, 0.25), (0.125, -0.0625)]),
+            ledger: vec![
+                LedgerEntry {
+                    survivors: pts(&[(0.0, 0.0), (1.0, 0.1)]),
+                    upper: pts(&[(0.0, 0.0), (1.0, 0.1)]),
+                    lower: pts(&[(0.0, 0.0), (1.0, 0.1)]),
+                },
+                LedgerEntry { survivors: pts(&[(0.5, 0.9), (0.4, -0.5)]), upper, lower },
+            ],
+        }
+    }
+
+    #[test]
+    fn chunk_id_hex_roundtrip() {
+        let id = ChunkId::of(b"abc");
+        assert_eq!(
+            id.to_hex(),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        assert_eq!(ChunkId::from_hex(&id.to_hex()), Some(id));
+        assert_eq!(ChunkId::from_hex("zz"), None);
+        assert_eq!(ChunkId::from_hex(&"a".repeat(63)), None);
+    }
+
+    #[test]
+    fn point_codec_is_bit_exact() {
+        let p = pts(&[(0.1, -0.7), (f64::MIN_POSITIVE, -0.0), (1.0, 1e-300)]);
+        let enc = encode_points(&p);
+        assert_eq!(enc.len(), 48);
+        let dec = decode_points(&enc).unwrap();
+        for (a, b) in p.iter().zip(&dec) {
+            assert_eq!(a.x.to_bits(), b.x.to_bits());
+            assert_eq!(a.y.to_bits(), b.y.to_bits());
+        }
+        assert!(matches!(decode_points(&enc[..15]), Err(StoreError::Corrupt(_))));
+    }
+
+    #[test]
+    fn roundtrip_through_mem_store() {
+        let store = MemStore::new();
+        let state = sample_state();
+        let report = write_snapshot(&store, 7, &state).unwrap();
+        assert!(report.bytes_written > 0);
+        let back = read_snapshot(&store, 7).unwrap().unwrap();
+        assert_eq!(back, state);
+        assert_eq!(read_snapshot(&store, 8).unwrap(), None);
+        assert_eq!(store.list_sids().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn rewrite_dedups_unchanged_chunks() {
+        let store = MemStore::new();
+        let state = sample_state();
+        let first = write_snapshot(&store, 1, &state).unwrap();
+        // identical state again: every chunk dedups, only the manifest is written
+        let second = write_snapshot(&store, 1, &state).unwrap();
+        assert!(second.bytes_written < first.bytes_written);
+        let manifest_len = store.get_manifest(1).unwrap().unwrap().len() as u64;
+        assert_eq!(second.bytes_written, manifest_len);
+    }
+
+    #[test]
+    fn empty_session_roundtrips() {
+        let store = MemStore::new();
+        let state = SessionState { merge_threshold: 4, ..SessionState::default() };
+        write_snapshot(&store, 3, &state).unwrap();
+        let back = read_snapshot(&store, 3).unwrap().unwrap();
+        assert_eq!(back.epoch, 0);
+        assert!(back.upper.is_empty() && back.pending.is_empty() && back.ledger.is_empty());
+    }
+
+    #[test]
+    fn bit_flipped_chunk_is_typed_corrupt() {
+        let store = MemStore::new();
+        write_snapshot(&store, 9, &sample_state()).unwrap();
+        for id in store.chunk_ids() {
+            let tampered = store.tamper_chunk(id, |data| {
+                if data.is_empty() {
+                    data.push(0);
+                } else {
+                    data[0] ^= 0x01;
+                }
+            });
+            assert!(tampered);
+            let err = read_snapshot(&store, 9).unwrap_err();
+            assert!(err.to_string().starts_with("snapshot-corrupt"), "{err}");
+            // restore the original bytes for the next iteration
+            store.tamper_chunk(id, |data| {
+                if data.len() == 1 && data[0] == 0 {
+                    data.clear();
+                } else {
+                    data[0] ^= 0x01;
+                }
+            });
+        }
+        assert!(read_snapshot(&store, 9).is_ok());
+    }
+
+    #[test]
+    fn truncated_chunk_is_typed_corrupt() {
+        let store = MemStore::new();
+        write_snapshot(&store, 4, &sample_state()).unwrap();
+        let victim = store
+            .chunk_ids()
+            .into_iter()
+            .find(|id| store.get_chunk(*id).map(|d| d.len() >= 16).unwrap_or(false))
+            .unwrap();
+        store.tamper_chunk(victim, |data| data.truncate(data.len() - 7));
+        let err = read_snapshot(&store, 4).unwrap_err();
+        assert!(err.to_string().starts_with("snapshot-corrupt"), "{err}");
+    }
+
+    #[test]
+    fn malformed_manifests_are_typed_corrupt_never_panic() {
+        let store = MemStore::new();
+        write_snapshot(&store, 2, &sample_state()).unwrap();
+        let good = store.get_manifest(2).unwrap().unwrap();
+        let bad_cases: Vec<String> = vec![
+            "not json at all".into(),
+            "{}".into(),
+            good.replace("\"version\": 1", "\"version\": 99"),
+            good.replace("\"epoch\": 2", "\"epoch\": 7"),           // ledger length mismatch
+            good.replace("\"inserted\": 41", "\"inserted\": -1"),
+            good.replace("\"inserted\": 41", "\"inserted\": 1.5"),
+            {
+                // swap one checksum's length so verification trips
+                let idx = good.find(": 48").unwrap();
+                format!("{}: 47{}", &good[..idx], &good[idx + 4..])
+            },
+        ];
+        for bad in bad_cases {
+            store.put_manifest(2, &bad).unwrap();
+            match read_snapshot(&store, 2) {
+                Err(e) => assert!(e.to_string().starts_with("snapshot-corrupt"), "{e}: {bad}"),
+                Ok(v) => panic!("accepted malformed manifest {bad:?} -> {v:?}"),
+            }
+        }
+        store.put_manifest(2, &good).unwrap();
+        assert_eq!(read_snapshot(&store, 2).unwrap().unwrap(), sample_state());
+    }
+
+    #[test]
+    fn manifest_references_only_checksummed_chunks() {
+        let store = MemStore::new();
+        let state = sample_state();
+        write_snapshot(&store, 5, &state).unwrap();
+        let manifest = json::parse(&store.get_manifest(5).unwrap().unwrap()).unwrap();
+        let checksums = manifest.get("checksums").unwrap().as_obj().unwrap();
+        // every chunk the store holds for this write is accounted for
+        for id in store.chunk_ids() {
+            let data = store.get_chunk(id).unwrap();
+            let want = checksums.get(&id.to_hex()).and_then(Json::as_f64).unwrap();
+            assert_eq!(want, data.len() as f64);
+        }
+        assert_eq!(manifest.get("version").unwrap().as_f64(), Some(1.0));
+    }
+}

@@ -32,6 +32,8 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::{Metrics, RequestError};
 use crate::geometry::point::Point;
+use crate::log_warn;
+use crate::store::{self, SessionState, SnapshotStore, StoreError};
 
 use super::session::{AddOutcome, HullService, Session};
 
@@ -71,8 +73,15 @@ impl StreamConfig {
 pub enum SessionError {
     /// sid never existed, was closed, or was evicted.
     UnknownSession,
+    /// `SHULL <sid> <epoch>` for an epoch the session never reached.
+    UnknownEpoch,
     /// registry is at `max_sessions`.
     Capacity { max: usize },
+    /// install/restore target sid is already live on this registry.
+    AlreadyOpen,
+    /// snapshot store failure (typed: the wire message starts with
+    /// `snapshot-corrupt` / `snapshot-io`).
+    Snapshot(StoreError),
     /// the insert/merge failed at the request layer.
     Request(RequestError),
 }
@@ -81,7 +90,10 @@ impl std::fmt::Display for SessionError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             SessionError::UnknownSession => write!(f, "unknown-session"),
+            SessionError::UnknownEpoch => write!(f, "unknown-epoch"),
             SessionError::Capacity { max } => write!(f, "session capacity {max} reached"),
+            SessionError::AlreadyOpen => write!(f, "session already open"),
+            SessionError::Snapshot(e) => write!(f, "{e}"),
             SessionError::Request(e) => write!(f, "{e}"),
         }
     }
@@ -125,9 +137,36 @@ struct Inner {
     /// `N` hands out sids ≡ i+1 (mod N), so `(sid - 1) % N` routes any
     /// sid back to the shard that owns it for the session's lifetime.
     sid_stride: u64,
+    sid_base: u64,
     cfg: StreamConfig,
     metrics: Arc<Metrics>,
+    /// Snapshot store: when present, sessions checkpoint on merge, on
+    /// close, on idle eviction, and on registry drop (clean shutdown).
+    store: Option<Arc<dyn SnapshotStore>>,
     wake: Arc<(Mutex<SweepState>, Condvar)>,
+}
+
+impl Inner {
+    /// Best-effort checkpoint of a locked session.  A write failure is
+    /// logged and counted nowhere — the in-memory session stays
+    /// authoritative and the next merge retries (callers that NEED the
+    /// write to succeed, e.g. eviction, use [`Inner::checkpoint_strict`]).
+    fn checkpoint(&self, sid: u64, session: &Session) {
+        if let Err(e) = self.checkpoint_strict(sid, session) {
+            log_warn!("session {sid}: checkpoint failed: {e}");
+        }
+    }
+
+    /// Checkpoint and surface the failure.  No-op without a store.
+    fn checkpoint_strict(&self, sid: u64, session: &Session) -> Result<(), StoreError> {
+        let Some(st) = &self.store else {
+            return Ok(());
+        };
+        let report = store::write_snapshot(st.as_ref(), sid, &session.snapshot_state())?;
+        Metrics::inc(&self.metrics.snapshots_written);
+        Metrics::add(&self.metrics.snapshot_bytes, report.bytes_written);
+        Ok(())
+    }
 }
 
 impl Inner {
@@ -179,13 +218,28 @@ impl SessionRegistry {
         sid_base: u64,
         sid_stride: u64,
     ) -> SessionRegistry {
+        Self::new_striped_with_store(cfg, metrics, sid_base, sid_stride, None)
+    }
+
+    /// [`SessionRegistry::new_striped`] plus a snapshot store: sessions
+    /// checkpoint on merge/close/evict/shutdown and can be restored or
+    /// adopted at explicit sids ([`SessionRegistry::install`]).
+    pub fn new_striped_with_store(
+        cfg: StreamConfig,
+        metrics: Arc<Metrics>,
+        sid_base: u64,
+        sid_stride: u64,
+        store: Option<Arc<dyn SnapshotStore>>,
+    ) -> SessionRegistry {
         assert!(sid_base >= 1 && sid_stride >= 1, "sid striping must start at 1");
         let inner = Arc::new(Inner {
             sessions: Mutex::new(HashMap::new()),
             next_sid: AtomicU64::new(sid_base),
             sid_stride,
+            sid_base,
             cfg,
             metrics,
+            store,
             wake: Arc::new((
                 Mutex::new(SweepState { stopped: false, open: 0 }),
                 Condvar::new(),
@@ -297,6 +351,8 @@ impl SessionRegistry {
     }
 
     /// `SADD`: validate, interior-reject, pend, merge on threshold.
+    /// Every completed merge checkpoints (when a store is configured) —
+    /// epoch advances are the durability points.
     pub fn add(
         &self,
         sid: u64,
@@ -304,10 +360,14 @@ impl SessionRegistry {
         svc: &dyn HullService,
     ) -> Result<AddOutcome, SessionError> {
         let m = &self.inner.metrics;
+        let inner = &self.inner;
         self.with_session(sid, |s| {
-            let (pend0, abs0) = (s.pending_len() as u64, s.absorbed_total());
+            let (pend0, abs0, epoch0) = (s.pending_len() as u64, s.absorbed_total(), s.epoch());
             let result = s.add(points, svc);
             record_session_deltas(m, s, pend0, abs0);
+            if s.epoch() != epoch0 {
+                inner.checkpoint(sid, s);
+            }
             result.map_err(SessionError::Request)
         })
     }
@@ -319,10 +379,14 @@ impl SessionRegistry {
         svc: &dyn HullService,
     ) -> Result<SessionHullSnapshot, SessionError> {
         let m = &self.inner.metrics;
+        let inner = &self.inner;
         self.with_session(sid, |s| {
-            let (pend0, abs0) = (s.pending_len() as u64, s.absorbed_total());
+            let (pend0, abs0, epoch0) = (s.pending_len() as u64, s.absorbed_total(), s.epoch());
             let result = s.flush(svc);
             record_session_deltas(m, s, pend0, abs0);
+            if s.epoch() != epoch0 {
+                inner.checkpoint(sid, s);
+            }
             result.map_err(SessionError::Request)?;
             let (u, l) = s.hull();
             Ok(SessionHullSnapshot {
@@ -333,8 +397,28 @@ impl SessionRegistry {
         })
     }
 
-    /// `SCLOSE`: unregister; waits for an in-flight operation to finish.
-    pub fn close(&self, sid: u64) -> Result<(), SessionError> {
+    /// `SHULL <sid> <epoch>`: time-travel read from the epoch ledger.  No
+    /// flush — a historical hull is immutable by definition; the epoch
+    /// echoed back is the requested one.
+    pub fn hull_at(&self, sid: u64, epoch: u64) -> Result<SessionHullSnapshot, SessionError> {
+        self.with_session(sid, |s| match s.hull_at(epoch) {
+            None => Err(SessionError::UnknownEpoch),
+            Some((u, l)) => Ok(SessionHullSnapshot {
+                epoch,
+                upper: u.to_vec(),
+                lower: l.to_vec(),
+            }),
+        })
+    }
+
+    /// `SCLOSE`: flush (final merge — buffered pending points must not
+    /// silently vanish; the flush counts in `merges_total` like any
+    /// other), checkpoint, then unregister.  A flush failure still closes
+    /// the session: with a store the checkpoint retains the un-merged
+    /// pending points, so nothing is lost durably; without one this
+    /// degrades to the historical drop-pending behaviour.  Waits for an
+    /// in-flight operation to finish.
+    pub fn close(&self, sid: u64, svc: &dyn HullService) -> Result<(), SessionError> {
         let slot = lock_ignore_poison(&self.inner.sessions)
             .remove(&sid)
             .ok_or(SessionError::UnknownSession)?;
@@ -342,9 +426,98 @@ impl SessionRegistry {
         let mut st = lock_ignore_poison(&slot.state);
         st.evicted = true; // a racer still holding the Arc sees a tombstone
         let m = &self.inner.metrics;
+        let (pend0, abs0) = (st.session.pending_len() as u64, st.session.absorbed_total());
+        if st.session.flush(svc).is_err() {
+            log_warn!("session {sid}: final flush failed; closing with pending buffered");
+        }
+        record_session_deltas(m, &mut st.session, pend0, abs0);
+        self.inner.checkpoint(sid, &st.session);
         Metrics::sub(&m.open_sessions, 1);
         Metrics::sub(&m.session_pending_points, st.session.pending_len() as u64);
         Ok(())
+    }
+
+    /// Install a session at an explicit sid: snapshot restore
+    /// ([`crate::store::read_snapshot`] -> [`Session::from_state`]) and
+    /// rebalance adoption both land here.  Fails `AlreadyOpen` if the sid
+    /// is live and `Capacity` when full (after an eviction sweep).  When
+    /// the sid lies on this registry's stripe, the sid allocator is
+    /// bumped past it so a later `SOPEN` can never re-issue it.
+    pub fn install(&self, sid: u64, state: SessionState) -> Result<(), SessionError> {
+        let mut map = lock_ignore_poison(&self.inner.sessions);
+        if map.len() >= self.inner.cfg.max_sessions {
+            drop(map);
+            sweep(&self.inner);
+            map = lock_ignore_poison(&self.inner.sessions);
+            if map.len() >= self.inner.cfg.max_sessions {
+                return Err(SessionError::Capacity { max: self.inner.cfg.max_sessions });
+            }
+        }
+        if map.contains_key(&sid) {
+            return Err(SessionError::AlreadyOpen);
+        }
+        let stride = self.inner.sid_stride;
+        if sid % stride == self.inner.sid_base % stride {
+            // aligned: next_sid steps in this residue class, sid + stride
+            // is the next member past sid.  (Engine-allocated sids under
+            // ring placement may be off-stripe; the registry allocator is
+            // unused then and must not be knocked off its residue.)
+            self.inner.next_sid.fetch_max(sid + stride, Ordering::Relaxed);
+        }
+        let session = Session::from_state(state);
+        let pending = session.pending_len() as u64;
+        map.insert(
+            sid,
+            Arc::new(Slot {
+                state: Mutex::new(SlotState {
+                    session,
+                    last_used: Instant::now(),
+                    evicted: false,
+                }),
+            }),
+        );
+        let m = &self.inner.metrics;
+        Metrics::inc(&m.open_sessions);
+        Metrics::add(&m.session_pending_points, pending);
+        self.inner.shift_open(1);
+        drop(map);
+        Ok(())
+    }
+
+    /// Remove a live session and hand back its checkpoint state (the
+    /// rebalance donor half; the recipient shard `install`s it).  Waits
+    /// for an in-flight operation, exactly like close, but writes no
+    /// final snapshot and counts no eviction — the session is moving, not
+    /// ending.
+    pub fn detach(&self, sid: u64) -> Result<SessionState, SessionError> {
+        let slot = lock_ignore_poison(&self.inner.sessions)
+            .remove(&sid)
+            .ok_or(SessionError::UnknownSession)?;
+        self.inner.shift_open(-1);
+        let mut st = lock_ignore_poison(&slot.state);
+        st.evicted = true; // racers re-route via the engine's override map
+        let m = &self.inner.metrics;
+        Metrics::sub(&m.open_sessions, 1);
+        Metrics::sub(&m.session_pending_points, st.session.pending_len() as u64);
+        Ok(st.session.snapshot_state())
+    }
+
+    /// Checkpoint every open session (clean shutdown).  Blocks on each
+    /// session's lock so in-flight merges land in their snapshot.
+    pub fn checkpoint_all(&self) {
+        if self.inner.store.is_none() {
+            return;
+        }
+        let snapshot: Vec<(u64, Arc<Slot>)> = lock_ignore_poison(&self.inner.sessions)
+            .iter()
+            .map(|(sid, slot)| (*sid, slot.clone()))
+            .collect();
+        for (sid, slot) in snapshot {
+            let st = lock_ignore_poison(&slot.state);
+            if !st.evicted {
+                self.inner.checkpoint(sid, &st.session);
+            }
+        }
     }
 
     /// Currently open sessions.
@@ -361,6 +534,12 @@ impl SessionRegistry {
     /// The (possibly clamped) merge threshold sessions are built with.
     pub fn merge_threshold(&self) -> usize {
         self.inner.cfg.merge_threshold
+    }
+
+    /// The snapshot store sessions checkpoint to, if any (the engine
+    /// facade borrows it for `SOPEN <sid>` restores and rebalance).
+    pub fn store(&self) -> Option<Arc<dyn SnapshotStore>> {
+        self.inner.store.clone()
     }
 
     /// Run one eviction sweep synchronously (tests; the sweeper thread
@@ -380,6 +559,9 @@ impl Drop for SessionRegistry {
         if let Some(h) = self.sweeper.take() {
             let _ = h.join();
         }
+        // clean-shutdown checkpoint: every open session's latest state
+        // (including an un-merged pending tail) survives the restart
+        self.checkpoint_all();
     }
 }
 
@@ -426,6 +608,14 @@ fn sweep(inner: &Inner) {
         if st.evicted || st.last_used.elapsed() < ttl {
             continue;
         }
+        // write the final snapshot BEFORE tombstoning: eviction must not
+        // destroy session state when a store is configured.  If the write
+        // fails the session is kept (retried next sweep) — an eviction
+        // that loses data is worse than a missed TTL.
+        if let Err(e) = inner.checkpoint_strict(sid, &st.session) {
+            log_warn!("session {sid}: eviction checkpoint failed, keeping session: {e}");
+            continue;
+        }
         st.evicted = true;
         let pending = st.session.pending_len() as u64;
         drop(st);
@@ -465,9 +655,9 @@ mod tests {
         assert_eq!(snap.upper, wu);
         assert_eq!(snap.lower, wl);
         assert!(snap.epoch >= 1);
-        reg.close(sid).unwrap();
+        reg.close(sid, &svc).unwrap();
         assert_eq!(reg.open_sessions(), 0);
-        assert_eq!(reg.close(sid), Err(SessionError::UnknownSession));
+        assert_eq!(reg.close(sid, &svc), Err(SessionError::UnknownSession));
         assert!(matches!(
             reg.add(sid, &pts[..1], &svc),
             Err(SessionError::UnknownSession)
@@ -480,7 +670,7 @@ mod tests {
         let a = reg.open().unwrap();
         let _b = reg.open().unwrap();
         assert_eq!(reg.open(), Err(SessionError::Capacity { max: 2 }));
-        reg.close(a).unwrap();
+        reg.close(a, &SerialService).unwrap();
         reg.open().unwrap();
     }
 
@@ -518,8 +708,102 @@ mod tests {
         assert_eq!(metrics.session_pending_points.load(Ordering::Relaxed), 0);
         assert_eq!(metrics.session_merges.load(Ordering::Relaxed), 1);
         assert!(metrics.session_merge_latency.count() == 1);
-        reg.close(sid).unwrap();
+        reg.close(sid, &svc).unwrap();
         assert_eq!(metrics.open_sessions.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn close_flushes_pending_and_counts_the_merge() {
+        let metrics = Arc::new(Metrics::default());
+        let reg = SessionRegistry::new(
+            StreamConfig { merge_threshold: 1000, idle_ttl_ms: 0, ..Default::default() },
+            metrics.clone(),
+        );
+        let svc = SerialService;
+        let sid = reg.open().unwrap();
+        let pts = generate(Distribution::Disk, 60, 8);
+        reg.add(sid, &pts, &svc).unwrap(); // threshold never reached: all pend
+        assert_eq!(metrics.session_merges.load(Ordering::Relaxed), 0);
+        reg.close(sid, &svc).unwrap();
+        // the final flush merged the buffered points and was counted
+        assert_eq!(metrics.session_merges.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.session_pending_points.load(Ordering::Relaxed), 0);
+        assert_eq!(metrics.session_merge_latency.count(), 1);
+    }
+
+    #[test]
+    fn checkpoints_on_merge_close_and_evict() {
+        use crate::store::{read_snapshot, MemStore};
+        let store = Arc::new(MemStore::new());
+        let metrics = Arc::new(Metrics::default());
+        let reg = SessionRegistry::new_striped_with_store(
+            StreamConfig { merge_threshold: 16, idle_ttl_ms: 0, ..Default::default() },
+            metrics.clone(),
+            1,
+            1,
+            Some(store.clone()),
+        );
+        let svc = SerialService;
+        let pts = generate(Distribution::Circle, 40, 3);
+
+        // merge-triggered checkpoint
+        let sid = reg.open().unwrap();
+        reg.add(sid, &pts, &svc).unwrap(); // 40 circle points: >=2 merges
+        let written_after_add = metrics.snapshots_written.load(Ordering::Relaxed);
+        assert!(written_after_add >= 2, "one checkpoint per merge");
+        assert!(metrics.snapshot_bytes.load(Ordering::Relaxed) > 0);
+        let snap = read_snapshot(store.as_ref(), sid).unwrap().unwrap();
+        assert!(snap.epoch >= 2);
+
+        // close writes the post-flush checkpoint (true hull, no pending)
+        reg.close(sid, &svc).unwrap();
+        let snap = read_snapshot(store.as_ref(), sid).unwrap().unwrap();
+        assert!(snap.pending.is_empty(), "close flushed before checkpointing");
+        assert_eq!(
+            snap.inserted,
+            snap.absorbed + Session::from_state(snap.clone()).hull_points()
+        );
+
+        // eviction writes a final snapshot before tombstoning (fresh
+        // registry + store with a real TTL; sweep driven by hand)
+        let store2 = Arc::new(MemStore::new());
+        let reg2 = SessionRegistry::new_striped_with_store(
+            StreamConfig { merge_threshold: 16, idle_ttl_ms: 25, ..Default::default() },
+            Arc::new(Metrics::default()),
+            1,
+            1,
+            Some(store2.clone()),
+        );
+        let sid2 = reg2.open().unwrap();
+        reg2.add(sid2, &pts[..5], &svc).unwrap(); // pending only, no merge yet
+        std::thread::sleep(Duration::from_millis(50));
+        reg2.sweep_now();
+        assert_eq!(reg2.open_sessions(), 0, "idle session evicted");
+        let snap2 = read_snapshot(store2.as_ref(), sid2).unwrap().unwrap();
+        assert_eq!(snap2.pending.len(), 5, "evict snapshot keeps un-merged pending");
+        assert_eq!(snap2.inserted, 5);
+    }
+
+    #[test]
+    fn install_restores_and_guards_sid_allocation() {
+        let svc = SerialService;
+        let reg = registry(StreamConfig { merge_threshold: 8, idle_ttl_ms: 0, ..Default::default() });
+        let sid = reg.open().unwrap();
+        let pts = generate(Distribution::Disk, 30, 6);
+        reg.add(sid, &pts, &svc).unwrap();
+        let state = reg.detach(sid).unwrap();
+        assert_eq!(reg.open_sessions(), 0);
+        assert!(matches!(reg.add(sid, &pts[..1], &svc), Err(SessionError::UnknownSession)));
+
+        // install far ahead of the allocator, then confirm open() skips it
+        reg.install(77, state.clone()).unwrap();
+        assert_eq!(reg.install(77, state), Err(SessionError::AlreadyOpen));
+        let snap = reg.hull(77, &svc).unwrap();
+        let (wu, wl) = oracle(&pts);
+        assert_eq!(snap.upper, wu);
+        assert_eq!(snap.lower, wl);
+        let fresh = reg.open().unwrap();
+        assert!(fresh > 77, "allocator bumped past the installed sid, got {fresh}");
     }
 
     /// Striped allocation (engine shard 2 of 4): sids 3, 7, 11, … — every

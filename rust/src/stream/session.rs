@@ -22,6 +22,7 @@ use crate::coordinator::request::validate_points;
 use crate::coordinator::{Coordinator, RequestError};
 use crate::geometry::point::{sort_by_x, Point};
 use crate::geometry::predicates::{orient2d, Orientation};
+use crate::store::{LedgerEntry, SessionState};
 use crate::wagener::hull_merge::merge_hulls;
 
 /// Anything that can turn a raw point set into canonical hull chains —
@@ -63,6 +64,13 @@ pub struct Session {
     /// unique vertex count of the current hull (upper ∪ lower).
     hull_points: u64,
     merge_threshold: usize,
+    /// Append-only epoch ledger: `ledger[e-1]` is the delta record of the
+    /// merge that produced epoch `e` (the pending survivors it consumed
+    /// plus the resulting chains), so every historical hull stays
+    /// addressable (`SHULL <sid> <epoch>`) and checkpoints can replay the
+    /// full history.  Grows with merge count; content-addressed storage
+    /// dedups the chains on disk.
+    ledger: Vec<LedgerEntry>,
     /// wall time of merges not yet drained by [`Session::take_merge_samples`]
     /// (buffered here, not in the return value, so completed merges keep
     /// their latency samples even when a later merge in the same call
@@ -81,7 +89,41 @@ impl Session {
             absorbed: 0,
             hull_points: 0,
             merge_threshold: merge_threshold.max(1),
+            ledger: Vec::new(),
             merge_samples: Vec::new(),
+        }
+    }
+
+    /// Rebuild a session from a checkpoint — the exact inverse of
+    /// [`Session::snapshot_state`], bit-identical down to accounting.
+    pub fn from_state(state: SessionState) -> Session {
+        let hull_points = unique_vertices(&state.upper, &state.lower);
+        Session {
+            upper: state.upper,
+            lower: state.lower,
+            pending: state.pending,
+            epoch: state.epoch,
+            inserted: state.inserted,
+            absorbed: state.absorbed,
+            hull_points,
+            merge_threshold: state.merge_threshold.max(1),
+            ledger: state.ledger,
+            merge_samples: Vec::new(),
+        }
+    }
+
+    /// The complete logical state for checkpointing.  Merge latency
+    /// samples are metrics plumbing, not state, and are excluded.
+    pub fn snapshot_state(&self) -> SessionState {
+        SessionState {
+            epoch: self.epoch,
+            merge_threshold: self.merge_threshold,
+            inserted: self.inserted,
+            absorbed: self.absorbed,
+            upper: self.upper.clone(),
+            lower: self.lower.clone(),
+            pending: self.pending.clone(),
+            ledger: self.ledger.clone(),
         }
     }
 
@@ -148,14 +190,19 @@ impl Session {
         };
         let old_hull = self.hull_points;
         let new_hull = unique_vertices(&upper, &lower);
+        self.ledger.push(LedgerEntry {
+            survivors: std::mem::take(&mut self.pending),
+            upper: upper.clone(),
+            lower: lower.clone(),
+        });
         self.upper = upper;
         self.lower = lower;
-        self.pending.clear();
         self.hull_points = new_hull;
         // every consumed point (and every displaced old vertex) that is
         // not a vertex of the new hull has been proven interior: absorbed
         self.absorbed += old_hull + consumed - new_hull;
         self.epoch += 1;
+        debug_assert_eq!(self.ledger.len() as u64, self.epoch);
         self.merge_samples.push(t0.elapsed().as_nanos() as u64);
         Ok(())
     }
@@ -164,6 +211,20 @@ impl Session {
     /// the authoritative hull).
     pub fn hull(&self) -> (&[Point], &[Point]) {
         (&self.upper, &self.lower)
+    }
+
+    /// Time travel: the hull exactly as of `epoch`.  Epoch 0 is the empty
+    /// pre-first-merge hull; epoch `self.epoch()` equals [`Session::hull`]
+    /// (chains only change at merges).  `None` for epochs never reached.
+    pub fn hull_at(&self, epoch: u64) -> Option<(&[Point], &[Point])> {
+        if epoch == 0 {
+            return Some((&[], &[]));
+        }
+        if epoch > self.epoch {
+            return None;
+        }
+        let entry = &self.ledger[(epoch - 1) as usize];
+        Some((&entry.upper, &entry.lower))
     }
 
     pub fn epoch(&self) -> u64 {
@@ -347,6 +408,78 @@ pub(crate) mod tests {
         assert_eq!(s.take_merge_samples().len() as u64, out.epoch);
         assert!(s.take_merge_samples().is_empty(), "drain must reset");
         assert!(s.pending_len() < 16);
+    }
+
+    #[test]
+    fn ledger_serves_every_historical_epoch() {
+        let svc = SerialService;
+        let pts = generate(Distribution::Disk, 400, 9);
+        let mut s = Session::new(32);
+        // replay the same schedule against a fresh session per epoch to
+        // pin what each historical hull must be
+        let mut per_epoch: Vec<(Vec<Point>, Vec<Point>)> = Vec::new();
+        let mut twin = Session::new(32);
+        for chunk in pts.chunks(23) {
+            s.add(chunk, &svc).unwrap();
+            twin.add(chunk, &svc).unwrap();
+            while (per_epoch.len() as u64) < twin.epoch() {
+                // twin epochs advance in lockstep with s (same schedule)
+                let (u, l) = twin.hull();
+                per_epoch.push((u.to_vec(), l.to_vec()));
+            }
+        }
+        s.flush(&svc).unwrap();
+        twin.flush(&svc).unwrap();
+        while (per_epoch.len() as u64) < twin.epoch() {
+            let (u, l) = twin.hull();
+            per_epoch.push((u.to_vec(), l.to_vec()));
+        }
+        assert!(s.epoch() >= 2, "schedule must cross several merges");
+        assert_eq!(s.hull_at(0), Some((&[][..], &[][..])));
+        assert_eq!(s.hull_at(s.epoch() + 1), None);
+        let (cu, cl) = s.hull();
+        let (cu, cl) = (cu.to_vec(), cl.to_vec());
+        assert_eq!(s.hull_at(s.epoch()), Some((&cu[..], &cl[..])));
+        for (i, (u, l)) in per_epoch.iter().enumerate() {
+            // NOTE: the hull only changes at merges, so the snapshot taken
+            // right after epoch e advanced is exactly hull_at(e+1)... the
+            // loop above records one snapshot per epoch increment in order
+            let got = s.hull_at(i as u64 + 1).unwrap();
+            assert_eq!(got.0, &u[..], "epoch {} upper", i + 1);
+            assert_eq!(got.1, &l[..], "epoch {} lower", i + 1);
+        }
+    }
+
+    #[test]
+    fn snapshot_state_roundtrip_is_bit_identical() {
+        let svc = SerialService;
+        let pts = generate(Distribution::Cluster, 300, 4);
+        let mut s = Session::new(48);
+        for chunk in pts.chunks(31) {
+            s.add(chunk, &svc).unwrap();
+        }
+        let state = s.snapshot_state();
+        let mut restored = Session::from_state(state.clone());
+        assert_eq!(restored.snapshot_state(), state, "export(import(x)) == x");
+        assert_eq!(restored.epoch(), s.epoch());
+        assert_eq!(restored.pending_len(), s.pending_len());
+        assert_eq!(restored.hull_points(), s.hull_points());
+        assert_eq!(restored.hull(), s.hull());
+        for e in 0..=s.epoch() {
+            assert_eq!(restored.hull_at(e), s.hull_at(e), "epoch {e}");
+        }
+        // continuations diverge-free: feed both the same tail
+        let tail = generate(Distribution::Circle, 100, 7);
+        let a = s.add(&tail, &svc).unwrap();
+        let b = restored.add(&tail, &svc).unwrap();
+        assert_eq!(a, b);
+        s.flush(&svc).unwrap();
+        restored.flush(&svc).unwrap();
+        assert_eq!(s.hull(), restored.hull());
+        assert_eq!(
+            restored.inserted_total(),
+            restored.absorbed_total() + restored.pending_len() as u64 + restored.hull_points()
+        );
     }
 
     #[test]

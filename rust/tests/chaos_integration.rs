@@ -57,6 +57,7 @@ fn chaos_engine(shards: usize, plan: Arc<FaultPlan>, cooldown_ms: u64) -> Engine
         },
         stream: StreamConfig { idle_ttl_ms: 0, merge_threshold: 48, ..Default::default() },
         max_queued: 0,
+        ..Default::default()
     })
     .unwrap()
 }

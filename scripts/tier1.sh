@@ -7,14 +7,16 @@
 # components are installed), then `cargo build --release && cargo test -q`
 # (the ROADMAP tier-1 verify), then the socket-facing suites once more
 # with ENGINE_SHARDS=4 (the sharded engine path on real sockets), then
-# fast smoke runs of bench_runtime, bench_coordinator, bench_stream,
-# bench_engine, bench_server and bench_robustness with WAGENER_BENCH_JSON
+# the restart suite once more under ring placement, then fast smoke runs
+# of bench_runtime, bench_coordinator, bench_stream, bench_engine,
+# bench_server, bench_robustness and bench_store with WAGENER_BENCH_JSON
 # pointed at BENCH_pram.json / BENCH_coordinator.json / BENCH_stream.json /
-# BENCH_engine.json / BENCH_server.json / BENCH_robustness.json, so every
-# PR leaves machine-readable perf records (PRAM tier timings,
-# router/worker-pool throughput, streaming-session schedules, shard
-# scaling, connection-core and wire-format costs, overload shed/latency
-# contrasts) for the next PR to compare against.  Every promised
+# BENCH_engine.json / BENCH_server.json / BENCH_robustness.json /
+# BENCH_store.json, so every PR leaves machine-readable perf records
+# (PRAM tier timings, router/worker-pool throughput, streaming-session
+# schedules, shard scaling, connection-core and wire-format costs,
+# overload shed/latency contrasts, snapshot write/restore latency) for
+# the next PR to compare against.  Every promised
 # BENCH_*.json is then ASSERTED to hold at least one report (a bench that
 # skips a backend must still emit its JSON trailer — an empty trajectory
 # file means the harness regressed).
@@ -56,10 +58,18 @@ cargo test -q
 # cores and both wire formats are exercised on the sharded path too.
 # chaos_integration joins so the deterministic fault harness proves the
 # same seed → same outcomes property against a sharded engine as well.
+# restart_integration joins so durability (crash-restart, SHULL time
+# travel, corrupt snapshots, eviction restore) holds on the sharded path.
 echo "== tier1: server suites @ ENGINE_SHARDS=4 =="
 ENGINE_SHARDS=4 cargo test -q --test server_integration \
     --test proto_parity --test event_loop_integration \
-    --test chaos_integration
+    --test chaos_integration --test restart_integration
+
+# And once more with ring placement: snapshots, restores and epoch time
+# travel must be placement-independent — a session's durability cannot
+# depend on which shard the consistent-hash ring routed it to.
+echo "== tier1: restart suite @ ENGINE_SHARDS=4 ENGINE_PLACEMENT=ring =="
+ENGINE_SHARDS=4 ENGINE_PLACEMENT=ring cargo test -q --test restart_integration
 
 # A promised bench trajectory that ends up empty is a silent regression
 # (a skipping backend must still write its report); fail loudly instead.
@@ -106,6 +116,13 @@ WAGENER_BENCH_FAST=1 WAGENER_BENCH_JSON="$ROOT/BENCH_robustness.json" \
     cargo bench --bench bench_robustness
 assert_bench_written "$ROOT/BENCH_robustness.json"
 
+echo "== tier1: smoke bench -> BENCH_store.json =="
+: > "$ROOT/BENCH_store.json"
+WAGENER_BENCH_FAST=1 WAGENER_BENCH_JSON="$ROOT/BENCH_store.json" \
+    cargo bench --bench bench_store
+assert_bench_written "$ROOT/BENCH_store.json"
+
 echo "tier1 OK — bench rows:"
 cat "$ROOT/BENCH_pram.json" "$ROOT/BENCH_coordinator.json" "$ROOT/BENCH_stream.json" \
-    "$ROOT/BENCH_engine.json" "$ROOT/BENCH_server.json" "$ROOT/BENCH_robustness.json"
+    "$ROOT/BENCH_engine.json" "$ROOT/BENCH_server.json" "$ROOT/BENCH_robustness.json" \
+    "$ROOT/BENCH_store.json"
