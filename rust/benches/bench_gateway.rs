@@ -1,0 +1,163 @@
+//! E13 — the HTTP edge vs the TCP wire: what does the gateway's
+//! HTTP/1.1 framing and JSON encoding cost over the same engine?
+//!
+//! Two reports:
+//!   * E13: one-shot hull round-trips through all four encodings —
+//!     TCP text, TCP binary, HTTP JSON, HTTP octet-stream — on one
+//!     shared engine, at small and large point counts.  The HTTP
+//!     binary row isolates header overhead (same payload bytes as the
+//!     TCP binary frame); the JSON rows price float printing/parsing.
+//!   * E13b: cursor-paginated session hull reads vs the one-shot form:
+//!     page walks re-send headers and re-resolve the epoch-pinned
+//!     snapshot per page, so the ratio is the cost of pagination.
+//!
+//! Run: `cargo bench --bench bench_gateway` (tier1.sh feeds
+//! BENCH_gateway.json via WAGENER_BENCH_JSON; WAGENER_BENCH_FAST=1
+//! shrinks point counts and the sampling budget).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use wagener_hull::benchkit::{Bencher, Report};
+use wagener_hull::coordinator::{BackendKind, BatcherConfig, CoordinatorConfig};
+use wagener_hull::engine::{Engine, EngineConfig};
+use wagener_hull::gateway::client::HttpClient;
+use wagener_hull::gateway::{serve_gateway, GatewayConfig};
+use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::geometry::point::Point;
+use wagener_hull::server::{serve_engine, HullClient, ServerConfig, WireProto};
+use wagener_hull::stream::StreamConfig;
+
+fn start_engine() -> Arc<Engine> {
+    Arc::new(
+        Engine::start(EngineConfig {
+            shards: 1,
+            coordinator: CoordinatorConfig {
+                backend: BackendKind::Serial,
+                batcher: BatcherConfig { max_batch: 4, flush_us: 200, queue_cap: 1024 },
+                self_check: false,
+                ..Default::default()
+            },
+            stream: StreamConfig::default(),
+            ..Default::default()
+        })
+        .unwrap(),
+    )
+}
+
+fn json_body(pts: &[Point]) -> String {
+    let pairs: Vec<String> = pts.iter().map(|p| format!("[{},{}]", p.x, p.y)).collect();
+    format!("{{\"points\":[{}]}}", pairs.join(","))
+}
+
+fn le_body(pts: &[Point]) -> Vec<u8> {
+    let mut b = Vec::with_capacity(pts.len() * 16);
+    for p in pts {
+        b.extend_from_slice(&p.x.to_le_bytes());
+        b.extend_from_slice(&p.y.to_le_bytes());
+    }
+    b
+}
+
+fn main() {
+    let b = Bencher::default();
+    let fast = std::env::var("WAGENER_BENCH_FAST").is_ok();
+
+    let engine = start_engine();
+    let tcp = serve_engine(
+        engine.clone(),
+        &ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+    )
+    .unwrap();
+    let gw = serve_gateway(
+        engine.clone(),
+        &GatewayConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+    )
+    .unwrap();
+
+    // ------------------------------------------ E13: one-shot encodings
+    let sizes: &[usize] = if fast { &[1024] } else { &[4096, 1 << 16] };
+    let mut report = Report::new("E13: hull round-trips — HTTP gateway vs TCP wire (one engine)");
+    let mut ct = HullClient::connect_with(tcp.local_addr, WireProto::Text).unwrap();
+    let mut cb = HullClient::connect_with(tcp.local_addr, WireProto::Binary).unwrap();
+    ct.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    cb.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut hc = HttpClient::connect(gw.local_addr()).unwrap();
+
+    for &n in sizes {
+        let pts = generate(Distribution::Disk, n, 42);
+        let json = json_body(&pts);
+        let bin = le_body(&pts);
+        report.add(b.run(&format!("hull_n{n}/tcp_text"), || ct.hull(&pts).unwrap().upper.len()));
+        report.add(b.run(&format!("hull_n{n}/tcp_binary"), || cb.hull(&pts).unwrap().upper.len()));
+        report.add(b.run(&format!("hull_n{n}/http_json"), || {
+            let r = hc.post_json("/v1/hull", &json).unwrap();
+            assert_eq!(r.status, 200);
+            r.body.len()
+        }));
+        report.add(b.run(&format!("hull_n{n}/http_binary"), || {
+            let r = hc.post_bytes("/v1/hull", &bin).unwrap();
+            assert_eq!(r.status, 200);
+            r.body.len()
+        }));
+        report.note(format!(
+            "n={n}: {} JSON request bytes vs {} octet-stream bytes",
+            json.len(),
+            bin.len()
+        ));
+    }
+    report.finish();
+
+    // -------------------------------- E13b: paginated vs one-shot reads
+    let hull_n = if fast { 512usize } else { 4096 };
+    let limit = 512usize;
+    let mut report = Report::new(&format!(
+        "E13b: session hull reads — one-shot vs cursor pages (circle n={hull_n}, limit={limit})"
+    ));
+    // circle input: every point is a hull vertex, so the paginated walk
+    // really does stream hull_n points through the cursor machinery
+    let sid_resp = hc.post_json("/v1/sessions", "").unwrap();
+    let sid = sid_resp.json().get("sid").and_then(|v| v.as_f64()).unwrap() as u64;
+    let pts = generate(Distribution::Circle, hull_n, 9);
+    let r = hc.post_bytes(&format!("/v1/sessions/{sid}/points"), &le_body(&pts)).unwrap();
+    assert_eq!(r.status, 200);
+    // settle the pending buffer so every read serves the same epoch
+    let warm = hc.get(&format!("/v1/sessions/{sid}/hull?limit=1")).unwrap();
+    let epoch = warm.json().get("epoch").and_then(|v| v.as_f64()).unwrap() as u64;
+
+    report.add(b.run("read/tcp_one_shot", || ct.session_hull(sid).unwrap().upper.len()));
+    report.add(b.run("read/http_one_shot", || {
+        let r = hc
+            .get(&format!("/v1/sessions/{sid}/hull?epoch={epoch}&limit={hull_n}"))
+            .unwrap();
+        assert_eq!(r.status, 200);
+        r.body.len()
+    }));
+    report.add(b.run("read/http_paginated", || {
+        let mut target = format!("/v1/sessions/{sid}/hull?epoch={epoch}&limit={limit}");
+        let (mut pages, mut bytes) = (0usize, 0usize);
+        loop {
+            let r = hc.get(&target).unwrap();
+            assert_eq!(r.status, 200);
+            bytes += r.body.len();
+            pages += 1;
+            let j = r.json();
+            match j.get("next_cursor") {
+                Some(wagener_hull::util::json::Json::Str(c)) => {
+                    target = format!("/v1/sessions/{sid}/hull?cursor={c}&limit={limit}");
+                }
+                _ => break,
+            }
+        }
+        (pages, bytes)
+    }));
+    report.note(format!(
+        "paginated walk: {} pages of ≤{limit} points each",
+        (hull_n + 2).div_ceil(limit)
+    ));
+    report.finish();
+
+    drop((ct, cb, hc));
+    gw.stop();
+    tcp.stop();
+}

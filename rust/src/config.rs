@@ -40,6 +40,15 @@
 //!
 //! [store]
 //! dir = ""                   # snapshot-store directory; "" = durability off
+//!
+//! [gateway]
+//! enabled = false            # HTTP/JSON edge listener (shares the engine
+//!                            # with the TCP protocol listener)
+//! port = 8080                # bound on the [server] addr's host
+//! max_body_bytes = 67108864  # HTTP request-body cap (413 past it);
+//!                            # default fits the binary frame point cap
+//! page_limit = 4096          # max (and default) hull points per page on
+//!                            # GET /v1/sessions/{sid}/hull
 //! ```
 
 use std::path::PathBuf;
@@ -82,6 +91,31 @@ pub struct StoreSection {
     pub dir: Option<PathBuf>,
 }
 
+/// `[gateway]` section: the HTTP/JSON edge listener.
+#[derive(Clone, Debug)]
+pub struct GatewaySection {
+    /// Serve HTTP alongside the TCP protocol (both share one engine).
+    pub enabled: bool,
+    /// HTTP port, bound on the `[server]` addr's host.
+    pub port: u16,
+    /// Request-body ceiling; larger bodies answer 413.  The default fits
+    /// the binary wire format's point cap (`MAX_REQUEST_POINTS` × 16 B).
+    pub max_body_bytes: usize,
+    /// Max (and default) hull points per page on paginated hull reads.
+    pub page_limit: usize,
+}
+
+impl Default for GatewaySection {
+    fn default() -> Self {
+        GatewaySection {
+            enabled: false,
+            port: 8080,
+            max_body_bytes: 1 << 26,
+            page_limit: 4096,
+        }
+    }
+}
+
 /// Full launcher configuration.
 #[derive(Clone, Debug, Default)]
 pub struct Config {
@@ -90,6 +124,7 @@ pub struct Config {
     pub engine: EngineSection,
     pub stream: StreamConfig,
     pub store: StoreSection,
+    pub gateway: GatewaySection,
 }
 
 impl Config {
@@ -174,6 +209,21 @@ impl Config {
                         let s = value.as_str().ok_or_else(|| anyhow!("{path}: want string"))?;
                         cfg.store.dir = (!s.is_empty()).then(|| PathBuf::from(s));
                     }
+                    "gateway.enabled" => {
+                        cfg.gateway.enabled =
+                            value.as_bool().ok_or_else(|| anyhow!("{path}: want bool"))?;
+                    }
+                    "gateway.port" => {
+                        cfg.gateway.port = as_usize(value, &path)?
+                            .try_into()
+                            .map_err(|_| anyhow!("{path}: want a port (0..=65535)"))?;
+                    }
+                    "gateway.max_body_bytes" => {
+                        cfg.gateway.max_body_bytes = as_usize(value, &path)?.max(1);
+                    }
+                    "gateway.page_limit" => {
+                        cfg.gateway.page_limit = as_usize(value, &path)?.max(1);
+                    }
                     "stream.max_sessions" => {
                         cfg.stream.max_sessions = as_usize(value, &path)?.max(1);
                     }
@@ -239,6 +289,11 @@ merge_threshold = 128
 idle_ttl_ms = 2500
 [store]
 dir = "/tmp/snaps"
+[gateway]
+enabled = true
+port = 8088
+max_body_bytes = 1048576
+page_limit = 512
 "#,
         )
         .unwrap();
@@ -263,6 +318,10 @@ dir = "/tmp/snaps"
         assert_eq!(cfg.stream.max_sessions, 9);
         assert_eq!(cfg.stream.merge_threshold, 128);
         assert_eq!(cfg.stream.idle_ttl_ms, 2500);
+        assert!(cfg.gateway.enabled);
+        assert_eq!(cfg.gateway.port, 8088);
+        assert_eq!(cfg.gateway.max_body_bytes, 1 << 20);
+        assert_eq!(cfg.gateway.page_limit, 512);
     }
 
     #[test]
@@ -284,6 +343,10 @@ dir = "/tmp/snaps"
         assert_eq!(cfg.stream.idle_ttl_ms, 60_000);
         assert_eq!(cfg.engine.placement, PlacementKind::Stripe); // ring is opt-in
         assert_eq!(cfg.store.dir, None); // durability is opt-in
+        assert!(!cfg.gateway.enabled); // HTTP is opt-in
+        assert_eq!(cfg.gateway.port, 8080);
+        assert_eq!(cfg.gateway.max_body_bytes, 1 << 26);
+        assert_eq!(cfg.gateway.page_limit, 4096);
     }
 
     #[test]
@@ -303,6 +366,10 @@ dir = "/tmp/snaps"
         assert!(Config::from_toml("[engine]\nplacement = \"rendezvous\"").is_err());
         assert!(Config::from_toml("[store]\ndir = 7").is_err());
         assert!(Config::from_toml("[store]\npath = \"x\"").is_err());
+        assert!(Config::from_toml("[gateway]\nenabled = \"yes\"").is_err());
+        assert!(Config::from_toml("[gateway]\nport = 70000").is_err());
+        assert!(Config::from_toml("[gateway]\nport = -1").is_err());
+        assert!(Config::from_toml("[gateway]\nlisten = \"x\"").is_err());
         // empty dir string means "durability off", not a cwd store
         let cfg = Config::from_toml("[store]\ndir = \"\"").unwrap();
         assert_eq!(cfg.store.dir, None);

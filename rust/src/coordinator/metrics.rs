@@ -461,6 +461,143 @@ impl IoMetrics {
     }
 }
 
+/// The HTTP gateway's fixed route table, in match order.  Per-route
+/// counters live in a fixed array indexed by this enum, so the hot path
+/// is a handful of relaxed atomic adds — no map lookup, no lock.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GatewayRoute {
+    Hull,
+    SessionOpen,
+    SessionAdd,
+    SessionHull,
+    SessionClose,
+    Stats,
+    Healthz,
+    Readyz,
+    /// anything that matched no route (404) or died before routing (400).
+    Other,
+}
+
+impl GatewayRoute {
+    pub const ALL: [GatewayRoute; 9] = [
+        GatewayRoute::Hull,
+        GatewayRoute::SessionOpen,
+        GatewayRoute::SessionAdd,
+        GatewayRoute::SessionHull,
+        GatewayRoute::SessionClose,
+        GatewayRoute::Stats,
+        GatewayRoute::Healthz,
+        GatewayRoute::Readyz,
+        GatewayRoute::Other,
+    ];
+
+    /// The route label used in STATS and request logs (the pattern, not
+    /// the concrete path — one series per route, not per sid).
+    pub const fn name(self) -> &'static str {
+        match self {
+            GatewayRoute::Hull => "POST /v1/hull",
+            GatewayRoute::SessionOpen => "POST /v1/sessions",
+            GatewayRoute::SessionAdd => "POST /v1/sessions/{sid}/points",
+            GatewayRoute::SessionHull => "GET /v1/sessions/{sid}/hull",
+            GatewayRoute::SessionClose => "DELETE /v1/sessions/{sid}",
+            GatewayRoute::Stats => "GET /v1/stats",
+            GatewayRoute::Healthz => "GET /healthz",
+            GatewayRoute::Readyz => "GET /readyz",
+            GatewayRoute::Other => "other",
+        }
+    }
+}
+
+/// One route's slice of the gateway metrics.
+#[derive(Debug, Default)]
+pub struct GatewayRouteMetrics {
+    pub requests: AtomicU64,
+    pub status_2xx: AtomicU64,
+    pub status_4xx: AtomicU64,
+    pub status_5xx: AtomicU64,
+    pub bytes_in: AtomicU64,
+    pub bytes_out: AtomicU64,
+    pub latency: Histogram,
+}
+
+/// The gateway's contribution to the shared metrics sink — folded into
+/// STATS and `/v1/stats` under the `gateway` key.  A zeroed instance
+/// serializes the identical schema, so the key is present (all-zero)
+/// even on engines serving only the TCP listener.
+#[derive(Debug)]
+pub struct GatewayMetrics {
+    /// HTTP connections accepted, lifetime.
+    pub accepted: AtomicU64,
+    /// HTTP connections open right now (gauge).
+    pub open_connections: AtomicU64,
+    /// requests torn down on malformed HTTP framing.
+    pub decode_errors: AtomicU64,
+    routes: [GatewayRouteMetrics; GatewayRoute::ALL.len()],
+}
+
+impl Default for GatewayMetrics {
+    fn default() -> Self {
+        GatewayMetrics {
+            accepted: AtomicU64::new(0),
+            open_connections: AtomicU64::new(0),
+            decode_errors: AtomicU64::new(0),
+            routes: std::array::from_fn(|_| GatewayRouteMetrics::default()),
+        }
+    }
+}
+
+impl GatewayMetrics {
+    pub fn route(&self, r: GatewayRoute) -> &GatewayRouteMetrics {
+        &self.routes[r as usize]
+    }
+
+    /// Record one finished exchange: request counter, status class,
+    /// byte counters, latency histogram — the per-route observability
+    /// contract in one call.
+    pub fn observe(&self, r: GatewayRoute, status: u16, bytes_in: u64, bytes_out: u64, ns: u64) {
+        let m = self.route(r);
+        m.requests.fetch_add(1, Ordering::Relaxed);
+        let class = match status {
+            200..=299 => &m.status_2xx,
+            400..=499 => &m.status_4xx,
+            _ => &m.status_5xx,
+        };
+        class.fetch_add(1, Ordering::Relaxed);
+        m.bytes_in.fetch_add(bytes_in, Ordering::Relaxed);
+        m.bytes_out.fetch_add(bytes_out, Ordering::Relaxed);
+        m.latency.record_ns(ns);
+    }
+
+    /// The `gateway` object of the STATS JSON.
+    pub fn to_json(&self) -> Json {
+        let g = |c: &AtomicU64| Json::Num(c.load(Ordering::Relaxed) as f64);
+        let routes: Vec<(&str, Json)> = GatewayRoute::ALL
+            .iter()
+            .map(|&r| {
+                let m = self.route(r);
+                (
+                    r.name(),
+                    Json::obj(vec![
+                        ("requests", g(&m.requests)),
+                        ("status_2xx", g(&m.status_2xx)),
+                        ("status_4xx", g(&m.status_4xx)),
+                        ("status_5xx", g(&m.status_5xx)),
+                        ("bytes_in", g(&m.bytes_in)),
+                        ("bytes_out", g(&m.bytes_out)),
+                        ("latency", m.latency.snap().to_json()),
+                    ]),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("accepted", g(&self.accepted)),
+            ("open_connections", g(&self.open_connections)),
+            ("decode_errors", g(&self.decode_errors)),
+            ("routes", Json::obj(routes)),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -660,5 +797,44 @@ mod tests {
         assert_eq!(f.in_flight(), 0); // racy relaxed reads can transiently invert
         f.requests = 10;
         assert_eq!(f.in_flight(), 3);
+    }
+
+    fn json_keys(j: &Json) -> Vec<String> {
+        match j {
+            Json::Obj(m) => m.keys().cloned().collect(),
+            _ => panic!("not an object"),
+        }
+    }
+
+    #[test]
+    fn gateway_metrics_schema_is_traffic_independent() {
+        // a zeroed sink and a busy sink must serialize the same key set at
+        // every level — /v1/stats consumers see one schema regardless of
+        // which routes have seen traffic (or whether a gateway runs at all)
+        let zero = GatewayMetrics::default();
+        let busy = GatewayMetrics::default();
+        Metrics::inc(&busy.accepted);
+        busy.observe(GatewayRoute::Hull, 200, 128, 4096, 12_000);
+        busy.observe(GatewayRoute::SessionHull, 404, 0, 64, 5_000);
+        busy.observe(GatewayRoute::Hull, 503, 16, 90, 1_000);
+        let zj = zero.to_json();
+        let bj = busy.to_json();
+        assert_eq!(json_keys(&zj), json_keys(&bj));
+        assert_eq!(
+            json_keys(zj.get("routes").unwrap()),
+            json_keys(bj.get("routes").unwrap())
+        );
+        for r in GatewayRoute::ALL {
+            let z = zj.get("routes").unwrap().get(r.name()).unwrap();
+            let b = bj.get("routes").unwrap().get(r.name()).unwrap();
+            assert_eq!(json_keys(z), json_keys(b), "{}", r.name());
+        }
+        let hull = bj.get("routes").unwrap().get("POST /v1/hull").unwrap();
+        assert_eq!(hull.get("requests").unwrap().as_usize(), Some(2));
+        assert_eq!(hull.get("status_2xx").unwrap().as_usize(), Some(1));
+        assert_eq!(hull.get("status_5xx").unwrap().as_usize(), Some(1));
+        assert_eq!(hull.get("bytes_out").unwrap().as_usize(), Some(4186));
+        // round-trips through the parser like every STATS payload
+        crate::util::json::parse(&bj.to_string()).unwrap();
     }
 }

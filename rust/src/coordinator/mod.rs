@@ -20,8 +20,8 @@ pub mod router;
 pub use backend::{BackendKind, HullBackend};
 pub use batcher::BatcherConfig;
 pub use metrics::{
-    Histogram, HistogramSnapshot, IoLoopMetrics, IoMetrics, Metrics, MetricsFrame,
-    MetricsSnapshot,
+    GatewayMetrics, GatewayRoute, GatewayRouteMetrics, Histogram, HistogramSnapshot,
+    IoLoopMetrics, IoMetrics, Metrics, MetricsFrame, MetricsSnapshot,
 };
 pub use request::{HullReply, HullRequest, HullResponse, RequestError};
 pub use router::{Breaker, Coordinator, CoordinatorConfig};

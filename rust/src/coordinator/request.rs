@@ -122,11 +122,14 @@ impl std::fmt::Display for RequestError {
             }
             RequestError::Backend(e) => write!(f, "backend failure: {e}"),
             RequestError::Shutdown => write!(f, "coordinator is shutting down"),
-            // single tokens: these are the wire-visible typed errors the
-            // README's robustness vocabulary documents (clients match on
-            // them), so keep them machine-parseable
-            RequestError::DeadlineExceeded => write!(f, "deadline-exceeded"),
-            RequestError::Overloaded => write!(f, "overloaded"),
+            // single tokens: the wire-visible typed errors — one spelling,
+            // owned by the shared table in `crate::errors`
+            RequestError::DeadlineExceeded => {
+                f.write_str(crate::errors::TypedError::DeadlineExceeded.wire_token())
+            }
+            RequestError::Overloaded => {
+                f.write_str(crate::errors::TypedError::Overloaded.wire_token())
+            }
         }
     }
 }

@@ -39,12 +39,12 @@ pub mod placement;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, PoisonError, RwLock};
+use std::sync::{mpsc, Arc, OnceLock, PoisonError, RwLock};
 use std::time::Instant;
 
 use crate::coordinator::{
-    BackendKind, Coordinator, CoordinatorConfig, HullReply, HullRequest, HullResponse,
-    IoMetrics, Metrics, MetricsFrame, MetricsSnapshot, RequestError,
+    BackendKind, Coordinator, CoordinatorConfig, GatewayMetrics, HullReply, HullRequest,
+    HullResponse, IoMetrics, Metrics, MetricsFrame, MetricsSnapshot, RequestError,
 };
 use crate::geometry::point::Point;
 use crate::log_warn;
@@ -172,6 +172,10 @@ pub struct Engine {
     /// snapshot store for `SOPEN <sid>` restores + rebalance fallback
     /// (the per-shard registries hold their own clones for checkpoints).
     store: Option<Arc<dyn SnapshotStore>>,
+    /// the HTTP gateway's metrics sink, registered once at gateway start;
+    /// STATS serializes a zeroed stand-in until (or unless) one exists,
+    /// so the `gateway` key is schema-stable across deployments.
+    gateway_metrics: OnceLock<Arc<GatewayMetrics>>,
 }
 
 fn read_lock<T>(l: &RwLock<T>) -> std::sync::RwLockReadGuard<'_, T> {
@@ -235,6 +239,7 @@ impl Engine {
             overrides: RwLock::new(HashMap::new()),
             next_sid: AtomicU64::new(1),
             store: cfg.store,
+            gateway_metrics: OnceLock::new(),
         })
     }
 
@@ -256,6 +261,7 @@ impl Engine {
             overrides: RwLock::new(HashMap::new()),
             next_sid: AtomicU64::new(1),
             store,
+            gateway_metrics: OnceLock::new(),
         }
     }
 
@@ -637,10 +643,32 @@ impl Engine {
         if let Some(active) = active_connections {
             obj.insert("active_connections".into(), Json::Num(active as f64));
         }
-        if let Some(io) = io {
-            obj.insert("io".into(), io.to_json());
-        }
+        // schema normalization: `io` and `gateway` are always present so
+        // STATS serializes one stable shape regardless of connection core
+        // (the threaded shim has no event-loop gauges) or whether an HTTP
+        // gateway is running — absent subsystems report zeroes
+        obj.insert(
+            "io".into(),
+            match io {
+                Some(io) => io.to_json(),
+                None => IoMetrics::new(0).to_json(),
+            },
+        );
+        obj.insert(
+            "gateway".into(),
+            match self.gateway_metrics.get() {
+                Some(gw) => gw.to_json(),
+                None => GatewayMetrics::default().to_json(),
+            },
+        );
         MetricsSnapshot(Json::Obj(obj))
+    }
+
+    /// Register the HTTP gateway's metrics sink (once; later calls keep
+    /// the first).  Returns the registered sink so gateway start-up can
+    /// share one `Arc` between its loops and STATS.
+    pub fn register_gateway_metrics(&self) -> Arc<GatewayMetrics> {
+        self.gateway_metrics.get_or_init(|| Arc::new(GatewayMetrics::default())).clone()
     }
 
     // ---------------------------------------------------------- topology

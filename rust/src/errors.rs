@@ -1,0 +1,211 @@
+//! The shared typed-error vocabulary.
+//!
+//! The serving stack exposes a small set of *typed* errors — failures a
+//! client is expected to match on and handle programmatically, as opposed
+//! to free-form diagnostics.  Their wire tokens used to live as string
+//! literals scattered across `coordinator/request.rs`,
+//! `stream/registry.rs` and `store/mod.rs`; this module is now the single
+//! source of truth: the `Display` impls of [`RequestError`],
+//! [`SessionError`] and [`StoreError`] delegate their typed arms to
+//! [`TypedError::wire_token`], and the HTTP gateway maps the same enum to
+//! stable statuses via [`TypedError::http_status`].  The TCP wire strings
+//! are pinned by the parity suites — changing a token here is a protocol
+//! break, not a refactor.
+
+use crate::coordinator::RequestError;
+use crate::store::StoreError;
+use crate::stream::SessionError;
+
+/// Every machine-parseable error token the system emits, with its one
+/// wire spelling and its one HTTP status.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TypedError {
+    /// Load shed: every candidate shard sat at its admission ceiling.
+    Overloaded,
+    /// The request's deadline passed before a worker could answer.
+    DeadlineExceeded,
+    /// sid never existed, was closed, or was evicted.
+    UnknownSession,
+    /// Epoch time-travel to an epoch the session never reached.
+    UnknownEpoch,
+    /// Snapshot bytes or manifest failed verification.
+    SnapshotCorrupt,
+    /// Snapshot store I/O failed.
+    SnapshotIo,
+}
+
+impl TypedError {
+    pub const ALL: [TypedError; 6] = [
+        TypedError::Overloaded,
+        TypedError::DeadlineExceeded,
+        TypedError::UnknownSession,
+        TypedError::UnknownEpoch,
+        TypedError::SnapshotCorrupt,
+        TypedError::SnapshotIo,
+    ];
+
+    /// The exact token the TCP text/binary error payload starts with.
+    pub const fn wire_token(self) -> &'static str {
+        match self {
+            TypedError::Overloaded => "overloaded",
+            TypedError::DeadlineExceeded => "deadline-exceeded",
+            TypedError::UnknownSession => "unknown-session",
+            TypedError::UnknownEpoch => "unknown-epoch",
+            TypedError::SnapshotCorrupt => "snapshot-corrupt",
+            TypedError::SnapshotIo => "snapshot-io",
+        }
+    }
+
+    /// The stable HTTP status the gateway answers with.
+    pub const fn http_status(self) -> u16 {
+        match self {
+            TypedError::Overloaded => 503,
+            TypedError::DeadlineExceeded => 504,
+            TypedError::UnknownSession => 404,
+            TypedError::UnknownEpoch => 404,
+            TypedError::SnapshotCorrupt => 500,
+            TypedError::SnapshotIo => 500,
+        }
+    }
+
+    /// The typed classification of a request-level failure, if it has one.
+    pub fn of_request(e: &RequestError) -> Option<TypedError> {
+        match e {
+            RequestError::Overloaded => Some(TypedError::Overloaded),
+            RequestError::DeadlineExceeded => Some(TypedError::DeadlineExceeded),
+            _ => None,
+        }
+    }
+
+    /// Store failures are always typed.
+    pub fn of_store(e: &StoreError) -> TypedError {
+        match e {
+            StoreError::Corrupt(_) => TypedError::SnapshotCorrupt,
+            StoreError::Io(_) => TypedError::SnapshotIo,
+        }
+    }
+
+    /// The typed classification of a session-level failure, if it has one.
+    pub fn of_session(e: &SessionError) -> Option<TypedError> {
+        match e {
+            SessionError::UnknownSession => Some(TypedError::UnknownSession),
+            SessionError::UnknownEpoch => Some(TypedError::UnknownEpoch),
+            SessionError::Snapshot(s) => Some(TypedError::of_store(s)),
+            SessionError::Request(r) => TypedError::of_request(r),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for TypedError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.wire_token())
+    }
+}
+
+/// HTTP status for any request-level failure: the typed mapping when one
+/// applies, else 400 for caller mistakes and 5xx for server-side loss.
+pub fn http_status_of_request(e: &RequestError) -> u16 {
+    match TypedError::of_request(e) {
+        Some(t) => t.http_status(),
+        None => match e {
+            RequestError::Backend(_) => 502,
+            RequestError::Shutdown => 503,
+            _ => 400,
+        },
+    }
+}
+
+/// JSON error-body `code` for any request-level failure.
+pub fn code_of_request(e: &RequestError) -> &'static str {
+    match TypedError::of_request(e) {
+        Some(t) => t.wire_token(),
+        None => match e {
+            RequestError::Backend(_) => "backend-failure",
+            RequestError::Shutdown => "shutting-down",
+            _ => "bad-request",
+        },
+    }
+}
+
+/// HTTP status for any session-level failure.
+pub fn http_status_of_session(e: &SessionError) -> u16 {
+    match TypedError::of_session(e) {
+        Some(t) => t.http_status(),
+        None => match e {
+            SessionError::Capacity { .. } => 503,
+            SessionError::AlreadyOpen => 409,
+            SessionError::Request(r) => http_status_of_request(r),
+            _ => 500,
+        },
+    }
+}
+
+/// JSON error-body `code` for any session-level failure.
+pub fn code_of_session(e: &SessionError) -> &'static str {
+    match TypedError::of_session(e) {
+        Some(t) => t.wire_token(),
+        None => match e {
+            SessionError::Capacity { .. } => "session-capacity",
+            SessionError::AlreadyOpen => "session-already-open",
+            SessionError::Request(r) => code_of_request(r),
+            _ => "internal",
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_tokens_are_pinned() {
+        // these strings are protocol: clients match on them (README
+        // robustness vocabulary), and the parity suites compare them
+        // byte-for-byte across cores and wire formats
+        let want = [
+            "overloaded",
+            "deadline-exceeded",
+            "unknown-session",
+            "unknown-epoch",
+            "snapshot-corrupt",
+            "snapshot-io",
+        ];
+        for (t, w) in TypedError::ALL.iter().zip(want) {
+            assert_eq!(t.wire_token(), w);
+            assert_eq!(t.to_string(), w);
+        }
+    }
+
+    #[test]
+    fn display_impls_delegate_to_the_table() {
+        assert_eq!(RequestError::Overloaded.to_string(), "overloaded");
+        assert_eq!(RequestError::DeadlineExceeded.to_string(), "deadline-exceeded");
+        assert_eq!(SessionError::UnknownSession.to_string(), "unknown-session");
+        assert_eq!(SessionError::UnknownEpoch.to_string(), "unknown-epoch");
+        assert_eq!(
+            StoreError::Corrupt("x".into()).to_string(),
+            "snapshot-corrupt: x"
+        );
+        assert_eq!(StoreError::Io("y".into()).to_string(), "snapshot-io: y");
+        assert_eq!(
+            SessionError::Snapshot(StoreError::Corrupt("m".into())).to_string(),
+            "snapshot-corrupt: m"
+        );
+    }
+
+    #[test]
+    fn http_mapping_is_stable() {
+        assert_eq!(TypedError::Overloaded.http_status(), 503);
+        assert_eq!(TypedError::DeadlineExceeded.http_status(), 504);
+        assert_eq!(TypedError::UnknownSession.http_status(), 404);
+        assert_eq!(TypedError::UnknownEpoch.http_status(), 404);
+        assert_eq!(TypedError::SnapshotCorrupt.http_status(), 500);
+        assert_eq!(TypedError::SnapshotIo.http_status(), 500);
+        assert_eq!(http_status_of_request(&RequestError::Empty), 400);
+        assert_eq!(http_status_of_request(&RequestError::Backend("b".into())), 502);
+        assert_eq!(http_status_of_session(&SessionError::Capacity { max: 4 }), 503);
+        assert_eq!(http_status_of_session(&SessionError::AlreadyOpen), 409);
+        assert_eq!(code_of_session(&SessionError::Request(RequestError::Overloaded)), "overloaded");
+    }
+}

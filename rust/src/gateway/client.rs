@@ -1,0 +1,156 @@
+//! Minimal blocking HTTP/1.1 client for the gateway — the HTTP-side
+//! sibling of [`crate::server::HullClient`], used by the parity suite
+//! and benches.  Keep-alive by default: one connection serves many
+//! requests; responses are framed by `Content-Length` (the only framing
+//! the gateway emits).
+
+use std::io::{self, ErrorKind, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use crate::util::json::{self, Json};
+
+/// One decoded response.
+#[derive(Debug)]
+pub struct HttpResult {
+    pub status: u16,
+    /// Headers with ascii-lowercased names.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResult {
+    /// Parse the body as JSON (panics on non-JSON — test/bench helper).
+    pub fn json(&self) -> Json {
+        let text = std::str::from_utf8(&self.body).expect("response body is utf-8");
+        json::parse(text).expect("response body is JSON")
+    }
+}
+
+pub struct HttpClient {
+    stream: TcpStream,
+    /// Unconsumed bytes past the previous response (keep-alive).
+    rbuf: Vec<u8>,
+}
+
+impl HttpClient {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<HttpClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(HttpClient { stream, rbuf: Vec::new() })
+    }
+
+    /// Send one request and read its response.  `content_type` is only
+    /// emitted when a body is present.
+    pub fn request(
+        &mut self,
+        method: &str,
+        target: &str,
+        content_type: &str,
+        body: &[u8],
+    ) -> io::Result<HttpResult> {
+        let mut wire = format!("{method} {target} HTTP/1.1\r\nhost: gw\r\n").into_bytes();
+        if !body.is_empty() {
+            wire.extend_from_slice(format!("content-type: {content_type}\r\n").as_bytes());
+        }
+        wire.extend_from_slice(format!("content-length: {}\r\n\r\n", body.len()).as_bytes());
+        wire.extend_from_slice(body);
+        self.stream.write_all(&wire)?;
+        self.read_response()
+    }
+
+    pub fn get(&mut self, target: &str) -> io::Result<HttpResult> {
+        self.request("GET", target, "", &[])
+    }
+
+    pub fn delete(&mut self, target: &str) -> io::Result<HttpResult> {
+        self.request("DELETE", target, "", &[])
+    }
+
+    pub fn post_json(&mut self, target: &str, body: &str) -> io::Result<HttpResult> {
+        self.request("POST", target, "application/json", body.as_bytes())
+    }
+
+    /// POST raw little-endian `f64` pairs (the binary hull body).
+    pub fn post_bytes(&mut self, target: &str, body: &[u8]) -> io::Result<HttpResult> {
+        self.request("POST", target, "application/octet-stream", body)
+    }
+
+    fn fill(&mut self) -> io::Result<()> {
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        ErrorKind::UnexpectedEof,
+                        "connection closed mid-response",
+                    ))
+                }
+                Ok(n) => {
+                    self.rbuf.extend_from_slice(&chunk[..n]);
+                    return Ok(());
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    fn read_response(&mut self) -> io::Result<HttpResult> {
+        let bad = |d: &str| io::Error::new(ErrorKind::InvalidData, format!("bad response: {d}"));
+        // head
+        let head_len = loop {
+            if let Some(i) = find_blank_line(&self.rbuf) {
+                break i;
+            }
+            self.fill()?;
+        };
+        let head = std::str::from_utf8(&self.rbuf[..head_len])
+            .map_err(|_| bad("head is not utf-8"))?
+            .to_string();
+        let mut lines = head.split('\n').map(|l| l.strip_suffix('\r').unwrap_or(l));
+        let status_line = lines.next().unwrap_or("");
+        let status: u16 = status_line
+            .split(' ')
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| bad("status line"))?;
+        let mut headers = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let (name, value) = line.split_once(':').ok_or_else(|| bad("header line"))?;
+            headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+        }
+        let len: usize = headers
+            .iter()
+            .find(|(n, _)| n == "content-length")
+            .and_then(|(_, v)| v.parse().ok())
+            .ok_or_else(|| bad("missing content-length"))?;
+        // body
+        while self.rbuf.len() < head_len + len {
+            self.fill()?;
+        }
+        let body = self.rbuf[head_len..head_len + len].to_vec();
+        self.rbuf.drain(..head_len + len);
+        Ok(HttpResult { status, headers, body })
+    }
+}
+
+/// Index just past the first blank line (`\r\n\r\n` or `\n\n`).
+fn find_blank_line(buf: &[u8]) -> Option<usize> {
+    let mut i = 0;
+    while i < buf.len() {
+        if buf[i] == b'\n' {
+            let rest = &buf[i + 1..];
+            if rest.first() == Some(&b'\n') {
+                return Some(i + 2);
+            }
+            if rest.len() >= 2 && rest[0] == b'\r' && rest[1] == b'\n' {
+                return Some(i + 3);
+            }
+        }
+        i += 1;
+    }
+    None
+}

@@ -1,0 +1,209 @@
+//! Opaque pagination cursors for hull reads.
+//!
+//! A hull snapshot is two monotone chains (`upper`, `lower`) pinned to an
+//! epoch; a cursor names a resume position inside that snapshot:
+//! `(epoch, chain, offset)`.  The epoch rides inside the cursor, so every
+//! follow-up page re-reads the *same immutable ledger entry*
+//! ([`Engine::session_hull_at`] with `Some(epoch)`) no matter how many
+//! `SADD`s land between pages — that is what makes pages reassemble
+//! bit-identically to a one-shot `SHULL`, and what makes a cursor from an
+//! evicted-and-restored session answer the typed `unknown-epoch` instead
+//! of silently paginating a different hull.
+//!
+//! The wire form is hex over a fixed little-endian layout plus an xor
+//! checksum byte — opaque to clients (the contract is "echo it back"),
+//! while tampering or truncation decodes to `None` → 400 `bad-cursor`.
+
+use crate::geometry::point::Point;
+
+/// Resume position inside one epoch-pinned hull snapshot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Cursor {
+    pub epoch: u64,
+    /// 0 = upper chain, 1 = lower chain.
+    pub chain: u8,
+    /// Point offset within that chain.
+    pub offset: u64,
+}
+
+const VERSION: u8 = 1;
+/// version + epoch + chain + offset + checksum.
+const RAW_LEN: usize = 1 + 8 + 1 + 8 + 1;
+
+fn checksum(raw: &[u8]) -> u8 {
+    raw.iter().fold(0x5Au8, |a, b| a ^ b.rotate_left(3))
+}
+
+/// Encode to the opaque wire string (38 lowercase hex chars).
+pub fn encode(c: &Cursor) -> String {
+    let mut raw = [0u8; RAW_LEN];
+    raw[0] = VERSION;
+    raw[1..9].copy_from_slice(&c.epoch.to_le_bytes());
+    raw[9] = c.chain;
+    raw[10..18].copy_from_slice(&c.offset.to_le_bytes());
+    raw[18] = checksum(&raw[..18]);
+    let mut out = String::with_capacity(RAW_LEN * 2);
+    for b in raw {
+        out.push_str(&format!("{b:02x}"));
+    }
+    out
+}
+
+/// Decode; `None` for anything that is not a verbatim [`encode`] output.
+pub fn decode(s: &str) -> Option<Cursor> {
+    if s.len() != RAW_LEN * 2 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return None;
+    }
+    let mut raw = [0u8; RAW_LEN];
+    for (i, r) in raw.iter_mut().enumerate() {
+        *r = u8::from_str_radix(&s[i * 2..i * 2 + 2], 16).ok()?;
+    }
+    if raw[0] != VERSION || raw[18] != checksum(&raw[..18]) {
+        return None;
+    }
+    let chain = raw[9];
+    if chain > 1 {
+        return None;
+    }
+    Some(Cursor {
+        epoch: u64::from_le_bytes(raw[1..9].try_into().unwrap()),
+        chain,
+        offset: u64::from_le_bytes(raw[10..18].try_into().unwrap()),
+    })
+}
+
+/// One page of a snapshot.
+#[derive(Debug)]
+pub struct Page {
+    pub upper: Vec<Point>,
+    pub lower: Vec<Point>,
+    /// Resume cursor; `None` when both chains are exhausted.
+    pub next: Option<Cursor>,
+}
+
+/// Slice up to `limit` points out of `(upper, lower)` starting at `at`,
+/// upper chain first.  Offsets past a chain's end are treated as
+/// exhausted (a clamped resume, not an error), so a cursor is always safe
+/// to retry.  Concatenating the pages of any limit schedule yields
+/// exactly `upper ++ lower` — the pagination-parity property the
+/// integration suite and the diffsim ledger both pin.
+pub fn page(upper: &[Point], lower: &[Point], at: Cursor, limit: usize) -> Page {
+    debug_assert!(limit > 0);
+    let mut out_upper = Vec::new();
+    let mut out_lower = Vec::new();
+    let mut chain = at.chain;
+    let mut offset = at.offset as usize;
+    let mut room = limit;
+    if chain == 0 {
+        let start = offset.min(upper.len());
+        let take = room.min(upper.len() - start);
+        out_upper.extend_from_slice(&upper[start..start + take]);
+        room -= take;
+        if start + take < upper.len() {
+            return Page {
+                upper: out_upper,
+                lower: out_lower,
+                next: Some(Cursor { epoch: at.epoch, chain: 0, offset: (start + take) as u64 }),
+            };
+        }
+        chain = 1;
+        offset = 0;
+    }
+    debug_assert_eq!(chain, 1);
+    let start = offset.min(lower.len());
+    let take = room.min(lower.len() - start);
+    out_lower.extend_from_slice(&lower[start..start + take]);
+    let next = (start + take < lower.len())
+        .then(|| Cursor { epoch: at.epoch, chain: 1, offset: (start + take) as u64 });
+    Page { upper: out_upper, lower: out_lower, next }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pts(n: usize, base: f64) -> Vec<Point> {
+        (0..n).map(|i| Point { x: base + i as f64, y: base - i as f64 }).collect()
+    }
+
+    #[test]
+    fn cursor_roundtrips() {
+        for c in [
+            Cursor { epoch: 0, chain: 0, offset: 0 },
+            Cursor { epoch: 7, chain: 1, offset: 12345 },
+            Cursor { epoch: u64::MAX, chain: 0, offset: u64::MAX },
+        ] {
+            let s = encode(&c);
+            assert_eq!(s.len(), 38);
+            assert_eq!(decode(&s), Some(c), "{s}");
+        }
+    }
+
+    #[test]
+    fn tampering_and_garbage_decode_to_none() {
+        let s = encode(&Cursor { epoch: 9, chain: 1, offset: 4 });
+        assert!(decode(&s[..s.len() - 2]).is_none(), "truncated");
+        assert!(decode(&format!("{s}aa")).is_none(), "extended");
+        for i in 0..s.len() {
+            let mut t: Vec<u8> = s.bytes().collect();
+            t[i] = if t[i] == b'0' { b'1' } else { b'0' };
+            let t = String::from_utf8(t).unwrap();
+            if t != s {
+                assert!(decode(&t).is_none(), "flip at {i}: {t}");
+            }
+        }
+        assert!(decode("").is_none());
+        assert!(decode("not-a-cursor").is_none());
+        assert!(decode(&"zz".repeat(19)).is_none());
+    }
+
+    #[test]
+    fn pages_reassemble_exactly() {
+        let upper = pts(7, 100.0);
+        let lower = pts(5, 200.0);
+        for limit in 1..=13 {
+            let mut got_u = Vec::new();
+            let mut got_l = Vec::new();
+            let mut at = Cursor { epoch: 3, chain: 0, offset: 0 };
+            let mut hops = 0;
+            loop {
+                let p = page(&upper, &lower, at, limit);
+                got_u.extend(p.upper);
+                got_l.extend(p.lower);
+                match p.next {
+                    Some(n) => {
+                        assert_eq!(n.epoch, 3);
+                        at = n;
+                    }
+                    None => break,
+                }
+                hops += 1;
+                assert!(hops <= 13, "cursor chain does not terminate");
+            }
+            assert_eq!(got_u, upper, "limit={limit}");
+            assert_eq!(got_l, lower, "limit={limit}");
+        }
+    }
+
+    #[test]
+    fn one_page_when_limit_covers_everything() {
+        let upper = pts(3, 0.0);
+        let lower = pts(2, 50.0);
+        let p = page(&upper, &lower, Cursor { epoch: 1, chain: 0, offset: 0 }, 5);
+        assert_eq!(p.upper, upper);
+        assert_eq!(p.lower, lower);
+        assert!(p.next.is_none());
+    }
+
+    #[test]
+    fn out_of_range_offsets_are_exhausted_not_errors() {
+        let upper = pts(2, 0.0);
+        let lower = pts(2, 9.0);
+        let p = page(&upper, &lower, Cursor { epoch: 1, chain: 1, offset: 99 }, 4);
+        assert!(p.upper.is_empty() && p.lower.is_empty());
+        assert!(p.next.is_none());
+        let p = page(&[], &[], Cursor { epoch: 1, chain: 0, offset: 0 }, 4);
+        assert!(p.upper.is_empty() && p.lower.is_empty());
+        assert!(p.next.is_none());
+    }
+}

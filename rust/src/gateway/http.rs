@@ -1,0 +1,591 @@
+//! Incremental HTTP/1.1 request decoder + response encoder, in the style
+//! of `server/proto.rs`: pure functions over a byte buffer returning
+//! [`Decoded::Frame`] (a complete request plus the bytes it consumed) or
+//! [`Decoded::Need`] (a lower bound on the bytes required), so the
+//! readiness-driven gateway loop can feed it partial reads and never
+//! blocks on a slow sender.
+//!
+//! Deliberately small surface: request-line + headers (CRLF or bare-LF
+//! line endings), `Content-Length` and `chunked` bodies, keep-alive
+//! negotiation.  Anything outside that — header obs-folding, a
+//! `Transfer-Encoding` next to a `Content-Length` (the classic request
+//! smuggling vector), conflicting duplicate lengths — is a *fatal*
+//! [`HttpError`]: the response goes out with `Connection: close` and the
+//! connection is torn down, because framing can no longer be trusted.
+//! Every error carries a stable status + machine-parseable code.
+
+use crate::server::proto::Decoded;
+use crate::util::json::Json;
+
+/// Cap on the request line + headers (including the blank-line
+/// terminator).  Past this with no terminator in sight the request is
+/// rejected with 431 — the `Need` lower bound can never grow unbounded.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Header-count cap (64 is far beyond any legitimate client here).
+pub const MAX_HEADERS: usize = 64;
+
+/// Request methods the router matches on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Get,
+    Post,
+    Delete,
+    /// Parsed fine but not something any route serves.
+    Other,
+}
+
+impl Method {
+    fn parse(s: &str) -> Method {
+        match s {
+            "GET" => Method::Get,
+            "POST" => Method::Post,
+            "DELETE" => Method::Delete,
+            _ => Method::Other,
+        }
+    }
+
+    pub const fn word(self) -> &'static str {
+        match self {
+            Method::Get => "GET",
+            Method::Post => "POST",
+            Method::Delete => "DELETE",
+            Method::Other => "OTHER",
+        }
+    }
+}
+
+/// One decoded HTTP request.
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: Method,
+    /// Decoded path, query string stripped (e.g. `/v1/sessions/7/hull`).
+    pub path: String,
+    /// Percent-decoded `key=value` pairs from the query string, in order.
+    pub query: Vec<(String, String)>,
+    /// Headers with ascii-lowercased names, in arrival order.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// HTTP/1.1 defaults to keep-alive, 1.0 to close; a `Connection`
+    /// header overrides either way.
+    pub keep_alive: bool,
+}
+
+impl HttpRequest {
+    /// First header with this (lowercase) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+
+    /// First query parameter with this name.
+    pub fn query(&self, name: &str) -> Option<&str> {
+        self.query.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Fatal framing failures.  All of them end the connection after the
+/// error response flushes — see the module docs for why.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum HttpError {
+    /// Request line or header syntax is broken.
+    Malformed(&'static str),
+    /// No blank line within [`MAX_HEAD_BYTES`], or > [`MAX_HEADERS`].
+    HeadTooLarge,
+    /// Declared or accumulated body past the configured cap.
+    BodyTooLarge { max: usize },
+    /// Not HTTP/1.0 or HTTP/1.1.
+    UnsupportedVersion,
+    /// `Transfer-Encoding` + `Content-Length`, duplicate conflicting
+    /// lengths, or obs-folding — the request-smuggling vectors.
+    Smuggling(&'static str),
+    /// Broken `chunked` framing.
+    BadChunk(&'static str),
+}
+
+impl HttpError {
+    pub const fn status(&self) -> u16 {
+        match self {
+            HttpError::Malformed(_) => 400,
+            HttpError::HeadTooLarge => 431,
+            HttpError::BodyTooLarge { .. } => 413,
+            HttpError::UnsupportedVersion => 505,
+            HttpError::Smuggling(_) => 400,
+            HttpError::BadChunk(_) => 400,
+        }
+    }
+
+    pub const fn code(&self) -> &'static str {
+        match self {
+            HttpError::Malformed(_) => "malformed-request",
+            HttpError::HeadTooLarge => "headers-too-large",
+            HttpError::BodyTooLarge { .. } => "body-too-large",
+            HttpError::UnsupportedVersion => "unsupported-version",
+            HttpError::Smuggling(_) => "ambiguous-framing",
+            HttpError::BadChunk(_) => "bad-chunk",
+        }
+    }
+}
+
+impl std::fmt::Display for HttpError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HttpError::Malformed(d) => write!(f, "malformed request: {d}"),
+            HttpError::HeadTooLarge => write!(f, "request head exceeds {MAX_HEAD_BYTES} bytes"),
+            HttpError::BodyTooLarge { max } => write!(f, "request body exceeds {max} bytes"),
+            HttpError::UnsupportedVersion => write!(f, "only HTTP/1.0 and HTTP/1.1 are served"),
+            HttpError::Smuggling(d) => write!(f, "ambiguous framing: {d}"),
+            HttpError::BadChunk(d) => write!(f, "bad chunked framing: {d}"),
+        }
+    }
+}
+
+/// Find the end of the head: the byte index just past the first blank
+/// line (`\r\n\r\n` or `\n\n`, mixed endings included).
+fn head_end(buf: &[u8]) -> Option<usize> {
+    let mut i = 0;
+    while i < buf.len() {
+        if buf[i] == b'\n' {
+            let rest = &buf[i + 1..];
+            if rest.first() == Some(&b'\n') {
+                return Some(i + 2);
+            }
+            if rest.len() >= 2 && rest[0] == b'\r' && rest[1] == b'\n' {
+                return Some(i + 3);
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+fn percent_decode(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'%' if i + 2 < bytes.len() => {
+                let hex = |b: u8| (b as char).to_digit(16);
+                match (hex(bytes[i + 1]), hex(bytes[i + 2])) {
+                    (Some(h), Some(l)) => {
+                        out.push((h * 16 + l) as u8);
+                        i += 3;
+                    }
+                    _ => {
+                        out.push(b'%');
+                        i += 1;
+                    }
+                }
+            }
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+fn parse_query(qs: &str) -> Vec<(String, String)> {
+    qs.split('&')
+        .filter(|p| !p.is_empty())
+        .map(|pair| match pair.split_once('=') {
+            Some((k, v)) => (percent_decode(k), percent_decode(v)),
+            None => (percent_decode(pair), String::new()),
+        })
+        .collect()
+}
+
+/// Decode one request from the front of `buf`.  `max_body` caps both
+/// declared `Content-Length` and accumulated chunked bodies.  `Need(n)`
+/// always satisfies `n > buf.len()` and
+/// `n <= max(buf.len(), MAX_HEAD_BYTES) + max_body + 2` — bounded
+/// progress (the left term covers chunk-framing overhead already
+/// buffered; the fuzz suite pins both properties).
+pub fn decode_request(buf: &[u8], max_body: usize) -> Result<Decoded<HttpRequest>, HttpError> {
+    let Some(head_len) = head_end(buf) else {
+        if buf.len() >= MAX_HEAD_BYTES {
+            return Err(HttpError::HeadTooLarge);
+        }
+        return Ok(Decoded::Need(buf.len() + 1));
+    };
+    if head_len > MAX_HEAD_BYTES {
+        return Err(HttpError::HeadTooLarge);
+    }
+    let head = std::str::from_utf8(&buf[..head_len])
+        .map_err(|_| HttpError::Malformed("head is not utf-8"))?;
+    let mut lines = head.split('\n').map(|l| l.strip_suffix('\r').unwrap_or(l));
+
+    // ---- request line
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ').filter(|p| !p.is_empty());
+    let (Some(m), Some(target), Some(version)) = (parts.next(), parts.next(), parts.next())
+    else {
+        return Err(HttpError::Malformed("request line wants METHOD TARGET VERSION"));
+    };
+    if parts.next().is_some() {
+        return Err(HttpError::Malformed("request line has trailing tokens"));
+    }
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        _ => return Err(HttpError::UnsupportedVersion),
+    };
+    let method = Method::parse(m);
+    if !target.starts_with('/') {
+        return Err(HttpError::Malformed("target must be origin-form (start with /)"));
+    }
+    let (raw_path, raw_query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+
+    // ---- headers
+    let mut headers: Vec<(String, String)> = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue; // the blank terminator (and the slack after it)
+        }
+        if headers.len() >= MAX_HEADERS {
+            return Err(HttpError::HeadTooLarge);
+        }
+        if line.starts_with(' ') || line.starts_with('\t') {
+            // obs-folding: deprecated, and a smuggling vector when two
+            // parsers disagree about it — reject outright
+            return Err(HttpError::Smuggling("obs-folded header"));
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(HttpError::Malformed("header line without ':'"));
+        };
+        if name.is_empty() || name.contains(' ') || name.contains('\t') {
+            return Err(HttpError::Malformed("bad header name"));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    // ---- body framing
+    let te: Vec<&str> = headers
+        .iter()
+        .filter(|(n, _)| n == "transfer-encoding")
+        .map(|(_, v)| v.as_str())
+        .collect();
+    let cl: Vec<&str> = headers
+        .iter()
+        .filter(|(n, _)| n == "content-length")
+        .map(|(_, v)| v.as_str())
+        .collect();
+    if !te.is_empty() && !cl.is_empty() {
+        return Err(HttpError::Smuggling("both Transfer-Encoding and Content-Length"));
+    }
+    if cl.len() > 1 && cl.iter().any(|v| *v != cl[0]) {
+        return Err(HttpError::Smuggling("conflicting Content-Length values"));
+    }
+
+    let (body, used) = if !te.is_empty() {
+        if te.len() > 1 || !te[0].eq_ignore_ascii_case("chunked") {
+            return Err(HttpError::Smuggling("unsupported Transfer-Encoding"));
+        }
+        match decode_chunked(&buf[head_len..], max_body)? {
+            Decoded::Need(n) => return Ok(Decoded::Need(head_len + n)),
+            Decoded::Frame(body, n) => (body, head_len + n),
+        }
+    } else if let Some(v) = cl.first() {
+        let n: usize = v
+            .parse()
+            .map_err(|_| HttpError::Malformed("Content-Length is not a number"))?;
+        if n > max_body {
+            return Err(HttpError::BodyTooLarge { max: max_body });
+        }
+        if buf.len() < head_len + n {
+            return Ok(Decoded::Need(head_len + n));
+        }
+        (buf[head_len..head_len + n].to_vec(), head_len + n)
+    } else {
+        (Vec::new(), head_len)
+    };
+
+    let keep_alive = match headers
+        .iter()
+        .find(|(n, _)| n == "connection")
+        .map(|(_, v)| v.to_ascii_lowercase())
+    {
+        Some(v) if v.split(',').any(|t| t.trim() == "close") => false,
+        Some(v) if v.split(',').any(|t| t.trim() == "keep-alive") => true,
+        _ => http11,
+    };
+
+    Ok(Decoded::Frame(
+        HttpRequest {
+            method,
+            path: percent_decode(raw_path),
+            query: parse_query(raw_query),
+            headers,
+            body,
+            keep_alive,
+        },
+        used,
+    ))
+}
+
+/// Incrementally decode a `chunked` body from `buf` (which starts right
+/// after the head).  Returns the assembled body + bytes consumed.
+fn decode_chunked(buf: &[u8], max_body: usize) -> Result<Decoded<Vec<u8>>, HttpError> {
+    let mut body = Vec::new();
+    let mut off = 0;
+    loop {
+        // chunk-size line
+        let Some(nl) = buf[off..].iter().position(|&b| b == b'\n') else {
+            if buf.len() - off > 18 {
+                // a chunk-size line is a short hex number (+ extensions we
+                // reject); a long prefix with no newline is garbage
+                return Err(HttpError::BadChunk("unterminated chunk size"));
+            }
+            return Ok(Decoded::Need(buf.len() + 1));
+        };
+        let line = std::str::from_utf8(&buf[off..off + nl])
+            .map_err(|_| HttpError::BadChunk("chunk size is not utf-8"))?
+            .trim_end_matches('\r');
+        let size_hex = line.split(';').next().unwrap_or("").trim();
+        if size_hex.is_empty() || size_hex.len() > 8 {
+            return Err(HttpError::BadChunk("bad chunk size"));
+        }
+        let size = usize::from_str_radix(size_hex, 16)
+            .map_err(|_| HttpError::BadChunk("chunk size is not hex"))?;
+        off += nl + 1;
+        if size == 0 {
+            // no trailer support: the terminator must follow immediately
+            let rest = &buf[off..];
+            if rest.is_empty() || (rest[0] == b'\r' && rest.len() < 2) {
+                return Ok(Decoded::Need(buf.len() + 1));
+            }
+            return if rest[0] == b'\n' {
+                Ok(Decoded::Frame(body, off + 1))
+            } else if rest[0] == b'\r' && rest[1] == b'\n' {
+                Ok(Decoded::Frame(body, off + 2))
+            } else {
+                Err(HttpError::BadChunk("trailers are not supported"))
+            };
+        }
+        if body.len() + size > max_body {
+            return Err(HttpError::BodyTooLarge { max: max_body });
+        }
+        // chunk data + its trailing CRLF
+        if buf.len() < off + size + 1 {
+            return Ok(Decoded::Need(off + size + 1));
+        }
+        body.extend_from_slice(&buf[off..off + size]);
+        off += size;
+        match buf[off] {
+            b'\n' => off += 1,
+            b'\r' => {
+                if buf.len() < off + 2 {
+                    return Ok(Decoded::Need(off + 2));
+                }
+                if buf[off + 1] != b'\n' {
+                    return Err(HttpError::BadChunk("chunk data not newline-terminated"));
+                }
+                off += 2;
+            }
+            _ => return Err(HttpError::BadChunk("chunk data not newline-terminated")),
+        }
+    }
+}
+
+/// One response ready to encode.
+#[derive(Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn json(status: u16, body: Json) -> HttpResponse {
+        HttpResponse {
+            status,
+            content_type: "application/json",
+            body: body.to_string().into_bytes(),
+        }
+    }
+
+    /// The uniform JSON error body: `{"error":{"code":...,"message":...}}`.
+    pub fn error(status: u16, code: &str, message: &str) -> HttpResponse {
+        HttpResponse::json(
+            status,
+            Json::obj(vec![(
+                "error",
+                Json::obj(vec![
+                    ("code", Json::Str(code.to_string())),
+                    ("message", Json::Str(message.to_string())),
+                ]),
+            )]),
+        )
+    }
+
+    /// Append the wire form.  Responses always carry `Content-Length`
+    /// (never chunked) so the client-side decoder stays trivial.
+    pub fn encode(&self, out: &mut Vec<u8>, keep_alive: bool) {
+        out.extend_from_slice(
+            format!(
+                "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+                self.status,
+                reason(self.status),
+                self.content_type,
+                self.body.len(),
+                if keep_alive { "keep-alive" } else { "close" },
+            )
+            .as_bytes(),
+        );
+        out.extend_from_slice(&self.body);
+    }
+}
+
+/// Reason phrases for every status the gateway emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        502 => "Bad Gateway",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        505 => "HTTP Version Not Supported",
+        _ => "Error",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame(buf: &[u8]) -> (HttpRequest, usize) {
+        match decode_request(buf, 1 << 20).unwrap() {
+            Decoded::Frame(r, n) => (r, n),
+            Decoded::Need(n) => panic!("want frame, got Need({n})"),
+        }
+    }
+
+    #[test]
+    fn decodes_a_simple_get() {
+        let wire = b"GET /v1/stats?pretty=1 HTTP/1.1\r\nHost: x\r\n\r\n";
+        let (r, used) = frame(wire);
+        assert_eq!(r.method, Method::Get);
+        assert_eq!(r.path, "/v1/stats");
+        assert_eq!(r.query("pretty"), Some("1"));
+        assert_eq!(r.header("host"), Some("x"));
+        assert!(r.body.is_empty());
+        assert!(r.keep_alive);
+        assert_eq!(used, wire.len());
+    }
+
+    #[test]
+    fn bare_lf_line_endings_are_accepted() {
+        let wire = b"POST /v1/hull HTTP/1.1\ncontent-length: 2\n\nhi";
+        let (r, used) = frame(wire);
+        assert_eq!(r.body, b"hi");
+        assert_eq!(used, wire.len());
+    }
+
+    #[test]
+    fn incremental_need_makes_progress() {
+        let full = b"POST /v1/hull HTTP/1.1\r\ncontent-length: 5\r\n\r\nabcde";
+        for cut in 0..full.len() {
+            match decode_request(&full[..cut], 1 << 20).unwrap() {
+                Decoded::Need(n) => assert!(n > cut, "cut={cut} need={n}"),
+                Decoded::Frame(_, _) => panic!("frame before all {} bytes (cut={cut})", full.len()),
+            }
+        }
+        let (r, used) = frame(full);
+        assert_eq!(used, full.len());
+        assert_eq!(r.body, b"abcde");
+    }
+
+    #[test]
+    fn chunked_bodies_reassemble() {
+        let wire = b"POST /x HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n3\r\nabc\r\n2\r\nde\r\n0\r\n\r\n";
+        let (r, used) = frame(wire);
+        assert_eq!(r.body, b"abcde");
+        assert_eq!(used, wire.len());
+        // byte-by-byte: only Need until the terminator
+        for cut in 0..wire.len() {
+            match decode_request(&wire[..cut], 1 << 20).unwrap() {
+                Decoded::Need(n) => assert!(n > cut),
+                Decoded::Frame(_, _) => panic!("early frame at {cut}"),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_content_length_is_fatal_not_need() {
+        let e = decode_request(b"POST /x HTTP/1.1\r\ncontent-length: 999\r\n\r\n", 100)
+            .unwrap_err();
+        assert_eq!(e, HttpError::BodyTooLarge { max: 100 });
+        assert_eq!(e.status(), 413);
+    }
+
+    #[test]
+    fn smuggling_vectors_are_fatal() {
+        let e = decode_request(
+            b"POST /x HTTP/1.1\r\ncontent-length: 3\r\ntransfer-encoding: chunked\r\n\r\n",
+            1 << 20,
+        )
+        .unwrap_err();
+        assert!(matches!(e, HttpError::Smuggling(_)));
+        let e = decode_request(
+            b"POST /x HTTP/1.1\r\ncontent-length: 3\r\ncontent-length: 4\r\n\r\n",
+            1 << 20,
+        )
+        .unwrap_err();
+        assert!(matches!(e, HttpError::Smuggling(_)));
+        // identical duplicates are tolerated
+        let (r, _) =
+            frame(b"POST /x HTTP/1.1\r\ncontent-length: 2\r\ncontent-length: 2\r\n\r\nok");
+        assert_eq!(r.body, b"ok");
+        let e = decode_request(b"GET /x HTTP/1.1\r\na: 1\r\n b: 2\r\n\r\n", 1 << 20).unwrap_err();
+        assert!(matches!(e, HttpError::Smuggling(_)));
+    }
+
+    #[test]
+    fn unbounded_head_is_rejected() {
+        let mut buf = b"GET / HTTP/1.1\r\n".to_vec();
+        while buf.len() < MAX_HEAD_BYTES {
+            buf.extend_from_slice(b"x-filler: yyyyyyyyyyyyyyyyyyyyyyyyyyyyyyyyyyyy\r\n");
+        }
+        let e = decode_request(&buf, 1 << 20).unwrap_err();
+        assert_eq!(e, HttpError::HeadTooLarge);
+    }
+
+    #[test]
+    fn http10_defaults_to_close() {
+        let (r, _) = frame(b"GET / HTTP/1.0\r\n\r\n");
+        assert!(!r.keep_alive);
+        let (r, _) = frame(b"GET / HTTP/1.0\r\nconnection: keep-alive\r\n\r\n");
+        assert!(r.keep_alive);
+        let (r, _) = frame(b"GET / HTTP/1.1\r\nconnection: close\r\n\r\n");
+        assert!(!r.keep_alive);
+        assert!(matches!(
+            decode_request(b"GET / HTTP/2\r\n\r\n", 4).unwrap_err(),
+            HttpError::UnsupportedVersion
+        ));
+    }
+
+    #[test]
+    fn responses_encode_with_content_length() {
+        let mut out = Vec::new();
+        HttpResponse::json(200, Json::obj(vec![("ok", Json::Bool(true))]))
+            .encode(&mut out, true);
+        let s = String::from_utf8(out).unwrap();
+        assert!(s.starts_with("HTTP/1.1 200 OK\r\n"), "{s}");
+        assert!(s.contains("content-length: 11"), "{s}");
+        assert!(s.contains("connection: keep-alive"), "{s}");
+        assert!(s.ends_with("{\"ok\":true}"), "{s}");
+    }
+}

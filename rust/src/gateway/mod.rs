@@ -1,0 +1,519 @@
+//! HTTP/JSON edge gateway.
+//!
+//! A dependency-free HTTP/1.1 server ([`http`]) riding the same
+//! readiness-driven event-loop design as the TCP core
+//! (`server/event_loop.rs`): non-blocking sockets, level-triggered
+//! polling, keep-alive, and the identical high/low-watermark
+//! backpressure constants.  A typed routing layer ([`router`]) maps
+//! method + path patterns onto handlers with typed path/query
+//! extraction; handlers front the *same* [`Engine`] the TCP listener
+//! serves, making the identical engine calls as the shared response
+//! builders in `server::mod` — so every HTTP exchange is bit-identical
+//! in substance to its TCP equivalent (the parity suite pins this).
+//!
+//! Routes:
+//!
+//! | route                                | engine call |
+//! |--------------------------------------|-------------|
+//! | `POST /v1/hull`                      | [`Engine::submit`] (JSON or raw LE-f64 body) |
+//! | `POST /v1/sessions`                  | [`Engine::session_open`] / [`Engine::session_restore`] |
+//! | `POST /v1/sessions/{sid}/points`     | [`Engine::session_add_deadline`] |
+//! | `GET /v1/sessions/{sid}/hull`        | [`Engine::session_hull_at`] (+ cursor pagination) |
+//! | `DELETE /v1/sessions/{sid}`          | [`Engine::session_close`] |
+//! | `GET /v1/stats`                      | [`Engine::stats`] |
+//! | `GET /healthz`, `GET /readyz`        | liveness / readiness |
+//!
+//! Hull reads paginate through opaque cursors ([`cursor`]): the cursor
+//! pins the epoch, so pages reassemble bit-identically to a one-shot
+//! `SHULL` no matter what lands in between.  Typed engine errors map to
+//! stable statuses through `crate::errors`; every response carries the
+//! uniform `{"error":{"code","message"}}` body on failure.  Per-route
+//! counters and latency histograms live in the engine's shared metrics
+//! sink ([`GatewayMetrics`]) and surface in both TCP `STATS` and
+//! `GET /v1/stats`.
+
+pub mod client;
+pub mod cursor;
+pub mod http;
+pub mod router;
+mod server;
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::{GatewayMetrics, GatewayRoute, HullRequest};
+use crate::engine::Engine;
+use crate::errors;
+use crate::geometry::point::Point;
+use crate::server::proto::MAX_REQUEST_POINTS;
+use crate::server::{frame, request_deadline};
+use crate::util::json::{self, Json};
+
+use http::{HttpRequest, HttpResponse};
+use router::{err, ok, query_u32, query_u64, query_usize, routes, PathParams, Router};
+
+pub use server::{serve_gateway, GatewayHandle};
+
+/// Gateway tunables (assembled from the `[gateway]` config section plus
+/// the serving knobs it shares with the TCP listener).
+#[derive(Clone, Debug)]
+pub struct GatewayConfig {
+    pub addr: String,
+    /// 0 = auto (same policy as the TCP event core).
+    pub io_threads: usize,
+    /// Server-side request budget in ms (0 = none); min-combined with a
+    /// client's `?timeout_ms=`, exactly like the TCP `HULL`/`SADD` forms.
+    pub request_timeout_ms: u64,
+    pub max_body_bytes: usize,
+    /// Ceiling on `?limit=` for paginated hull reads.
+    pub page_limit: usize,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            addr: "127.0.0.1:8080".into(),
+            io_threads: 0,
+            request_timeout_ms: 0,
+            max_body_bytes: 1 << 26,
+            page_limit: 4096,
+        }
+    }
+}
+
+/// Shared state every handler sees.
+pub struct Ctx {
+    pub(crate) engine: Arc<Engine>,
+    pub(crate) metrics: Arc<GatewayMetrics>,
+    pub(crate) request_timeout_ms: u64,
+    pub(crate) page_limit: usize,
+}
+
+/// The gateway's route table.
+pub(crate) fn build_router() -> Router<Ctx> {
+    routes! {
+        Post   "/v1/hull"                  => GatewayRoute::Hull,         h_hull;
+        Post   "/v1/sessions"              => GatewayRoute::SessionOpen,  h_session_open;
+        Post   "/v1/sessions/{sid}/points" => GatewayRoute::SessionAdd,   h_session_add;
+        Get    "/v1/sessions/{sid}/hull"   => GatewayRoute::SessionHull,  h_session_hull;
+        Delete "/v1/sessions/{sid}"        => GatewayRoute::SessionClose, h_session_close;
+        Get    "/v1/stats"                 => GatewayRoute::Stats,        h_stats;
+        Get    "/healthz"                  => GatewayRoute::Healthz,      h_healthz;
+        Get    "/readyz"                   => GatewayRoute::Readyz,       h_readyz;
+    }
+}
+
+// -------------------------------------------------------------- bodies
+
+fn points_json(pts: &[Point]) -> Json {
+    Json::Arr(pts.iter().map(|p| Json::Arr(vec![Json::Num(p.x), Json::Num(p.y)])).collect())
+}
+
+/// Decode the request body into points: raw little-endian `f64` pairs
+/// under `application/octet-stream` (the binary frame payload encoding,
+/// decoded by the same `frame::read_points`), JSON
+/// `{"points":[[x,y],...]}` otherwise.  Returns the points plus the
+/// optional `"id"` field (JSON only).
+fn body_points(req: &HttpRequest) -> Result<(Vec<Point>, Option<u64>), HttpResponse> {
+    let ct = req.header("content-type").unwrap_or("application/json");
+    if ct.starts_with("application/octet-stream") {
+        if req.body.len() % 16 != 0 {
+            return err!(
+                400,
+                "bad-binary-body",
+                format!("octet-stream body must be 16-byte x,y pairs, got {} bytes", req.body.len())
+            );
+        }
+        let count = req.body.len() / 16;
+        if count > MAX_REQUEST_POINTS {
+            return err!(
+                413,
+                "too-many-points",
+                format!("{count} points exceeds the per-request cap of {MAX_REQUEST_POINTS}")
+            );
+        }
+        return Ok((frame::read_points(&req.body, count), None));
+    }
+    let text = std::str::from_utf8(&req.body)
+        .map_err(|_| HttpResponse::error(400, "bad-json", "body is not utf-8"))?;
+    let doc = json::parse(text)
+        .map_err(|e| HttpResponse::error(400, "bad-json", &format!("body is not JSON: {e}")))?;
+    let arr = doc
+        .get("points")
+        .and_then(|p| p.as_arr())
+        .ok_or_else(|| HttpResponse::error(400, "bad-json", "body wants a \"points\" array"))?;
+    if arr.len() > MAX_REQUEST_POINTS {
+        return err!(
+            413,
+            "too-many-points",
+            format!("{} points exceeds the per-request cap of {MAX_REQUEST_POINTS}", arr.len())
+        );
+    }
+    let mut pts = Vec::with_capacity(arr.len());
+    for (i, el) in arr.iter().enumerate() {
+        let pair = el.as_arr().filter(|p| p.len() == 2);
+        let (x, y) = match pair {
+            Some(p) => match (p[0].as_f64(), p[1].as_f64()) {
+                (Some(x), Some(y)) => (x, y),
+                _ => {
+                    return err!(400, "bad-json", format!("points[{i}] wants two numbers"));
+                }
+            },
+            None => {
+                return err!(400, "bad-json", format!("points[{i}] wants an [x, y] pair"));
+            }
+        };
+        pts.push(Point::new(x, y));
+    }
+    let id = doc.get("id").and_then(|v| v.as_f64()).map(|v| v as u64);
+    Ok((pts, id))
+}
+
+fn session_err(e: &crate::stream::SessionError) -> HttpResponse {
+    HttpResponse::error(
+        errors::http_status_of_session(e),
+        errors::code_of_session(e),
+        &e.to_string(),
+    )
+}
+
+// ------------------------------------------------------------ handlers
+
+fn h_hull(ctx: &Ctx, req: &HttpRequest, _p: &PathParams) -> Result<HttpResponse, HttpResponse> {
+    let tmo = query_u32(req, "timeout_ms")?;
+    let deadline = request_deadline(ctx.request_timeout_ms, tmo);
+    let (points, body_id) = body_points(req)?;
+    let id = match query_u64(req, "id")? {
+        Some(id) => id,
+        None => body_id.unwrap_or(0),
+    };
+    // Park-on-recv mirrors the threaded TCP shim: handlers run on the
+    // gateway's bounded dispatch pool, never on an I/O thread.
+    let reply = ctx.engine.submit(HullRequest::new(id, points).with_deadline(deadline));
+    match reply.recv() {
+        Ok(Ok(h)) => ok!(
+            "id" => Json::Num(id as f64),
+            "upper" => points_json(&h.upper),
+            "lower" => points_json(&h.lower),
+            "backend" => Json::Str(h.backend.to_string()),
+        ),
+        Ok(Err(e)) => err!(
+            errors::http_status_of_request(&e),
+            errors::code_of_request(&e),
+            e.to_string()
+        ),
+        Err(_) => err!(502, "backend-failure", "coordinator gone"),
+    }
+}
+
+fn h_session_open(
+    ctx: &Ctx,
+    req: &HttpRequest,
+    _p: &PathParams,
+) -> Result<HttpResponse, HttpResponse> {
+    let restore = if req.body.is_empty() {
+        None
+    } else {
+        let text = std::str::from_utf8(&req.body)
+            .map_err(|_| HttpResponse::error(400, "bad-json", "body is not utf-8"))?;
+        let doc = json::parse(text)
+            .map_err(|e| HttpResponse::error(400, "bad-json", &format!("body is not JSON: {e}")))?;
+        match doc.get("restore") {
+            None => None,
+            Some(v) => match v.as_f64().filter(|x| *x >= 1.0 && x.fract() == 0.0) {
+                Some(sid) => Some(sid as u64),
+                None => {
+                    return err!(400, "bad-json", "\"restore\" wants a positive session id");
+                }
+            },
+        }
+    };
+    let opened = match restore {
+        None => ctx.engine.session_open(),
+        Some(sid) => ctx.engine.session_restore(sid),
+    };
+    match opened {
+        Ok(sid) => ok!(
+            "sid" => Json::Num(sid as f64),
+            "restored" => Json::Bool(restore.is_some()),
+        ),
+        Err(e) => Err(session_err(&e)),
+    }
+}
+
+fn h_session_add(
+    ctx: &Ctx,
+    req: &HttpRequest,
+    p: &PathParams,
+) -> Result<HttpResponse, HttpResponse> {
+    let sid = p.u64("sid")?;
+    let tmo = query_u32(req, "timeout_ms")?;
+    let deadline = request_deadline(ctx.request_timeout_ms, tmo);
+    let (points, _) = body_points(req)?;
+    match ctx.engine.session_add_deadline(sid, &points, deadline) {
+        Ok(o) => ok!(
+            "sid" => Json::Num(sid as f64),
+            "absorbed" => Json::Num(o.absorbed as f64),
+            "pending" => Json::Num(o.pending as f64),
+            "epoch" => Json::Num(o.epoch as f64),
+        ),
+        Err(e) => Err(session_err(&e)),
+    }
+}
+
+fn h_session_hull(
+    ctx: &Ctx,
+    req: &HttpRequest,
+    p: &PathParams,
+) -> Result<HttpResponse, HttpResponse> {
+    let sid = p.u64("sid")?;
+    let cur = match req.query("cursor") {
+        None => None,
+        Some(raw) => match cursor::decode(raw) {
+            Some(c) => Some(c),
+            None => {
+                return err!(400, "bad-cursor", "cursor is not one this server issued");
+            }
+        },
+    };
+    let epoch_q = query_u64(req, "epoch")?;
+    if let (Some(c), Some(e)) = (&cur, epoch_q) {
+        if c.epoch != e {
+            return err!(
+                400,
+                "bad-cursor",
+                format!("cursor pins epoch {} but the query asks for epoch {e}", c.epoch)
+            );
+        }
+    }
+    let limit = query_usize(req, "limit")?
+        .unwrap_or(ctx.page_limit)
+        .min(ctx.page_limit)
+        .max(1);
+    // A cursor pins its epoch; without one, ?epoch= (or the live hull)
+    // decides, and the epoch we resolve here rides in next_cursor so
+    // every later page reads the same immutable ledger entry.
+    let want_epoch = cur.map(|c| c.epoch).or(epoch_q);
+    let snap = match ctx.engine.session_hull_at(sid, want_epoch) {
+        Ok(s) => s,
+        Err(e) => return Err(session_err(&e)),
+    };
+    let at = cur.unwrap_or(cursor::Cursor { epoch: snap.epoch, chain: 0, offset: 0 });
+    let page = cursor::page(&snap.upper, &snap.lower, at, limit);
+    ok!(
+        "sid" => Json::Num(sid as f64),
+        "epoch" => Json::Num(snap.epoch as f64),
+        "upper" => points_json(&page.upper),
+        "lower" => points_json(&page.lower),
+        "next_cursor" => match page.next {
+            Some(n) => Json::Str(cursor::encode(&n)),
+            None => Json::Null,
+        },
+    )
+}
+
+fn h_session_close(
+    ctx: &Ctx,
+    _req: &HttpRequest,
+    p: &PathParams,
+) -> Result<HttpResponse, HttpResponse> {
+    let sid = p.u64("sid")?;
+    match ctx.engine.session_close(sid) {
+        Ok(()) => ok!("sid" => Json::Num(sid as f64), "closed" => Json::Bool(true)),
+        Err(e) => Err(session_err(&e)),
+    }
+}
+
+fn h_stats(ctx: &Ctx, _req: &HttpRequest, _p: &PathParams) -> Result<HttpResponse, HttpResponse> {
+    let active = ctx.metrics.open_connections.load(Ordering::Relaxed);
+    Ok(HttpResponse::json(200, ctx.engine.stats(Some(active)).0))
+}
+
+fn h_healthz(ctx: &Ctx, _req: &HttpRequest, _p: &PathParams) -> Result<HttpResponse, HttpResponse> {
+    ok!(
+        "ok" => Json::Bool(true),
+        "backend" => Json::Str(ctx.engine.backend_name().to_string()),
+        "shards" => Json::Num(ctx.engine.shard_count() as f64),
+    )
+}
+
+/// Readiness degrades (503) while any shard's breaker is open or the
+/// session table is full — the conditions under which new work is shed.
+fn h_readyz(ctx: &Ctx, _req: &HttpRequest, _p: &PathParams) -> Result<HttpResponse, HttpResponse> {
+    let mut reasons = Vec::new();
+    for i in 0..ctx.engine.shard_count() {
+        if ctx.engine.shard_coordinator(i).breaker().state() == 1 {
+            reasons.push(Json::Str(format!("shard {i} breaker open")));
+        }
+    }
+    let open = ctx.engine.open_sessions();
+    let max = ctx.engine.max_sessions();
+    if open >= max {
+        reasons.push(Json::Str(format!("session table full ({open}/{max})")));
+    }
+    let ready = reasons.is_empty();
+    let body = Json::obj(vec![("ready", Json::Bool(ready)), ("reasons", Json::Arr(reasons))]);
+    Ok(HttpResponse::json(if ready { 200 } else { 503 }, body))
+}
+
+// ----------------------------------------------------------- accounting
+
+/// Record one finished exchange into the shared sink and the request
+/// log — the single choke point both server cores call.
+pub(crate) fn observe_exchange(
+    ctx: &Ctx,
+    route: GatewayRoute,
+    sid: Option<u64>,
+    status: u16,
+    bytes_in: u64,
+    bytes_out: u64,
+    started: Instant,
+) {
+    let ns = started.elapsed().as_nanos() as u64;
+    ctx.metrics.observe(route, status, bytes_in, bytes_out, ns);
+    let shard = match sid {
+        Some(sid) => ctx.engine.shard_of(sid).to_string(),
+        None => "-".into(),
+    };
+    crate::log_info!(
+        "gw {} status={status} bytes_in={bytes_in} bytes_out={bytes_out} latency_us={} shard={shard}",
+        route.name(),
+        ns / 1000,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BackendKind, CoordinatorConfig};
+    use crate::engine::{Engine, EngineConfig};
+    use crate::server::proto::Decoded;
+
+    fn test_ctx() -> Ctx {
+        let engine = Arc::new(
+            Engine::start(EngineConfig {
+                shards: 1,
+                coordinator: CoordinatorConfig {
+                    backend: BackendKind::Serial,
+                    workers: 1,
+                    ..Default::default()
+                },
+                ..Default::default()
+            })
+            .expect("engine"),
+        );
+        let metrics = engine.register_gateway_metrics();
+        Ctx { engine, metrics, request_timeout_ms: 0, page_limit: 4096 }
+    }
+
+    fn http(ctx: &Ctx, wire: &str) -> (u16, Json) {
+        let req = match http::decode_request(wire.as_bytes(), 1 << 20).unwrap() {
+            Decoded::Frame(r, _) => r,
+            Decoded::Need(n) => panic!("test request incomplete (need {n})"),
+        };
+        let d = build_router().dispatch(ctx, &req);
+        let body = json::parse(std::str::from_utf8(&d.resp.body).unwrap()).unwrap();
+        (d.resp.status, body)
+    }
+
+    #[test]
+    fn hull_roundtrips_through_json() {
+        let ctx = test_ctx();
+        let body = r#"{"id": 7, "points": [[0,0],[2,0],[1,5],[1,1]]}"#;
+        let wire = format!(
+            "POST /v1/hull HTTP/1.1\r\ncontent-length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        let (status, j) = http(&ctx, &wire);
+        assert_eq!(status, 200, "{j}");
+        assert_eq!(j.get("id").and_then(|v| v.as_f64()), Some(7.0));
+        assert_eq!(j.get("upper").and_then(|v| v.as_arr()).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn session_lifecycle_over_http() {
+        let ctx = test_ctx();
+        let (status, j) = http(&ctx, "POST /v1/sessions HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 200, "{j}");
+        let sid = j.get("sid").and_then(|v| v.as_f64()).unwrap() as u64;
+        let body = r#"{"points": [[0,0],[4,0],[2,9]]}"#;
+        let (status, j) = http(
+            &ctx,
+            &format!(
+                "POST /v1/sessions/{sid}/points HTTP/1.1\r\ncontent-length: {}\r\n\r\n{body}",
+                body.len()
+            ),
+        );
+        assert_eq!(status, 200, "{j}");
+        let (status, j) = http(&ctx, &format!("GET /v1/sessions/{sid}/hull HTTP/1.1\r\n\r\n"));
+        assert_eq!(status, 200, "{j}");
+        assert!(j.get("next_cursor") == Some(&Json::Null));
+        let (status, _) = http(&ctx, &format!("DELETE /v1/sessions/{sid} HTTP/1.1\r\n\r\n"));
+        assert_eq!(status, 200);
+        let (status, j) = http(&ctx, &format!("GET /v1/sessions/{sid}/hull HTTP/1.1\r\n\r\n"));
+        assert_eq!(status, 404);
+        let code = j.get("error").and_then(|e| e.get("code")).cloned();
+        assert_eq!(code, Some(Json::Str("unknown-session".into())));
+    }
+
+    #[test]
+    fn bad_cursor_and_conflicting_epoch_are_400s() {
+        let ctx = test_ctx();
+        let (status, j) = http(&ctx, "GET /v1/sessions/1/hull?cursor=junk HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 400);
+        assert_eq!(
+            j.get("error").and_then(|e| e.get("code")).cloned(),
+            Some(Json::Str("bad-cursor".into()))
+        );
+        let c = cursor::encode(&cursor::Cursor { epoch: 2, chain: 0, offset: 0 });
+        let (status, j) =
+            http(&ctx, &format!("GET /v1/sessions/1/hull?cursor={c}&epoch=5 HTTP/1.1\r\n\r\n"));
+        assert_eq!(status, 400, "{j}");
+    }
+
+    #[test]
+    fn stats_and_probes_answer() {
+        let ctx = test_ctx();
+        let (status, j) = http(&ctx, "GET /v1/stats HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 200);
+        assert!(j.get("gateway").is_some(), "stats wants the gateway object");
+        assert!(j.get("io").is_some(), "stats wants the io object");
+        let (status, _) = http(&ctx, "GET /healthz HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 200);
+        let (status, j) = http(&ctx, "GET /readyz HTTP/1.1\r\n\r\n");
+        assert_eq!(status, 200);
+        assert_eq!(j.get("ready"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn binary_bodies_decode_like_the_frame_payload() {
+        let ctx = test_ctx();
+        let mut body = Vec::new();
+        for (x, y) in [(0.0, 0.0), (3.0, 0.0), (1.5, 4.0)] {
+            body.extend_from_slice(&f64::to_le_bytes(x));
+            body.extend_from_slice(&f64::to_le_bytes(y));
+        }
+        let mut wire = format!(
+            "POST /v1/hull?id=9 HTTP/1.1\r\ncontent-type: application/octet-stream\r\ncontent-length: {}\r\n\r\n",
+            body.len()
+        )
+        .into_bytes();
+        wire.extend_from_slice(&body);
+        let req = match http::decode_request(&wire, 1 << 20).unwrap() {
+            Decoded::Frame(r, _) => r,
+            Decoded::Need(_) => panic!("incomplete"),
+        };
+        let d = build_router().dispatch(&ctx, &req);
+        assert_eq!(d.resp.status, 200);
+        // truncated pair → typed 400
+        let mut wire = b"POST /v1/hull HTTP/1.1\r\ncontent-type: application/octet-stream\r\ncontent-length: 15\r\n\r\n".to_vec();
+        wire.extend_from_slice(&[0u8; 15]);
+        let req = match http::decode_request(&wire, 1 << 20).unwrap() {
+            Decoded::Frame(r, _) => r,
+            Decoded::Need(_) => panic!("incomplete"),
+        };
+        let d = build_router().dispatch(&ctx, &req);
+        assert_eq!(d.resp.status, 400);
+    }
+}

@@ -1,0 +1,292 @@
+//! Typed routing: method + path patterns → handlers, with extraction of
+//! path parameters (`{sid}`) and query parameters into native types.
+//!
+//! A handler is a plain `fn(&C, &HttpRequest, &PathParams) ->
+//! Result<HttpResponse, HttpResponse>` — `Err` is still a well-formed
+//! response, it just lets handlers bail with `?`-style early returns via
+//! [`err!`].  The [`routes!`] macro builds the table declaratively; each
+//! entry carries its [`GatewayRoute`] tag so the dispatch loop can record
+//! per-route metrics and logs without re-parsing the path.
+
+use super::http::{HttpRequest, HttpResponse, Method};
+use crate::coordinator::GatewayRoute;
+
+/// One segment of a route pattern.
+enum Seg {
+    Lit(&'static str),
+    Param(&'static str),
+}
+
+/// Path parameters captured during a successful match.
+pub struct PathParams {
+    vals: Vec<(&'static str, String)>,
+}
+
+impl PathParams {
+    /// Typed extraction: the named `{param}` as a `u64`, or a ready-made
+    /// 400 response naming the offending parameter.
+    pub fn u64(&self, name: &str) -> Result<u64, HttpResponse> {
+        let raw = self
+            .vals
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, v)| v.as_str())
+            .unwrap_or("");
+        raw.parse().map_err(|_| {
+            HttpResponse::error(
+                400,
+                "bad-path-parameter",
+                &format!("path parameter {{{name}}} must be an unsigned integer, got {raw:?}"),
+            )
+        })
+    }
+
+    fn raw(&self, name: &str) -> Option<&str> {
+        self.vals.iter().find(|(n, _)| *n == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Typed query extraction shared by handlers: `Ok(None)` when absent,
+/// `Err(400)` when present but unparseable.
+pub fn query_u64(req: &HttpRequest, name: &str) -> Result<Option<u64>, HttpResponse> {
+    query_parsed(req, name)
+}
+
+pub fn query_u32(req: &HttpRequest, name: &str) -> Result<Option<u32>, HttpResponse> {
+    query_parsed(req, name)
+}
+
+pub fn query_usize(req: &HttpRequest, name: &str) -> Result<Option<usize>, HttpResponse> {
+    query_parsed(req, name)
+}
+
+fn query_parsed<T: std::str::FromStr>(
+    req: &HttpRequest,
+    name: &str,
+) -> Result<Option<T>, HttpResponse> {
+    match req.query(name) {
+        None => Ok(None),
+        Some(raw) => raw.parse().map(Some).map_err(|_| {
+            HttpResponse::error(
+                400,
+                "bad-query-parameter",
+                &format!("query parameter {name} must be an unsigned integer, got {raw:?}"),
+            )
+        }),
+    }
+}
+
+pub type Handler<C> = fn(&C, &HttpRequest, &PathParams) -> Result<HttpResponse, HttpResponse>;
+
+struct RouteEntry<C> {
+    method: Method,
+    segs: Vec<Seg>,
+    route: GatewayRoute,
+    handler: Handler<C>,
+}
+
+/// What the dispatch loop needs back: the response plus the route tag for
+/// metrics and, when the path carried a `{sid}`, the session id for
+/// shard attribution in the request log.
+pub struct Dispatched {
+    pub route: GatewayRoute,
+    pub sid: Option<u64>,
+    pub resp: HttpResponse,
+}
+
+pub struct Router<C> {
+    routes: Vec<RouteEntry<C>>,
+}
+
+impl<C> Default for Router<C> {
+    fn default() -> Self {
+        Router { routes: Vec::new() }
+    }
+}
+
+impl<C> Router<C> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register `pattern` (e.g. `/v1/sessions/{sid}/hull`) for `method`.
+    pub fn add(
+        &mut self,
+        method: Method,
+        pattern: &'static str,
+        route: GatewayRoute,
+        handler: Handler<C>,
+    ) {
+        let segs = pattern
+            .split('/')
+            .filter(|s| !s.is_empty())
+            .map(|s| match s.strip_prefix('{').and_then(|s| s.strip_suffix('}')) {
+                Some(name) => Seg::Param(name),
+                None => Seg::Lit(s),
+            })
+            .collect();
+        self.routes.push(RouteEntry { method, segs, route, handler });
+    }
+
+    fn match_path(entry: &RouteEntry<C>, path: &[&str]) -> Option<PathParams> {
+        if entry.segs.len() != path.len() {
+            return None;
+        }
+        let mut vals = Vec::new();
+        for (seg, got) in entry.segs.iter().zip(path) {
+            match seg {
+                Seg::Lit(want) => {
+                    if want != got {
+                        return None;
+                    }
+                }
+                Seg::Param(name) => vals.push((*name, got.to_string())),
+            }
+        }
+        Some(PathParams { vals })
+    }
+
+    /// Route and run one request.  Misses produce the uniform JSON error
+    /// body: 405 when the path exists under a different method, 404
+    /// otherwise.
+    pub fn dispatch(&self, ctx: &C, req: &HttpRequest) -> Dispatched {
+        let path: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+        let mut other_method = false;
+        for entry in &self.routes {
+            let Some(params) = Self::match_path(entry, &path) else {
+                continue;
+            };
+            if entry.method != req.method {
+                other_method = true;
+                continue;
+            }
+            let sid = params.raw("sid").and_then(|v| v.parse().ok());
+            let resp = match (entry.handler)(ctx, req, &params) {
+                Ok(r) | Err(r) => r,
+            };
+            return Dispatched { route: entry.route, sid, resp };
+        }
+        let resp = if other_method {
+            HttpResponse::error(
+                405,
+                "method-not-allowed",
+                &format!("{} is not served at {}", req.method.word(), req.path),
+            )
+        } else {
+            HttpResponse::error(404, "unknown-route", &format!("no route matches {}", req.path))
+        };
+        Dispatched { route: GatewayRoute::Other, sid: None, resp }
+    }
+}
+
+/// Build a [`Router`] from a declarative table:
+///
+/// ```ignore
+/// let router = routes! {
+///     Post "/v1/hull"                    => GatewayRoute::Hull,        h_hull;
+///     Get  "/v1/sessions/{sid}/hull"     => GatewayRoute::SessionHull, h_session_hull;
+/// };
+/// ```
+macro_rules! routes {
+    ($($method:ident $pattern:literal => $route:expr, $handler:expr);* $(;)?) => {{
+        let mut r = $crate::gateway::router::Router::new();
+        $(r.add($crate::gateway::http::Method::$method, $pattern, $route, $handler);)*
+        r
+    }};
+}
+pub(crate) use routes;
+
+/// `Ok(200)` JSON object response from `"key" => value` pairs.
+macro_rules! ok {
+    ($($k:literal => $v:expr),* $(,)?) => {
+        Ok($crate::gateway::http::HttpResponse::json(
+            200,
+            $crate::util::json::Json::obj(vec![$(($k, $v)),*]),
+        ))
+    };
+}
+pub(crate) use ok;
+
+/// `Err` early-exit with the uniform error body: `return err!(status,
+/// code, message)`.
+macro_rules! err {
+    ($status:expr, $code:expr, $msg:expr) => {
+        Err($crate::gateway::http::HttpResponse::error($status, $code, &$msg))
+    };
+}
+pub(crate) use err;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::proto::Decoded;
+    use crate::util::json::Json;
+
+    struct Ctx;
+
+    fn h_echo_sid(_: &Ctx, _: &HttpRequest, p: &PathParams) -> Result<HttpResponse, HttpResponse> {
+        let sid = p.u64("sid")?;
+        ok!("sid" => Json::Num(sid as f64))
+    }
+
+    fn h_fail(_: &Ctx, _: &HttpRequest, _: &PathParams) -> Result<HttpResponse, HttpResponse> {
+        err!(503, "overloaded", "try later")
+    }
+
+    fn table() -> Router<Ctx> {
+        routes! {
+            Get    "/v1/sessions/{sid}/hull" => GatewayRoute::SessionHull, h_echo_sid;
+            Delete "/v1/sessions/{sid}"      => GatewayRoute::SessionClose, h_fail;
+        }
+    }
+
+    fn req(method: Method, target: &str) -> HttpRequest {
+        let wire = format!("{} {} HTTP/1.1\r\n\r\n", method.word(), target);
+        match crate::gateway::http::decode_request(wire.as_bytes(), 1 << 20).unwrap() {
+            Decoded::Frame(r, _) => r,
+            Decoded::Need(_) => panic!("incomplete test request"),
+        }
+    }
+
+    #[test]
+    fn matches_and_extracts_typed_params() {
+        let d = table().dispatch(&Ctx, &req(Method::Get, "/v1/sessions/42/hull"));
+        assert_eq!(d.route, GatewayRoute::SessionHull);
+        assert_eq!(d.sid, Some(42));
+        assert_eq!(d.resp.status, 200);
+        assert_eq!(String::from_utf8(d.resp.body).unwrap(), "{\"sid\":42}");
+    }
+
+    #[test]
+    fn bad_path_param_is_a_400_not_a_handler_panic() {
+        let d = table().dispatch(&Ctx, &req(Method::Get, "/v1/sessions/banana/hull"));
+        assert_eq!(d.resp.status, 400);
+        assert!(String::from_utf8(d.resp.body).unwrap().contains("bad-path-parameter"));
+    }
+
+    #[test]
+    fn unknown_path_is_404_wrong_method_is_405() {
+        let d = table().dispatch(&Ctx, &req(Method::Get, "/nope"));
+        assert_eq!(d.resp.status, 404);
+        assert_eq!(d.route, GatewayRoute::Other);
+        let d = table().dispatch(&Ctx, &req(Method::Post, "/v1/sessions/7"));
+        assert_eq!(d.resp.status, 405);
+    }
+
+    #[test]
+    fn err_macro_flows_through_as_a_response() {
+        let d = table().dispatch(&Ctx, &req(Method::Delete, "/v1/sessions/7"));
+        assert_eq!(d.resp.status, 503);
+        assert_eq!(d.sid, Some(7));
+        assert!(String::from_utf8(d.resp.body).unwrap().contains("overloaded"));
+    }
+
+    #[test]
+    fn query_extraction_is_typed() {
+        let r = req(Method::Get, "/v1/sessions/1/hull?epoch=9&limit=abc");
+        assert_eq!(query_u64(&r, "epoch").unwrap(), Some(9));
+        assert_eq!(query_u64(&r, "cursorless").unwrap(), None);
+        let e = query_usize(&r, "limit").unwrap_err();
+        assert_eq!(e.status, 400);
+    }
+}

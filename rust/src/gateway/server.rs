@@ -1,0 +1,797 @@
+//! The gateway's connection core.
+//!
+//! On unix this is the same readiness-driven shape as the TCP core
+//! (`server/event_loop.rs`), sharing its `sys::Poller`/`sys::Waker`
+//! plumbing and its watermark constants: a small pool of I/O loop
+//! threads drives non-blocking sockets; complete HTTP requests bounce to
+//! a bounded dispatch pool where the typed router runs the handler
+//! (handlers may park — e.g. `POST /v1/hull` waits on the engine's reply
+//! channel, exactly like the threaded TCP shim); the encoded response
+//! posts back to the owning loop through its completion queue + waker.
+//! A connection decodes one request at a time (`busy`), so pipelined
+//! requests answer in order.  Malformed framing is fatal: the error
+//! response flushes with `Connection: close` and the connection ends.
+//!
+//! Elsewhere (non-unix) a thread-per-connection fallback serves the same
+//! routes over blocking sockets — same decoder, same router, same
+//! metrics; only the concurrency shape differs.
+
+use std::sync::Arc;
+
+use crate::engine::Engine;
+
+use super::{Ctx, GatewayConfig};
+
+/// Handle to a running gateway (shutdown on drop).
+pub struct GatewayHandle {
+    inner: imp::Handle,
+}
+
+impl GatewayHandle {
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.inner.local_addr
+    }
+
+    /// Stop accepting, drain in-flight exchanges, and join every
+    /// thread.  Dropping the handle does the same; this form just makes
+    /// shutdown explicit at call sites.
+    pub fn stop(self) {}
+}
+
+/// Start the HTTP gateway on `cfg.addr` (non-blocking; returns a
+/// handle).  The engine's shared metrics sink gains (or reuses) its
+/// `gateway` object, so TCP `STATS` starts reporting HTTP traffic the
+/// moment this returns.
+pub fn serve_gateway(engine: Arc<Engine>, cfg: &GatewayConfig) -> std::io::Result<GatewayHandle> {
+    let metrics = engine.register_gateway_metrics();
+    let ctx = Arc::new(Ctx {
+        engine,
+        metrics,
+        request_timeout_ms: cfg.request_timeout_ms,
+        page_limit: cfg.page_limit.max(1),
+    });
+    Ok(GatewayHandle { inner: imp::serve(ctx, cfg)? })
+}
+
+#[cfg(unix)]
+mod imp {
+    use std::collections::{HashMap, VecDeque};
+    use std::io::{ErrorKind, Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::AsRawFd;
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::{Arc, Condvar, Mutex};
+    use std::thread::JoinHandle;
+    use std::time::{Duration, Instant};
+
+    use crate::coordinator::{GatewayRoute, Metrics};
+    use crate::gateway::http::{self, HttpRequest};
+    use crate::gateway::router::Router;
+    use crate::gateway::{observe_exchange, Ctx, GatewayConfig};
+    use crate::server::event_loop::{
+        effective_io_threads, COMPACT_AT, DRAIN_MS, HIGH_WATER, LOW_WATER, READ_BUDGET, READ_CHUNK,
+    };
+    use crate::server::proto::Decoded;
+    use crate::server::sys::{self, EV_READ, EV_WRITE};
+    use crate::{log_debug, log_info};
+
+    const TOKEN_LISTENER: u64 = 0;
+    const TOKEN_WAKER: u64 = 1;
+    const FIRST_CONN_TOKEN: u64 = 2;
+
+    /// An encoded response ready for a connection's write buffer.
+    struct Completion {
+        token: u64,
+        bytes: Vec<u8>,
+        /// The request negotiated `Connection: close`: flush, then end.
+        close_after: bool,
+    }
+
+    struct LoopShared {
+        waker: sys::Waker,
+        inbox: Mutex<Vec<TcpStream>>,
+        completions: Mutex<Vec<Completion>>,
+    }
+
+    /// A decoded request bounced off the I/O thread to the dispatch pool.
+    struct Job {
+        shared: Arc<LoopShared>,
+        token: u64,
+        req: HttpRequest,
+        /// Wire bytes the request consumed (for byte counters).
+        bytes_in: u64,
+        /// Stamped at frame arrival so pool queueing counts into latency.
+        started: Instant,
+    }
+
+    struct PoolShared {
+        jobs: Mutex<VecDeque<Job>>,
+        cv: Condvar,
+        stop: AtomicBool,
+    }
+
+    impl PoolShared {
+        fn submit(&self, job: Job) {
+            if let Ok(mut q) = self.jobs.lock() {
+                q.push_back(job);
+                self.cv.notify_one();
+            }
+        }
+    }
+
+    struct DispatchPool {
+        shared: Arc<PoolShared>,
+        threads: Vec<JoinHandle<()>>,
+    }
+
+    impl DispatchPool {
+        fn start(ctx: Arc<Ctx>, workers: usize) -> std::io::Result<DispatchPool> {
+            let shared = Arc::new(PoolShared {
+                jobs: Mutex::new(VecDeque::new()),
+                cv: Condvar::new(),
+                stop: AtomicBool::new(false),
+            });
+            let router = Arc::new(crate::gateway::build_router());
+            let mut threads = Vec::with_capacity(workers);
+            for i in 0..workers {
+                let sh = shared.clone();
+                let cx = ctx.clone();
+                let rt = router.clone();
+                threads.push(
+                    std::thread::Builder::new()
+                        .name(format!("gw-dispatch-{i}"))
+                        .spawn(move || run_worker(&cx, &rt, &sh))?,
+                );
+            }
+            Ok(DispatchPool { shared, threads })
+        }
+
+        fn stop(self) {
+            self.shared.stop.store(true, Ordering::SeqCst);
+            self.shared.cv.notify_all();
+            for t in self.threads {
+                let _ = t.join();
+            }
+        }
+    }
+
+    fn run_worker(ctx: &Ctx, router: &Router<Ctx>, shared: &PoolShared) {
+        loop {
+            let job = {
+                let Ok(mut q) = shared.jobs.lock() else { return };
+                loop {
+                    if let Some(j) = q.pop_front() {
+                        break j;
+                    }
+                    if shared.stop.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    q = match shared.cv.wait(q) {
+                        Ok(guard) => guard,
+                        Err(_) => return,
+                    };
+                }
+            };
+            run_job(ctx, router, job);
+        }
+    }
+
+    /// Route + run one request on a pool thread, record the exchange,
+    /// post the encoded response back to the owning loop.
+    fn run_job(ctx: &Ctx, router: &Router<Ctx>, job: Job) {
+        let Job { shared, token, req, bytes_in, started } = job;
+        let keep_alive = req.keep_alive;
+        let d = router.dispatch(ctx, &req);
+        let mut bytes = Vec::new();
+        d.resp.encode(&mut bytes, keep_alive);
+        observe_exchange(ctx, d.route, d.sid, d.resp.status, bytes_in, bytes.len() as u64, started);
+        if let Ok(mut c) = shared.completions.lock() {
+            c.push(Completion { token, bytes, close_after: !keep_alive });
+        }
+        shared.waker.wake();
+    }
+
+    /// Per-connection state machine — `Conn` from the TCP core minus
+    /// protocol detection (there is only HTTP here) and error resync
+    /// (framing errors are always fatal).
+    struct Conn {
+        stream: TcpStream,
+        peer: String,
+        rbuf: Vec<u8>,
+        wbuf: Vec<u8>,
+        woff: usize,
+        interest: u32,
+        registered: bool,
+        busy: bool,
+        paused: bool,
+        closing: bool,
+        read_closed: bool,
+        requests: u64,
+    }
+
+    struct EventLoop {
+        index: usize,
+        poller: sys::Poller,
+        conns: HashMap<u64, Conn>,
+        shared: Arc<LoopShared>,
+        peers: Vec<Arc<LoopShared>>,
+        rr: usize,
+        listener: Option<TcpListener>,
+        ctx: Arc<Ctx>,
+        pool: Arc<PoolShared>,
+        stop: Arc<AtomicBool>,
+        next_token: Arc<AtomicU64>,
+        max_body_bytes: usize,
+        draining: bool,
+    }
+
+    impl EventLoop {
+        fn run(mut self) {
+            let mut events: Vec<sys::Event> = Vec::new();
+            let mut deadline: Option<Instant> = None;
+            loop {
+                if self.stop.load(Ordering::SeqCst) && !self.draining {
+                    self.begin_drain();
+                    deadline = Some(Instant::now() + Duration::from_millis(DRAIN_MS));
+                }
+                if self.draining {
+                    if self.conns.is_empty() {
+                        break;
+                    }
+                    if let Some(d) = deadline {
+                        if Instant::now() >= d {
+                            break;
+                        }
+                    }
+                }
+                let timeout = if self.draining { 25 } else { -1 };
+                if let Err(e) = self.poller.wait(&mut events, timeout) {
+                    log_info!("gw loop {}: poll error: {e}", self.index);
+                    break;
+                }
+                for ev in events.iter().copied() {
+                    match ev.token {
+                        TOKEN_LISTENER => self.accept_burst(),
+                        TOKEN_WAKER => self.shared.waker.drain(),
+                        token => self.conn_event(token, ev),
+                    }
+                }
+                self.apply_completions();
+                if !self.draining {
+                    self.adopt_inbox();
+                }
+            }
+            let leftover: Vec<u64> = self.conns.keys().copied().collect();
+            for token in leftover {
+                self.close_conn(token);
+            }
+        }
+
+        fn begin_drain(&mut self) {
+            self.draining = true;
+            if let Some(l) = self.listener.take() {
+                let _ = self.poller.delete(l.as_raw_fd());
+            }
+            let tokens: Vec<u64> = self.conns.keys().copied().collect();
+            for token in tokens {
+                let settled = match self.conns.get(&token) {
+                    Some(c) => !c.busy && c.woff == c.wbuf.len(),
+                    None => continue,
+                };
+                if settled {
+                    self.close_conn(token);
+                } else {
+                    self.update_interest(token);
+                }
+            }
+        }
+
+        fn accept_burst(&mut self) {
+            loop {
+                let accepted = match &self.listener {
+                    Some(l) => l.accept(),
+                    None => return,
+                };
+                match accepted {
+                    Ok((stream, _)) => {
+                        Metrics::inc(&self.ctx.metrics.accepted);
+                        let idx = self.rr % self.peers.len();
+                        self.rr = self.rr.wrapping_add(1);
+                        if idx == self.index {
+                            self.adopt(stream);
+                        } else {
+                            if let Ok(mut inbox) = self.peers[idx].inbox.lock() {
+                                inbox.push(stream);
+                            }
+                            self.peers[idx].waker.wake();
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                    Err(e) => {
+                        log_info!("gw accept error: {e}");
+                        return;
+                    }
+                }
+            }
+        }
+
+        fn adopt_inbox(&mut self) {
+            let incoming: Vec<TcpStream> = match self.shared.inbox.lock() {
+                Ok(mut inbox) => {
+                    if inbox.is_empty() {
+                        return;
+                    }
+                    inbox.drain(..).collect()
+                }
+                Err(_) => return,
+            };
+            for stream in incoming {
+                self.adopt(stream);
+            }
+        }
+
+        fn adopt(&mut self, stream: TcpStream) {
+            let _ = stream.set_nodelay(true);
+            if stream.set_nonblocking(true).is_err() {
+                return;
+            }
+            let token = self.next_token.fetch_add(1, Ordering::Relaxed);
+            if self.poller.add(stream.as_raw_fd(), token, EV_READ).is_err() {
+                return;
+            }
+            let peer = match stream.peer_addr() {
+                Ok(p) => p.to_string(),
+                Err(_) => "<unknown>".into(),
+            };
+            log_debug!("gw conn {peer}: connected (loop {})", self.index);
+            Metrics::inc(&self.ctx.metrics.open_connections);
+            self.conns.insert(
+                token,
+                Conn {
+                    stream,
+                    peer,
+                    rbuf: Vec::new(),
+                    wbuf: Vec::new(),
+                    woff: 0,
+                    interest: EV_READ,
+                    registered: true,
+                    busy: false,
+                    paused: false,
+                    closing: false,
+                    read_closed: false,
+                    requests: 0,
+                },
+            );
+        }
+
+        fn close_conn(&mut self, token: u64) {
+            if let Some(conn) = self.conns.remove(&token) {
+                if conn.registered {
+                    let _ = self.poller.delete(conn.stream.as_raw_fd());
+                }
+                Metrics::sub(&self.ctx.metrics.open_connections, 1);
+                log_debug!(
+                    "gw conn {}: disconnected after {} request(s) (loop {})",
+                    conn.peer,
+                    conn.requests,
+                    self.index
+                );
+            }
+        }
+
+        fn conn_event(&mut self, token: u64, ev: sys::Event) {
+            let Some(conn) = self.conns.get(&token) else {
+                return; // stale event for a connection closed this iteration
+            };
+            let skip_read = conn.read_closed || self.draining;
+            if ev.writable && !self.flush_conn(token) {
+                self.close_conn(token);
+                return;
+            }
+            if ev.readable && !skip_read && !self.read_conn(token) {
+                self.close_conn(token);
+                return;
+            }
+            self.post_io(token);
+        }
+
+        fn post_io(&mut self, token: u64) {
+            self.decode_conn(token);
+            if !self.flush_conn(token) {
+                self.close_conn(token);
+                return;
+            }
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            if conn.read_closed && !conn.busy {
+                conn.closing = true;
+            }
+            if conn.closing && !conn.busy && conn.woff == conn.wbuf.len() {
+                self.close_conn(token);
+                return;
+            }
+            self.update_interest(token);
+        }
+
+        fn read_conn(&mut self, token: u64) -> bool {
+            let Some(conn) = self.conns.get_mut(&token) else { return true };
+            let mut chunk = [0u8; READ_CHUNK];
+            let budget = conn.rbuf.len() + READ_BUDGET;
+            loop {
+                match conn.stream.read(&mut chunk) {
+                    Ok(0) => {
+                        conn.read_closed = true;
+                        return true;
+                    }
+                    Ok(n) => {
+                        conn.rbuf.extend_from_slice(&chunk[..n]);
+                        if n < chunk.len() || conn.rbuf.len() >= budget {
+                            return true;
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => return false,
+                }
+            }
+        }
+
+        /// Decode at most one request out of the read buffer: a complete
+        /// request dispatches and pauses the connection (`busy`) until
+        /// its completion returns, so pipelined requests answer in
+        /// order; broken framing ends the connection.
+        fn decode_conn(&mut self, token: u64) {
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            if conn.busy || conn.closing || conn.rbuf.is_empty() {
+                return;
+            }
+            match http::decode_request(&conn.rbuf, self.max_body_bytes) {
+                Ok(Decoded::Need(_)) => {}
+                Ok(Decoded::Frame(req, used)) => {
+                    conn.rbuf.drain(..used);
+                    conn.requests += 1;
+                    conn.busy = true;
+                    self.pool.submit(Job {
+                        shared: self.shared.clone(),
+                        token,
+                        req,
+                        bytes_in: used as u64,
+                        started: Instant::now(),
+                    });
+                }
+                Err(e) => {
+                    // framing can no longer be trusted: answer with
+                    // Connection: close and tear the connection down
+                    let resp = http::HttpResponse::error(e.status(), e.code(), &e.to_string());
+                    let mut bytes = Vec::new();
+                    resp.encode(&mut bytes, false);
+                    let bytes_in = conn.rbuf.len() as u64;
+                    conn.rbuf.clear();
+                    conn.wbuf.extend_from_slice(&bytes);
+                    conn.closing = true;
+                    log_info!("gw conn {}: {e}", conn.peer);
+                    Metrics::inc(&self.ctx.metrics.decode_errors);
+                    observe_exchange(
+                        &self.ctx,
+                        GatewayRoute::Other,
+                        None,
+                        resp.status,
+                        bytes_in,
+                        bytes.len() as u64,
+                        Instant::now(),
+                    );
+                }
+            }
+        }
+
+        fn flush_conn(&mut self, token: u64) -> bool {
+            let Some(conn) = self.conns.get_mut(&token) else { return true };
+            while conn.woff < conn.wbuf.len() {
+                match conn.stream.write(&conn.wbuf[conn.woff..]) {
+                    Ok(0) => return false,
+                    Ok(n) => conn.woff += n,
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => return false,
+                }
+            }
+            if conn.woff == conn.wbuf.len() {
+                conn.wbuf.clear();
+                conn.woff = 0;
+            } else if conn.woff >= COMPACT_AT {
+                conn.wbuf.drain(..conn.woff);
+                conn.woff = 0;
+            }
+            if conn.paused && conn.wbuf.len() - conn.woff < LOW_WATER {
+                conn.paused = false;
+            }
+            true
+        }
+
+        fn apply_completions(&mut self) {
+            let done: Vec<Completion> = match self.shared.completions.lock() {
+                Ok(mut c) => {
+                    if c.is_empty() {
+                        return;
+                    }
+                    c.drain(..).collect()
+                }
+                Err(_) => return,
+            };
+            for c in done {
+                let Some(conn) = self.conns.get_mut(&c.token) else {
+                    continue; // connection died while its request ran
+                };
+                conn.busy = false;
+                conn.wbuf.extend_from_slice(&c.bytes);
+                if c.close_after {
+                    conn.closing = true;
+                }
+                if !conn.paused && conn.wbuf.len() - conn.woff >= HIGH_WATER {
+                    conn.paused = true;
+                }
+                self.post_io(c.token);
+            }
+        }
+
+        fn update_interest(&mut self, token: u64) {
+            let draining = self.draining;
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            let mut want = 0u32;
+            if !conn.closing && !conn.busy && !conn.paused && !conn.read_closed && !draining {
+                want |= EV_READ;
+            }
+            if conn.woff < conn.wbuf.len() {
+                want |= EV_WRITE;
+            }
+            let fd = conn.stream.as_raw_fd();
+            if want == 0 {
+                if conn.registered {
+                    let _ = self.poller.delete(fd);
+                    conn.registered = false;
+                }
+            } else if !conn.registered {
+                if self.poller.add(fd, token, want).is_ok() {
+                    conn.registered = true;
+                    conn.interest = want;
+                }
+            } else if want != conn.interest && self.poller.modify(fd, token, want).is_ok() {
+                conn.interest = want;
+            }
+        }
+    }
+
+    pub(super) struct Handle {
+        pub(super) local_addr: std::net::SocketAddr,
+        stop: Arc<AtomicBool>,
+        loops: Vec<Arc<LoopShared>>,
+        threads: Vec<JoinHandle<()>>,
+        pool: Option<DispatchPool>,
+    }
+
+    impl Handle {
+        fn stop_inner(&mut self) {
+            self.stop.store(true, Ordering::SeqCst);
+            for shared in &self.loops {
+                shared.waker.wake();
+            }
+            for t in self.threads.drain(..) {
+                let _ = t.join();
+            }
+            if let Some(pool) = self.pool.take() {
+                pool.stop();
+            }
+        }
+    }
+
+    impl Drop for Handle {
+        fn drop(&mut self) {
+            self.stop_inner();
+        }
+    }
+
+    pub(super) fn serve(ctx: Arc<Ctx>, cfg: &GatewayConfig) -> std::io::Result<Handle> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        sys::raise_nofile_limit(1 << 16);
+
+        let io_threads = effective_io_threads(cfg.io_threads);
+        let stop = Arc::new(AtomicBool::new(false));
+        let next_token = Arc::new(AtomicU64::new(FIRST_CONN_TOKEN));
+        log_info!(
+            "gateway on {local_addr} (backend={} shards={} io_threads={io_threads})",
+            ctx.engine.backend_name(),
+            ctx.engine.shard_count()
+        );
+
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        let pool = DispatchPool::start(ctx.clone(), hw.clamp(4, 16))?;
+
+        let mut shareds = Vec::with_capacity(io_threads);
+        for _ in 0..io_threads {
+            shareds.push(Arc::new(LoopShared {
+                waker: sys::Waker::new()?,
+                inbox: Mutex::new(Vec::new()),
+                completions: Mutex::new(Vec::new()),
+            }));
+        }
+
+        let mut listener = Some(listener);
+        let mut threads = Vec::with_capacity(io_threads);
+        for (i, shared) in shareds.iter().enumerate() {
+            let mut poller = sys::Poller::new()?;
+            poller.add(shared.waker.fd(), TOKEN_WAKER, EV_READ)?;
+            let own_listener = if i == 0 {
+                let l = listener.take().expect("loop 0 takes the listener");
+                poller.add(l.as_raw_fd(), TOKEN_LISTENER, EV_READ)?;
+                Some(l)
+            } else {
+                None
+            };
+            let lp = EventLoop {
+                index: i,
+                poller,
+                conns: HashMap::new(),
+                shared: shared.clone(),
+                peers: shareds.clone(),
+                rr: i,
+                listener: own_listener,
+                ctx: ctx.clone(),
+                pool: pool.shared.clone(),
+                stop: stop.clone(),
+                next_token: next_token.clone(),
+                max_body_bytes: cfg.max_body_bytes.max(1),
+                draining: false,
+            };
+            threads.push(
+                std::thread::Builder::new().name(format!("gw-io-{i}")).spawn(move || lp.run())?,
+            );
+        }
+
+        Ok(Handle { local_addr, stop, loops: shareds, threads, pool: Some(pool) })
+    }
+}
+
+#[cfg(not(unix))]
+mod imp {
+    use std::io::{ErrorKind, Read, Write};
+    use std::net::{Shutdown, TcpListener, TcpStream};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Arc, Mutex};
+    use std::thread::JoinHandle;
+    use std::time::Instant;
+
+    use crate::coordinator::{GatewayRoute, Metrics};
+    use crate::gateway::http;
+    use crate::gateway::router::Router;
+    use crate::gateway::{observe_exchange, Ctx, GatewayConfig};
+    use crate::server::proto::Decoded;
+    use crate::{log_debug, log_info};
+
+    /// Thread-per-connection fallback: blocking sockets, the same
+    /// incremental decoder fed from a loop, the same router.
+    pub(super) struct Handle {
+        pub(super) local_addr: std::net::SocketAddr,
+        stop: Arc<AtomicBool>,
+        conns: Arc<Mutex<Vec<TcpStream>>>,
+        accept_thread: Option<JoinHandle<()>>,
+    }
+
+    impl Handle {
+        fn stop_inner(&mut self) {
+            self.stop.store(true, Ordering::SeqCst);
+            // poke the blocking accept loop awake
+            let _ = TcpStream::connect(self.local_addr);
+            if let Ok(conns) = self.conns.lock() {
+                for c in conns.iter() {
+                    let _ = c.shutdown(Shutdown::Both);
+                }
+            }
+            if let Some(t) = self.accept_thread.take() {
+                let _ = t.join();
+            }
+        }
+    }
+
+    impl Drop for Handle {
+        fn drop(&mut self) {
+            self.stop_inner();
+        }
+    }
+
+    fn serve_conn(ctx: &Ctx, router: &Router<Ctx>, mut stream: TcpStream, max_body: usize) {
+        let _ = stream.set_nodelay(true);
+        let mut rbuf: Vec<u8> = Vec::new();
+        let mut chunk = [0u8; 16 * 1024];
+        loop {
+            let (req, used) = loop {
+                match http::decode_request(&rbuf, max_body) {
+                    Ok(Decoded::Frame(req, used)) => break (req, used),
+                    Ok(Decoded::Need(_)) => match stream.read(&mut chunk) {
+                        Ok(0) => return,
+                        Ok(n) => rbuf.extend_from_slice(&chunk[..n]),
+                        Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                        Err(_) => return,
+                    },
+                    Err(e) => {
+                        let resp = http::HttpResponse::error(e.status(), e.code(), &e.to_string());
+                        let mut bytes = Vec::new();
+                        resp.encode(&mut bytes, false);
+                        Metrics::inc(&ctx.metrics.decode_errors);
+                        observe_exchange(
+                            ctx,
+                            GatewayRoute::Other,
+                            None,
+                            resp.status,
+                            rbuf.len() as u64,
+                            bytes.len() as u64,
+                            Instant::now(),
+                        );
+                        let _ = stream.write_all(&bytes);
+                        return;
+                    }
+                }
+            };
+            rbuf.drain(..used);
+            let started = Instant::now();
+            let keep_alive = req.keep_alive;
+            let d = router.dispatch(ctx, &req);
+            let mut bytes = Vec::new();
+            d.resp.encode(&mut bytes, keep_alive);
+            observe_exchange(ctx, d.route, d.sid, d.resp.status, used as u64, bytes.len() as u64, started);
+            if stream.write_all(&bytes).is_err() || !keep_alive {
+                return;
+            }
+        }
+    }
+
+    pub(super) fn serve(ctx: Arc<Ctx>, cfg: &GatewayConfig) -> std::io::Result<Handle> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let local_addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let router = Arc::new(crate::gateway::build_router());
+        let max_body = cfg.max_body_bytes.max(1);
+        log_info!(
+            "gateway on {local_addr} (backend={} shards={} core=threaded)",
+            ctx.engine.backend_name(),
+            ctx.engine.shard_count()
+        );
+        let accept_thread = {
+            let stop = stop.clone();
+            let conns = conns.clone();
+            std::thread::Builder::new().name("gw-accept".into()).spawn(move || {
+                for accepted in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    let stream = match accepted {
+                        Ok(s) => s,
+                        Err(e) => {
+                            log_info!("gw accept error: {e}");
+                            continue;
+                        }
+                    };
+                    Metrics::inc(&ctx.metrics.accepted);
+                    Metrics::inc(&ctx.metrics.open_connections);
+                    if let (Ok(mut registry), Ok(clone)) = (conns.lock(), stream.try_clone()) {
+                        registry.push(clone);
+                    }
+                    let cx = ctx.clone();
+                    let rt = router.clone();
+                    let spawned = std::thread::Builder::new().name("gw-conn".into()).spawn(
+                        move || {
+                            serve_conn(&cx, &rt, stream, max_body);
+                            Metrics::sub(&cx.metrics.open_connections, 1);
+                            log_debug!("gw conn closed");
+                        },
+                    );
+                    if let Err(e) = spawned {
+                        log_info!("gw spawn error: {e}");
+                    }
+                }
+            })?
+        };
+        Ok(Handle { local_addr, stop, conns, accept_thread: Some(accept_thread) })
+    }
+}

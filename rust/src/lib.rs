@@ -21,7 +21,9 @@ pub mod benchkit;
 pub mod config;
 pub mod coordinator;
 pub mod engine;
+pub mod errors;
 pub mod fault;
+pub mod gateway;
 pub mod geometry;
 pub mod ovl;
 pub mod pram;

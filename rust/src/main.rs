@@ -24,6 +24,7 @@ use wagener_hull::geometry::generators::{generate, Distribution};
 use wagener_hull::geometry::point::{pad_to_hood, Point};
 use wagener_hull::pram::ExecMode;
 use wagener_hull::runtime::ArtifactRegistry;
+use wagener_hull::gateway;
 use wagener_hull::server;
 use wagener_hull::viz::svg::{render_hull_svg, SvgOptions};
 use wagener_hull::viz::trace::TraceWriter;
@@ -43,6 +44,7 @@ commands:
              [--max-sessions <n>] [--merge-threshold <n>] [--idle-ttl-ms <n>]
              [--request-timeout-ms <n>] [--max-queued <n>] [--breaker-cooldown-ms <n>]
              [--max-proto-errors <n>] [--store-dir <dir>] [--placement <stripe|ring>]
+             [--http-port <n>]   also serve the HTTP/JSON gateway on this port
   client     --addr <host:port> [--proto <text|binary|auto>] [--tmo <ms>]
              [--connect-retries <n>] <points-file>
   occupancy  --n <count> [--dist <name>] [--seed <u64>]
@@ -363,6 +365,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         cfg.engine.placement =
             PlacementKind::parse(v).ok_or_else(|| anyhow!("unknown placement {v:?}"))?;
     }
+    if let Some(v) = flags.get("http-port") {
+        cfg.gateway.port = v.parse::<u16>().context("--http-port wants a port (0..=65535)")?;
+        cfg.gateway.enabled = true;
+    }
     if let Some(v) = flags.get("store-dir") {
         cfg.store.dir = (!v.is_empty()).then(|| PathBuf::from(v));
     }
@@ -394,6 +400,23 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         );
     }
     let handle = server::serve_engine(engine.clone(), &cfg.server)?;
+    // both listeners front the same Engine: the gateway handle must
+    // outlive the serve loop, so bind it before blocking
+    let _gw_handle = if cfg.gateway.enabled {
+        let host = cfg.server.addr.rsplit_once(':').map(|(h, _)| h).unwrap_or("127.0.0.1");
+        let gw_cfg = gateway::GatewayConfig {
+            addr: format!("{host}:{}", cfg.gateway.port),
+            io_threads: cfg.server.io_threads,
+            request_timeout_ms: cfg.server.request_timeout_ms,
+            max_body_bytes: cfg.gateway.max_body_bytes,
+            page_limit: cfg.gateway.page_limit,
+        };
+        let gw = gateway::serve_gateway(engine.clone(), &gw_cfg)?;
+        println!("gateway on {} (page_limit={})", gw.local_addr(), cfg.gateway.page_limit);
+        Some(gw)
+    } else {
+        None
+    };
     println!(
         "serving on {} backend={} shards={} placement={} workers/shard={} max_sessions={} \
          merge_threshold={} store={} (Ctrl-C to stop)",

@@ -47,20 +47,20 @@ const FIRST_CONN_TOKEN: u64 = 2;
 
 /// Pause decoding new requests once this much response data is queued
 /// unsent; the client must drain before we produce more.
-const HIGH_WATER: usize = 1 << 20;
+pub(crate) const HIGH_WATER: usize = 1 << 20;
 /// Resume below this.
-const LOW_WATER: usize = 256 * 1024;
+pub(crate) const LOW_WATER: usize = 256 * 1024;
 /// Per-readiness-event read budget: a firehose sender cannot starve the
 /// other connections on this loop (level-triggering re-arms us).
-const READ_BUDGET: usize = 256 * 1024;
-const READ_CHUNK: usize = 16 * 1024;
+pub(crate) const READ_BUDGET: usize = 256 * 1024;
+pub(crate) const READ_CHUNK: usize = 16 * 1024;
 /// Compact the write buffer once this much has been consumed.
-const COMPACT_AT: usize = 64 * 1024;
+pub(crate) const COMPACT_AT: usize = 64 * 1024;
 /// Bound on the stop-time drain of in-flight requests and unsent bytes.
-const DRAIN_MS: u64 = 2000;
+pub(crate) const DRAIN_MS: u64 = 2000;
 
 /// Pick the loop count: explicit if configured, else `cores/4` in 1..=4.
-fn effective_io_threads(configured: usize) -> usize {
+pub(crate) fn effective_io_threads(configured: usize) -> usize {
     if configured != 0 {
         return configured.clamp(1, 64);
     }

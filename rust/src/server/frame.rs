@@ -236,7 +236,7 @@ pub fn encode_response(out: &mut Vec<u8>, resp: &Response) {
 
 // ------------------------------------------------------------- decoding
 
-fn read_points(bytes: &[u8], count: usize) -> Vec<Point> {
+pub(crate) fn read_points(bytes: &[u8], count: usize) -> Vec<Point> {
     debug_assert_eq!(bytes.len(), count * 16);
     let mut pts = Vec::with_capacity(count);
     for pair in bytes.chunks_exact(16) {

@@ -11,7 +11,7 @@
 
 pub mod client;
 #[cfg(unix)]
-mod event_loop;
+pub(crate) mod event_loop;
 pub mod frame;
 pub mod proto;
 #[cfg(unix)]

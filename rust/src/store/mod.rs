@@ -88,8 +88,12 @@ pub enum StoreError {
 impl fmt::Display for StoreError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
-            StoreError::Corrupt(d) => write!(f, "snapshot-corrupt: {d}"),
-            StoreError::Io(d) => write!(f, "snapshot-io: {d}"),
+            StoreError::Corrupt(d) => {
+                write!(f, "{}: {d}", crate::errors::TypedError::SnapshotCorrupt.wire_token())
+            }
+            StoreError::Io(d) => {
+                write!(f, "{}: {d}", crate::errors::TypedError::SnapshotIo.wire_token())
+            }
         }
     }
 }

@@ -89,8 +89,13 @@ pub enum SessionError {
 impl std::fmt::Display for SessionError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            SessionError::UnknownSession => write!(f, "unknown-session"),
-            SessionError::UnknownEpoch => write!(f, "unknown-epoch"),
+            // typed tokens come from the shared table in `crate::errors`
+            SessionError::UnknownSession => {
+                f.write_str(crate::errors::TypedError::UnknownSession.wire_token())
+            }
+            SessionError::UnknownEpoch => {
+                f.write_str(crate::errors::TypedError::UnknownEpoch.wire_token())
+            }
             SessionError::Capacity { max } => write!(f, "session capacity {max} reached"),
             SessionError::AlreadyOpen => write!(f, "session already open"),
             SessionError::Snapshot(e) => write!(f, "{e}"),

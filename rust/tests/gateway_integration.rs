@@ -1,0 +1,462 @@
+//! HTTP gateway end-to-end: both listeners (TCP event core + HTTP
+//! gateway) front *one* shared [`Engine`], so every HTTP exchange must
+//! be bit-identical in substance to its TCP equivalent — hulls, session
+//! state, epoch time-travel, and error taxonomy.  Pagination is pinned
+//! the hardest way: pages fetched through opaque cursors, with the
+//! session mutating mid-walk, must reassemble to the exact bytes of a
+//! one-shot `SHULL` read.
+//!
+//! Every assertion is shard-count independent (tier1 re-runs the suite
+//! with `ENGINE_SHARDS=4`): sids come from the server, and stats are
+//! checked for shape, not values.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use wagener_hull::coordinator::{BackendKind, BatcherConfig, CoordinatorConfig};
+use wagener_hull::engine::{Engine, EngineConfig};
+use wagener_hull::gateway::client::HttpClient;
+use wagener_hull::gateway::{serve_gateway, GatewayConfig, GatewayHandle};
+use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::geometry::point::Point;
+use wagener_hull::server::{serve_engine, HullClient, ServerConfig, ServerHandle};
+use wagener_hull::stream::StreamConfig;
+use wagener_hull::util::json::Json;
+
+/// One engine, two listeners.  `merge_threshold: 1` makes every `SADD`
+/// absorb immediately, so the epoch in each add reply names a fully
+/// materialized ledger entry — the determinism time-travel needs.
+struct Stack {
+    engine: Arc<Engine>,
+    tcp: ServerHandle,
+    gw: GatewayHandle,
+}
+
+fn start_stack() -> Stack {
+    let engine = Arc::new(
+        Engine::start(EngineConfig {
+            shards: EngineConfig::shards_from_env(1),
+            coordinator: CoordinatorConfig {
+                backend: BackendKind::Serial,
+                batcher: BatcherConfig { max_batch: 4, flush_us: 200, queue_cap: 256 },
+                ..Default::default()
+            },
+            stream: StreamConfig { merge_threshold: 1, ..Default::default() },
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let tcp = serve_engine(
+        engine.clone(),
+        &ServerConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+    )
+    .unwrap();
+    let gw = serve_gateway(
+        engine.clone(),
+        &GatewayConfig { addr: "127.0.0.1:0".into(), ..Default::default() },
+    )
+    .unwrap();
+    Stack { engine, tcp, gw }
+}
+
+impl Stack {
+    fn http(&self) -> HttpClient {
+        HttpClient::connect(self.gw.local_addr()).unwrap()
+    }
+
+    fn tcp_client(&self) -> HullClient {
+        let mut c = HullClient::connect(self.tcp.local_addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(20))).unwrap();
+        c
+    }
+}
+
+// ----------------------------------------------------------- helpers
+
+/// Points as exact bit patterns — the unit of parity.
+fn bits(pts: &[Point]) -> Vec<(u64, u64)> {
+    pts.iter().map(|p| (p.x.to_bits(), p.y.to_bits())).collect()
+}
+
+/// Decode a JSON `[[x,y],...]` chain back into points.  The gateway
+/// prints f64s in shortest-roundtrip form, so parse(print(x)) == x
+/// bit-for-bit; any mismatch downstream is a real parity break.
+fn json_points(j: &Json, key: &str) -> Vec<Point> {
+    j.get(key)
+        .and_then(|v| v.as_arr())
+        .unwrap_or_else(|| panic!("response wants a {key:?} array: {j}"))
+        .iter()
+        .map(|pair| {
+            let p = pair.as_arr().expect("[x, y] pair");
+            Point::new(p[0].as_f64().unwrap(), p[1].as_f64().unwrap())
+        })
+        .collect()
+}
+
+fn err_code(j: &Json) -> String {
+    match j.get("error").and_then(|e| e.get("code")) {
+        Some(Json::Str(s)) => s.clone(),
+        _ => panic!("response wants an error object: {j}"),
+    }
+}
+
+fn num(j: &Json, key: &str) -> u64 {
+    j.get(key).and_then(|v| v.as_f64()).unwrap_or_else(|| panic!("{key} in {j}")) as u64
+}
+
+fn points_body(pts: &[Point]) -> String {
+    let pairs: Vec<String> = pts.iter().map(|p| format!("[{},{}]", p.x, p.y)).collect();
+    format!("{{\"points\":[{}]}}", pairs.join(","))
+}
+
+fn le_body(pts: &[Point]) -> Vec<u8> {
+    let mut b = Vec::with_capacity(pts.len() * 16);
+    for p in pts {
+        b.extend_from_slice(&p.x.to_le_bytes());
+        b.extend_from_slice(&p.y.to_le_bytes());
+    }
+    b
+}
+
+// ------------------------------------------------------ one-shot hulls
+
+/// The same point set through all four encodings — TCP text, TCP
+/// binary, HTTP JSON, HTTP octet-stream — produces bit-identical hulls.
+#[test]
+fn http_hulls_match_tcp_bit_for_bit() {
+    let stack = start_stack();
+    let pts = generate(Distribution::Disk, 300, 7);
+
+    let mut tcp = stack.tcp_client();
+    let reference = tcp.hull(&pts).unwrap();
+
+    let mut http = stack.http();
+    for (what, r) in [
+        ("json", http.post_json("/v1/hull?id=7", &points_body(&pts)).unwrap()),
+        ("binary", http.post_bytes("/v1/hull?id=7", &le_body(&pts)).unwrap()),
+    ] {
+        let j = r.json();
+        assert_eq!(r.status, 200, "{what}: {j}");
+        assert_eq!(num(&j, "id"), 7, "{what}");
+        assert_eq!(bits(&json_points(&j, "upper")), bits(&reference.upper), "{what} upper");
+        assert_eq!(bits(&json_points(&j, "lower")), bits(&reference.lower), "{what} lower");
+        assert_eq!(
+            j.get("backend"),
+            Some(&Json::Str(reference.backend.clone())),
+            "{what} backend"
+        );
+    }
+    tcp.quit().unwrap();
+    stack.gw.stop();
+    stack.tcp.stop();
+}
+
+/// Hull-level failures carry the shared taxonomy: out-of-range
+/// coordinates and empty point sets are 400s with stable codes, and the
+/// connection stays usable afterwards (keep-alive survives errors).
+#[test]
+fn hull_errors_map_to_stable_statuses() {
+    let stack = start_stack();
+    let mut http = stack.http();
+
+    let r = http.post_json("/v1/hull", &points_body(&[Point::new(5.0, 5.0)])).unwrap();
+    assert_eq!(r.status, 400, "{}", r.json());
+    assert_eq!(err_code(&r.json()), "bad-request");
+
+    let r = http.post_json("/v1/hull", "{\"points\":[]}").unwrap();
+    assert_eq!(r.status, 400, "{}", r.json());
+
+    let r = http.post_json("/v1/hull", "points are not json").unwrap();
+    assert_eq!(err_code(&r.json()), "bad-json");
+
+    // 15 bytes is not a whole x,y pair
+    let r = http.post_bytes("/v1/hull", &[0u8; 15]).unwrap();
+    assert_eq!(r.status, 400);
+    assert_eq!(err_code(&r.json()), "bad-binary-body");
+
+    // the connection survived four failures: a good request still lands
+    let r = http.post_json("/v1/hull", &points_body(&generate(Distribution::Disk, 32, 1))).unwrap();
+    assert_eq!(r.status, 200);
+    stack.gw.stop();
+    stack.tcp.stop();
+}
+
+// ------------------------------------------------- shared session state
+
+/// A session opened over HTTP is the same session over TCP: adds from
+/// either listener land in one ledger, live hulls agree bit-for-bit,
+/// and historical epochs replay identically through both protocols.
+#[test]
+fn sessions_are_shared_across_listeners_with_epoch_time_travel() {
+    let stack = start_stack();
+    let mut http = stack.http();
+    let mut tcp = stack.tcp_client();
+
+    let r = http.post_json("/v1/sessions", "").unwrap();
+    assert_eq!(r.status, 200, "{}", r.json());
+    let sid = num(&r.json(), "sid");
+
+    // interleave writers across protocols
+    let chunk = generate(Distribution::Circle, 96, 23);
+    let r = http
+        .post_json(&format!("/v1/sessions/{sid}/points"), &points_body(&chunk[..48]))
+        .unwrap();
+    assert_eq!(r.status, 200, "{}", r.json());
+    let mid_epoch = num(&r.json(), "epoch");
+    tcp.session_add(sid, &chunk[48..]).unwrap();
+
+    // live hulls agree
+    let reference = tcp.session_hull(sid).unwrap();
+    let r = http.get(&format!("/v1/sessions/{sid}/hull")).unwrap();
+    let j = r.json();
+    assert_eq!(r.status, 200, "{j}");
+    assert_eq!(num(&j, "epoch"), reference.epoch);
+    assert_eq!(bits(&json_points(&j, "upper")), bits(&reference.upper));
+    assert_eq!(bits(&json_points(&j, "lower")), bits(&reference.lower));
+
+    // time-travel: the epoch the HTTP add reported replays identically
+    let past = tcp.session_hull_at(sid, mid_epoch).unwrap();
+    let r = http.get(&format!("/v1/sessions/{sid}/hull?epoch={mid_epoch}")).unwrap();
+    let j = r.json();
+    assert_eq!(num(&j, "epoch"), past.epoch);
+    assert_eq!(bits(&json_points(&j, "upper")), bits(&past.upper));
+    assert_eq!(bits(&json_points(&j, "lower")), bits(&past.lower));
+
+    // epoch 0 is the empty hull on both sides
+    let r = http.get(&format!("/v1/sessions/{sid}/hull?epoch=0")).unwrap();
+    assert!(json_points(&r.json(), "upper").is_empty());
+
+    // beyond the ledger: unknown-epoch through both protocols
+    let r = http.get(&format!("/v1/sessions/{sid}/hull?epoch=999999")).unwrap();
+    assert_eq!(r.status, 404);
+    assert_eq!(err_code(&r.json()), "unknown-epoch");
+    let e = tcp.session_hull_at(sid, 999_999).unwrap_err();
+    assert!(e.to_string().contains("unknown-epoch"), "{e}");
+
+    // close over HTTP; the TCP side sees it gone
+    let r = http.delete(&format!("/v1/sessions/{sid}")).unwrap();
+    assert_eq!(r.status, 200);
+    assert!(tcp.session_add(sid, &chunk[..1]).is_err());
+    let r = http.get(&format!("/v1/sessions/{sid}/hull")).unwrap();
+    assert_eq!(r.status, 404);
+    assert_eq!(err_code(&r.json()), "unknown-session");
+
+    tcp.quit().unwrap();
+    stack.gw.stop();
+    stack.tcp.stop();
+}
+
+/// Session restore round-trips through the JSON body form.
+#[test]
+fn restore_rides_the_json_body() {
+    let stack = start_stack();
+    // no snapshot store configured in this stack: restore of an unknown
+    // sid is still a typed miss, which is what we pin here
+    let mut http = stack.http();
+    let r = http.post_json("/v1/sessions", "{\"restore\": 424242}").unwrap();
+    assert_eq!(r.status, 404, "{}", r.json());
+    assert_eq!(err_code(&r.json()), "unknown-session");
+    let r = http.post_json("/v1/sessions", "{\"restore\": -3}").unwrap();
+    assert_eq!(r.status, 400);
+    assert_eq!(err_code(&r.json()), "bad-json");
+    stack.gw.stop();
+    stack.tcp.stop();
+}
+
+// ------------------------------------------------------------ pagination
+
+/// Walk `GET /v1/sessions/{sid}/hull` to exhaustion following
+/// `next_cursor`, returning the reassembled chains and every page's
+/// reported epoch.
+fn paginate(
+    http: &mut HttpClient,
+    sid: u64,
+    first: String,
+    limit: usize,
+) -> (Vec<Point>, Vec<Point>, Vec<u64>) {
+    let (mut upper, mut lower, mut epochs) = (Vec::new(), Vec::new(), Vec::new());
+    let mut target = first;
+    for _ in 0..10_000 {
+        let r = http.get(&target).unwrap();
+        let j = r.json();
+        assert_eq!(r.status, 200, "{j}");
+        let (u, l) = (json_points(&j, "upper"), json_points(&j, "lower"));
+        assert!(u.len() + l.len() <= limit, "page overflows limit {limit}: {j}");
+        upper.extend(u);
+        lower.extend(l);
+        epochs.push(num(&j, "epoch"));
+        match j.get("next_cursor") {
+            Some(Json::Str(c)) => {
+                target = format!("/v1/sessions/{sid}/hull?cursor={c}&limit={limit}");
+            }
+            Some(Json::Null) => return (upper, lower, epochs),
+            other => panic!("next_cursor is {other:?}"),
+        }
+    }
+    panic!("pagination never terminated at limit {limit}");
+}
+
+/// Pages reassemble bit-identically to a one-shot TCP `SHULL` for every
+/// page size — including limit=1 — and keep doing so while the session
+/// absorbs new points mid-walk, because the cursor pins its epoch.
+#[test]
+fn pages_reassemble_bit_identically_under_concurrent_writes() {
+    let stack = start_stack();
+    let mut http = stack.http();
+    let mut tcp = stack.tcp_client();
+
+    let sid = num(&http.post_json("/v1/sessions", "").unwrap().json(), "sid");
+    // circle points: every input point is a hull vertex, so the chains
+    // are long enough that small limits take many pages
+    let pts = generate(Distribution::Circle, 257, 5);
+    let r = http.post_bytes(&format!("/v1/sessions/{sid}/points"), &le_body(&pts)).unwrap();
+    assert_eq!(r.status, 200, "{}", r.json());
+
+    let reference = tcp.session_hull(sid).unwrap();
+    assert!(
+        reference.upper.len() + reference.lower.len() > 40,
+        "degenerate reference hull ({} + {} points)",
+        reference.upper.len(),
+        reference.lower.len()
+    );
+
+    for limit in [1usize, 2, 3, 7, 64, 4096] {
+        let first = format!("/v1/sessions/{sid}/hull?epoch={}&limit={limit}", reference.epoch);
+        let (upper, lower, epochs) = paginate(&mut http, sid, first, limit);
+        assert_eq!(bits(&upper), bits(&reference.upper), "limit {limit} upper");
+        assert_eq!(bits(&lower), bits(&reference.lower), "limit {limit} lower");
+        assert!(epochs.iter().all(|e| *e == reference.epoch), "limit {limit}: {epochs:?}");
+
+        // mutate between walks: later reads of the *pinned* epoch must
+        // not see the new points
+        let more = generate(Distribution::Disk, 16, limit as u64 + 100);
+        tcp.session_add(sid, &more).unwrap();
+    }
+
+    // and a live (un-pinned) walk now reflects all the mutations
+    let live = tcp.session_hull(sid).unwrap();
+    let (upper, lower, _) =
+        paginate(&mut http, sid, format!("/v1/sessions/{sid}/hull?limit=7"), 7);
+    assert_eq!(bits(&upper), bits(&live.upper));
+    assert_eq!(bits(&lower), bits(&live.lower));
+
+    tcp.quit().unwrap();
+    stack.gw.stop();
+    stack.tcp.stop();
+}
+
+/// Cursor misuse is a typed 400, never a panic or a silent wrong page.
+#[test]
+fn cursor_misuse_is_a_typed_400() {
+    let stack = start_stack();
+    let mut http = stack.http();
+    let sid = num(&http.post_json("/v1/sessions", "").unwrap().json(), "sid");
+    http.post_json(&format!("/v1/sessions/{sid}/points"), &points_body(&[Point::new(0.0, 0.0)]))
+        .unwrap();
+
+    let all_ff = "ff".repeat(19);
+    for bad in ["junk", "00", all_ff.as_str()] {
+        let r = http.get(&format!("/v1/sessions/{sid}/hull?cursor={bad}")).unwrap();
+        assert_eq!(r.status, 400, "cursor {bad:?}");
+        assert_eq!(err_code(&r.json()), "bad-cursor");
+    }
+
+    // a real cursor with a contradicting ?epoch= is rejected, not raced
+    let r = http.get(&format!("/v1/sessions/{sid}/hull?limit=1")).unwrap();
+    if let Some(Json::Str(c)) = r.json().get("next_cursor") {
+        let r = http.get(&format!("/v1/sessions/{sid}/hull?cursor={c}&epoch=999")).unwrap();
+        assert_eq!(r.status, 400);
+        assert_eq!(err_code(&r.json()), "bad-cursor");
+    }
+    stack.gw.stop();
+    stack.tcp.stop();
+}
+
+// ---------------------------------------------------- routing + errors
+
+#[test]
+fn unknown_routes_and_methods_are_typed() {
+    let stack = start_stack();
+    let mut http = stack.http();
+
+    let r = http.get("/v2/nope").unwrap();
+    assert_eq!(r.status, 404);
+    assert_eq!(err_code(&r.json()), "unknown-route");
+
+    let r = http.post_json("/healthz", "").unwrap();
+    assert_eq!(r.status, 405);
+    assert_eq!(err_code(&r.json()), "method-not-allowed");
+
+    let r = http.get("/v1/sessions/notanumber/hull").unwrap();
+    assert_eq!(r.status, 400);
+    assert_eq!(err_code(&r.json()), "bad-path-parameter");
+
+    let r = http.get("/v1/sessions/1/hull?limit=many").unwrap();
+    assert_eq!(r.status, 400);
+    assert_eq!(err_code(&r.json()), "bad-query-parameter");
+    stack.gw.stop();
+    stack.tcp.stop();
+}
+
+// -------------------------------------------------- stats + observability
+
+/// Both protocols expose one stats document: the gateway object (with
+/// its per-route entries) and the io object appear with identical key
+/// sets whether read over `GET /v1/stats` or TCP `STATS`.
+#[test]
+fn stats_agree_across_protocols_and_probes_answer() {
+    let stack = start_stack();
+    let mut http = stack.http();
+    let mut tcp = stack.tcp_client();
+
+    // generate some traffic so the counters move
+    http.post_json("/v1/hull", &points_body(&generate(Distribution::Disk, 32, 3))).unwrap();
+    http.get("/v2/nope").unwrap();
+
+    let r = http.get("/healthz").unwrap();
+    assert_eq!(r.status, 200);
+    assert_eq!(r.json().get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(num(&r.json(), "shards"), stack.engine.shard_count() as u64);
+
+    let r = http.get("/readyz").unwrap();
+    assert_eq!(r.status, 200, "{}", r.json());
+    assert_eq!(r.json().get("ready"), Some(&Json::Bool(true)));
+
+    let r = http.get("/v1/stats").unwrap();
+    assert_eq!(r.status, 200);
+    let via_http = r.json();
+    let via_tcp = wagener_hull::util::json::parse(&tcp.stats().unwrap()).unwrap();
+
+    for doc in [&via_http, &via_tcp] {
+        let gw = doc.get("gateway").and_then(|g| g.as_obj()).expect("gateway object");
+        assert!(gw.contains_key("accepted"));
+        assert!(gw.contains_key("decode_errors"));
+        let routes = gw.get("routes").and_then(|r| r.as_obj()).expect("routes object");
+        let hull = routes.get("POST /v1/hull").and_then(|r| r.as_obj()).expect("hull route");
+        for key in ["requests", "status_2xx", "status_4xx", "status_5xx", "latency"] {
+            assert!(hull.contains_key(key), "route metrics want {key}");
+        }
+        assert!(doc.get("io").is_some(), "stats wants the io object");
+    }
+    // identical schema through both listeners
+    let keys = |j: &Json| -> Vec<String> {
+        j.get("gateway").and_then(|g| g.as_obj()).unwrap().keys().cloned().collect()
+    };
+    assert_eq!(keys(&via_http), keys(&via_tcp));
+
+    // the traffic we generated is visible: ≥1 hull request, ≥1 'other'
+    let count = |j: &Json, route: &str| -> u64 {
+        j.get("gateway")
+            .and_then(|g| g.get("routes"))
+            .and_then(|r| r.get(route))
+            .and_then(|r| r.get("requests"))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0) as u64
+    };
+    assert!(count(&via_tcp, "POST /v1/hull") >= 1);
+    assert!(count(&via_tcp, "other") >= 1);
+
+    tcp.quit().unwrap();
+    stack.gw.stop();
+    stack.tcp.stop();
+}

@@ -14,6 +14,8 @@
 //!   * valid frames survive encode -> decode bit-exactly, and every
 //!     strict prefix of a valid frame is `Need`, never an error.
 
+use wagener_hull::gateway::cursor;
+use wagener_hull::gateway::http::{self, HttpError, MAX_HEAD_BYTES};
 use wagener_hull::geometry::point::Point;
 use wagener_hull::server::proto::{
     self, Decoded, ProtoError, Request, MAX_REQUEST_POINTS, MAX_TEXT_LINE,
@@ -355,6 +357,249 @@ fn oversized_counts_always_reject_before_payload() {
             let line = format!("{verb} {id} {over}\n");
             let e = proto::decode_text_request(line.as_bytes()).unwrap_err();
             assert_eq!(e.frame_id(), Some(id), "text {verb} count {over}");
+        }
+    }
+}
+
+// ------------------------------------------------------ HTTP gateway
+
+/// The gateway decoder's bounded-progress contract: `Need(n)` moves
+/// forward and never asks past the head cap + body cap (plus buffered
+/// chunk-framing overhead).  Errors are fatal by design — the gateway
+/// answers once and closes — so any `Err` is acceptable here; the only
+/// failures are panics and contract breaches.
+fn check_http_request(buf: &[u8], max_body: usize) {
+    match http::decode_request(buf, max_body) {
+        Ok(Decoded::Need(n)) => {
+            assert!(n > buf.len(), "Need({n}) makes no progress at len {}", buf.len());
+            assert!(
+                n <= buf.len().max(MAX_HEAD_BYTES) + max_body + 2,
+                "Need({n}) over the cap (len {}, max_body {max_body})",
+                buf.len()
+            );
+        }
+        Ok(Decoded::Frame(_, used)) => {
+            assert!(used <= buf.len() && used > 0, "used {used} of {}", buf.len());
+        }
+        Err(_) => {}
+    }
+}
+
+#[test]
+fn http_random_bytes_never_panic_or_overcommit() {
+    let mut rng = Rng::new(0xF0CC_0007);
+    for i in 0..6000u32 {
+        let max = if i % 50 == 0 { 4096 } else { 96 };
+        let buf = random_bytes(&mut rng, max);
+        for max_body in [0usize, 100, 1 << 20] {
+            check_http_request(&buf, max_body);
+        }
+    }
+}
+
+/// Header soup: structurally plausible requests (real methods and
+/// targets, adversarial framing headers) reach the body-framing logic
+/// that raw noise almost never does.
+#[test]
+fn http_header_soup_never_panics() {
+    const METHODS: &[&str] = &["GET", "POST", "DELETE", "PATCH", "get", ""];
+    const TARGETS: &[&str] =
+        &["/", "/v1/hull", "/v1/sessions/7/hull?epoch=3&limit=2", "nope", "/%zz%41+x", "/?a&b="];
+    const VERSIONS: &[&str] = &["HTTP/1.1", "HTTP/1.0", "HTTP/2", "http/1.1", ""];
+    const HEADERS: &[&str] = &[
+        "host: x",
+        "content-length: 5",
+        "content-length: 5\r\ncontent-length: 5",
+        "content-length: 5\r\ncontent-length: 6",
+        "content-length: zz",
+        "content-length: 99999999999999999999",
+        "transfer-encoding: chunked",
+        "transfer-encoding: chunked\r\ncontent-length: 3",
+        "transfer-encoding: gzip",
+        " folded: 1",
+        "no-colon",
+        "bad name: 1",
+        "connection: close",
+        "connection: keep-alive",
+        ": empty",
+    ];
+    let mut rng = Rng::new(0xF0CC_0008);
+    for _ in 0..8000u32 {
+        let mut s = format!(
+            "{} {} {}\r\n",
+            METHODS[rng.range_usize(0, METHODS.len())],
+            TARGETS[rng.range_usize(0, TARGETS.len())],
+            VERSIONS[rng.range_usize(0, VERSIONS.len())],
+        );
+        for _ in 0..rng.range_usize(0, 4) {
+            s.push_str(HEADERS[rng.range_usize(0, HEADERS.len())]);
+            s.push_str("\r\n");
+        }
+        s.push_str("\r\n");
+        let mut buf = s.into_bytes();
+        buf.extend(random_bytes(&mut rng, 32));
+        if rng.chance(0.2) {
+            buf.truncate(rng.range_usize(0, buf.len() + 1));
+        }
+        check_http_request(&buf, 1 << 20);
+    }
+}
+
+/// A generated *valid* request decodes whole (`used` == wire length,
+/// body reassembled exactly), and every strict prefix is `Need` — never
+/// a phantom frame, never an error.
+#[test]
+fn http_valid_requests_roundtrip_and_prefixes_are_need() {
+    let mut rng = Rng::new(0xF0CC_0009);
+    for _ in 0..1200u32 {
+        let method = ["GET", "POST", "DELETE"][rng.range_usize(0, 3)];
+        let target = [
+            "/v1/hull".to_string(),
+            format!("/v1/sessions/{}/hull?epoch={}&limit=7", rng.below(100), rng.below(9)),
+            "/v1/stats".to_string(),
+        ][rng.range_usize(0, 3)]
+            .clone();
+        let mut wire = format!("{method} {target} HTTP/1.1\r\nhost: fuzz\r\n").into_bytes();
+        let mut body = Vec::new();
+        match rng.below(3) {
+            0 => {
+                // no framing headers: the body is empty by definition
+                wire.extend_from_slice(b"\r\n");
+            }
+            1 => {
+                body = random_bytes(&mut rng, 64);
+                wire.extend_from_slice(
+                    format!("content-length: {}\r\n\r\n", body.len()).as_bytes(),
+                );
+                wire.extend_from_slice(&body);
+            }
+            _ => {
+                wire.extend_from_slice(b"transfer-encoding: chunked\r\n\r\n");
+                for _ in 0..rng.range_usize(0, 4) {
+                    let chunk = random_bytes(&mut rng, 32);
+                    if chunk.is_empty() {
+                        continue; // a zero chunk would terminate early
+                    }
+                    wire.extend_from_slice(format!("{:x}\r\n", chunk.len()).as_bytes());
+                    wire.extend_from_slice(&chunk);
+                    wire.extend_from_slice(b"\r\n");
+                    body.extend_from_slice(&chunk);
+                }
+                wire.extend_from_slice(b"0\r\n\r\n");
+            }
+        }
+        match http::decode_request(&wire, 1 << 20) {
+            Ok(Decoded::Frame(r, used)) => {
+                assert_eq!(used, wire.len());
+                assert_eq!(r.body, body);
+                assert!(r.keep_alive);
+            }
+            other => panic!("valid request: {other:?}"),
+        }
+        for _ in 0..4 {
+            let cut = rng.range_usize(0, wire.len());
+            match http::decode_request(&wire[..cut], 1 << 20) {
+                Ok(Decoded::Need(n)) => assert!(n > cut),
+                Ok(Decoded::Frame(..)) => panic!("phantom frame in a {cut}-byte prefix"),
+                Err(e) => panic!("prefix of a valid request errored: {e}"),
+            }
+        }
+    }
+}
+
+/// The body cap rejects from the *header alone* — a hostile
+/// `Content-Length` can never talk the loop into buffering toward a
+/// huge target (fatal 413, not `Need`).
+#[test]
+fn http_oversized_content_length_is_fatal_not_need() {
+    let mut rng = Rng::new(0xF0CC_000A);
+    for _ in 0..500u32 {
+        let max_body = rng.range_usize(0, 1 << 16);
+        let declared = max_body as u64 + 1 + rng.below(1 << 32);
+        let wire = format!("POST /v1/hull HTTP/1.1\r\ncontent-length: {declared}\r\n\r\n");
+        match http::decode_request(wire.as_bytes(), max_body) {
+            Err(e @ HttpError::BodyTooLarge { max }) => {
+                assert_eq!(max, max_body);
+                assert_eq!(e.status(), 413);
+            }
+            other => panic!("declared {declared} vs cap {max_body}: {other:?}"),
+        }
+    }
+}
+
+/// Every classic smuggling vector is fatal with the one stable code, no
+/// matter what else rides in the request.
+#[test]
+fn http_smuggling_vectors_are_always_fatal() {
+    let mut rng = Rng::new(0xF0CC_000B);
+    for _ in 0..500u32 {
+        let a = rng.below(1 << 20);
+        let b = a + 1 + rng.below(1 << 10);
+        let vectors = [
+            format!("content-length: {a}\r\ntransfer-encoding: chunked\r\n"),
+            format!("transfer-encoding: chunked\r\ncontent-length: {a}\r\n"),
+            format!("content-length: {a}\r\ncontent-length: {b}\r\n"),
+            "x: 1\r\n folded-continuation\r\n".to_string(),
+        ];
+        for v in &vectors {
+            let wire = format!("POST /v1/hull HTTP/1.1\r\n{v}\r\n");
+            match http::decode_request(wire.as_bytes(), 1 << 24) {
+                Err(e @ HttpError::Smuggling(_)) => {
+                    assert_eq!(e.status(), 400);
+                    assert_eq!(e.code(), "ambiguous-framing");
+                }
+                other => panic!("smuggling vector {v:?}: {other:?}"),
+            }
+        }
+        // the benign cousin — identical duplicate lengths — still frames
+        let wire = b"POST /x HTTP/1.1\r\ncontent-length: 2\r\ncontent-length: 2\r\n\r\nok";
+        assert!(matches!(http::decode_request(wire, 1 << 24), Ok(Decoded::Frame(..))));
+    }
+}
+
+// -------------------------------------------------- pagination cursors
+
+/// Cursor wire form: encode/decode is the identity, decode is canonical
+/// (anything it accepts re-encodes to the same string), and random or
+/// tampered strings never panic.
+#[test]
+fn cursor_codec_roundtrips_and_rejects_garbage() {
+    let mut rng = Rng::new(0xF0CC_000C);
+    for _ in 0..4000u32 {
+        let c = cursor::Cursor {
+            epoch: rng.next_u64(),
+            chain: rng.below(2) as u8,
+            offset: rng.next_u64(),
+        };
+        let wire = cursor::encode(&c);
+        assert_eq!(wire.len(), 38);
+        assert_eq!(cursor::decode(&wire), Some(c));
+
+        // single hex-digit tamper: the checksum (or version/chain gate)
+        // catches every one
+        let at = rng.range_usize(0, wire.len());
+        let mut bytes = wire.clone().into_bytes();
+        let old = bytes[at];
+        let replacement = b"0123456789abcdef"[rng.range_usize(0, 16)];
+        if replacement != old {
+            bytes[at] = replacement;
+            let tampered = String::from_utf8(bytes).unwrap();
+            assert_eq!(cursor::decode(&tampered), None, "tamper at {at} survived: {tampered}");
+        }
+
+        // random lowercase-hex of the right length: decode is canonical
+        let junk: String =
+            (0..38).map(|_| b"0123456789abcdef"[rng.range_usize(0, 16)] as char).collect();
+        if let Some(got) = cursor::decode(&junk) {
+            assert_eq!(cursor::encode(&got), junk, "non-canonical accept: {junk}");
+        }
+
+        // arbitrary garbage strings: never panic, never decode
+        let garbage: String = (0..rng.range_usize(0, 48))
+            .map(|_| (rng.below(94) as u8 + b'!') as char)
+            .collect();
+        if garbage.len() != 38 || !garbage.bytes().all(|b| b.is_ascii_hexdigit()) {
+            assert_eq!(cursor::decode(&garbage), None);
         }
     }
 }

@@ -1,0 +1,459 @@
+#!/usr/bin/env python3
+"""Differential simulation of rust/src/gateway/{http,cursor}.rs.
+
+Transliterates the incremental HTTP/1.1 request decoder (head scan,
+percent-decoding, Content-Length and chunked framing, keep-alive
+negotiation, the smuggling rejections) and the pagination cursor codec
+(xor-fold checksum, hex wire form, the page slicer), then property-tests
+both:
+
+  * one-shot vs incremental consistency: a valid request decodes whole
+    with used == len(wire); every strict prefix is Need(n) with n >
+    len(prefix) and never a phantom frame or an error;
+  * bounded progress on arbitrary bytes: Need(n) always satisfies
+    n > len(buf) and n <= max(len(buf), MAX_HEAD_BYTES) + max_body + 2,
+    and nothing ever raises;
+  * oversized Content-Length and every classic smuggling vector
+    (TE+CL, conflicting duplicate CLs, obs-folding) are fatal errors
+    with the documented codes, never Need;
+  * cursor encode/decode identity, canonical accepts, tamper rejection;
+  * pagination parity: for random chains and random *per-page* limit
+    schedules, concatenating pages yields exactly upper ++ lower with
+    the epoch pinned on every resume cursor.
+"""
+
+import random
+import re
+import sys
+
+MAX_HEAD_BYTES = 16 * 1024
+MAX_HEADERS = 64
+
+# decode results: ("need", n) | ("frame", request, used) | ("err", code)
+NEED, FRAME, ERR = "need", "frame", "err"
+
+
+def head_end(buf):
+    """Index just past the first blank line (CRLF or bare-LF)."""
+    i = 0
+    while i < len(buf):
+        if buf[i] == 0x0A:
+            rest = buf[i + 1:]
+            if rest[:1] == b"\n":
+                return i + 2
+            if len(rest) >= 2 and rest[0] == 0x0D and rest[1] == 0x0A:
+                return i + 3
+        i += 1
+    return None
+
+
+def percent_decode(s):
+    bts = s.encode("utf-8")
+    out = bytearray()
+    i = 0
+    while i < len(bts):
+        b = bts[i]
+        if b == ord("%") and i + 2 < len(bts):
+            try:
+                out.append(int(bts[i + 1:i + 3].decode(), 16))
+                i += 3
+                continue
+            except ValueError:
+                out.append(ord("%"))
+                i += 1
+                continue
+        if b == ord("+"):
+            out.append(ord(" "))
+        else:
+            out.append(b)
+        i += 1
+    return out.decode("utf-8", errors="replace")
+
+
+def parse_query(qs):
+    out = []
+    for pair in qs.split("&"):
+        if not pair:
+            continue
+        if "=" in pair:
+            k, v = pair.split("=", 1)
+            out.append((percent_decode(k), percent_decode(v)))
+        else:
+            out.append((percent_decode(pair), ""))
+    return out
+
+
+def parse_uint(s):
+    """Rust's usize::from_str: optional '+', digits only."""
+    return int(s) if re.fullmatch(r"\+?[0-9]+", s) else None
+
+
+def parse_hex(s):
+    return int(s, 16) if re.fullmatch(r"\+?[0-9a-fA-F]+", s) else None
+
+
+def strip_cr(line):
+    return line[:-1] if line.endswith("\r") else line
+
+
+def decode_chunked(buf, max_body):
+    body = bytearray()
+    off = 0
+    while True:
+        nl = buf.find(b"\n", off)
+        if nl < 0:
+            if len(buf) - off > 18:
+                return (ERR, "bad-chunk")
+            return (NEED, len(buf) + 1)
+        try:
+            line = strip_cr(buf[off:nl].decode("utf-8"))
+        except UnicodeDecodeError:
+            return (ERR, "bad-chunk")
+        size_hex = line.split(";")[0].strip()
+        if not size_hex or len(size_hex) > 8:
+            return (ERR, "bad-chunk")
+        size = parse_hex(size_hex)
+        if size is None:
+            return (ERR, "bad-chunk")
+        off = nl + 1
+        if size == 0:
+            rest = buf[off:]
+            if not rest or (rest[0] == 0x0D and len(rest) < 2):
+                return (NEED, len(buf) + 1)
+            if rest[0] == 0x0A:
+                return (FRAME, bytes(body), off + 1)
+            if rest[0] == 0x0D and rest[1] == 0x0A:
+                return (FRAME, bytes(body), off + 2)
+            return (ERR, "bad-chunk")
+        if len(body) + size > max_body:
+            return (ERR, "body-too-large")
+        if len(buf) < off + size + 1:
+            return (NEED, off + size + 1)
+        body.extend(buf[off:off + size])
+        off += size
+        if buf[off] == 0x0A:
+            off += 1
+        elif buf[off] == 0x0D:
+            if len(buf) < off + 2:
+                return (NEED, off + 2)
+            if buf[off + 1] != 0x0A:
+                return (ERR, "bad-chunk")
+            off += 2
+        else:
+            return (ERR, "bad-chunk")
+
+
+def decode_request(buf, max_body):
+    hl = head_end(buf)
+    if hl is None:
+        if len(buf) >= MAX_HEAD_BYTES:
+            return (ERR, "headers-too-large")
+        return (NEED, len(buf) + 1)
+    if hl > MAX_HEAD_BYTES:
+        return (ERR, "headers-too-large")
+    try:
+        head = buf[:hl].decode("utf-8")
+    except UnicodeDecodeError:
+        return (ERR, "malformed-request")
+    lines = [strip_cr(l) for l in head.split("\n")]
+
+    parts = [p for p in lines[0].split(" ") if p]
+    if len(parts) != 3:
+        return (ERR, "malformed-request")
+    method, target, version = parts
+    if version == "HTTP/1.1":
+        http11 = True
+    elif version == "HTTP/1.0":
+        http11 = False
+    else:
+        return (ERR, "unsupported-version")
+    if not target.startswith("/"):
+        return (ERR, "malformed-request")
+    raw_path, _, raw_query = target.partition("?")
+
+    headers = []
+    for line in lines[1:]:
+        if not line:
+            continue
+        if len(headers) >= MAX_HEADERS:
+            return (ERR, "headers-too-large")
+        if line[0] in (" ", "\t"):
+            return (ERR, "ambiguous-framing")
+        if ":" not in line:
+            return (ERR, "malformed-request")
+        name, value = line.split(":", 1)
+        if not name or " " in name or "\t" in name:
+            return (ERR, "malformed-request")
+        headers.append((name.lower(), value.strip()))
+
+    te = [v for n, v in headers if n == "transfer-encoding"]
+    cl = [v for n, v in headers if n == "content-length"]
+    if te and cl:
+        return (ERR, "ambiguous-framing")
+    if len(cl) > 1 and any(v != cl[0] for v in cl):
+        return (ERR, "ambiguous-framing")
+
+    if te:
+        if len(te) > 1 or te[0].lower() != "chunked":
+            return (ERR, "ambiguous-framing")
+        got = decode_chunked(buf[hl:], max_body)
+        if got[0] == NEED:
+            return (NEED, hl + got[1])
+        if got[0] == ERR:
+            return got
+        body, used = got[1], hl + got[2]
+    elif cl:
+        n = parse_uint(cl[0])
+        if n is None:
+            return (ERR, "malformed-request")
+        if n > max_body:
+            return (ERR, "body-too-large")
+        if len(buf) < hl + n:
+            return (NEED, hl + n)
+        body, used = bytes(buf[hl:hl + n]), hl + n
+    else:
+        body, used = b"", hl
+
+    conn = next((v.lower() for n, v in headers if n == "connection"), None)
+    if conn is not None and any(t.strip() == "close" for t in conn.split(",")):
+        keep_alive = False
+    elif conn is not None and any(t.strip() == "keep-alive" for t in conn.split(",")):
+        keep_alive = True
+    else:
+        keep_alive = http11
+
+    req = {
+        "method": method,
+        "path": percent_decode(raw_path),
+        "query": parse_query(raw_query),
+        "headers": headers,
+        "body": body,
+        "keep_alive": keep_alive,
+    }
+    return (FRAME, req, used)
+
+
+# ------------------------------------------------------------- cursors
+
+CURSOR_VERSION = 1
+RAW_LEN = 1 + 8 + 1 + 8 + 1
+
+
+def rotl8(b, k):
+    return ((b << k) | (b >> (8 - k))) & 0xFF
+
+
+def checksum(raw):
+    acc = 0x5A
+    for b in raw:
+        acc ^= rotl8(b, 3)
+    return acc
+
+
+def cursor_encode(epoch, chain, offset):
+    raw = bytearray(RAW_LEN)
+    raw[0] = CURSOR_VERSION
+    raw[1:9] = epoch.to_bytes(8, "little")
+    raw[9] = chain
+    raw[10:18] = offset.to_bytes(8, "little")
+    raw[18] = checksum(raw[:18])
+    return raw.hex()
+
+def cursor_decode(s):
+    if len(s) != RAW_LEN * 2 or not re.fullmatch(r"[0-9a-fA-F]+", s):
+        return None
+    raw = bytes.fromhex(s)
+    if raw[0] != CURSOR_VERSION or raw[18] != checksum(raw[:18]):
+        return None
+    chain = raw[9]
+    if chain > 1:
+        return None
+    return (
+        int.from_bytes(raw[1:9], "little"),
+        chain,
+        int.from_bytes(raw[10:18], "little"),
+    )
+
+
+def page(upper, lower, at, limit):
+    """Mirror of cursor::page — returns (upper_slice, lower_slice, next)."""
+    assert limit > 0
+    epoch, chain, offset = at
+    out_upper, out_lower = [], []
+    room = limit
+    if chain == 0:
+        start = min(offset, len(upper))
+        take = min(room, len(upper) - start)
+        out_upper = upper[start:start + take]
+        room -= take
+        if start + take < len(upper):
+            return out_upper, out_lower, (epoch, 0, start + take)
+        chain, offset = 1, 0
+    start = min(offset, len(lower))
+    take = min(room, len(lower) - start)
+    out_lower = lower[start:start + take]
+    nxt = (epoch, 1, start + take) if start + take < len(lower) else None
+    return out_upper, out_lower, nxt
+
+
+# ----------------------------------------------------------- properties
+
+def check(cond, msg):
+    if not cond:
+        print(f"FAIL: {msg}", file=sys.stderr)
+        sys.exit(1)
+
+
+def check_bounds(buf, max_body, got, what):
+    if got[0] == NEED:
+        check(got[1] > len(buf), f"{what}: Need({got[1]}) no progress at {len(buf)}")
+        cap = max(len(buf), MAX_HEAD_BYTES) + max_body + 2
+        check(got[1] <= cap, f"{what}: Need({got[1]}) over cap {cap}")
+    elif got[0] == FRAME:
+        check(0 < got[2] <= len(buf), f"{what}: used {got[2]} of {len(buf)}")
+
+
+def valid_request(rng):
+    """A random well-formed request; returns (wire, expected_body)."""
+    method = rng.choice(["GET", "POST", "DELETE"])
+    target = rng.choice([
+        "/v1/hull",
+        f"/v1/sessions/{rng.randrange(100)}/hull?epoch={rng.randrange(9)}&limit=7",
+        "/v1/stats",
+    ])
+    wire = bytearray(f"{method} {target} HTTP/1.1\r\nhost: sim\r\n".encode())
+    body = b""
+    kind = rng.randrange(3)
+    if kind == 0:
+        wire += b"\r\n"
+    elif kind == 1:
+        body = bytes(rng.randrange(256) for _ in range(rng.randrange(65)))
+        wire += f"content-length: {len(body)}\r\n\r\n".encode()
+        wire += body
+    else:
+        wire += b"transfer-encoding: chunked\r\n\r\n"
+        chunks = []
+        for _ in range(rng.randrange(4)):
+            c = bytes(rng.randrange(256) for _ in range(rng.randrange(1, 33)))
+            chunks.append(c)
+            wire += f"{len(c):x}\r\n".encode() + c + b"\r\n"
+        wire += b"0\r\n\r\n"
+        body = b"".join(chunks)
+    return bytes(wire), body
+
+
+def main():
+    rng = random.Random(0xF0CC_51D0)
+
+    # ---- valid corpus: whole decode + strict prefixes
+    corpus = 0
+    for _ in range(1500):
+        wire, body = valid_request(rng)
+        got = decode_request(wire, 1 << 20)
+        check(got[0] == FRAME, f"valid request rejected: {got} for {wire!r}")
+        check(got[2] == len(wire), f"used {got[2]} != {len(wire)}")
+        check(got[1]["body"] == body, f"body mismatch for {wire!r}")
+        check(got[1]["keep_alive"], "HTTP/1.1 without Connection must keep alive")
+        for _ in range(6):
+            cut = rng.randrange(len(wire))
+            pre = decode_request(wire[:cut], 1 << 20)
+            check(pre[0] == NEED, f"prefix {cut} of valid request: {pre}")
+            check(pre[1] > cut, f"prefix Need({pre[1]}) no progress at {cut}")
+        corpus += 1
+
+    # ---- arbitrary bytes: bounded progress, no exceptions
+    noise = 0
+    for i in range(6000):
+        n = rng.randrange(4097 if i % 50 == 0 else 97)
+        buf = bytes(rng.randrange(256) for _ in range(n))
+        for max_body in (0, 100, 1 << 20):
+            check_bounds(buf, max_body, decode_request(buf, max_body), "noise")
+        noise += 1
+
+    # ---- oversized Content-Length: fatal from the header alone
+    for _ in range(500):
+        max_body = rng.randrange(1 << 16)
+        declared = max_body + 1 + rng.randrange(1 << 32)
+        wire = f"POST /v1/hull HTTP/1.1\r\ncontent-length: {declared}\r\n\r\n".encode()
+        got = decode_request(wire, max_body)
+        check(got == (ERR, "body-too-large"), f"declared {declared} cap {max_body}: {got}")
+
+    # ---- smuggling vectors: always fatal with the one code
+    for _ in range(500):
+        a = rng.randrange(1 << 20)
+        b = a + 1 + rng.randrange(1 << 10)
+        for v in (
+            f"content-length: {a}\r\ntransfer-encoding: chunked\r\n",
+            f"transfer-encoding: chunked\r\ncontent-length: {a}\r\n",
+            f"content-length: {a}\r\ncontent-length: {b}\r\n",
+            "x: 1\r\n folded-continuation\r\n",
+        ):
+            wire = f"POST /v1/hull HTTP/1.1\r\n{v}\r\n".encode()
+            got = decode_request(wire, 1 << 24)
+            check(got == (ERR, "ambiguous-framing"), f"vector {v!r}: {got}")
+    # identical duplicates still frame
+    ok = decode_request(b"POST /x HTTP/1.1\r\ncontent-length: 2\r\ncontent-length: 2\r\n\r\nok",
+                        1 << 24)
+    check(ok[0] == FRAME and ok[1]["body"] == b"ok", f"benign dup CL: {ok}")
+
+    # ---- chunked pathologies: unterminated size line, trailers, bad hex
+    check(decode_chunked(b"x" * 19, 100) == (ERR, "bad-chunk"), "unterminated size line")
+    check(decode_chunked(b"zz\r\n", 100) == (ERR, "bad-chunk"), "non-hex size")
+    check(decode_chunked(b"0\r\nx-trailer: 1\r\n\r\n", 100) == (ERR, "bad-chunk"), "trailers")
+    check(decode_chunked(b"3\r\nabcXX", 100) == (ERR, "bad-chunk"), "unterminated data")
+    check(decode_chunked(b"123456789\r\n", 1 << 40) == (ERR, "bad-chunk"), "9-digit size")
+
+    # ---- cursor codec: identity, canonical accepts, tamper rejection
+    cursors = 0
+    U64 = (1 << 64) - 1
+    for _ in range(4000):
+        c = (rng.randrange(1 << 64), rng.randrange(2), rng.randrange(1 << 64))
+        wire = cursor_encode(*c)
+        check(len(wire) == 38, f"wire length {len(wire)}")
+        check(cursor_decode(wire) == c, f"roundtrip {c}")
+        at = rng.randrange(38)
+        repl = rng.choice("0123456789abcdef")
+        if repl != wire[at]:
+            tampered = wire[:at] + repl + wire[at + 1:]
+            check(cursor_decode(tampered) is None, f"tamper at {at} survived: {tampered}")
+        junk = "".join(rng.choice("0123456789abcdef") for _ in range(38))
+        got = cursor_decode(junk)
+        if got is not None:
+            check(cursor_encode(*got) == junk, f"non-canonical accept {junk}")
+        cursors += 1
+    for c in ((0, 0, 0), (7, 1, 12345), (U64, 0, U64)):
+        check(cursor_decode(cursor_encode(*c)) == c, f"vector {c}")
+
+    # ---- pagination parity: random chains, random per-page limits
+    walks = 0
+    for _ in range(2000):
+        epoch = rng.randrange(1 << 32)
+        upper = [("u", i) for i in range(rng.randrange(40))]
+        lower = [("l", i) for i in range(rng.randrange(40))]
+        cur = (epoch, 0, 0)
+        got_u, got_l, pages = [], [], 0
+        while True:
+            limit = rng.randrange(1, 9)
+            pu, pl, nxt = page(upper, lower, cur, limit)
+            check(len(pu) + len(pl) <= limit, f"page over limit {limit}")
+            got_u += pu
+            got_l += pl
+            pages += 1
+            check(pages <= len(upper) + len(lower) + 2, "walk never terminates")
+            if nxt is None:
+                break
+            check(nxt[0] == epoch, f"epoch drifted: {nxt}")
+            cur = nxt
+        check(got_u == upper and got_l == lower,
+              f"reassembly mismatch at {len(upper)}+{len(lower)}")
+        # out-of-range offsets are exhausted, not errors
+        pu, pl, nxt = page(upper, lower, (epoch, 1, len(lower) + 5), 3)
+        check(pu == [] and pl == [] and nxt is None, "clamped resume")
+        walks += 1
+
+    print(f"sim_gateway OK: http corpus {corpus} + noise {noise}, "
+          f"oversize/smuggling 500 each, cursors {cursors}, pagination walks {walks}")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,10 +9,10 @@
 # with ENGINE_SHARDS=4 (the sharded engine path on real sockets), then
 # the restart suite once more under ring placement, then fast smoke runs
 # of bench_runtime, bench_coordinator, bench_stream, bench_engine,
-# bench_server, bench_robustness and bench_store with WAGENER_BENCH_JSON
+# bench_server, bench_robustness, bench_gateway and bench_store with WAGENER_BENCH_JSON
 # pointed at BENCH_pram.json / BENCH_coordinator.json / BENCH_stream.json /
 # BENCH_engine.json / BENCH_server.json / BENCH_robustness.json /
-# BENCH_store.json, so every PR leaves machine-readable perf records
+# BENCH_gateway.json / BENCH_store.json, so every PR leaves machine-readable perf records
 # (PRAM tier timings, router/worker-pool throughput, streaming-session
 # schedules, shard scaling, connection-core and wire-format costs,
 # overload shed/latency contrasts, snapshot write/restore latency) for
@@ -60,10 +60,13 @@ cargo test -q
 # same seed → same outcomes property against a sharded engine as well.
 # restart_integration joins so durability (crash-restart, SHULL time
 # travel, corrupt snapshots, eviction restore) holds on the sharded path.
+# gateway_integration joins so HTTP/TCP parity (hull bits, sessions,
+# epoch time travel, cursor pagination) holds against a sharded engine.
 echo "== tier1: server suites @ ENGINE_SHARDS=4 =="
 ENGINE_SHARDS=4 cargo test -q --test server_integration \
     --test proto_parity --test event_loop_integration \
-    --test chaos_integration --test restart_integration
+    --test chaos_integration --test restart_integration \
+    --test gateway_integration
 
 # And once more with ring placement: snapshots, restores and epoch time
 # travel must be placement-independent — a session's durability cannot
@@ -116,6 +119,12 @@ WAGENER_BENCH_FAST=1 WAGENER_BENCH_JSON="$ROOT/BENCH_robustness.json" \
     cargo bench --bench bench_robustness
 assert_bench_written "$ROOT/BENCH_robustness.json"
 
+echo "== tier1: smoke bench -> BENCH_gateway.json =="
+: > "$ROOT/BENCH_gateway.json"
+WAGENER_BENCH_FAST=1 WAGENER_BENCH_JSON="$ROOT/BENCH_gateway.json" \
+    cargo bench --bench bench_gateway
+assert_bench_written "$ROOT/BENCH_gateway.json"
+
 echo "== tier1: smoke bench -> BENCH_store.json =="
 : > "$ROOT/BENCH_store.json"
 WAGENER_BENCH_FAST=1 WAGENER_BENCH_JSON="$ROOT/BENCH_store.json" \
@@ -125,4 +134,4 @@ assert_bench_written "$ROOT/BENCH_store.json"
 echo "tier1 OK — bench rows:"
 cat "$ROOT/BENCH_pram.json" "$ROOT/BENCH_coordinator.json" "$ROOT/BENCH_stream.json" \
     "$ROOT/BENCH_engine.json" "$ROOT/BENCH_server.json" "$ROOT/BENCH_robustness.json" \
-    "$ROOT/BENCH_store.json"
+    "$ROOT/BENCH_gateway.json" "$ROOT/BENCH_store.json"
