@@ -37,6 +37,12 @@ from . import model
 HOOD_SIZES = (64, 256, 1024)
 HULL_SIZES = (64, 128, 256, 512, 1024)
 BATCHES = (1, 8)
+# Prefilter size classes: dense inputs only — below the smallest class the
+# host filter wins and the rust side never dispatches to the device.
+FILTER_SIZES = (4096, 16384, 65536, 262144, 1048576)
+# Tangent size classes: block slots 2d; chains longer than n/2 fall back
+# to the host tangent path.
+TANGENT_SIZES = (128, 512, 2048, 8192)
 
 
 def to_hlo_text(lowered) -> str:
@@ -74,6 +80,21 @@ def artifact_set():
         _spec(256, 2),
         {"kind": "hood_jnp", "n": 256, "batch": 0, "outputs": 1},
     )
+    # octagon prefilter (batch 0: one block per dispatch, like hoods)
+    for n in FILTER_SIZES:
+        arts[f"filter_n{n}"] = (
+            lambda p: (model.prefilter(p),),
+            _spec(n, 2),
+            {"kind": "filter", "n": n, "batch": 0, "outputs": 1},
+        )
+    # sampled tangent merge (batch 2: upper pair + mirrored lower pair —
+    # one streaming-session merge is exactly one upload)
+    for n in TANGENT_SIZES:
+        arts[f"tangent_n{n}"] = (
+            lambda b: (model.tangent_merge(b),),
+            _spec(2, n, 2),
+            {"kind": "tangent", "n": n, "batch": 2, "outputs": 1},
+        )
     return arts
 
 

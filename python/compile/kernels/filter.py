@@ -1,0 +1,164 @@
+"""L1: octagon interior-point prefilter as a Pallas kernel (+ jnp twin).
+
+The GPU-filter stage of Carrasco et al. (and CudaChain's point-flagging
+pass): before the hull kernel runs, drop every point strictly inside the
+convex polygon of the 8 directional extremes (±x, ±y, ±(x+y), ±(x−y)) —
+such points can never be hull vertices, so dense inputs shrink on-device
+and the hull pipeline sees a fraction of the upload.
+
+One kernel invocation filters one n-slot block (x-sorted, live-left-
+justified, REMOTE-padded — the same layout every other kernel speaks):
+
+  1. extremes  — a one-pass 8-way max reduction over the directional keys
+                 [-x, -(x+y), -y, x-y, x, x+y, y, -(x-y)] (W, SW, S, SE,
+                 E, NE, N, NW — ccw), ties broken to the FIRST occurrence
+                 (``jnp.argmax``), matching the host filter's strict ``>``
+                 scan bit for bit;
+  2. flagging  — branch-free ``jnp.where``: a point is dropped iff it is
+                 strictly left of every directed octagon edge.  Degenerate
+                 edges (coincident consecutive extremes) auto-pass, which
+                 is exactly the host's consecutive-dedup; the host's
+                 "< 3 distinct corners" and "any right turn" passthrough
+                 guards become scalar predicates folded into the flag;
+  3. compaction — survivors scatter to ``cumsum(keep) - 1`` (prefix-sum
+                 compaction), preserving x-sorted order; the tail is
+                 REMOTE-filled, so the output is again a valid block.
+
+The filter is *hull-preserving by construction* under the same
+strict-inside rule as the host filter (boundary points are kept); the
+exact host filter remains the safety oracle and the non-pjrt path.
+Orientation determinants are f64 per the device convention (wagener.py);
+the rust side property-tests device ≡ host ≡ off hull bit-identity.
+
+Kernels MUST be lowered with interpret=True (see wagener.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import wagener
+from .wagener import DET_DTYPE, LIVE_X_MAX, REMOTE_X, REMOTE_Y, _left_of
+
+# Below this many live points the filter is a passthrough — mirrors
+# rust/src/coordinator/request.rs::PREFILTER_MIN_POINTS.
+PREFILTER_MIN_POINTS = 32
+
+# Directional keys, ccw from W; the i-th extreme maximizes keys[:, i].
+# Order matters: consecutive extremes are 45° apart, so the octagon edges
+# (ext[i], ext[i+1 mod 8]) run counterclockwise.
+_N_DIRS = 8
+
+
+def _keys(pts: jnp.ndarray) -> jnp.ndarray:
+    """(n, 2) -> (n, 8) directional keys in f64 (W SW S SE E NE N NW)."""
+    x = pts[:, 0].astype(DET_DTYPE)
+    y = pts[:, 1].astype(DET_DTYPE)
+    return jnp.stack(
+        [-x, -(x + y), -y, x - y, x, x + y, y, -(x - y)], axis=-1
+    )
+
+
+def octagon_extremes(pts: jnp.ndarray) -> jnp.ndarray:
+    """The 8 directional extremes of the live points, ccw, (8, 2) f32.
+
+    First occurrence wins a tie — identical to the host filter's strict
+    ``>`` left-to-right scan.  REMOTE slots never win (keys -> -inf).
+    """
+    live = pts[:, 0] <= LIVE_X_MAX
+    keys = jnp.where(live[:, None], _keys(pts), -jnp.inf)
+    ext_idx = jnp.argmax(keys, axis=0)          # (8,), first max each dir
+    return jnp.take(pts, ext_idx, axis=0)
+
+
+def octagon_keep(pts: jnp.ndarray) -> jnp.ndarray:
+    """Boolean keep mask: live and NOT strictly inside the extremes octagon.
+
+    Folds in the host filter's passthrough guards as scalar predicates:
+    fewer than PREFILTER_MIN_POINTS live points, fewer than 3 distinct
+    octagon corners, or any right turn on the (deduped) octagon — in each
+    case every live point is kept and the filter is the identity.
+    """
+    live = pts[:, 0] <= LIVE_X_MAX
+    ext = octagon_extremes(pts)                 # (8, 2)
+    nxt = jnp.roll(ext, -1, axis=0)             # edge i: ext[i] -> nxt[i]
+    # Degenerate edge (coincident consecutive extremes): contributes no
+    # constraint — the same polygon the host's consecutive-dedup builds.
+    same = jnp.all(ext == nxt, axis=-1)         # (8,)
+    # Host guard 1: < 3 distinct corners (circular run count).
+    n_distinct = jnp.sum(~same)
+    # Host guard 2: any right turn on the deduped octagon.  A weakly
+    # convex ccw polygon has every vertex left-of-or-on every directed
+    # edge, so "some corner strictly right of some non-degenerate edge"
+    # is exactly the host's consecutive-triple right-turn test.
+    right = _left_of(nxt[:, None, :], ext[:, None, :], ext[None, :, :])
+    any_right = jnp.any(~same[:, None] & right)
+    passthrough = (
+        (jnp.sum(live) < PREFILTER_MIN_POINTS)
+        | (n_distinct < 3)
+        | any_right
+    )
+    # Strictly inside iff strictly left of every non-degenerate edge.
+    left = _left_of(ext[:, None, :], nxt[:, None, :], pts[None, :, :])
+    inside = jnp.all(same[:, None] | left, axis=0)  # (n,)
+    return live & (passthrough | ~inside)
+
+
+def compact(pts: jnp.ndarray, keep: jnp.ndarray) -> jnp.ndarray:
+    """Prefix-sum scatter compaction: survivors left-justified, in input
+    order; the tail REMOTE-filled.  Scatter targets are unique, dropped
+    slots scatter out of range (mode='drop'), so the write is race-free —
+    the paper's divergence-free style."""
+    n = pts.shape[0]
+    pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    target = jnp.where(keep, pos, n)
+    remote = jnp.stack(
+        [
+            jnp.full((n,), REMOTE_X, dtype=pts.dtype),
+            jnp.full((n,), REMOTE_Y, dtype=pts.dtype),
+        ],
+        axis=-1,
+    )
+    return remote.at[target].set(pts, mode="drop")
+
+
+def filter_block(pts: jnp.ndarray) -> jnp.ndarray:
+    """Filter one n-slot block: (n, 2) -> (n, 2), survivors left-justified.
+
+    Pure function of the block; shared verbatim by the pallas kernel body
+    and the plain-jnp twin so both lower from one source of truth."""
+    assert pts.ndim == 2 and pts.shape[1] == 2, pts.shape
+    return compact(pts, octagon_keep(pts))
+
+
+def _filter_kernel(pts_ref, out_ref):
+    """Pallas body: one program filters the whole block (the reduction,
+    flagging and compaction are each one fused vector pass)."""
+    out_ref[...] = filter_block(pts_ref[...])
+
+
+@jax.jit
+def pallas_filter(pts: jnp.ndarray) -> jnp.ndarray:
+    """Octagon prefilter over an (n, 2) block via pallas_call."""
+    n = pts.shape[0]
+    spec = pl.BlockSpec((n, 2), lambda b: (0, 0))
+    return pl.pallas_call(
+        _filter_kernel,
+        grid=(1,),
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(pts.shape, pts.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(pts)
+
+
+@jax.jit
+def jnp_filter(pts: jnp.ndarray) -> jnp.ndarray:
+    """Plain-jnp twin of :func:`pallas_filter` (differential test target)."""
+    return filter_block(pts)
+
+
+# re-export for tests/aot
+enable_x64 = wagener.enable_x64

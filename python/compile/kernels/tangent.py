@@ -1,0 +1,72 @@
+"""L1: the sampled common-tangent search as a fixed-shape Pallas program.
+
+A streaming session's merge combines its current hull with the hull of
+the pending buffer via the paper's common tangent (`wagener::hull_merge`).
+Until now that ran on the host (`find_tangent`, the mam1..mam5 lattice in
+rust).  This kernel moves it on-device: one program consumes one padded
+``[H(L) | H(R)]`` block (two d-slot live-left-justified halves, x-disjoint
+left-to-right chains) and emits the merged 2d-slot block — the tangent
+lattice *and* the mam6 shift-copy in a single dispatch.
+
+The device contract is batch = 2: row 0 is the upper-chain pair, row 1 the
+y-negated lower-chain pair (the lower hull is the upper hull of mirrored
+points, same convention as model.full_hull).  A full hull ⊕ hull merge is
+therefore exactly ONE upload and one download; the rust side re-scans the
+two returned live prefixes with the exact monotone chain, which
+canonicalizes cross-hull collinearity precisely like the host path's
+rescan — so the device path is bit-identical to the host path and falls
+back to it when no artifact size class fits.
+
+The kernel body is wagener.merge_block verbatim: the tangent search IS one
+match-and-merge stage, just launched on an adversarially-padded block pair
+instead of a pipeline stage's hoods.
+
+Kernels MUST be lowered with interpret=True (see wagener.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import wagener
+
+
+def _tangent_kernel(blocks_ref, out_ref, *, d1: int, d2: int):
+    """Pallas body: one program = one [H(L) | H(R)] block merge."""
+    out_ref[...] = wagener.merge_block(blocks_ref[0], d1, d2)[None]
+
+
+@jax.jit
+def pallas_tangent(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Merge a batch of [H(L) | H(R)] block pairs via pallas_call.
+
+    blocks: (b, 2d, 2) float32 — grid = b programs, one per pair (the
+    serving artifact uses b = 2: upper pair + mirrored lower pair)."""
+    b, n2, _ = blocks.shape
+    d = n2 // 2
+    d1, d2 = wagener.stage_dims(d)
+    spec = pl.BlockSpec((1, n2, 2), lambda i: (i, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_tangent_kernel, d1=d1, d2=d2),
+        grid=(b,),
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(blocks.shape, blocks.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(blocks)
+
+
+@jax.jit
+def jnp_tangent(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Plain-jnp twin of :func:`pallas_tangent` (vmap over pairs)."""
+    _, n2, _ = blocks.shape
+    d1, d2 = wagener.stage_dims(n2 // 2)
+    return jax.vmap(lambda blk: wagener.merge_block(blk, d1, d2))(blocks)
+
+
+# re-export for tests/aot
+enable_x64 = wagener.enable_x64

@@ -9,6 +9,8 @@ Exported entry points (all pure, all AOT-lowerable):
   * ``upper_hood(points)``     — (n,2) -> (n,2) hood block
   * ``full_hull(points)``      — (n,2) -> (upper (n,2), lower (n,2))
   * ``batched_full_hull(pts)`` — (b,n,2) -> ((b,n,2), (b,n,2))
+  * ``prefilter(points)``      — (n,2) -> (n,2) octagon-filtered block
+  * ``tangent_merge(blocks)``  — (b,2d,2) -> (b,2d,2) merged block pairs
 
 Inputs are x-sorted float32 points, live-left-justified, REMOTE-padded to a
 power-of-two length (the rust coordinator's batcher guarantees this).
@@ -21,6 +23,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .kernels import filter as filter_kernel
+from .kernels import tangent as tangent_kernel
 from .kernels import wagener
 from .kernels.wagener import enable_x64  # re-export for aot/tests
 
@@ -29,6 +33,10 @@ __all__ = [
     "full_hull",
     "batched_full_hull",
     "upper_hood_jnp",
+    "prefilter",
+    "prefilter_jnp",
+    "tangent_merge",
+    "tangent_merge_jnp",
     "enable_x64",
 ]
 
@@ -75,3 +83,34 @@ def full_hull(points: jnp.ndarray):
 def batched_full_hull(points: jnp.ndarray):
     """vmap of :func:`full_hull` over a leading batch axis (b, n, 2)."""
     return jax.vmap(full_hull)(points)
+
+
+def prefilter(points: jnp.ndarray) -> jnp.ndarray:
+    """Octagon interior-point prefilter of an (n, 2) block (pallas path).
+
+    Drops points strictly inside the 8-extremes octagon, left-justifies
+    the survivors (input order preserved) and REMOTE-pads the tail — the
+    on-device shrink that runs *before* the hull pipeline on dense
+    inputs.  Hull-preserving: boundary points are kept.
+    """
+    return filter_kernel.pallas_filter(points)
+
+
+def prefilter_jnp(points: jnp.ndarray) -> jnp.ndarray:
+    """Plain-jnp twin of :func:`prefilter` (differential test target)."""
+    return filter_kernel.jnp_filter(points)
+
+
+def tangent_merge(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Sampled common-tangent merge of (b, 2d, 2) block pairs (pallas).
+
+    Each row is a padded ``[H(L) | H(R)]`` pair; the serving artifact
+    uses b = 2 (upper pair + y-negated lower pair), so one streaming
+    session merge costs exactly one upload.
+    """
+    return tangent_kernel.pallas_tangent(blocks)
+
+
+def tangent_merge_jnp(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Plain-jnp twin of :func:`tangent_merge`."""
+    return tangent_kernel.jnp_tangent(blocks)

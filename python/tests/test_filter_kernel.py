@@ -1,0 +1,259 @@
+"""L1 correctness: octagon prefilter + tangent-merge kernels.
+
+The prefilter's oracle is *hull preservation*: whatever the filter drops,
+the (f64 monotone-chain) hull of the survivors must equal the hull of the
+input, boundary points kept.  The tangent kernel's oracle is ref_stage —
+the merged block must be the upper hull of the pair's live corners.
+Both kernels are additionally pinned pallas ≡ plain-jnp bit-exact.
+
+Unlike test_kernel.py this module does not use hypothesis (tier1's python
+step must run on hosts without it) — randomized sweeps are seeded
+pytest parametrizations instead.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile.kernels import filter as filter_kernel
+from compile.kernels import ref, tangent, wagener
+
+REMOTE = ref.remote_row()
+
+SEEDS = list(range(12))
+
+
+def sorted_points(rng: np.random.Generator, m: int) -> np.ndarray:
+    pts = rng.random((m, 2)).astype(np.float32)
+    return pts[np.argsort(pts[:, 0])]
+
+
+def make_hood(pts: np.ndarray, n: int) -> np.ndarray:
+    """n-slot initial hood: pts live-left-justified, REMOTE padded."""
+    hood = np.tile(ref.remote_row(), (n, 1))
+    hood[: len(pts)] = pts
+    return hood
+
+
+def disk_points(rng: np.random.Generator, m: int) -> np.ndarray:
+    """x-sorted f32 points uniform in a disk inscribed in [0, 1]^2 —
+    the dense adversary: almost everything is interior."""
+    t = rng.uniform(0, 2 * np.pi, m)
+    r = 0.5 * np.sqrt(rng.uniform(0, 1, m))
+    pts = np.stack([0.5 + r * np.cos(t), 0.5 + r * np.sin(t)], axis=-1)
+    pts = pts.astype(np.float32)
+    return pts[np.argsort(pts[:, 0], kind="stable")]
+
+
+def live(block: np.ndarray) -> np.ndarray:
+    return block[ref.is_live(block)]
+
+
+def full_hull_pts(pts: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """(upper, lower) strict hulls of x-sorted unique-coordinate points."""
+    neg = pts.copy()
+    neg[:, 1] = -neg[:, 1]
+    lo = ref.upper_hull(neg)
+    lo[:, 1] = -lo[:, 1]
+    return ref.upper_hull(pts), lo
+
+
+def dedup_xsorted(pts: np.ndarray) -> np.ndarray:
+    """Keep max-y per x (hull-equivalent input canonicalization for the
+    strict-turn ref.upper_hull, which assumes distinct x)."""
+    out: list[np.ndarray] = []
+    for p in pts:
+        if out and out[-1][0] == p[0]:
+            if p[1] > out[-1][1]:
+                out[-1] = p
+            continue
+        out.append(p)
+    return np.stack(out)
+
+
+@pytest.mark.parametrize("dense", [False, True])
+@pytest.mark.parametrize("seed", SEEDS)
+def test_filter_is_hull_preserving(dense, seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.choice([64, 256, 1024]))
+    m = int(rng.integers(1, min(301, n + 1)))
+    pts = disk_points(rng, m) if dense else sorted_points(rng, m)
+    pts = dedup_xsorted(pts)  # unique x: one hull representative per x
+    block = make_hood(pts, n)
+    out = np.asarray(filter_kernel.pallas_filter(jnp.asarray(block)))
+    survivors = live(out)
+    # tail is REMOTE, survivors left-justified
+    np.testing.assert_array_equal(
+        out[len(survivors) :], np.tile(REMOTE, (n - len(survivors), 1))
+    )
+    # survivors are a subsequence of the input (order + bits preserved)
+    i = 0
+    for p in map(tuple, pts):
+        if i < len(survivors) and p == tuple(survivors[i]):
+            i += 1
+    assert i == len(survivors), "survivors are not a subsequence"
+    # hull preservation: upper+lower hulls unchanged
+    for got, want in zip(full_hull_pts(survivors), full_hull_pts(pts)):
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("dense", [False, True])
+@pytest.mark.parametrize("seed", SEEDS[:6])
+def test_pallas_filter_equals_jnp_filter(dense, seed):
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(1, 201))
+    pts = disk_points(rng, m) if dense else sorted_points(rng, m)
+    block = jnp.asarray(make_hood(pts, 256))
+    np.testing.assert_array_equal(
+        np.asarray(filter_kernel.pallas_filter(block)),
+        np.asarray(filter_kernel.jnp_filter(block)),
+    )
+
+
+def test_filter_sheds_dense_interior():
+    rng = np.random.default_rng(7)
+    block = make_hood(disk_points(rng, 4096), 4096)
+    out = np.asarray(filter_kernel.pallas_filter(jnp.asarray(block)))
+    assert len(live(out)) < 2048, "dense disk input should shed > half"
+
+
+def test_filter_passthrough_below_min_points():
+    rng = np.random.default_rng(8)
+    pts = sorted_points(rng, filter_kernel.PREFILTER_MIN_POINTS - 1)
+    block = make_hood(pts, 64)
+    out = np.asarray(filter_kernel.pallas_filter(jnp.asarray(block)))
+    np.testing.assert_array_equal(out, block)
+
+
+def test_filter_keeps_octagon_boundary_points():
+    # unit square + a point ON the bottom edge (kept) + the center
+    # (dropped) + interior fill to clear the min-points gate.
+    rng = np.random.default_rng(9)
+    fill = np.stack(
+        [rng.uniform(0.3, 0.7, 40), rng.uniform(0.3, 0.7, 40)], axis=-1
+    )
+    pts = np.concatenate(
+        [
+            np.array([[0, 0], [0, 1], [1, 0], [1, 1], [0.5, 0], [0.5, 0.5]]),
+            fill,
+        ]
+    ).astype(np.float32)
+    pts = pts[np.argsort(pts[:, 0], kind="stable")]
+    block = make_hood(pts, 64)
+    out = np.asarray(filter_kernel.pallas_filter(jnp.asarray(block)))
+    kept = {tuple(p) for p in live(out)}
+    assert (0.5, 0.0) in kept, "boundary point must be kept"
+    assert (0.5, 0.5) not in kept, "center must be dropped"
+    for c in [(0, 0), (0, 1), (1, 0), (1, 1)]:
+        assert c in kept
+
+
+def test_filter_all_collinear_passthrough():
+    # every point on one line: the octagon is degenerate (< 3 distinct
+    # corners) — the filter must pass everything through untouched.
+    x = np.linspace(0, 1, 48, dtype=np.float32)
+    pts = np.stack([x, x * np.float32(0.5)], axis=-1)
+    block = make_hood(pts, 64)
+    out = np.asarray(filter_kernel.pallas_filter(jnp.asarray(block)))
+    np.testing.assert_array_equal(out, block)
+
+
+# ---------------------------------------------------------------- tangent
+
+
+def chain_pair_block(
+    rng: np.random.Generator, d: int, lo_x: float, hi_x: float
+) -> np.ndarray:
+    """A [H(L) | H(R)] block: two x-disjoint upper chains, d slots each."""
+
+    def chain(a: float, b: float) -> np.ndarray:
+        m = rng.integers(1, d + 1)
+        pts = np.stack(
+            [rng.uniform(a, b, m), rng.uniform(0, 1, m)], axis=-1
+        ).astype(np.float32)
+        pts = dedup_xsorted(pts[np.argsort(pts[:, 0], kind="stable")])
+        return ref.upper_hull(pts)
+
+    left = chain(lo_x, (lo_x + hi_x) / 2 - 0.02)
+    right = chain((lo_x + hi_x) / 2 + 0.02, hi_x)
+    return np.concatenate([ref.pad_block(left, d), ref.pad_block(right, d)])
+
+
+@pytest.mark.parametrize("d", [4, 8, 16, 64])
+@pytest.mark.parametrize("seed", SEEDS[:6])
+def test_tangent_merge_matches_ref_stage(d, seed):
+    rng = np.random.default_rng(seed)
+    blocks = np.stack(
+        [chain_pair_block(rng, d, 0.0, 1.0) for _ in range(2)]
+    )
+    got = np.asarray(tangent.pallas_tangent(jnp.asarray(blocks)))
+    for row_got, row_in in zip(got, blocks):
+        np.testing.assert_array_equal(row_got, ref.ref_stage(row_in, d))
+
+
+@pytest.mark.parametrize("seed", SEEDS[:6])
+def test_pallas_tangent_equals_jnp_tangent(seed):
+    rng = np.random.default_rng(seed)
+    blocks = jnp.asarray(
+        np.stack([chain_pair_block(rng, 16, 0.0, 1.0) for _ in range(2)])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(tangent.pallas_tangent(blocks)),
+        np.asarray(tangent.jnp_tangent(blocks)),
+    )
+
+
+def test_tangent_mirrored_lower_round_trip():
+    # The serving contract: row 0 carries the upper-chain pair, row 1 the
+    # y-negated lower-chain pair — one upload merges a full hull ⊕ hull.
+    # Un-mirroring row 1 of the output must give the merged LOWER hull of
+    # the union, computed here directly from the raw point clouds.
+    rng = np.random.default_rng(11)
+    d = 16
+
+    def cloud(a: float, b: float) -> np.ndarray:
+        m = rng.integers(2, d + 1)
+        pts = np.stack(
+            [rng.uniform(a, b, m), rng.uniform(0, 1, m)], axis=-1
+        ).astype(np.float32)
+        return dedup_xsorted(pts[np.argsort(pts[:, 0], kind="stable")])
+
+    def neg(p: np.ndarray) -> np.ndarray:
+        q = p.copy()
+        q[:, 1] = -q[:, 1]
+        return q
+
+    a, b = cloud(0.0, 0.48), cloud(0.52, 1.0)
+    union = np.concatenate([a, b])
+    row0 = np.concatenate(
+        [ref.pad_block(ref.upper_hull(a), d), ref.pad_block(ref.upper_hull(b), d)]
+    )
+    row1 = np.concatenate(
+        [
+            ref.pad_block(ref.upper_hull(neg(a)), d),
+            ref.pad_block(ref.upper_hull(neg(b)), d),
+        ]
+    )
+    got = np.asarray(tangent.pallas_tangent(jnp.asarray(np.stack([row0, row1]))))
+    np.testing.assert_array_equal(live(got[0]), ref.upper_hull(union))
+    np.testing.assert_array_equal(
+        neg(live(got[1])), neg(ref.upper_hull(neg(union)))
+    )
+
+
+def test_tangent_empty_right_half_passthrough():
+    d = 8
+    rng = np.random.default_rng(12)
+    blk = chain_pair_block(rng, d, 0.0, 1.0)
+    blk[d:] = REMOTE  # Q half empty: merged hood is H(P) verbatim
+    blocks = np.stack([blk, blk])
+    got = np.asarray(tangent.pallas_tangent(jnp.asarray(blocks)))
+    np.testing.assert_array_equal(got[0], blk)
+
+
+def test_stage_dims_match_wagener():
+    for d in (2, 4, 8, 16, 64):
+        assert wagener.stage_dims(d)[0] * wagener.stage_dims(d)[1] == d

@@ -1,0 +1,121 @@
+//! E14 — the accelerator-resident pipeline: octagon prefilter placement
+//! (host vs device vs off) on dense uniform-in-disk inputs, and (E14b)
+//! a merge-heavy streaming-session schedule with host vs device tangent
+//! merges.
+//!
+//! Device rows need the pjrt backend with `filter_n*` / `tangent_n*`
+//! artifacts compiled by `python -m python.compile.aot`; when the backend
+//! cannot start (the vendored xla stub, or no artifacts) the device rows
+//! are skipped with a note — the JSON trailer is still written, so
+//! tier1's `assert_bench_written` gate holds everywhere.
+//!
+//! Run: `cargo bench --bench bench_accel` (tier1.sh feeds
+//! BENCH_accel.json via WAGENER_BENCH_JSON).
+
+use std::sync::Arc;
+
+use wagener_hull::benchkit::{black_box, Bencher, Report};
+use wagener_hull::coordinator::{
+    BackendKind, Coordinator, CoordinatorConfig, PrefilterMode,
+};
+use wagener_hull::geometry::generators::{generate, Distribution};
+use wagener_hull::stream::{SessionRegistry, StreamConfig};
+
+fn coord(kind: BackendKind, prefilter: PrefilterMode) -> Result<Arc<Coordinator>, String> {
+    Coordinator::start(CoordinatorConfig {
+        backend: kind,
+        prefilter,
+        ..Default::default()
+    })
+    .map(Arc::new)
+}
+
+fn main() {
+    let b = Bencher::default();
+
+    // E14: one-shot hulls over dense disks — the prefilter's best case
+    // (most points are strictly interior to the octagon).
+    let mut report = Report::new("E14: prefilter placement (dense uniform-in-disk)");
+    for exp in [16u32, 20] {
+        let n = 1usize << exp;
+        let pts = generate(Distribution::Disk, n, 14);
+        for (mode, kind) in [
+            (PrefilterMode::Off, BackendKind::Native),
+            (PrefilterMode::Host, BackendKind::Native),
+            (PrefilterMode::Device, BackendKind::Pjrt),
+        ] {
+            let c = match coord(kind, mode) {
+                Ok(c) => c,
+                Err(e) => {
+                    report.note(format!(
+                        "prefilter/{}_n{n}: skipped ({} backend unavailable: {e})",
+                        mode.name(),
+                        kind.name()
+                    ));
+                    continue;
+                }
+            };
+            let pts2 = pts.clone();
+            let c2 = c.clone();
+            report.add(b.run(&format!("prefilter/{}_n{n}", mode.name()), move || {
+                black_box(c2.compute(pts2.clone()).unwrap().upper.len())
+            }));
+            let snap = c.snapshot().0;
+            report.note(format!(
+                "{}_n{n}: points_in={} filtered_host={} filtered_device={} \
+                 device_compaction={}",
+                mode.name(),
+                snap.get("points_in").unwrap(),
+                snap.get("filtered_points_host").unwrap(),
+                snap.get("filtered_points_device").unwrap(),
+                snap.get("device_filter_compaction").unwrap(),
+            ));
+        }
+    }
+    report.finish();
+
+    // E14b: merge-heavy session schedule — a low merge threshold keeps
+    // the hull ⊕ hull combine (and, on pjrt, the tangent kernel's single
+    // upload per merge) on the critical path.
+    let mut report = Report::new("E14b: session merges, host vs device tangent");
+    let n = 1usize << 16;
+    let pts = generate(Distribution::Disk, n, 15);
+    for (row, kind) in [("host_tangent", BackendKind::Native), ("device_tangent", BackendKind::Pjrt)]
+    {
+        let c = match coord(kind, PrefilterMode::Off) {
+            Ok(c) => c,
+            Err(e) => {
+                report.note(format!(
+                    "session/{row}: skipped ({} backend unavailable: {e})",
+                    kind.name()
+                ));
+                continue;
+            }
+        };
+        let registry = SessionRegistry::new(
+            StreamConfig { merge_threshold: 1024, idle_ttl_ms: 0, ..Default::default() },
+            c.metrics.clone(),
+        );
+        let pts2 = pts.clone();
+        let c2 = c.clone();
+        report.add(b.run(&format!("session/{row}_n{n}_batch1024"), move || {
+            let sid = registry.open().unwrap();
+            for chunk in pts2.chunks(1024) {
+                registry.add(sid, chunk, &*c2).unwrap();
+            }
+            let snap = registry.hull(sid, &*c2).unwrap();
+            registry.close(sid, &*c2).unwrap();
+            black_box(snap.upper.len())
+        }));
+        let snap = c.snapshot().0;
+        // round-trip accounting: every device tangent merge is exactly one
+        // upload + one download by construction (the kernel takes the
+        // padded [H(L) | H(R)] pair block in a single batch-2 program)
+        report.note(format!(
+            "{row}: merges_total={} device_tangent_merges={} (device path = 1 upload/merge)",
+            snap.get("merges_total").unwrap(),
+            snap.get("device_tangent_merges").unwrap(),
+        ));
+    }
+    report.finish();
+}

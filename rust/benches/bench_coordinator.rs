@@ -10,7 +10,7 @@ use std::sync::Arc;
 
 use wagener_hull::benchkit::{Bencher, Report};
 use wagener_hull::coordinator::{
-    BackendKind, BatcherConfig, Coordinator, CoordinatorConfig, HullRequest,
+    BackendKind, BatcherConfig, Coordinator, CoordinatorConfig, HullRequest, PrefilterMode,
 };
 use wagener_hull::geometry::generators::{generate, Distribution};
 
@@ -23,7 +23,7 @@ fn coord(max_batch: usize, flush_us: u64, workers: usize) -> Arc<Coordinator> {
             workers,
             // keep the measured work comparable across PRs: the filter
             // would otherwise shrink the dense inputs before the backend
-            prefilter: false,
+            prefilter: PrefilterMode::Off,
             ..Default::default()
         })
         .unwrap(),

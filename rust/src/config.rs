@@ -21,7 +21,10 @@
 //!
 //! [coordinator]
 //! workers = 0                # exec worker threads; 0 = hardware threads
-//! prefilter = true           # octagon interior-point pre-filter
+//! prefilter = "host"         # octagon pre-filter: host | device | off
+//!                            # (bool accepted: true = host, false = off)
+//! device_merge = true        # pjrt: session merges via the device
+//!                            # tangent kernel (host fallback built in)
 //! breaker_cooldown_ms = 1000 # circuit-breaker open -> half-open probe
 //!                            # delay after repeated backend failures;
 //!                            # 0 disables the breaker
@@ -55,7 +58,7 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, Result};
 
-use crate::coordinator::{BackendKind, CoordinatorConfig};
+use crate::coordinator::{BackendKind, CoordinatorConfig, PrefilterMode};
 use crate::engine::PlacementKind;
 use crate::pram::ExecMode;
 use crate::server::ServerConfig;
@@ -188,7 +191,21 @@ impl Config {
                         cfg.coordinator.workers = as_usize(value, &path)?;
                     }
                     "coordinator.prefilter" => {
-                        cfg.coordinator.prefilter =
+                        // historical form: a bool (true = host filter, false
+                        // = off).  The string form names where it runs.
+                        cfg.coordinator.prefilter = if let Some(b) = value.as_bool() {
+                            if b { PrefilterMode::Host } else { PrefilterMode::Off }
+                        } else {
+                            let s = value
+                                .as_str()
+                                .ok_or_else(|| anyhow!("{path}: want bool or string"))?;
+                            PrefilterMode::parse(s).ok_or_else(|| {
+                                anyhow!("{path}: want host | device | off, got {s:?}")
+                            })?
+                        };
+                    }
+                    "coordinator.device_merge" => {
+                        cfg.coordinator.device_merge =
                             value.as_bool().ok_or_else(|| anyhow!("{path}: want bool"))?;
                     }
                     "coordinator.breaker_cooldown_ms" => {
@@ -278,6 +295,7 @@ queue_cap = 99
 [coordinator]
 workers = 6
 prefilter = false
+device_merge = false
 breaker_cooldown_ms = 125
 [engine]
 shards = 3
@@ -309,7 +327,8 @@ page_limit = 512
         assert_eq!(cfg.coordinator.batcher.flush_us, 250);
         assert_eq!(cfg.coordinator.batcher.queue_cap, 99);
         assert_eq!(cfg.coordinator.workers, 6);
-        assert!(!cfg.coordinator.prefilter);
+        assert_eq!(cfg.coordinator.prefilter, PrefilterMode::Off);
+        assert!(!cfg.coordinator.device_merge);
         assert_eq!(cfg.coordinator.breaker_cooldown_ms, 125);
         assert_eq!(cfg.engine.shards, 3);
         assert_eq!(cfg.engine.max_queued, 64);
@@ -332,7 +351,8 @@ page_limit = 512
         assert_eq!(cfg.server.addr, "127.0.0.1:7878");
         assert_eq!(cfg.server.io_threads, 0); // 0 = auto-sized event loop pool
         assert_eq!(cfg.coordinator.workers, 0); // 0 = available parallelism
-        assert!(cfg.coordinator.prefilter);
+        assert_eq!(cfg.coordinator.prefilter, PrefilterMode::Host);
+        assert!(cfg.coordinator.device_merge);
         assert_eq!(cfg.engine.shards, 1); // sharding is opt-in (0 = auto)
         assert_eq!(cfg.engine.max_queued, 0); // shedding is opt-in
         assert_eq!(cfg.server.request_timeout_ms, 0); // deadlines are opt-in
@@ -360,7 +380,12 @@ page_limit = 512
         assert!(Config::from_toml("[batcher]\nmax_batch = -3").is_err());
         assert!(Config::from_toml("[coordinator]\nworkers = -1").is_err());
         assert!(Config::from_toml("[coordinator]\nprefilter = 3").is_err());
+        assert!(Config::from_toml("[coordinator]\nprefilter = \"gpu\"").is_err());
+        assert!(Config::from_toml("[coordinator]\ndevice_merge = 3").is_err());
         assert!(Config::from_toml("[coordinator]\nthreads = 4").is_err());
+        // the string form names where the prefilter runs
+        let cfg = Config::from_toml("[coordinator]\nprefilter = \"device\"").unwrap();
+        assert_eq!(cfg.coordinator.prefilter, PrefilterMode::Device);
         assert!(Config::from_toml("[engine]\nshards = -2").is_err());
         assert!(Config::from_toml("[engine]\npools = 4").is_err());
         assert!(Config::from_toml("[engine]\nplacement = \"rendezvous\"").is_err());

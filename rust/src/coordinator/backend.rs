@@ -16,11 +16,13 @@
 
 use std::path::PathBuf;
 
-use crate::geometry::point::{dedup_x, sort_by_x, Point};
+use crate::geometry::point::{dedup_x, sort_by_x, Point, REMOTE};
 use crate::pram::ExecMode;
-use crate::runtime::{ArtifactRegistry, HullExecutor};
+use crate::runtime::{ArtifactKind, ArtifactRegistry, HullExecutor};
 use crate::serial::monotone_chain;
 use crate::wagener;
+
+use super::request::PREFILTER_MIN_POINTS;
 
 /// Which backend the coordinator runs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -80,7 +82,12 @@ impl BackendKind {
                     let names: Vec<String> = exe
                         .registry()
                         .iter()
-                        .filter(|m| m.kind == crate::runtime::ArtifactKind::Hull)
+                        .filter(|m| {
+                            matches!(
+                                m.kind,
+                                ArtifactKind::Hull | ArtifactKind::Filter | ArtifactKind::Tangent
+                            )
+                        })
                         .map(|m| m.name.clone())
                         .collect();
                     for name in names {
@@ -116,6 +123,38 @@ pub trait HullBackend {
         batch: &[&[Point]],
         threads: usize,
     ) -> Result<Vec<(Vec<Point>, Vec<Point>)>, String>;
+    /// Accelerator-resident octagon prefilter: the survivors of `pts`
+    /// (input order and bits preserved), or `None` to keep the host path
+    /// — non-device backends, inputs below the kernel's size gate, a
+    /// size-class miss, or a device failure.  Falling back is always
+    /// silent and lossless; the device kernel is hull-preserving under
+    /// the same strict-inside rule as the host filter.
+    fn device_filter(&self, _pts: &[Point]) -> Option<Vec<Point>> {
+        None
+    }
+    /// Largest point block the device prefilter accepts (0 = none).
+    /// Under `prefilter = "device"` admission can ceiling on this instead
+    /// of the hull size classes: oversized dense requests shrink on the
+    /// accelerator before they ever meet a hull artifact.
+    fn device_filter_capacity(&self) -> usize {
+        0
+    }
+    /// Accelerator-resident common-tangent merge of two x-disjoint hulls.
+    /// `upper` holds the upper chains `[left, right]`; `lower` the
+    /// y-MIRRORED lower chains `[left, right]` (a mirrored lower chain is
+    /// a valid upper-convex chain, so one artifact serves both rows — the
+    /// whole hull ⊕ hull merge is exactly ONE upload).  Returns the
+    /// merged upper chain and the merged still-mirrored lower chain, or
+    /// `None` for host fallback (no artifact, chains too long, failure).
+    /// Outputs may carry collinear middles; callers canonicalize with a
+    /// strict-turn rescan (see `wagener::hull_merge::merge_hulls_with`).
+    fn device_tangent(
+        &self,
+        _upper: [&[Point]; 2],
+        _lower: [&[Point]; 2],
+    ) -> Option<(Vec<Point>, Vec<Point>)> {
+        None
+    }
 }
 
 /// Below this many total points in a batch, scoped-thread spawns cost
@@ -230,6 +269,38 @@ impl HullBackend for PjrtBackend {
             rest = &rest[take..];
         }
         Ok(out)
+    }
+
+    fn device_filter(&self, pts: &[Point]) -> Option<Vec<Point>> {
+        // the kernel passes tiny inputs through verbatim — dispatching
+        // them would be a pure round-trip tax
+        if pts.len() < PREFILTER_MIN_POINTS {
+            return None;
+        }
+        let meta = self.exe.registry().select_filter(pts.len())?.clone();
+        self.exe.run_filter(&meta, pts).ok()
+    }
+
+    fn device_filter_capacity(&self) -> usize {
+        self.exe.registry().max_filter_points()
+    }
+
+    fn device_tangent(
+        &self,
+        upper: [&[Point]; 2],
+        lower: [&[Point]; 2],
+    ) -> Option<(Vec<Point>, Vec<Point>)> {
+        let len = upper.iter().chain(lower.iter()).map(|c| c.len()).max()?;
+        let meta = self.exe.registry().select_tangent(len)?.clone();
+        let d = meta.n / 2;
+        // [H(L) | H(R)] block layout: each half REMOTE-padded to d slots
+        let block = |pair: [&[Point]; 2]| {
+            let mut blk = vec![REMOTE; meta.n];
+            blk[..pair[0].len()].copy_from_slice(pair[0]);
+            blk[d..d + pair[1].len()].copy_from_slice(pair[1]);
+            blk
+        };
+        self.exe.run_tangent(&meta, &block(upper), &block(lower)).ok()
     }
 }
 

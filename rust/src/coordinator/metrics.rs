@@ -161,8 +161,17 @@ pub struct Metrics {
     pub batched_requests: AtomicU64,
     pub points_in: AtomicU64,
     pub hull_points_out: AtomicU64,
-    /// points dropped by the octagon interior-point pre-filter.
-    pub filtered_points: AtomicU64,
+    /// points dropped by the octagon pre-filter on the host (submit-path
+    /// `prepare()` in Host mode, or worker-side fallback in Device mode).
+    pub filtered_points_host: AtomicU64,
+    /// points dropped by the on-device Pallas filter kernel.
+    pub filtered_points_device: AtomicU64,
+    /// points fed into the device filter (denominator of the compaction
+    /// ratio — host-fallback traffic is excluded by design).
+    pub device_filter_points_in: AtomicU64,
+    /// streaming-session merges served by the device tangent kernel; each
+    /// one is exactly one upload + one download.
+    pub device_tangent_merges: AtomicU64,
     pub queue_latency: Histogram,
     pub exec_latency: Histogram,
     pub e2e_latency: Histogram,
@@ -238,7 +247,10 @@ impl Metrics {
             batched_requests: g(&self.batched_requests),
             points_in: g(&self.points_in),
             hull_points_out: g(&self.hull_points_out),
-            filtered_points: g(&self.filtered_points),
+            filtered_points_host: g(&self.filtered_points_host),
+            filtered_points_device: g(&self.filtered_points_device),
+            device_filter_points_in: g(&self.device_filter_points_in),
+            device_tangent_merges: g(&self.device_tangent_merges),
             queue_latency: self.queue_latency.snap(),
             exec_latency: self.exec_latency.snap(),
             e2e_latency: self.e2e_latency.snap(),
@@ -283,7 +295,10 @@ pub struct MetricsFrame {
     pub batched_requests: u64,
     pub points_in: u64,
     pub hull_points_out: u64,
-    pub filtered_points: u64,
+    pub filtered_points_host: u64,
+    pub filtered_points_device: u64,
+    pub device_filter_points_in: u64,
+    pub device_tangent_merges: u64,
     pub queue_latency: HistogramSnapshot,
     pub exec_latency: HistogramSnapshot,
     pub e2e_latency: HistogramSnapshot,
@@ -315,7 +330,10 @@ impl MetricsFrame {
         self.batched_requests += other.batched_requests;
         self.points_in += other.points_in;
         self.hull_points_out += other.hull_points_out;
-        self.filtered_points += other.filtered_points;
+        self.filtered_points_host += other.filtered_points_host;
+        self.filtered_points_device += other.filtered_points_device;
+        self.device_filter_points_in += other.device_filter_points_in;
+        self.device_tangent_merges += other.device_tangent_merges;
         self.queue_latency.merge(&other.queue_latency);
         self.exec_latency.merge(&other.exec_latency);
         self.e2e_latency.merge(&other.e2e_latency);
@@ -360,7 +378,26 @@ impl MetricsFrame {
             ),
             ("points_in", n(self.points_in)),
             ("hull_points_out", n(self.hull_points_out)),
-            ("filtered_points", n(self.filtered_points)),
+            // compat key: pre-PR 10 consumers read the sum
+            (
+                "filtered_points",
+                n(self.filtered_points_host + self.filtered_points_device),
+            ),
+            ("filtered_points_host", n(self.filtered_points_host)),
+            ("filtered_points_device", n(self.filtered_points_device)),
+            ("device_filter_points_in", n(self.device_filter_points_in)),
+            // fraction of device-filtered points that SURVIVE (1.0 when the
+            // device filter has seen no traffic)
+            (
+                "device_filter_compaction",
+                Json::Num(if self.device_filter_points_in == 0 {
+                    1.0
+                } else {
+                    (self.device_filter_points_in - self.filtered_points_device) as f64
+                        / self.device_filter_points_in as f64
+                }),
+            ),
+            ("device_tangent_merges", n(self.device_tangent_merges)),
             ("queue_latency", self.queue_latency.to_json()),
             ("exec_latency", self.exec_latency.to_json()),
             ("e2e_latency", self.e2e_latency.to_json()),
@@ -699,6 +736,30 @@ mod tests {
         assert_eq!(j.get("snapshots_written_total").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("restores_total").unwrap().as_usize(), Some(1));
         assert_eq!(j.get("snapshot_bytes_total").unwrap().as_usize(), Some(1000));
+    }
+
+    #[test]
+    fn filter_split_keeps_the_compat_sum_and_derives_compaction() {
+        let a = Metrics::default();
+        let b = Metrics::default();
+        Metrics::add(&a.filtered_points_host, 30);
+        Metrics::add(&b.filtered_points_device, 700);
+        Metrics::add(&b.device_filter_points_in, 1000);
+        Metrics::inc(&b.device_tangent_merges);
+        let mut merged = a.frame();
+        merged.merge(&b.frame());
+        let j = crate::util::json::parse(&merged.to_json().to_string()).unwrap();
+        // pre-PR 10 consumers keep reading the sum under the old key
+        assert_eq!(j.get("filtered_points").unwrap().as_usize(), Some(730));
+        assert_eq!(j.get("filtered_points_host").unwrap().as_usize(), Some(30));
+        assert_eq!(j.get("filtered_points_device").unwrap().as_usize(), Some(700));
+        assert_eq!(j.get("device_filter_points_in").unwrap().as_usize(), Some(1000));
+        // 300 of 1000 survive the device filter
+        assert_eq!(j.get("device_filter_compaction").unwrap().as_f64(), Some(0.3));
+        assert_eq!(j.get("device_tangent_merges").unwrap().as_usize(), Some(1));
+        // an idle device filter reads as "everything survives"
+        let idle = Metrics::default().frame().to_json();
+        assert_eq!(idle.get("device_filter_compaction").unwrap().as_f64(), Some(1.0));
     }
 
     #[test]

@@ -24,4 +24,4 @@ pub use metrics::{
     IoLoopMetrics, IoMetrics, Metrics, MetricsFrame, MetricsSnapshot,
 };
 pub use request::{HullReply, HullRequest, HullResponse, RequestError};
-pub use router::{Breaker, Coordinator, CoordinatorConfig};
+pub use router::{Breaker, Coordinator, CoordinatorConfig, PrefilterMode};

@@ -173,7 +173,9 @@ pub fn validate_points(points: &[Point]) -> Result<(), RequestError> {
 }
 
 /// Below this, the octagon test costs more than the hull it would save.
-const PREFILTER_MIN_POINTS: usize = 32;
+/// Shared with the device prefilter (`HullBackend::device_filter`), whose
+/// kernel bakes in the same gate.
+pub(crate) const PREFILTER_MIN_POINTS: usize = 32;
 
 /// Octagon interior-point pre-filter (the CudaChain / GPU-filter trick):
 /// points *strictly* inside the convex polygon spanned by the extreme
@@ -186,7 +188,7 @@ const PREFILTER_MIN_POINTS: usize = 32;
 /// order is preserved.  Filters in place (no per-point allocation —
 /// nothing moves when no point is inside) and returns the number dropped;
 /// 0 when filtering is not worthwhile (small input, degenerate octagon).
-fn octagon_filter(pts: &mut Vec<Point>) -> usize {
+pub(crate) fn octagon_filter(pts: &mut Vec<Point>) -> usize {
     if pts.len() < PREFILTER_MIN_POINTS {
         return 0;
     }

@@ -27,11 +27,46 @@ use std::time::{Duration, Instant};
 use super::backend::{exact_full_hull, BackendKind, HullBackend};
 use super::batcher::{reap_expired, run_batcher, BatchMsg, BatcherConfig, Item};
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::request::{prepare, HullReply, HullRequest, HullResponse, RequestError};
+use super::request::{octagon_filter, prepare, HullReply, HullRequest, HullResponse, RequestError};
 use crate::fault::{FaultAction, FaultPlan};
 use crate::geometry::hull_check::check_upper_hull;
 use crate::geometry::point::Point;
 use crate::pram::ExecMode;
+use crate::wagener::hull_merge::TangentKernel;
+
+/// Where the octagon interior-point prefilter runs.
+///
+/// `Host` keeps the exact robust-predicate filter on the submit path
+/// (`prepare()`), pre-PR 10 behaviour.  `Device` moves it onto the exec
+/// worker's accelerator (the `filter_n*` Pallas artifacts) with silent
+/// per-request host fallback — non-pjrt backends, tiny inputs, size-class
+/// misses, and device failures all land on the host filter, so the served
+/// hull is bit-identical in every mode.  `Off` disables prefiltering.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrefilterMode {
+    Host,
+    Device,
+    Off,
+}
+
+impl PrefilterMode {
+    pub fn parse(s: &str) -> Option<PrefilterMode> {
+        Some(match s {
+            "host" => PrefilterMode::Host,
+            "device" => PrefilterMode::Device,
+            "off" => PrefilterMode::Off,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PrefilterMode::Host => "host",
+            PrefilterMode::Device => "device",
+            PrefilterMode::Off => "off",
+        }
+    }
+}
 
 /// Coordinator configuration (see config.rs for the TOML form).
 #[derive(Clone, Debug)]
@@ -51,10 +86,16 @@ pub struct CoordinatorConfig {
     /// exec worker threads, each owning its own backend instance
     /// (0 = one per available hardware thread).
     pub workers: usize,
-    /// octagon interior-point pre-filter in `prepare()`: large dense
-    /// inputs shrink before they reach a backend (exact — the hull is
-    /// unchanged; dropped points land in the `filtered_points` metric).
-    pub prefilter: bool,
+    /// octagon interior-point pre-filter: large dense inputs shrink
+    /// before they reach a hull pipeline (hull-preserving — dropped
+    /// points land in the `filtered_points_{host,device}` metrics).
+    /// See [`PrefilterMode`] for where it runs.
+    pub prefilter: PrefilterMode,
+    /// route streaming-session hull ⊕ hull merges through the device
+    /// tangent kernel when the backend has one (`pjrt` with `tangent_n*`
+    /// artifacts).  Host merges are used whenever the device declines;
+    /// results are bit-identical either way.
+    pub device_merge: bool,
     /// circuit-breaker cooldown: after repeated consecutive backend
     /// failures the breaker opens and the router stops feeding this
     /// coordinator; the first routing probe after the cooldown half-opens
@@ -75,7 +116,8 @@ impl Default for CoordinatorConfig {
             preload: false,
             exec_mode: ExecMode::Fast,
             workers: 0,
-            prefilter: true,
+            prefilter: PrefilterMode::Host,
+            device_merge: true,
             breaker_cooldown_ms: 1000,
             fault_plan: None,
         }
@@ -212,8 +254,52 @@ pub struct Coordinator {
     backend_name: &'static str,
     max_points: usize,
     worker_count: usize,
-    prefilter: bool,
+    prefilter: PrefilterMode,
+    /// device-merge worker intake (None = host merges only).  Bounded so
+    /// merge jobs serialize through the single device thread.
+    tangent_tx: Option<mpsc::SyncSender<TangentJob>>,
+    merge_worker: Option<JoinHandle<()>>,
     next_id: AtomicU64,
+}
+
+/// One hull ⊕ hull merge shipped to the device-merge worker: the four
+/// chains (lower pair already y-mirrored by `hull_merge::device_merge`)
+/// and a reply slot.  `None` back means "use the host path".
+struct TangentJob {
+    upper: [Vec<Point>; 2],
+    lower: [Vec<Point>; 2],
+    reply: mpsc::Sender<Option<(Vec<Point>, Vec<Point>)>>,
+}
+
+/// The dedicated device-merge thread: PJRT handles are `!Send`, so the
+/// tangent executor lives on its own thread and jobs come to it.  Built
+/// without preload — tangent artifacts compile on first use, off the
+/// serving path's critical startup.  If the backend cannot be built the
+/// thread answers `None` forever (sessions silently keep host merges).
+fn run_merge_worker(
+    cfg: CoordinatorConfig,
+    metrics: Arc<Metrics>,
+    rx: mpsc::Receiver<TangentJob>,
+) {
+    let backend = match cfg.backend.build(&cfg.artifacts_dir, false, cfg.exec_mode, false) {
+        Ok(b) => b,
+        Err(_) => {
+            for job in rx {
+                let _ = job.reply.send(None);
+            }
+            return;
+        }
+    };
+    for job in rx {
+        let out = backend.device_tangent(
+            [job.upper[0].as_slice(), job.upper[1].as_slice()],
+            [job.lower[0].as_slice(), job.lower[1].as_slice()],
+        );
+        if out.is_some() {
+            Metrics::inc(&metrics.device_tangent_merges);
+        }
+        let _ = job.reply.send(out);
+    }
 }
 
 /// One dispatch attempt: scheduled fault injection (chaos tests) and the
@@ -314,7 +400,7 @@ fn run_exec_worker(
     batch_rx: Arc<Mutex<mpsc::Receiver<BatchMsg>>>,
     retry_tx: mpsc::SyncSender<BatchMsg>,
     breaker: Arc<Breaker>,
-    ready_tx: mpsc::Sender<Result<(usize, usize), String>>,
+    ready_tx: mpsc::Sender<Result<(usize, usize, usize), String>>,
     hw_threads: usize,
     busy: Arc<AtomicUsize>,
 ) {
@@ -325,7 +411,11 @@ fn run_exec_worker(
         cfg.self_check,
     ) {
         Ok(b) => {
-            let _ = ready_tx.send(Ok((b.max_points(), b.preferred_batch())));
+            let _ = ready_tx.send(Ok((
+                b.max_points(),
+                b.preferred_batch(),
+                b.device_filter_capacity(),
+            )));
             b
         }
         Err(e) => {
@@ -349,6 +439,33 @@ fn run_exec_worker(
         reap_expired(&mut items, &metrics);
         if items.is_empty() {
             continue;
+        }
+        // Device prefilter: shrink each request on the accelerator before
+        // the hull dispatch.  Per-item host fallback (octagon_filter) keeps
+        // the served hull bit-identical when the device declines — tiny
+        // inputs, size-class misses, non-pjrt backends, or exec errors.
+        // Retried batches (attempt > 0) were already filtered first time.
+        if cfg.prefilter == PrefilterMode::Device && attempt == 0 {
+            for item in items.iter_mut() {
+                let pts = &mut item.prepared.points;
+                let before = pts.len();
+                match backend.device_filter(pts) {
+                    Some(kept) => {
+                        Metrics::add(&metrics.device_filter_points_in, before as u64);
+                        Metrics::add(
+                            &metrics.filtered_points_device,
+                            (before - kept.len()) as u64,
+                        );
+                        item.prepared.filtered = before - kept.len();
+                        *pts = kept;
+                    }
+                    None => {
+                        let dropped = octagon_filter(pts);
+                        Metrics::add(&metrics.filtered_points_host, dropped as u64);
+                        item.prepared.filtered = dropped;
+                    }
+                }
+            }
         }
         // Thread budget for this dispatch: an even share of the machine
         // among the dispatches in flight *right now*.  An idle pool hands
@@ -444,7 +561,7 @@ impl Coordinator {
         let (submit_tx, submit_rx) = mpsc::sync_channel::<Item>(cfg.batcher.queue_cap);
         let (batch_tx, batch_rx) = mpsc::sync_channel::<BatchMsg>(cfg.batcher.queue_cap.max(1));
         let batch_rx = Arc::new(Mutex::new(batch_rx));
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize), String>>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(usize, usize, usize), String>>();
 
         // Shared gauge of dispatches in flight: each worker sizes its
         // intra-batch / intra-request thread budget as hw / in_flight at
@@ -476,13 +593,15 @@ impl Coordinator {
         // wait for every backend construction before declaring ready
         let mut max_points = usize::MAX;
         let mut pref_batch = 1usize;
+        let mut filter_cap = usize::MAX;
         let mut ready_ok = 0usize;
         let mut failure: Option<String> = None;
         for _ in 0..worker_count {
             match ready_rx.recv() {
-                Ok(Ok((mp, pb))) => {
+                Ok(Ok((mp, pb, fc))) => {
                     max_points = max_points.min(mp);
                     pref_batch = pref_batch.max(pb);
+                    filter_cap = filter_cap.min(fc);
                     ready_ok += 1;
                 }
                 Ok(Err(e)) => failure = Some(e),
@@ -506,6 +625,30 @@ impl Coordinator {
             }
             return Err(e);
         }
+
+        // In Device mode the prefilter runs *before* the hull dispatch, so
+        // admission can accept anything the filter artifacts can shrink —
+        // the hull size cap applies to the post-filter point count.
+        if cfg.prefilter == PrefilterMode::Device && filter_cap != usize::MAX {
+            max_points = max_points.max(filter_cap);
+        }
+
+        // Device-merge worker: one thread owning its own backend (PJRT
+        // handles are `!Send`), fed through a bounded job channel.  Only
+        // worth spawning when tangent artifacts can exist at all.
+        let (tangent_tx, merge_worker) =
+            if cfg.backend == BackendKind::Pjrt && cfg.device_merge {
+                let (tx, rx) = mpsc::sync_channel::<TangentJob>(1);
+                let cfg = cfg.clone();
+                let metrics = metrics.clone();
+                let handle = std::thread::Builder::new()
+                    .name("hull-merge-dev".into())
+                    .spawn(move || run_merge_worker(cfg, metrics, rx))
+                    .map_err(|e| e.to_string())?;
+                (Some(tx), Some(handle))
+            } else {
+                (None, None)
+            };
 
         let max_batch = if cfg.batcher.max_batch == 0 {
             pref_batch.max(1)
@@ -531,6 +674,8 @@ impl Coordinator {
             max_points,
             worker_count,
             prefilter: cfg.prefilter,
+            tangent_tx,
+            merge_worker,
             next_id: AtomicU64::new(1),
         })
     }
@@ -578,7 +723,7 @@ impl Coordinator {
         Metrics::inc(&self.metrics.requests);
         Metrics::add(&self.metrics.points_in, req.points.len() as u64);
 
-        let prepared = match prepare(&req, self.prefilter) {
+        let prepared = match prepare(&req, self.prefilter == PrefilterMode::Host) {
             Ok(p) => p,
             Err(e) => {
                 Metrics::inc(&self.metrics.errors);
@@ -597,7 +742,7 @@ impl Coordinator {
         // recorded only for requests that will actually be served, so the
         // gauge tracks real filter savings (not work thrown away by a
         // TooLarge rejection)
-        Metrics::add(&self.metrics.filtered_points, prepared.filtered as u64);
+        Metrics::add(&self.metrics.filtered_points_host, prepared.filtered as u64);
         if prepared.degenerate {
             // exact fast path: general position violated; compute inline.
             // All three latency histograms are recorded, matching the
@@ -650,6 +795,13 @@ impl Coordinator {
         self.metrics.snapshot()
     }
 
+    /// The device tangent kernel for streaming-session merges, when this
+    /// coordinator runs one (`pjrt` backend with `device_merge` on).
+    /// `None` keeps sessions on the host merge path.
+    pub fn device_merge_kernel(&self) -> Option<&dyn TangentKernel> {
+        self.tangent_tx.as_ref().map(|_| self as &dyn TangentKernel)
+    }
+
     /// Graceful shutdown: drain queues, join every worker.
     pub fn shutdown(mut self) {
         self.shutdown_inner();
@@ -663,6 +815,32 @@ impl Coordinator {
         for h in self.workers.drain(..) {
             let _ = h.join(); // each worker drains the shared channel dry
         }
+        self.tangent_tx.take(); // closes the merge worker's job intake
+        if let Some(h) = self.merge_worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Sessions call merges from arbitrary threads; the job channel proxies
+/// each one to the `hull-merge-dev` thread that owns the PJRT executor.
+/// Any channel hiccup (shutdown race, worker death) degrades to `None`,
+/// which `merge_hulls_with` treats as "host merge".
+impl TangentKernel for Coordinator {
+    fn tangent_merge(
+        &self,
+        upper: [&[Point]; 2],
+        lower: [&[Point]; 2],
+    ) -> Option<(Vec<Point>, Vec<Point>)> {
+        let tx = self.tangent_tx.as_ref()?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        tx.send(TangentJob {
+            upper: [upper[0].to_vec(), upper[1].to_vec()],
+            lower: [lower[0].to_vec(), lower[1].to_vec()],
+            reply: reply_tx,
+        })
+        .ok()?;
+        reply_rx.recv().ok().flatten()
     }
 }
 
@@ -696,7 +874,7 @@ mod tests {
             workers,
             // keep inputs at full size: the head-of-line test needs the
             // big request to actually be big when it reaches the backend
-            prefilter: false,
+            prefilter: PrefilterMode::Off,
             ..Default::default()
         })
         .unwrap()
@@ -1007,7 +1185,7 @@ mod tests {
         let c = Coordinator::start(CoordinatorConfig {
             backend: BackendKind::Native,
             self_check: true,
-            prefilter: true,
+            prefilter: PrefilterMode::Host,
             ..Default::default()
         })
         .unwrap();
@@ -1026,7 +1204,7 @@ mod tests {
     fn prefilter_off_is_honored() {
         let c = Coordinator::start(CoordinatorConfig {
             backend: BackendKind::Native,
-            prefilter: false,
+            prefilter: PrefilterMode::Off,
             ..Default::default()
         })
         .unwrap();
@@ -1034,5 +1212,54 @@ mod tests {
         let snap = c.snapshot().0;
         assert_eq!(snap.get("filtered_points").unwrap().as_usize(), Some(0));
         c.shutdown();
+    }
+
+    /// Acceptance gate for PR 10: the served hull must be bit-identical
+    /// under `host`, `device`, and `off` prefiltering on every generator
+    /// distribution.  On a host backend `device_filter` declines, so the
+    /// Device coordinator exercises the per-item worker-side host
+    /// fallback — the metrics must show the drops as host-side, with the
+    /// device counter untouched.
+    #[test]
+    fn prefilter_modes_serve_identical_hulls() {
+        let mk = |mode: PrefilterMode| {
+            Coordinator::start(CoordinatorConfig {
+                backend: BackendKind::Native,
+                self_check: true,
+                prefilter: mode,
+                ..Default::default()
+            })
+            .unwrap()
+        };
+        let host = mk(PrefilterMode::Host);
+        let device = mk(PrefilterMode::Device);
+        let off = mk(PrefilterMode::Off);
+        for (k, dist) in Distribution::ALL.iter().enumerate() {
+            let pts = generate(*dist, 1200 + 71 * k, 4200 + k as u64);
+            let a = host.compute(pts.clone()).unwrap();
+            let b = device.compute(pts.clone()).unwrap();
+            let c = off.compute(pts.clone()).unwrap();
+            let (u, l) = monotone_chain::full_hull(&pts);
+            for (resp, mode) in [(&a, "host"), (&b, "device"), (&c, "off")] {
+                assert_eq!(resp.upper, u, "{} upper diverged on {dist:?}", mode);
+                assert_eq!(resp.lower, l, "{} lower diverged on {dist:?}", mode);
+            }
+        }
+        let snap = device.snapshot().0;
+        assert_eq!(
+            snap.get("filtered_points_device").unwrap().as_usize(),
+            Some(0),
+            "no device artifacts on a native backend"
+        );
+        let host_side = snap.get("filtered_points_host").unwrap().as_usize().unwrap();
+        assert!(host_side > 0, "worker-side host fallback should shed points");
+        assert_eq!(
+            snap.get("filtered_points").unwrap().as_usize(),
+            Some(host_side),
+            "compat key must stay the host+device sum"
+        );
+        host.shutdown();
+        device.shutdown();
+        off.shutdown();
     }
 }

@@ -17,7 +17,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Context, Result};
 
 use wagener_hull::config::Config;
-use wagener_hull::coordinator::{BackendKind, Coordinator, CoordinatorConfig};
+use wagener_hull::coordinator::{BackendKind, Coordinator, CoordinatorConfig, PrefilterMode};
 use wagener_hull::engine::{Engine, EngineConfig, PlacementKind};
 use wagener_hull::store::{FsStore, SnapshotStore};
 use wagener_hull::geometry::generators::{generate, Distribution};
@@ -44,6 +44,8 @@ commands:
              [--max-sessions <n>] [--merge-threshold <n>] [--idle-ttl-ms <n>]
              [--request-timeout-ms <n>] [--max-queued <n>] [--breaker-cooldown-ms <n>]
              [--max-proto-errors <n>] [--store-dir <dir>] [--placement <stripe|ring>]
+             [--prefilter <host|device|off>]   where the octagon pre-filter runs
+             [--device-merge <true|false>]     pjrt session merges on the tangent kernel
              [--http-port <n>]   also serve the HTTP/JSON gateway on this port
   client     --addr <host:port> [--proto <text|binary|auto>] [--tmo <ms>]
              [--connect-retries <n>] <points-file>
@@ -364,6 +366,15 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     if let Some(v) = flags.get("placement") {
         cfg.engine.placement =
             PlacementKind::parse(v).ok_or_else(|| anyhow!("unknown placement {v:?}"))?;
+    }
+    if let Some(v) = flags.get("prefilter") {
+        cfg.coordinator.prefilter = PrefilterMode::parse(v)
+            .ok_or_else(|| anyhow!("--prefilter wants host, device or off, got {v:?}"))?;
+    }
+    if let Some(v) = flags.get("device-merge") {
+        cfg.coordinator.device_merge = v
+            .parse::<bool>()
+            .map_err(|_| anyhow!("--device-merge wants true or false, got {v:?}"))?;
     }
     if let Some(v) = flags.get("http-port") {
         cfg.gateway.port = v.parse::<u16>().context("--http-port wants a port (0..=65535)")?;

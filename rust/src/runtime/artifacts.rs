@@ -21,6 +21,11 @@ pub enum ArtifactKind {
     Hull,
     /// plain-jnp ablation twin of Hood.
     HoodJnp,
+    /// octagon interior-point prefilter: (n,2) -> 1-tuple (n,2).
+    Filter,
+    /// sampled common-tangent merge of [H(L)|H(R)] block pairs:
+    /// (2,n,2) -> 1-tuple (2,n,2), n = 2d slots per pair.
+    Tangent,
 }
 
 impl ArtifactKind {
@@ -29,6 +34,8 @@ impl ArtifactKind {
             "hood" => ArtifactKind::Hood,
             "hull" => ArtifactKind::Hull,
             "hood_jnp" => ArtifactKind::HoodJnp,
+            "filter" => ArtifactKind::Filter,
+            "tangent" => ArtifactKind::Tangent,
             other => bail!("unknown artifact kind {other:?}"),
         })
     }
@@ -157,6 +164,37 @@ impl ArtifactRegistry {
             .find(|meta| meta.kind == ArtifactKind::Hull && meta.n == n && meta.batch == b)
             .ok_or_else(|| anyhow!("no hull artifact for n={n} batch={b}"))
     }
+
+    /// Smallest artifact of `kind` whose block holds >= `m` slots, or None
+    /// (callers fall back to the host path on a size-class miss).
+    fn select_smallest(&self, kind: ArtifactKind, m: usize) -> Option<&ArtifactMeta> {
+        self.entries
+            .values()
+            .filter(|meta| meta.kind == kind && meta.n >= m)
+            .min_by_key(|meta| meta.n)
+    }
+
+    /// Pick the prefilter artifact for `m` points (smallest class n >= m).
+    pub fn select_filter(&self, m: usize) -> Option<&ArtifactMeta> {
+        self.select_smallest(ArtifactKind::Filter, m)
+    }
+
+    /// Pick the tangent-merge artifact for chains of up to `len` corners
+    /// per side: block = 2d slots with d >= len, so smallest n >= 2*len.
+    pub fn select_tangent(&self, len: usize) -> Option<&ArtifactMeta> {
+        self.select_smallest(ArtifactKind::Tangent, 2 * len.max(1))
+    }
+
+    /// The largest prefilter block available (0 when no filter artifact
+    /// exists) — the device-mode admission ceiling.
+    pub fn max_filter_points(&self) -> usize {
+        self.entries
+            .values()
+            .filter(|m| m.kind == ArtifactKind::Filter)
+            .map(|m| m.n)
+            .max()
+            .unwrap_or(0)
+    }
 }
 
 #[cfg(test)]
@@ -171,7 +209,15 @@ mod tests {
       "hull_n256_b1": {"file": "hull_n256_b1.hlo.txt", "kind": "hull",
         "n": 256, "batch": 1, "outputs": 2, "input_shape": [1, 256, 2]},
       "hood_n64": {"file": "hood_n64.hlo.txt", "kind": "hood",
-        "n": 64, "batch": 0, "outputs": 1, "input_shape": [64, 2]}
+        "n": 64, "batch": 0, "outputs": 1, "input_shape": [64, 2]},
+      "filter_n4096": {"file": "filter_n4096.hlo.txt", "kind": "filter",
+        "n": 4096, "batch": 0, "outputs": 1, "input_shape": [4096, 2]},
+      "filter_n65536": {"file": "filter_n65536.hlo.txt", "kind": "filter",
+        "n": 65536, "batch": 0, "outputs": 1, "input_shape": [65536, 2]},
+      "tangent_n128": {"file": "tangent_n128.hlo.txt", "kind": "tangent",
+        "n": 128, "batch": 2, "outputs": 1, "input_shape": [2, 128, 2]},
+      "tangent_n512": {"file": "tangent_n512.hlo.txt", "kind": "tangent",
+        "n": 512, "batch": 2, "outputs": 1, "input_shape": [2, 512, 2]}
     }"#;
 
     fn reg() -> ArtifactRegistry {
@@ -198,6 +244,22 @@ mod tests {
         assert_eq!(r.select_hull(65, 1).unwrap().name, "hull_n256_b1");
         assert!(r.select_hull(257, 1).is_err());
         assert!(r.select_hull(64, 3).is_err());
+    }
+
+    #[test]
+    fn filter_and_tangent_selection() {
+        let r = reg();
+        assert_eq!(r.select_filter(100).unwrap().name, "filter_n4096");
+        assert_eq!(r.select_filter(4096).unwrap().name, "filter_n4096");
+        assert_eq!(r.select_filter(4097).unwrap().name, "filter_n65536");
+        assert!(r.select_filter(65537).is_none());
+        assert_eq!(r.max_filter_points(), 65536);
+        // chains of up to n/2 corners per side fit a tangent block
+        assert_eq!(r.select_tangent(1).unwrap().name, "tangent_n128");
+        assert_eq!(r.select_tangent(64).unwrap().name, "tangent_n128");
+        assert_eq!(r.select_tangent(65).unwrap().name, "tangent_n512");
+        assert_eq!(r.select_tangent(256).unwrap().name, "tangent_n512");
+        assert!(r.select_tangent(257).is_none());
     }
 
     #[test]

@@ -31,6 +31,11 @@ pub struct RuntimeStats {
     /// [`HullExecutor::set_reference_check`]).
     pub ref_checks: u64,
     pub ref_mismatches: u64,
+    /// device prefilter dispatches and the points they shed.
+    pub filter_runs: u64,
+    pub filter_dropped: u64,
+    /// device tangent merges; each is exactly one upload + one download.
+    pub tangent_merges: u64,
 }
 
 /// Compile-cache + execution front-end for hull/hood artifacts.
@@ -264,6 +269,73 @@ impl HullExecutor {
             }
         }
         Ok(got)
+    }
+
+    /// Execute a prefilter artifact over one point set: survivors of the
+    /// octagon interior-point filter, in input order.  The kernel is
+    /// hull-preserving under the same strict-inside rule as the host
+    /// filter (boundary points kept), so callers may substitute the
+    /// result for `points` wherever only the hull matters.
+    pub fn run_filter(&self, meta: &ArtifactMeta, points: &[Point]) -> Result<Vec<Point>> {
+        if meta.kind != ArtifactKind::Filter {
+            bail!("{} is not a filter artifact", meta.name);
+        }
+        self.ensure_compiled(&meta.name)?;
+        let input = Self::batch_literal(meta, &[points])?;
+        let t0 = Instant::now();
+        let cache = self.cache.borrow();
+        let exe = cache.get(&meta.name).unwrap();
+        let result = exe.execute::<xla::Literal>(&[input])?[0][0].to_literal_sync()?;
+        let block = result.to_tuple1()?;
+        let rows = Self::literal_to_hoods(&block, 1, meta.n)?;
+        let got = live_prefix(&rows[0]).to_vec();
+        let mut stats = self.stats.borrow_mut();
+        stats.executions += 1;
+        stats.requests += 1;
+        stats.execute_ns += t0.elapsed().as_nanos() as u64;
+        stats.filter_runs += 1;
+        stats.filter_dropped += (points.len() - got.len()) as u64;
+        Ok(got)
+    }
+
+    /// Execute a tangent-merge artifact over one hull ⊕ hull merge: row 0
+    /// is the upper [H(L)|H(R)] block, row 1 the y-negated lower pair —
+    /// exactly ONE upload and one download per merge.  Returns the two
+    /// merged chains (live prefixes; row 1 still mirrored).
+    pub fn run_tangent(
+        &self,
+        meta: &ArtifactMeta,
+        upper_blk: &[Point],
+        lower_blk: &[Point],
+    ) -> Result<(Vec<Point>, Vec<Point>)> {
+        if meta.kind != ArtifactKind::Tangent {
+            bail!("{} is not a tangent artifact", meta.name);
+        }
+        if upper_blk.len() != meta.n || lower_blk.len() != meta.n {
+            bail!(
+                "tangent block of {}/{} slots != artifact n {}",
+                upper_blk.len(),
+                lower_blk.len(),
+                meta.n
+            );
+        }
+        self.ensure_compiled(&meta.name)?;
+        let input = Self::batch_literal(meta, &[upper_blk, lower_blk])?;
+        let t0 = Instant::now();
+        let cache = self.cache.borrow();
+        let exe = cache.get(&meta.name).unwrap();
+        let result = exe.execute::<xla::Literal>(&[input])?[0][0].to_literal_sync()?;
+        let block = result.to_tuple1()?;
+        let rows = Self::literal_to_hoods(&block, 2, meta.n)?;
+        let mut stats = self.stats.borrow_mut();
+        stats.executions += 1;
+        stats.requests += 1;
+        stats.execute_ns += t0.elapsed().as_nanos() as u64;
+        stats.tangent_merges += 1;
+        Ok((
+            live_prefix(&rows[0]).to_vec(),
+            live_prefix(&rows[1]).to_vec(),
+        ))
     }
 
     /// Convenience: route m-point requests to the right artifact and run.

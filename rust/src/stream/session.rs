@@ -23,19 +23,31 @@ use crate::coordinator::{Coordinator, RequestError};
 use crate::geometry::point::{sort_by_x, Point};
 use crate::geometry::predicates::{orient2d, Orientation};
 use crate::store::{LedgerEntry, SessionState};
-use crate::wagener::hull_merge::merge_hulls;
+use crate::wagener::hull_merge::{merge_hulls_with, TangentKernel};
 
 /// Anything that can turn a raw point set into canonical hull chains —
 /// the session's door into the coordinator's backend pool.  Implemented
 /// by [`Coordinator`]; tests substitute a serial implementation.
 pub trait HullService {
     fn full_hull(&self, points: Vec<Point>) -> Result<(Vec<Point>, Vec<Point>), RequestError>;
+
+    /// Accelerator tangent kernel for hull ⊕ hull merges, when the
+    /// service has one (the coordinator's device-merge worker under
+    /// `backend = pjrt` + `device_merge = true`).  `None` keeps every
+    /// merge on the host path — results are bit-identical either way.
+    fn tangent_kernel(&self) -> Option<&dyn TangentKernel> {
+        None
+    }
 }
 
 impl HullService for Coordinator {
     fn full_hull(&self, points: Vec<Point>) -> Result<(Vec<Point>, Vec<Point>), RequestError> {
         let resp = self.compute(points)?;
         Ok((resp.upper, resp.lower))
+    }
+
+    fn tangent_kernel(&self) -> Option<&dyn TangentKernel> {
+        self.device_merge_kernel()
     }
 }
 
@@ -185,7 +197,11 @@ impl Session {
         let (upper, lower) = if self.upper.is_empty() {
             (pu, pl)
         } else {
-            let ((u, l), _path) = merge_hulls((&self.upper, &self.lower), (&pu, &pl));
+            let ((u, l), _path) = merge_hulls_with(
+                svc.tangent_kernel(),
+                (&self.upper, &self.lower),
+                (&pu, &pl),
+            );
             (u, l)
         };
         let old_hull = self.hull_points;

@@ -41,6 +41,9 @@ pub enum MergePath {
     Trivial,
     /// x-disjoint chains: sampled common-tangent search (mam1..mam5).
     Tangent,
+    /// x-disjoint chains merged by an accelerator tangent kernel (one
+    /// upload for the whole hull ⊕ hull merge) + host strict-turn rescan.
+    DeviceTangent,
     /// x-overlapping chains: linear interleave + strict-turn rescan.
     Interleave,
 }
@@ -50,9 +53,29 @@ impl MergePath {
         match self {
             MergePath::Trivial => "trivial",
             MergePath::Tangent => "tangent",
+            MergePath::DeviceTangent => "device-tangent",
             MergePath::Interleave => "interleave",
         }
     }
+}
+
+/// An accelerator-resident common-tangent merge (the PJRT tangent
+/// artifacts, reached through the coordinator's device-merge worker).
+/// `upper` carries the upper chains `[left, right]` of two x-disjoint
+/// hulls, `lower` their y-MIRRORED lower chains — one batched upload
+/// merges the full hull pair.  Implementations return the merged upper
+/// chain and the merged still-mirrored lower chain, or `None` to fall
+/// back to the host tangent path (no artifact, size-class miss, device
+/// failure).  Outputs need not be canonical: [`merge_hulls_with`]
+/// finishes with a strict-turn rescan, which also erases any divergence
+/// in *which* valid tangent the device picked under collinearity (every
+/// choice keeps a chain whose strict hull equals the union's).
+pub trait TangentKernel {
+    fn tangent_merge(
+        &self,
+        upper: [&[Point]; 2],
+        lower: [&[Point]; 2],
+    ) -> Option<(Vec<Point>, Vec<Point>)>;
 }
 
 /// Merge two *upper-hull* chains (each canonical: x-strictly-increasing,
@@ -97,6 +120,56 @@ pub fn merge_hulls(
     let (upper, path) = merge_upper_hulls(a.0, b.0);
     let (lower, _) = merge_lower_hulls(a.1, b.1);
     ((upper, lower), path)
+}
+
+/// [`merge_hulls`] with an optional accelerator tangent kernel.  The
+/// device path serves exactly the case the host tangent path serves —
+/// strictly x-disjoint hull pairs — and canonicalizes the kernel's output
+/// with the same strict-turn rescan, so the result is bit-identical to
+/// the host merge whichever path runs.  Everything else (empty sides,
+/// x-overlap, kernel refusal) falls through to [`merge_hulls`].
+pub fn merge_hulls_with(
+    kernel: Option<&dyn TangentKernel>,
+    a: (&[Point], &[Point]),
+    b: (&[Point], &[Point]),
+) -> ((Vec<Point>, Vec<Point>), MergePath) {
+    if let Some(k) = kernel {
+        if let Some(out) = device_merge(k, a, b) {
+            return (out, MergePath::DeviceTangent);
+        }
+    }
+    merge_hulls(a, b)
+}
+
+fn mirror(chain: &[Point]) -> Vec<Point> {
+    chain.iter().map(|p| Point::new(p.x, -p.y)).collect()
+}
+
+/// Try the device tangent on a hull pair: orient into (left, right) by
+/// strict x-disjointness (the chains of one hull share their extreme xs,
+/// so checking the uppers covers the lowers), mirror the lower chains,
+/// run the kernel, rescan both rows.
+fn device_merge(
+    kernel: &dyn TangentKernel,
+    a: (&[Point], &[Point]),
+    b: (&[Point], &[Point]),
+) -> Option<(Vec<Point>, Vec<Point>)> {
+    if a.0.is_empty() || b.0.is_empty() {
+        return None; // trivial path is cheaper than any upload
+    }
+    let (l, r) = if a.0[a.0.len() - 1].x < b.0[0].x {
+        (a, b)
+    } else if b.0[b.0.len() - 1].x < a.0[0].x {
+        (b, a)
+    } else {
+        return None; // x-overlap: the interleave path owns this case
+    };
+    let (llo, rlo) = (mirror(l.1), mirror(r.1));
+    let (up, lo_m) = kernel.tangent_merge([l.0, r.0], [&llo, &rlo])?;
+    Some((
+        monotone_chain::upper_hull(&up),
+        mirror(&monotone_chain::upper_hull(&lo_m)),
+    ))
 }
 
 /// x-disjoint case: the paper's sampled tangent phases over a block pair
@@ -250,6 +323,121 @@ mod tests {
         let (wu, wl) = oracle(&union);
         assert_eq!(mu, wu, "collinear tangent upper");
         assert_eq!(ml, wl, "collinear tangent lower");
+    }
+
+    // ---------------------------------------------- device tangent path
+
+    use crate::geometry::point::live_prefix;
+
+    /// Host stand-in for the PJRT tangent artifacts, honoring the exact
+    /// device contract: pad each chain pair into a `[H(L) | H(R)]` block
+    /// of 2d slots, merge with the rust-native twin of the pallas kernel
+    /// body, hand back the live prefixes (possibly non-canonical — the
+    /// caller's rescan must cope).  `max_d` mimics a registry's largest
+    /// size class so refusal/fallback is exercised too.
+    struct BlockKernel {
+        max_d: usize,
+    }
+
+    impl TangentKernel for BlockKernel {
+        fn tangent_merge(
+            &self,
+            upper: [&[Point]; 2],
+            lower: [&[Point]; 2],
+        ) -> Option<(Vec<Point>, Vec<Point>)> {
+            let len = upper.iter().chain(lower.iter()).map(|c| c.len()).max()?;
+            let d = len.next_power_of_two().max(2);
+            if d > self.max_d {
+                return None;
+            }
+            let row = |pair: [&[Point]; 2]| {
+                let mut blk = pad_to_hood(pair[0], d);
+                blk.extend(pad_to_hood(pair[1], d));
+                super::super::merge::merge_block_d(&blk, d)
+            };
+            let up = row(upper);
+            let lo = row(lower);
+            Some((live_prefix(&up).to_vec(), live_prefix(&lo).to_vec()))
+        }
+    }
+
+    #[test]
+    fn device_tangent_parity_on_forced_disjoint_pairs() {
+        // the acceptance gate: device-merged hulls must be bit-identical
+        // to the host tangent path (and hence to the one-shot oracle) on
+        // x-disjoint pairs across every generator distribution
+        let kernel = BlockKernel { max_d: 1 << 9 };
+        let mut rng = Rng::new(77);
+        for case in 0..200 {
+            let da = Distribution::ALL[case % 7];
+            let db = Distribution::ALL[(case + 2) % 7];
+            let a = squeeze_x(&generate(da, rng.range_usize(1, 220), rng.next_u64()), 0.0, 0.46);
+            let b = squeeze_x(&generate(db, rng.range_usize(1, 220), rng.next_u64()), 0.54, 1.0);
+            let (au, al) = oracle(&a);
+            let (bu, bl) = oracle(&b);
+            let (host, host_path) = merge_hulls((&au, &al), (&bu, &bl));
+            let (dev, dev_path) =
+                merge_hulls_with(Some(&kernel), (&au, &al), (&bu, &bl));
+            assert_eq!(host_path, MergePath::Tangent, "case {case}");
+            assert_eq!(dev_path, MergePath::DeviceTangent, "case {case}");
+            assert_eq!(dev, host, "case {case} ({} ∪ {})", da.name(), db.name());
+        }
+    }
+
+    #[test]
+    fn device_kernel_refusal_falls_back_to_host_tangent() {
+        let kernel = BlockKernel { max_d: 2 }; // every real pair overflows
+        let a = squeeze_x(&generate(Distribution::Circle, 64, 21), 0.0, 0.45);
+        let b = squeeze_x(&generate(Distribution::Circle, 64, 22), 0.55, 1.0);
+        let (au, al) = oracle(&a);
+        let (bu, bl) = oracle(&b);
+        let (host, _) = merge_hulls((&au, &al), (&bu, &bl));
+        let (dev, path) = merge_hulls_with(Some(&kernel), (&au, &al), (&bu, &bl));
+        assert_eq!(path, MergePath::Tangent, "refusal must fall back");
+        assert_eq!(dev, host);
+    }
+
+    #[test]
+    fn device_path_skips_overlap_and_empty_sides() {
+        let kernel = BlockKernel { max_d: 1 << 9 };
+        let a = generate(Distribution::Disk, 80, 31);
+        let b = generate(Distribution::Cluster, 80, 32);
+        let (au, al) = oracle(&a);
+        let (bu, bl) = oracle(&b);
+        let (host, _) = merge_hulls((&au, &al), (&bu, &bl));
+        let (dev, path) = merge_hulls_with(Some(&kernel), (&au, &al), (&bu, &bl));
+        assert_eq!(path, MergePath::Interleave);
+        assert_eq!(dev, host);
+        let (dev, path) = merge_hulls_with(Some(&kernel), (&au, &al), (&[], &[]));
+        assert_eq!(path, MergePath::Trivial);
+        assert_eq!(dev, (au.clone(), al.clone()));
+    }
+
+    #[test]
+    fn device_cross_hull_collinearity_is_canonicalized() {
+        // same dyadic collinear construction as the host test: whatever
+        // tangent corner the kernel samples, the rescan must produce the
+        // canonical chain
+        let kernel = BlockKernel { max_d: 1 << 9 };
+        let a = vec![
+            Point::new(0.0, 0.25),
+            Point::new(0.125, 0.375),
+            Point::new(0.25, 0.5),
+            Point::new(0.3125, 0.0625),
+        ];
+        let b = vec![
+            Point::new(0.5, 0.75),
+            Point::new(0.625, 0.875),
+            Point::new(0.75, 0.5),
+        ];
+        let (au, al) = oracle(&a);
+        let (bu, bl) = oracle(&b);
+        let ((mu, ml), path) = merge_hulls_with(Some(&kernel), (&au, &al), (&bu, &bl));
+        assert_eq!(path, MergePath::DeviceTangent);
+        let union: Vec<Point> = a.iter().chain(b.iter()).copied().collect();
+        let (wu, wl) = oracle(&union);
+        assert_eq!(mu, wu);
+        assert_eq!(ml, wl);
     }
 
     #[test]

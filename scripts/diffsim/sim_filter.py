@@ -1,0 +1,377 @@
+#!/usr/bin/env python3
+"""Differential simulation of the octagon prefilter (PR 10).
+
+Mirrors, line for line, BOTH implementations of the interior-point
+prefilter:
+
+  * the device kernel's branch-free flagging + prefix-sum compaction
+    (python/compile/kernels/filter.py: ``octagon_extremes`` /
+    ``octagon_keep`` / ``compact``), including the REMOTE-padded block
+    layout, first-occurrence argmax tie-breaking, degenerate-edge
+    auto-pass and the scalar passthrough guards;
+  * the host filter (rust/src/coordinator/request.rs::octagon_filter):
+    one-pass strict-``>`` extremes scan, consecutive + circular corner
+    dedup, the "< 3 distinct corners" and consecutive-triple right-turn
+    bailouts, and strict-inside retention.
+
+Both are hammered against an EXACT rational oracle (fractions.Fraction):
+
+  P1  hull preservation — the exact strict hull of the kernel's kept set
+      equals the exact strict hull of the input;
+  P2  same for the host filter's kept set;
+  P3  kernel ≡ host — the kernel's keep mask selects exactly the points
+      the host filter retains (the bit-identity the rust property tests
+      assert through the serving stack);
+  P4  block discipline — the kernel output is the kept points, input
+      order preserved, left-justified, REMOTE-filled tail;
+  P5  boundary safety — a point exactly ON an octagon edge (exact
+      orientation 0) is never dropped.
+
+Adversaries lean on the cases float filters get wrong: exact collinear
+runs (horizontal / vertical / 45°), duplicate points, directional-key
+ties (many points attaining the same extreme), tight clusters, integer
+grids, and circle rims — all f32-quantized first, like every request in
+the serving path (which is also what makes the f64 determinant sign
+exact: differences of f32 values are exact in f64, their products fit in
+53 bits, and rounding is monotone).
+
+Why a float determinant can be trusted here but the oracle is still
+rational: the oracle pins down STRICTNESS (on-edge vs inside) without
+assuming that analysis is right — if it were wrong, P1/P5 would fail.
+
+stdlib only; exits non-zero on the first violation.
+"""
+
+import random
+import struct
+import sys
+from fractions import Fraction
+
+PREFILTER_MIN_POINTS = 32
+REMOTE = (10.0, 0.0)
+LIVE_X_MAX = 1.0
+
+
+def f32(v):
+    """Quantize to f32 — Point::quantize_f32 / the artifact wire type."""
+    return struct.unpack("f", struct.pack("f", v))[0]
+
+
+def qpoint(x, y):
+    return (f32(x), f32(y))
+
+
+# ----------------------------------------------------------- predicates
+
+
+def det_float(a, b, c):
+    """f64 orientation determinant — the kernel's ``_left_of`` operand."""
+    return (b[0] - a[0]) * (c[1] - a[1]) - (b[1] - a[1]) * (c[0] - a[0])
+
+
+def det_exact(a, b, c):
+    """Exact rational determinant — the oracle, and the host filter's
+    robust ``orient2d`` (whose sign is exact by construction)."""
+    ax, ay = Fraction(a[0]), Fraction(a[1])
+    return (Fraction(b[0]) - ax) * (Fraction(c[1]) - ay) - (
+        Fraction(b[1]) - ay
+    ) * (Fraction(c[0]) - ax)
+
+
+def keys(p):
+    """Directional keys, ccw from W — identical list in both impls."""
+    x, y = p
+    return [-x, -(x + y), -y, x - y, x, x + y, y, -(x - y)]
+
+
+# ------------------------------------------- kernel transliteration
+
+
+def kernel_filter_block(block):
+    """filter.py's ``filter_block`` over one REMOTE-padded block."""
+    n = len(block)
+    live = [p[0] <= LIVE_X_MAX for p in block]
+
+    # octagon_extremes: masked argmax, first occurrence wins each tie
+    ext = []
+    for d in range(8):
+        best_i, best_k = None, None
+        for i, p in enumerate(block):
+            if not live[i]:
+                continue  # keys -> -inf: REMOTE slots never win
+            k = keys(p)[d]
+            if best_k is None or k > best_k:
+                best_i, best_k = i, k
+        # an all-REMOTE block never reaches the filter in serving; keep
+        # the sim total by treating it as passthrough
+        if best_i is None:
+            return list(block)
+        ext.append(block[best_i])
+
+    nxt = ext[1:] + ext[:1]
+    same = [ext[i] == nxt[i] for i in range(8)]
+    n_distinct = sum(1 for s in same if not s)
+    any_right = any(
+        not same[i] and det_float(ext[i], nxt[i], ext[j]) < 0
+        for i in range(8)
+        for j in range(8)
+    )
+    passthrough = (
+        sum(live) < PREFILTER_MIN_POINTS or n_distinct < 3 or any_right
+    )
+
+    keep = []
+    for i, p in enumerate(block):
+        inside = all(
+            same[e] or det_float(ext[e], nxt[e], p) > 0 for e in range(8)
+        )
+        keep.append(live[i] and (passthrough or not inside))
+
+    # compact: prefix-sum scatter, REMOTE tail
+    out = [REMOTE] * n
+    pos = 0
+    for i, p in enumerate(block):
+        if keep[i]:
+            out[pos] = p
+            pos += 1
+    return out
+
+
+# --------------------------------------------- host transliteration
+
+
+def host_filter(pts):
+    """request.rs ``octagon_filter``: returns the retained list."""
+    if len(pts) < PREFILTER_MIN_POINTS:
+        return list(pts)
+    best = [pts[0]] * 8
+    best_k = keys(pts[0])
+    for p in pts[1:]:
+        k = keys(p)
+        for d in range(8):
+            if k[d] > best_k[d]:
+                best_k[d] = k[d]
+                best[d] = p
+    octagon = []
+    for b in best:
+        if not octagon or octagon[-1] != b:
+            octagon.append(b)
+    while len(octagon) > 1 and octagon[0] == octagon[-1]:
+        octagon.pop()
+    if len(octagon) < 3:
+        return list(pts)
+    m = len(octagon)
+    for i in range(m):
+        a, b, c = octagon[i], octagon[(i + 1) % m], octagon[(i + 2) % m]
+        if det_exact(a, b, c) < 0:
+            return list(pts)
+
+    def strictly_inside(p):
+        return all(
+            det_exact(octagon[i], octagon[(i + 1) % m], p) > 0
+            for i in range(m)
+        )
+
+    return [p for p in pts if not strictly_inside(p)]
+
+
+# --------------------------------------------------------- exact oracle
+
+
+def exact_hull(pts):
+    """Strict full hull (upper ⊕ lower vertex cycle) in exact rationals."""
+    uniq = sorted(set(pts))
+    if len(uniq) <= 2:
+        return uniq
+
+    def chain(points):
+        out = []
+        for p in points:
+            while len(out) >= 2 and det_exact(out[-2], out[-1], p) <= 0:
+                out.pop()
+            out.append(p)
+        return out
+
+    upper = chain(list(reversed(uniq)))
+    lower = chain(uniq)
+    return lower[:-1] + upper[:-1]
+
+
+def on_any_octagon_edge(p, pts):
+    """Exact test: p lies ON an edge of the (exact-extreme) octagon."""
+    ext = []
+    for d in range(8):
+        best = max(pts, key=lambda q: (keys(q)[d],))
+        # first occurrence of the exact max, matching both impls
+        for q in pts:
+            if keys(q)[d] == keys(best)[d]:
+                ext.append(q)
+                break
+    poly = [v for i, v in enumerate(ext) if v != ext[(i + 1) % 8]]
+    if len(poly) < 3:
+        return False
+    m = len(poly)
+    for i in range(m):
+        a, b = poly[i], poly[(i + 1) % m]
+        if det_exact(a, b, p) == 0:
+            lo_x, hi_x = min(a[0], b[0]), max(a[0], b[0])
+            lo_y, hi_y = min(a[1], b[1]), max(a[1], b[1])
+            if lo_x <= p[0] <= hi_x and lo_y <= p[1] <= hi_y:
+                return True
+    return False
+
+
+# ------------------------------------------------------------ adversaries
+
+
+def gen_cases():
+    rng = random.Random(0xF117E5)
+    cases = []
+
+    def disk(n, seed):
+        r = random.Random(seed)
+        pts = []
+        while len(pts) < n:
+            x, y = r.uniform(-1, 1), r.uniform(-1, 1)
+            if x * x + y * y <= 1.0:
+                pts.append(qpoint(0.5 + 0.5 * x, 0.5 + 0.5 * y))
+        return pts
+
+    # dense disks: the compaction-ratio workhorse
+    for n in (64, 512, 4096):
+        cases.append(("disk%d" % n, disk(n, n)))
+
+    # collinear runs (exact on the f32 grid): horizontal, vertical, 45°
+    xs = [i / 64 for i in range(40)]
+    cases.append(("hline", [qpoint(x, 0.25) for x in xs]))
+    cases.append(("vline", [qpoint(0.25, x) for x in xs]))
+    cases.append(("diag", [qpoint(x, x) for x in xs]))
+    cases.append(
+        ("diag_dup", [qpoint(x, x) for x in xs] + [qpoint(xs[3], xs[3])] * 5)
+    )
+
+    # duplicate-key adversary: a whole face of the octagon tied on x+y
+    # (every point of the NE face attains the same max), plus interior
+    ne_face = [qpoint(i / 32, 1.0 - i / 32) for i in range(8, 25)]
+    inner = disk(40, 77)
+    cases.append(("tied_ne_face", sorted(ne_face + inner)))
+
+    # square rim with collinear edge points (boundary-kept adversary)
+    rim = (
+        [qpoint(i / 16, 0.0) for i in range(17)]
+        + [qpoint(i / 16, 1.0) for i in range(17)]
+        + [qpoint(0.0, i / 16) for i in range(1, 16)]
+        + [qpoint(1.0, i / 16) for i in range(1, 16)]
+    )
+    cases.append(("square_rim", sorted(rim + disk(30, 5))))
+
+    # tight clusters (pathological ties after f32 quantization)
+    clusters = []
+    for _ in range(8):
+        cx, cy = rng.random(), rng.random()
+        for _ in range(16):
+            clusters.append(
+                qpoint(cx + rng.uniform(-1e-4, 1e-4), cy + rng.uniform(-1e-4, 1e-4))
+            )
+    cases.append(("clusters", sorted(clusters)))
+
+    # integer grid: everything collinear with everything
+    grid = [qpoint(i / 8, j / 8) for i in range(9) for j in range(9)]
+    cases.append(("grid", grid))
+
+    # circle rim: every point is a hull vertex — the filter must drop 0
+    circ = []
+    r = random.Random(9)
+    import math
+
+    for k in range(128):
+        t = 2 * math.pi * k / 128
+        circ.append(qpoint(0.5 + 0.5 * math.cos(t), 0.5 + 0.5 * math.sin(t)))
+    cases.append(("circle", sorted(set(circ))))
+
+    # below the gate: filters must be the identity
+    cases.append(("tiny", disk(PREFILTER_MIN_POINTS - 1, 3)))
+
+    # random smalls with duplicates
+    for s in range(10):
+        base = disk(48, 100 + s)
+        dups = [base[i % len(base)] for i in range(12)]
+        cases.append(("dup%d" % s, sorted(base + dups)))
+
+    return cases
+
+
+def pad_block(pts):
+    n = 1
+    while n < max(len(pts), 2):
+        n *= 2
+    return list(pts) + [REMOTE] * (n - len(pts))
+
+
+def live_prefix(block):
+    out = []
+    for p in block:
+        if p[0] > LIVE_X_MAX:
+            break
+        out.append(p)
+    return out
+
+
+def fail(case, prop, msg):
+    print("FAIL [%s] %s: %s" % (case, prop, msg))
+    sys.exit(1)
+
+
+def main():
+    checks = 0
+    for name, pts in gen_cases():
+        pts = sorted(pts)  # the serving path x-sorts before filtering
+        block = pad_block(pts)
+        out_block = kernel_filter_block(block)
+        kernel_kept = live_prefix(out_block)
+        host_kept = host_filter(pts)
+
+        hull_in = exact_hull(pts)
+        if exact_hull(kernel_kept) != hull_in:
+            fail(name, "P1", "kernel filter changed the exact hull")
+        if exact_hull(host_kept) != hull_in:
+            fail(name, "P2", "host filter changed the exact hull")
+        if kernel_kept != host_kept:
+            fail(
+                name,
+                "P3",
+                "kernel kept %d points, host kept %d — sets differ"
+                % (len(kernel_kept), len(host_kept)),
+            )
+        # P4: survivors left-justified in input order, REMOTE tail
+        tail = out_block[len(kernel_kept):]
+        if any(p != REMOTE for p in tail):
+            fail(name, "P4", "tail not REMOTE-filled")
+        it = iter(pts)
+        for p in kernel_kept:
+            for q in it:
+                if q == p:
+                    break
+            else:
+                fail(name, "P4", "kept points out of input order")
+        # P5: points exactly on an octagon edge are never dropped
+        if len(pts) >= PREFILTER_MIN_POINTS:
+            dropped = set(pts) - set(kernel_kept)
+            for p in dropped:
+                if on_any_octagon_edge(p, pts):
+                    fail(name, "P5", "boundary point %r dropped" % (p,))
+        checks += 1
+        print(
+            "ok %-14s n=%-5d kept=%-5d (compaction %.3f)"
+            % (
+                name,
+                len(pts),
+                len(kernel_kept),
+                len(kernel_kept) / len(pts),
+            )
+        )
+    print("sim_filter: %d cases, all properties hold" % checks)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,10 +9,11 @@
 # with ENGINE_SHARDS=4 (the sharded engine path on real sockets), then
 # the restart suite once more under ring placement, then fast smoke runs
 # of bench_runtime, bench_coordinator, bench_stream, bench_engine,
-# bench_server, bench_robustness, bench_gateway and bench_store with WAGENER_BENCH_JSON
+# bench_server, bench_robustness, bench_gateway, bench_store and
+# bench_accel with WAGENER_BENCH_JSON
 # pointed at BENCH_pram.json / BENCH_coordinator.json / BENCH_stream.json /
 # BENCH_engine.json / BENCH_server.json / BENCH_robustness.json /
-# BENCH_gateway.json / BENCH_store.json, so every PR leaves machine-readable perf records
+# BENCH_gateway.json / BENCH_store.json / BENCH_accel.json, so every PR leaves machine-readable perf records
 # (PRAM tier timings, router/worker-pool throughput, streaming-session
 # schedules, shard scaling, connection-core and wire-format costs,
 # overload shed/latency contrasts, snapshot write/restore latency) for
@@ -49,6 +50,18 @@ cargo build --release
 
 echo "== tier1: cargo test -q =="
 cargo test -q
+
+# Kernel twin parity: the Pallas filter/tangent kernels and their plain-jnp
+# twins are property-tested in python (hull preservation, boundary points
+# kept, pallas≡jnp bit-identity).  Guarded on the toolchain: containers
+# without jax/pytest skip this step (the committed diffsim ledger and the
+# rust-side parity tests still cover the transliteration).
+if python3 -c "import jax, pytest" >/dev/null 2>&1; then
+    echo "== tier1: python kernel tests =="
+    (cd "$ROOT/python" && python3 -m pytest -q tests/test_filter_kernel.py)
+else
+    echo "tier1: jax/pytest not importable; skipping python kernel tests" >&2
+fi
 
 # The socket-facing suites run once more against a 4-shard engine: the
 # sharded routing/registry/metrics paths must hold on real sockets in
@@ -131,7 +144,13 @@ WAGENER_BENCH_FAST=1 WAGENER_BENCH_JSON="$ROOT/BENCH_store.json" \
     cargo bench --bench bench_store
 assert_bench_written "$ROOT/BENCH_store.json"
 
+echo "== tier1: smoke bench -> BENCH_accel.json =="
+: > "$ROOT/BENCH_accel.json"
+WAGENER_BENCH_FAST=1 WAGENER_BENCH_JSON="$ROOT/BENCH_accel.json" \
+    cargo bench --bench bench_accel
+assert_bench_written "$ROOT/BENCH_accel.json"
+
 echo "tier1 OK — bench rows:"
 cat "$ROOT/BENCH_pram.json" "$ROOT/BENCH_coordinator.json" "$ROOT/BENCH_stream.json" \
     "$ROOT/BENCH_engine.json" "$ROOT/BENCH_server.json" "$ROOT/BENCH_robustness.json" \
-    "$ROOT/BENCH_gateway.json" "$ROOT/BENCH_store.json"
+    "$ROOT/BENCH_gateway.json" "$ROOT/BENCH_store.json" "$ROOT/BENCH_accel.json"
